@@ -1,0 +1,104 @@
+//! Case study 2 (paper §1.3): Twitter-stream analytics.
+//!
+//! ```bash
+//! cargo run --release --example twitter_analytics
+//! ```
+//!
+//! Tweet events arrive from three user classes (celebrity / active /
+//! long-tail) with wildly different volumes — exactly the minority-strata
+//! situation stratified sampling exists for. The query is windowed total
+//! engagement ("trending volume"). The example contrasts IncApprox with a
+//! *uniform* (non-stratified) sampler to show why stratification matters:
+//! the uniform sample frequently under-represents the celebrity stratum,
+//! inflating error.
+
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::Coordinator;
+use incapprox::job::moments::Moments;
+use incapprox::stats::stratified::{estimate_sum, StratumAgg};
+use incapprox::util::rng::Rng;
+use incapprox::workload::trace::TraceReplay;
+use incapprox::workload::tweets::TweetGen;
+
+fn main() -> incapprox::Result<()> {
+    incapprox::logging::init();
+    let cfg = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 6000,
+        slide: 240,
+        seed: 777,
+        ..SystemConfig::default()
+    };
+    let windows = 10usize;
+
+    let mut gen = TweetGen::case_study(cfg.seed);
+    let records = gen.take_records(cfg.window_size + windows * cfg.slide);
+
+    // --- IncApprox (stratified + incremental) --------------------------
+    let mut replay = TraceReplay::new(records.clone());
+    let mut coord = Coordinator::new(cfg.clone());
+    let mut buf: Vec<_> = Vec::new();
+    let mut reports = Vec::new();
+    let mut warm = false;
+    while !replay.exhausted() {
+        buf.extend(replay.tick());
+        let need = if warm { cfg.slide } else { cfg.window_size };
+        if buf.len() >= need {
+            reports.push(coord.process_batch(buf.drain(..need).collect())?);
+            warm = true;
+        }
+    }
+
+    println!("IncApprox (stratified, biased, incremental):");
+    println!("window | engagement ± bound     | celeb sample | reuse");
+    for r in reports.iter().skip(1) {
+        let celeb = r.strata.get(&0).map(|s| s.sample_size).unwrap_or(0);
+        println!(
+            "{:>6} | {:>10.0} ± {:<9.0} | {:>12} | {:>4.1}%",
+            r.window_id,
+            r.estimate.value,
+            r.estimate.margin,
+            celeb,
+            r.item_reuse_fraction() * 100.0
+        );
+    }
+
+    // --- Uniform-sampling strawman on the last window -------------------
+    // Same budget, no stratification: estimate the total by scaling a
+    // uniform sample. Repeats show celebrity under-representation.
+    let last_window: Vec<_> = records[records.len() - cfg.window_size..].to_vec();
+    let true_total: f64 = last_window.iter().map(|r| r.value).sum();
+    let budget = cfg.window_size / 10;
+    let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+    let mut misses = 0usize;
+    let mut uniform_errs = Vec::new();
+    for _ in 0..200 {
+        let idx = rng.sample_indices(last_window.len(), budget);
+        let vals: Vec<f64> = idx.iter().map(|&i| last_window[i].value).collect();
+        let celeb_in_sample =
+            idx.iter().filter(|&&i| last_window[i].stratum == 0).count();
+        if celeb_in_sample == 0 {
+            misses += 1;
+        }
+        let m = Moments::from_values(&vals);
+        let est = estimate_sum(
+            &[StratumAgg::from_moments(&m, last_window.len() as f64)],
+            cfg.confidence,
+        )?;
+        uniform_errs.push((est.value - true_total).abs() / true_total);
+    }
+    let mean_uniform_err =
+        uniform_errs.iter().sum::<f64>() / uniform_errs.len() as f64 * 100.0;
+    let last = reports.last().expect("reports");
+    let strat_err = (last.estimate.value - true_total).abs() / true_total * 100.0;
+    println!(
+        "\nuniform strawman over 200 draws: mean error {:.2}%, {} draws sampled zero \
+         celebrity tweets\nstratified IncApprox error on the same window: {:.2}% \
+         (bound {:.2}%)",
+        mean_uniform_err,
+        misses,
+        strat_err,
+        last.estimate.margin / last.estimate.value * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT lowering: JAX (L2+L1) → HLO *text* artifacts for the rust runtime.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per shape variant plus ``manifest.tsv``, which
+the rust ``runtime::ArtifactRegistry`` reads to compile and cache PJRT
+executables. Python is never invoked again after this step.
+
+Interchange format is HLO **text**, not ``lowered.compile().serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md). We lower stablehlo → XlaComputation with
+``return_tuple=True`` and the rust side unwraps the tuple.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: (chunks, chunk, rounds) variants for the incremental chunk-moments
+#: executable. chunk is a multiple of 128 (VPU lane width); variants trade
+#: padding waste against per-call batch capacity; rounds is the per-item
+#: map weight (0 = pure aggregation, 16 = heavy map stage).
+CHUNK_MOMENTS_VARIANTS = [
+    (64, 128, 0),
+    (256, 128, 0),
+    (64, 256, 0),
+    (64, 128, 16),
+    (256, 128, 16),
+    (64, 256, 16),
+]
+
+#: (chunks, chunk, strata) variants for the full-window estimator.
+WINDOW_ESTIMATE_VARIANTS = [(64, 128, 8), (256, 128, 8)]
+
+DTYPE = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_chunk_moments(chunks: int, chunk: int, rounds: int = 0) -> str:
+    spec = jax.ShapeDtypeStruct((chunks, chunk), DTYPE)
+    fn = functools.partial(model.chunk_moments_graph, rounds=rounds)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def lower_window_estimate(chunks: int, chunk: int, strata: int) -> str:
+    vspec = jax.ShapeDtypeStruct((chunks, chunk), DTYPE)
+    ospec = jax.ShapeDtypeStruct((chunks, strata), DTYPE)
+    pspec = jax.ShapeDtypeStruct((strata,), DTYPE)
+    return to_hlo_text(
+        jax.jit(model.window_estimate_graph).lower(vspec, vspec, ospec, pspec)
+    )
+
+
+def build_all(outdir: str) -> list[tuple]:
+    """Lower every variant into ``outdir``; return manifest rows."""
+    os.makedirs(outdir, exist_ok=True)
+    rows = []
+    for chunks, chunk, rounds in CHUNK_MOMENTS_VARIANTS:
+        name = f"chunk_moments_{chunks}x{chunk}_r{rounds}"
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_chunk_moments(chunks, chunk, rounds))
+        rows.append(
+            ("chunk_moments", name, f"{name}.hlo.txt", chunks, chunk, 0, "f32", 1, rounds)
+        )
+    for chunks, chunk, strata in WINDOW_ESTIMATE_VARIANTS:
+        name = f"window_estimate_{chunks}x{chunk}x{strata}"
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_window_estimate(chunks, chunk, strata))
+        rows.append(
+            ("window_estimate", name, f"{name}.hlo.txt", chunks, chunk, strata, "f32", 3, 0)
+        )
+    manifest = os.path.join(outdir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# kind\tname\tfile\tchunks\tchunk\tstrata\tdtype\tn_outputs\trounds\n")
+        for row in rows:
+            f.write("\t".join(str(c) for c in row) + "\n")
+    return rows
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    args = parser.parse_args()
+    rows = build_all(args.outdir)
+    for row in rows:
+        print(f"lowered {row[1]}")
+    print(f"wrote {len(rows)} artifacts + manifest.tsv to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for IncApprox.
+
+Every kernel here is lowered with ``interpret=True``: the rust request path
+executes them through the CPU PJRT client, which cannot run Mosaic
+custom-calls. The kernels are still *structured* for TPU execution (row
+tiles sized in multiples of 128 lanes, single-pass fused moment
+accumulation) — see DESIGN.md §7.
+"""
+
+from .stratified_agg import MOMENTS, chunk_moments  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the L1 kernels and the L2 estimator graph.
+
+These are the correctness ground truth: no Pallas, no tiling — just the
+textbook formulas. pytest (with hypothesis shape/dtype sweeps) asserts the
+kernels and the lowered model match these within float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def map_transform_ref(values, rounds):
+    """Reference for the iterated per-item map (plain python loop)."""
+    for _ in range(rounds):
+        values = values + 0.25 * jnp.sin(values)
+    return values
+
+
+def chunk_moments_ref(values, mask, rounds=0):
+    """Reference for kernels.stratified_agg.chunk_moments."""
+    values = map_transform_ref(values, rounds)
+    vm = values * mask
+    cnt = jnp.sum(mask, axis=-1)
+    s = jnp.sum(vm, axis=-1)
+    ss = jnp.sum(vm * values, axis=-1)
+    big = jnp.asarray(jnp.finfo(values.dtype).max, values.dtype)
+    mn = jnp.min(jnp.where(mask > 0, values, big), axis=-1)
+    mx = jnp.max(jnp.where(mask > 0, values, -big), axis=-1)
+    return jnp.stack([cnt, s, ss, mn, mx], axis=-1)
+
+
+def stratum_stats_ref(moments, stratum_onehot):
+    """Reference per-stratum (b, sum, sumsq) from per-chunk moments.
+
+    Args:
+      moments: ``[CHUNKS, 5]`` per-chunk moments.
+      stratum_onehot: ``[CHUNKS, S]`` one-hot stratum membership per chunk.
+
+    Returns:
+      ``[S, 3]``: per stratum sample count b_i, Σv, Σv².
+    """
+    return stratum_onehot.T @ moments[:, :3]
+
+
+def window_estimate_ref(values, mask, stratum_onehot, population):
+    """Reference for the L2 window estimator (paper Eqs 3.2–3.4 inputs).
+
+    Returns ``(tau_hat, var_hat, stats)`` where ``stats`` is ``[S, 3]``
+    (b_i, Σv, Σv²), ``tau_hat`` is the stratified total estimate and
+    ``var_hat`` the estimated variance of Eq 3.4. Strata with b_i = 0
+    contribute nothing (their population is unobserved this window).
+    """
+    stats = stratum_stats_ref(chunk_moments_ref(values, mask), stratum_onehot)
+    b = stats[:, 0]
+    s = stats[:, 1]
+    ss = stats[:, 2]
+    b_safe = jnp.maximum(b, 1.0)
+    seen = b > 0
+    # Unbiased per-stratum sample variance s_i².
+    s2 = jnp.where(b > 1, (ss - s * s / b_safe) / jnp.maximum(b - 1.0, 1.0), 0.0)
+    tau = jnp.sum(jnp.where(seen, population / b_safe * s, 0.0))
+    var = jnp.sum(
+        jnp.where(seen, population * (population - b) * s2 / b_safe, 0.0)
+    )
+    return tau, var, stats

@@ -1,0 +1,67 @@
+"""Layer-2 JAX compute graphs for IncApprox (build-time only).
+
+Two graphs are AOT-lowered to HLO text (see ``aot.py``) and executed by the
+rust coordinator through PJRT:
+
+* :func:`chunk_moments_graph` — the incremental hot path. The coordinator
+  packs only the *fresh* (non-memoized) chunks of the window's biased
+  sample and gets back the per-chunk moments it will memoize.
+* :func:`window_estimate_graph` — the full-window estimator used by the
+  approx-only / native baselines and for end-to-end verification: chunk
+  moments → per-stratum totals → stratified total estimate τ̂ and its
+  estimated variance V̂ar(τ̂) (paper Eq 3.4). The t-score multiplication of
+  Eq 3.2 happens in rust (`stats::tdist`), since the degrees of freedom
+  depend on runtime stratum occupancy.
+
+Everything here funnels through the L1 Pallas kernel so the whole model
+lowers into one HLO module per shape variant.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.stratified_agg import chunk_moments
+
+
+def chunk_moments_graph(values, mask, *, rounds=0):
+    """[CHUNKS, CHUNK] x2 → [CHUNKS, 5] per-chunk map+moments (L1)."""
+    return (chunk_moments(values, mask, rounds=rounds),)
+
+
+def stratum_stats(moments, stratum_onehot):
+    """Combine per-chunk moments into per-stratum (b_i, Σv, Σv²).
+
+    ``stratum_onehot`` is ``[CHUNKS, S]`` with exactly one 1.0 per valid
+    chunk row (all-zero rows denote padding chunks and drop out of the
+    matmul). The contraction is a single [S, CHUNKS] @ [CHUNKS, 3] matmul —
+    on TPU this is MXU work; on the CPU PJRT client it fuses into the same
+    executable as the kernel.
+    """
+    return stratum_onehot.T @ moments[:, :3]
+
+
+def window_estimate_graph(values, mask, stratum_onehot, population):
+    """Full-window stratified estimate.
+
+    Args:
+      values/mask: ``[CHUNKS, CHUNK]`` packed biased sample.
+      stratum_onehot: ``[CHUNKS, S]`` chunk→stratum membership.
+      population: ``[S]`` per-stratum window population B_i.
+
+    Returns:
+      ``(tau_hat, var_hat, stats)`` — scalar total estimate, scalar
+      estimated variance (Eq 3.4), and ``[S, 3]`` per-stratum
+      (b_i, Σv, Σv²) for the rust-side error bound (Eqs 3.2–3.3).
+    """
+    moments = chunk_moments(values, mask)
+    stats = stratum_stats(moments, stratum_onehot)
+    b = stats[:, 0]
+    s = stats[:, 1]
+    ss = stats[:, 2]
+    b_safe = jnp.maximum(b, 1.0)
+    seen = b > 0
+    s2 = jnp.where(b > 1, (ss - s * s / b_safe) / jnp.maximum(b - 1.0, 1.0), 0.0)
+    tau = jnp.sum(jnp.where(seen, population / b_safe * s, 0.0))
+    var = jnp.sum(
+        jnp.where(seen, population * (population - b) * s2 / b_safe, 0.0)
+    )
+    return tau, var, stats

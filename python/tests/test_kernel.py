@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas chunk_moments vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer: hypothesis
+sweeps shapes and dtypes, numpy assert_allclose compares against ref.py.
+"""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import chunk_moments_ref
+from compile.kernels.stratified_agg import MOMENTS, chunk_moments
+
+jax.config.update("jax_enable_x64", True)
+
+TOL = {np.float32: dict(rtol=1e-5, atol=1e-5), np.float64: dict(rtol=1e-12, atol=1e-12)}
+
+
+def random_inputs(rng, chunks, chunk, dtype, mask_p=0.7):
+    values = rng.normal(size=(chunks, chunk)).astype(dtype)
+    mask = (rng.uniform(size=(chunks, chunk)) < mask_p).astype(dtype)
+    return jnp.asarray(values), jnp.asarray(mask)
+
+
+class TestChunkMomentsBasic:
+    def test_matches_ref_small(self):
+        rng = np.random.default_rng(0)
+        v, m = random_inputs(rng, 4, 16, np.float32)
+        got = chunk_moments(v, m)
+        want = chunk_moments_ref(v, m)
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL[np.float32])
+
+    def test_output_shape_and_order(self):
+        rng = np.random.default_rng(1)
+        v, m = random_inputs(rng, 8, 128, np.float32)
+        out = np.asarray(chunk_moments(v, m))
+        assert out.shape == (8, len(MOMENTS))
+        # count column is integral
+        assert_allclose(out[:, 0], np.asarray(m).sum(axis=-1), rtol=0, atol=0)
+
+    def test_all_masked_chunk(self):
+        """A fully padded chunk: count 0, sums 0, min=+big, max=-big."""
+        v = jnp.ones((2, 32), jnp.float32)
+        m = jnp.zeros((2, 32), jnp.float32)
+        out = np.asarray(chunk_moments(v, m))
+        assert_allclose(out[:, :3], 0.0)
+        assert (out[:, 3] > 1e30).all()
+        assert (out[:, 4] < -1e30).all()
+
+    def test_full_mask_equals_plain_reduction(self):
+        rng = np.random.default_rng(2)
+        v = rng.normal(size=(3, 64)).astype(np.float32)
+        m = np.ones_like(v)
+        out = np.asarray(chunk_moments(jnp.asarray(v), jnp.asarray(m)))
+        assert_allclose(out[:, 1], v.sum(axis=-1), rtol=1e-5, atol=1e-5)
+        assert_allclose(out[:, 2], (v * v).sum(axis=-1), rtol=1e-5, atol=1e-5)
+        assert_allclose(out[:, 3], v.min(axis=-1), rtol=1e-6)
+        assert_allclose(out[:, 4], v.max(axis=-1), rtol=1e-6)
+
+    def test_single_item_chunk(self):
+        v = jnp.zeros((1, 8), jnp.float32).at[0, 3].set(7.5)
+        m = jnp.zeros((1, 8), jnp.float32).at[0, 3].set(1.0)
+        out = np.asarray(chunk_moments(v, m))[0]
+        assert_allclose(out, [1.0, 7.5, 56.25, 7.5, 7.5], rtol=1e-6)
+
+    def test_rank_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            chunk_moments(jnp.zeros((4,)), jnp.zeros((4,)))
+        with pytest.raises(ValueError):
+            chunk_moments(jnp.zeros((2, 4)), jnp.zeros((2, 8)))
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    chunks=st.integers(1, 16),
+    chunk_log2=st.integers(1, 8),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    mask_p=st.floats(0.0, 1.0),
+    rounds=st.sampled_from([0, 3, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_moments_matches_ref_property(chunks, chunk_log2, dtype, mask_p, rounds, seed):
+    """Property sweep: shapes/dtypes/mask densities/map rounds vs oracle."""
+    rng = np.random.default_rng(seed)
+    v, m = random_inputs(rng, chunks, 2**chunk_log2, dtype, mask_p)
+    got = np.asarray(chunk_moments(v, m, rounds=rounds))
+    want = np.asarray(chunk_moments_ref(v, m, rounds=rounds))
+    tol = TOL[dtype] if rounds == 0 else dict(rtol=1e-4, atol=1e-4)
+    assert_allclose(got, want, **tol)
+
+
+def test_map_transform_rounds_zero_is_identity():
+    v = jnp.asarray(np.linspace(-5, 5, 64, dtype=np.float32)).reshape(1, 64)
+    m = jnp.ones_like(v)
+    out0 = np.asarray(chunk_moments(v, m, rounds=0))
+    outr = np.asarray(chunk_moments(v, m, rounds=8))
+    ref0 = np.asarray(chunk_moments_ref(v, m, rounds=0))
+    assert_allclose(out0, ref0, rtol=1e-6)
+    assert not np.allclose(out0, outr), "rounds must change the output"
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    arr=hnp.arrays(
+        np.float32,
+        hnp.array_shapes(min_dims=2, max_dims=2, min_side=1, max_side=64),
+        elements=st.floats(-1e4, 1e4, width=32),
+    ),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_moments_arbitrary_values(arr, seed):
+    """Extreme/adversarial values (hypothesis-generated) still match ref."""
+    rng = np.random.default_rng(seed)
+    m = (rng.uniform(size=arr.shape) < 0.5).astype(np.float32)
+    got = np.asarray(chunk_moments(jnp.asarray(arr), jnp.asarray(m)))
+    want = np.asarray(chunk_moments_ref(jnp.asarray(arr), jnp.asarray(m)))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-2)

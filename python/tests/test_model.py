@@ -1,0 +1,130 @@
+"""L2 correctness: window estimator graph vs oracle and vs direct numpy.
+
+Verifies the stratified estimate τ̂ and variance V̂ar(τ̂) (paper Eqs
+3.2–3.4 inputs) both against ref.py and against an independent, de-novo
+numpy implementation of the stratified estimator formulas.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import window_estimate_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_window(rng, chunks=8, chunk=32, strata=3, dtype=np.float64):
+    """Random packed window: each chunk belongs to one stratum."""
+    values = rng.normal(loc=5.0, scale=2.0, size=(chunks, chunk)).astype(dtype)
+    mask = np.zeros((chunks, chunk), dtype)
+    onehot = np.zeros((chunks, strata), dtype)
+    for c in range(chunks):
+        n = rng.integers(1, chunk + 1)
+        mask[c, :n] = 1.0
+        onehot[c, rng.integers(0, strata)] = 1.0
+    b = onehot.T @ mask.sum(axis=1)  # sampled per stratum
+    population = (b * rng.uniform(1.0, 4.0, size=strata)).astype(dtype)
+    return tuple(jnp.asarray(x) for x in (values, mask, onehot, population))
+
+
+def numpy_stratified_estimate(values, mask, onehot, population):
+    """Independent numpy implementation of the Eq 3.4 estimator."""
+    values, mask, onehot, population = map(np.asarray, (values, mask, onehot, population))
+    strata = onehot.shape[1]
+    tau, var = 0.0, 0.0
+    stats = np.zeros((strata, 3))
+    for i in range(strata):
+        rows = onehot[:, i] > 0
+        v = values[rows][mask[rows] > 0]
+        b = len(v)
+        stats[i] = (b, v.sum(), (v**2).sum())
+        if b == 0:
+            continue
+        B = population[i]
+        tau += B / b * v.sum()
+        if b > 1:
+            var += B * (B - b) * v.var(ddof=1) / b
+    return tau, var, stats
+
+
+class TestWindowEstimate:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        args = make_window(rng)
+        tau, var, stats = model.window_estimate_graph(*args)
+        rtau, rvar, rstats = window_estimate_ref(*args)
+        assert_allclose(float(tau), float(rtau), rtol=1e-10)
+        assert_allclose(float(var), float(rvar), rtol=1e-10)
+        assert_allclose(np.asarray(stats), np.asarray(rstats), rtol=1e-10)
+
+    def test_matches_independent_numpy(self):
+        rng = np.random.default_rng(8)
+        args = make_window(rng, chunks=16, chunk=64, strata=4)
+        tau, var, stats = model.window_estimate_graph(*args)
+        ntau, nvar, nstats = numpy_stratified_estimate(*args)
+        assert_allclose(float(tau), ntau, rtol=1e-8)
+        assert_allclose(float(var), nvar, rtol=1e-8)
+        assert_allclose(np.asarray(stats), nstats, rtol=1e-8)
+
+    def test_census_stratum_has_zero_variance(self):
+        """b_i == B_i (full census of a stratum) → FPC kills its variance."""
+        rng = np.random.default_rng(9)
+        values, mask, onehot, _ = make_window(rng, strata=1)
+        b = float(np.asarray(mask).sum())
+        population = jnp.asarray([b])
+        tau, var, _ = model.window_estimate_graph(values, mask, onehot, population)
+        v = np.asarray(values)[np.asarray(mask) > 0]
+        assert_allclose(float(tau), v.sum(), rtol=1e-9)
+        assert_allclose(float(var), 0.0, atol=1e-6)
+
+    def test_empty_stratum_contributes_nothing(self):
+        values = jnp.ones((2, 8), jnp.float64)
+        mask = jnp.ones((2, 8), jnp.float64)
+        onehot = jnp.asarray([[1.0, 0.0], [1.0, 0.0]])  # stratum 1 unobserved
+        population = jnp.asarray([16.0, 1000.0])
+        tau, var, stats = model.window_estimate_graph(values, mask, onehot, population)
+        assert_allclose(float(tau), 16.0, rtol=1e-9)
+        assert_allclose(float(var), 0.0, atol=1e-9)
+        assert_allclose(np.asarray(stats)[1], 0.0)
+
+    def test_scaling_estimate_unbiasedness(self):
+        """Monte-Carlo: E[τ̂] ≈ true total under random subsampling."""
+        rng = np.random.default_rng(10)
+        pop = rng.normal(10.0, 3.0, size=512)
+        true_total = pop.sum()
+        est = []
+        for _ in range(200):
+            idx = rng.choice(512, size=128, replace=False)
+            values = np.zeros((1, 128))
+            values[0] = pop[idx]
+            mask = np.ones((1, 128))
+            onehot = np.ones((1, 1))
+            tau, _, _ = model.window_estimate_graph(
+                jnp.asarray(values), jnp.asarray(mask), jnp.asarray(onehot),
+                jnp.asarray([512.0]))
+            est.append(float(tau))
+        assert abs(np.mean(est) - true_total) < 0.05 * abs(true_total)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    chunks=st.integers(1, 12),
+    chunk=st.sampled_from([8, 32, 128]),
+    strata=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_window_estimate_property(chunks, chunk, strata, seed):
+    """Graph == ref == independent numpy across random configurations."""
+    rng = np.random.default_rng(seed)
+    args = make_window(rng, chunks, chunk, strata)
+    tau, var, stats = model.window_estimate_graph(*args)
+    ntau, nvar, nstats = numpy_stratified_estimate(*args)
+    assert_allclose(float(tau), ntau, rtol=1e-7, atol=1e-7)
+    assert_allclose(float(var), nvar, rtol=1e-7, atol=1e-4)
+    assert_allclose(np.asarray(stats), nstats, rtol=1e-7, atol=1e-7)
+    assert float(var) >= -1e-6  # variance estimate is non-negative

@@ -1,0 +1,122 @@
+//! Ablations over the design choices DESIGN.md calls out.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+//!
+//! 1. Biased vs unbiased sampling (the marriage's key knob): reuse and
+//!    computed items with and without biasing.
+//! 2. Reservoir re-allocation interval `T`: proportional-allocation error
+//!    vs sampling cost.
+//! 3. Chunk size: per-window work vs chunk bookkeeping.
+//! 4. Recompute epoch: drift-control cost of the inverse-reduce path.
+
+use incapprox::bench_harness::{black_box, section, Bench};
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::Coordinator;
+use incapprox::sampling::stratified::StratifiedSampler;
+use incapprox::util::rng::Rng;
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::record::Record;
+use incapprox::workload::trace::TraceReplay;
+
+fn steady_run(cfg: &SystemConfig, records: &[Record], windows: usize) -> (f64, usize, f64) {
+    // (mean item reuse %, computed items, mean latency ms) over steady state.
+    let mut coord = Coordinator::new(cfg.clone());
+    let mut replay = TraceReplay::new(records.to_vec());
+    let mut buf: Vec<Record> = Vec::new();
+    let mut warm = false;
+    let mut reuse = 0.0;
+    let mut computed = 0usize;
+    let mut lat = 0.0;
+    let mut n = 0usize;
+    while !replay.exhausted() && n < windows {
+        buf.extend(replay.tick());
+        let need = if warm { cfg.slide } else { cfg.window_size };
+        if buf.len() >= need {
+            let r = coord.process_batch(buf.drain(..need).collect()).unwrap();
+            if warm {
+                reuse += r.item_reuse_fraction();
+                computed += r.fresh_items;
+                lat += r.latency_ms;
+                n += 1;
+            }
+            warm = true;
+        }
+    }
+    (reuse / n as f64 * 100.0, computed, lat / n as f64)
+}
+
+fn main() {
+    let base = SystemConfig {
+        window_size: 10_000,
+        slide: 400,
+        seed: 42,
+        map_rounds: 16,
+        ..SystemConfig::default()
+    };
+    let windows = 15usize;
+    let mut gen = MultiStream::paper_section5(base.seed);
+    let records = gen.take_records(base.window_size + (windows + 2) * base.slide);
+
+    section("Ablation 1: biased (incapprox) vs unbiased (approx-only) sampling");
+    println!("variant\treuse%\tcomputed\tmean_lat_ms");
+    for (label, mode) in
+        [("biased", ExecModeSpec::IncApprox), ("unbiased", ExecModeSpec::ApproxOnly)]
+    {
+        let cfg = SystemConfig { mode, ..base.clone() };
+        let (reuse, computed, lat) = steady_run(&cfg, &records, windows);
+        println!("{label}\t{reuse:.1}\t{computed}\t{lat:.3}");
+    }
+
+    section("Ablation 2: re-allocation interval T (proportional error vs cost)");
+    println!("T\tmax_prop_err%\tsample_ms");
+    let window: Vec<Record> = records[..10_000].to_vec();
+    // True per-stratum proportions.
+    let mut true_counts = std::collections::BTreeMap::new();
+    for r in &window {
+        *true_counts.entry(r.stratum).or_insert(0usize) += 1;
+    }
+    for t in [50usize, 200, 500, 2000, 10_000] {
+        let mut max_err = 0.0f64;
+        let m = Bench::new(format!("T={t}")).warmup(1).iters(5).run(|i| {
+            let s = StratifiedSampler::sample_window(
+                &window,
+                1000,
+                t,
+                Rng::new(100 + i as u64),
+            );
+            for (stratum, &count) in &true_counts {
+                let want = count as f64 / window.len() as f64;
+                let got = s.stratum(*stratum).len() as f64 / s.total_len() as f64;
+                max_err = max_err.max((got - want).abs() * 100.0);
+            }
+            black_box(s.total_len());
+        });
+        println!("{t}\t{max_err:.2}\t{:.3}", m.mean_ms);
+    }
+
+    section("Ablation 3: chunk size (work granularity)");
+    println!("chunk\tcomputed\tmean_lat_ms");
+    for chunk in [16usize, 32, 64, 128, 256] {
+        let cfg = SystemConfig {
+            mode: ExecModeSpec::IncApprox,
+            chunk_size: chunk,
+            ..base.clone()
+        };
+        let (_, computed, lat) = steady_run(&cfg, &records, windows);
+        println!("{chunk}\t{computed}\t{lat:.3}");
+    }
+
+    section("Ablation 4: recompute epoch (drift control vs work)");
+    println!("epoch\tcomputed\tmean_lat_ms");
+    for epoch in [1usize, 8, 64, 1024] {
+        let cfg = SystemConfig {
+            mode: ExecModeSpec::IncApprox,
+            recompute_epoch: epoch,
+            ..base.clone()
+        };
+        let (_, computed, lat) = steady_run(&cfg, &records, windows);
+        println!("{epoch}\t{computed}\t{lat:.3}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Figure 5.1 reproduction: effect of sample size, slide interval, window
+//! size, and arrival rate on memoization.
+//!
+//! ```bash
+//! cargo bench --bench fig5_memoization
+//! ```
+//!
+//! Prints the same series the paper plots: (a) average memoized items per
+//! sub-stream vs sample size; (b) % memoized vs slide interval; (c) sample
+//! vs memoized for window-size change Δ; (d) memoization % under
+//! fluctuating arrival rates. Expected shapes (paper §5.1): memoization ∝
+//! sample size, ∝ 1/slide, ≈100% reuse for shrinking windows, and >97%
+//! under rate fluctuation.
+
+use incapprox::bench_harness::section;
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::{Coordinator, WindowReport};
+use incapprox::workload::gen::MultiStream;
+
+const WINDOW: usize = 10_000;
+
+fn cfg(sample_frac: f64, slide: usize) -> SystemConfig {
+    SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: WINDOW,
+        slide,
+        budget: incapprox::config::system::BudgetSpec::Fraction(sample_frac),
+        seed: 42,
+        ..SystemConfig::default()
+    }
+}
+
+/// Run `windows` slides after warmup, returning the steady-state reports.
+fn run(cfg: &SystemConfig, source: &mut MultiStream, windows: usize) -> Vec<WindowReport> {
+    let mut coord = Coordinator::new(cfg.clone());
+    coord.process_batch(source.take_records(cfg.window_size)).unwrap();
+    (0..windows)
+        .map(|_| coord.process_batch(source.take_records(cfg.slide)).unwrap())
+        .collect()
+}
+
+fn fig_a() {
+    section("Fig 5.1(a): avg memoized items per sub-stream vs sample size (slide 4%)");
+    println!("sample%\tS1(rate3)\tS2(rate4)\tS3(rate5)");
+    for pct in [10, 20, 40, 60, 80] {
+        let c = cfg(pct as f64 / 100.0, WINDOW * 4 / 100);
+        let mut source = MultiStream::paper_section5(c.seed);
+        let reports = run(&c, &mut source, 10);
+        let mut avg = [0.0f64; 3];
+        for r in &reports {
+            for s in 0..3u32 {
+                avg[s as usize] +=
+                    r.strata.get(&s).map(|x| x.memo_reused).unwrap_or(0) as f64;
+            }
+        }
+        for a in &mut avg {
+            *a /= reports.len() as f64;
+        }
+        println!("{pct}\t{:.0}\t{:.0}\t{:.0}", avg[0], avg[1], avg[2]);
+    }
+}
+
+fn fig_b() {
+    section("Fig 5.1(b): % of sample memoized vs slide interval (sample 10%)");
+    println!("slide%\tmemoized%");
+    for pct in [1, 2, 4, 8, 16] {
+        let c = cfg(0.1, WINDOW * pct / 100);
+        let mut source = MultiStream::paper_section5(c.seed);
+        let reports = run(&c, &mut source, 10);
+        let mean: f64 = reports.iter().map(|r| r.item_reuse_fraction()).sum::<f64>()
+            / reports.len() as f64;
+        println!("{pct}\t{:.1}", mean * 100.0);
+    }
+}
+
+fn fig_c() {
+    section("Fig 5.1(c): sample size vs memoized items for window change Δ (slide 2%, sample 10%)");
+    println!("delta\tsample\tmemo_available");
+    for delta in [-200i64, -100, 0, 100, 200] {
+        let c = cfg(0.1, WINDOW * 2 / 100);
+        let mut source = MultiStream::paper_section5(c.seed ^ delta as u64);
+        let mut coord = Coordinator::new(c.clone());
+        coord.process_batch(source.take_records(WINDOW)).unwrap();
+        coord.process_batch(source.take_records(c.slide)).unwrap();
+        // Change the window size by Δ between adjacent windows.
+        coord.resize_window((WINDOW as i64 + delta) as usize);
+        let r = coord.process_batch(source.take_records(c.slide)).unwrap();
+        let memo_avail: usize = r.strata.values().map(|s| s.memo_available).sum();
+        println!("{delta}\t{}\t{}", r.sample_size, memo_avail);
+    }
+}
+
+fn fig_d() {
+    section("Fig 5.1(d): memoization % per sub-stream under fluctuating arrival rates");
+    println!("phase\tS1%\tS2%\tS3(const)%\trates(S1,S2,S3)");
+    let c = cfg(0.1, WINDOW * 4 / 100);
+    // Phases of ~2500 ticks; S1 rate 1→3→2, S2 2→1→3, S3 constant 2.
+    let mut source = MultiStream::paper_fluctuating(c.seed, 2500);
+    let mut coord = Coordinator::new(c.clone());
+    coord.process_batch(source.take_records(WINDOW)).unwrap();
+    let mut all_reuse: Vec<f64> = Vec::new();
+    for phase in 0..3 {
+        let mut frac = [0.0f64; 3];
+        let mut n = 0usize;
+        for _ in 0..6 {
+            let r = coord.process_batch(source.take_records(c.slide)).unwrap();
+            for s in 0..3u32 {
+                if let Some(sr) = r.strata.get(&s) {
+                    if sr.sample_size > 0 {
+                        frac[s as usize] += sr.memo_reused as f64 / sr.sample_size as f64;
+                    }
+                }
+            }
+            n += 1;
+        }
+        let t = source.now();
+        let rates: Vec<f64> = (0..3).map(|_| 0.0).collect(); // display only
+        let _ = rates;
+        for f in &mut frac {
+            *f = *f / n as f64 * 100.0;
+            all_reuse.push(*f);
+        }
+        println!(
+            "{phase}\t{:.1}\t{:.1}\t{:.1}\t(t={t})",
+            frac[0], frac[1], frac[2]
+        );
+    }
+    let min = all_reuse.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("min per-stream memoization across phases: {min:.1}% (paper: >97%)");
+}
+
+fn main() {
+    fig_a();
+    fig_b();
+    fig_c();
+    fig_d();
+}

@@ -1,0 +1,70 @@
+//! Headline table: IncApprox speedup vs native Spark-Streaming-style
+//! execution and vs each paradigm alone (paper §1.3: ~2× over native,
+//! ~1.4× over the individual speedups).
+//!
+//! ```bash
+//! cargo bench --bench headline_speedup
+//! ```
+//!
+//! All modes run the same recorded trace on the same (native) executor;
+//! timings come from the bench harness (warmup + repeated runs).
+
+use incapprox::bench_harness::{black_box, section, Bench};
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::Coordinator;
+use incapprox::workload::flows::FlowLogGen;
+use incapprox::workload::record::Record;
+use incapprox::workload::trace::TraceReplay;
+
+fn run_trace(mode: ExecModeSpec, cfg: &SystemConfig, records: &[Record], windows: usize) {
+    let mut replay = TraceReplay::new(records.to_vec());
+    let mut coord = Coordinator::new(SystemConfig { mode, ..cfg.clone() });
+    let mut buf: Vec<Record> = Vec::new();
+    let mut warm = false;
+    let mut done = 0usize;
+    while !replay.exhausted() && done <= windows {
+        buf.extend(replay.tick());
+        let need = if warm { cfg.slide } else { cfg.window_size };
+        if buf.len() >= need {
+            let r = coord.process_batch(buf.drain(..need).collect()).unwrap();
+            black_box(r.estimate.value);
+            warm = true;
+            done += 1;
+        }
+    }
+}
+
+fn main() {
+    let windows = 20usize;
+    let cfg = SystemConfig {
+        window_size: 10_000,
+        slide: 400,
+        seed: 42,
+        map_rounds: 16, // realistic per-item map stage
+        ..SystemConfig::default()
+    };
+    let mut gen = FlowLogGen::case_study(4, cfg.seed);
+    let records = gen.take_records(cfg.window_size + windows * cfg.slide);
+
+    section("Headline: end-to-end time for 20 windows (10k window, 4% slide, 10% sample)");
+    let mut times = Vec::new();
+    for mode in [
+        ExecModeSpec::Native,
+        ExecModeSpec::IncrementalOnly,
+        ExecModeSpec::ApproxOnly,
+        ExecModeSpec::IncApprox,
+    ] {
+        let m = Bench::new(format!("mode={}", mode.name()))
+            .warmup(1)
+            .iters(5)
+            .run_and_report(|_| run_trace(mode, &cfg, &records, windows));
+        times.push((mode.name(), m.mean_ms));
+    }
+    let native = times[0].1;
+    let inc = times[1].1;
+    let approx = times[2].1;
+    let both = times[3].1;
+    println!("\nspeedups: incapprox vs native {:.2}× (paper ~2×)", native / both);
+    println!("          incapprox vs incremental-only {:.2}× (paper ~1.4×)", inc / both);
+    println!("          incapprox vs approx-only {:.2}× (paper ~1.4×)", approx / both);
+}

@@ -1,0 +1,141 @@
+//! Measurement harness for `cargo bench` targets.
+//!
+//! Criterion is not reachable offline, so the bench binaries (declared
+//! with `harness = false`) use this module: warmup, repeated timed
+//! iterations, and mean / std / p50 / p99 reporting with aligned rows —
+//! enough to regenerate every figure/table in EXPERIMENTS.md.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-exported black box to keep benched work alive.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Summary statistics of one measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Mean per-iteration milliseconds.
+    pub mean_ms: f64,
+    /// Standard deviation (ms).
+    pub std_ms: f64,
+    /// Median (ms).
+    pub p50_ms: f64,
+    /// 99th percentile (ms).
+    pub p99_ms: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl Measurement {
+    fn from_samples(mut samples: Vec<f64>) -> Measurement {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Measurement { mean_ms: mean, std_ms: var.sqrt(), p50_ms: q(0.5), p99_ms: q(0.99), iters: n }
+    }
+}
+
+/// A configurable micro/macro benchmark.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bench {
+    /// Named bench with defaults (3 warmup, 10 measured iterations).
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench { name: name.into(), warmup: 3, iters: 10 }
+    }
+
+    /// Set warmup iterations.
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    /// Set measured iterations.
+    pub fn iters(mut self, n: usize) -> Self {
+        assert!(n > 0);
+        self.iters = n;
+        self
+    }
+
+    /// Run and summarize. `f` receives the iteration index; use
+    /// [`black_box`] on results inside.
+    pub fn run<F: FnMut(usize)>(&self, mut f: F) -> Measurement {
+        for i in 0..self.warmup {
+            f(i);
+        }
+        let samples: Vec<f64> = (0..self.iters)
+            .map(|i| {
+                let start = Instant::now();
+                f(i);
+                start.elapsed().as_secs_f64() * 1e3
+            })
+            .collect();
+        Measurement::from_samples(samples)
+    }
+
+    /// Run and print one aligned row.
+    pub fn run_and_report<F: FnMut(usize)>(&self, f: F) -> Measurement {
+        let m = self.run(f);
+        println!(
+            "{:<44} mean {:>9.3} ms  ±{:>8.3}  p50 {:>9.3}  p99 {:>9.3}  (n={})",
+            self.name, m.mean_ms, m.std_ms, m.p50_ms, m.p99_ms, m.iters
+        );
+        m
+    }
+}
+
+/// Print a section header for a figure/table reproduction.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one row of a result table (free-form columns).
+pub fn row(cols: &[String]) {
+    println!("{}", cols.join("\t"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_statistics() {
+        let m = Measurement::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((m.mean_ms - 3.0).abs() < 1e-12);
+        assert!((m.p50_ms - 3.0).abs() < 1e-12);
+        assert_eq!(m.iters, 5);
+        assert!(m.std_ms > 0.0);
+    }
+
+    #[test]
+    fn bench_runs_warmup_plus_iters() {
+        let mut calls = 0usize;
+        let b = Bench::new("t").warmup(2).iters(5);
+        let m = b.run(|_| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn bench_timings_positive() {
+        let b = Bench::new("spin").warmup(0).iters(3);
+        let m = b.run(|_| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(m.mean_ms >= 0.0);
+        assert!(m.p99_ms >= m.p50_ms);
+    }
+}

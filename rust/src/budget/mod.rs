@@ -1,0 +1,216 @@
+//! The virtual cost function (§2.3.3 assumption 2, §6.2).
+//!
+//! Maps the user's query budget to a per-window sample size. Three
+//! implementations, matching the budget forms §2.1 lists:
+//!
+//! * [`FractionCost`] — direct sampling fraction (what §5's
+//!   micro-benchmarks parameterize).
+//! * [`TokenBucketCost`] — Pulsar-style resource budget: a token bucket
+//!   refilled per window; every processed item costs tokens, the sample
+//!   size is what the bucket can afford.
+//! * [`LatencyCost`] — latency SLA: an EWMA predictor of per-item
+//!   processing cost (the "resource prediction model" of §6.2) converts a
+//!   window latency budget into an item count, adapting as observed
+//!   latencies drift.
+
+use crate::config::system::BudgetSpec;
+
+/// Turns a window size into a sample size, within the query budget.
+pub trait CostFunction: Send {
+    /// Sample size for a window of `window_len` items.
+    fn sample_size(&mut self, window_len: usize) -> usize;
+
+    /// Feed back the observed processing cost of the last window
+    /// (`items` processed in `elapsed_ms`). Only adaptive policies react.
+    fn observe(&mut self, items: usize, elapsed_ms: f64);
+
+    /// Name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Fixed sampling fraction.
+#[derive(Debug, Clone, Copy)]
+pub struct FractionCost {
+    fraction: f64,
+}
+
+impl FractionCost {
+    /// `fraction` ∈ (0, 1].
+    pub fn new(fraction: f64) -> Self {
+        assert!(fraction > 0.0 && fraction <= 1.0);
+        FractionCost { fraction }
+    }
+}
+
+impl CostFunction for FractionCost {
+    fn sample_size(&mut self, window_len: usize) -> usize {
+        ((window_len as f64 * self.fraction).round() as usize).clamp(1, window_len.max(1))
+    }
+
+    fn observe(&mut self, _items: usize, _elapsed_ms: f64) {}
+
+    fn name(&self) -> &'static str {
+        "fraction"
+    }
+}
+
+/// Pulsar-style token bucket: `capacity` tokens refill each window;
+/// processing one item costs `cost_per_item` tokens.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenBucketCost {
+    capacity: f64,
+    cost_per_item: f64,
+    tokens: f64,
+}
+
+impl TokenBucketCost {
+    /// Bucket with `capacity` tokens per window.
+    pub fn new(capacity: f64, cost_per_item: f64) -> Self {
+        assert!(capacity > 0.0 && cost_per_item > 0.0);
+        TokenBucketCost { capacity, cost_per_item, tokens: capacity }
+    }
+
+    /// Tokens currently available.
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+impl CostFunction for TokenBucketCost {
+    fn sample_size(&mut self, window_len: usize) -> usize {
+        // Refill, then spend.
+        self.tokens = self.capacity;
+        let affordable = (self.tokens / self.cost_per_item).floor() as usize;
+        let n = affordable.min(window_len).max(1);
+        self.tokens -= n as f64 * self.cost_per_item;
+        n
+    }
+
+    fn observe(&mut self, _items: usize, _elapsed_ms: f64) {}
+
+    fn name(&self) -> &'static str {
+        "token-bucket"
+    }
+}
+
+/// Latency-SLA budget with an EWMA per-item cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyCost {
+    target_ms: f64,
+    /// EWMA of per-item milliseconds.
+    per_item_ms: f64,
+    alpha: f64,
+    /// Safety factor (< 1) so predictions undershoot the SLA.
+    headroom: f64,
+}
+
+impl LatencyCost {
+    /// Budget of `target_ms` per window; `initial_per_item_ms` seeds the
+    /// model until observations arrive.
+    pub fn new(target_ms: f64, initial_per_item_ms: f64) -> Self {
+        assert!(target_ms > 0.0 && initial_per_item_ms > 0.0);
+        LatencyCost { target_ms, per_item_ms: initial_per_item_ms, alpha: 0.3, headroom: 0.9 }
+    }
+
+    /// Current model estimate of per-item cost.
+    pub fn per_item_ms(&self) -> f64 {
+        self.per_item_ms
+    }
+}
+
+impl CostFunction for LatencyCost {
+    fn sample_size(&mut self, window_len: usize) -> usize {
+        let n = (self.target_ms * self.headroom / self.per_item_ms).floor() as usize;
+        n.clamp(1, window_len.max(1))
+    }
+
+    fn observe(&mut self, items: usize, elapsed_ms: f64) {
+        if items == 0 || elapsed_ms <= 0.0 {
+            return;
+        }
+        let observed = elapsed_ms / items as f64;
+        self.per_item_ms = self.alpha * observed + (1.0 - self.alpha) * self.per_item_ms;
+    }
+
+    fn name(&self) -> &'static str {
+        "latency-sla"
+    }
+}
+
+/// Build the configured cost function.
+pub fn from_spec(spec: &BudgetSpec) -> Box<dyn CostFunction> {
+    match *spec {
+        BudgetSpec::Fraction(f) => Box::new(FractionCost::new(f)),
+        BudgetSpec::Tokens { per_window, cost_per_item } => {
+            Box::new(TokenBucketCost::new(per_window, cost_per_item))
+        }
+        BudgetSpec::LatencyMs(ms) => Box::new(LatencyCost::new(ms, 0.001)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_rounds_and_clamps() {
+        let mut c = FractionCost::new(0.1);
+        assert_eq!(c.sample_size(10_000), 1000);
+        assert_eq!(c.sample_size(5), 1);
+        let mut c = FractionCost::new(1.0);
+        assert_eq!(c.sample_size(100), 100);
+    }
+
+    #[test]
+    fn token_bucket_affords_budget() {
+        let mut c = TokenBucketCost::new(500.0, 2.0);
+        assert_eq!(c.sample_size(10_000), 250);
+        // Refills every window.
+        assert_eq!(c.sample_size(10_000), 250);
+        // Small windows capped at window length.
+        assert_eq!(c.sample_size(100), 100);
+    }
+
+    #[test]
+    fn latency_model_adapts() {
+        let mut c = LatencyCost::new(100.0, 0.01); // predicts 9000 items
+        let n0 = c.sample_size(100_000);
+        assert_eq!(n0, 9000);
+        // Observed: items are 10× slower than the seed.
+        for _ in 0..50 {
+            c.observe(1000, 100.0); // 0.1 ms/item
+        }
+        let n1 = c.sample_size(100_000);
+        assert!(n1 < n0 / 5, "model failed to adapt: {n0} -> {n1}");
+        assert!((c.per_item_ms() - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn latency_model_ignores_degenerate_observations() {
+        let mut c = LatencyCost::new(100.0, 0.01);
+        let before = c.per_item_ms();
+        c.observe(0, 50.0);
+        c.observe(100, 0.0);
+        assert_eq!(c.per_item_ms(), before);
+    }
+
+    #[test]
+    fn from_spec_builds_matching_policy() {
+        assert_eq!(from_spec(&BudgetSpec::Fraction(0.5)).name(), "fraction");
+        assert_eq!(
+            from_spec(&BudgetSpec::Tokens { per_window: 10.0, cost_per_item: 1.0 }).name(),
+            "token-bucket"
+        );
+        assert_eq!(from_spec(&BudgetSpec::LatencyMs(10.0)).name(), "latency-sla");
+    }
+
+    #[test]
+    fn sample_never_zero() {
+        let mut c = FractionCost::new(0.001);
+        assert!(c.sample_size(10) >= 1);
+        let mut c = TokenBucketCost::new(0.5, 1.0);
+        assert!(c.sample_size(10) >= 1);
+        let mut c = LatencyCost::new(0.0001, 1.0);
+        assert!(c.sample_size(10) >= 1);
+    }
+}

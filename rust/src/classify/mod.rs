@@ -1,0 +1,147 @@
+//! Stratification of unlabeled sub-streams (§6.1).
+//!
+//! The paper assumes the input is pre-stratified by event source; §6.1
+//! sketches bootstrap-based classification for when it is not. This
+//! module implements that substrate: [`BootstrapStratifier`] fits value
+//! quantile cut-points on an initial reservoir using bootstrap resampling
+//! (robust to the reservoir being a small sample of the stream), then
+//! assigns each record a stratum by value bin.
+
+use crate::util::rng::Rng;
+use crate::workload::record::{Record, StratumId};
+
+/// A fitted value-quantile stratifier.
+#[derive(Debug, Clone)]
+pub struct BootstrapStratifier {
+    /// Ascending cut points; values ≤ cut[i] fall in stratum i.
+    cuts: Vec<f64>,
+}
+
+impl BootstrapStratifier {
+    /// Fit `strata` bins on `training` values using `resamples` bootstrap
+    /// rounds: each round resamples with replacement and computes the
+    /// within-round quantiles; the cut points are the bootstrap means —
+    /// more stable than single-shot quantiles on small reservoirs.
+    pub fn fit(training: &[f64], strata: usize, resamples: usize, rng: &mut Rng) -> Self {
+        assert!(strata >= 1, "need at least one stratum");
+        assert!(!training.is_empty(), "cannot fit on empty training set");
+        let n = training.len();
+        let n_cuts = strata - 1;
+        let mut cut_sums = vec![0.0; n_cuts];
+        let mut resampled = vec![0.0; n];
+        for _ in 0..resamples.max(1) {
+            for slot in resampled.iter_mut() {
+                *slot = training[rng.below(n)];
+            }
+            resampled.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for (ci, sum) in cut_sums.iter_mut().enumerate() {
+                let q = (ci + 1) as f64 / strata as f64;
+                let idx = ((q * (n - 1) as f64).round() as usize).min(n - 1);
+                *sum += resampled[idx];
+            }
+        }
+        let cuts = cut_sums.iter().map(|s| s / resamples.max(1) as f64).collect();
+        BootstrapStratifier { cuts }
+    }
+
+    /// Stratum for a value.
+    pub fn classify_value(&self, v: f64) -> StratumId {
+        match self.cuts.iter().position(|&c| v <= c) {
+            Some(i) => i as StratumId,
+            None => self.cuts.len() as StratumId,
+        }
+    }
+
+    /// Relabel a record's stratum by its value.
+    pub fn classify(&self, mut r: Record) -> Record {
+        r.stratum = self.classify_value(r.value);
+        r
+    }
+
+    /// Number of strata this classifier produces.
+    pub fn strata(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// The fitted cut points.
+    pub fn cuts(&self) -> &[f64] {
+        &self.cuts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_respects_cuts() {
+        let s = BootstrapStratifier { cuts: vec![1.0, 2.0] };
+        assert_eq!(s.classify_value(0.5), 0);
+        assert_eq!(s.classify_value(1.0), 0);
+        assert_eq!(s.classify_value(1.5), 1);
+        assert_eq!(s.classify_value(99.0), 2);
+        assert_eq!(s.strata(), 3);
+    }
+
+    #[test]
+    fn fit_produces_balanced_strata_on_uniform() {
+        let mut rng = Rng::new(1);
+        let training: Vec<f64> = (0..5000).map(|_| rng.f64() * 100.0).collect();
+        let s = BootstrapStratifier::fit(&training, 4, 50, &mut rng);
+        // Cuts near 25/50/75.
+        for (cut, want) in s.cuts().iter().zip([25.0, 50.0, 75.0]) {
+            assert!((cut - want).abs() < 3.0, "cuts {:?}", s.cuts());
+        }
+        // Classification of a fresh sample is ~uniform across strata.
+        let mut counts = [0usize; 4];
+        for _ in 0..8000 {
+            counts[s.classify_value(rng.f64() * 100.0) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 / 8000.0 - 0.25).abs() < 0.03, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_stratum_fit_has_no_cuts() {
+        let mut rng = Rng::new(2);
+        let s = BootstrapStratifier::fit(&[1.0, 2.0, 3.0], 1, 10, &mut rng);
+        assert_eq!(s.strata(), 1);
+        assert_eq!(s.classify_value(-5.0), 0);
+        assert_eq!(s.classify_value(500.0), 0);
+    }
+
+    #[test]
+    fn classify_record_relabels() {
+        let s = BootstrapStratifier { cuts: vec![10.0] };
+        let r = Record::new(1, 99, 0, 0, 3.0);
+        assert_eq!(s.classify(r).stratum, 0);
+        let r = Record::new(2, 99, 0, 0, 30.0);
+        assert_eq!(s.classify(r).stratum, 1);
+    }
+
+    #[test]
+    fn bootstrap_stabilizes_small_samples() {
+        // With a tiny training set, bootstrap-averaged cuts vary less
+        // across fits than single-shot (resamples=1) cuts.
+        let mut rng = Rng::new(3);
+        let training: Vec<f64> = (0..40).map(|_| rng.normal_with(50.0, 10.0)).collect();
+        let spread = |resamples: usize, rng: &mut Rng| {
+            let cuts: Vec<f64> = (0..30)
+                .map(|_| BootstrapStratifier::fit(&training, 2, resamples, rng).cuts()[0])
+                .collect();
+            let m = cuts.iter().sum::<f64>() / cuts.len() as f64;
+            (cuts.iter().map(|c| (c - m).powi(2)).sum::<f64>() / cuts.len() as f64).sqrt()
+        };
+        let single = spread(1, &mut rng);
+        let boot = spread(60, &mut rng);
+        assert!(boot < single, "bootstrap {boot} vs single {single}");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_training_panics() {
+        let mut rng = Rng::new(4);
+        BootstrapStratifier::fit(&[], 2, 10, &mut rng);
+    }
+}

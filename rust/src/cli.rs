@@ -1,0 +1,131 @@
+//! Tiny command-line argument parser for the launcher and examples.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. (No `clap` in the offline crate set.)
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); skip the binary name
+    /// before calling if you pass `std::env::args()`.
+    ///
+    /// `known_flags` lists boolean options that consume no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: the rest is positional.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        return Err(Error::Config(format!("option --{body} needs a value")));
+                    }
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    return Err(Error::Config(format!("option --{body} needs a value")));
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process command line.
+    pub fn from_env(known_flags: &[&str]) -> Result<Self> {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| Error::Config(format!("cannot parse --{key} value `{raw}`"))),
+        }
+    }
+
+    /// Was a boolean flag given?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--mode", "native", "--seed=7"], &[]).unwrap();
+        assert_eq!(a.get("mode"), Some("native"));
+        assert_eq!(a.get_parse::<u64>("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["run", "--verbose", "--n", "3", "trace.txt"], &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["run".to_string(), "trace.txt".to_string()]);
+        assert_eq!(a.get_parse::<usize>("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]).unwrap();
+        assert_eq!(a.get_parse::<usize>("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--x", "1", "--", "--not-an-opt"], &[]).unwrap();
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&["--mode"], &[]).is_err());
+        assert!(parse(&["--mode", "--other", "x"], &[]).is_err());
+    }
+
+    #[test]
+    fn bad_typed_parse_is_error() {
+        let a = parse(&["--n", "abc"], &[]).unwrap();
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+    }
+}

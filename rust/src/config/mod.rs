@@ -1,0 +1,12 @@
+//! Configuration system: a mini-TOML parser plus the typed system config.
+//!
+//! The offline crate set has no `serde`/`toml`, so `parser` implements the
+//! subset of TOML the launcher needs — `[section]` headers, string / int /
+//! float / bool scalars, flat arrays, comments — and `system` maps parsed
+//! values onto [`SystemConfig`] with defaults and validation.
+
+pub mod parser;
+pub mod system;
+
+pub use parser::{parse_toml, TomlValue};
+pub use system::{BudgetSpec, ExecModeSpec, SystemConfig};

@@ -1,0 +1,333 @@
+//! Mini-TOML parser (sections, scalars, flat arrays, comments).
+//!
+//! Supported grammar — the subset our config files use:
+//!
+//! ```toml
+//! # comment
+//! top_level = 1
+//! [section]
+//! name = "string"        # basic strings with \" \\ \n \t escapes
+//! count = 42             # i64
+//! ratio = 0.25           # f64 (also 1e-3 forms)
+//! enabled = true
+//! rates = [3.0, 4.0, 5.0]
+//! ```
+//!
+//! Keys are flattened to `section.key`. Duplicate keys: last one wins
+//! (documented divergence from strict TOML, convenient for overrides).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML scalar or flat array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Floating point literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Flat array of scalars.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As i64 (ints only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As f64 (accepts ints too).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// As &str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(s: &str, line_no: usize) -> Result<(String, &str)> {
+    let mut out = String::new();
+    let mut chars = s.char_indices();
+    let mut escaped = false;
+    // Caller guarantees s starts with '"'.
+    chars.next();
+    for (i, c) in chars {
+        if escaped {
+            out.push(match c {
+                'n' => '\n',
+                't' => '\t',
+                'r' => '\r',
+                '"' => '"',
+                '\\' => '\\',
+                other => {
+                    return Err(Error::Config(format!(
+                        "line {line_no}: unknown escape \\{other}"
+                    )))
+                }
+            });
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '"' {
+            return Ok((out, &s[i + 1..]));
+        } else {
+            out.push(c);
+        }
+    }
+    Err(Error::Config(format!("line {line_no}: unterminated string")))
+}
+
+fn parse_scalar(raw: &str, line_no: usize) -> Result<TomlValue> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(Error::Config(format!("line {line_no}: empty value")));
+    }
+    if raw.starts_with('"') {
+        let (s, rest) = parse_string(raw, line_no)?;
+        if !rest.trim().is_empty() {
+            return Err(Error::Config(format!(
+                "line {line_no}: trailing characters after string"
+            )));
+        }
+        return Ok(TomlValue::Str(s));
+    }
+    match raw {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(Error::Config(format!("line {line_no}: cannot parse value `{raw}`")))
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<TomlValue> {
+    let raw = raw.trim();
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Config(format!("line {line_no}: unterminated array")))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_array_items(inner, line_no)?
+            .into_iter()
+            .map(|item| parse_scalar(item, line_no))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    parse_scalar(raw, line_no)
+}
+
+fn split_array_items(inner: &str, line_no: usize) -> Result<Vec<&str>> {
+    let mut items = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in inner.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err(Error::Config(format!("line {line_no}: unterminated string in array")));
+    }
+    let tail = &inner[start..];
+    if !tail.trim().is_empty() {
+        items.push(tail);
+    }
+    Ok(items)
+}
+
+/// Parse mini-TOML text into a flat `section.key → value` map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {line_no}: bad section header")))?
+                .trim();
+            if name.is_empty() {
+                return Err(Error::Config(format!("line {line_no}: empty section name")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Config(format!("line {line_no}: expected `key = value`")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {line_no}: empty key")));
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        map.insert(full_key, value);
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let map = parse_toml(
+            r#"
+            top = 1
+            [stream]
+            name = "flows"
+            rate = 3.5
+            on = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(map["top"], TomlValue::Int(1));
+        assert_eq!(map["stream.name"], TomlValue::Str("flows".into()));
+        assert_eq!(map["stream.rate"], TomlValue::Float(3.5));
+        assert_eq!(map["stream.on"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let map = parse_toml("rates = [3, 4.0, 5]").unwrap();
+        let arr = map["rates"].as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_float(), Some(3.0));
+        assert_eq!(arr[1].as_float(), Some(4.0));
+    }
+
+    #[test]
+    fn string_arrays_with_commas_inside() {
+        let map = parse_toml(r#"names = ["a,b", "c"]"#).unwrap();
+        let arr = map["names"].as_array().unwrap();
+        assert_eq!(arr[0].as_str(), Some("a,b"));
+        assert_eq!(arr[1].as_str(), Some("c"));
+    }
+
+    #[test]
+    fn comments_stripped_even_after_values() {
+        let map = parse_toml("x = 2 # two\ns = \"a#b\" # hash inside string kept").unwrap();
+        assert_eq!(map["x"], TomlValue::Int(2));
+        assert_eq!(map["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let map = parse_toml(r#"s = "line\nbreak \"quoted\" \\ done""#).unwrap();
+        assert_eq!(map["s"].as_str(), Some("line\nbreak \"quoted\" \\ done"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let map = parse_toml("n = 10_000\nf = 1_000.5").unwrap();
+        assert_eq!(map["n"], TomlValue::Int(10_000));
+        assert_eq!(map["f"], TomlValue::Float(1000.5));
+    }
+
+    #[test]
+    fn last_duplicate_wins() {
+        let map = parse_toml("x = 1\nx = 2").unwrap();
+        assert_eq!(map["x"], TomlValue::Int(2));
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        for (src, needle) in [
+            ("x 1", "line 1"),
+            ("[oops", "line 1"),
+            ("x = ", "line 1"),
+            ("y = [1, 2", "unterminated array"),
+            ("s = \"abc", "unterminated string"),
+            ("z = what", "cannot parse"),
+        ] {
+            let err = parse_toml(src).unwrap_err().to_string();
+            assert!(err.contains(needle), "src={src:?} err={err}");
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(parse_toml("").unwrap().is_empty());
+        assert!(parse_toml("\n# only comments\n").unwrap().is_empty());
+    }
+}

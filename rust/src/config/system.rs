@@ -1,0 +1,356 @@
+//! Typed system configuration for the IncApprox coordinator.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::parser::{parse_toml, TomlValue};
+use crate::error::{Error, Result};
+
+/// Which execution pipeline the coordinator runs (the paper's system plus
+/// the three baselines its headline speedups are measured against).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecModeSpec {
+    /// Exact recomputation of the full window (native Spark Streaming).
+    Native,
+    /// Memoization/change-propagation only, no sampling.
+    IncrementalOnly,
+    /// Stratified sampling only, no memoization.
+    ApproxOnly,
+    /// The paper's system: biased sampling + incremental computation.
+    IncApprox,
+}
+
+impl ExecModeSpec {
+    /// Parse a mode name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Self::Native),
+            "incremental" | "incremental_only" | "inc" => Ok(Self::IncrementalOnly),
+            "approx" | "approx_only" => Ok(Self::ApproxOnly),
+            "incapprox" => Ok(Self::IncApprox),
+            other => Err(Error::Config(format!("unknown mode `{other}`"))),
+        }
+    }
+
+    /// Display name used in reports and benches.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Native => "native",
+            Self::IncrementalOnly => "incremental",
+            Self::ApproxOnly => "approx",
+            Self::IncApprox => "incapprox",
+        }
+    }
+}
+
+/// The user's query budget (§2.2 / §6.2). The virtual cost function in
+/// `budget/` turns this into a per-window sample size.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BudgetSpec {
+    /// Direct sampling fraction of the window (used by the paper's §5
+    /// micro-benchmarks: "sample size 10% of window").
+    Fraction(f64),
+    /// Pulsar-style resource budget: tokens available per window; each
+    /// item costs `cost_per_item` tokens.
+    Tokens {
+        /// Tokens refilled each window.
+        per_window: f64,
+        /// Token cost of processing one item.
+        cost_per_item: f64,
+    },
+    /// Latency SLA per window in milliseconds; the EWMA predictor converts
+    /// it to an item count.
+    LatencyMs(f64),
+}
+
+impl Default for BudgetSpec {
+    fn default() -> Self {
+        BudgetSpec::Fraction(0.1)
+    }
+}
+
+/// Full system configuration with defaults mirroring the paper's §5 setup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    /// Master seed for all deterministic randomness.
+    pub seed: u64,
+    /// Execution pipeline.
+    pub mode: ExecModeSpec,
+    /// Window size in items (paper: 10 000).
+    pub window_size: usize,
+    /// Slide in items (paper: 1–16% of window).
+    pub slide: usize,
+    /// Query budget.
+    pub budget: BudgetSpec,
+    /// Reservoir re-allocation interval `T` of Algorithm 2, in items seen.
+    pub realloc_interval: usize,
+    /// Target items per memoizable chunk (content-defined chunking mean).
+    pub chunk_size: usize,
+    /// Full-recompute epoch for the inverse-reduce path: every N windows
+    /// the per-stratum moments are rebuilt from scratch to bound
+    /// floating-point drift from repeated add/subtract.
+    pub recompute_epoch: usize,
+    /// Per-item map iterations (the user-defined map stage's weight;
+    /// see `job::map_fn`). Artifacts must be compiled with a matching
+    /// rounds variant for the PJRT backend.
+    pub map_rounds: u32,
+    /// Confidence level for error bounds (paper example: 0.95).
+    pub confidence: f64,
+    /// Execute chunk moments through the PJRT runtime (true) or the
+    /// native scalar backend (false).
+    pub use_pjrt: bool,
+    /// Directory holding `manifest.tsv` + HLO artifacts.
+    pub artifacts_dir: String,
+    /// Worker threads for the data-parallel job executor.
+    pub workers: usize,
+    /// Per-window probability of injected memo loss (fault testing).
+    pub fault_memo_loss: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            seed: 42,
+            mode: ExecModeSpec::IncApprox,
+            window_size: 10_000,
+            slide: 400, // 4% of window, Fig 5.1(a) setting
+            budget: BudgetSpec::Fraction(0.1),
+            realloc_interval: 500,
+            chunk_size: 64,
+            recompute_epoch: 64,
+            map_rounds: 0,
+            confidence: 0.95,
+            use_pjrt: false,
+            artifacts_dir: "artifacts".to_string(),
+            workers: 4,
+            fault_memo_loss: 0.0,
+        }
+    }
+}
+
+fn get_f64(map: &BTreeMap<String, TomlValue>, key: &str) -> Result<Option<f64>> {
+    match map.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_float()
+            .map(Some)
+            .ok_or_else(|| Error::Config(format!("`{key}` must be a number"))),
+    }
+}
+
+fn get_usize(map: &BTreeMap<String, TomlValue>, key: &str) -> Result<Option<usize>> {
+    match map.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let i = v
+                .as_int()
+                .ok_or_else(|| Error::Config(format!("`{key}` must be an integer")))?;
+            usize::try_from(i)
+                .map(Some)
+                .map_err(|_| Error::Config(format!("`{key}` must be non-negative")))
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Build from mini-TOML text; missing keys keep their defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let map = parse_toml(text)?;
+        let mut cfg = SystemConfig::default();
+        if let Some(v) = get_usize(&map, "seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = map.get("mode") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("`mode` must be a string".into()))?;
+            cfg.mode = ExecModeSpec::parse(s)?;
+        }
+        if let Some(v) = get_usize(&map, "window.size")? {
+            cfg.window_size = v;
+        }
+        if let Some(v) = get_usize(&map, "window.slide")? {
+            cfg.slide = v;
+        }
+        if let Some(v) = get_f64(&map, "budget.fraction")? {
+            cfg.budget = BudgetSpec::Fraction(v);
+        }
+        if let Some(per_window) = get_f64(&map, "budget.tokens")? {
+            let cost = get_f64(&map, "budget.cost_per_item")?.unwrap_or(1.0);
+            cfg.budget = BudgetSpec::Tokens { per_window, cost_per_item: cost };
+        }
+        if let Some(v) = get_f64(&map, "budget.latency_ms")? {
+            cfg.budget = BudgetSpec::LatencyMs(v);
+        }
+        if let Some(v) = get_usize(&map, "sampling.realloc_interval")? {
+            cfg.realloc_interval = v;
+        }
+        if let Some(v) = get_usize(&map, "job.chunk_size")? {
+            cfg.chunk_size = v;
+        }
+        if let Some(v) = get_usize(&map, "job.recompute_epoch")? {
+            cfg.recompute_epoch = v;
+        }
+        if let Some(v) = get_usize(&map, "job.map_rounds")? {
+            cfg.map_rounds = v as u32;
+        }
+        if let Some(v) = get_f64(&map, "stats.confidence")? {
+            cfg.confidence = v;
+        }
+        if let Some(v) = map.get("runtime.use_pjrt") {
+            cfg.use_pjrt = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("`runtime.use_pjrt` must be a bool".into()))?;
+        }
+        if let Some(v) = map.get("runtime.artifacts_dir") {
+            cfg.artifacts_dir = v
+                .as_str()
+                .ok_or_else(|| Error::Config("`runtime.artifacts_dir` must be a string".into()))?
+                .to_string();
+        }
+        if let Some(v) = get_usize(&map, "job.workers")? {
+            cfg.workers = v;
+        }
+        if let Some(v) = get_f64(&map, "fault.memo_loss")? {
+            cfg.fault_memo_loss = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Check cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.window_size == 0 {
+            return Err(Error::Config("window.size must be > 0".into()));
+        }
+        if self.slide == 0 || self.slide > self.window_size {
+            return Err(Error::Config(format!(
+                "window.slide must be in 1..={} (got {})",
+                self.window_size, self.slide
+            )));
+        }
+        if let BudgetSpec::Fraction(f) = self.budget {
+            if !(0.0 < f && f <= 1.0) {
+                return Err(Error::Config(format!(
+                    "budget.fraction must be in (0, 1], got {f}"
+                )));
+            }
+        }
+        if !(0.0 < self.confidence && self.confidence < 1.0) {
+            return Err(Error::Config("stats.confidence must be in (0, 1)".into()));
+        }
+        if self.chunk_size == 0 {
+            return Err(Error::Config("job.chunk_size must be > 0".into()));
+        }
+        if self.recompute_epoch == 0 {
+            return Err(Error::Config("job.recompute_epoch must be > 0".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("job.workers must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.fault_memo_loss) {
+            return Err(Error::Config("fault.memo_loss must be in [0, 1]".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_section5() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.window_size, 10_000);
+        assert_eq!(cfg.slide, 400);
+        assert_eq!(cfg.budget, BudgetSpec::Fraction(0.1));
+        assert_eq!(cfg.confidence, 0.95);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+            seed = 7
+            mode = "incapprox"
+            [window]
+            size = 5000
+            slide = 100
+            [budget]
+            fraction = 0.2
+            [sampling]
+            realloc_interval = 250
+            [job]
+            chunk_size = 128
+            workers = 2
+            [stats]
+            confidence = 0.99
+            [runtime]
+            use_pjrt = true
+            artifacts_dir = "artifacts"
+            [fault]
+            memo_loss = 0.05
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.window_size, 5000);
+        assert_eq!(cfg.slide, 100);
+        assert_eq!(cfg.budget, BudgetSpec::Fraction(0.2));
+        assert_eq!(cfg.realloc_interval, 250);
+        assert_eq!(cfg.chunk_size, 128);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.confidence, 0.99);
+        assert!(cfg.use_pjrt);
+        assert_eq!(cfg.fault_memo_loss, 0.05);
+    }
+
+    #[test]
+    fn token_budget() {
+        let cfg = SystemConfig::from_toml("[budget]\ntokens = 2000\ncost_per_item = 2.0").unwrap();
+        assert_eq!(
+            cfg.budget,
+            BudgetSpec::Tokens { per_window: 2000.0, cost_per_item: 2.0 }
+        );
+    }
+
+    #[test]
+    fn latency_budget() {
+        let cfg = SystemConfig::from_toml("[budget]\nlatency_ms = 50").unwrap();
+        assert_eq!(cfg.budget, BudgetSpec::LatencyMs(50.0));
+    }
+
+    #[test]
+    fn mode_parsing() {
+        for (s, m) in [
+            ("native", ExecModeSpec::Native),
+            ("incremental", ExecModeSpec::IncrementalOnly),
+            ("approx", ExecModeSpec::ApproxOnly),
+            ("incapprox", ExecModeSpec::IncApprox),
+        ] {
+            assert_eq!(ExecModeSpec::parse(s).unwrap(), m);
+            assert_eq!(ExecModeSpec::parse(s).unwrap().name(), s);
+        }
+        assert!(ExecModeSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(SystemConfig::from_toml("[window]\nsize = 0").is_err());
+        assert!(SystemConfig::from_toml("[window]\nsize = 10\nslide = 11").is_err());
+        assert!(SystemConfig::from_toml("[budget]\nfraction = 0").is_err());
+        assert!(SystemConfig::from_toml("[budget]\nfraction = 1.5").is_err());
+        assert!(SystemConfig::from_toml("[stats]\nconfidence = 1.0").is_err());
+        assert!(SystemConfig::from_toml("[job]\nworkers = 0").is_err());
+        assert!(SystemConfig::from_toml("[fault]\nmemo_loss = 2.0").is_err());
+        assert!(SystemConfig::from_toml("mode = \"bogus\"").is_err());
+    }
+}

@@ -1,0 +1,689 @@
+//! Algorithm 1 — the per-window driver.
+//!
+//! Two incremental mechanisms cooperate, mirroring the paper:
+//!
+//! * **Chunk memoization + change propagation** (§3.4, Figure 3.1): the
+//!   biased sample is chunked in bias order (stable prefixes), planned
+//!   against the memo store via the DDG, and only fresh chunks execute.
+//!   This is the general self-adjusting path; it is also how a window is
+//!   (re)computed from scratch.
+//! * **Reduce / inverse-reduce** (§4.2.2, `reduceByKeyAndWindow`): for
+//!   aggregate queries the per-stratum moments of the previous sample are
+//!   *updated* with the item delta — combine the added items' moments,
+//!   un-combine the removed items' — so per-window work is proportional
+//!   to the change, not the sample. The delta moments themselves are
+//!   computed by the chunk backend (PJRT on the hot path). Every
+//!   `recompute_epoch` windows a full recompute bounds float drift.
+
+use std::collections::BTreeMap;
+
+use crate::budget::{self, CostFunction};
+use crate::config::system::{ExecModeSpec, SystemConfig};
+use crate::coordinator::report::{StratumReport, WindowReport};
+use crate::error::Result;
+use crate::fault::{FaultInjector, MemoReplica, RecoveryPolicy};
+use crate::job::chunk::{chunk_stratum, Chunk};
+use crate::job::executor::{ChunkBackend, NativeBackend};
+use crate::job::moments::Moments;
+use crate::job::plan::JobPlan;
+use crate::metrics::Stopwatch;
+use crate::sac::memo::MemoStore;
+use crate::sampling::biased::{bias_sample, BiasOutcome};
+use crate::sampling::stratified::{StratifiedSample, StratifiedSampler};
+use crate::stats::stratified::{estimate_sum, StratumAgg};
+use crate::util::hash::{FastMap, FastSet};
+use crate::util::rng::Rng;
+use crate::window::{CountWindow, TimeWindow, WindowSnapshot};
+use crate::workload::record::{Record, StratumId};
+
+/// Execution pipeline variants: the paper's system and its baselines.
+pub type ExecMode = ExecModeSpec;
+
+impl ExecModeSpec {
+    /// Does this mode sample (vs. process the whole window)?
+    fn samples(&self) -> bool {
+        matches!(self, ExecModeSpec::ApproxOnly | ExecModeSpec::IncApprox)
+    }
+
+    /// Does this mode memoize and reuse sub-computations?
+    fn memoizes(&self) -> bool {
+        matches!(self, ExecModeSpec::IncrementalOnly | ExecModeSpec::IncApprox)
+    }
+
+    /// Does this mode bias the sample toward memoized items?
+    fn biases(&self) -> bool {
+        matches!(self, ExecModeSpec::IncApprox)
+    }
+}
+
+/// The window manager variant in use: count-based (what §5's figures
+/// parameterize) or time-based (the paper's general model, §2.3.3 —
+/// per-window item counts vary with arrival rate).
+enum WindowState {
+    /// Fixed item count, item-count slide.
+    Count(CountWindow),
+    /// Tick length + tick slide.
+    Time(TimeWindow),
+}
+
+/// The streaming coordinator: owns the window, the memo store, the cost
+/// function, and the chunk execution backend.
+pub struct Coordinator {
+    cfg: SystemConfig,
+    window: WindowState,
+    memo: MemoStore,
+    cost: Box<dyn CostFunction>,
+    backend: Box<dyn ChunkBackend>,
+    rng: Rng,
+    injector: FaultInjector,
+    recovery: RecoveryPolicy,
+    replica: Option<MemoReplica>,
+    windows_processed: u64,
+}
+
+impl Coordinator {
+    /// Coordinator from a config, with the native scalar backend and a
+    /// count-based window (use [`Coordinator::new_time_windowed`] for the
+    /// time-based model).
+    pub fn new(cfg: SystemConfig) -> Self {
+        let window = WindowState::Count(CountWindow::new(cfg.window_size));
+        Self::with_window(cfg, window)
+    }
+
+    /// Coordinator over a **time-based** sliding window of `length` ticks
+    /// sliding by `slide` ticks; feed it with [`Coordinator::ingest_tick`].
+    pub fn new_time_windowed(cfg: SystemConfig, length: u64, slide: u64) -> Self {
+        Self::with_window(cfg, WindowState::Time(TimeWindow::new(length, slide)))
+    }
+
+    fn with_window(cfg: SystemConfig, window: WindowState) -> Self {
+        let cost = budget::from_spec(&cfg.budget);
+        let injector = FaultInjector::new(cfg.fault_memo_loss, cfg.seed ^ 0xFA17);
+        Coordinator {
+            rng: Rng::new(cfg.seed),
+            window,
+            memo: MemoStore::new(),
+            cost,
+            backend: Box::new(NativeBackend::new(cfg.map_rounds)),
+            injector,
+            recovery: RecoveryPolicy::LineageRecompute,
+            replica: None,
+            windows_processed: 0,
+            cfg,
+        }
+    }
+
+    /// Swap the chunk execution backend (worker pool or PJRT).
+    pub fn with_backend(mut self, backend: Box<dyn ChunkBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Set the §6.3 recovery policy for injected memo loss.
+    pub fn with_recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = policy;
+        self
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Memoization statistics so far.
+    pub fn memo_stats(&self) -> crate::sac::memo::MemoStats {
+        self.memo.stats()
+    }
+
+    /// Backend name (reports).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Faults injected so far.
+    pub fn faults_injected(&self) -> u64 {
+        self.injector.injected()
+    }
+
+    /// Resize the sliding window (Fig 5.1(c): Δ between adjacent windows).
+    /// Count-based windows only; a no-op for time-based windows (their
+    /// size is the time length).
+    pub fn resize_window(&mut self, new_size: usize) {
+        if let WindowState::Count(w) = &mut self.window {
+            w.resize(new_size);
+            self.cfg.window_size = new_size;
+        }
+    }
+
+    /// Group a full window per stratum — the "sample" of the exact modes.
+    fn full_window_sample(items: &[Record]) -> StratifiedSample {
+        let mut out = StratifiedSample::default();
+        for r in items {
+            out.per_stratum.entry(r.stratum).or_default().push(*r);
+            *out.population.entry(r.stratum).or_default() += 1;
+        }
+        out
+    }
+
+    /// Build a no-bias outcome that still *reports* the overlap with the
+    /// memoized items (so baselines expose comparable reuse accounting).
+    fn no_bias_outcome(
+        sample: &StratifiedSample,
+        memo_items: &BTreeMap<StratumId, Vec<Record>>,
+    ) -> BiasOutcome {
+        let mut out = BiasOutcome::default();
+        for (&s, items) in &sample.per_stratum {
+            let memo_ids: FastSet<u64> = memo_items
+                .get(&s)
+                .map(|v| v.iter().map(|r| r.id).collect())
+                .unwrap_or_default();
+            let reused = items.iter().filter(|r| memo_ids.contains(&r.id)).count();
+            out.memo_available.insert(s, memo_ids.len());
+            out.memo_reused.insert(s, reused);
+            out.per_stratum.insert(s, items.clone());
+        }
+        out
+    }
+
+    /// Full (re)compute of one stratum's moments via the chunk plan:
+    /// returns the moments plus (chunks_total, chunks_hit, fresh_items).
+    #[allow(clippy::type_complexity)]
+    fn plan_strata(
+        &mut self,
+        to_plan: &BTreeMap<StratumId, Vec<Record>>,
+        use_memo: bool,
+        window_id: u64,
+    ) -> Result<(BTreeMap<StratumId, Moments>, usize, usize, usize)> {
+        let mut biased_like = BiasOutcome::default();
+        for (&s, items) in to_plan {
+            biased_like.per_stratum.insert(s, items.clone());
+        }
+        let mut scratch = MemoStore::new();
+        let memo_ref = if use_memo { &mut self.memo } else { &mut scratch };
+        let plan = JobPlan::build(&biased_like, memo_ref, self.cfg.chunk_size);
+        let fresh = plan.fresh_chunks();
+        let fresh_items: usize = fresh.iter().map(|c| c.len()).sum();
+        let fresh_results = self.backend.compute(&fresh)?;
+        let fresh_by_hash: FastMap<u64, Moments> =
+            fresh.iter().zip(&fresh_results).map(|(c, m)| (c.hash, *m)).collect();
+        if use_memo {
+            for chunk in &fresh {
+                let min_ts = chunk.items.iter().map(|r| r.timestamp).min().unwrap_or(0);
+                self.memo.put_chunk(chunk.hash, fresh_by_hash[&chunk.hash], min_ts, window_id);
+            }
+        }
+        let mut out = BTreeMap::new();
+        for (&s, planned) in &plan.per_stratum {
+            let m = Moments::combine_all(planned.iter().map(|p| {
+                p.memoized.as_ref().unwrap_or_else(|| &fresh_by_hash[&p.chunk.hash])
+            }));
+            out.insert(s, m);
+        }
+        Ok((out, plan.chunk_count(), plan.hit_count(), fresh_items))
+    }
+
+    /// Process one slide's worth of new records (count-based windows):
+    /// runs the full Algorithm 1 body for the resulting window and
+    /// returns its report.
+    pub fn process_batch(&mut self, batch: Vec<Record>) -> Result<WindowReport> {
+        let snap = match &mut self.window {
+            WindowState::Count(w) => w.slide(batch),
+            WindowState::Time(_) => {
+                return Err(crate::error::Error::Job(
+                    "process_batch needs a count window; use ingest_tick".into(),
+                ))
+            }
+        };
+        self.process_snapshot(snap)
+    }
+
+    /// Feed one tick's records to a **time-based** window (records must
+    /// carry timestamps ≤ `now`). Emits a report whenever a window
+    /// boundary is crossed; between boundaries returns `Ok(None)`.
+    pub fn ingest_tick(
+        &mut self,
+        records: Vec<Record>,
+        now: u64,
+    ) -> Result<Option<WindowReport>> {
+        let snap = match &mut self.window {
+            WindowState::Time(w) => {
+                w.ingest(records);
+                w.try_emit(now)
+            }
+            WindowState::Count(_) => {
+                return Err(crate::error::Error::Job(
+                    "ingest_tick needs a time window; use process_batch".into(),
+                ))
+            }
+        };
+        snap.map(|s| self.process_snapshot(s)).transpose()
+    }
+
+    /// The Algorithm 1 body, shared by both window kinds.
+    fn process_snapshot(&mut self, snap: WindowSnapshot) -> Result<WindowReport> {
+        let sw = Stopwatch::start();
+        let window_id = snap.window_id;
+        let window_len = snap.items.len();
+        let window_start_ts = snap.items.iter().map(|r| r.timestamp).min().unwrap_or(0);
+
+        // Fault injection happens before eviction (a crash loses the
+        // store; recovery may restore the previous window's replica).
+        let fault_injected =
+            self.injector.maybe_inject(&mut self.memo, self.recovery, self.replica.as_ref());
+
+        // Previous sample (pre-eviction) — the inverse-reduce base state.
+        let prev_items = self.memo.items_all();
+
+        // Algorithm 1: remove all old items (and dependent results) from memo.
+        self.memo.evict_older_than(window_start_ts);
+
+        // Cost function gives the sample size based on the budget.
+        let sample = if self.cfg.mode.samples() {
+            let sample_size = self.cost.sample_size(window_len);
+            StratifiedSampler::sample_window(
+                &snap.items,
+                sample_size,
+                self.cfg.realloc_interval,
+                self.rng.fork(),
+            )
+        } else {
+            Self::full_window_sample(&snap.items)
+        };
+
+        // Bias the stratified sample to include memoized items (§3.3).
+        let memo_items = self.memo.items_for_bias(window_start_ts);
+        let biased = if self.cfg.mode.biases() {
+            bias_sample(&sample, &memo_items)
+        } else {
+            Self::no_bias_outcome(&sample, &memo_items)
+        };
+        let sample_size = biased.total_len();
+
+        // --- Compute per-stratum moments -------------------------------
+        // Incremental (inverse-reduce) path when the mode memoizes, prior
+        // state exists, the delta is small, and we are not on a
+        // recompute-epoch boundary; chunked full path otherwise.
+        let epoch_recompute = self.cfg.mode.memoizes()
+            && self.windows_processed % self.cfg.recompute_epoch as u64
+                == self.cfg.recompute_epoch as u64 - 1;
+
+        let mut stratum_moments: BTreeMap<StratumId, Moments> = BTreeMap::new();
+        let mut full_path: BTreeMap<StratumId, Vec<Record>> = BTreeMap::new();
+        let mut delta_chunks: Vec<(StratumId, bool, Chunk)> = Vec::new(); // (s, is_add, chunk)
+        let mut fresh_items = 0usize;
+
+        for (&stratum, cur) in &biased.per_stratum {
+            let prev = prev_items.get(&stratum);
+            let prev_m = self.memo.stratum_moments(stratum);
+            if !self.cfg.mode.memoizes() || prev.is_none() || prev_m.is_none() || epoch_recompute
+            {
+                full_path.insert(stratum, cur.clone());
+                continue;
+            }
+            let prev = prev.expect("checked");
+            let prev_ids: FastSet<u64> = prev.iter().map(|r| r.id).collect();
+            let cur_ids: FastSet<u64> = cur.iter().map(|r| r.id).collect();
+            let added: Vec<Record> =
+                cur.iter().filter(|r| !prev_ids.contains(&r.id)).copied().collect();
+            let removed: Vec<Record> =
+                prev.iter().filter(|r| !cur_ids.contains(&r.id)).copied().collect();
+            if added.len() + removed.len() >= cur.len() {
+                // Delta as big as the sample: recompute instead.
+                full_path.insert(stratum, cur.clone());
+                continue;
+            }
+            fresh_items += added.len() + removed.len();
+            for chunk in chunk_stratum(stratum, added, self.cfg.chunk_size) {
+                delta_chunks.push((stratum, true, chunk));
+            }
+            for chunk in chunk_stratum(stratum, removed, self.cfg.chunk_size) {
+                delta_chunks.push((stratum, false, chunk));
+            }
+            stratum_moments.insert(stratum, prev_m.expect("checked"));
+        }
+
+        // One batched backend call for every stratum's delta chunks.
+        let chunk_refs: Vec<&Chunk> = delta_chunks.iter().map(|(_, _, c)| c).collect();
+        let delta_moments = self.backend.compute(&chunk_refs)?;
+        for ((stratum, is_add, _), m) in delta_chunks.iter().zip(&delta_moments) {
+            let entry = stratum_moments.get_mut(stratum).expect("seeded above");
+            *entry =
+                if *is_add { entry.combine(m) } else { entry.inverse_combine(m) };
+        }
+
+        // Full/chunked path for the remaining strata.
+        let (planned_moments, chunks_total, chunks_reused, planned_fresh) =
+            self.plan_strata(&full_path, self.cfg.mode.memoizes(), window_id)?;
+        fresh_items += planned_fresh;
+        stratum_moments.extend(planned_moments);
+
+        // --- Reduce to the estimate (§3.5) ------------------------------
+        let mut aggs: Vec<StratumAgg> = Vec::with_capacity(stratum_moments.len());
+        let mut strata_reports: BTreeMap<StratumId, StratumReport> = BTreeMap::new();
+        for (&stratum, m) in &stratum_moments {
+            let population = sample.population.get(&stratum).copied().unwrap_or(0) as f64;
+            aggs.push(StratumAgg::from_moments(m, population));
+            strata_reports.insert(
+                stratum,
+                StratumReport {
+                    sample_size: biased.stratum(stratum).len(),
+                    memo_reused: biased.memo_reused.get(&stratum).copied().unwrap_or(0),
+                    memo_available: biased.memo_available.get(&stratum).copied().unwrap_or(0),
+                    population: population as u64,
+                },
+            );
+        }
+        let estimate = estimate_sum(&aggs, self.cfg.confidence)?;
+
+        // Memoize the biased sample's items + per-stratum state for the
+        // next window (Algorithm 1's `memo ← memoize(biasedSample)`).
+        if self.cfg.mode.memoizes() || self.cfg.mode.biases() {
+            self.memo.memoize_items(&biased.per_stratum);
+            for (&s, m) in &stratum_moments {
+                self.memo.put_stratum_moments(s, *m);
+            }
+        }
+        if self.recovery == RecoveryPolicy::Replicated {
+            self.replica = Some(self.memo.snapshot());
+        }
+
+        self.windows_processed += 1;
+        let latency_ms = sw.elapsed_ms();
+        self.cost.observe(sample_size, latency_ms);
+
+        Ok(WindowReport {
+            window_id,
+            mode: self.cfg.mode.name(),
+            estimate,
+            window_len,
+            sample_size,
+            chunks_total,
+            chunks_reused,
+            fresh_items,
+            strata: strata_reports,
+            latency_ms,
+            fault_injected,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::MultiStream;
+
+    fn config(mode: ExecModeSpec) -> SystemConfig {
+        SystemConfig {
+            mode,
+            window_size: 2000,
+            slide: 200,
+            seed: 11,
+            // Small windows → small samples: keep several chunks per
+            // stratum so chunk-level reuse has granularity to show.
+            chunk_size: 16,
+            ..SystemConfig::default()
+        }
+    }
+
+    fn run(mode: ExecModeSpec, windows: usize) -> Vec<WindowReport> {
+        let cfg = config(mode);
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        // Warm the window first.
+        let warm = gen.take_records(cfg.window_size);
+        let mut reports = vec![coord.process_batch(warm).unwrap()];
+        for _ in 0..windows {
+            let batch = gen.take_records(cfg.slide);
+            reports.push(coord.process_batch(batch).unwrap());
+        }
+        reports
+    }
+
+    #[test]
+    fn native_mode_is_exact() {
+        let reports = run(ExecModeSpec::Native, 3);
+        for r in &reports {
+            assert_eq!(r.sample_size, r.window_len);
+            assert_eq!(r.estimate.margin, 0.0, "exact mode must have zero margin");
+            assert_eq!(r.chunks_reused, 0, "native never reuses");
+            assert_eq!(r.fresh_items, r.window_len, "native computes everything");
+        }
+    }
+
+    #[test]
+    fn incremental_mode_reuses_after_warmup() {
+        let reports = run(ExecModeSpec::IncrementalOnly, 4);
+        for r in &reports[2..] {
+            assert_eq!(r.estimate.margin, 0.0, "incremental is exact");
+            assert!(
+                r.fresh_items < r.window_len / 2,
+                "incremental should compute ≪ window, got {}/{}",
+                r.fresh_items,
+                r.window_len
+            );
+        }
+    }
+
+    #[test]
+    fn approx_mode_bounds_and_samples() {
+        let reports = run(ExecModeSpec::ApproxOnly, 3);
+        for r in &reports {
+            assert!(r.sample_size <= r.window_len / 5, "10% budget");
+            assert!(r.estimate.margin > 0.0);
+            assert_eq!(r.chunks_reused, 0, "approx-only never reuses");
+            assert_eq!(r.fresh_items, r.sample_size, "approx computes the whole sample");
+        }
+    }
+
+    #[test]
+    fn incapprox_samples_and_reuses() {
+        let reports = run(ExecModeSpec::IncApprox, 5);
+        for r in &reports[2..] {
+            assert!(r.sample_size <= r.window_len / 5);
+            assert!(r.estimate.margin > 0.0);
+            assert!(
+                r.item_reuse_fraction() > 0.7,
+                "expected high item reuse, got {}",
+                r.item_reuse_fraction()
+            );
+            assert!(
+                r.fresh_items < r.sample_size / 2,
+                "incremental update should compute ≪ sample: {}/{}",
+                r.fresh_items,
+                r.sample_size
+            );
+        }
+    }
+
+    #[test]
+    fn incapprox_cheaper_than_both_baselines() {
+        // The marriage: fewer computed items than approx-only (sampling
+        // alone) and than incremental-only (memoization alone).
+        let inc = run(ExecModeSpec::IncrementalOnly, 5);
+        let approx = run(ExecModeSpec::ApproxOnly, 5);
+        let both = run(ExecModeSpec::IncApprox, 5);
+        let cost = |rs: &[WindowReport]| -> usize {
+            rs.iter().skip(2).map(|r| r.fresh_items).sum()
+        };
+        assert!(
+            cost(&both) < cost(&approx),
+            "incapprox {} !< approx {}",
+            cost(&both),
+            cost(&approx)
+        );
+        assert!(
+            cost(&both) < cost(&inc),
+            "incapprox {} !< incremental {}",
+            cost(&both),
+            cost(&inc)
+        );
+    }
+
+    #[test]
+    fn estimates_track_true_total() {
+        // IncApprox estimate should be within a few margins of the exact
+        // native output on the same stream.
+        let cfg_a = config(ExecModeSpec::IncApprox);
+        let cfg_b = config(ExecModeSpec::Native);
+        let mut gen_a = MultiStream::paper_section5(5);
+        let mut gen_b = MultiStream::paper_section5(5);
+        let mut a = Coordinator::new(cfg_a.clone());
+        let mut b = Coordinator::new(cfg_b.clone());
+        let (wa, wb) =
+            (gen_a.take_records(cfg_a.window_size), gen_b.take_records(cfg_b.window_size));
+        let mut last = (a.process_batch(wa).unwrap(), b.process_batch(wb).unwrap());
+        for _ in 0..4 {
+            let (ba, bb) = (gen_a.take_records(200), gen_b.take_records(200));
+            last = (a.process_batch(ba).unwrap(), b.process_batch(bb).unwrap());
+        }
+        let (ra, rb) = last;
+        assert_eq!(ra.window_len, rb.window_len);
+        let err = (ra.estimate.value - rb.estimate.value).abs();
+        assert!(
+            err <= 4.0 * ra.estimate.margin.max(1.0),
+            "estimate {} vs exact {} margin {}",
+            ra.estimate.value,
+            rb.estimate.value,
+            ra.estimate.margin
+        );
+    }
+
+    #[test]
+    fn incremental_path_matches_full_recompute() {
+        // Force epoch recompute every window in one coordinator and never
+        // in another; outputs must agree (same stream, same seeds).
+        let mut cfg_a = config(ExecModeSpec::IncApprox);
+        cfg_a.recompute_epoch = 1; // always full recompute
+        let mut cfg_b = config(ExecModeSpec::IncApprox);
+        cfg_b.recompute_epoch = 1_000_000; // never
+        let mut gen_a = MultiStream::paper_section5(7);
+        let mut gen_b = MultiStream::paper_section5(7);
+        let mut a = Coordinator::new(cfg_a.clone());
+        let mut b = Coordinator::new(cfg_b);
+        let (wa, wb) = (gen_a.take_records(2000), gen_b.take_records(2000));
+        a.process_batch(wa).unwrap();
+        b.process_batch(wb).unwrap();
+        for _ in 0..5 {
+            let (ba, bb) = (gen_a.take_records(200), gen_b.take_records(200));
+            let ra = a.process_batch(ba).unwrap();
+            let rb = b.process_batch(bb).unwrap();
+            let rel = (ra.estimate.value - rb.estimate.value).abs()
+                / ra.estimate.value.abs().max(1.0);
+            assert!(rel < 1e-9, "paths diverge: {} vs {}", ra.estimate.value, rb.estimate.value);
+        }
+    }
+
+    #[test]
+    fn window_ids_sequential() {
+        let reports = run(ExecModeSpec::IncApprox, 3);
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.window_id, i as u64);
+        }
+    }
+
+    #[test]
+    fn fault_injection_with_lineage_recovers_correctness() {
+        let mut cfg = config(ExecModeSpec::IncApprox);
+        cfg.fault_memo_loss = 1.0; // lose memo every window
+        let mut gen = MultiStream::paper_section5(13);
+        let mut coord =
+            Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::LineageRecompute);
+        let warm = gen.take_records(cfg.window_size);
+        coord.process_batch(warm).unwrap();
+        let r = coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+        assert!(r.fault_injected);
+        // Everything recomputed, but output still valid.
+        assert_eq!(r.fresh_items, r.sample_size);
+        assert!(r.estimate.value > 0.0);
+        assert!(coord.faults_injected() >= 1);
+    }
+
+    #[test]
+    fn fault_injection_with_replication_preserves_reuse() {
+        let mut cfg = config(ExecModeSpec::IncApprox);
+        cfg.fault_memo_loss = 1.0;
+        let mut gen = MultiStream::paper_section5(13);
+        let mut coord =
+            Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::Replicated);
+        coord.process_batch(gen.take_records(cfg.window_size)).unwrap();
+        coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+        let r = coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+        assert!(r.fault_injected);
+        assert!(
+            r.fresh_items < r.sample_size,
+            "replica should preserve incremental state across the fault"
+        );
+    }
+
+    #[test]
+    fn time_windowed_coordinator_emits_at_boundaries() {
+        // Paper §2.3.3: time-based windows, item counts vary with rate.
+        let cfg = config(ExecModeSpec::IncApprox);
+        let mut coord = Coordinator::new_time_windowed(cfg, 400, 40);
+        let mut gen = MultiStream::paper_section5(23);
+        let mut reports = Vec::new();
+        for now in 1..=1200u64 {
+            let records = gen.tick(); // records stamped with tick now-1
+            if let Some(r) = coord.ingest_tick(records, now).unwrap() {
+                reports.push(r);
+            }
+        }
+        // Boundaries at 400, 440, ..., 1200 → 21 windows.
+        assert_eq!(reports.len(), 21);
+        for w in reports.windows(2) {
+            assert_eq!(w[1].window_id, w[0].window_id + 1);
+        }
+        // Rates 3+4+5=12/tick → ~4800 items per 400-tick window, varying.
+        let lens: Vec<usize> = reports.iter().map(|r| r.window_len).collect();
+        assert!(lens.iter().all(|&l| (4000..6000).contains(&l)), "{lens:?}");
+        assert!(lens.windows(2).any(|w| w[0] != w[1]), "counts should vary");
+        // Steady state behaves like the count path: reuse + bounds.
+        let last = reports.last().unwrap();
+        assert!(last.item_reuse_fraction() > 0.7);
+        assert!(last.estimate.margin > 0.0);
+    }
+
+    #[test]
+    fn time_windowed_incremental_is_exact() {
+        let mut gens = (MultiStream::paper_section5(29), MultiStream::paper_section5(29));
+        let mut native =
+            Coordinator::new_time_windowed(config(ExecModeSpec::Native), 300, 30);
+        let mut inc = Coordinator::new_time_windowed(
+            config(ExecModeSpec::IncrementalOnly),
+            300,
+            30,
+        );
+        for now in 1..=900u64 {
+            let (ra, rb) = (gens.0.tick(), gens.1.tick());
+            let a = native.ingest_tick(ra, now).unwrap();
+            let b = inc.ingest_tick(rb, now).unwrap();
+            assert_eq!(a.is_some(), b.is_some());
+            if let (Some(a), Some(b)) = (a, b) {
+                let rel = (a.estimate.value - b.estimate.value).abs()
+                    / a.estimate.value.abs();
+                assert!(rel < 1e-9, "{} vs {}", a.estimate.value, b.estimate.value);
+                assert!(b.fresh_items <= a.fresh_items);
+            }
+        }
+    }
+
+    #[test]
+    fn window_kind_mismatch_is_an_error() {
+        let cfg = config(ExecModeSpec::IncApprox);
+        let mut count = Coordinator::new(cfg.clone());
+        assert!(count.ingest_tick(vec![], 1).is_err());
+        let mut time = Coordinator::new_time_windowed(cfg, 100, 10);
+        assert!(time.process_batch(vec![]).is_err());
+    }
+
+    #[test]
+    fn window_resize_applies() {
+        let cfg = config(ExecModeSpec::IncApprox);
+        let mut gen = MultiStream::paper_section5(17);
+        let mut coord = Coordinator::new(cfg.clone());
+        coord.process_batch(gen.take_records(2000)).unwrap();
+        coord.resize_window(1500);
+        let r = coord.process_batch(gen.take_records(100)).unwrap();
+        assert!(r.window_len <= 1500);
+    }
+}

@@ -1,0 +1,16 @@
+//! The coordinator — the paper's Algorithm 1 as a streaming orchestrator.
+//!
+//! [`driver::Coordinator`] executes one window per slide batch: evict old
+//! memo state → stratified-sample the window within the query budget →
+//! bias toward memoized items → plan the job against the memo (change
+//! propagation via the DDG) → execute only fresh chunks (native or PJRT)
+//! → combine → estimate error bounds → memoize. [`pipeline::Pipeline`]
+//! wires a kafka consumer to the coordinator with lag-based backpressure.
+
+pub mod driver;
+pub mod pipeline;
+pub mod report;
+
+pub use driver::{Coordinator, ExecMode};
+pub use pipeline::Pipeline;
+pub use report::{StratumReport, WindowReport};

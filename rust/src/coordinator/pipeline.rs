@@ -1,0 +1,175 @@
+//! The end-to-end pipeline: generators → kafka substrate → coordinator.
+//!
+//! Wires Figure 2.1 together: sub-stream generators publish to a topic on
+//! the in-process broker (keyed by stratum, preserving per-sub-stream
+//! ordering), a single consumer pulls the merged stream, and the
+//! coordinator processes slide-sized batches. Backpressure: when consumer
+//! lag exceeds `lag_high_watermark`, the pipeline drains bigger batches
+//! (up to `catchup_factor` slides) per step so processing catches up
+//! instead of falling ever further behind.
+
+use std::sync::Arc;
+
+use crate::coordinator::driver::Coordinator;
+use crate::coordinator::report::WindowReport;
+use crate::error::Result;
+use crate::kafka::broker::Broker;
+use crate::kafka::consumer::Consumer;
+use crate::kafka::producer::{Partitioner, Producer};
+use crate::workload::gen::MultiStream;
+use crate::workload::record::Record;
+
+/// Default topic the pipeline publishes to.
+pub const TOPIC: &str = "incapprox-events";
+
+/// The assembled streaming pipeline.
+pub struct Pipeline {
+    broker: Arc<Broker<Record>>,
+    producer: Producer<Record>,
+    consumer: Consumer<Record>,
+    coordinator: Coordinator,
+    source: MultiStream,
+    slide: usize,
+    lag_high_watermark: u64,
+    catchup_factor: usize,
+}
+
+impl Pipeline {
+    /// Build a pipeline over a generator source.
+    pub fn new(coordinator: Coordinator, source: MultiStream) -> Result<Self> {
+        let slide = coordinator.config().slide;
+        let broker = Broker::new();
+        broker.create_topic(TOPIC, 4)?;
+        let producer = Producer::new(&broker, TOPIC, Partitioner::Keyed)?;
+        let mut consumer = Consumer::new();
+        consumer.subscribe(&broker, TOPIC)?;
+        Ok(Pipeline {
+            broker,
+            producer,
+            consumer,
+            coordinator,
+            source,
+            slide,
+            lag_high_watermark: (slide * 4) as u64,
+            catchup_factor: 4,
+        })
+    }
+
+    /// Produce from the generators until at least `n` records are queued.
+    fn produce_at_least(&mut self, n: usize) -> Result<()> {
+        let mut produced = 0;
+        while produced < n {
+            let records = self.source.tick();
+            for r in &records {
+                self.producer.send(Some(r.stratum as u64), r.timestamp, *r)?;
+            }
+            produced += records.len();
+        }
+        Ok(())
+    }
+
+    /// Warm the window: fill it completely and process the first window.
+    pub fn warmup(&mut self) -> Result<WindowReport> {
+        let need = self.coordinator.config().window_size;
+        self.produce_at_least(need)?;
+        let batch: Vec<Record> =
+            self.consumer.poll(need)?.into_iter().map(|m| m.payload).collect();
+        self.coordinator.process_batch(batch)
+    }
+
+    /// One pipeline step: produce a slide, pull (with catch-up under
+    /// backpressure), process the window.
+    pub fn step(&mut self) -> Result<WindowReport> {
+        self.produce_at_least(self.slide)?;
+        let lag = self.consumer.lag()?;
+        let batch_size = if lag > self.lag_high_watermark {
+            log::warn!("backpressure: lag {lag} > {}, catching up", self.lag_high_watermark);
+            self.slide * self.catchup_factor
+        } else {
+            self.slide
+        };
+        let batch: Vec<Record> =
+            self.consumer.poll(batch_size)?.into_iter().map(|m| m.payload).collect();
+        self.coordinator.process_batch(batch)
+    }
+
+    /// Run `n` steps after warmup; returns all reports (warmup first).
+    pub fn run(&mut self, n: usize) -> Result<Vec<WindowReport>> {
+        let mut reports = vec![self.warmup()?];
+        for _ in 0..n {
+            reports.push(self.step()?);
+        }
+        Ok(reports)
+    }
+
+    /// Current consumer lag (monitoring).
+    pub fn lag(&self) -> Result<u64> {
+        self.consumer.lag()
+    }
+
+    /// Borrow the coordinator (stats inspection).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coordinator
+    }
+
+    /// Mutably borrow the coordinator (e.g. window resizing mid-run).
+    pub fn coordinator_mut(&mut self) -> &mut Coordinator {
+        &mut self.coordinator
+    }
+
+    /// The broker (for attaching extra producers/consumers in examples).
+    pub fn broker(&self) -> Arc<Broker<Record>> {
+        self.broker.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::system::{ExecModeSpec, SystemConfig};
+
+    fn pipeline(mode: ExecModeSpec) -> Pipeline {
+        let cfg = SystemConfig {
+            mode,
+            window_size: 1500,
+            slide: 150,
+            seed: 21,
+            ..SystemConfig::default()
+        };
+        let source = MultiStream::paper_section5(cfg.seed);
+        Pipeline::new(Coordinator::new(cfg), source).unwrap()
+    }
+
+    #[test]
+    fn end_to_end_incapprox_run() {
+        let mut p = pipeline(ExecModeSpec::IncApprox);
+        let reports = p.run(4).unwrap();
+        assert_eq!(reports.len(), 5);
+        let last = reports.last().unwrap();
+        assert_eq!(last.window_len, 1500);
+        assert!(last.item_reuse_fraction() > 0.5);
+        assert!(last.estimate.value > 0.0);
+    }
+
+    #[test]
+    fn all_modes_run_through_pipeline() {
+        for mode in [
+            ExecModeSpec::Native,
+            ExecModeSpec::IncrementalOnly,
+            ExecModeSpec::ApproxOnly,
+            ExecModeSpec::IncApprox,
+        ] {
+            let mut p = pipeline(mode);
+            let reports = p.run(2).unwrap();
+            assert_eq!(reports.len(), 3, "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn lag_bounded_during_run() {
+        let mut p = pipeline(ExecModeSpec::IncApprox);
+        p.run(6).unwrap();
+        // Consumer keeps up: lag below the catch-up ceiling.
+        assert!(p.lag().unwrap() < (p.slide * p.catchup_factor * 2) as u64);
+    }
+}

@@ -1,0 +1,141 @@
+//! Per-window output reports.
+
+use std::collections::BTreeMap;
+
+use crate::stats::stratified::Estimate;
+use crate::workload::record::StratumId;
+
+/// Per-stratum reuse accounting for one window (the quantities Fig 5.1
+//  plots).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StratumReport {
+    /// Items sampled from the stratum this window.
+    pub sample_size: usize,
+    /// Items in the biased sample carrying memoized results.
+    pub memo_reused: usize,
+    /// Memoized items that were available before biasing.
+    pub memo_available: usize,
+    /// Items seen in the stratum over the whole window (population Bᵢ).
+    pub population: u64,
+}
+
+/// The result of processing one window.
+#[derive(Debug, Clone)]
+pub struct WindowReport {
+    /// Window sequence number.
+    pub window_id: u64,
+    /// Execution mode name.
+    pub mode: &'static str,
+    /// The approximate (or exact) output with confidence interval.
+    pub estimate: Estimate,
+    /// Items in the window.
+    pub window_len: usize,
+    /// Total sample size used.
+    pub sample_size: usize,
+    /// Chunks planned in total.
+    pub chunks_total: usize,
+    /// Chunks whose results were reused from the memo.
+    pub chunks_reused: usize,
+    /// Items actually computed this window (fresh chunk items on the full
+    /// path, |added| + |removed| on the inverse-reduce path) — the
+    /// per-window work, and the quantity the headline speedup divides.
+    pub fresh_items: usize,
+    /// Per-stratum accounting.
+    pub strata: BTreeMap<StratumId, StratumReport>,
+    /// Wall-clock processing time of the window.
+    pub latency_ms: f64,
+    /// True if a fault was injected before this window.
+    pub fault_injected: bool,
+}
+
+impl WindowReport {
+    /// Fraction of sampled items whose sub-computations were reused.
+    pub fn item_reuse_fraction(&self) -> f64 {
+        let total: usize = self.strata.values().map(|s| s.sample_size).sum();
+        let reused: usize = self.strata.values().map(|s| s.memo_reused).sum();
+        if total == 0 {
+            0.0
+        } else {
+            reused as f64 / total as f64
+        }
+    }
+
+    /// Fraction of chunks reused.
+    pub fn chunk_reuse_fraction(&self) -> f64 {
+        if self.chunks_total == 0 {
+            0.0
+        } else {
+            self.chunks_reused as f64 / self.chunks_total as f64
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "w{:>4} [{}] out={:.2} ±{:.2} ({}%) sample={}/{} computed={} reuse: items {:.1}% lat={:.2}ms{}",
+            self.window_id,
+            self.mode,
+            self.estimate.value,
+            self.estimate.margin,
+            (self.estimate.confidence * 100.0) as u32,
+            self.sample_size,
+            self.window_len,
+            self.fresh_items,
+            self.item_reuse_fraction() * 100.0,
+            self.latency_ms,
+            if self.fault_injected { " [FAULT]" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn estimate() -> Estimate {
+        Estimate { value: 100.0, margin: 5.0, variance: 6.5, df: 9.0, t: 2.26, confidence: 0.95 }
+    }
+
+    #[test]
+    fn reuse_fractions() {
+        let mut strata = BTreeMap::new();
+        strata.insert(0, StratumReport { sample_size: 60, memo_reused: 30, memo_available: 40, population: 600 });
+        strata.insert(1, StratumReport { sample_size: 40, memo_reused: 40, memo_available: 50, population: 400 });
+        let r = WindowReport {
+            window_id: 1,
+            mode: "incapprox",
+            estimate: estimate(),
+            window_len: 1000,
+            sample_size: 100,
+            chunks_total: 10,
+            chunks_reused: 4,
+            fresh_items: 50,
+            strata,
+            latency_ms: 1.5,
+            fault_injected: false,
+        };
+        assert!((r.item_reuse_fraction() - 0.7).abs() < 1e-12);
+        assert!((r.chunk_reuse_fraction() - 0.4).abs() < 1e-12);
+        let s = r.summary();
+        assert!(s.contains("incapprox") && s.contains("±5.00"));
+    }
+
+    #[test]
+    fn empty_report_zero_fractions() {
+        let r = WindowReport {
+            window_id: 0,
+            mode: "native",
+            estimate: estimate(),
+            window_len: 0,
+            sample_size: 0,
+            chunks_total: 0,
+            chunks_reused: 0,
+            fresh_items: 0,
+            strata: BTreeMap::new(),
+            latency_ms: 0.0,
+            fault_injected: false,
+        };
+        assert_eq!(r.item_reuse_fraction(), 0.0);
+        assert_eq!(r.chunk_reuse_fraction(), 0.0);
+    }
+}

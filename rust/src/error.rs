@@ -1,0 +1,58 @@
+//! Crate-wide error type.
+
+/// Unified error type for every IncApprox subsystem.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration file / CLI problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Stream-aggregator (kafka substrate) problems.
+    #[error("kafka error: {0}")]
+    Kafka(String),
+
+    /// Sampling invariant violations.
+    #[error("sampling error: {0}")]
+    Sampling(String),
+
+    /// Self-adjusting-computation / memoization problems.
+    #[error("sac error: {0}")]
+    Sac(String),
+
+    /// Statistics / error-estimation domain errors.
+    #[error("stats error: {0}")]
+    Stats(String),
+
+    /// PJRT runtime problems (artifact loading, compilation, execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Budget / cost-function problems.
+    #[error("budget error: {0}")]
+    Budget(String),
+
+    /// Job execution problems.
+    #[error("job error: {0}")]
+    Job(String),
+
+    /// Injected or real fault surfaced to the coordinator.
+    #[error("fault: {0}")]
+    Fault(String),
+
+    /// Underlying XLA/PJRT error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O error (trace files, artifacts).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,150 @@
+//! Fault injection and the §6.3 recovery strategies.
+//!
+//! The paper assumes memoized state is stored fault-tolerantly (§2.3.3
+//! assumption 3) and sketches three recovery options when it is not. All
+//! three are implemented and exercised by failure-injection tests:
+//!
+//! 1. [`RecoveryPolicy::ContinueWithout`] — process the window with no
+//!    memo (correct output, lower efficiency).
+//! 2. [`RecoveryPolicy::LineageRecompute`] — the Spark-lineage approach:
+//!    lost chunk results are recomputed from their input items (which the
+//!    window still holds), i.e. the chunks simply re-execute as fresh.
+//! 3. [`RecoveryPolicy::Replicated`] — keep an asynchronous replica of the
+//!    memo store and restore from it.
+
+use crate::sac::memo::MemoStore;
+use crate::util::rng::Rng;
+
+/// What the coordinator does when memo state is lost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Continue without memoized results (§6.3 option i).
+    ContinueWithout,
+    /// Recompute lost results from lineage — in this pipeline lost chunks
+    /// re-execute from their still-available input items (option ii).
+    LineageRecompute,
+    /// Restore from an asynchronously maintained replica (option iii).
+    Replicated,
+}
+
+/// Per-window fault injector: with probability `memo_loss_p`, the memo
+/// store "crashes" (is cleared) before planning.
+#[derive(Debug)]
+pub struct FaultInjector {
+    memo_loss_p: f64,
+    rng: Rng,
+    injected: u64,
+}
+
+/// A snapshot replica for [`RecoveryPolicy::Replicated`].
+pub type MemoReplica = crate::sac::memo::MemoSnapshot;
+
+impl FaultInjector {
+    /// Injector losing memo state with probability `memo_loss_p` per window.
+    pub fn new(memo_loss_p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&memo_loss_p));
+        FaultInjector { memo_loss_p, rng: Rng::new(seed), injected: 0 }
+    }
+
+    /// Disabled injector.
+    pub fn disabled() -> Self {
+        Self::new(0.0, 0)
+    }
+
+    /// Maybe inject a memo-loss fault; returns true if injected. With
+    /// `Replicated`, the caller's replica (taken *before* this window) is
+    /// used to restore.
+    pub fn maybe_inject(
+        &mut self,
+        memo: &mut MemoStore,
+        policy: RecoveryPolicy,
+        replica: Option<&MemoReplica>,
+    ) -> bool {
+        if self.memo_loss_p == 0.0 || !self.rng.bernoulli(self.memo_loss_p) {
+            return false;
+        }
+        self.injected += 1;
+        memo.clear();
+        match policy {
+            RecoveryPolicy::ContinueWithout | RecoveryPolicy::LineageRecompute => {
+                // Nothing to restore: ContinueWithout simply proceeds;
+                // LineageRecompute lets the planner classify every chunk
+                // as fresh, recomputing from the in-window inputs.
+            }
+            RecoveryPolicy::Replicated => {
+                if let Some(snap) = replica {
+                    memo.restore(snap.clone());
+                }
+            }
+        }
+        true
+    }
+
+    /// Number of faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::moments::Moments;
+
+    fn warm_store() -> MemoStore {
+        let mut m = MemoStore::new();
+        m.put_chunk(1, Moments::from_values(&[1.0]), 100, 0);
+        m.put_chunk(2, Moments::from_values(&[2.0]), 100, 0);
+        m
+    }
+
+    #[test]
+    fn zero_probability_never_injects() {
+        let mut inj = FaultInjector::disabled();
+        let mut memo = warm_store();
+        for _ in 0..100 {
+            assert!(!inj.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None));
+        }
+        assert_eq!(memo.chunk_count(), 2);
+        assert_eq!(inj.injected(), 0);
+    }
+
+    #[test]
+    fn certain_loss_clears_store() {
+        let mut inj = FaultInjector::new(1.0, 1);
+        let mut memo = warm_store();
+        assert!(inj.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None));
+        assert_eq!(memo.chunk_count(), 0);
+        assert_eq!(inj.injected(), 1);
+    }
+
+    #[test]
+    fn replicated_restores() {
+        let mut inj = FaultInjector::new(1.0, 2);
+        let mut memo = warm_store();
+        let replica = memo.snapshot();
+        assert!(inj.maybe_inject(&mut memo, RecoveryPolicy::Replicated, Some(&replica)));
+        assert_eq!(memo.chunk_count(), 2);
+    }
+
+    #[test]
+    fn lineage_leaves_store_empty_for_fresh_recompute() {
+        let mut inj = FaultInjector::new(1.0, 3);
+        let mut memo = warm_store();
+        inj.maybe_inject(&mut memo, RecoveryPolicy::LineageRecompute, None);
+        // Chunks will be misses → planner schedules them fresh.
+        assert_eq!(memo.chunk_count(), 0);
+    }
+
+    #[test]
+    fn injection_rate_near_probability() {
+        let mut inj = FaultInjector::new(0.3, 4);
+        let mut memo = MemoStore::new();
+        let n = 5000;
+        for _ in 0..n {
+            inj.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None);
+        }
+        let rate = inj.injected() as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.03, "rate {rate}");
+    }
+}

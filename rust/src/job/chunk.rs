@@ -1,0 +1,212 @@
+//! Content-defined chunking — stable partitioning of the biased sample
+//! into memoizable map-task inputs.
+//!
+//! Position-based chunking (`items.chunks(64)`) would shift every boundary
+//! when one item enters or leaves the window, invalidating every memo key
+//! downstream. Instead, following Incoop's *stable partitioning*, chunk
+//! boundaries are determined by item **content**: within a stratum, items
+//! are ordered by id and a boundary is placed after item `i` when
+//! `mix64(id_i) % target == 0` (expected chunk length = `target`), with a
+//! hard cap at `4 × target` to bound the PJRT row width. Overlapping
+//! windows therefore produce byte-identical chunks — identical memo keys —
+//! for all unchanged runs of items.
+
+use crate::util::hash::{mix64, StableHasher};
+use crate::workload::record::{Record, StratumId};
+
+/// One map-task input: a stable run of sampled items from one stratum.
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    /// Stratum all items belong to.
+    pub stratum: StratumId,
+    /// Items, in the caller's (bias/window) order.
+    pub items: Vec<Record>,
+    /// Stable content hash (ids + value bits) — the memo key.
+    pub hash: u64,
+}
+
+impl Chunk {
+    fn build(stratum: StratumId, items: Vec<Record>) -> Self {
+        let mut h = StableHasher::new();
+        h.write_u64(stratum as u64);
+        for r in &items {
+            h.write_u64(r.id);
+            h.write_f64(r.value);
+        }
+        Chunk { stratum, items, hash: h.finish() }
+    }
+
+    /// Values of the chunk's items.
+    pub fn values(&self) -> Vec<f64> {
+        self.items.iter().map(|r| r.value).collect()
+    }
+
+    /// Item count.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when the chunk holds no items.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Is this item a chunk boundary for the given target size?
+#[inline]
+fn is_boundary(id: u64, target: usize) -> bool {
+    mix64(id) % target as u64 == 0
+}
+
+/// Split one stratum's sampled items into stable chunks with expected
+/// length `target` (hard cap `4 × target`).
+///
+/// **Order-sensitive by design.** The caller passes items in *bias order*
+/// (the previous window's memoized items in their stored order, fresh
+/// items appended — see `sampling::biased`), or in window order for the
+/// exact modes. Across adjacent windows that sequence only loses a prefix
+/// (evicted old items) and gains a suffix (fresh items), which is exactly
+/// the edit pattern content-defined boundaries absorb: all interior
+/// chunks — and their memo keys — stay identical. Sorting here (e.g. by
+/// id) would interleave fresh items between memoized ones and invalidate
+/// every chunk.
+pub fn chunk_stratum(stratum: StratumId, items: Vec<Record>, target: usize) -> Vec<Chunk> {
+    assert!(target > 0, "chunk target must be positive");
+    let cap = 4 * target;
+    let mut chunks = Vec::new();
+    let mut current: Vec<Record> = Vec::with_capacity(target);
+    for r in items {
+        current.push(r);
+        if is_boundary(r.id, target) || current.len() >= cap {
+            chunks.push(Chunk::build(stratum, std::mem::take(&mut current)));
+        }
+    }
+    if !current.is_empty() {
+        chunks.push(Chunk::build(stratum, current));
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn recs(ids: impl IntoIterator<Item = u64>) -> Vec<Record> {
+        ids.into_iter().map(|i| Record::new(i, 0, 0, 0, i as f64 * 0.5)).collect()
+    }
+
+    #[test]
+    fn all_items_kept_once() {
+        let items = recs(0..1000);
+        let chunks = chunk_stratum(0, items.clone(), 64);
+        let total: usize = chunks.iter().map(Chunk::len).sum();
+        assert_eq!(total, 1000);
+        let mut ids: Vec<u64> = chunks.iter().flat_map(|c| c.items.iter().map(|r| r.id)).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn expected_chunk_size_near_target() {
+        let items = recs(0..100_000);
+        let chunks = chunk_stratum(0, items, 64);
+        let mean = 100_000.0 / chunks.len() as f64;
+        assert!((mean - 64.0).abs() < 8.0, "mean chunk size {mean}");
+    }
+
+    #[test]
+    fn size_cap_enforced() {
+        let items = recs(0..50_000);
+        let chunks = chunk_stratum(0, items, 32);
+        assert!(chunks.iter().all(|c| c.len() <= 128));
+    }
+
+    #[test]
+    fn stability_under_prefix_removal_and_suffix_insertion() {
+        // The defining property: sliding the window (drop oldest, add
+        // newest) must keep interior chunks identical.
+        let w1 = recs(0..10_000);
+        let w2 = recs(400..10_400); // slide by 400
+        let c1 = chunk_stratum(0, w1, 64);
+        let c2 = chunk_stratum(0, w2, 64);
+        let h1: std::collections::HashSet<u64> = c1.iter().map(|c| c.hash).collect();
+        let h2: std::collections::HashSet<u64> = c2.iter().map(|c| c.hash).collect();
+        let shared = h1.intersection(&h2).count();
+        // Only chunks at the trimmed head / extended tail may differ.
+        assert!(
+            shared as f64 >= 0.9 * c1.len().min(c2.len()) as f64,
+            "only {shared}/{} chunks survived the slide",
+            c1.len()
+        );
+    }
+
+    #[test]
+    fn hash_depends_on_values() {
+        let a = chunk_stratum(0, recs(0..10), 100);
+        let mut items = recs(0..10);
+        items[3].value += 1.0;
+        let b = chunk_stratum(0, items, 100);
+        assert_eq!(a.len(), b.len());
+        // The chunk containing item 3 must change hash; others must not.
+        let ha: Vec<u64> = a.iter().map(|c| c.hash).collect();
+        let hb: Vec<u64> = b.iter().map(|c| c.hash).collect();
+        assert_ne!(ha, hb);
+        let differing = ha.iter().zip(&hb).filter(|(x, y)| x != y).count();
+        assert_eq!(differing, 1, "exactly one chunk should change");
+    }
+
+    #[test]
+    fn hash_depends_on_stratum() {
+        let a = chunk_stratum(0, recs(0..10), 100);
+        let b = chunk_stratum(1, recs(0..10), 100);
+        assert_ne!(a[0].hash, b[0].hash);
+    }
+
+    #[test]
+    fn order_sensitive_by_design() {
+        // Chunking must respect the caller's (bias) order: a reordered
+        // input is a different chunk sequence. This is what keeps the
+        // memoized prefix stable across windows.
+        let mut shuffled = recs(0..500);
+        Rng::new(1).shuffle(&mut shuffled);
+        let a = chunk_stratum(0, recs(0..500), 64);
+        let b = chunk_stratum(0, shuffled, 64);
+        let ha: std::collections::HashSet<u64> = a.iter().map(|c| c.hash).collect();
+        let hb: std::collections::HashSet<u64> = b.iter().map(|c| c.hash).collect();
+        assert_ne!(ha, hb);
+        // Same total items either way.
+        let na: usize = a.iter().map(Chunk::len).sum();
+        let nb: usize = b.iter().map(Chunk::len).sum();
+        assert_eq!(na, nb);
+    }
+
+    #[test]
+    fn memoized_prefix_plus_fresh_suffix_is_stable() {
+        // The coordinator's actual edit pattern: drop a prefix (evicted),
+        // keep the middle untouched, append fresh items at the end.
+        let w1: Vec<Record> = recs(0..5_000);
+        let mut w2: Vec<Record> = w1[600..].to_vec();
+        w2.extend(recs(5_000..5_600));
+        let c1 = chunk_stratum(0, w1, 64);
+        let c2 = chunk_stratum(0, w2, 64);
+        let h1: std::collections::HashSet<u64> = c1.iter().map(|c| c.hash).collect();
+        let shared = c2.iter().filter(|c| h1.contains(&c.hash)).count();
+        assert!(
+            shared as f64 > 0.75 * c2.len() as f64,
+            "only {shared}/{} chunks stable",
+            c2.len()
+        );
+    }
+
+    #[test]
+    fn empty_input_no_chunks() {
+        assert!(chunk_stratum(0, vec![], 64).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_target_panics() {
+        chunk_stratum(0, recs(0..4), 0);
+    }
+}

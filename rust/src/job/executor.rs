@@ -1,0 +1,221 @@
+//! Chunk execution back-ends and the worker pool.
+//!
+//! The coordinator executes each window's *fresh* chunks through a
+//! [`ChunkBackend`]: [`NativeBackend`] computes moments in rust (used by
+//! the exact baseline and as the PJRT cross-check); the PJRT backend in
+//! `runtime/` batches all fresh chunks into one AOT-executable call.
+//! [`WorkerPool`] parallelizes the native path across threads — the
+//! "distributed data-parallel job" of §2.3.1, scaled to one process.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::job::chunk::Chunk;
+use crate::job::moments::Moments;
+
+/// Computes moments for a batch of chunks.
+pub trait ChunkBackend {
+    /// One result per chunk, same order.
+    fn compute(&self, chunks: &[&Chunk]) -> Result<Vec<Moments>>;
+
+    /// Human-readable backend name (reports/benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Scalar in-process backend.
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    /// Per-item map rounds applied before reducing.
+    pub rounds: u32,
+}
+
+impl NativeBackend {
+    /// Backend with the given map weight.
+    pub fn new(rounds: u32) -> Self {
+        NativeBackend { rounds }
+    }
+}
+
+impl ChunkBackend for NativeBackend {
+    fn compute(&self, chunks: &[&Chunk]) -> Result<Vec<Moments>> {
+        Ok(chunks
+            .iter()
+            .map(|c| Moments::from_records_mapped(&c.items, self.rounds))
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+enum Job {
+    /// A contiguous batch of chunks starting at `base` in the caller's
+    /// order. Batching (vs one job per chunk) keeps channel and mutex
+    /// traffic at O(workers), not O(chunks) — see EXPERIMENTS.md §Perf.
+    Run { base: usize, chunks: Vec<Chunk> },
+    Shutdown,
+}
+
+/// Fixed-size worker pool computing chunk moments in parallel.
+pub struct WorkerPool {
+    workers: Vec<JoinHandle<()>>,
+    tx: mpsc::Sender<Job>,
+    rx_results: mpsc::Receiver<(usize, Vec<Moments>)>,
+    tx_results: mpsc::Sender<(usize, Vec<Moments>)>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers with no map stage.
+    pub fn new(n: usize) -> Self {
+        Self::with_rounds(n, 0)
+    }
+
+    /// Spawn `n` workers applying `rounds` map iterations per item.
+    pub fn with_rounds(n: usize, rounds: u32) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let (tx_results, rx_results) = mpsc::channel();
+        let workers = (0..n)
+            .map(|_| {
+                let rx = rx.clone();
+                let tx_results = tx_results.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(Job::Run { base, chunks }) => {
+                            let ms: Vec<Moments> = chunks
+                                .iter()
+                                .map(|c| Moments::from_records_mapped(&c.items, rounds))
+                                .collect();
+                            if tx_results.send((base, ms)).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(Job::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { workers, tx, rx_results, tx_results }
+    }
+
+    /// Compute moments for all chunks in parallel; results in input order.
+    pub fn compute(&self, chunks: &[&Chunk]) -> Result<Vec<Moments>> {
+        let n = chunks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        // One contiguous batch per worker (ceil split).
+        let workers = self.workers.len();
+        let batch_size = n.div_ceil(workers);
+        let mut sent = 0usize;
+        let mut base = 0usize;
+        while base < n {
+            let end = (base + batch_size).min(n);
+            let batch: Vec<Chunk> =
+                chunks[base..end].iter().map(|c| (*c).clone()).collect();
+            self.tx
+                .send(Job::Run { base, chunks: batch })
+                .map_err(|_| Error::Job("worker pool shut down".into()))?;
+            sent += 1;
+            base = end;
+        }
+        let mut out = vec![Moments::EMPTY; n];
+        for _ in 0..sent {
+            let (base, ms) = self
+                .rx_results
+                .recv()
+                .map_err(|_| Error::Job("worker died mid-job".into()))?;
+            out[base..base + ms.len()].copy_from_slice(&ms);
+        }
+        Ok(out)
+    }
+
+    /// Number of worker threads.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Keep tx_results alive until here so workers can flush.
+        let _ = &self.tx_results;
+    }
+}
+
+impl ChunkBackend for WorkerPool {
+    fn compute(&self, chunks: &[&Chunk]) -> Result<Vec<Moments>> {
+        WorkerPool::compute(self, chunks)
+    }
+
+    fn name(&self) -> &'static str {
+        "worker-pool"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::chunk::chunk_stratum;
+    use crate::workload::record::Record;
+
+    fn chunks(n: u64) -> Vec<Chunk> {
+        let items = (0..n).map(|i| Record::new(i, 0, 0, 0, (i % 13) as f64)).collect();
+        chunk_stratum(0, items, 32)
+    }
+
+    #[test]
+    fn native_backend_matches_direct() {
+        let cs = chunks(500);
+        let refs: Vec<&Chunk> = cs.iter().collect();
+        let out = NativeBackend::default().compute(&refs).unwrap();
+        for (c, m) in cs.iter().zip(&out) {
+            assert_eq!(*m, Moments::from_records(&c.items));
+        }
+    }
+
+    #[test]
+    fn pool_matches_native_and_keeps_order() {
+        let cs = chunks(2000);
+        let refs: Vec<&Chunk> = cs.iter().collect();
+        let pool = WorkerPool::new(4);
+        let a = pool.compute(&refs).unwrap();
+        let b = NativeBackend::default().compute(&refs).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn pool_handles_empty_batch() {
+        let pool = WorkerPool::new(2);
+        assert!(pool.compute(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pool_reusable_across_batches() {
+        let pool = WorkerPool::new(3);
+        for round in 1..5u64 {
+            let cs = chunks(round * 100);
+            let refs: Vec<&Chunk> = cs.iter().collect();
+            let out = pool.compute(&refs).unwrap();
+            assert_eq!(out.len(), cs.len());
+        }
+        assert_eq!(pool.worker_count(), 3);
+    }
+}

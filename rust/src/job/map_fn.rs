@@ -1,0 +1,55 @@
+//! The per-item map stage — rust twin of the kernel's `map_transform`.
+//!
+//! Streaming queries rarely aggregate raw record values; they parse,
+//! featurize, or score each item first (the expensive "map task" of the
+//! paper's data-parallel jobs). `rounds` iterations of `v += 0.25·sin v`
+//! are that per-item work knob: `rounds = 0` is a pass-through (pure
+//! aggregation), larger values emulate heavier user-defined maps. The
+//! Pallas kernel (`python/compile/kernels/stratified_agg.py`) implements
+//! the identical transform so native and PJRT results agree.
+
+/// Apply `rounds` map iterations to one value.
+#[inline]
+pub fn apply_map(mut v: f64, rounds: u32) -> f64 {
+    for _ in 0..rounds {
+        v += 0.25 * v.sin();
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rounds_is_identity() {
+        for v in [-3.5, 0.0, 1.0, 42.0] {
+            assert_eq!(apply_map(v, 0), v);
+        }
+    }
+
+    #[test]
+    fn converges_toward_sin_zeros() {
+        // Fixed points of v + 0.25 sin v are multiples of π; iteration is
+        // a contraction near the stable (odd) ones.
+        let v = apply_map(3.0, 200);
+        assert!((v - std::f64::consts::PI).abs() < 1e-6, "{v}");
+    }
+
+    #[test]
+    fn monotone_in_rounds_effect() {
+        let a = apply_map(2.0, 1);
+        let b = apply_map(2.0, 8);
+        assert!(a != 2.0 && b != a);
+    }
+
+    #[test]
+    fn bounded_output() {
+        for i in 0..100 {
+            let v = (i as f64 - 50.0) * 3.3;
+            let out = apply_map(v, 64);
+            assert!(out.is_finite());
+            assert!((out - v).abs() <= 0.25 * 64.0 + 1.0);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Data-parallel job execution over the biased sample.
+//!
+//! * [`moments`] — the sub-computation result type (count, Σv, Σv², min,
+//!   max) with an exact combine, mirroring the L1 kernel's output row.
+//! * [`chunk`] — content-defined chunking of per-stratum item lists into
+//!   stable, memoizable map-task inputs (Incoop-style stable partitioning:
+//!   boundaries depend on item ids, not positions, so window overlap
+//!   yields identical chunks and identical memo keys).
+//! * [`plan`] — builds the window's job plan + DDG: which chunks hit the
+//!   memo, which must execute.
+//! * [`executor`] — the worker-pool backend that computes fresh chunks
+//!   (native scalar path; the PJRT path lives in `runtime/`).
+
+pub mod chunk;
+pub mod map_fn;
+pub mod executor;
+pub mod moments;
+pub mod plan;
+
+pub use chunk::{chunk_stratum, Chunk};
+pub use map_fn::apply_map;
+pub use executor::{ChunkBackend, NativeBackend, WorkerPool};
+pub use moments::Moments;
+pub use plan::{JobPlan, PlannedChunk};

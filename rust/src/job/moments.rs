@@ -1,0 +1,250 @@
+//! The memoizable sub-computation result: masked moments of one chunk.
+//!
+//! Identical, field for field, to one output row of the L1 Pallas kernel
+//! (`python/compile/kernels/stratified_agg.py`), so results computed
+//! natively and through PJRT are interchangeable — the integration tests
+//! assert they agree.
+
+use crate::util::ksum::NeumaierSum;
+use crate::workload::record::Record;
+
+/// Count, sum, sum of squares, min, max of a set of values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Moments {
+    /// Number of items.
+    pub count: f64,
+    /// Σv.
+    pub sum: f64,
+    /// Σv².
+    pub sumsq: f64,
+    /// Minimum (+∞ when empty, matching the kernel's masked min).
+    pub min: f64,
+    /// Maximum (−∞ when empty).
+    pub max: f64,
+}
+
+impl Default for Moments {
+    fn default() -> Self {
+        Moments::EMPTY
+    }
+}
+
+impl Moments {
+    /// The identity element of [`Moments::combine`].
+    pub const EMPTY: Moments =
+        Moments { count: 0.0, sum: 0.0, sumsq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY };
+
+    /// Exact (compensated) moments of a value slice.
+    pub fn from_values(values: &[f64]) -> Self {
+        let mut sum = NeumaierSum::new();
+        let mut sumsq = NeumaierSum::new();
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &v in values {
+            sum.add(v);
+            sumsq.add(v * v);
+            min = min.min(v);
+            max = max.max(v);
+        }
+        Moments { count: values.len() as f64, sum: sum.total(), sumsq: sumsq.total(), min, max }
+    }
+
+    /// Moments of a record slice's values.
+    pub fn from_records(records: &[Record]) -> Self {
+        Self::from_records_mapped(records, 0)
+    }
+
+    /// Moments of a record slice after `rounds` map iterations per item
+    /// (see [`crate::job::map_fn::apply_map`]).
+    pub fn from_records_mapped(records: &[Record], rounds: u32) -> Self {
+        let mut sum = NeumaierSum::new();
+        let mut sumsq = NeumaierSum::new();
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for r in records {
+            let v = crate::job::map_fn::apply_map(r.value, rounds);
+            sum.add(v);
+            sumsq.add(v * v);
+            min = min.min(v);
+            max = max.max(v);
+        }
+        Moments { count: records.len() as f64, sum: sum.total(), sumsq: sumsq.total(), min, max }
+    }
+
+    /// Associative, commutative combine — the reduce of Figure 3.1.
+    pub fn combine(&self, other: &Moments) -> Moments {
+        Moments {
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+            sumsq: self.sumsq + other.sumsq,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
+    /// Inverse of [`Moments::combine`] for the additive fields — the
+    /// "un-reduce" of the paper's §4.2.2 `reduceByKeyAndWindow`
+    /// implementation: subtract the moments of removed items.
+    ///
+    /// `count`, `sum`, `sumsq` are exactly invertible. `min`/`max` are
+    /// **not** (removing the extremal item loses information): the result
+    /// keeps the conservative bounds `min ≤ true min`, `max ≥ true max`.
+    /// This mirrors the paper, which supports error estimation for
+    /// aggregate queries only and defers extreme-value queries (§3.5.1);
+    /// pipelines needing exact extremes use the full recompute path.
+    pub fn inverse_combine(&self, removed: &Moments) -> Moments {
+        Moments {
+            count: (self.count - removed.count).max(0.0),
+            sum: self.sum - removed.sum,
+            sumsq: self.sumsq - removed.sumsq,
+            min: self.min,
+            max: self.max,
+        }
+    }
+
+    /// Combine many.
+    pub fn combine_all<'a>(parts: impl IntoIterator<Item = &'a Moments>) -> Moments {
+        let mut acc_sum = NeumaierSum::new();
+        let mut acc_sumsq = NeumaierSum::new();
+        let mut count = 0.0;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for m in parts {
+            count += m.count;
+            acc_sum.add(m.sum);
+            acc_sumsq.add(m.sumsq);
+            min = min.min(m.min);
+            max = max.max(m.max);
+        }
+        Moments { count, sum: acc_sum.total(), sumsq: acc_sumsq.total(), min, max }
+    }
+
+    /// Sample mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        self.sum / self.count
+    }
+
+    /// Unbiased sample variance s² (0 when count < 2).
+    pub fn variance(&self) -> f64 {
+        if self.count < 2.0 {
+            return 0.0;
+        }
+        // Numerically: max(0, ·) guards tiny negative round-off.
+        ((self.sumsq - self.sum * self.sum / self.count) / (self.count - 1.0)).max(0.0)
+    }
+
+    /// Pack into the kernel's 5-wide row layout (f32, PJRT side).
+    pub fn to_row_f32(&self) -> [f32; 5] {
+        [self.count as f32, self.sum as f32, self.sumsq as f32, self.min as f32, self.max as f32]
+    }
+
+    /// Unpack from the kernel's row layout. The kernel encodes empty-chunk
+    /// min/max as ±FLT_MAX sentinels; map them back to ±∞.
+    pub fn from_row_f32(row: &[f32]) -> Self {
+        debug_assert_eq!(row.len(), 5);
+        let min = if row[3] >= f32::MAX { f64::INFINITY } else { row[3] as f64 };
+        let max = if row[4] <= f32::MIN { f64::NEG_INFINITY } else { row[4] as f64 };
+        Moments { count: row[0] as f64, sum: row[1] as f64, sumsq: row[2] as f64, min, max }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_values_basic() {
+        let m = Moments::from_values(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.count, 3.0);
+        assert_eq!(m.sum, 6.0);
+        assert_eq!(m.sumsq, 14.0);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 3.0);
+        assert_eq!(m.mean(), 2.0);
+        assert!((m.variance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_identity() {
+        let m = Moments::from_values(&[4.0, 5.0]);
+        assert_eq!(m.combine(&Moments::EMPTY), m);
+        assert_eq!(Moments::EMPTY.combine(&m), m);
+        assert_eq!(Moments::EMPTY.variance(), 0.0);
+    }
+
+    #[test]
+    fn combine_matches_whole() {
+        let a = [1.5, -2.0, 3.25, 0.0];
+        let b = [10.0, 7.5];
+        let whole: Vec<f64> = a.iter().chain(&b).copied().collect();
+        let combined = Moments::from_values(&a).combine(&Moments::from_values(&b));
+        let direct = Moments::from_values(&whole);
+        assert!((combined.sum - direct.sum).abs() < 1e-12);
+        assert!((combined.sumsq - direct.sumsq).abs() < 1e-12);
+        assert_eq!(combined.count, direct.count);
+        assert_eq!(combined.min, direct.min);
+        assert_eq!(combined.max, direct.max);
+    }
+
+    #[test]
+    fn combine_all_associativity() {
+        let parts: Vec<Moments> = (0..10)
+            .map(|i| Moments::from_values(&[i as f64, (i * i) as f64]))
+            .collect();
+        let left = parts.iter().fold(Moments::EMPTY, |acc, m| acc.combine(m));
+        let all = Moments::combine_all(parts.iter());
+        assert!((left.sum - all.sum).abs() < 1e-9);
+        assert_eq!(left.count, all.count);
+    }
+
+    #[test]
+    fn inverse_combine_undoes_combine() {
+        let a = Moments::from_values(&[1.0, 2.0, 3.0]);
+        let b = Moments::from_values(&[4.0, 5.0]);
+        let both = a.combine(&b);
+        let back = both.inverse_combine(&b);
+        assert!((back.count - a.count).abs() < 1e-12);
+        assert!((back.sum - a.sum).abs() < 1e-9);
+        assert!((back.sumsq - a.sumsq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_combine_chain_stays_accurate() {
+        // Simulate many windows of add/remove and compare to direct.
+        let mut live: Vec<f64> = (0..100).map(|i| i as f64 * 0.7).collect();
+        let mut m = Moments::from_values(&live);
+        for round in 0..200 {
+            let removed: Vec<f64> = live.drain(..5).collect();
+            let added: Vec<f64> = (0..5).map(|i| (round * 5 + i) as f64 * 0.31).collect();
+            live.extend(added.iter().copied());
+            m = m.combine(&Moments::from_values(&added))
+                .inverse_combine(&Moments::from_values(&removed));
+        }
+        let direct = Moments::from_values(&live);
+        assert!((m.sum - direct.sum).abs() < 1e-6 * direct.sum.abs().max(1.0));
+        assert!((m.sumsq - direct.sumsq).abs() < 1e-6 * direct.sumsq.abs().max(1.0));
+        assert_eq!(m.count, direct.count);
+    }
+
+    #[test]
+    fn variance_never_negative() {
+        // Catastrophic cancellation scenario.
+        let vals = vec![1e8 + 1.0, 1e8 + 1.0, 1e8 + 1.0];
+        let m = Moments::from_values(&vals);
+        assert!(m.variance() >= 0.0);
+    }
+
+    #[test]
+    fn row_roundtrip() {
+        let m = Moments::from_values(&[1.0, 2.0]);
+        let row = m.to_row_f32();
+        let back = Moments::from_row_f32(&row);
+        assert_eq!(back.count, m.count);
+        assert!((back.sum - m.sum).abs() < 1e-6);
+        // Empty sentinel mapping.
+        let empty_row = [0.0f32, 0.0, 0.0, f32::MAX, f32::MIN];
+        let back = Moments::from_row_f32(&empty_row);
+        assert_eq!(back.min, f64::INFINITY);
+        assert_eq!(back.max, f64::NEG_INFINITY);
+    }
+}

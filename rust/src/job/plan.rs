@@ -1,0 +1,174 @@
+//! Job planning: biased sample → chunks → memo classification → DDG.
+//!
+//! The plan of one window's job: every stratum's biased sample is chunked
+//! (content-defined, `chunk.rs`), each chunk is classified as a **memo
+//! hit** (result reused, no execution) or **fresh** (must execute), and a
+//! dependence graph is built with one map node per chunk, one reduce node
+//! per stratum, and an output node — the concrete instantiation of
+//! Figure 3.1 for this pipeline.
+
+use std::collections::BTreeMap;
+
+use crate::job::chunk::{chunk_stratum, Chunk};
+use crate::job::moments::Moments;
+use crate::sac::ddg::{Ddg, NodeKind};
+use crate::sac::memo::MemoStore;
+use crate::sampling::biased::BiasOutcome;
+use crate::workload::record::StratumId;
+
+/// A chunk with its memo classification.
+#[derive(Debug, Clone)]
+pub struct PlannedChunk {
+    /// The chunk itself.
+    pub chunk: Chunk,
+    /// Memoized result, if the store already has this chunk.
+    pub memoized: Option<Moments>,
+}
+
+impl PlannedChunk {
+    /// True when no execution is needed.
+    pub fn is_hit(&self) -> bool {
+        self.memoized.is_some()
+    }
+}
+
+/// The executable plan of one window.
+#[derive(Debug)]
+pub struct JobPlan {
+    /// All chunks, grouped per stratum (deterministic order).
+    pub per_stratum: BTreeMap<StratumId, Vec<PlannedChunk>>,
+    /// The window job's dependence graph.
+    pub ddg: Ddg,
+}
+
+impl JobPlan {
+    /// Build the plan from the biased sample and the memo store.
+    ///
+    /// Counts one memo hit/miss per chunk in the store's statistics.
+    pub fn build(biased: &BiasOutcome, memo: &mut MemoStore, chunk_target: usize) -> JobPlan {
+        let mut per_stratum = BTreeMap::new();
+        let mut ddg = Ddg::new();
+        let output = ddg.add_node(NodeKind::Output);
+        for (&stratum, items) in &biased.per_stratum {
+            let chunks = chunk_stratum(stratum, items.clone(), chunk_target);
+            let reduce = ddg.add_node(NodeKind::Reduce { group: stratum as u64 });
+            ddg.add_edge(reduce, output);
+            let planned: Vec<PlannedChunk> = chunks
+                .into_iter()
+                .map(|chunk| {
+                    let map_node = ddg.add_node(NodeKind::Map { chunk_hash: chunk.hash });
+                    ddg.add_edge(map_node, reduce);
+                    let memoized = memo.get_chunk(chunk.hash);
+                    PlannedChunk { chunk, memoized }
+                })
+                .collect();
+            per_stratum.insert(stratum, planned);
+        }
+        JobPlan { per_stratum, ddg }
+    }
+
+    /// All fresh (to-execute) chunks in deterministic order.
+    pub fn fresh_chunks(&self) -> Vec<&Chunk> {
+        self.per_stratum
+            .values()
+            .flatten()
+            .filter(|p| !p.is_hit())
+            .map(|p| &p.chunk)
+            .collect()
+    }
+
+    /// Total chunk count.
+    pub fn chunk_count(&self) -> usize {
+        self.per_stratum.values().map(Vec::len).sum()
+    }
+
+    /// Memo-hit chunk count.
+    pub fn hit_count(&self) -> usize {
+        self.per_stratum.values().flatten().filter(|p| p.is_hit()).count()
+    }
+
+    /// Fraction of chunks whose results are reused.
+    pub fn reuse_fraction(&self) -> f64 {
+        let n = self.chunk_count();
+        if n == 0 {
+            0.0
+        } else {
+            self.hit_count() as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::record::Record;
+
+    fn biased(strata: &[(StratumId, std::ops::Range<u64>)]) -> BiasOutcome {
+        let mut out = BiasOutcome::default();
+        for (s, ids) in strata {
+            out.per_stratum.insert(
+                *s,
+                ids.clone().map(|i| Record::new(i, *s, i, 0, i as f64)).collect(),
+            );
+        }
+        out
+    }
+
+    #[test]
+    fn cold_plan_is_all_fresh() {
+        let mut memo = MemoStore::new();
+        let b = biased(&[(0, 0..500), (1, 500..900)]);
+        let plan = JobPlan::build(&b, &mut memo, 64);
+        assert_eq!(plan.hit_count(), 0);
+        assert_eq!(plan.fresh_chunks().len(), plan.chunk_count());
+        assert!(plan.chunk_count() > 2);
+    }
+
+    #[test]
+    fn warm_plan_reuses_identical_chunks() {
+        let mut memo = MemoStore::new();
+        let b = biased(&[(0, 0..500)]);
+        let plan = JobPlan::build(&b, &mut memo, 64);
+        // Execute + memoize everything.
+        for p in plan.per_stratum[&0].iter() {
+            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+        }
+        // Same sample again → all hits.
+        let plan2 = JobPlan::build(&b, &mut memo, 64);
+        assert_eq!(plan2.hit_count(), plan2.chunk_count());
+        assert_eq!(plan2.reuse_fraction(), 1.0);
+    }
+
+    #[test]
+    fn partial_overlap_partial_reuse() {
+        let mut memo = MemoStore::new();
+        let w1 = biased(&[(0, 0..1000)]);
+        let plan1 = JobPlan::build(&w1, &mut memo, 32);
+        for p in plan1.per_stratum[&0].iter() {
+            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+        }
+        // Slide: drop first 100 ids, add 100 new.
+        let w2 = biased(&[(0, 100..1100)]);
+        let plan2 = JobPlan::build(&w2, &mut memo, 32);
+        assert!(plan2.hit_count() > 0, "no reuse after slide");
+        assert!(plan2.hit_count() < plan2.chunk_count(), "new items must be fresh");
+        assert!(plan2.reuse_fraction() > 0.6, "reuse {}", plan2.reuse_fraction());
+    }
+
+    #[test]
+    fn ddg_shape_matches_plan() {
+        let mut memo = MemoStore::new();
+        let b = biased(&[(0, 0..200), (1, 200..400)]);
+        let plan = JobPlan::build(&b, &mut memo, 64);
+        // nodes = 1 output + strata + chunks
+        assert_eq!(plan.ddg.len(), 1 + 2 + plan.chunk_count());
+    }
+
+    #[test]
+    fn empty_sample_empty_plan() {
+        let mut memo = MemoStore::new();
+        let plan = JobPlan::build(&BiasOutcome::default(), &mut memo, 64);
+        assert_eq!(plan.chunk_count(), 0);
+        assert_eq!(plan.reuse_fraction(), 0.0);
+    }
+}

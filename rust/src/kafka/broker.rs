@@ -1,0 +1,175 @@
+//! Thread-safe broker: named topics over partitioned logs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::error::{Error, Result};
+use crate::kafka::log::{Message, PartitionLog};
+
+/// A topic: a fixed set of partitioned logs.
+pub struct Topic<T> {
+    partitions: Vec<Mutex<PartitionLog<T>>>,
+}
+
+impl<T: Clone> Topic<T> {
+    fn new(partitions: usize) -> Self {
+        Topic {
+            partitions: (0..partitions).map(|_| Mutex::new(PartitionLog::new())).collect(),
+        }
+    }
+
+    /// Number of partitions.
+    pub fn partition_count(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Append to one partition; returns the offset.
+    pub fn append(&self, partition: usize, timestamp: u64, payload: T) -> Result<u64> {
+        let log = self
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Kafka(format!("partition {partition} out of range")))?;
+        Ok(log.lock().unwrap().append(timestamp, payload))
+    }
+
+    /// Fetch from one partition.
+    pub fn fetch(&self, partition: usize, from: u64, max: usize) -> Result<Vec<Message<T>>> {
+        let log = self
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Kafka(format!("partition {partition} out of range")))?;
+        Ok(log.lock().unwrap().fetch(from, max))
+    }
+
+    /// Log-end offset of one partition.
+    pub fn end_offset(&self, partition: usize) -> Result<u64> {
+        let log = self
+            .partitions
+            .get(partition)
+            .ok_or_else(|| Error::Kafka(format!("partition {partition} out of range")))?;
+        Ok(log.lock().unwrap().end_offset())
+    }
+
+    /// Apply retention to every partition.
+    pub fn truncate_before(&self, upto: u64) {
+        for log in &self.partitions {
+            log.lock().unwrap().truncate_before(upto);
+        }
+    }
+}
+
+/// The broker: a registry of topics. Cheap to clone via `Arc`.
+pub struct Broker<T> {
+    topics: RwLock<HashMap<String, Arc<Topic<T>>>>,
+}
+
+impl<T: Clone> Default for Broker<T> {
+    fn default() -> Self {
+        Broker { topics: RwLock::new(HashMap::new()) }
+    }
+}
+
+impl<T: Clone> Broker<T> {
+    /// Empty broker.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Create a topic (idempotent if the partition count matches).
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Result<Arc<Topic<T>>> {
+        if partitions == 0 {
+            return Err(Error::Kafka("topic needs at least one partition".into()));
+        }
+        let mut topics = self.topics.write().unwrap();
+        if let Some(existing) = topics.get(name) {
+            if existing.partition_count() != partitions {
+                return Err(Error::Kafka(format!(
+                    "topic `{name}` exists with {} partitions",
+                    existing.partition_count()
+                )));
+            }
+            return Ok(existing.clone());
+        }
+        let topic = Arc::new(Topic::new(partitions));
+        topics.insert(name.to_string(), topic.clone());
+        Ok(topic)
+    }
+
+    /// Look up a topic.
+    pub fn topic(&self, name: &str) -> Result<Arc<Topic<T>>> {
+        self.topics
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Kafka(format!("unknown topic `{name}`")))
+    }
+
+    /// All topic names (sorted, deterministic).
+    pub fn topic_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.topics.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_and_publish() {
+        let broker = Broker::new();
+        let topic = broker.create_topic("flows", 2).unwrap();
+        topic.append(0, 1, "a").unwrap();
+        topic.append(1, 1, "b").unwrap();
+        assert_eq!(topic.fetch(0, 0, 10).unwrap().len(), 1);
+        assert_eq!(topic.fetch(1, 0, 10).unwrap()[0].payload, "b");
+    }
+
+    #[test]
+    fn create_topic_idempotent_same_partitions() {
+        let broker = Broker::<u32>::new();
+        broker.create_topic("t", 3).unwrap();
+        assert!(broker.create_topic("t", 3).is_ok());
+        assert!(broker.create_topic("t", 4).is_err());
+        assert!(broker.create_topic("zero", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_topic_and_partition_errors() {
+        let broker = Broker::<u32>::new();
+        assert!(broker.topic("missing").is_err());
+        let t = broker.create_topic("t", 1).unwrap();
+        assert!(t.append(5, 0, 1).is_err());
+        assert!(t.fetch(5, 0, 1).is_err());
+    }
+
+    #[test]
+    fn concurrent_producers_keep_all_messages() {
+        let broker = Broker::new();
+        let topic = broker.create_topic("t", 4).unwrap();
+        std::thread::scope(|scope| {
+            for w in 0..8u64 {
+                let topic = topic.clone();
+                scope.spawn(move || {
+                    for i in 0..250u64 {
+                        topic.append((w as usize + i as usize) % 4, i, w * 1000 + i).unwrap();
+                    }
+                });
+            }
+        });
+        let total: usize = (0..4)
+            .map(|p| topic.fetch(p, 0, usize::MAX).unwrap().len())
+            .sum();
+        assert_eq!(total, 2000);
+    }
+
+    #[test]
+    fn topic_names_sorted() {
+        let broker = Broker::<u8>::new();
+        broker.create_topic("zeta", 1).unwrap();
+        broker.create_topic("alpha", 1).unwrap();
+        assert_eq!(broker.topic_names(), vec!["alpha", "zeta"]);
+    }
+}

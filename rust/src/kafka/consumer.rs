@@ -1,0 +1,156 @@
+//! Pull-based consumer with per-partition offset tracking.
+//!
+//! Matches the paper's §4.1.1 usage: a single consumer subscribes to one
+//! or more topics and iterates over the merged message stream. Merging is
+//! timestamp-ordered across partitions so the coordinator sees a single
+//! coherent sub-stream-tagged stream.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::kafka::broker::{Broker, Topic};
+use crate::kafka::log::Message;
+
+struct Subscription<T> {
+    topic_name: String,
+    topic: Arc<Topic<T>>,
+    /// Next offset to fetch, per partition.
+    offsets: Vec<u64>,
+}
+
+/// A consumer over one or more topics.
+pub struct Consumer<T> {
+    subs: Vec<Subscription<T>>,
+}
+
+impl<T: Clone> Default for Consumer<T> {
+    fn default() -> Self {
+        Consumer { subs: Vec::new() }
+    }
+}
+
+impl<T: Clone> Consumer<T> {
+    /// Consumer with no subscriptions.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Subscribe to a topic from the earliest retained offset.
+    pub fn subscribe(&mut self, broker: &Broker<T>, topic: &str) -> Result<()> {
+        let t = broker.topic(topic)?;
+        let offsets = vec![0; t.partition_count()];
+        self.subs.push(Subscription { topic_name: topic.to_string(), topic: t, offsets });
+        Ok(())
+    }
+
+    /// Pull up to `max` messages, merged across all subscriptions in
+    /// timestamp order (ties broken by topic/partition for determinism).
+    /// Advances offsets past everything returned.
+    pub fn poll(&mut self, max: usize) -> Result<Vec<Message<T>>> {
+        // (timestamp, sub_idx, partition, message) candidates, merged lazily:
+        // fetch per-partition in slices to avoid pulling more than `max`.
+        let mut out: Vec<(usize, usize, Message<T>)> = Vec::new();
+        for (si, sub) in self.subs.iter().enumerate() {
+            for (pi, &from) in sub.offsets.iter().enumerate() {
+                for msg in sub.topic.fetch(pi, from, max)? {
+                    out.push((si, pi, msg));
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            (a.2.timestamp, a.0, a.1, a.2.offset).cmp(&(b.2.timestamp, b.0, b.1, b.2.offset))
+        });
+        out.truncate(max);
+        let mut result = Vec::with_capacity(out.len());
+        for (si, pi, msg) in out {
+            self.subs[si].offsets[pi] = self.subs[si].offsets[pi].max(msg.offset + 1);
+            result.push(msg);
+        }
+        Ok(result)
+    }
+
+    /// Total backlog (messages available but not yet consumed) — the
+    /// coordinator's backpressure signal.
+    pub fn lag(&self) -> Result<u64> {
+        let mut lag = 0;
+        for sub in &self.subs {
+            for (pi, &from) in sub.offsets.iter().enumerate() {
+                lag += sub.topic.end_offset(pi)?.saturating_sub(from);
+            }
+        }
+        Ok(lag)
+    }
+
+    /// Names of subscribed topics.
+    pub fn subscriptions(&self) -> Vec<&str> {
+        self.subs.iter().map(|s| s.topic_name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kafka::producer::{Partitioner, Producer};
+
+    #[test]
+    fn poll_merges_by_timestamp() {
+        let broker = Broker::new();
+        broker.create_topic("a", 1).unwrap();
+        broker.create_topic("b", 1).unwrap();
+        let mut pa = Producer::new(&broker, "a", Partitioner::RoundRobin).unwrap();
+        let mut pb = Producer::new(&broker, "b", Partitioner::RoundRobin).unwrap();
+        pa.send(None, 10, "a10").unwrap();
+        pa.send(None, 30, "a30").unwrap();
+        pb.send(None, 20, "b20").unwrap();
+        let mut c = Consumer::new();
+        c.subscribe(&broker, "a").unwrap();
+        c.subscribe(&broker, "b").unwrap();
+        let msgs = c.poll(10).unwrap();
+        let ts: Vec<u64> = msgs.iter().map(|m| m.timestamp).collect();
+        assert_eq!(ts, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn poll_advances_offsets_no_redelivery() {
+        let broker = Broker::new();
+        broker.create_topic("t", 2).unwrap();
+        let mut p = Producer::new(&broker, "t", Partitioner::RoundRobin).unwrap();
+        for i in 0..20u64 {
+            p.send(None, i, i).unwrap();
+        }
+        let mut c = Consumer::new();
+        c.subscribe(&broker, "t").unwrap();
+        let first = c.poll(8).unwrap();
+        let second = c.poll(100).unwrap();
+        assert_eq!(first.len(), 8);
+        assert_eq!(second.len(), 12);
+        let mut all: Vec<u64> = first.iter().chain(&second).map(|m| m.payload).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lag_tracks_backlog() {
+        let broker = Broker::new();
+        broker.create_topic("t", 1).unwrap();
+        let mut p = Producer::new(&broker, "t", Partitioner::RoundRobin).unwrap();
+        let mut c = Consumer::new();
+        c.subscribe(&broker, "t").unwrap();
+        assert_eq!(c.lag().unwrap(), 0);
+        for i in 0..5u64 {
+            p.send(None, i, i).unwrap();
+        }
+        assert_eq!(c.lag().unwrap(), 5);
+        c.poll(3).unwrap();
+        assert_eq!(c.lag().unwrap(), 2);
+    }
+
+    #[test]
+    fn empty_poll_ok() {
+        let broker = Broker::<u8>::new();
+        broker.create_topic("t", 1).unwrap();
+        let mut c = Consumer::new();
+        c.subscribe(&broker, "t").unwrap();
+        assert!(c.poll(4).unwrap().is_empty());
+    }
+}

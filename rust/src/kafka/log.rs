@@ -1,0 +1,131 @@
+//! Partitioned append-only message log.
+
+/// A message as stored in a partition: payload plus broker metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message<T> {
+    /// Monotonic per-partition offset.
+    pub offset: u64,
+    /// Producer-supplied event timestamp (logical ticks).
+    pub timestamp: u64,
+    /// Application payload.
+    pub payload: T,
+}
+
+/// Append-only log for a single partition.
+#[derive(Debug)]
+pub struct PartitionLog<T> {
+    records: Vec<Message<T>>,
+    /// Offset of `records[0]` (> 0 once truncated).
+    base_offset: u64,
+}
+
+impl<T> Default for PartitionLog<T> {
+    fn default() -> Self {
+        PartitionLog { records: Vec::new(), base_offset: 0 }
+    }
+}
+
+impl<T: Clone> PartitionLog<T> {
+    /// Empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a payload; returns its offset.
+    pub fn append(&mut self, timestamp: u64, payload: T) -> u64 {
+        let offset = self.base_offset + self.records.len() as u64;
+        self.records.push(Message { offset, timestamp, payload });
+        offset
+    }
+
+    /// Next offset to be assigned (== log end offset).
+    pub fn end_offset(&self) -> u64 {
+        self.base_offset + self.records.len() as u64
+    }
+
+    /// Earliest retained offset.
+    pub fn start_offset(&self) -> u64 {
+        self.base_offset
+    }
+
+    /// Fetch up to `max` messages starting at `from` (clamped into the
+    /// retained range, matching Kafka's auto-reset-to-earliest).
+    pub fn fetch(&self, from: u64, max: usize) -> Vec<Message<T>> {
+        let from = from.max(self.base_offset);
+        if from >= self.end_offset() {
+            return Vec::new();
+        }
+        let start = (from - self.base_offset) as usize;
+        let end = (start + max).min(self.records.len());
+        self.records[start..end].to_vec()
+    }
+
+    /// Drop all messages with offset < `upto` (retention).
+    pub fn truncate_before(&mut self, upto: u64) {
+        if upto <= self.base_offset {
+            return;
+        }
+        let n = ((upto - self.base_offset) as usize).min(self.records.len());
+        self.records.drain(..n);
+        self.base_offset += n as u64;
+    }
+
+    /// Number of retained messages.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True if no messages are retained.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_assigns_monotonic_offsets() {
+        let mut log = PartitionLog::new();
+        assert_eq!(log.append(0, "a"), 0);
+        assert_eq!(log.append(1, "b"), 1);
+        assert_eq!(log.append(2, "c"), 2);
+        assert_eq!(log.end_offset(), 3);
+    }
+
+    #[test]
+    fn fetch_respects_from_and_max() {
+        let mut log = PartitionLog::new();
+        for i in 0..10 {
+            log.append(i, i);
+        }
+        let got = log.fetch(4, 3);
+        assert_eq!(got.iter().map(|m| m.offset).collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(got[0].payload, 4);
+        assert!(log.fetch(10, 5).is_empty());
+        assert_eq!(log.fetch(8, 100).len(), 2);
+    }
+
+    #[test]
+    fn truncation_moves_base_and_clamps_fetch() {
+        let mut log = PartitionLog::new();
+        for i in 0..10 {
+            log.append(i, i);
+        }
+        log.truncate_before(6);
+        assert_eq!(log.start_offset(), 6);
+        assert_eq!(log.len(), 4);
+        // Fetching below the retained range resets to earliest.
+        let got = log.fetch(0, 2);
+        assert_eq!(got[0].offset, 6);
+        // Offsets keep increasing after truncation.
+        assert_eq!(log.append(99, 42), 10);
+        // Truncating before base is a no-op; beyond end clears all.
+        log.truncate_before(3);
+        assert_eq!(log.start_offset(), 6);
+        log.truncate_before(100);
+        assert!(log.is_empty());
+        assert_eq!(log.end_offset(), 11);
+    }
+}

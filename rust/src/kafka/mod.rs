@@ -1,0 +1,20 @@
+//! In-process stream-aggregator substrate (the paper's Apache Kafka role).
+//!
+//! IncApprox only relies on Kafka for: (i) merging many producer
+//! sub-streams into per-topic partitioned logs, (ii) offset-tracked *pull*
+//! consumption, and (iii) replayability. This module provides exactly
+//! those semantics in-process and thread-safe: [`Broker`] owns topics,
+//! each topic owns partitioned append-only logs, [`Producer`]s publish
+//! (keyed or round-robin partitioning), [`Consumer`]s pull from committed
+//! offsets. Payloads are generic — the pipeline uses
+//! [`crate::workload::Record`].
+
+pub mod broker;
+pub mod consumer;
+pub mod log;
+pub mod producer;
+
+pub use broker::Broker;
+pub use consumer::Consumer;
+pub use log::{Message, PartitionLog};
+pub use producer::{Partitioner, Producer};

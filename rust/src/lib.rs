@@ -1,0 +1,44 @@
+//! # IncApprox — the marriage of incremental and approximate computing
+//!
+//! A rust + JAX + Pallas reproduction of *"The Marriage of Incremental and
+//! Approximate Computing"* (Krishnan, TU Dresden 2016; the IncApprox
+//! system, WWW'16). The crate is the Layer-3 coordinator of a three-layer
+//! stack:
+//!
+//! * **L3 (this crate)** — streaming orchestrator: stream aggregation,
+//!   sliding windows, stratified/biased reservoir sampling, self-adjusting
+//!   computation (memoization + change propagation), query-budget cost
+//!   functions, and stratified error bounds.
+//! * **L2 (`python/compile/model.py`)** — the window estimator compute
+//!   graph, AOT-lowered once to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — the Pallas chunk-moments kernel
+//!   the L2 graph calls; executed at runtime through the PJRT CPU client
+//!   (`runtime` module). Python is never on the request path.
+//!
+//! Entry points: [`coordinator::Coordinator`] drives the paper's
+//! Algorithm 1 over any [`workload`] source; `examples/` show end-to-end
+//! usage; `rust/benches/` regenerate the paper's figures.
+
+#![warn(missing_docs)]
+
+pub mod bench_harness;
+pub mod budget;
+pub mod classify;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod fault;
+pub mod job;
+pub mod kafka;
+pub mod logging;
+pub mod metrics;
+pub mod runtime;
+pub mod sac;
+pub mod sampling;
+pub mod stats;
+pub mod util;
+pub mod window;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,97 @@
+//! Minimal leveled logger backing the `log` facade.
+//!
+//! No `env_logger` in the offline crate set, so this module provides the
+//! subset the launcher and examples need: level filtering from the
+//! `INCAPPROX_LOG` environment variable (`error|warn|info|debug|trace`),
+//! monotonic-millis timestamps, and target prefixes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct SimpleLogger {
+    start: Instant,
+}
+
+impl log::Log for SimpleLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let ms = self.start.elapsed().as_millis();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{ms:>8}ms {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name; unknown strings fall back to `Info`.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the logger once; further calls are no-ops. Level comes from
+/// `INCAPPROX_LOG` (default `info`).
+pub fn init() {
+    init_with_level(
+        std::env::var("INCAPPROX_LOG")
+            .map(|v| parse_level(&v))
+            .unwrap_or(LevelFilter::Info),
+    );
+}
+
+/// Install with an explicit level (used by tests and benches).
+pub fn init_with_level(level: LevelFilter) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        log::set_max_level(level);
+        return;
+    }
+    let logger = Box::new(SimpleLogger { start: Instant::now() });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("WARN"), LevelFilter::Warn);
+        assert_eq!(parse_level("debug"), LevelFilter::Debug);
+        assert_eq!(parse_level("trace"), LevelFilter::Trace);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn init_idempotent() {
+        init_with_level(LevelFilter::Warn);
+        init_with_level(LevelFilter::Info);
+        assert_eq!(log::max_level(), LevelFilter::Info);
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,113 @@
+//! IncApprox launcher.
+//!
+//! ```text
+//! incapprox [--config cfg.toml] [--mode incapprox|native|incremental|approx]
+//!           [--windows N] [--workload section5|fluctuating|flows|tweets]
+//!           [--window SIZE] [--slide N] [--fraction F] [--seed S]
+//!           [--pjrt] [--artifacts DIR] [--verbose]
+//! ```
+//!
+//! Runs the full pipeline (generators → kafka substrate → coordinator)
+//! for N windows and prints one report line per window plus a summary.
+
+use incapprox::cli::Args;
+use incapprox::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
+use incapprox::coordinator::{Coordinator, Pipeline};
+use incapprox::error::{Error, Result};
+use incapprox::job::executor::WorkerPool;
+use incapprox::runtime::{PjrtBackend, PjrtRuntime};
+use incapprox::workload::flows::FlowLogGen;
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::tweets::TweetGen;
+
+fn build_workload(name: &str, seed: u64) -> Result<MultiStream> {
+    match name {
+        "section5" => Ok(MultiStream::paper_section5(seed)),
+        "fluctuating" => Ok(MultiStream::paper_fluctuating(seed, 500)),
+        "flows" => Ok(FlowLogGen::case_study(4, seed)),
+        "tweets" => Ok(TweetGen::case_study(seed)),
+        other => Err(Error::Config(format!("unknown workload `{other}`"))),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["pjrt", "verbose", "help"])?;
+    if args.flag("help") {
+        println!("{}", include_str!("main.rs").lines().take(12).collect::<Vec<_>>().join("\n"));
+        return Ok(());
+    }
+    incapprox::logging::init_with_level(if args.flag("verbose") {
+        log::LevelFilter::Debug
+    } else {
+        log::LevelFilter::Info
+    });
+
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_file(path)?,
+        None => SystemConfig::default(),
+    };
+    if let Some(mode) = args.get("mode") {
+        cfg.mode = ExecModeSpec::parse(mode)?;
+    }
+    cfg.window_size = args.get_parse("window", cfg.window_size)?;
+    cfg.slide = args.get_parse("slide", cfg.slide)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.map_rounds = args.get_parse("map-rounds", cfg.map_rounds)?;
+    if let Some(f) = args.get("fraction") {
+        cfg.budget = BudgetSpec::Fraction(
+            f.parse().map_err(|_| Error::Config(format!("bad --fraction `{f}`")))?,
+        );
+    }
+    if args.flag("pjrt") {
+        cfg.use_pjrt = true;
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    cfg.validate()?;
+
+    let windows: usize = args.get_parse("windows", 20)?;
+    let workload = args.get("workload").unwrap_or("section5");
+
+    log::info!(
+        "mode={} window={} slide={} workload={} backend={}",
+        cfg.mode.name(),
+        cfg.window_size,
+        cfg.slide,
+        workload,
+        if cfg.use_pjrt { "pjrt" } else { "native" }
+    );
+
+    let source = build_workload(workload, cfg.seed)?;
+    let mut coordinator = Coordinator::new(cfg.clone());
+    if cfg.use_pjrt {
+        let rt = std::sync::Arc::new(PjrtRuntime::load(&cfg.artifacts_dir)?);
+        log::info!("pjrt platform: {}", rt.platform());
+        coordinator = coordinator
+            .with_backend(Box::new(PjrtBackend::with_rounds(rt, cfg.map_rounds)));
+    } else if cfg.workers > 1 {
+        coordinator = coordinator
+            .with_backend(Box::new(WorkerPool::with_rounds(cfg.workers, cfg.map_rounds)));
+    }
+
+    let mut pipeline = Pipeline::new(coordinator, source)?;
+    let reports = pipeline.run(windows)?;
+    for r in &reports {
+        println!("{}", r.summary());
+    }
+
+    let stats = pipeline.coordinator().memo_stats();
+    let mean_latency: f64 =
+        reports.iter().map(|r| r.latency_ms).sum::<f64>() / reports.len() as f64;
+    let mean_reuse: f64 =
+        reports.iter().skip(1).map(|r| r.item_reuse_fraction()).sum::<f64>()
+            / reports.len().saturating_sub(1).max(1) as f64;
+    println!(
+        "\nsummary: {} windows, mean latency {:.3} ms, item reuse {:.1}%, memo hit-rate {:.1}%",
+        reports.len(),
+        mean_latency,
+        mean_reuse * 100.0,
+        stats.hit_rate() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,306 @@
+//! The PJRT execution client.
+//!
+//! Compiles every manifest artifact once on the CPU PJRT client and keeps
+//! the loaded executables cached. The hot-path entry point,
+//! [`PjrtRuntime::chunk_moments`], packs an arbitrary batch of fresh
+//! chunks into the fixed `[CHUNKS, CHUNK]` shapes the artifacts were
+//! lowered with: chunks longer than the row width are split across rows
+//! (moments combine associatively), batches larger than the row capacity
+//! run as multiple executions, and the smallest adequate variant is
+//! chosen per batch to minimize padding waste.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::job::chunk::Chunk;
+use crate::job::executor::ChunkBackend;
+use crate::job::moments::Moments;
+use crate::runtime::manifest::{ArtifactKind, ArtifactSpec, Manifest};
+
+/// Compiled-executable cache over one PJRT client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Number of PJRT executions issued (perf accounting).
+    executions: std::sync::atomic::AtomicU64,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest from `artifacts_dir` and eagerly compile every
+    /// artifact on the CPU PJRT client.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let rt = PjrtRuntime {
+            client,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        };
+        for spec in rt.manifest.specs.clone() {
+            rt.compile_spec(&spec)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile_spec(&self, spec: &ArtifactSpec) -> Result<()> {
+        let path = spec.path.to_str().ok_or_else(|| {
+            Error::Runtime(format!("non-utf8 artifact path {:?}", spec.path))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.lock().unwrap().insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Platform name of the PJRT client (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executions issued so far.
+    pub fn execution_count(&self) -> u64 {
+        self.executions.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Pick the chunk-moments variant compiled with the requested map
+    /// `rounds`, with the smallest capacity that still fits `rows` rows
+    /// of width ≥ `width` — or, if none fits `rows`, the variant with the
+    /// largest capacity of adequate width (the batch will run as several
+    /// executions).
+    fn pick_chunk_variant(
+        &self,
+        rows: usize,
+        width: usize,
+        rounds: u32,
+    ) -> Result<&ArtifactSpec> {
+        let candidates: Vec<&ArtifactSpec> = self
+            .manifest
+            .specs
+            .iter()
+            .filter(|s| {
+                s.kind == ArtifactKind::ChunkMoments && s.chunk >= width && s.rounds == rounds
+            })
+            .collect();
+        if candidates.is_empty() {
+            return Err(Error::Runtime(format!(
+                "no chunk_moments artifact with width >= {width} and rounds == {rounds} \
+                 (re-run `make artifacts` with this variant added to aot.py)"
+            )));
+        }
+        if let Some(fit) = candidates
+            .iter()
+            .filter(|s| s.chunks >= rows)
+            .min_by_key(|s| (s.chunks, s.chunk))
+        {
+            return Ok(fit);
+        }
+        Ok(candidates
+            .into_iter()
+            .max_by_key(|s| s.chunks)
+            .expect("non-empty candidates"))
+    }
+
+    fn execute_moments(
+        &self,
+        spec: &ArtifactSpec,
+        values: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let exes = self.exes.lock().unwrap();
+        let exe = exes
+            .get(&spec.name)
+            .ok_or_else(|| Error::Runtime(format!("artifact {} not compiled", spec.name)))?;
+        let dims = [spec.chunks as i64, spec.chunk as i64];
+        let v = xla::Literal::vec1(values).reshape(&dims)?;
+        let m = xla::Literal::vec1(mask).reshape(&dims)?;
+        let result = exe.execute::<xla::Literal>(&[v, m])?[0][0].to_literal_sync()?;
+        self.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Lowered with return_tuple=True → a 1-tuple of [CHUNKS, 5].
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Compute moments for a batch of chunks through the AOT executable
+    /// compiled with `rounds` map iterations.
+    ///
+    /// Returns one [`Moments`] per chunk, input order, numerically equal
+    /// (within f32) to [`crate::job::executor::NativeBackend`].
+    pub fn chunk_moments(&self, chunks: &[&Chunk], rounds: u32) -> Result<Vec<Moments>> {
+        if chunks.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Segment long chunks into row-sized pieces.
+        let max_len = chunks.iter().map(|c| c.len()).max().expect("non-empty");
+        let widest = self
+            .manifest
+            .specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::ChunkMoments && s.rounds == rounds)
+            .map(|s| s.chunk)
+            .max()
+            .ok_or_else(|| {
+                Error::Runtime(format!("no chunk_moments artifacts with rounds == {rounds}"))
+            })?;
+        let width = max_len.min(widest).max(1);
+        // (chunk_index, start) segments, each ≤ width items.
+        let mut segments: Vec<(usize, usize, usize)> = Vec::new(); // (chunk, start, len)
+        for (ci, c) in chunks.iter().enumerate() {
+            let mut start = 0;
+            loop {
+                let len = (c.len() - start).min(width);
+                segments.push((ci, start, len));
+                start += len;
+                if start >= c.len() {
+                    break;
+                }
+            }
+        }
+        let spec = self.pick_chunk_variant(segments.len(), width, rounds)?;
+        let (rows_cap, row_w) = (spec.chunks, spec.chunk);
+        let mut out = vec![Moments::EMPTY; chunks.len()];
+        for batch in segments.chunks(rows_cap) {
+            let mut values = vec![0f32; rows_cap * row_w];
+            let mut mask = vec![0f32; rows_cap * row_w];
+            for (row, &(ci, start, len)) in batch.iter().enumerate() {
+                for (j, r) in chunks[ci].items[start..start + len].iter().enumerate() {
+                    values[row * row_w + j] = r.value as f32;
+                    mask[row * row_w + j] = 1.0;
+                }
+            }
+            let flat = self.execute_moments(spec, &values, &mask)?;
+            for (row, &(ci, _, _)) in batch.iter().enumerate() {
+                let m = Moments::from_row_f32(&flat[row * 5..row * 5 + 5]);
+                out[ci] = out[ci].combine(&m);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// [`ChunkBackend`] adapter so the coordinator can swap PJRT in for the
+/// native scalar path.
+pub struct PjrtBackend {
+    runtime: std::sync::Arc<PjrtRuntime>,
+    rounds: u32,
+}
+
+impl PjrtBackend {
+    /// Wrap a shared runtime with no map stage.
+    pub fn new(runtime: std::sync::Arc<PjrtRuntime>) -> Self {
+        Self::with_rounds(runtime, 0)
+    }
+
+    /// Wrap a shared runtime using the artifacts compiled with `rounds`
+    /// map iterations per item.
+    pub fn with_rounds(runtime: std::sync::Arc<PjrtRuntime>, rounds: u32) -> Self {
+        PjrtBackend { runtime, rounds }
+    }
+}
+
+impl ChunkBackend for PjrtBackend {
+    fn compute(&self, chunks: &[&Chunk]) -> Result<Vec<Moments>> {
+        self.runtime.chunk_moments(chunks, self.rounds)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `artifacts/` built (`make artifacts`); they are
+    //! skipped gracefully when it is absent so `cargo test` works in a
+    //! fresh checkout, and exercised for real by `make test`.
+    use super::*;
+    use crate::job::chunk::chunk_stratum;
+    use crate::job::executor::NativeBackend;
+    use crate::workload::record::Record;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.tsv").exists().then_some(dir)
+    }
+
+    fn chunks(n: u64, target: usize) -> Vec<Chunk> {
+        let items =
+            (0..n).map(|i| Record::new(i, 0, 0, 0, (i as f64 * 0.37).sin() * 10.0)).collect();
+        chunk_stratum(0, items, target)
+    }
+
+    #[test]
+    fn pjrt_matches_native_backend() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::load(dir).unwrap();
+        let cs = chunks(700, 48);
+        let refs: Vec<&Chunk> = cs.iter().collect();
+        let got = rt.chunk_moments(&refs, 0).unwrap();
+        let want = NativeBackend::default().compute(&refs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.count, w.count);
+            assert!((g.sum - w.sum).abs() < 1e-3 * w.sum.abs().max(1.0), "{g:?} vs {w:?}");
+            assert!((g.min - w.min).abs() < 1e-4);
+            assert!((g.max - w.max).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn long_chunks_split_across_rows() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::load(dir).unwrap();
+        // target 200 → cap 800 ≫ widest row (256): forces splitting.
+        let cs = chunks(900, 200);
+        assert!(cs.iter().any(|c| c.len() > 256), "need a long chunk");
+        let refs: Vec<&Chunk> = cs.iter().collect();
+        let got = rt.chunk_moments(&refs, 0).unwrap();
+        let want = NativeBackend::default().compute(&refs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.count, w.count);
+            assert!((g.sum - w.sum).abs() < 1e-2 * w.sum.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn batch_larger_than_capacity_multi_executes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::load(dir).unwrap();
+        let cs = chunks(40_000, 64); // ~600 chunks > 256-row capacity
+        let refs: Vec<&Chunk> = cs.iter().collect();
+        let before = rt.execution_count();
+        let got = rt.chunk_moments(&refs, 0).unwrap();
+        assert!(rt.execution_count() - before >= 2);
+        let want = NativeBackend::default().compute(&refs).unwrap();
+        let total_got: f64 = got.iter().map(|m| m.count).sum();
+        let total_want: f64 = want.iter().map(|m| m.count).sum();
+        assert_eq!(total_got, total_want);
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::load(dir).unwrap();
+        assert!(rt.chunk_moments(&[], 0).unwrap().is_empty());
+    }
+}

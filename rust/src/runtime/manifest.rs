@@ -1,0 +1,164 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes `manifest.tsv` with one row per lowered HLO module:
+//! `kind, name, file, chunks, chunk, strata, dtype, n_outputs`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Which L2 graph an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `[CHUNKS, CHUNK] ×2 → [CHUNKS, 5]` per-chunk moments.
+    ChunkMoments,
+    /// Full-window estimator `(values, mask, onehot, population) →
+    /// (tau, var, stats)`.
+    WindowEstimate,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "chunk_moments" => Ok(Self::ChunkMoments),
+            "window_estimate" => Ok(Self::WindowEstimate),
+            other => Err(Error::Runtime(format!("unknown artifact kind `{other}`"))),
+        }
+    }
+}
+
+/// One artifact row.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Graph kind.
+    pub kind: ArtifactKind,
+    /// Unique artifact name (e.g. `chunk_moments_64x128`).
+    pub name: String,
+    /// HLO text file path (absolute, resolved against the manifest dir).
+    pub path: PathBuf,
+    /// Row capacity (CHUNKS dimension).
+    pub chunks: usize,
+    /// Row width (CHUNK dimension).
+    pub chunk: usize,
+    /// Strata capacity (0 for chunk-moments artifacts).
+    pub strata: usize,
+    /// Tuple arity of the module output.
+    pub n_outputs: usize,
+    /// Per-item map rounds compiled into the module.
+    pub rounds: u32,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// All artifact rows.
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let mut specs = Vec::new();
+        for (idx, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 9 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: expected 9 columns, got {}",
+                    idx + 1,
+                    cols.len()
+                )));
+            }
+            let parse_usize = |i: usize, what: &str| {
+                cols[i].parse::<usize>().map_err(|_| {
+                    Error::Runtime(format!("manifest line {}: bad {what}", idx + 1))
+                })
+            };
+            if cols[6] != "f32" {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: unsupported dtype {}",
+                    idx + 1,
+                    cols[6]
+                )));
+            }
+            specs.push(ArtifactSpec {
+                kind: ArtifactKind::parse(cols[0])?,
+                name: cols[1].to_string(),
+                path: dir.join(cols[2]),
+                chunks: parse_usize(3, "chunks")?,
+                chunk: parse_usize(4, "chunk")?,
+                strata: parse_usize(5, "strata")?,
+                n_outputs: parse_usize(7, "n_outputs")?,
+                rounds: parse_usize(8, "rounds")? as u32,
+            });
+        }
+        if specs.is_empty() {
+            return Err(Error::Runtime("manifest is empty".into()));
+        }
+        Ok(Manifest { specs })
+    }
+
+    /// All specs of one kind.
+    pub fn of_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactSpec> {
+        self.specs.iter().filter(|s| s.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(content: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("incapprox_manifest_{}", crate::util::hash::fnv1a(content.as_bytes())));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), content).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = write_manifest(
+            "# header\nchunk_moments\tcm\tcm.hlo.txt\t64\t128\t0\tf32\t1\t0\n\
+             window_estimate\twe\twe.hlo.txt\t64\t128\t8\tf32\t3\t0\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.specs.len(), 2);
+        assert_eq!(m.of_kind(ArtifactKind::ChunkMoments).len(), 1);
+        let cm = &m.specs[0];
+        assert_eq!((cm.chunks, cm.chunk, cm.n_outputs), (64, 128, 1));
+        assert!(cm.path.ends_with("cm.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_rows() {
+        for bad in [
+            "chunk_moments\tcm\tf.hlo\t64\t128\t0\tf32\t1\n",           // 8 cols
+            "bogus_kind\tcm\tf.hlo\t64\t128\t0\tf32\t1\t0\n",          // kind
+            "chunk_moments\tcm\tf.hlo\tx\t128\t0\tf32\t1\t0\n",        // chunks
+            "chunk_moments\tcm\tf.hlo\t64\t128\t0\tf64\t1\t0\n",       // dtype
+            "chunk_moments\tcm\tf.hlo\t64\t128\t0\tf32\t1\tx\n",       // rounds
+            "",                                                          // empty
+        ] {
+            let dir = write_manifest(bad);
+            assert!(Manifest::load(&dir).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute on the hot path.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.tsv` written by
+//!   `python/compile/aot.py`.
+//! * [`client`] — wraps the `xla` crate: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile`, caches one executable
+//!   per artifact, and exposes typed entry points ([`client::PjrtRuntime::
+//!   chunk_moments`]) that pack chunks into the fixed-shape literals the
+//!   L2 graph was lowered with. Python never runs here — artifacts are
+//!   plain HLO text files.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{PjrtBackend, PjrtRuntime};
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};

@@ -1,0 +1,257 @@
+//! Dynamic dependence graph + change propagation.
+//!
+//! The DDG records sub-computations (nodes) and the data/control
+//! dependencies between them (directed edges producer → consumer). Given
+//! the set of input changes, [`Ddg::propagate`] returns, in dependency
+//! order, exactly the nodes that must re-execute: the changed nodes and
+//! everything transitively reachable from them. Unaffected nodes keep
+//! their memoized results (Figure 3.1: fresh maps M5, M6 invalidate only
+//! reduces R3, R5; R1, R2, R4 are reused).
+
+use std::collections::VecDeque;
+
+/// Index of a node in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// What a node computes — mirrors the data-parallel job structure of
+/// Figure 3.1 plus a generic variant for other pipelines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeKind {
+    /// A map task over one input chunk (content hash identifies it).
+    Map {
+        /// The chunk's stable content hash (memo key).
+        chunk_hash: u64,
+    },
+    /// A reduce task combining map outputs (e.g. one per stratum).
+    Reduce {
+        /// Reduce group id (stratum for this pipeline).
+        group: u64,
+    },
+    /// The final output node.
+    Output,
+    /// Anything else.
+    Other(String),
+}
+
+#[derive(Debug)]
+struct Node {
+    kind: NodeKind,
+    dependents: Vec<NodeId>,
+    in_degree: usize,
+}
+
+/// The dependence graph of one job.
+#[derive(Debug, Default)]
+pub struct Ddg {
+    nodes: Vec<Node>,
+}
+
+impl Ddg {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a sub-computation node.
+    pub fn add_node(&mut self, kind: NodeKind) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node { kind, dependents: Vec::new(), in_degree: 0 });
+        id
+    }
+
+    /// Record that `consumer` depends on `producer`'s output.
+    pub fn add_edge(&mut self, producer: NodeId, consumer: NodeId) {
+        assert!(producer.0 < self.nodes.len() && consumer.0 < self.nodes.len());
+        assert_ne!(producer, consumer, "self-dependency");
+        self.nodes[producer.0].dependents.push(consumer);
+        self.nodes[consumer.0].in_degree += 1;
+    }
+
+    /// Node kind accessor.
+    pub fn kind(&self, id: NodeId) -> &NodeKind {
+        &self.nodes[id.0].kind
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Change propagation: given directly changed nodes, return all
+    /// transitively affected nodes in dependency (topological) order.
+    ///
+    /// Every returned node must re-execute; every node *not* returned may
+    /// reuse its memoized result.
+    pub fn propagate(&self, changed: &[NodeId]) -> Vec<NodeId> {
+        let n = self.nodes.len();
+        let mut affected = vec![false; n];
+        let mut queue: VecDeque<NodeId> = VecDeque::new();
+        for &c in changed {
+            if !affected[c.0] {
+                affected[c.0] = true;
+                queue.push_back(c);
+            }
+        }
+        while let Some(node) = queue.pop_front() {
+            for &dep in &self.nodes[node.0].dependents {
+                if !affected[dep.0] {
+                    affected[dep.0] = true;
+                    queue.push_back(dep);
+                }
+            }
+        }
+        // Kahn topological order restricted to the affected set.
+        let mut in_deg = vec![0usize; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            if !affected[i] {
+                continue;
+            }
+            for &dep in &node.dependents {
+                if affected[dep.0] {
+                    in_deg[dep.0] += 1;
+                }
+            }
+        }
+        let mut ready: VecDeque<NodeId> = (0..n)
+            .filter(|&i| affected[i] && in_deg[i] == 0)
+            .map(NodeId)
+            .collect();
+        let mut order = Vec::new();
+        while let Some(node) = ready.pop_front() {
+            order.push(node);
+            for &dep in &self.nodes[node.0].dependents {
+                if affected[dep.0] {
+                    in_deg[dep.0] -= 1;
+                    if in_deg[dep.0] == 0 {
+                        ready.push_back(dep);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(
+            order.len(),
+            affected.iter().filter(|&&a| a).count(),
+            "cycle in DDG"
+        );
+        order
+    }
+
+    /// Nodes *not* affected by the change set — the reuse set.
+    pub fn reusable(&self, changed: &[NodeId]) -> Vec<NodeId> {
+        let affected: std::collections::HashSet<NodeId> =
+            self.propagate(changed).into_iter().collect();
+        (0..self.nodes.len())
+            .map(NodeId)
+            .filter(|id| !affected.contains(id))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build the Figure 3.1 graph: 6 maps, 5 reduces.
+    /// M0 (removed), M1..M4 reused, M5/M6 new.
+    /// Edges: M0→R3, M1→R1, M2→{R1,R2}, M3→R4, M4→{R2,R4}, M5→{R3,R5}, M6→R5.
+    fn figure_3_1() -> (Ddg, Vec<NodeId>, Vec<NodeId>) {
+        let mut g = Ddg::new();
+        let maps: Vec<NodeId> =
+            (0..7).map(|i| g.add_node(NodeKind::Map { chunk_hash: i })).collect();
+        let reduces: Vec<NodeId> =
+            (1..=5).map(|i| g.add_node(NodeKind::Reduce { group: i })).collect();
+        let r = |i: usize| reduces[i - 1];
+        g.add_edge(maps[0], r(3));
+        g.add_edge(maps[1], r(1));
+        g.add_edge(maps[2], r(1));
+        g.add_edge(maps[2], r(2));
+        g.add_edge(maps[3], r(4));
+        g.add_edge(maps[4], r(2));
+        g.add_edge(maps[4], r(4));
+        g.add_edge(maps[5], r(3));
+        g.add_edge(maps[5], r(5));
+        g.add_edge(maps[6], r(5));
+        (g, maps, reduces)
+    }
+
+    #[test]
+    fn figure_3_1_change_propagation() {
+        let (g, maps, reduces) = figure_3_1();
+        // Changes: M0 removed, M5 and M6 newly computed.
+        let affected = g.propagate(&[maps[0], maps[5], maps[6]]);
+        let affected: std::collections::HashSet<NodeId> = affected.into_iter().collect();
+        // R3 and R5 re-execute; R1, R2, R4 are reused.
+        assert!(affected.contains(&reduces[2])); // R3
+        assert!(affected.contains(&reduces[4])); // R5
+        assert!(!affected.contains(&reduces[0])); // R1
+        assert!(!affected.contains(&reduces[1])); // R2
+        assert!(!affected.contains(&reduces[3])); // R4
+    }
+
+    #[test]
+    fn reusable_is_complement() {
+        let (g, maps, _) = figure_3_1();
+        let changed = vec![maps[0], maps[5], maps[6]];
+        let affected = g.propagate(&changed);
+        let reusable = g.reusable(&changed);
+        assert_eq!(affected.len() + reusable.len(), g.len());
+    }
+
+    #[test]
+    fn topological_order_respected() {
+        let mut g = Ddg::new();
+        let a = g.add_node(NodeKind::Map { chunk_hash: 0 });
+        let b = g.add_node(NodeKind::Reduce { group: 0 });
+        let c = g.add_node(NodeKind::Output);
+        g.add_edge(a, b);
+        g.add_edge(b, c);
+        let order = g.propagate(&[a]);
+        assert_eq!(order, vec![a, b, c]);
+    }
+
+    #[test]
+    fn diamond_visits_once() {
+        let mut g = Ddg::new();
+        let src = g.add_node(NodeKind::Map { chunk_hash: 0 });
+        let l = g.add_node(NodeKind::Reduce { group: 0 });
+        let r = g.add_node(NodeKind::Reduce { group: 1 });
+        let sink = g.add_node(NodeKind::Output);
+        g.add_edge(src, l);
+        g.add_edge(src, r);
+        g.add_edge(l, sink);
+        g.add_edge(r, sink);
+        let order = g.propagate(&[src]);
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], src);
+        assert_eq!(*order.last().unwrap(), sink);
+    }
+
+    #[test]
+    fn no_changes_no_work() {
+        let (g, _, _) = figure_3_1();
+        assert!(g.propagate(&[]).is_empty());
+        assert_eq!(g.reusable(&[]).len(), g.len());
+    }
+
+    #[test]
+    fn duplicate_changes_deduped() {
+        let (g, maps, _) = figure_3_1();
+        let a = g.propagate(&[maps[5], maps[5], maps[5]]);
+        let b = g.propagate(&[maps[5]]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-dependency")]
+    fn self_edge_rejected() {
+        let mut g = Ddg::new();
+        let a = g.add_node(NodeKind::Output);
+        g.add_edge(a, a);
+    }
+}

@@ -1,0 +1,278 @@
+//! The memoization store.
+//!
+//! Holds (i) per-chunk sub-computation results keyed by stable content
+//! hash — the map-task memo of Figure 3.1 — and (ii) the per-stratum item
+//! lists of the previous window's biased sample, which Algorithm 4 biases
+//! the next sample toward. Algorithm 1's first step (drop items older
+//! than the window start *and the dependent results*) is
+//! [`MemoStore::evict_older_than`].
+
+use std::collections::BTreeMap;
+
+use crate::util::hash::FastMap;
+
+use crate::job::moments::Moments;
+use crate::workload::record::{Record, StratumId};
+
+/// A memoized map-task result.
+#[derive(Debug, Clone)]
+pub struct MemoEntry {
+    /// The chunk's moments.
+    pub moments: Moments,
+    /// Earliest item timestamp in the chunk (eviction key).
+    pub min_timestamp: u64,
+    /// Window that produced the entry (diagnostics / LRU-ish eviction).
+    pub window_id: u64,
+}
+
+/// Hit/miss counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Chunk lookups that found a memoized result.
+    pub hits: u64,
+    /// Chunk lookups that required fresh execution.
+    pub misses: u64,
+    /// Entries evicted because they aged out of the window.
+    pub evicted: u64,
+}
+
+impl MemoStats {
+    /// hits / (hits + misses), 0 when empty.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A full copy of the store's state, for replication-based recovery
+/// (§6.3 option iii).
+#[derive(Debug, Clone, Default)]
+pub struct MemoSnapshot {
+    chunks: FastMap<u64, MemoEntry>,
+    items: BTreeMap<StratumId, Vec<Record>>,
+    stratum_moments: BTreeMap<StratumId, Moments>,
+}
+
+/// The memoization store of one coordinator.
+#[derive(Debug, Default)]
+pub struct MemoStore {
+    chunks: FastMap<u64, MemoEntry>,
+    /// Items of the previous window's biased sample, per stratum —
+    /// Algorithm 1's `memo` list.
+    items: BTreeMap<StratumId, Vec<Record>>,
+    /// Combined per-stratum moments of the previous window's sample —
+    /// the state the §4.2.2 reduce/inverse-reduce path updates.
+    stratum_moments: BTreeMap<StratumId, Moments>,
+    stats: MemoStats,
+}
+
+impl MemoStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up a chunk result by content hash (counts hit/miss).
+    pub fn get_chunk(&mut self, hash: u64) -> Option<Moments> {
+        match self.chunks.get(&hash) {
+            Some(e) => {
+                self.stats.hits += 1;
+                Some(e.moments)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching counters (planning phase).
+    pub fn contains_chunk(&self, hash: u64) -> bool {
+        self.chunks.contains_key(&hash)
+    }
+
+    /// Memoize one chunk result.
+    pub fn put_chunk(&mut self, hash: u64, moments: Moments, min_timestamp: u64, window_id: u64) {
+        self.chunks.insert(hash, MemoEntry { moments, min_timestamp, window_id });
+    }
+
+    /// Replace the memoized item lists with this window's biased sample
+    /// (Algorithm 1's `memo ← memoize(biasedSample)`).
+    pub fn memoize_items(&mut self, per_stratum: &BTreeMap<StratumId, Vec<Record>>) {
+        self.items = per_stratum.clone();
+    }
+
+    /// All memoized items, pre-eviction — the inverse-reduce path diffs
+    /// the new sample against this to find added/removed items.
+    pub fn items_all(&self) -> BTreeMap<StratumId, Vec<Record>> {
+        self.items.clone()
+    }
+
+    /// Per-stratum combined moments of the previous window's sample.
+    pub fn stratum_moments(&self, s: StratumId) -> Option<Moments> {
+        self.stratum_moments.get(&s).copied()
+    }
+
+    /// Store a stratum's combined moments for the next window's
+    /// inverse-reduce update.
+    pub fn put_stratum_moments(&mut self, s: StratumId, m: Moments) {
+        self.stratum_moments.insert(s, m);
+    }
+
+    /// Memoized items still valid for biasing the next window: items with
+    /// `timestamp ≥ window_start` (older ones just aged out).
+    pub fn items_for_bias(&self, window_start: u64) -> BTreeMap<StratumId, Vec<Record>> {
+        let mut out = BTreeMap::new();
+        for (&s, recs) in &self.items {
+            let valid: Vec<Record> =
+                recs.iter().filter(|r| r.timestamp >= window_start).copied().collect();
+            if !valid.is_empty() {
+                out.insert(s, valid);
+            }
+        }
+        out
+    }
+
+    /// Algorithm 1's eviction: drop memoized items older than `t` and all
+    /// chunk results whose input contains such items.
+    pub fn evict_older_than(&mut self, t: u64) {
+        for recs in self.items.values_mut() {
+            recs.retain(|r| r.timestamp >= t);
+        }
+        self.items.retain(|_, recs| !recs.is_empty());
+        let before = self.chunks.len();
+        self.chunks.retain(|_, e| e.min_timestamp >= t);
+        self.stats.evicted += (before - self.chunks.len()) as u64;
+    }
+
+    /// Drop every chunk whose producing window is older than
+    /// `min_window_id` — a size-bounding secondary eviction for workloads
+    /// with sparse timestamps.
+    pub fn evict_windows_before(&mut self, min_window_id: u64) {
+        let before = self.chunks.len();
+        self.chunks.retain(|_, e| e.window_id >= min_window_id);
+        self.stats.evicted += (before - self.chunks.len()) as u64;
+    }
+
+    /// Lose everything (fault injection / §6.3).
+    pub fn clear(&mut self) {
+        self.chunks.clear();
+        self.items.clear();
+        self.stratum_moments.clear();
+    }
+
+    /// Snapshot for replication-based recovery (§6.3 option iii).
+    pub fn snapshot(&self) -> MemoSnapshot {
+        MemoSnapshot {
+            chunks: self.chunks.clone(),
+            items: self.items.clone(),
+            stratum_moments: self.stratum_moments.clone(),
+        }
+    }
+
+    /// Restore from a snapshot.
+    pub fn restore(&mut self, snap: MemoSnapshot) {
+        self.chunks = snap.chunks;
+        self.items = snap.items;
+        self.stratum_moments = snap.stratum_moments;
+    }
+
+    /// Number of memoized chunk results.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Total memoized items across strata.
+    pub fn item_count(&self) -> usize {
+        self.items.values().map(Vec::len).sum()
+    }
+
+    /// Counters.
+    pub fn stats(&self) -> MemoStats {
+        self.stats
+    }
+
+    /// Reset counters (per-experiment isolation).
+    pub fn reset_stats(&mut self) {
+        self.stats = MemoStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, stratum: StratumId, ts: u64) -> Record {
+        Record::new(id, stratum, ts, 0, id as f64)
+    }
+
+    #[test]
+    fn chunk_hit_miss_accounting() {
+        let mut m = MemoStore::new();
+        assert_eq!(m.get_chunk(1), None);
+        m.put_chunk(1, Moments::from_values(&[1.0]), 0, 0);
+        assert!(m.get_chunk(1).is_some());
+        assert_eq!(m.stats(), MemoStats { hits: 1, misses: 1, evicted: 0 });
+        assert!((m.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_by_timestamp() {
+        let mut m = MemoStore::new();
+        m.put_chunk(1, Moments::EMPTY, 5, 0);
+        m.put_chunk(2, Moments::EMPTY, 15, 0);
+        m.evict_older_than(10);
+        assert!(!m.contains_chunk(1));
+        assert!(m.contains_chunk(2));
+        assert_eq!(m.stats().evicted, 1);
+    }
+
+    #[test]
+    fn items_for_bias_filters_by_window_start() {
+        let mut m = MemoStore::new();
+        let items = BTreeMap::from([
+            (0u32, vec![rec(1, 0, 5), rec(2, 0, 20)]),
+            (1u32, vec![rec(3, 1, 2)]),
+        ]);
+        m.memoize_items(&items);
+        let valid = m.items_for_bias(10);
+        assert_eq!(valid.len(), 1);
+        assert_eq!(valid[&0].len(), 1);
+        assert_eq!(valid[&0][0].id, 2);
+    }
+
+    #[test]
+    fn evict_older_than_prunes_item_lists_too() {
+        let mut m = MemoStore::new();
+        m.memoize_items(&BTreeMap::from([(0u32, vec![rec(1, 0, 5), rec(2, 0, 20)])]));
+        m.evict_older_than(10);
+        assert_eq!(m.item_count(), 1);
+    }
+
+    #[test]
+    fn window_id_eviction() {
+        let mut m = MemoStore::new();
+        m.put_chunk(1, Moments::EMPTY, 0, 3);
+        m.put_chunk(2, Moments::EMPTY, 0, 7);
+        m.evict_windows_before(5);
+        assert!(!m.contains_chunk(1));
+        assert!(m.contains_chunk(2));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut m = MemoStore::new();
+        m.put_chunk(1, Moments::from_values(&[2.0]), 0, 0);
+        m.memoize_items(&BTreeMap::from([(0u32, vec![rec(1, 0, 0)])]));
+        let snap = m.snapshot();
+        m.clear();
+        assert_eq!(m.chunk_count(), 0);
+        m.restore(snap);
+        assert_eq!(m.chunk_count(), 1);
+        assert_eq!(m.item_count(), 1);
+    }
+}

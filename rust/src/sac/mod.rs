@@ -1,0 +1,16 @@
+//! Self-adjusting computation (§3.4) — the incremental half of the
+//! marriage.
+//!
+//! * [`ddg`] — the dynamic dependence graph: sub-computations as nodes,
+//!   data/control dependencies as edges, and change propagation that
+//!   marks exactly the transitively affected nodes for re-execution.
+//! * [`memo`] — the memoization store: per-chunk sub-computation results
+//!   keyed by stable content hash, plus the per-stratum item lists the
+//!   biased sampler draws from; eviction of out-of-window entries
+//!   (Algorithm 1's `memo.remove(element)` step).
+
+pub mod ddg;
+pub mod memo;
+
+pub use ddg::{Ddg, NodeId, NodeKind};
+pub use memo::{MemoEntry, MemoSnapshot, MemoStats, MemoStore};

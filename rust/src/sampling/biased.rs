@@ -1,0 +1,208 @@
+//! Biased sampling — Algorithm 4, the marriage of the two paradigms.
+//!
+//! Per stratum, replace stratified-sample items with *memoized* items from
+//! the previous window so their sub-computations can be reused, while
+//! keeping the per-stratum sample size fixed (proportional allocation is
+//! retained). A `HashSet` over item ids guards against duplicates when the
+//! fresh sample already contains some memoized items (issue (iii) in
+//! §3.3.1).
+
+use std::collections::BTreeMap;
+
+use crate::util::hash::FastSet;
+
+use crate::sampling::stratified::StratifiedSample;
+use crate::workload::record::{Record, StratumId};
+
+/// Result of biasing one window's stratified sample.
+#[derive(Debug, Clone, Default)]
+pub struct BiasOutcome {
+    /// The biased sample, per stratum. Sizes match the input stratified
+    /// sample exactly.
+    pub per_stratum: BTreeMap<StratumId, Vec<Record>>,
+    /// Per stratum: how many items in the biased sample carry memoized
+    /// results (the reuse the marriage buys — what Fig 5.1 measures).
+    pub memo_reused: BTreeMap<StratumId, usize>,
+    /// Per stratum: memoized items available before biasing.
+    pub memo_available: BTreeMap<StratumId, usize>,
+}
+
+impl BiasOutcome {
+    /// Total biased-sample size.
+    pub fn total_len(&self) -> usize {
+        self.per_stratum.values().map(Vec::len).sum()
+    }
+
+    /// Total memoized items reused.
+    pub fn total_reused(&self) -> usize {
+        self.memo_reused.values().sum()
+    }
+
+    /// Reuse fraction over the whole sample.
+    pub fn reuse_fraction(&self) -> f64 {
+        let n = self.total_len();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_reused() as f64 / n as f64
+        }
+    }
+
+    /// Items of one stratum.
+    pub fn stratum(&self, s: StratumId) -> &[Record] {
+        self.per_stratum.get(&s).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Flatten to a single vector (stratum order, deterministic).
+    pub fn all_items(&self) -> Vec<Record> {
+        self.per_stratum.values().flatten().copied().collect()
+    }
+}
+
+/// Algorithm 4: bias `sample` toward `memo` per stratum.
+///
+/// `memo` maps stratum → items memoized from the previous window **that
+/// are still inside the current window** (Algorithm 1 drops out-of-window
+/// memo entries before calling this).
+///
+/// Per stratum with `x` memoized items and sample size `y`:
+/// * `x ≥ y` → biased sample = first `y` memoized items (extra memo
+///   neglected);
+/// * `x < y` → all `x` memoized items + `y − x` fresh sampled items,
+///   skipping duplicates by item id.
+pub fn bias_sample(
+    sample: &StratifiedSample,
+    memo: &BTreeMap<StratumId, Vec<Record>>,
+) -> BiasOutcome {
+    let mut out = BiasOutcome::default();
+    for (&stratum, fresh) in &sample.per_stratum {
+        let y = fresh.len();
+        let memoized: &[Record] = memo.get(&stratum).map(Vec::as_slice).unwrap_or(&[]);
+        let x = memoized.len();
+        out.memo_available.insert(stratum, x);
+
+        let mut chosen: Vec<Record> = Vec::with_capacity(y);
+        let mut seen: FastSet<u64> = FastSet::with_capacity_and_hasher(y, Default::default());
+
+        // Give priority to memoized items (they carry reusable results).
+        for m in memoized.iter().take(y) {
+            if seen.insert(m.id) {
+                chosen.push(*m);
+            }
+        }
+        let reused = chosen.len();
+
+        // Fill the remainder from the fresh stratified sample, deduped.
+        if chosen.len() < y {
+            for f in fresh {
+                if chosen.len() >= y {
+                    break;
+                }
+                if seen.insert(f.id) {
+                    chosen.push(*f);
+                }
+            }
+        }
+
+        debug_assert_eq!(chosen.len(), y, "bias must preserve per-stratum size");
+        out.memo_reused.insert(stratum, reused);
+        out.per_stratum.insert(stratum, chosen);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, stratum: StratumId) -> Record {
+        Record::new(id, stratum, 0, 0, id as f64)
+    }
+
+    fn sample_of(items: Vec<(StratumId, Vec<u64>)>) -> StratifiedSample {
+        let mut s = StratifiedSample::default();
+        for (stratum, ids) in items {
+            s.population.insert(stratum, ids.len() as u64 * 10);
+            s.per_stratum
+                .insert(stratum, ids.into_iter().map(|i| rec(i, stratum)).collect());
+        }
+        s
+    }
+
+    #[test]
+    fn more_memo_than_sample_takes_y_memo_items() {
+        let sample = sample_of(vec![(0, vec![1, 2, 3])]);
+        let memo =
+            BTreeMap::from([(0, vec![rec(10, 0), rec(11, 0), rec(12, 0), rec(13, 0)])]);
+        let out = bias_sample(&sample, &memo);
+        assert_eq!(out.stratum(0).len(), 3);
+        assert_eq!(out.memo_reused[&0], 3);
+        assert!(out.stratum(0).iter().all(|r| r.id >= 10));
+    }
+
+    #[test]
+    fn fewer_memo_than_sample_fills_from_fresh() {
+        let sample = sample_of(vec![(0, vec![1, 2, 3, 4])]);
+        let memo = BTreeMap::from([(0, vec![rec(10, 0)])]);
+        let out = bias_sample(&sample, &memo);
+        assert_eq!(out.stratum(0).len(), 4);
+        assert_eq!(out.memo_reused[&0], 1);
+        let ids: Vec<u64> = out.stratum(0).iter().map(|r| r.id).collect();
+        assert!(ids.contains(&10));
+    }
+
+    #[test]
+    fn duplicates_between_memo_and_fresh_removed() {
+        // Fresh sample already contains memoized item 2.
+        let sample = sample_of(vec![(0, vec![1, 2, 3])]);
+        let memo = BTreeMap::from([(0, vec![rec(2, 0)])]);
+        let out = bias_sample(&sample, &memo);
+        let mut ids: Vec<u64> = out.stratum(0).iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert_eq!(out.memo_reused[&0], 1);
+    }
+
+    #[test]
+    fn no_memo_returns_fresh_sample() {
+        let sample = sample_of(vec![(0, vec![1, 2]), (1, vec![3])]);
+        let out = bias_sample(&sample, &BTreeMap::new());
+        assert_eq!(out.total_reused(), 0);
+        assert_eq!(out.total_len(), 3);
+        assert_eq!(out.reuse_fraction(), 0.0);
+    }
+
+    #[test]
+    fn per_stratum_sizes_preserved() {
+        let sample = sample_of(vec![(0, vec![1, 2, 3]), (1, vec![4, 5]), (2, vec![6])]);
+        let memo = BTreeMap::from([
+            (0, vec![rec(10, 0), rec(11, 0), rec(12, 0), rec(13, 0), rec(14, 0)]),
+            (2, vec![rec(20, 2)]),
+        ]);
+        let out = bias_sample(&sample, &memo);
+        assert_eq!(out.stratum(0).len(), 3);
+        assert_eq!(out.stratum(1).len(), 2);
+        assert_eq!(out.stratum(2).len(), 1);
+        assert_eq!(out.memo_reused[&0], 3);
+        assert_eq!(out.memo_reused[&1], 0);
+        assert_eq!(out.memo_reused[&2], 1);
+        assert_eq!(out.memo_available[&0], 5);
+    }
+
+    #[test]
+    fn biasing_is_per_stratum_no_cross_contamination() {
+        // Memo items of stratum 1 must never enter stratum 0's sample.
+        let sample = sample_of(vec![(0, vec![1, 2])]);
+        let memo = BTreeMap::from([(1, vec![rec(10, 1)])]);
+        let out = bias_sample(&sample, &memo);
+        assert!(out.stratum(0).iter().all(|r| r.stratum == 0));
+        assert_eq!(out.memo_reused.get(&1), None);
+    }
+
+    #[test]
+    fn empty_sample_is_empty_outcome() {
+        let out = bias_sample(&StratifiedSample::default(), &BTreeMap::new());
+        assert_eq!(out.total_len(), 0);
+        assert_eq!(out.reuse_fraction(), 0.0);
+    }
+}

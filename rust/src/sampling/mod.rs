@@ -1,0 +1,16 @@
+//! Online sampling — the approximate half of the marriage.
+//!
+//! * [`reservoir`] — conventional reservoir sampling (CRS), Algorithm 3.
+//! * [`stratified`] — stratified reservoir sampling with periodic
+//!   proportional re-allocation and adaptive resizing (ARS), Algorithm 2 +
+//!   Eq 3.1.
+//! * [`biased`] — the marriage itself: per-stratum biasing of the
+//!   stratified sample toward memoized items, Algorithm 4.
+
+pub mod biased;
+pub mod reservoir;
+pub mod stratified;
+
+pub use biased::{bias_sample, BiasOutcome};
+pub use reservoir::Reservoir;
+pub use stratified::{StratifiedSample, StratifiedSampler};

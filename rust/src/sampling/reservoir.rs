@@ -1,0 +1,192 @@
+//! Conventional reservoir sampling (CRS) — Algorithm 3's `CRS` subroutine.
+//!
+//! Algorithm R over a stream of unknown length: keep a fixed-capacity
+//! uniform random sample without replacement. Each arriving item is
+//! accepted with probability `capacity / seen` and, if accepted, replaces
+//! a uniformly random resident.
+
+use crate::util::rng::Rng;
+use crate::workload::record::Record;
+
+/// A fixed-capacity uniform reservoir over one stratum's sub-stream.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    items: Vec<Record>,
+    capacity: usize,
+    /// Items of this stratum seen so far (|S_i| in the paper).
+    seen: u64,
+}
+
+impl Reservoir {
+    /// Empty reservoir with the given capacity.
+    pub fn new(capacity: usize) -> Self {
+        Reservoir { items: Vec::with_capacity(capacity), capacity, seen: 0 }
+    }
+
+    /// Offer one item (counts toward `seen`); fills until capacity, then
+    /// does probabilistic replacement. Returns true if retained.
+    pub fn offer(&mut self, item: Record, rng: &mut Rng) -> bool {
+        self.seen += 1;
+        if self.items.len() < self.capacity {
+            self.items.push(item);
+            return true;
+        }
+        if self.capacity == 0 {
+            return false;
+        }
+        // Inclusion probability |sample[i]| / |S_i|.
+        let p = self.capacity as f64 / self.seen as f64;
+        if rng.bernoulli(p) {
+            let victim = rng.below(self.items.len());
+            self.items[victim] = item;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Insert unconditionally (the ARS grow path — Algorithm 3's
+    /// `sample[i].add(incomingItems.get(j))`), raising capacity if needed.
+    pub fn force_insert(&mut self, item: Record) {
+        self.seen += 1;
+        if self.items.len() >= self.capacity {
+            self.capacity = self.items.len() + 1;
+        }
+        self.items.push(item);
+    }
+
+    /// Evict `c` uniformly random residents (the ARS shrink path) and
+    /// lower capacity accordingly. Returns the evicted items.
+    pub fn evict_random(&mut self, c: usize, rng: &mut Rng) -> Vec<Record> {
+        let c = c.min(self.items.len());
+        let mut evicted = Vec::with_capacity(c);
+        for _ in 0..c {
+            let victim = rng.below(self.items.len());
+            evicted.push(self.items.swap_remove(victim));
+        }
+        self.capacity = self.capacity.saturating_sub(c);
+        evicted
+    }
+
+    /// Change capacity without touching residents (grow) — residents above
+    /// a *smaller* capacity must be evicted by the caller via
+    /// [`Reservoir::evict_random`] so the eviction is random, not biased.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity;
+    }
+
+    /// Current sample (unordered).
+    pub fn items(&self) -> &[Record] {
+        &self.items
+    }
+
+    /// Number of retained items.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when nothing retained.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Stream length observed so far.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64) -> Record {
+        Record::new(id, 0, 0, 0, id as f64)
+    }
+
+    #[test]
+    fn fills_to_capacity_first() {
+        let mut r = Reservoir::new(5);
+        let mut rng = Rng::new(1);
+        for i in 0..5 {
+            assert!(r.offer(rec(i), &mut rng));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.seen(), 5);
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        let mut r = Reservoir::new(10);
+        let mut rng = Rng::new(2);
+        for i in 0..1000 {
+            r.offer(rec(i), &mut rng);
+        }
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.seen(), 1000);
+    }
+
+    #[test]
+    fn uniform_inclusion_probability() {
+        // Every item of a length-n stream should appear with p = k/n.
+        let (k, n, trials) = (10usize, 100u64, 3000usize);
+        let mut counts = vec![0u32; n as usize];
+        let mut rng = Rng::new(3);
+        for _ in 0..trials {
+            let mut r = Reservoir::new(k);
+            for i in 0..n {
+                r.offer(rec(i), &mut rng);
+            }
+            for item in r.items() {
+                counts[item.id as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64; // 300
+        for (id, &c) in counts.iter().enumerate() {
+            let z = (c as f64 - expect) / (expect * (1.0 - k as f64 / n as f64)).sqrt();
+            assert!(z.abs() < 5.0, "item {id}: count {c}, z={z}");
+        }
+    }
+
+    #[test]
+    fn zero_capacity_rejects_all() {
+        let mut r = Reservoir::new(0);
+        let mut rng = Rng::new(4);
+        assert!(!r.offer(rec(1), &mut rng));
+        assert_eq!(r.len(), 0);
+    }
+
+    #[test]
+    fn evict_random_shrinks() {
+        let mut r = Reservoir::new(10);
+        let mut rng = Rng::new(5);
+        for i in 0..10 {
+            r.offer(rec(i), &mut rng);
+        }
+        let evicted = r.evict_random(4, &mut rng);
+        assert_eq!(evicted.len(), 4);
+        assert_eq!(r.len(), 6);
+        assert_eq!(r.capacity(), 6);
+        // Evicting more than resident clamps.
+        let evicted = r.evict_random(100, &mut rng);
+        assert_eq!(evicted.len(), 6);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn force_insert_grows() {
+        let mut r = Reservoir::new(2);
+        let mut rng = Rng::new(6);
+        for i in 0..2 {
+            r.offer(rec(i), &mut rng);
+        }
+        r.force_insert(rec(99));
+        assert_eq!(r.len(), 3);
+        assert!(r.capacity() >= 3);
+    }
+}

@@ -1,0 +1,390 @@
+//! Stratified reservoir sampling — the paper's Algorithm 2.
+//!
+//! One pass over the window's items. The reservoir of total size
+//! `sample_size` is a group of per-stratum sub-reservoirs. Phases:
+//!
+//! 1. **Fill** — until the whole reservoir holds `sample_size` items,
+//!    every item is admitted to its stratum's sub-reservoir.
+//! 2. **Steady state** — conventional reservoir sampling (CRS) per
+//!    stratum, with a periodic re-allocation every `T` items seen:
+//!    sub-reservoir sizes are recomputed proportionally (Eq 3.1,
+//!    `|sample[i]| = sample_size · |S_i| / k`), and strata whose size
+//!    changed go through adaptive reservoir sampling (ARS): shrink =
+//!    evict uniformly random residents now; grow = admit the next `c`
+//!    arriving items of that stratum unconditionally.
+//!
+//! New strata appearing mid-window are picked up and receive capacity at
+//! the next re-allocation (guaranteed non-zero share — "no sub-stream is
+//! neglected").
+
+use std::collections::BTreeMap;
+
+use crate::sampling::reservoir::Reservoir;
+use crate::util::rng::Rng;
+use crate::workload::record::{Record, StratumId};
+
+/// Per-stratum state: the sub-reservoir plus the ARS pending-grow credit.
+#[derive(Debug)]
+struct SubState {
+    reservoir: Reservoir,
+    /// Items this stratum may still admit unconditionally (ARS grow).
+    pending_grow: usize,
+}
+
+/// The resulting stratified sample of one window.
+#[derive(Debug, Clone, Default)]
+pub struct StratifiedSample {
+    /// Per-stratum sampled items.
+    pub per_stratum: BTreeMap<StratumId, Vec<Record>>,
+    /// Per-stratum count of items *seen* in the window (|S_i| — the
+    /// population sizes B_i the error estimator needs).
+    pub population: BTreeMap<StratumId, u64>,
+}
+
+impl StratifiedSample {
+    /// Total sampled items across strata.
+    pub fn total_len(&self) -> usize {
+        self.per_stratum.values().map(Vec::len).sum()
+    }
+
+    /// Sampled items of one stratum (empty slice if absent).
+    pub fn stratum(&self, s: StratumId) -> &[Record] {
+        self.per_stratum.get(&s).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+/// Streaming stratified reservoir sampler (one instance per window).
+#[derive(Debug)]
+pub struct StratifiedSampler {
+    sample_size: usize,
+    realloc_interval: usize,
+    sub: BTreeMap<StratumId, SubState>,
+    /// Total items seen in the window so far (k in Eq 3.1).
+    total_seen: u64,
+    seen_since_realloc: usize,
+    /// Running count of retained items — kept incrementally so the
+    /// per-item hot path never walks all strata (perf: §Perf L3.1).
+    retained: usize,
+    /// Set once the reservoir first reaches `sample_size`. The fill phase
+    /// must not re-trigger after a re-allocation shrink — top-ups then
+    /// belong exclusively to the ARS grow credits, otherwise the two
+    /// mechanisms race and overshoot the budget.
+    filled: bool,
+    rng: Rng,
+}
+
+impl StratifiedSampler {
+    /// Sampler for a window, with reservoir size `sample_size` and
+    /// re-allocation interval `realloc_interval` (Algorithm 2's `T`).
+    pub fn new(sample_size: usize, realloc_interval: usize, rng: Rng) -> Self {
+        StratifiedSampler {
+            sample_size,
+            realloc_interval: realloc_interval.max(1),
+            sub: BTreeMap::new(),
+            total_seen: 0,
+            seen_since_realloc: 0,
+            retained: 0,
+            filled: false,
+            rng,
+        }
+    }
+
+    /// Retained items across all sub-reservoirs (O(strata); the hot path
+    /// uses the incrementally maintained `retained` counter instead, and
+    /// debug assertions cross-check the two).
+    #[cfg(debug_assertions)]
+    fn reservoir_total(&self) -> usize {
+        self.sub.values().map(|s| s.reservoir.len()).sum()
+    }
+
+    /// Eq 3.1 with largest-remainder rounding so capacities sum to exactly
+    /// `sample_size` and every *seen* stratum keeps at least one slot
+    /// (minority protection) when the budget allows.
+    fn proportional_capacities(&self) -> BTreeMap<StratumId, usize> {
+        let k = self.total_seen as f64;
+        let n_strata = self.sub.len();
+        if k == 0.0 || n_strata == 0 {
+            return BTreeMap::new();
+        }
+        let budget = self.sample_size;
+        // Ideal fractional shares.
+        let mut shares: Vec<(StratumId, f64)> = self
+            .sub
+            .iter()
+            .map(|(&s, st)| (s, budget as f64 * st.reservoir.seen() as f64 / k))
+            .collect();
+        // Floor + largest remainder.
+        let mut caps: BTreeMap<StratumId, usize> =
+            shares.iter().map(|&(s, f)| (s, f.floor() as usize)).collect();
+        let assigned: usize = caps.values().sum();
+        let mut leftover = budget.saturating_sub(assigned);
+        shares.sort_by(|a, b| {
+            let fa = a.1 - a.1.floor();
+            let fb = b.1 - b.1.floor();
+            fb.partial_cmp(&fa).unwrap().then(a.0.cmp(&b.0))
+        });
+        for (s, _) in shares {
+            if leftover == 0 {
+                break;
+            }
+            *caps.get_mut(&s).expect("stratum present") += 1;
+            leftover -= 1;
+        }
+        // Minority protection: every seen stratum gets ≥ 1 slot if possible,
+        // taking slots from the largest allocations.
+        if budget >= n_strata {
+            loop {
+                let zero: Vec<StratumId> =
+                    caps.iter().filter(|(_, &c)| c == 0).map(|(&s, _)| s).collect();
+                if zero.is_empty() {
+                    break;
+                }
+                for s in zero {
+                    let (&donor, _) = caps
+                        .iter()
+                        .max_by_key(|(_, &c)| c)
+                        .expect("non-empty caps");
+                    if caps[&donor] <= 1 {
+                        break;
+                    }
+                    *caps.get_mut(&donor).expect("donor") -= 1;
+                    *caps.get_mut(&s).expect("stratum") += 1;
+                }
+            }
+        }
+        caps
+    }
+
+    /// Re-allocate sub-reservoir sizes (the `T`-interval branch of
+    /// Algorithm 2): shrink via random eviction now, grow via ARS credit.
+    fn reallocate(&mut self) {
+        let caps = self.proportional_capacities();
+        for (&s, cap) in &caps {
+            let st = self.sub.get_mut(&s).expect("stratum present");
+            let cur = st.reservoir.len();
+            if *cap < cur {
+                st.reservoir.evict_random(cur - *cap, &mut self.rng);
+                self.retained -= cur - *cap;
+                st.reservoir.set_capacity(*cap);
+                st.pending_grow = 0;
+            } else {
+                st.reservoir.set_capacity(*cap);
+                st.pending_grow = *cap - cur;
+            }
+        }
+    }
+
+    /// Offer the next item of the window stream.
+    pub fn offer(&mut self, item: Record) {
+        let stratum = item.stratum;
+        self.total_seen += 1;
+        self.seen_since_realloc += 1;
+
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(self.retained, self.reservoir_total());
+        // Add new stratum seen to S.
+        if !self.filled && self.retained >= self.sample_size {
+            self.filled = true;
+        }
+        let filling = !self.filled;
+        let st = self.sub.entry(stratum).or_insert_with(|| SubState {
+            reservoir: Reservoir::new(0),
+            pending_grow: 0,
+        });
+
+        if filling {
+            // Fill phase: admit unconditionally (only until the reservoir
+            // first becomes full).
+            st.reservoir.force_insert(item);
+            self.retained += 1;
+            return;
+        }
+
+        if st.pending_grow > 0 {
+            // ARS grow: admit the next arriving items of this stratum.
+            st.pending_grow -= 1;
+            st.reservoir.force_insert(item);
+            self.retained += 1;
+        } else {
+            // CRS replacement keeps the retained count constant.
+            st.reservoir.offer(item, &mut self.rng);
+        }
+
+        if self.seen_since_realloc >= self.realloc_interval {
+            self.seen_since_realloc = 0;
+            self.reallocate();
+        }
+    }
+
+    /// Offer a whole batch.
+    pub fn offer_all(&mut self, items: impl IntoIterator<Item = Record>) {
+        for item in items {
+            self.offer(item);
+        }
+    }
+
+    /// Finish the window and emit the sample.
+    ///
+    /// No final re-allocation is performed: an ARS *grow* credit issued at
+    /// window end could never be filled (no more incoming items), so a
+    /// terminal shrink/grow pass would only shed sample slots. The
+    /// periodic `T`-interval re-allocations already keep proportions
+    /// aligned with the whole-window stratum sizes (Algorithm 2's loop
+    /// invariant).
+    pub fn finish(self) -> StratifiedSample {
+        let mut out = StratifiedSample::default();
+        for (s, st) in self.sub {
+            out.population.insert(s, st.reservoir.seen());
+            out.per_stratum.insert(s, st.reservoir.items().to_vec());
+        }
+        out
+    }
+
+    /// One-shot convenience: sample a full window slice.
+    pub fn sample_window(
+        items: &[Record],
+        sample_size: usize,
+        realloc_interval: usize,
+        rng: Rng,
+    ) -> StratifiedSample {
+        let mut sampler = StratifiedSampler::new(sample_size, realloc_interval, rng);
+        sampler.offer_all(items.iter().copied());
+        sampler.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::MultiStream;
+
+    fn window(n: usize, seed: u64) -> Vec<Record> {
+        MultiStream::paper_section5(seed).take_records(n)
+    }
+
+    #[test]
+    fn sample_size_is_respected() {
+        let items = window(10_000, 1);
+        let s = StratifiedSampler::sample_window(&items[..10_000], 1000, 500, Rng::new(2));
+        assert_eq!(s.total_len(), 1000);
+    }
+
+    #[test]
+    fn proportional_allocation_matches_rates() {
+        // Rates 3:4:5 → sample shares ≈ 25%, 33%, 42%.
+        let items = window(12_000, 3);
+        let s = StratifiedSampler::sample_window(&items[..12_000], 1200, 500, Rng::new(4));
+        let total = s.total_len() as f64;
+        for (stratum, want) in [(0u32, 3.0 / 12.0), (1, 4.0 / 12.0), (2, 5.0 / 12.0)] {
+            let got = s.stratum(stratum).len() as f64 / total;
+            assert!(
+                (got - want).abs() < 0.03,
+                "stratum {stratum}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn population_counts_are_exact() {
+        let items = window(5_000, 5);
+        let items = &items[..5_000];
+        let s = StratifiedSampler::sample_window(items, 500, 250, Rng::new(6));
+        let mut true_counts: BTreeMap<StratumId, u64> = BTreeMap::new();
+        for r in items {
+            *true_counts.entry(r.stratum).or_default() += 1;
+        }
+        assert_eq!(s.population, true_counts);
+    }
+
+    #[test]
+    fn no_stratum_neglected() {
+        // A tiny minority stratum must still land in the sample.
+        let mut items = window(9_000, 7);
+        items.truncate(9_000);
+        for (i, r) in items.iter_mut().enumerate().take(9) {
+            // Make 9 items of a rare stratum 99, spread through the window.
+            if i % 1 == 0 {
+                r.stratum = 99;
+            }
+        }
+        let s = StratifiedSampler::sample_window(&items, 900, 300, Rng::new(8));
+        assert!(
+            !s.stratum(99).is_empty(),
+            "minority stratum neglected: {:?}",
+            s.per_stratum.keys().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn sampled_items_come_from_window() {
+        let items = window(4_000, 9);
+        let items = &items[..4_000];
+        let ids: std::collections::HashSet<u64> = items.iter().map(|r| r.id).collect();
+        let s = StratifiedSampler::sample_window(items, 400, 200, Rng::new(10));
+        for recs in s.per_stratum.values() {
+            for r in recs {
+                assert!(ids.contains(&r.id));
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicates_in_sample() {
+        let items = window(6_000, 11);
+        let s = StratifiedSampler::sample_window(&items[..6_000], 600, 300, Rng::new(12));
+        let mut ids: Vec<u64> =
+            s.per_stratum.values().flatten().map(|r| r.id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn sample_larger_than_window_keeps_everything() {
+        let items = window(300, 13);
+        let items = &items[..300];
+        let s = StratifiedSampler::sample_window(items, 1000, 100, Rng::new(14));
+        assert_eq!(s.total_len(), items.len());
+    }
+
+    #[test]
+    fn capacities_sum_to_sample_size() {
+        let mut sampler = StratifiedSampler::new(777, 100, Rng::new(15));
+        sampler.offer_all(window(3_000, 16).into_iter().take(3_000));
+        let caps = sampler.proportional_capacities();
+        assert_eq!(caps.values().sum::<usize>(), 777);
+    }
+
+    #[test]
+    fn late_stratum_gets_slots_after_realloc() {
+        // Stratum 5 appears only in the second half of the window.
+        let mut items = window(4_000, 17);
+        items.truncate(4_000);
+        for r in items.iter_mut().skip(2_000).take(1_000) {
+            r.stratum = 5;
+        }
+        let s = StratifiedSampler::sample_window(&items, 400, 200, Rng::new(18));
+        let share = s.stratum(5).len() as f64 / s.total_len() as f64;
+        // 1000/4000 = 25% of the window.
+        assert!(share > 0.15, "late stratum share {share}");
+    }
+
+    #[test]
+    fn uniformity_within_stratum() {
+        // Within one stratum, first-half and second-half items should be
+        // sampled at comparable rates (reservoir uniformity).
+        let n = 20_000;
+        let items: Vec<Record> =
+            (0..n).map(|i| Record::new(i as u64, 0, 0, 0, 1.0)).collect();
+        let mut first_half = 0usize;
+        let trials = 40;
+        for t in 0..trials {
+            let s =
+                StratifiedSampler::sample_window(&items, 1000, 500, Rng::new(100 + t));
+            first_half += s.stratum(0).iter().filter(|r| r.id < n as u64 / 2).count();
+        }
+        let frac = first_half as f64 / (trials as usize * 1000) as f64;
+        assert!((frac - 0.5).abs() < 0.05, "first-half fraction {frac}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Statistics: error estimation for the approximate output (§3.5).
+//!
+//! * [`special`] — ln-gamma and the regularized incomplete beta function
+//!   (the Apache-Commons-Math role, built from scratch).
+//! * [`tdist`] — Student-t CDF and inverse CDF (t-scores).
+//! * [`stratified`] — Eqs 3.2–3.4: the stratified total/mean estimators,
+//!   their estimated variance with finite-population correction, degrees
+//!   of freedom, and the `output ± error bound` confidence interval.
+
+pub mod special;
+pub mod stratified;
+pub mod tdist;
+
+pub use stratified::{estimate_mean, estimate_sum, Estimate, StratumAgg};
+pub use tdist::{t_cdf, t_quantile, t_score};

@@ -1,0 +1,184 @@
+//! Special functions: ln-gamma and the regularized incomplete beta.
+//!
+//! Implementations follow the classic Lanczos (g = 7) approximation and
+//! the Numerical-Recipes continued fraction (modified Lentz), accurate to
+//! ~1e-12 over the parameter ranges the t-distribution needs. Validated
+//! against scipy-generated fixtures in the tests.
+
+/// Lanczos coefficients, g = 7, n = 9.
+const LANCZOS: [f64; 9] = [
+    0.999_999_999_999_809_93,
+    676.520_368_121_885_1,
+    -1_259.139_216_722_402_8,
+    771.323_428_777_653_13,
+    -176.615_029_162_140_59,
+    12.507_343_278_686_905,
+    -0.138_571_095_265_720_12,
+    9.984_369_578_019_571_6e-6,
+    1.505_632_735_149_311_6e-7,
+];
+
+/// Natural log of the gamma function for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma needs x > 0, got {x}");
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1−x) = π / sin(πx).
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = LANCZOS[0];
+    for (i, &c) in LANCZOS.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+/// Continued fraction for the incomplete beta (NR `betacf`, modified
+/// Lentz method).
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 3e-16;
+    const FPMIN: f64 = 1e-300;
+
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // Even step.
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // Odd step.
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularized incomplete beta function I_x(a, b) for a, b > 0 and
+/// x ∈ [0, 1].
+pub fn inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0, "inc_beta needs a, b > 0");
+    assert!((0.0..=1.0).contains(&x), "inc_beta needs x in [0,1], got {x}");
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x == 1.0 {
+        return 1.0;
+    }
+    let ln_front =
+        ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(a, b, x) / a
+    } else {
+        1.0 - front * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol * b.abs().max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    fn ln_gamma_integer_factorials() {
+        // Γ(n) = (n−1)!
+        let facts = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0, 5040.0];
+        for (n, &f) in facts.iter().enumerate() {
+            close(ln_gamma((n + 1) as f64), (f as f64).ln(), 1e-12);
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        // Γ(1/2) = √π; Γ(3/2) = √π/2.
+        close(ln_gamma(0.5), std::f64::consts::PI.sqrt().ln(), 1e-12);
+        close(ln_gamma(1.5), (std::f64::consts::PI.sqrt() / 2.0).ln(), 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_scipy_fixtures() {
+        // scipy.special.gammaln values.
+        close(ln_gamma(10.3), 13.482036786138359, 1e-12);
+        close(ln_gamma(0.1), 2.252712651734206, 1e-12);
+        close(ln_gamma(123.456), 469.6055471299295, 1e-12);
+    }
+
+    #[test]
+    fn inc_beta_closed_forms() {
+        // I_x(1,1) = x.
+        for &x in &[0.0, 0.25, 0.5, 0.75, 1.0] {
+            close(inc_beta(1.0, 1.0, x), x, 1e-12);
+        }
+        // I_x(a,1) = x^a.
+        close(inc_beta(3.0, 1.0, 0.4), 0.4f64.powi(3), 1e-12);
+        // I_x(1,b) = 1 − (1−x)^b.
+        close(inc_beta(1.0, 4.0, 0.3), 1.0 - 0.7f64.powi(4), 1e-12);
+        // Symmetry point: I_0.5(a,a) = 0.5.
+        close(inc_beta(0.5, 0.5, 0.5), 0.5, 1e-12);
+        close(inc_beta(7.0, 7.0, 0.5), 0.5, 1e-12);
+    }
+
+    #[test]
+    fn inc_beta_scipy_fixtures() {
+        // scipy.special.betainc values.
+        close(inc_beta(2.0, 3.0, 0.4), 0.5248, 1e-10);
+        close(inc_beta(5.0, 2.0, 0.8), 0.65536, 1e-10);
+        close(inc_beta(0.5, 0.5, 0.3), 0.36901011956554536, 1e-10);
+        close(inc_beta(10.0, 10.0, 0.6), 0.8139079785845882, 1e-9);
+    }
+
+    #[test]
+    fn inc_beta_monotone_in_x() {
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let x = i as f64 / 100.0;
+            let v = inc_beta(3.5, 2.25, x);
+            assert!(v >= prev - 1e-14);
+            prev = v;
+        }
+        assert!((prev - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "x in [0,1]")]
+    fn inc_beta_domain_checked() {
+        inc_beta(1.0, 1.0, 1.5);
+    }
+}

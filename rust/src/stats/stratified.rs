@@ -1,0 +1,261 @@
+//! Stratified estimators and error bounds — the paper's Eqs 3.2–3.4.
+//!
+//! Given per-stratum sample aggregates (bᵢ, Σv, Σv²) and window
+//! populations Bᵢ, produce the estimated total τ̂ (or mean), its
+//! estimated variance with finite-population correction, the degrees of
+//! freedom `f = Σbᵢ − n`, and the confidence interval
+//! `output ± t_{f,1−α/2} · √V̂ar` (§3.5.2).
+
+use crate::error::{Error, Result};
+use crate::job::moments::Moments;
+use crate::stats::tdist::t_score;
+
+/// Per-stratum inputs to the estimator.
+#[derive(Debug, Clone, Copy)]
+pub struct StratumAgg {
+    /// Sample size bᵢ.
+    pub b: f64,
+    /// Σ of sampled values.
+    pub sum: f64,
+    /// Σ of squared sampled values.
+    pub sumsq: f64,
+    /// Window population Bᵢ (items seen in the stratum).
+    pub population: f64,
+}
+
+impl StratumAgg {
+    /// From a combined [`Moments`] plus the stratum population.
+    pub fn from_moments(m: &Moments, population: f64) -> Self {
+        StratumAgg { b: m.count, sum: m.sum, sumsq: m.sumsq, population }
+    }
+
+    /// Unbiased sample variance s²ᵢ.
+    pub fn sample_variance(&self) -> f64 {
+        if self.b < 2.0 {
+            return 0.0;
+        }
+        ((self.sumsq - self.sum * self.sum / self.b) / (self.b - 1.0)).max(0.0)
+    }
+}
+
+/// An approximate output with its confidence interval.
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    /// The point estimate (τ̂ for sums, μ̂ for means).
+    pub value: f64,
+    /// Margin of error ε: the interval is `value ± margin`.
+    pub margin: f64,
+    /// Estimated variance of the point estimate (Eq 3.4).
+    pub variance: f64,
+    /// Degrees of freedom `f = Σbᵢ − n` (Eq 3.3).
+    pub df: f64,
+    /// The t-score used.
+    pub t: f64,
+    /// The confidence level requested.
+    pub confidence: f64,
+}
+
+impl Estimate {
+    /// Lower bound of the interval.
+    pub fn lo(&self) -> f64 {
+        self.value - self.margin
+    }
+
+    /// Upper bound of the interval.
+    pub fn hi(&self) -> f64 {
+        self.value + self.margin
+    }
+
+    /// Relative error (margin / |value|); infinite for value = 0.
+    pub fn relative_error(&self) -> f64 {
+        if self.value == 0.0 {
+            if self.margin == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.margin / self.value.abs()
+        }
+    }
+}
+
+/// Estimate the population **total** τ (Eq 3.4 variance, Eq 3.2 bound).
+///
+/// Strata with bᵢ = 0 are skipped (their population was unobserved this
+/// window — the sampler guarantees this only happens for empty strata).
+/// When `f < 1` (every observed stratum has one sample), the most
+/// conservative df = 1 is used rather than failing the window.
+pub fn estimate_sum(strata: &[StratumAgg], confidence: f64) -> Result<Estimate> {
+    if !(0.0 < confidence && confidence < 1.0) {
+        return Err(Error::Stats(format!("confidence must be in (0,1), got {confidence}")));
+    }
+    let mut tau = 0.0;
+    let mut var = 0.0;
+    let mut sample_total = 0.0;
+    let mut observed = 0usize;
+    for s in strata {
+        if s.b <= 0.0 {
+            continue;
+        }
+        if s.population < s.b - 1e-9 {
+            return Err(Error::Stats(format!(
+                "population {} smaller than sample {}",
+                s.population, s.b
+            )));
+        }
+        observed += 1;
+        sample_total += s.b;
+        tau += s.population / s.b * s.sum;
+        // FPC: a fully enumerated stratum (b = B) contributes no variance.
+        var += s.population * (s.population - s.b) * s.sample_variance() / s.b;
+    }
+    var = var.max(0.0);
+    let df_raw = sample_total - observed as f64; // Eq 3.3
+    let df = df_raw.max(1.0);
+    let t = t_score(confidence, df)?;
+    Ok(Estimate { value: tau, margin: t * var.sqrt(), variance: var, df: df_raw, t, confidence })
+}
+
+/// Estimate the population **mean** μ = τ / ΣBᵢ.
+pub fn estimate_mean(strata: &[StratumAgg], confidence: f64) -> Result<Estimate> {
+    let total_pop: f64 = strata.iter().filter(|s| s.b > 0.0).map(|s| s.population).sum();
+    let sum_est = estimate_sum(strata, confidence)?;
+    if total_pop <= 0.0 {
+        return Ok(Estimate { value: 0.0, margin: 0.0, variance: 0.0, ..sum_est });
+    }
+    Ok(Estimate {
+        value: sum_est.value / total_pop,
+        margin: sum_est.margin / total_pop,
+        variance: sum_est.variance / (total_pop * total_pop),
+        ..sum_est
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn agg(b: f64, sum: f64, sumsq: f64, pop: f64) -> StratumAgg {
+        StratumAgg { b, sum, sumsq, population: pop }
+    }
+
+    #[test]
+    fn census_has_zero_margin() {
+        // Sampling the whole stratum: FPC zeroes the variance.
+        let s = [agg(10.0, 55.0, 385.0, 10.0)];
+        let e = estimate_sum(&s, 0.95).unwrap();
+        assert_eq!(e.value, 55.0);
+        assert_eq!(e.variance, 0.0);
+        assert_eq!(e.margin, 0.0);
+        assert_eq!(e.lo(), e.hi());
+    }
+
+    #[test]
+    fn textbook_stratified_example() {
+        // Lohr-style example, hand-computed:
+        // Stratum 1: B=100, b=4, values {2,4,6,8}: sum=20, sumsq=120, s²=20/3.
+        // Stratum 2: B=200, b=4, values {10,10,20,20}: sum=60, sumsq=1000, s²≈33.333.
+        let s = [agg(4.0, 20.0, 120.0, 100.0), agg(4.0, 60.0, 1000.0, 200.0)];
+        let e = estimate_sum(&s, 0.95).unwrap();
+        // τ̂ = 100/4·20 + 200/4·60 = 500 + 3000 = 3500.
+        assert!((e.value - 3500.0).abs() < 1e-9);
+        // Var = 100·96·(20/3)/4 + 200·196·33.3333/4 = 16000 + 326666.67.
+        assert!((e.variance - (16_000.0 + 980_000.0 / 3.0)).abs() < 1e-6);
+        // df = 8 − 2 = 6 → t ≈ 2.4469.
+        assert!((e.df - 6.0).abs() < 1e-12);
+        assert!((e.t - 2.446911851).abs() < 1e-6);
+        assert!((e.margin - e.t * e.variance.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_strata_are_skipped() {
+        let s = [agg(0.0, 0.0, 0.0, 50.0), agg(5.0, 25.0, 135.0, 10.0)];
+        let e = estimate_sum(&s, 0.95).unwrap();
+        assert!((e.value - 50.0).abs() < 1e-12);
+        // df counts only observed strata: 5 − 1 = 4.
+        assert_eq!(e.df, 4.0);
+    }
+
+    #[test]
+    fn single_sample_per_stratum_falls_back_conservatively() {
+        let s = [agg(1.0, 5.0, 25.0, 10.0), agg(1.0, 7.0, 49.0, 10.0)];
+        let e = estimate_sum(&s, 0.95).unwrap();
+        // df_raw = 2 − 2 = 0; t computed at df = 1 (Cauchy, widest).
+        assert_eq!(e.df, 0.0);
+        assert!((e.t - 12.7062047364).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_is_total_over_population() {
+        let s = [agg(4.0, 20.0, 120.0, 100.0), agg(4.0, 60.0, 1000.0, 200.0)];
+        let total = estimate_sum(&s, 0.95).unwrap();
+        let mean = estimate_mean(&s, 0.95).unwrap();
+        assert!((mean.value - total.value / 300.0).abs() < 1e-12);
+        assert!((mean.margin - total.margin / 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn population_smaller_than_sample_rejected() {
+        let s = [agg(10.0, 10.0, 10.0, 5.0)];
+        assert!(estimate_sum(&s, 0.95).is_err());
+        assert!(estimate_sum(&[agg(1.0, 1.0, 1.0, 1.0)], 2.0).is_err());
+    }
+
+    #[test]
+    fn coverage_monte_carlo() {
+        // The defining property of a 95% interval: ~95% of intervals
+        // contain the true total. 3 strata, 400 trials.
+        let mut rng = Rng::new(99);
+        let pops = [400usize, 600, 1000];
+        let means = [5.0, 10.0, 20.0];
+        let mut populations: Vec<Vec<f64>> = Vec::new();
+        for (i, &n) in pops.iter().enumerate() {
+            populations.push((0..n).map(|_| rng.normal_with(means[i], 3.0)).collect());
+        }
+        let true_total: f64 = populations.iter().flatten().sum();
+        let mut covered = 0;
+        let trials = 400;
+        for _ in 0..trials {
+            let mut aggs = Vec::new();
+            for pop in &populations {
+                let b = pop.len() / 10;
+                let idx = rng.sample_indices(pop.len(), b);
+                let vals: Vec<f64> = idx.iter().map(|&i| pop[i]).collect();
+                let m = Moments::from_values(&vals);
+                aggs.push(StratumAgg::from_moments(&m, pop.len() as f64));
+            }
+            let e = estimate_sum(&aggs, 0.95).unwrap();
+            if e.lo() <= true_total && true_total <= e.hi() {
+                covered += 1;
+            }
+        }
+        let rate = covered as f64 / trials as f64;
+        assert!((0.90..=0.99).contains(&rate), "coverage {rate}");
+    }
+
+    #[test]
+    fn margin_shrinks_with_sample_size() {
+        let mut rng = Rng::new(7);
+        let pop: Vec<f64> = (0..10_000).map(|_| rng.normal_with(10.0, 4.0)).collect();
+        let margin_at = |b: usize, rng: &mut Rng| {
+            let idx = rng.sample_indices(pop.len(), b);
+            let vals: Vec<f64> = idx.iter().map(|&i| pop[i]).collect();
+            let m = Moments::from_values(&vals);
+            estimate_sum(&[StratumAgg::from_moments(&m, pop.len() as f64)], 0.95)
+                .unwrap()
+                .margin
+        };
+        let m_small = margin_at(100, &mut rng);
+        let m_big = margin_at(4000, &mut rng);
+        assert!(m_big < m_small * 0.4, "margins {m_small} -> {m_big}");
+    }
+
+    #[test]
+    fn relative_error_sane() {
+        let s = [agg(4.0, 20.0, 120.0, 100.0)];
+        let e = estimate_sum(&s, 0.95).unwrap();
+        assert!((e.relative_error() - e.margin / e.value).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,176 @@
+//! Student-t distribution: CDF and quantiles (t-scores).
+//!
+//! `t_score(confidence, df)` is the paper's `t_{f, 1−α/2}` of Eq 3.2,
+//! computed from the regularized incomplete beta exactly as a
+//! t-distribution calculator would (§3.5.2 uses Apache Commons Math; this
+//! is the same math). Quantiles are found by monotone bisection on the
+//! CDF — 80 iterations gives ~1e-13, far below statistical noise.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::stats::special::inc_beta;
+
+/// Quantile cache: the coordinator requests `t_{f,1−α/2}` every window
+/// with a df that drifts by a handful between windows; recomputing the
+/// 100-step bisection each time made `beta_cf` ~11% of the whole pipeline
+/// profile (EXPERIMENTS.md §Perf L3.2). Keyed by (p bits, df bits) after
+/// quantization: df > 100 is rounded to the nearest integer (the quantile
+/// changes by < 1e-6 per unit df there), smaller dfs are cached exactly.
+static QUANTILE_CACHE: OnceLock<Mutex<HashMap<(u64, u64), f64>>> = OnceLock::new();
+
+fn quantize_df(df: f64) -> f64 {
+    if df > 100.0 {
+        df.round()
+    } else {
+        df
+    }
+}
+
+/// CDF of the t-distribution with `df` degrees of freedom.
+pub fn t_cdf(x: f64, df: f64) -> f64 {
+    assert!(df > 0.0, "df must be positive");
+    if x == 0.0 {
+        return 0.5;
+    }
+    let ib = inc_beta(df / 2.0, 0.5, df / (df + x * x));
+    if x > 0.0 {
+        1.0 - 0.5 * ib
+    } else {
+        0.5 * ib
+    }
+}
+
+/// Quantile (inverse CDF) of the t-distribution: the `x` with
+/// `t_cdf(x, df) = p`, for p ∈ (0, 1). Results are cached (df quantized
+/// above 100) — see `QUANTILE_CACHE`.
+pub fn t_quantile(p: f64, df: f64) -> Result<f64> {
+    if !(0.0 < p && p < 1.0) {
+        return Err(Error::Stats(format!("quantile needs p in (0,1), got {p}")));
+    }
+    if df <= 0.0 {
+        return Err(Error::Stats(format!("df must be positive, got {df}")));
+    }
+    if (p - 0.5).abs() < 1e-16 {
+        return Ok(0.0);
+    }
+    let df = quantize_df(df);
+    let key = (p.to_bits(), df.to_bits());
+    let cache = QUANTILE_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&hit) = cache.lock().unwrap().get(&key) {
+        return Ok(hit);
+    }
+    // Symmetric: solve for the upper tail and mirror.
+    let upper = p >= 0.5;
+    let p_hi = if upper { p } else { 1.0 - p };
+    // Bracket: expand until cdf(hi) > p_hi.
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    while t_cdf(hi, df) < p_hi {
+        hi *= 2.0;
+        if hi > 1e12 {
+            return Err(Error::Stats(format!("quantile bracket failed: p={p} df={df}")));
+        }
+    }
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if t_cdf(mid, df) < p_hi {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let x = 0.5 * (lo + hi);
+    let signed = if upper { x } else { -x };
+    let mut cache = cache.lock().unwrap();
+    if cache.len() > 65_536 {
+        cache.clear(); // unbounded-growth backstop; refills on demand
+    }
+    cache.insert(key, signed);
+    Ok(signed)
+}
+
+/// The paper's `t_{f, 1−α/2}`: two-sided t-score for a confidence level
+/// (e.g. 0.95) and `df` degrees of freedom.
+pub fn t_score(confidence: f64, df: f64) -> Result<f64> {
+    if !(0.0 < confidence && confidence < 1.0) {
+        return Err(Error::Stats(format!(
+            "confidence must be in (0,1), got {confidence}"
+        )));
+    }
+    let alpha = 1.0 - confidence;
+    t_quantile(1.0 - alpha / 2.0, df)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn cdf_fixed_points() {
+        close(t_cdf(0.0, 5.0), 0.5, 1e-15);
+        // With df=1 (Cauchy), cdf(1) = 0.75.
+        close(t_cdf(1.0, 1.0), 0.75, 1e-12);
+        // scipy.stats.t.cdf fixtures.
+        close(t_cdf(2.0, 10.0), 0.9633059826146299, 1e-10);
+        close(t_cdf(-1.5, 7.0), 0.088649243494985, 1e-10);
+        close(t_cdf(3.0, 30.0), 0.9973050179671741, 1e-10);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for &df in &[1.0, 2.0, 5.0, 10.0, 30.0, 120.0] {
+            for &p in &[0.01, 0.1, 0.5, 0.9, 0.975, 0.999] {
+                let x = t_quantile(p, df).unwrap();
+                close(t_cdf(x, df), p, 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn classic_t_table_values() {
+        // Standard two-sided 95% t-table column (α/2 = 0.025).
+        let table = [
+            (1.0, 12.7062047364),
+            (2.0, 4.3026527297),
+            (5.0, 2.5705818356),
+            (10.0, 2.2281388520),
+            (30.0, 2.0422724563),
+            (100.0, 1.9839715185),
+        ];
+        for (df, want) in table {
+            close(t_score(0.95, df).unwrap(), want, 1e-8);
+        }
+        // 99% and 90% for df = 10.
+        close(t_score(0.99, 10.0).unwrap(), 3.1692726669, 1e-8);
+        close(t_score(0.90, 10.0).unwrap(), 1.8124611228, 1e-8);
+    }
+
+    #[test]
+    fn approaches_normal_for_large_df() {
+        // z_{0.975} = 1.959963985.
+        let t = t_score(0.95, 100_000.0).unwrap();
+        close(t, 1.959963985, 1e-4);
+    }
+
+    #[test]
+    fn symmetry() {
+        let x = t_quantile(0.2, 7.0).unwrap();
+        let y = t_quantile(0.8, 7.0).unwrap();
+        close(x, -y, 1e-10);
+    }
+
+    #[test]
+    fn domain_errors() {
+        assert!(t_quantile(0.0, 5.0).is_err());
+        assert!(t_quantile(1.0, 5.0).is_err());
+        assert!(t_quantile(0.5, 0.0).is_err());
+        assert!(t_score(1.0, 5.0).is_err());
+        assert!(t_score(0.0, 5.0).is_err());
+    }
+}

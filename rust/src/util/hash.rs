@@ -1,0 +1,169 @@
+//! Stable content hashing for memoization keys.
+//!
+//! Memo keys must be stable across runs and processes (the paper's memoized
+//! results survive across windows; our fault-tolerance tests persist them),
+//! so we avoid `std::collections::hash_map::DefaultHasher` (randomized per
+//! process) and use FNV-1a with a 64-bit avalanche finisher.
+
+/// FNV-1a over a byte slice.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Strong 64-bit finalizer (SplitMix64 avalanche) — use after combining
+/// several field hashes so that low-entropy inputs still spread.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A fast `std::hash::Hasher` for keys that are already well-mixed 64-bit
+/// values (chunk content hashes, record ids run through the coordinator's
+/// diff sets). SipHash's DoS resistance is wasted on internal keys and
+/// showed up at ~5% of the pipeline profile (EXPERIMENTS.md §Perf L3.3);
+/// this one is a single SplitMix64 avalanche.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FastHasher {
+    state: u64,
+}
+
+impl std::hash::Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        self.state = mix64(self.state ^ fnv1a(bytes));
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.state = mix64(self.state ^ v);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.write_u64(v as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+}
+
+/// `HashSet` with [`FastHasher`].
+pub type FastSet<T> = std::collections::HashSet<T, std::hash::BuildHasherDefault<FastHasher>>;
+
+/// `HashMap` with [`FastHasher`].
+pub type FastMap<K, V> =
+    std::collections::HashMap<K, V, std::hash::BuildHasherDefault<FastHasher>>;
+
+/// Incremental stable hasher for composite keys (chunk contents, query
+/// specs). Order-sensitive.
+#[derive(Debug, Clone)]
+pub struct StableHasher {
+    state: u64,
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StableHasher {
+    /// Fresh hasher with the FNV offset basis.
+    pub fn new() -> Self {
+        StableHasher { state: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    /// Absorb a u64.
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.state = mix64(self.state ^ v).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+
+    /// Absorb raw bytes.
+    #[inline]
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        self.write_u64(fnv1a(bytes));
+    }
+
+    /// Absorb an f64 by bit pattern (NaN-stable: all NaNs collapse).
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) {
+        let bits = if v.is_nan() { u64::MAX } else { v.to_bits() };
+        self.write_u64(bits);
+    }
+
+    /// Final digest.
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        mix64(self.state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Reference values for FNV-1a 64-bit.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn stable_across_instances() {
+        let mut a = StableHasher::new();
+        let mut b = StableHasher::new();
+        for h in [&mut a, &mut b] {
+            h.write_u64(1);
+            h.write_bytes(b"stratum-3");
+            h.write_f64(1.5);
+        }
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn order_sensitive() {
+        let mut a = StableHasher::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = StableHasher::new();
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn nan_collapses() {
+        let mut a = StableHasher::new();
+        a.write_f64(f64::NAN);
+        let mut b = StableHasher::new();
+        b.write_f64(-f64::NAN);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn mix64_spreads_low_entropy() {
+        // Consecutive integers should not produce consecutive hashes.
+        let h: Vec<u64> = (0u64..16).map(mix64).collect();
+        for w in h.windows(2) {
+            assert!(w[1].wrapping_sub(w[0]) != 1);
+        }
+    }
+}

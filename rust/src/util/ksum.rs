@@ -1,0 +1,79 @@
+//! Compensated (Neumaier) summation.
+//!
+//! The native (exact) baseline aggregates whole 10k-item windows in f64;
+//! plain left-to-right summation drifts enough to trip the tight
+//! native-vs-PJRT comparison tests, so all scalar reductions in the job
+//! executor and the stats module run through this accumulator.
+
+/// Neumaier variant of Kahan summation: exact for well-conditioned inputs,
+/// and tolerant of addends larger than the running sum.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NeumaierSum {
+    sum: f64,
+    compensation: f64,
+}
+
+impl NeumaierSum {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one value.
+    #[inline]
+    pub fn add(&mut self, v: f64) {
+        let t = self.sum + v;
+        if self.sum.abs() >= v.abs() {
+            self.compensation += (self.sum - t) + v;
+        } else {
+            self.compensation += (v - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    /// Current compensated total.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.sum + self.compensation
+    }
+}
+
+/// Compensated sum of a slice.
+pub fn ksum(xs: &[f64]) -> f64 {
+    let mut acc = NeumaierSum::new();
+    for &x in xs {
+        acc.add(x);
+    }
+    acc.total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_sum() {
+        assert_eq!(ksum(&[1.0, 2.0, 3.0]), 6.0);
+    }
+
+    #[test]
+    fn recovers_cancellation() {
+        // 1.0 + 1e100 - 1e100 == 1.0 with compensation, 0.0 without.
+        assert_eq!(ksum(&[1.0, 1e100, -1e100]), 1.0);
+    }
+
+    #[test]
+    fn many_smalls_onto_large() {
+        let mut xs = vec![1e16];
+        xs.extend(std::iter::repeat(1.0).take(10_000));
+        // Naive summation loses every 1.0 (1e16 + 1 == 1e16 in f64).
+        let naive: f64 = xs.iter().sum();
+        assert_eq!(naive, 1e16);
+        assert_eq!(ksum(&xs), 1e16 + 10_000.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(ksum(&[]), 0.0);
+    }
+}

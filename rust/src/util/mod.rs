@@ -1,0 +1,13 @@
+//! Small self-contained utilities shared by every subsystem.
+//!
+//! No third-party `rand`, `serde`, or hashing crates are reachable in this
+//! offline build, so the deterministic PRNG, content hashing, and
+//! compensated summation live here (see DESIGN.md §3, substitution table).
+
+pub mod hash;
+pub mod ksum;
+pub mod rng;
+
+pub use hash::{fnv1a, mix64, StableHasher};
+pub use ksum::NeumaierSum;
+pub use rng::Rng;

@@ -1,0 +1,249 @@
+//! Sliding-window computation model (§2.3.2, Figure 2.3).
+//!
+//! The coordinator consumes the aggregated stream in slide-sized batches;
+//! the window manager maintains the current computation window and reports
+//! the **delta** (inserted / removed items) between adjacent windows — the
+//! input-change set that drives change propagation in `sac/`.
+//!
+//! Two window kinds:
+//! * [`CountWindow`] — fixed item count with item-count slide. This is what
+//!   §5's figures parameterize ("window of 10 000 items, slide 4%"), and
+//!   what the benches use.
+//! * [`TimeWindow`] — time length + slide in ticks; item counts per window
+//!   vary with arrival rate (the paper's stated general model, §2.3.3).
+
+use std::collections::VecDeque;
+
+use crate::workload::record::Record;
+
+/// The change set between two adjacent windows.
+#[derive(Debug, Clone, Default)]
+pub struct WindowDelta {
+    /// Items that entered the window this slide.
+    pub inserted: Vec<Record>,
+    /// Items that fell out of the window this slide.
+    pub removed: Vec<Record>,
+}
+
+/// A full window snapshot handed to the sampling stage.
+#[derive(Debug, Clone)]
+pub struct WindowSnapshot {
+    /// Monotonic window sequence number.
+    pub window_id: u64,
+    /// Items currently in the window, oldest first.
+    pub items: Vec<Record>,
+    /// Change set vs. the previous window.
+    pub delta: WindowDelta,
+}
+
+/// Count-based sliding window.
+#[derive(Debug)]
+pub struct CountWindow {
+    size: usize,
+    buf: VecDeque<Record>,
+    next_window_id: u64,
+}
+
+impl CountWindow {
+    /// Window holding exactly `size` items once warm.
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        CountWindow { size, buf: VecDeque::with_capacity(size + 1), next_window_id: 0 }
+    }
+
+    /// Push one slide's worth of new items; returns the new window
+    /// snapshot. Items beyond `size` fall out FIFO (oldest first).
+    pub fn slide(&mut self, batch: Vec<Record>) -> WindowSnapshot {
+        let mut removed = Vec::new();
+        for r in &batch {
+            self.buf.push_back(*r);
+            if self.buf.len() > self.size {
+                removed.push(self.buf.pop_front().expect("non-empty"));
+            }
+        }
+        let id = self.next_window_id;
+        self.next_window_id += 1;
+        WindowSnapshot {
+            window_id: id,
+            items: self.buf.iter().copied().collect(),
+            delta: WindowDelta { inserted: batch, removed },
+        }
+    }
+
+    /// Change the target size (Fig 5.1(c) varies window size between
+    /// adjacent windows). Shrinking evicts oldest items immediately;
+    /// the evicted items are reported by the *next* `slide`'s delta via
+    /// the returned vector here.
+    pub fn resize(&mut self, new_size: usize) -> Vec<Record> {
+        assert!(new_size > 0);
+        self.size = new_size;
+        let mut evicted = Vec::new();
+        while self.buf.len() > self.size {
+            evicted.push(self.buf.pop_front().expect("non-empty"));
+        }
+        evicted
+    }
+
+    /// Current item count.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no items buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Configured capacity.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+}
+
+/// Time-based sliding window (length and slide in logical ticks).
+#[derive(Debug)]
+pub struct TimeWindow {
+    length: u64,
+    slide: u64,
+    /// Exclusive end of the last emitted window.
+    next_end: u64,
+    buf: VecDeque<Record>,
+    next_window_id: u64,
+}
+
+impl TimeWindow {
+    /// Window covering `[end-length, end)` sliding by `slide` ticks.
+    pub fn new(length: u64, slide: u64) -> Self {
+        assert!(length > 0 && slide > 0 && slide <= length);
+        TimeWindow { length, slide, next_end: length, buf: VecDeque::new(), next_window_id: 0 }
+    }
+
+    /// Feed records (must arrive in non-decreasing timestamp order).
+    pub fn ingest(&mut self, records: impl IntoIterator<Item = Record>) {
+        for r in records {
+            debug_assert!(self.buf.back().is_none_or(|b| b.timestamp <= r.timestamp));
+            self.buf.push_back(r);
+        }
+    }
+
+    /// Emit the next window if all its data (ticks < end) has been seen,
+    /// i.e. `now >= end`. Removes items older than the new start.
+    pub fn try_emit(&mut self, now: u64) -> Option<WindowSnapshot> {
+        if now < self.next_end {
+            return None;
+        }
+        let end = self.next_end;
+        let start = end.saturating_sub(self.length);
+        let prev_start = start.saturating_sub(self.slide);
+        // Remove all old items from the window (Algorithm 1: timestamp < t).
+        let mut removed = Vec::new();
+        while let Some(front) = self.buf.front() {
+            if front.timestamp < start {
+                removed.push(self.buf.pop_front().expect("non-empty"));
+            } else {
+                break;
+            }
+        }
+        // Inserted this slide: timestamps in [end - slide, end) — plus, for
+        // the first window, everything.
+        let ins_from = if self.next_window_id == 0 { 0 } else { end - self.slide };
+        let items: Vec<Record> =
+            self.buf.iter().filter(|r| r.timestamp < end).copied().collect();
+        let inserted =
+            items.iter().filter(|r| r.timestamp >= ins_from).copied().collect();
+        // Items removed must have been in the previous window.
+        removed.retain(|r| r.timestamp >= prev_start);
+        let id = self.next_window_id;
+        self.next_window_id += 1;
+        self.next_end += self.slide;
+        Some(WindowSnapshot { window_id: id, items, delta: WindowDelta { inserted, removed } })
+    }
+
+    /// Configured (length, slide).
+    pub fn params(&self) -> (u64, u64) {
+        (self.length, self.slide)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, ts: u64) -> Record {
+        Record::new(id, 0, ts, 0, id as f64)
+    }
+
+    #[test]
+    fn count_window_warms_then_slides() {
+        let mut w = CountWindow::new(10);
+        let snap = w.slide((0..10).map(|i| rec(i, i)).collect());
+        assert_eq!(snap.items.len(), 10);
+        assert!(snap.delta.removed.is_empty());
+        let snap = w.slide((10..14).map(|i| rec(i, i)).collect());
+        assert_eq!(snap.items.len(), 10);
+        assert_eq!(snap.delta.inserted.len(), 4);
+        assert_eq!(
+            snap.delta.removed.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(snap.items[0].id, 4);
+    }
+
+    #[test]
+    fn count_window_overlap_invariant() {
+        // |overlap| == size - slide for a warm window.
+        let mut w = CountWindow::new(100);
+        w.slide((0..100).map(|i| rec(i, 0)).collect());
+        let s2 = w.slide((100..116).map(|i| rec(i, 1)).collect());
+        let overlap = s2.items.iter().filter(|r| r.id < 100).count();
+        assert_eq!(overlap, 84);
+    }
+
+    #[test]
+    fn count_window_resize_evicts_oldest() {
+        let mut w = CountWindow::new(10);
+        w.slide((0..10).map(|i| rec(i, i)).collect());
+        let evicted = w.resize(6);
+        assert_eq!(evicted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(w.len(), 6);
+        assert!(w.resize(20).is_empty());
+    }
+
+    #[test]
+    fn window_ids_monotone() {
+        let mut w = CountWindow::new(4);
+        let a = w.slide(vec![rec(0, 0)]);
+        let b = w.slide(vec![rec(1, 1)]);
+        assert_eq!(a.window_id, 0);
+        assert_eq!(b.window_id, 1);
+    }
+
+    #[test]
+    fn time_window_emits_at_boundaries() {
+        let mut w = TimeWindow::new(10, 5);
+        w.ingest((0..20).map(|i| rec(i, i)));
+        assert!(w.try_emit(9).is_none());
+        let s0 = w.try_emit(10).unwrap();
+        assert_eq!(s0.items.iter().map(|r| r.timestamp).max(), Some(9));
+        assert_eq!(s0.items.len(), 10);
+        assert_eq!(s0.delta.inserted.len(), 10); // first window: all new
+        let s1 = w.try_emit(15).unwrap();
+        // Window [5, 15): removed ts 0–4, inserted ts 10–14.
+        assert_eq!(s1.delta.removed.len(), 5);
+        assert_eq!(s1.delta.inserted.len(), 5);
+        assert_eq!(s1.items.len(), 10);
+        assert!(s1.items.iter().all(|r| (5..15).contains(&r.timestamp)));
+    }
+
+    #[test]
+    fn time_window_variable_arrival_counts() {
+        let mut w = TimeWindow::new(4, 2);
+        // 2 records at tick 0, none at 1, 3 at tick 2, 1 at tick 3.
+        w.ingest(vec![rec(0, 0), rec(1, 0), rec(2, 2), rec(3, 2), rec(4, 2), rec(5, 3)]);
+        let s = w.try_emit(4).unwrap();
+        assert_eq!(s.items.len(), 6);
+        let s = w.try_emit(6).unwrap(); // window [2,6): drops ts<2
+        assert_eq!(s.items.len(), 4);
+        assert_eq!(s.delta.removed.len(), 2);
+    }
+}

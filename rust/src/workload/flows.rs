@@ -1,0 +1,112 @@
+//! Synthetic network-monitoring stream (the paper's first case study).
+//!
+//! Models a flow-log feed: each record is one flow observation; the
+//! stratum is the monitored subnet (sub-stream source), the key is a
+//! hashed 5-tuple, and the value is the flow's byte count — heavy-tailed
+//! log-normal, the classic elephant/mice mix. A windowed SUM over values
+//! is "bytes per window per subnet", the real-time traffic aggregate the
+//! case study monitors.
+
+use crate::util::rng::Rng;
+use crate::workload::gen::{Generator, MultiStream, ValueDist};
+use crate::workload::record::{Record, StratumId};
+
+/// One subnet's flow generator.
+pub struct FlowLogGen {
+    stratum: StratumId,
+    rate: f64,
+    bytes: ValueDist,
+    rng: Rng,
+    /// Number of distinct active flows (keys) in this subnet.
+    flow_population: u64,
+}
+
+impl FlowLogGen {
+    /// A subnet emitting `rate` flow records per tick.
+    pub fn new(stratum: StratumId, rate: f64, seed: u64) -> Self {
+        FlowLogGen {
+            stratum,
+            rate,
+            // exp(N(6.2, 1.3)) bytes ≈ median 500 B, long tail to MBs.
+            bytes: ValueDist::LogNormal(6.2, 1.3),
+            rng: Rng::new(seed),
+            flow_population: 4096,
+        }
+    }
+
+    /// Build the full case-study stream: `subnets` sub-streams with
+    /// heterogeneous rates (1, 2, …).
+    pub fn case_study(subnets: usize, seed: u64) -> MultiStream {
+        let subs = (0..subnets)
+            .map(|i| {
+                Box::new(FlowLogGen::new(
+                    i as StratumId,
+                    (i + 1) as f64,
+                    seed.wrapping_add(100 + i as u64),
+                )) as Box<dyn Generator + Send>
+            })
+            .collect();
+        MultiStream::new(subs)
+    }
+}
+
+impl Generator for FlowLogGen {
+    fn tick(&mut self, t: u64, next_id: &mut u64) -> Vec<Record> {
+        let n = self.rng.poisson(self.rate);
+        (0..n)
+            .map(|_| {
+                let id = *next_id;
+                *next_id += 1;
+                let key = self.rng.next_u64() % self.flow_population;
+                Record::new(id, self.stratum, t, key, self.bytes.sample(&mut self.rng))
+            })
+            .collect()
+    }
+
+    fn stratum(&self) -> StratumId {
+        self.stratum
+    }
+
+    fn rate(&self, _t: u64) -> f64 {
+        self.rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_positive_and_heavy_tailed() {
+        let mut g = FlowLogGen::new(0, 5.0, 1);
+        let mut next_id = 0;
+        let mut values = Vec::new();
+        for t in 0..5000 {
+            values.extend(g.tick(t, &mut next_id).into_iter().map(|r| r.value));
+        }
+        assert!(values.iter().all(|&v| v > 0.0));
+        let mean = values.iter().sum::<f64>() / values.len() as f64;
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        // Log-normal: mean well above median.
+        assert!(mean > 1.5 * median, "mean {mean} median {median}");
+    }
+
+    #[test]
+    fn case_study_strata_and_rates() {
+        let mut ms = FlowLogGen::case_study(4, 2);
+        let recs = ms.take_records(40_000);
+        let mut counts = [0usize; 4];
+        for r in &recs {
+            counts[r.stratum as usize] += 1;
+        }
+        // Rates 1:2:3:4.
+        for i in 1..4 {
+            assert!(
+                counts[i] > counts[i - 1],
+                "counts not increasing: {counts:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Synthetic stream generators matching the paper's §5 setup.
+//!
+//! Each sub-stream is an independent Poisson process: at logical tick `t`
+//! a sub-stream with mean rate λ emits `Poisson(λ)` records. §5.1 uses
+//! three sub-streams with rates 3:4:5; §5.1.4 uses two fluctuating
+//! sub-streams plus one constant.
+
+use crate::util::rng::Rng;
+use crate::workload::record::{Record, StratumId};
+
+/// Distribution of record values within a sub-stream. §2.3.3 assumes
+/// items within a stratum are i.i.d.; different strata may differ.
+#[derive(Debug, Clone, Copy)]
+pub enum ValueDist {
+    /// Constant value.
+    Constant(f64),
+    /// Uniform over `[lo, hi)`.
+    Uniform(f64, f64),
+    /// Normal with (mean, std).
+    Normal(f64, f64),
+    /// Log-normal via `exp(Normal(mu, sigma))` — heavy-tailed sizes.
+    LogNormal(f64, f64),
+}
+
+impl ValueDist {
+    /// Draw one value.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            ValueDist::Constant(v) => v,
+            ValueDist::Uniform(lo, hi) => lo + (hi - lo) * rng.f64(),
+            ValueDist::Normal(m, s) => rng.normal_with(m, s),
+            ValueDist::LogNormal(mu, sigma) => rng.normal_with(mu, sigma).exp(),
+        }
+    }
+
+    /// Exact mean of the distribution (for test assertions).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            ValueDist::Constant(v) => v,
+            ValueDist::Uniform(lo, hi) => 0.5 * (lo + hi),
+            ValueDist::Normal(m, _) => m,
+            ValueDist::LogNormal(mu, sigma) => (mu + 0.5 * sigma * sigma).exp(),
+        }
+    }
+}
+
+/// A source of records per logical tick.
+pub trait Generator {
+    /// Emit all records for tick `t`. Ids are assigned by the caller
+    /// ([`MultiStream`]) so they are unique across sub-streams.
+    fn tick(&mut self, t: u64, next_id: &mut u64) -> Vec<Record>;
+
+    /// Stratum this generator feeds (for single-stratum generators).
+    fn stratum(&self) -> StratumId;
+
+    /// Current mean arrival rate (records/tick) — used by tests and the
+    /// aggregator's rate counters that pick the re-allocation interval T.
+    fn rate(&self, t: u64) -> f64;
+}
+
+/// Constant-rate Poisson sub-stream.
+pub struct PoissonSubstream {
+    stratum: StratumId,
+    rate: f64,
+    dist: ValueDist,
+    rng: Rng,
+}
+
+impl PoissonSubstream {
+    /// New sub-stream with mean `rate` items/tick.
+    pub fn new(stratum: StratumId, rate: f64, dist: ValueDist, seed: u64) -> Self {
+        PoissonSubstream { stratum, rate, dist, rng: Rng::new(seed) }
+    }
+}
+
+impl Generator for PoissonSubstream {
+    fn tick(&mut self, t: u64, next_id: &mut u64) -> Vec<Record> {
+        let n = self.rng.poisson(self.rate);
+        (0..n)
+            .map(|_| {
+                let id = *next_id;
+                *next_id += 1;
+                let key = self.rng.next_u64() % 97; // small key space for group-bys
+                Record::new(id, self.stratum, t, key, self.dist.sample(&mut self.rng))
+            })
+            .collect()
+    }
+
+    fn stratum(&self) -> StratumId {
+        self.stratum
+    }
+
+    fn rate(&self, _t: u64) -> f64 {
+        self.rate
+    }
+}
+
+/// Sub-stream whose rate follows a piecewise schedule — §5.1.4's
+/// "fluctuating arrival rate". The schedule maps tick thresholds to
+/// rates: the rate at tick `t` is the entry with the largest `start ≤ t`.
+pub struct FluctuatingSubstream {
+    stratum: StratumId,
+    /// (start_tick, rate) pairs, sorted by start.
+    schedule: Vec<(u64, f64)>,
+    dist: ValueDist,
+    rng: Rng,
+}
+
+impl FluctuatingSubstream {
+    /// Build from a schedule; panics if empty or unsorted.
+    pub fn new(
+        stratum: StratumId,
+        schedule: Vec<(u64, f64)>,
+        dist: ValueDist,
+        seed: u64,
+    ) -> Self {
+        assert!(!schedule.is_empty(), "schedule must be non-empty");
+        assert!(
+            schedule.windows(2).all(|w| w[0].0 <= w[1].0),
+            "schedule must be sorted by start tick"
+        );
+        FluctuatingSubstream { stratum, schedule, dist, rng: Rng::new(seed) }
+    }
+}
+
+impl Generator for FluctuatingSubstream {
+    fn tick(&mut self, t: u64, next_id: &mut u64) -> Vec<Record> {
+        let rate = self.rate(t);
+        let n = self.rng.poisson(rate);
+        (0..n)
+            .map(|_| {
+                let id = *next_id;
+                *next_id += 1;
+                let key = self.rng.next_u64() % 97;
+                Record::new(id, self.stratum, t, key, self.dist.sample(&mut self.rng))
+            })
+            .collect()
+    }
+
+    fn stratum(&self) -> StratumId {
+        self.stratum
+    }
+
+    fn rate(&self, t: u64) -> f64 {
+        let mut rate = self.schedule[0].1;
+        for &(start, r) in &self.schedule {
+            if start <= t {
+                rate = r;
+            } else {
+                break;
+            }
+        }
+        rate
+    }
+}
+
+/// Merges several sub-streams into one id-spaced stream — the "stream
+/// aggregator input" side of Figure 2.1.
+pub struct MultiStream {
+    subs: Vec<Box<dyn Generator + Send>>,
+    next_id: u64,
+    now: u64,
+}
+
+impl MultiStream {
+    /// Combine sub-streams.
+    pub fn new(subs: Vec<Box<dyn Generator + Send>>) -> Self {
+        MultiStream { subs, next_id: 0, now: 0 }
+    }
+
+    /// The paper's §5.1 three-sub-stream setup (rates 3:4:5), with
+    /// per-stratum Normal value distributions.
+    pub fn paper_section5(seed: u64) -> Self {
+        let rates = [3.0, 4.0, 5.0];
+        let subs = rates
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| {
+                Box::new(PoissonSubstream::new(
+                    i as StratumId,
+                    r,
+                    ValueDist::Normal(10.0 * (i + 1) as f64, 2.0),
+                    seed.wrapping_add(i as u64 + 1),
+                )) as Box<dyn Generator + Send>
+            })
+            .collect();
+        MultiStream::new(subs)
+    }
+
+    /// §5.1.4: two fluctuating sub-streams plus one constant.
+    /// The fluctuation schedules follow the figure's x-axis: S1 rate
+    /// 1→3→2, S2 rate 2→1→3, S3 constant 2.
+    pub fn paper_fluctuating(seed: u64, phase_ticks: u64) -> Self {
+        let s1 = FluctuatingSubstream::new(
+            0,
+            vec![(0, 1.0), (phase_ticks, 3.0), (2 * phase_ticks, 2.0)],
+            ValueDist::Normal(10.0, 2.0),
+            seed.wrapping_add(1),
+        );
+        let s2 = FluctuatingSubstream::new(
+            1,
+            vec![(0, 2.0), (phase_ticks, 1.0), (2 * phase_ticks, 3.0)],
+            ValueDist::Normal(20.0, 2.0),
+            seed.wrapping_add(2),
+        );
+        let s3 = PoissonSubstream::new(2, 2.0, ValueDist::Normal(30.0, 2.0), seed.wrapping_add(3));
+        MultiStream::new(vec![Box::new(s1), Box::new(s2), Box::new(s3)])
+    }
+
+    /// Advance one tick; returns all records across sub-streams.
+    pub fn tick(&mut self) -> Vec<Record> {
+        let t = self.now;
+        self.now += 1;
+        let mut out = Vec::new();
+        for sub in &mut self.subs {
+            out.extend(sub.tick(t, &mut self.next_id));
+        }
+        out
+    }
+
+    /// Generate at least `n` records (whole ticks).
+    pub fn take_records(&mut self, n: usize) -> Vec<Record> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            out.extend(self.tick());
+        }
+        out
+    }
+
+    /// Number of sub-streams.
+    pub fn substream_count(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Current logical time.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_substream_rate() {
+        let mut s = PoissonSubstream::new(0, 4.0, ValueDist::Constant(1.0), 1);
+        let mut next_id = 0;
+        let n: usize = (0..20_000).map(|t| s.tick(t, &mut next_id).len()).sum();
+        let mean = n as f64 / 20_000.0;
+        assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
+        assert_eq!(next_id as usize, n);
+    }
+
+    #[test]
+    fn ids_unique_and_monotone_across_substreams() {
+        let mut ms = MultiStream::paper_section5(3);
+        let recs = ms.take_records(5000);
+        let mut ids: Vec<u64> = recs.iter().map(|r| r.id).collect();
+        let orig = ids.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), orig.len());
+    }
+
+    #[test]
+    fn section5_rates_are_3_4_5() {
+        let mut ms = MultiStream::paper_section5(7);
+        let recs = ms.take_records(60_000);
+        let mut counts = [0usize; 3];
+        for r in &recs {
+            counts[r.stratum as usize] += 1;
+        }
+        let total: usize = counts.iter().sum();
+        let props: Vec<f64> = counts.iter().map(|&c| c as f64 / total as f64).collect();
+        for (got, want) in props.iter().zip([3.0 / 12.0, 4.0 / 12.0, 5.0 / 12.0]) {
+            assert!((got - want).abs() < 0.02, "props {props:?}");
+        }
+    }
+
+    #[test]
+    fn fluctuating_schedule_changes_rate() {
+        let s = FluctuatingSubstream::new(
+            0,
+            vec![(0, 1.0), (100, 3.0), (200, 2.0)],
+            ValueDist::Constant(1.0),
+            5,
+        );
+        assert_eq!(s.rate(0), 1.0);
+        assert_eq!(s.rate(99), 1.0);
+        assert_eq!(s.rate(100), 3.0);
+        assert_eq!(s.rate(250), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn unsorted_schedule_panics() {
+        FluctuatingSubstream::new(0, vec![(10, 1.0), (0, 2.0)], ValueDist::Constant(1.0), 1);
+    }
+
+    #[test]
+    fn value_dist_means() {
+        let mut rng = Rng::new(11);
+        for dist in [
+            ValueDist::Constant(5.0),
+            ValueDist::Uniform(0.0, 10.0),
+            ValueDist::Normal(7.0, 2.0),
+            ValueDist::LogNormal(1.0, 0.5),
+        ] {
+            let n = 60_000;
+            let mean: f64 = (0..n).map(|_| dist.sample(&mut rng)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - dist.mean()).abs() < 0.05 * dist.mean().abs().max(1.0),
+                "{dist:?}: mean {mean} want {}",
+                dist.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn fluctuating_multistream_has_three_strata() {
+        let mut ms = MultiStream::paper_fluctuating(9, 100);
+        let recs = ms.take_records(2000);
+        let mut strata: Vec<u32> = recs.iter().map(|r| r.stratum).collect();
+        strata.sort_unstable();
+        strata.dedup();
+        assert_eq!(strata, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Workloads: the record model, synthetic stream generators, and traces.
+//!
+//! §5 of the paper evaluates on *simulated* streams (Poisson sub-streams
+//! with rates 3:4:5, fluctuating-rate variants); its case studies are
+//! network monitoring and Twitter analytics. This module provides all of
+//! them: [`PoissonSubstream`] / [`FluctuatingSubstream`] generators
+//! matching §5, plus flow-log and tweet-like synthetic case-study streams,
+//! and record/replay of traces for reproducible benchmarking.
+
+pub mod flows;
+pub mod gen;
+pub mod record;
+pub mod trace;
+pub mod tweets;
+
+pub use flows::FlowLogGen;
+pub use gen::{FluctuatingSubstream, Generator, MultiStream, PoissonSubstream, ValueDist};
+pub use record::{Record, StratumId};
+pub use trace::{read_trace, write_trace, TraceReplay};
+pub use tweets::TweetGen;

@@ -1,0 +1,43 @@
+//! The pipeline's data model.
+
+/// Identifier of a stratum (one sub-stream, §2.3.3 assumption 1).
+pub type StratumId = u32;
+
+/// One streaming data item.
+///
+/// `id` is globally unique and stable — it is what memoization keys and
+/// chunk content hashes are built from, so re-observing the same item in
+/// the next window's overlap region produces the same hashes (the whole
+/// point of the marriage).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Record {
+    /// Globally unique, monotonically assigned item id.
+    pub id: u64,
+    /// Sub-stream / stratum label (source of event).
+    pub stratum: StratumId,
+    /// Event time in logical ticks.
+    pub timestamp: u64,
+    /// Grouping key for keyed aggregations (e.g. hashtag, flow 5-tuple).
+    pub key: u64,
+    /// The measure being aggregated (bytes, engagement, latency, …).
+    pub value: f64,
+}
+
+impl Record {
+    /// Convenience constructor.
+    pub fn new(id: u64, stratum: StratumId, timestamp: u64, key: u64, value: f64) -> Self {
+        Record { id, stratum, timestamp, key, value }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction() {
+        let r = Record::new(1, 2, 3, 4, 5.0);
+        assert_eq!((r.id, r.stratum, r.timestamp, r.key), (1, 2, 3, 4));
+        assert_eq!(r.value, 5.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Trace recording and replay.
+//!
+//! Benchmarks must compare execution modes on *identical* inputs, so a
+//! generated stream can be flushed to a TSV trace and replayed. The format
+//! is one record per line: `id \t stratum \t timestamp \t key \t value`.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::workload::record::Record;
+
+/// Write records to a TSV trace file.
+pub fn write_trace(path: impl AsRef<Path>, records: &[Record]) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    for r in records {
+        writeln!(w, "{}\t{}\t{}\t{}\t{}", r.id, r.stratum, r.timestamp, r.key, r.value)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a TSV trace file back.
+pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<Record>> {
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut out = Vec::new();
+    for (idx, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let parse_err =
+            |what: &str| Error::Config(format!("trace line {}: bad {what}", idx + 1));
+        let id = parts.next().and_then(|s| s.parse().ok()).ok_or_else(|| parse_err("id"))?;
+        let stratum =
+            parts.next().and_then(|s| s.parse().ok()).ok_or_else(|| parse_err("stratum"))?;
+        let timestamp =
+            parts.next().and_then(|s| s.parse().ok()).ok_or_else(|| parse_err("timestamp"))?;
+        let key = parts.next().and_then(|s| s.parse().ok()).ok_or_else(|| parse_err("key"))?;
+        let value =
+            parts.next().and_then(|s| s.parse().ok()).ok_or_else(|| parse_err("value"))?;
+        out.push(Record { id, stratum, timestamp, key, value });
+    }
+    Ok(out)
+}
+
+/// Replay a recorded trace tick by tick (records grouped by timestamp).
+pub struct TraceReplay {
+    records: Vec<Record>,
+    pos: usize,
+    now: u64,
+}
+
+impl TraceReplay {
+    /// Wrap an in-memory trace (must be sorted by timestamp).
+    pub fn new(mut records: Vec<Record>) -> Self {
+        records.sort_by_key(|r| (r.timestamp, r.id));
+        TraceReplay { records, pos: 0, now: 0 }
+    }
+
+    /// Load from file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self::new(read_trace(path)?))
+    }
+
+    /// All records with `timestamp == now`, advancing the clock.
+    pub fn tick(&mut self) -> Vec<Record> {
+        let t = self.now;
+        self.now += 1;
+        let start = self.pos;
+        while self.pos < self.records.len() && self.records[self.pos].timestamp == t {
+            self.pos += 1;
+        }
+        self.records[start..self.pos].to_vec()
+    }
+
+    /// True when fully replayed.
+    pub fn exhausted(&self) -> bool {
+        self.pos >= self.records.len()
+    }
+
+    /// Total record count.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True if the trace is empty.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::MultiStream;
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let mut ms = MultiStream::paper_section5(4);
+        let recs = ms.take_records(1000);
+        let dir = std::env::temp_dir().join("incapprox_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tsv");
+        write_trace(&path, &recs).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(recs.len(), back.len());
+        for (a, b) in recs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.stratum, b.stratum);
+            assert_eq!(a.timestamp, b.timestamp);
+            assert_eq!(a.key, b.key);
+            assert!((a.value - b.value).abs() < 1e-9 * a.value.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn replay_groups_by_tick() {
+        let recs = vec![
+            Record::new(0, 0, 0, 0, 1.0),
+            Record::new(1, 0, 0, 0, 2.0),
+            Record::new(2, 0, 2, 0, 3.0),
+        ];
+        let mut replay = TraceReplay::new(recs);
+        assert_eq!(replay.tick().len(), 2);
+        assert_eq!(replay.tick().len(), 0); // tick 1 empty
+        assert_eq!(replay.tick().len(), 1);
+        assert!(replay.exhausted());
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let dir = std::env::temp_dir().join("incapprox_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tsv");
+        std::fs::write(&path, "1\t2\tnot_a_number\t4\t5.0\n").unwrap();
+        assert!(read_trace(&path).is_err());
+    }
+
+    #[test]
+    fn read_skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("incapprox_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.tsv");
+        std::fs::write(&path, "# header\n\n1\t0\t0\t0\t1.5\n").unwrap();
+        let recs = read_trace(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].value, 1.5);
+    }
+}

@@ -1,0 +1,42 @@
+//! Shared helpers for the integration test suite, including a small
+//! property-testing harness (no `proptest` in the offline crate set —
+//! see DESIGN.md substitution table).
+
+use incapprox::util::rng::Rng;
+use incapprox::workload::record::Record;
+
+/// Run a property over `cases` random seeds; on failure, panic with the
+/// failing seed so the case can be replayed deterministically.
+pub fn check_property<F: Fn(&mut Rng)>(name: &str, cases: usize, base_seed: u64, prop: F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E37_79B9).wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// A random record with bounded fields.
+pub fn arb_record(rng: &mut Rng, id: u64, strata: u32, t_max: u64) -> Record {
+    Record::new(
+        id,
+        rng.below(strata as usize) as u32,
+        rng.below(t_max as usize + 1) as u64,
+        rng.below(64) as u64,
+        rng.normal_with(10.0, 4.0),
+    )
+}
+
+/// A random batch of records with unique, increasing ids.
+pub fn arb_batch(rng: &mut Rng, n: usize, strata: u32, t_max: u64) -> Vec<Record> {
+    (0..n as u64).map(|i| arb_record(rng, i, strata, t_max)).collect()
+}

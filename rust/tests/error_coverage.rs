@@ -1,0 +1,66 @@
+//! Statistical validation of the §3.5 error bounds: measured CI coverage
+//! must track the nominal confidence level across independent seeds.
+
+mod common;
+
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::Coordinator;
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::trace::TraceReplay;
+
+/// One independent trial: returns (approx value, margin, exact value) for
+/// the first steady-state window under `seed`.
+fn trial(seed: u64, confidence: f64) -> (f64, f64, f64) {
+    let cfg = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 2000,
+        slide: 100,
+        seed,
+        confidence,
+        ..SystemConfig::default()
+    };
+    let records = MultiStream::paper_section5(seed).take_records(2000 + 2 * 100);
+    let run = |mode: ExecModeSpec| {
+        let mut coord = Coordinator::new(SystemConfig { mode, ..cfg.clone() });
+        let mut replay = TraceReplay::new(records.clone());
+        let mut buf = Vec::new();
+        let mut last = None;
+        let mut warm = false;
+        while !replay.exhausted() {
+            buf.extend(replay.tick());
+            let need = if warm { cfg.slide } else { cfg.window_size };
+            if buf.len() >= need {
+                last = Some(coord.process_batch(buf.drain(..need).collect()).unwrap());
+                warm = true;
+            }
+        }
+        last.unwrap()
+    };
+    let a = run(ExecModeSpec::IncApprox);
+    let e = run(ExecModeSpec::Native);
+    (a.estimate.value, a.estimate.margin, e.estimate.value)
+}
+
+#[test]
+fn coverage_tracks_nominal_95() {
+    let trials = 60;
+    let covered = (0..trials)
+        .filter(|&i| {
+            let (v, m, truth) = trial(5000 + 13 * i, 0.95);
+            (v - truth).abs() <= m
+        })
+        .count();
+    let rate = covered as f64 / trials as f64;
+    // Binomial(60, .95): 3σ ≈ 0.085.
+    assert!(rate >= 0.85, "95% CI coverage only {rate}");
+}
+
+#[test]
+fn higher_confidence_wider_interval() {
+    let mut margins = Vec::new();
+    for conf in [0.80, 0.95, 0.99] {
+        let (_, m, _) = trial(42, conf);
+        margins.push(m);
+    }
+    assert!(margins[0] < margins[1] && margins[1] < margins[2], "{margins:?}");
+}

@@ -1,0 +1,136 @@
+//! Failure injection across the §6.3 recovery policies: memo loss must
+//! never corrupt outputs, only efficiency.
+
+mod common;
+
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::{Coordinator, WindowReport};
+use incapprox::fault::RecoveryPolicy;
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::trace::TraceReplay;
+
+fn run_with_faults(
+    policy: RecoveryPolicy,
+    loss_p: f64,
+    records: &[incapprox::workload::Record],
+    mode: ExecModeSpec,
+) -> Vec<WindowReport> {
+    let cfg = SystemConfig {
+        mode,
+        window_size: 2500,
+        slide: 125,
+        seed: 99,
+        chunk_size: 32,
+        fault_memo_loss: loss_p,
+        ..SystemConfig::default()
+    };
+    let mut coord = Coordinator::new(cfg.clone()).with_recovery(policy);
+    let mut replay = TraceReplay::new(records.to_vec());
+    let mut buf = Vec::new();
+    let mut out = Vec::new();
+    let mut warm = false;
+    while !replay.exhausted() {
+        buf.extend(replay.tick());
+        let need = if warm { cfg.slide } else { cfg.window_size };
+        if buf.len() >= need {
+            out.push(coord.process_batch(buf.drain(..need).collect()).unwrap());
+            warm = true;
+        }
+    }
+    out
+}
+
+fn trace(n_windows: usize) -> Vec<incapprox::workload::Record> {
+    MultiStream::paper_section5(99).take_records(2500 + n_windows * 125)
+}
+
+#[test]
+fn incremental_exactness_survives_any_fault_policy() {
+    // IncrementalOnly is an exact mode; under random memo loss its output
+    // must STILL equal native's, for every policy.
+    let records = trace(15);
+    let native = run_with_faults(RecoveryPolicy::ContinueWithout, 0.0, &records, ExecModeSpec::Native);
+    for policy in [
+        RecoveryPolicy::ContinueWithout,
+        RecoveryPolicy::LineageRecompute,
+        RecoveryPolicy::Replicated,
+    ] {
+        let faulty = run_with_faults(policy, 0.5, &records, ExecModeSpec::IncrementalOnly);
+        assert_eq!(native.len(), faulty.len());
+        let mut fault_count = 0;
+        for (n, f) in native.iter().zip(&faulty) {
+            fault_count += f.fault_injected as usize;
+            let rel =
+                (n.estimate.value - f.estimate.value).abs() / n.estimate.value.abs();
+            assert!(
+                rel < 1e-9,
+                "{policy:?} window {}: {} vs {}",
+                n.window_id,
+                f.estimate.value,
+                n.estimate.value
+            );
+        }
+        assert!(fault_count > 2, "{policy:?}: faults never fired");
+    }
+}
+
+#[test]
+fn replication_keeps_efficiency_lineage_keeps_correctness() {
+    let records = trace(20);
+    let lineage =
+        run_with_faults(RecoveryPolicy::LineageRecompute, 1.0, &records, ExecModeSpec::IncApprox);
+    let replicated =
+        run_with_faults(RecoveryPolicy::Replicated, 1.0, &records, ExecModeSpec::IncApprox);
+    let work = |rs: &[WindowReport]| -> usize {
+        rs.iter().skip(1).map(|r| r.fresh_items).sum()
+    };
+    // With memo lost EVERY window, lineage recomputes everything while the
+    // replica preserves incremental state.
+    assert!(
+        work(&replicated) * 3 < work(&lineage),
+        "replica {} vs lineage {}",
+        work(&replicated),
+        work(&lineage)
+    );
+    // Both still produce sane bounded estimates.
+    for r in lineage.iter().chain(&replicated) {
+        assert!(r.estimate.value.is_finite() && r.estimate.margin >= 0.0);
+    }
+}
+
+#[test]
+fn faulty_incapprox_stays_within_bounds_of_native() {
+    let records = trace(20);
+    let native =
+        run_with_faults(RecoveryPolicy::ContinueWithout, 0.0, &records, ExecModeSpec::Native);
+    let faulty = run_with_faults(
+        RecoveryPolicy::ContinueWithout,
+        0.3,
+        &records,
+        ExecModeSpec::IncApprox,
+    );
+    let covered = native
+        .iter()
+        .zip(&faulty)
+        .filter(|(n, f)| (n.estimate.value - f.estimate.value).abs() <= f.estimate.margin)
+        .count();
+    assert!(
+        covered as f64 >= 0.7 * native.len() as f64,
+        "coverage under faults: {covered}/{}",
+        native.len()
+    );
+}
+
+#[test]
+fn fault_rate_reported_accurately() {
+    let records = trace(30);
+    let reports = run_with_faults(
+        RecoveryPolicy::LineageRecompute,
+        0.4,
+        &records,
+        ExecModeSpec::IncApprox,
+    );
+    let injected = reports.iter().filter(|r| r.fault_injected).count();
+    let rate = injected as f64 / reports.len() as f64;
+    assert!((0.15..=0.7).contains(&rate), "rate {rate}");
+}

@@ -1,0 +1,104 @@
+//! PJRT end-to-end: the coordinator through the AOT-compiled artifacts
+//! must match the native backend numerically. These tests skip (with a
+//! notice) when `artifacts/` is not built; `make test` builds it first.
+
+mod common;
+
+use std::sync::Arc;
+
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::Coordinator;
+use incapprox::runtime::{PjrtBackend, PjrtRuntime};
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::trace::TraceReplay;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn run(
+    mode: ExecModeSpec,
+    backend: Option<Arc<PjrtRuntime>>,
+    records: &[incapprox::workload::Record],
+    map_rounds: u32,
+) -> Vec<f64> {
+    let cfg = SystemConfig {
+        mode,
+        window_size: 2500,
+        slide: 125,
+        seed: 5,
+        chunk_size: 32,
+        map_rounds,
+        ..SystemConfig::default()
+    };
+    let mut coord = Coordinator::new(cfg.clone());
+    if let Some(rt) = backend {
+        coord = coord.with_backend(Box::new(PjrtBackend::with_rounds(rt, map_rounds)));
+    }
+    let mut replay = TraceReplay::new(records.to_vec());
+    let mut buf = Vec::new();
+    let mut out = Vec::new();
+    let mut warm = false;
+    while !replay.exhausted() {
+        buf.extend(replay.tick());
+        let need = if warm { cfg.slide } else { cfg.window_size };
+        if buf.len() >= need {
+            out.push(coord.process_batch(buf.drain(..need).collect()).unwrap().estimate.value);
+            warm = true;
+        }
+    }
+    out
+}
+
+#[test]
+fn pjrt_coordinator_matches_native_coordinator() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Arc::new(PjrtRuntime::load(dir).unwrap());
+    let records = MultiStream::paper_section5(5).take_records(2500 + 10 * 125);
+    for rounds in [0u32, 16] {
+        let native = run(ExecModeSpec::IncApprox, None, &records, rounds);
+        let pjrt = run(ExecModeSpec::IncApprox, Some(rt.clone()), &records, rounds);
+        assert_eq!(native.len(), pjrt.len());
+        for (i, (n, p)) in native.iter().zip(&pjrt).enumerate() {
+            let rel = (n - p).abs() / n.abs().max(1.0);
+            assert!(rel < 1e-3, "rounds={rounds} window {i}: native {n} vs pjrt {p}");
+        }
+    }
+    assert!(rt.execution_count() > 0, "pjrt path never executed");
+}
+
+#[test]
+fn pjrt_all_modes_run() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Arc::new(PjrtRuntime::load(dir).unwrap());
+    let records = MultiStream::paper_section5(6).take_records(2500 + 4 * 125);
+    for mode in [
+        ExecModeSpec::Native,
+        ExecModeSpec::IncrementalOnly,
+        ExecModeSpec::ApproxOnly,
+        ExecModeSpec::IncApprox,
+    ] {
+        let out = run(mode, Some(rt.clone()), &records, 0);
+        assert!(!out.is_empty(), "{}", mode.name());
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn missing_rounds_variant_is_clear_error() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    let items: Vec<_> = (0..64u64)
+        .map(|i| incapprox::workload::Record::new(i, 0, 0, 0, i as f64))
+        .collect();
+    let chunks = incapprox::job::chunk::chunk_stratum(0, items, 32);
+    let refs: Vec<_> = chunks.iter().collect();
+    let err = rt.chunk_moments(&refs, 9999).unwrap_err().to_string();
+    assert!(err.contains("9999"), "unhelpful error: {err}");
+}

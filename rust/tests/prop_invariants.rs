@@ -1,0 +1,212 @@
+//! Property tests over the coordinator's core invariants (hand-rolled
+//! harness; see `common::check_property`).
+
+mod common;
+
+use std::collections::{BTreeMap, HashSet};
+
+use common::{arb_batch, check_property};
+use incapprox::job::chunk::chunk_stratum;
+use incapprox::job::moments::Moments;
+use incapprox::sac::ddg::{Ddg, NodeKind};
+use incapprox::sampling::biased::bias_sample;
+use incapprox::sampling::stratified::StratifiedSampler;
+use incapprox::util::rng::Rng;
+use incapprox::workload::record::Record;
+
+#[test]
+fn prop_stratified_sample_is_valid_subsample() {
+    check_property("stratified subsample", 60, 1, |rng| {
+        let n = 200 + rng.below(3000);
+        let strata = 1 + rng.below(6) as u32;
+        let items = arb_batch(rng, n, strata, 50);
+        let sample_size = 1 + rng.below(n);
+        let t = 1 + rng.below(600);
+        let s = StratifiedSampler::sample_window(&items, sample_size, t, rng.fork());
+
+        // (1) Never exceeds the budget (ARS transients may undershoot).
+        assert!(s.total_len() <= sample_size.max(strata as usize));
+        // (2) Populations are exact per-stratum counts.
+        let mut counts: BTreeMap<u32, u64> = BTreeMap::new();
+        for r in &items {
+            *counts.entry(r.stratum).or_default() += 1;
+        }
+        assert_eq!(s.population, counts);
+        // (3) Every sampled item is from the window, assigned to its own
+        //     stratum, and appears at most once.
+        let ids: HashSet<u64> = items.iter().map(|r| r.id).collect();
+        let mut seen = HashSet::new();
+        for (&stratum, recs) in &s.per_stratum {
+            for r in recs {
+                assert_eq!(r.stratum, stratum);
+                assert!(ids.contains(&r.id));
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bias_preserves_sizes_and_dedups() {
+    check_property("bias invariants", 80, 2, |rng| {
+        let n = 100 + rng.below(1500);
+        let strata = 1 + rng.below(5) as u32;
+        let items = arb_batch(rng, n, strata, 50);
+        let sample =
+            StratifiedSampler::sample_window(&items, 1 + rng.below(n), 200, rng.fork());
+        // Memo: random subset of the window, plus some out-of-window junk
+        // ids to be ignored via per-stratum lists.
+        let mut memo: BTreeMap<u32, Vec<Record>> = BTreeMap::new();
+        for r in items.iter().filter(|_| rng.bernoulli(0.3)) {
+            memo.entry(r.stratum).or_default().push(*r);
+        }
+        let out = bias_sample(&sample, &memo);
+
+        for (&stratum, fresh) in &sample.per_stratum {
+            let biased = out.stratum(stratum);
+            // (1) Per-stratum size preserved exactly.
+            assert_eq!(biased.len(), fresh.len(), "stratum {stratum}");
+            // (2) No duplicates.
+            let mut ids = HashSet::new();
+            for r in biased {
+                assert!(ids.insert(r.id));
+                assert_eq!(r.stratum, stratum);
+            }
+            // (3) Memo priority: reused == min(x, y) when memo ∩ sample
+            //     dedup cannot reduce it (reused counts memo items kept).
+            let x = memo.get(&stratum).map(Vec::len).unwrap_or(0);
+            let y = fresh.len();
+            let reused = out.memo_reused[&stratum];
+            assert!(reused <= y && reused <= x);
+            assert_eq!(reused, x.min(y), "memo priority violated");
+        }
+    });
+}
+
+#[test]
+fn prop_chunking_partitions_input() {
+    check_property("chunking partition", 80, 3, |rng| {
+        let n = rng.below(3000);
+        let items = arb_batch(rng, n, 1, 50);
+        let target = 1 + rng.below(200);
+        let chunks = chunk_stratum(0, items.clone(), target);
+        // Union of chunks == input, in order, no loss, size cap held.
+        let mut flat = Vec::new();
+        for c in &chunks {
+            assert!(c.len() <= 4 * target);
+            assert!(!c.is_empty());
+            flat.extend(c.items.iter().map(|r| r.id));
+        }
+        let want: Vec<u64> = items.iter().map(|r| r.id).collect();
+        assert_eq!(flat, want);
+    });
+}
+
+#[test]
+fn prop_chunk_hashes_unique_per_content() {
+    check_property("chunk hash uniqueness", 40, 4, |rng| {
+        let items = arb_batch(rng, 2000, 1, 50);
+        let chunks = chunk_stratum(0, items, 32);
+        let hashes: HashSet<u64> = chunks.iter().map(|c| c.hash).collect();
+        assert_eq!(hashes.len(), chunks.len(), "hash collision in window");
+    });
+}
+
+#[test]
+fn prop_moments_combine_matches_direct() {
+    check_property("moments combine", 100, 5, |rng| {
+        let n = 1 + rng.below(500);
+        let values: Vec<f64> = (0..n).map(|_| rng.normal_with(0.0, 100.0)).collect();
+        let split = rng.below(n + 1);
+        let (a, b) = values.split_at(split);
+        let combined = Moments::from_values(a).combine(&Moments::from_values(b));
+        let direct = Moments::from_values(&values);
+        let tol = 1e-9 * direct.sumsq.abs().max(1.0);
+        assert!((combined.sum - direct.sum).abs() <= tol);
+        assert!((combined.sumsq - direct.sumsq).abs() <= tol);
+        assert_eq!(combined.count, direct.count);
+        assert_eq!(combined.min, direct.min);
+        assert_eq!(combined.max, direct.max);
+        // Inverse undoes (additive fields).
+        let back = combined.inverse_combine(&Moments::from_values(b));
+        assert!((back.sum - Moments::from_values(a).sum).abs() <= tol);
+    });
+}
+
+#[test]
+fn prop_ddg_propagation_closure() {
+    check_property("ddg closure", 60, 6, |rng| {
+        // Random DAG: edges only from lower to higher node index.
+        let n = 2 + rng.below(60);
+        let mut g = Ddg::new();
+        let nodes: Vec<_> =
+            (0..n).map(|i| g.add_node(NodeKind::Map { chunk_hash: i as u64 })).collect();
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.bernoulli(0.1) {
+                    g.add_edge(nodes[i], nodes[j]);
+                    edges.push((i, j));
+                }
+            }
+        }
+        let changed: Vec<_> =
+            nodes.iter().copied().filter(|_| rng.bernoulli(0.2)).collect();
+        let affected = g.propagate(&changed);
+        let aset: HashSet<_> = affected.iter().copied().collect();
+        // (1) Changed ⊆ affected.
+        for c in &changed {
+            assert!(aset.contains(c));
+        }
+        // (2) Closure: an edge out of an affected node lands in the set.
+        for &(i, j) in &edges {
+            if aset.contains(&nodes[i]) {
+                assert!(aset.contains(&nodes[j]), "edge {i}->{j} escapes closure");
+            }
+        }
+        // (3) Minimality: affected nodes not in `changed` have an affected
+        //     predecessor.
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(i, j) in &edges {
+            preds[j].push(i);
+        }
+        let changed_set: HashSet<_> = changed.iter().copied().collect();
+        for node in &affected {
+            if !changed_set.contains(node) {
+                let has_affected_pred =
+                    preds[node.0].iter().any(|&p| aset.contains(&nodes[p]));
+                assert!(has_affected_pred, "node {node:?} affected without cause");
+            }
+        }
+        // (4) Topological order within the affected set.
+        let pos: std::collections::HashMap<_, _> =
+            affected.iter().enumerate().map(|(k, v)| (*v, k)).collect();
+        for &(i, j) in &edges {
+            if let (Some(&pi), Some(&pj)) = (pos.get(&nodes[i]), pos.get(&nodes[j])) {
+                assert!(pi < pj, "order violated for {i}->{j}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_reservoir_capacity_and_membership() {
+    check_property("reservoir", 80, 7, |rng| {
+        let cap = 1 + rng.below(50);
+        let n = rng.below(2000);
+        let mut res = incapprox::sampling::reservoir::Reservoir::new(cap);
+        let mut rng2 = Rng::new(rng.next_u64());
+        let items = arb_batch(rng, n, 1, 10);
+        for r in &items {
+            res.offer(*r, &mut rng2);
+        }
+        assert_eq!(res.len(), cap.min(n));
+        assert_eq!(res.seen(), n as u64);
+        let ids: HashSet<u64> = items.iter().map(|r| r.id).collect();
+        let mut seen = HashSet::new();
+        for r in res.items() {
+            assert!(ids.contains(&r.id));
+            assert!(seen.insert(r.id), "reservoir duplicate");
+        }
+    });
+}
