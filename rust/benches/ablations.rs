@@ -1,17 +1,23 @@
 //! Ablations over the design choices DESIGN.md calls out.
 //!
+//! **Paper mapping:** no single thesis figure — these isolate the knobs
+//! behind Figure 5.1 and Algorithm 2/4: (1) biased vs unbiased sampling
+//! (Algorithm 4, the marriage's key knob) in reuse and computed items;
+//! (2) reservoir re-allocation interval `T` of Algorithm 2 in
+//! proportional-allocation error vs sampling cost; (3) chunk size
+//! (§3.4's memoization granularity) in per-window work vs bookkeeping;
+//! (4) recompute epoch, the drift-control cost of the §4.2.2
+//! inverse-reduce path.
+//!
+//! **JSON:** emits `target/bench-results/ablations.json` with series
+//! `biasing`, `realloc_interval`, `chunk_size`, and `recompute_epoch` —
+//! one point per printed table row.
+//!
 //! ```bash
 //! cargo bench --bench ablations
 //! ```
-//!
-//! 1. Biased vs unbiased sampling (the marriage's key knob): reuse and
-//!    computed items with and without biasing.
-//! 2. Reservoir re-allocation interval `T`: proportional-allocation error
-//!    vs sampling cost.
-//! 3. Chunk size: per-window work vs chunk bookkeeping.
-//! 4. Recompute epoch: drift-control cost of the inverse-reduce path.
 
-use incapprox::bench_harness::{black_box, section, Bench};
+use incapprox::bench_harness::{black_box, section, Bench, JsonReporter};
 use incapprox::config::system::{ExecModeSpec, SystemConfig};
 use incapprox::coordinator::Coordinator;
 use incapprox::sampling::stratified::StratifiedSampler;
@@ -58,6 +64,7 @@ fn main() {
     let windows = 15usize;
     let mut gen = MultiStream::paper_section5(base.seed);
     let records = gen.take_records(base.window_size + (windows + 2) * base.slide);
+    let mut json = JsonReporter::for_bench("ablations");
 
     section("Ablation 1: biased (incapprox) vs unbiased (approx-only) sampling");
     println!("variant\treuse%\tcomputed\tmean_lat_ms");
@@ -67,6 +74,10 @@ fn main() {
         let cfg = SystemConfig { mode, ..base.clone() };
         let (reuse, computed, lat) = steady_run(&cfg, &records, windows);
         println!("{label}\t{reuse:.1}\t{computed}\t{lat:.3}");
+        json.record_point(
+            &format!("biasing:{label}"),
+            &[("reuse_pct", reuse), ("computed", computed as f64), ("mean_lat_ms", lat)],
+        );
     }
 
     section("Ablation 2: re-allocation interval T (proportional error vs cost)");
@@ -94,6 +105,10 @@ fn main() {
             black_box(s.total_len());
         });
         println!("{t}\t{max_err:.2}\t{:.3}", m.mean_ms);
+        json.record_point(
+            "realloc_interval",
+            &[("t", t as f64), ("max_prop_err_pct", max_err), ("sample_ms", m.mean_ms)],
+        );
     }
 
     section("Ablation 3: chunk size (work granularity)");
@@ -106,6 +121,10 @@ fn main() {
         };
         let (_, computed, lat) = steady_run(&cfg, &records, windows);
         println!("{chunk}\t{computed}\t{lat:.3}");
+        json.record_point(
+            "chunk_size",
+            &[("chunk", chunk as f64), ("computed", computed as f64), ("mean_lat_ms", lat)],
+        );
     }
 
     section("Ablation 4: recompute epoch (drift control vs work)");
@@ -118,5 +137,11 @@ fn main() {
         };
         let (_, computed, lat) = steady_run(&cfg, &records, windows);
         println!("{epoch}\t{computed}\t{lat:.3}");
+        json.record_point(
+            "recompute_epoch",
+            &[("epoch", epoch as f64), ("computed", computed as f64), ("mean_lat_ms", lat)],
+        );
     }
+
+    json.finish().expect("write bench results");
 }

@@ -1,16 +1,22 @@
 //! Error-bound validity (§3.5): measured CI coverage vs nominal, and
 //! margin scaling with sample size.
 //!
+//! **Paper mapping:** validates the thesis **§3.5.2 error-bound
+//! construction (Eqs 3.2–3.4)** and regenerates the accuracy-vs-budget
+//! trade-off the §5.1.2 "accuracy loss" discussion reports: for each
+//! confidence level, the fraction of windows whose interval contains the
+//! exact (native) output is compared to the nominal level, and the
+//! relative bound width is swept over sampling fractions.
+//!
+//! **JSON:** emits `target/bench-results/error_bounds.json` with series
+//! `coverage` (mode, confidence, covered%, mean bound%) and `budget`
+//! (sample%, mean bound%, mean error%).
+//!
 //! ```bash
 //! cargo bench --bench error_bounds
 //! ```
-//!
-//! For each confidence level, many windows are processed and the fraction
-//! whose interval contains the exact (native) output is compared to the
-//! nominal level. Also prints relative error-bound width vs sample size —
-//! the accuracy-vs-budget trade-off curve of the query-budget interface.
 
-use incapprox::bench_harness::section;
+use incapprox::bench_harness::{section, JsonReporter};
 use incapprox::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
 use incapprox::coordinator::Coordinator;
 use incapprox::workload::gen::MultiStream;
@@ -55,6 +61,7 @@ fn main() {
         ..SystemConfig::default()
     };
     let windows = 40usize;
+    let mut json = JsonReporter::for_bench("error_bounds");
 
     section("CI coverage vs nominal confidence (sample 10%, 5 windows × 20 seeds)");
     println!("mode\tconfidence\tcovered%\tmean_rel_bound%");
@@ -90,6 +97,14 @@ fn main() {
                 covered as f64 / total as f64 * 100.0,
                 bound / total as f64 * 100.0
             );
+            json.record_point(
+                &format!("coverage:{}", mode.name()),
+                &[
+                    ("confidence_pct", conf * 100.0),
+                    ("covered_pct", covered as f64 / total as f64 * 100.0),
+                    ("mean_rel_bound_pct", bound / total as f64 * 100.0),
+                ],
+            );
         }
     }
 
@@ -112,5 +127,15 @@ fn main() {
             .sum::<f64>()
             / n;
         println!("{pct}\t{:.2}\t{:.2}", bound * 100.0, err * 100.0);
+        json.record_point(
+            "budget",
+            &[
+                ("sample_pct", pct as f64),
+                ("mean_rel_bound_pct", bound * 100.0),
+                ("mean_rel_err_pct", err * 100.0),
+            ],
+        );
     }
+
+    json.finish().expect("write bench results");
 }

@@ -1,18 +1,21 @@
 //! Figure 5.1 reproduction: effect of sample size, slide interval, window
 //! size, and arrival rate on memoization.
 //!
+//! **Paper mapping:** regenerates thesis **Figure 5.1(a)–(d)** (§5.1):
+//! (a) average memoized items per sub-stream vs sample size; (b) %
+//! memoized vs slide interval; (c) sample vs memoized for window-size
+//! change Δ; (d) memoization % per sub-stream under fluctuating arrival
+//! rates. Expected shapes: memoization ∝ sample size, ∝ 1/slide, ≈100%
+//! reuse for shrinking windows, and >97% under rate fluctuation.
+//!
+//! **JSON:** emits `target/bench-results/fig5_memoization.json` with one
+//! point per plotted table row, in series `fig5a`…`fig5d`.
+//!
 //! ```bash
 //! cargo bench --bench fig5_memoization
 //! ```
-//!
-//! Prints the same series the paper plots: (a) average memoized items per
-//! sub-stream vs sample size; (b) % memoized vs slide interval; (c) sample
-//! vs memoized for window-size change Δ; (d) memoization % under
-//! fluctuating arrival rates. Expected shapes (paper §5.1): memoization ∝
-//! sample size, ∝ 1/slide, ≈100% reuse for shrinking windows, and >97%
-//! under rate fluctuation.
 
-use incapprox::bench_harness::section;
+use incapprox::bench_harness::{section, JsonReporter};
 use incapprox::config::system::{ExecModeSpec, SystemConfig};
 use incapprox::coordinator::{Coordinator, WindowReport};
 use incapprox::workload::gen::MultiStream;
@@ -39,7 +42,7 @@ fn run(cfg: &SystemConfig, source: &mut MultiStream, windows: usize) -> Vec<Wind
         .collect()
 }
 
-fn fig_a() {
+fn fig_a(json: &mut JsonReporter) {
     section("Fig 5.1(a): avg memoized items per sub-stream vs sample size (slide 4%)");
     println!("sample%\tS1(rate3)\tS2(rate4)\tS3(rate5)");
     for pct in [10, 20, 40, 60, 80] {
@@ -57,10 +60,19 @@ fn fig_a() {
             *a /= reports.len() as f64;
         }
         println!("{pct}\t{:.0}\t{:.0}\t{:.0}", avg[0], avg[1], avg[2]);
+        json.record_point(
+            "fig5a",
+            &[
+                ("sample_pct", pct as f64),
+                ("s1_memoized", avg[0]),
+                ("s2_memoized", avg[1]),
+                ("s3_memoized", avg[2]),
+            ],
+        );
     }
 }
 
-fn fig_b() {
+fn fig_b(json: &mut JsonReporter) {
     section("Fig 5.1(b): % of sample memoized vs slide interval (sample 10%)");
     println!("slide%\tmemoized%");
     for pct in [1, 2, 4, 8, 16] {
@@ -70,10 +82,14 @@ fn fig_b() {
         let mean: f64 = reports.iter().map(|r| r.item_reuse_fraction()).sum::<f64>()
             / reports.len() as f64;
         println!("{pct}\t{:.1}", mean * 100.0);
+        json.record_point(
+            "fig5b",
+            &[("slide_pct", pct as f64), ("memoized_pct", mean * 100.0)],
+        );
     }
 }
 
-fn fig_c() {
+fn fig_c(json: &mut JsonReporter) {
     section("Fig 5.1(c): sample size vs memoized items for window change Δ (slide 2%, sample 10%)");
     println!("delta\tsample\tmemo_available");
     for delta in [-200i64, -100, 0, 100, 200] {
@@ -87,10 +103,18 @@ fn fig_c() {
         let r = coord.process_batch(source.take_records(c.slide)).unwrap();
         let memo_avail: usize = r.strata.values().map(|s| s.memo_available).sum();
         println!("{delta}\t{}\t{}", r.sample_size, memo_avail);
+        json.record_point(
+            "fig5c",
+            &[
+                ("delta", delta as f64),
+                ("sample", r.sample_size as f64),
+                ("memo_available", memo_avail as f64),
+            ],
+        );
     }
 }
 
-fn fig_d() {
+fn fig_d(json: &mut JsonReporter) {
     section("Fig 5.1(d): memoization % per sub-stream under fluctuating arrival rates");
     println!("phase\tS1%\tS2%\tS3(const)%\trates(S1,S2,S3)");
     let c = cfg(0.1, WINDOW * 4 / 100);
@@ -124,14 +148,25 @@ fn fig_d() {
             "{phase}\t{:.1}\t{:.1}\t{:.1}\t(t={t})",
             frac[0], frac[1], frac[2]
         );
+        json.record_point(
+            "fig5d",
+            &[
+                ("phase", phase as f64),
+                ("s1_pct", frac[0]),
+                ("s2_pct", frac[1]),
+                ("s3_pct", frac[2]),
+            ],
+        );
     }
     let min = all_reuse.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("min per-stream memoization across phases: {min:.1}% (paper: >97%)");
 }
 
 fn main() {
-    fig_a();
-    fig_b();
-    fig_c();
-    fig_d();
+    let mut json = JsonReporter::for_bench("fig5_memoization");
+    fig_a(&mut json);
+    fig_b(&mut json);
+    fig_c(&mut json);
+    fig_d(&mut json);
+    json.finish().expect("write bench results");
 }

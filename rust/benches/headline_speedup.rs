@@ -1,22 +1,37 @@
 //! Headline table: IncApprox speedup vs native Spark-Streaming-style
-//! execution and vs each paradigm alone (paper §1.3: ~2× over native,
-//! ~1.4× over the individual speedups).
+//! execution and vs each paradigm alone.
+//!
+//! **Paper mapping:** regenerates the thesis §1.3 / §5.2 headline
+//! comparison — IncApprox ~2× faster than native and ~1.4× faster than
+//! incremental-only or approx-only on the same trace — plus a
+//! serial-vs-sharded scaling table for the coordinator's parallel window
+//! pipeline (`num_workers` = 1 vs N), which has no paper counterpart
+//! (the paper's prototype is Spark-distributed; ours shards in-process).
+//!
+//! **JSON:** emits `target/bench-results/headline_speedup.json` with one
+//! `mode=<name>` measurement row per execution mode and one
+//! `sharded-scaling` point per worker count (throughput in records/s).
 //!
 //! ```bash
 //! cargo bench --bench headline_speedup
 //! ```
 //!
-//! All modes run the same recorded trace on the same (native) executor;
-//! timings come from the bench harness (warmup + repeated runs).
+//! All modes run the same recorded trace on the same executor; timings
+//! come from the bench harness (warmup + repeated runs).
 
-use incapprox::bench_harness::{black_box, section, Bench};
+use incapprox::bench_harness::{black_box, section, Bench, JsonReporter};
 use incapprox::config::system::{ExecModeSpec, SystemConfig};
 use incapprox::coordinator::Coordinator;
 use incapprox::workload::flows::FlowLogGen;
 use incapprox::workload::record::Record;
 use incapprox::workload::trace::TraceReplay;
 
-fn run_trace(mode: ExecModeSpec, cfg: &SystemConfig, records: &[Record], windows: usize) {
+fn run_trace(
+    mode: ExecModeSpec,
+    cfg: &SystemConfig,
+    records: &[Record],
+    windows: usize,
+) -> Coordinator {
     let mut replay = TraceReplay::new(records.to_vec());
     let mut coord = Coordinator::new(SystemConfig { mode, ..cfg.clone() });
     let mut buf: Vec<Record> = Vec::new();
@@ -32,6 +47,7 @@ fn run_trace(mode: ExecModeSpec, cfg: &SystemConfig, records: &[Record], windows
             done += 1;
         }
     }
+    coord
 }
 
 fn main() {
@@ -45,6 +61,7 @@ fn main() {
     };
     let mut gen = FlowLogGen::case_study(4, cfg.seed);
     let records = gen.take_records(cfg.window_size + windows * cfg.slide);
+    let mut json = JsonReporter::for_bench("headline_speedup");
 
     section("Headline: end-to-end time for 20 windows (10k window, 4% slide, 10% sample)");
     let mut times = Vec::new();
@@ -57,7 +74,10 @@ fn main() {
         let m = Bench::new(format!("mode={}", mode.name()))
             .warmup(1)
             .iters(5)
-            .run_and_report(|_| run_trace(mode, &cfg, &records, windows));
+            .run_and_report(|_| {
+                run_trace(mode, &cfg, &records, windows);
+            });
+        json.record_measurement(&format!("mode={}", mode.name()), &m);
         times.push((mode.name(), m.mean_ms));
     }
     let native = times[0].1;
@@ -67,4 +87,37 @@ fn main() {
     println!("\nspeedups: incapprox vs native {:.2}× (paper ~2×)", native / both);
     println!("          incapprox vs incremental-only {:.2}× (paper ~1.4×)", inc / both);
     println!("          incapprox vs approx-only {:.2}× (paper ~1.4×)", approx / both);
+
+    section("Sharded window pipeline: serial (num_workers=1) vs sharded throughput");
+    println!("workers\tmean_ms\trecords/s\tspeedup_vs_serial");
+    let mut serial_ms = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let wcfg = SystemConfig { num_workers: workers, ..cfg.clone() };
+        let m = Bench::new(format!("incapprox num_workers={workers}"))
+            .warmup(1)
+            .iters(5)
+            .run(|_| {
+                run_trace(ExecModeSpec::IncApprox, &wcfg, &records, windows);
+            });
+        if workers == 1 {
+            serial_ms = m.mean_ms;
+        }
+        let throughput = m.throughput(records.len());
+        let speedup = serial_ms / m.mean_ms;
+        println!("{workers}\t{:.3}\t{:.0}\t{:.2}×", m.mean_ms, throughput, speedup);
+        json.record_point(
+            "sharded-scaling",
+            &[
+                ("num_workers", workers as f64),
+                ("mean_ms", m.mean_ms),
+                ("records_per_s", throughput),
+                ("speedup_vs_serial", speedup),
+            ],
+        );
+        // Phase attribution for this worker count (one untimed run).
+        let coord = run_trace(ExecModeSpec::IncApprox, &wcfg, &records, windows);
+        println!("        {}", coord.phase_profile().summary());
+    }
+
+    json.finish().expect("write bench results");
 }

@@ -1,16 +1,22 @@
 //! Component micro-benchmarks: the L3 hot-path stages in isolation.
 //!
+//! **Paper mapping:** no thesis figure — this is the engineering
+//! counterpart: per-stage cost of the stages Algorithm 1 composes
+//! (stratified sampling = Algorithm 2, biasing = Algorithm 4, chunking +
+//! moments + memo ops = §3.4's memoization machinery, and the chunk
+//! backends incl. PJRT dispatch overhead when artifacts exist). Feeds
+//! the §Perf iteration loop in EXPERIMENTS.md.
+//!
+//! **JSON:** emits `target/bench-results/microbench.json` with one
+//! measurement row per stage.
+//!
 //! ```bash
 //! cargo bench --bench microbench
 //! ```
-//!
-//! Feeds the §Perf iteration loop in EXPERIMENTS.md: per-stage cost of
-//! stratified sampling, biasing, chunking, memo ops, moments, and (when
-//! artifacts exist) the PJRT call overhead vs the native backend.
 
 use std::collections::BTreeMap;
 
-use incapprox::bench_harness::{black_box, section, Bench};
+use incapprox::bench_harness::{black_box, section, Bench, JsonReporter};
 use incapprox::job::chunk::chunk_stratum;
 use incapprox::job::executor::{ChunkBackend, NativeBackend, WorkerPool};
 use incapprox::job::moments::Moments;
@@ -24,35 +30,41 @@ use incapprox::workload::record::Record;
 fn main() {
     let mut gen = MultiStream::paper_section5(42);
     let window = gen.take_records(10_000);
+    let mut json = JsonReporter::for_bench("microbench");
 
     section("sampling");
-    Bench::new("stratified_sample 10k window -> 1k").iters(30).run_and_report(|i| {
+    let m = Bench::new("stratified_sample 10k window -> 1k").iters(30).run_and_report(|i| {
         let s =
             StratifiedSampler::sample_window(&window, 1000, 500, Rng::new(i as u64));
         black_box(s.total_len());
     });
+    json.record_measurement("stratified_sample", &m);
 
     let sample = StratifiedSampler::sample_window(&window, 1000, 500, Rng::new(1));
     let memo: BTreeMap<_, _> = sample.per_stratum.clone();
-    Bench::new("bias_sample 1k vs 1k memo").iters(50).run_and_report(|_| {
+    let m = Bench::new("bias_sample 1k vs 1k memo").iters(50).run_and_report(|_| {
         black_box(bias_sample(&sample, &memo).total_len());
     });
+    json.record_measurement("bias_sample", &m);
 
     section("chunking + moments");
     let items: Vec<Record> = window[..1000].to_vec();
-    Bench::new("chunk_stratum 1000 items / target 64").iters(50).run_and_report(|_| {
+    let m = Bench::new("chunk_stratum 1000 items / target 64").iters(50).run_and_report(|_| {
         black_box(chunk_stratum(0, items.clone(), 64).len());
     });
-    Bench::new("moments 10k items (rounds=0)").iters(50).run_and_report(|_| {
+    json.record_measurement("chunk_stratum", &m);
+    let m = Bench::new("moments 10k items (rounds=0)").iters(50).run_and_report(|_| {
         black_box(Moments::from_records(&window).sum);
     });
-    Bench::new("moments 10k items (rounds=16)").iters(20).run_and_report(|_| {
+    json.record_measurement("moments_rounds0", &m);
+    let m = Bench::new("moments 10k items (rounds=16)").iters(20).run_and_report(|_| {
         black_box(Moments::from_records_mapped(&window, 16).sum);
     });
+    json.record_measurement("moments_rounds16", &m);
 
     section("memo store");
     let chunks = chunk_stratum(0, window.clone(), 64);
-    Bench::new("memo put+get 156 chunks").iters(50).run_and_report(|_| {
+    let m = Bench::new("memo put+get 156 chunks").iters(50).run_and_report(|_| {
         let mut store = MemoStore::new();
         for c in &chunks {
             store.put_chunk(c.hash, Moments::EMPTY, 0, 0);
@@ -61,32 +73,42 @@ fn main() {
             black_box(store.get_chunk(c.hash));
         }
     });
+    json.record_measurement("memo_put_get", &m);
 
     section("backends (156 chunks × ~64 items, rounds=16)");
     let refs: Vec<&incapprox::job::chunk::Chunk> = chunks.iter().collect();
     let native = NativeBackend::new(16);
-    Bench::new("native backend").iters(20).run_and_report(|_| {
+    let m = Bench::new("native backend").iters(20).run_and_report(|_| {
         black_box(native.compute(&refs).unwrap().len());
     });
+    json.record_measurement("backend_native", &m);
     let pool = WorkerPool::with_rounds(4, 16);
-    Bench::new("worker pool (4 threads)").iters(20).run_and_report(|_| {
+    let m = Bench::new("worker pool (4 threads)").iters(20).run_and_report(|_| {
         black_box(pool.compute(&refs).unwrap().len());
     });
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.tsv").exists() {
-        let rt = std::sync::Arc::new(
-            incapprox::runtime::PjrtRuntime::load(&artifacts).unwrap(),
-        );
-        let pjrt = incapprox::runtime::PjrtBackend::with_rounds(rt.clone(), 16);
-        Bench::new("pjrt backend (batched AOT call)").iters(20).run_and_report(|_| {
-            black_box(pjrt.compute(&refs).unwrap().len());
-        });
-        // Small-batch call overhead: 4 chunks only.
-        let small: Vec<&incapprox::job::chunk::Chunk> = chunks.iter().take(4).collect();
-        Bench::new("pjrt backend (4-chunk call)").iters(20).run_and_report(|_| {
-            black_box(pjrt.compute(&small).unwrap().len());
-        });
-    } else {
-        println!("(artifacts not built; skipping pjrt rows — run `make artifacts`)");
+    json.record_measurement("backend_worker_pool", &m);
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifacts.join("manifest.tsv").exists() {
+            let rt = std::sync::Arc::new(
+                incapprox::runtime::PjrtRuntime::load(&artifacts).unwrap(),
+            );
+            let pjrt = incapprox::runtime::PjrtBackend::with_rounds(rt.clone(), 16);
+            Bench::new("pjrt backend (batched AOT call)").iters(20).run_and_report(|_| {
+                black_box(pjrt.compute(&refs).unwrap().len());
+            });
+            // Small-batch call overhead: 4 chunks only.
+            let small: Vec<&incapprox::job::chunk::Chunk> = chunks.iter().take(4).collect();
+            Bench::new("pjrt backend (4-chunk call)").iters(20).run_and_report(|_| {
+                black_box(pjrt.compute(&small).unwrap().len());
+            });
+        } else {
+            println!("(artifacts not built; skipping pjrt rows — run `make artifacts`)");
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the `pjrt` feature; skipping pjrt rows)");
+
+    json.finish().expect("write bench results");
 }

@@ -13,6 +13,7 @@
 use incapprox::cli::Args;
 use incapprox::config::system::{ExecModeSpec, SystemConfig};
 use incapprox::coordinator::Coordinator;
+#[cfg(feature = "pjrt")]
 use incapprox::runtime::{PjrtBackend, PjrtRuntime};
 use incapprox::workload::flows::FlowLogGen;
 use incapprox::workload::trace::TraceReplay;
@@ -38,10 +39,18 @@ fn main() -> incapprox::Result<()> {
 
     let run = |mode: ExecModeSpec, use_pjrt: bool| -> incapprox::Result<Vec<_>> {
         let mut replay = TraceReplay::new(records.clone());
+        #[allow(unused_mut)]
         let mut coord = Coordinator::new(SystemConfig { mode, ..cfg.clone() });
         if use_pjrt {
-            let rt = std::sync::Arc::new(PjrtRuntime::load(&cfg.artifacts_dir)?);
-            coord = coord.with_backend(Box::new(PjrtBackend::new(rt)));
+            #[cfg(feature = "pjrt")]
+            {
+                let rt = std::sync::Arc::new(PjrtRuntime::load(&cfg.artifacts_dir)?);
+                coord = coord.with_backend(Box::new(PjrtBackend::new(rt)));
+            }
+            #[cfg(not(feature = "pjrt"))]
+            return Err(incapprox::Error::Config(
+                "--pjrt needs a build with `--features pjrt`".into(),
+            ));
         }
         let mut reports = Vec::new();
         let mut buf = Vec::new();

@@ -2,10 +2,15 @@
 //!
 //! Criterion is not reachable offline, so the bench binaries (declared
 //! with `harness = false`) use this module: warmup, repeated timed
-//! iterations, and mean / std / p50 / p99 reporting with aligned rows —
-//! enough to regenerate every figure/table in EXPERIMENTS.md.
+//! iterations, mean / std / p50 / p99 reporting with aligned rows,
+//! throughput derivation ([`Measurement::throughput`]), and machine-
+//! readable result emission ([`JsonReporter`], hand-rolled JSON — no
+//! `serde` offline) — enough to regenerate every figure/table in
+//! EXPERIMENTS.md and to diff runs across commits.
 
 use std::hint::black_box as std_black_box;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Re-exported black box to keep benched work alive.
@@ -29,6 +34,17 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Throughput implied by the mean iteration time when each iteration
+    /// processes `items_per_iter` items (items/second; 0 for degenerate
+    /// timings).
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        if self.mean_ms <= 0.0 {
+            0.0
+        } else {
+            items_per_iter as f64 / (self.mean_ms / 1e3)
+        }
+    }
+
     fn from_samples(mut samples: Vec<f64>) -> Measurement {
         assert!(!samples.is_empty());
         let n = samples.len();
@@ -93,6 +109,94 @@ impl Bench {
     }
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        // JSON has no Infinity/NaN; emit null.
+        "null".to_string()
+    }
+}
+
+/// Collects bench results as JSON rows and writes one `.json` file per
+/// bench under `target/bench-results/`, so figure data survives the run
+/// and can be diffed across commits.
+#[derive(Debug)]
+pub struct JsonReporter {
+    path: PathBuf,
+    rows: Vec<String>,
+}
+
+impl JsonReporter {
+    /// Reporter writing to `target/bench-results/<bench>.json` (relative
+    /// to the working directory `cargo bench` runs benches in — the
+    /// package root).
+    pub fn for_bench(bench: &str) -> Self {
+        Self::to_path(Path::new("target/bench-results").join(format!("{bench}.json")))
+    }
+
+    /// Reporter writing to an explicit path (tests).
+    pub fn to_path(path: impl Into<PathBuf>) -> Self {
+        JsonReporter { path: path.into(), rows: Vec::new() }
+    }
+
+    /// Record one data point of a named series — the numeric fields of
+    /// one printed table row.
+    pub fn record_point(&mut self, series: &str, fields: &[(&str, f64)]) {
+        let mut row = format!("{{\"series\": \"{}\"", json_escape(series));
+        for (k, v) in fields {
+            row.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
+        }
+        row.push('}');
+        self.rows.push(row);
+    }
+
+    /// Record a timing [`Measurement`] under a name.
+    pub fn record_measurement(&mut self, name: &str, m: &Measurement) {
+        self.record_point(
+            name,
+            &[
+                ("mean_ms", m.mean_ms),
+                ("std_ms", m.std_ms),
+                ("p50_ms", m.p50_ms),
+                ("p99_ms", m.p99_ms),
+                ("iters", m.iters as f64),
+            ],
+        );
+    }
+
+    /// Write the collected rows as a JSON array and return the path.
+    pub fn finish(self) -> std::io::Result<PathBuf> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(&self.path)?;
+        writeln!(f, "[")?;
+        for (i, row) in self.rows.iter().enumerate() {
+            let sep = if i + 1 == self.rows.len() { "" } else { "," };
+            writeln!(f, "  {row}{sep}")?;
+        }
+        writeln!(f, "]")?;
+        println!("(bench results written to {})", self.path.display());
+        Ok(self.path)
+    }
+}
+
 /// Print a section header for a figure/table reproduction.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -123,6 +227,42 @@ mod tests {
         let m = b.run(|_| calls += 1);
         assert_eq!(calls, 7);
         assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn throughput_from_mean() {
+        let m = Measurement { mean_ms: 100.0, std_ms: 0.0, p50_ms: 100.0, p99_ms: 100.0, iters: 1 };
+        assert!((m.throughput(1000) - 10_000.0).abs() < 1e-9);
+        let zero = Measurement { mean_ms: 0.0, ..m };
+        assert_eq!(zero.throughput(1000), 0.0);
+    }
+
+    #[test]
+    fn json_reporter_writes_valid_rows() {
+        let dir = std::env::temp_dir().join("incapprox_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let mut rep = JsonReporter::to_path(&path);
+        rep.record_point("fig5a", &[("sample_pct", 10.0), ("memoized", 123.0)]);
+        rep.record_measurement("mode=native", &Measurement {
+            mean_ms: 1.5,
+            std_ms: 0.1,
+            p50_ms: 1.4,
+            p99_ms: 2.0,
+            iters: 5,
+        });
+        rep.record_point("weird \"name\"", &[("nan", f64::NAN)]);
+        let out = rep.finish().unwrap();
+        let text = std::fs::read_to_string(out).unwrap();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"series\": \"fig5a\""));
+        assert!(text.contains("\"sample_pct\": 10"));
+        assert!(text.contains("\"mean_ms\": 1.5"));
+        assert!(text.contains("\\\"name\\\""));
+        assert!(text.contains("\"nan\": null"));
+        // Rows are comma-separated except the last.
+        assert_eq!(text.matches("},").count(), 2);
     }
 
     #[test]

@@ -43,6 +43,38 @@ impl ExecModeSpec {
     }
 }
 
+/// How strata are assigned to memo shards / worker partitions in the
+/// sharded window pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardStrategy {
+    /// Mix the stratum id through a 64-bit avalanche before taking the
+    /// shard modulus — robust to clustered stratum ids (default).
+    #[default]
+    Hash,
+    /// Plain `stratum % shards` — deterministic round-robin over dense,
+    /// consecutively numbered strata.
+    Modulo,
+}
+
+impl ShardStrategy {
+    /// Parse a strategy name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Ok(Self::Hash),
+            "modulo" | "round_robin" | "mod" => Ok(Self::Modulo),
+            other => Err(Error::Config(format!("unknown shard strategy `{other}`"))),
+        }
+    }
+
+    /// Display name used in reports and benches.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hash => "hash",
+            Self::Modulo => "modulo",
+        }
+    }
+}
+
 /// The user's query budget (§2.2 / §6.2). The virtual cost function in
 /// `budget/` turns this into a per-window sample size.
 #[derive(Debug, Clone, PartialEq)]
@@ -101,8 +133,14 @@ pub struct SystemConfig {
     pub use_pjrt: bool,
     /// Directory holding `manifest.tsv` + HLO artifacts.
     pub artifacts_dir: String,
-    /// Worker threads for the data-parallel job executor.
-    pub workers: usize,
+    /// Worker threads for the sharded window pipeline and the
+    /// data-parallel chunk executor. With `num_workers > 1` the
+    /// coordinator partitions strata across workers and computes fresh
+    /// chunks on a worker pool; `1` runs the serial reference path
+    /// (bit-identical outputs either way).
+    pub num_workers: usize,
+    /// How strata map to memo shards / worker partitions.
+    pub shard_strategy: ShardStrategy,
     /// Per-window probability of injected memo loss (fault testing).
     pub fault_memo_loss: f64,
 }
@@ -122,7 +160,8 @@ impl Default for SystemConfig {
             confidence: 0.95,
             use_pjrt: false,
             artifacts_dir: "artifacts".to_string(),
-            workers: 4,
+            num_workers: 4,
+            shard_strategy: ShardStrategy::Hash,
             fault_memo_loss: 0.0,
         }
     }
@@ -208,8 +247,18 @@ impl SystemConfig {
                 .ok_or_else(|| Error::Config("`runtime.artifacts_dir` must be a string".into()))?
                 .to_string();
         }
+        // `job.workers` is the legacy spelling of `job.num_workers`.
         if let Some(v) = get_usize(&map, "job.workers")? {
-            cfg.workers = v;
+            cfg.num_workers = v;
+        }
+        if let Some(v) = get_usize(&map, "job.num_workers")? {
+            cfg.num_workers = v;
+        }
+        if let Some(v) = map.get("job.shard_strategy") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("`job.shard_strategy` must be a string".into()))?;
+            cfg.shard_strategy = ShardStrategy::parse(s)?;
         }
         if let Some(v) = get_f64(&map, "fault.memo_loss")? {
             cfg.fault_memo_loss = v;
@@ -251,8 +300,8 @@ impl SystemConfig {
         if self.recompute_epoch == 0 {
             return Err(Error::Config("job.recompute_epoch must be > 0".into()));
         }
-        if self.workers == 0 {
-            return Err(Error::Config("job.workers must be > 0".into()));
+        if self.num_workers == 0 {
+            return Err(Error::Config("job.num_workers must be > 0".into()));
         }
         if !(0.0..=1.0).contains(&self.fault_memo_loss) {
             return Err(Error::Config("fault.memo_loss must be in [0, 1]".into()));
@@ -307,7 +356,7 @@ mod tests {
         assert_eq!(cfg.budget, BudgetSpec::Fraction(0.2));
         assert_eq!(cfg.realloc_interval, 250);
         assert_eq!(cfg.chunk_size, 128);
-        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.num_workers, 2);
         assert_eq!(cfg.confidence, 0.99);
         assert!(cfg.use_pjrt);
         assert_eq!(cfg.fault_memo_loss, 0.05);
@@ -340,6 +389,31 @@ mod tests {
             assert_eq!(ExecModeSpec::parse(s).unwrap().name(), s);
         }
         assert!(ExecModeSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn num_workers_and_shard_strategy_roundtrip() {
+        let cfg = SystemConfig::from_toml(
+            "[job]\nnum_workers = 8\nshard_strategy = \"modulo\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.num_workers, 8);
+        assert_eq!(cfg.shard_strategy, ShardStrategy::Modulo);
+        // Default strategy is hash; legacy `workers` key still accepted.
+        let cfg = SystemConfig::from_toml("[job]\nworkers = 3").unwrap();
+        assert_eq!(cfg.num_workers, 3);
+        assert_eq!(cfg.shard_strategy, ShardStrategy::Hash);
+        assert!(SystemConfig::from_toml("[job]\nshard_strategy = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn shard_strategy_parsing() {
+        assert_eq!(ShardStrategy::parse("hash").unwrap(), ShardStrategy::Hash);
+        assert_eq!(ShardStrategy::parse("modulo").unwrap(), ShardStrategy::Modulo);
+        assert_eq!(ShardStrategy::parse("round_robin").unwrap(), ShardStrategy::Modulo);
+        assert_eq!(ShardStrategy::Hash.name(), "hash");
+        assert_eq!(ShardStrategy::Modulo.name(), "modulo");
+        assert!(ShardStrategy::parse("nope").is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Algorithm 1 — the per-window driver.
+//! Algorithm 1 — the per-window driver, as a sharded parallel pipeline.
 //!
 //! Two incremental mechanisms cooperate, mirroring the paper:
 //!
@@ -14,6 +14,29 @@
 //!   to the change, not the sample. The delta moments themselves are
 //!   computed by the chunk backend (PJRT on the hot path). Every
 //!   `recompute_epoch` windows a full recompute bounds float drift.
+//!
+//! ## The sharded pipeline
+//!
+//! With `num_workers > 1` (the default config) the per-window hot path
+//! runs in three phases:
+//!
+//! 1. **Plan (parallel)** — strata are partitioned into shards (by the
+//!    configured [`ShardStrategy`](crate::config::system::ShardStrategy))
+//!    and each shard's strata are diffed/chunked/classified concurrently
+//!    on scoped worker threads. Memo lookups go through the stratum's
+//!    lock-free [`MemoShard`](crate::sac::memo::MemoShard) handle.
+//! 2. **Compute (batched)** — every fresh chunk from every stratum —
+//!    inverse-reduce deltas and full-path misses alike — lands in a
+//!    single [`ChunkBackend::compute`] call, so the PJRT backend pays one
+//!    dispatch per window and the worker pool splits one large batch.
+//! 3. **Finalize (serial)** — results are routed back per stratum in
+//!    deterministic order, moments combined, memo updated, bounds
+//!    estimated.
+//!
+//! Per-stratum work is bit-identical to the serial reference path
+//! (`num_workers = 1`): same chunks, same combine order, same RNG use —
+//! so the two configurations produce identical [`WindowReport`]s, which
+//! `sharded_pipeline_matches_serial_exactly` asserts.
 
 use std::collections::BTreeMap;
 
@@ -23,15 +46,15 @@ use crate::coordinator::report::{StratumReport, WindowReport};
 use crate::error::Result;
 use crate::fault::{FaultInjector, MemoReplica, RecoveryPolicy};
 use crate::job::chunk::{chunk_stratum, Chunk};
-use crate::job::executor::{ChunkBackend, NativeBackend};
+use crate::job::executor::{run_sharded, ChunkBackend, NativeBackend, WorkerPool};
 use crate::job::moments::Moments;
-use crate::job::plan::JobPlan;
-use crate::metrics::Stopwatch;
+use crate::job::plan::{JobPlan, PlannedChunk};
+use crate::metrics::{PhaseProfile, Stopwatch};
 use crate::sac::memo::MemoStore;
 use crate::sampling::biased::{bias_sample, BiasOutcome};
 use crate::sampling::stratified::{StratifiedSample, StratifiedSampler};
 use crate::stats::stratified::{estimate_sum, StratumAgg};
-use crate::util::hash::{FastMap, FastSet};
+use crate::util::hash::FastSet;
 use crate::util::rng::Rng;
 use crate::window::{CountWindow, TimeWindow, WindowSnapshot};
 use crate::workload::record::{Record, StratumId};
@@ -66,8 +89,103 @@ enum WindowState {
     Time(TimeWindow),
 }
 
+/// One stratum's planned work for the window, produced by the (possibly
+/// parallel) planning phase.
+enum StratumPlan {
+    /// §4.2.2 inverse-reduce: update the previous moments with the item
+    /// delta's chunk moments.
+    Delta {
+        /// Previous window's combined moments for the stratum.
+        base: Moments,
+        /// Chunks of items that entered the sample.
+        added: Vec<Chunk>,
+        /// Chunks of items that left the sample.
+        removed: Vec<Chunk>,
+        /// |added items| + |removed items| — the work this window.
+        delta_items: usize,
+    },
+    /// Figure 3.1 chunked full path with per-chunk memo classification.
+    Full {
+        /// Chunks in bias order with their memo hits.
+        planned: Vec<PlannedChunk>,
+    },
+}
+
+/// Plan one stratum: decide delta vs. full path and do the chunking and
+/// memo classification. Pure and read-only (lock-free shard lookups), so
+/// the coordinator runs it concurrently across strata.
+fn plan_one_stratum(
+    stratum: StratumId,
+    cur: &[Record],
+    prev: Option<&Vec<Record>>,
+    memo: &MemoStore,
+    memoizes: bool,
+    epoch_recompute: bool,
+    chunk_size: usize,
+) -> StratumPlan {
+    let shard = memo.shard(stratum);
+    let prev_m = shard.stratum_moments(stratum);
+    if !memoizes || prev.is_none() || prev_m.is_none() || epoch_recompute {
+        let planned = JobPlan::plan_stratum(
+            stratum,
+            cur.to_vec(),
+            if memoizes { Some(shard) } else { None },
+            chunk_size,
+        );
+        return StratumPlan::Full { planned };
+    }
+    let prev = prev.expect("checked");
+    let prev_ids: FastSet<u64> = prev.iter().map(|r| r.id).collect();
+    let cur_ids: FastSet<u64> = cur.iter().map(|r| r.id).collect();
+    let added: Vec<Record> =
+        cur.iter().filter(|r| !prev_ids.contains(&r.id)).copied().collect();
+    let removed: Vec<Record> =
+        prev.iter().filter(|r| !cur_ids.contains(&r.id)).copied().collect();
+    if added.len() + removed.len() >= cur.len() {
+        // Delta as big as the sample: recompute instead.
+        let planned =
+            JobPlan::plan_stratum(stratum, cur.to_vec(), Some(shard), chunk_size);
+        return StratumPlan::Full { planned };
+    }
+    let delta_items = added.len() + removed.len();
+    StratumPlan::Delta {
+        base: prev_m.expect("checked"),
+        added: chunk_stratum(stratum, added, chunk_size),
+        removed: chunk_stratum(stratum, removed, chunk_size),
+        delta_items,
+    }
+}
+
 /// The streaming coordinator: owns the window, the memo store, the cost
 /// function, and the chunk execution backend.
+///
+/// # Example
+///
+/// One warm-up window plus one slide of the paper's §5 stream:
+///
+/// ```
+/// use incapprox::config::system::{ExecModeSpec, SystemConfig};
+/// use incapprox::coordinator::Coordinator;
+/// use incapprox::workload::gen::MultiStream;
+///
+/// let cfg = SystemConfig {
+///     mode: ExecModeSpec::IncApprox,
+///     window_size: 2000,
+///     slide: 200,
+///     seed: 11,
+///     ..SystemConfig::default()
+/// };
+/// let mut gen = MultiStream::paper_section5(cfg.seed);
+/// let mut coord = Coordinator::new(cfg.clone());
+///
+/// let warm = coord.process_batch(gen.take_records(cfg.window_size)).unwrap();
+/// assert_eq!(warm.window_len, 2000);
+///
+/// let report = coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+/// // 10% sampling budget with a confidence interval around the estimate.
+/// assert!(report.sample_size <= report.window_len / 5);
+/// assert!(report.estimate.margin > 0.0);
+/// ```
 pub struct Coordinator {
     cfg: SystemConfig,
     window: WindowState,
@@ -79,12 +197,15 @@ pub struct Coordinator {
     recovery: RecoveryPolicy,
     replica: Option<MemoReplica>,
     windows_processed: u64,
+    profile: PhaseProfile,
 }
 
 impl Coordinator {
-    /// Coordinator from a config, with the native scalar backend and a
-    /// count-based window (use [`Coordinator::new_time_windowed`] for the
-    /// time-based model).
+    /// Coordinator from a config, with a count-based window (use
+    /// [`Coordinator::new_time_windowed`] for the time-based model). With
+    /// `num_workers > 1` the sharded pipeline is on: strata are planned
+    /// in parallel and fresh chunks execute on a worker pool; with `1`
+    /// the serial scalar path runs (identical outputs).
     pub fn new(cfg: SystemConfig) -> Self {
         let window = WindowState::Count(CountWindow::new(cfg.window_size));
         Self::with_window(cfg, window)
@@ -99,16 +220,25 @@ impl Coordinator {
     fn with_window(cfg: SystemConfig, window: WindowState) -> Self {
         let cost = budget::from_spec(&cfg.budget);
         let injector = FaultInjector::new(cfg.fault_memo_loss, cfg.seed ^ 0xFA17);
+        // `use_pjrt` callers install their backend via `with_backend`
+        // right after construction — don't spawn a worker pool they
+        // would immediately discard.
+        let backend: Box<dyn ChunkBackend> = if cfg.num_workers > 1 && !cfg.use_pjrt {
+            Box::new(WorkerPool::with_rounds(cfg.num_workers, cfg.map_rounds))
+        } else {
+            Box::new(NativeBackend::new(cfg.map_rounds))
+        };
         Coordinator {
             rng: Rng::new(cfg.seed),
             window,
-            memo: MemoStore::new(),
+            memo: MemoStore::sharded(cfg.num_workers, cfg.shard_strategy),
             cost,
-            backend: Box::new(NativeBackend::new(cfg.map_rounds)),
+            backend,
             injector,
             recovery: RecoveryPolicy::LineageRecompute,
             replica: None,
             windows_processed: 0,
+            profile: PhaseProfile::default(),
             cfg,
         }
     }
@@ -133,6 +263,12 @@ impl Coordinator {
     /// Memoization statistics so far.
     pub fn memo_stats(&self) -> crate::sac::memo::MemoStats {
         self.memo.stats()
+    }
+
+    /// Cumulative plan/compute/finalize wall-clock breakdown of every
+    /// window processed so far.
+    pub fn phase_profile(&self) -> &PhaseProfile {
+        &self.profile
     }
 
     /// Backend name (reports).
@@ -185,41 +321,67 @@ impl Coordinator {
         out
     }
 
-    /// Full (re)compute of one stratum's moments via the chunk plan:
-    /// returns the moments plus (chunks_total, chunks_hit, fresh_items).
-    #[allow(clippy::type_complexity)]
+    /// Phase 1: plan every stratum — in parallel shard groups when
+    /// `num_workers > 1`, serially otherwise. Outputs are keyed by
+    /// stratum, so the merge order (and everything downstream) is
+    /// identical either way.
     fn plan_strata(
-        &mut self,
-        to_plan: &BTreeMap<StratumId, Vec<Record>>,
-        use_memo: bool,
-        window_id: u64,
-    ) -> Result<(BTreeMap<StratumId, Moments>, usize, usize, usize)> {
-        let mut biased_like = BiasOutcome::default();
-        for (&s, items) in to_plan {
-            biased_like.per_stratum.insert(s, items.clone());
-        }
-        let mut scratch = MemoStore::new();
-        let memo_ref = if use_memo { &mut self.memo } else { &mut scratch };
-        let plan = JobPlan::build(&biased_like, memo_ref, self.cfg.chunk_size);
-        let fresh = plan.fresh_chunks();
-        let fresh_items: usize = fresh.iter().map(|c| c.len()).sum();
-        let fresh_results = self.backend.compute(&fresh)?;
-        let fresh_by_hash: FastMap<u64, Moments> =
-            fresh.iter().zip(&fresh_results).map(|(c, m)| (c.hash, *m)).collect();
-        if use_memo {
-            for chunk in &fresh {
-                let min_ts = chunk.items.iter().map(|r| r.timestamp).min().unwrap_or(0);
-                self.memo.put_chunk(chunk.hash, fresh_by_hash[&chunk.hash], min_ts, window_id);
+        &self,
+        biased: &BiasOutcome,
+        prev_items: &BTreeMap<StratumId, Vec<Record>>,
+        epoch_recompute: bool,
+    ) -> BTreeMap<StratumId, StratumPlan> {
+        let memoizes = self.cfg.mode.memoizes();
+        let chunk_size = self.cfg.chunk_size;
+        let memo = &self.memo;
+        if self.cfg.num_workers > 1 && biased.per_stratum.len() > 1 {
+            // Group strata by their memo shard; one scoped task per group.
+            let mut groups: BTreeMap<usize, Vec<StratumId>> = BTreeMap::new();
+            for &s in biased.per_stratum.keys() {
+                groups.entry(memo.shard_for(s)).or_default().push(s);
             }
+            let tasks: Vec<_> = groups
+                .into_values()
+                .map(|strata| {
+                    move || {
+                        strata
+                            .into_iter()
+                            .map(|s| {
+                                let cur = &biased.per_stratum[&s];
+                                let plan = plan_one_stratum(
+                                    s,
+                                    cur,
+                                    prev_items.get(&s),
+                                    memo,
+                                    memoizes,
+                                    epoch_recompute,
+                                    chunk_size,
+                                );
+                                (s, plan)
+                            })
+                            .collect::<Vec<_>>()
+                    }
+                })
+                .collect();
+            run_sharded(tasks).into_iter().flatten().collect()
+        } else {
+            biased
+                .per_stratum
+                .iter()
+                .map(|(&s, cur)| {
+                    let plan = plan_one_stratum(
+                        s,
+                        cur,
+                        prev_items.get(&s),
+                        memo,
+                        memoizes,
+                        epoch_recompute,
+                        chunk_size,
+                    );
+                    (s, plan)
+                })
+                .collect()
         }
-        let mut out = BTreeMap::new();
-        for (&s, planned) in &plan.per_stratum {
-            let m = Moments::combine_all(planned.iter().map(|p| {
-                p.memoized.as_ref().unwrap_or_else(|| &fresh_by_hash[&p.chunk.hash])
-            }));
-            out.insert(s, m);
-        }
-        Ok((out, plan.chunk_count(), plan.hit_count(), fresh_items))
     }
 
     /// Process one slide's worth of new records (count-based windows):
@@ -299,63 +461,98 @@ impl Coordinator {
         };
         let sample_size = biased.total_len();
 
-        // --- Compute per-stratum moments -------------------------------
-        // Incremental (inverse-reduce) path when the mode memoizes, prior
-        // state exists, the delta is small, and we are not on a
-        // recompute-epoch boundary; chunked full path otherwise.
+        // --- Phase 1: plan (parallel across memo shards) ---------------
+        // Inverse-reduce when the mode memoizes, prior state exists, the
+        // delta is small, and we are not on a recompute-epoch boundary;
+        // chunked full path otherwise.
         let epoch_recompute = self.cfg.mode.memoizes()
             && self.windows_processed % self.cfg.recompute_epoch as u64
                 == self.cfg.recompute_epoch as u64 - 1;
+        let sw_plan = Stopwatch::start();
+        let plans = self.plan_strata(&biased, &prev_items, epoch_recompute);
+        let plan_ms = sw_plan.elapsed_ms();
 
+        // --- Phase 2: one batched backend call for EVERY fresh chunk ---
+        // Delta chunks and full-path misses from all strata share a
+        // single dispatch; order is deterministic (stratum order, added
+        // before removed before full-path misses).
+        let sw_compute = Stopwatch::start();
+        let mut fresh_refs: Vec<&Chunk> = Vec::new();
+        for plan in plans.values() {
+            match plan {
+                StratumPlan::Delta { added, removed, .. } => {
+                    fresh_refs.extend(added.iter());
+                    fresh_refs.extend(removed.iter());
+                }
+                StratumPlan::Full { planned } => {
+                    fresh_refs
+                        .extend(planned.iter().filter(|p| !p.is_hit()).map(|p| &p.chunk));
+                }
+            }
+        }
+        let fresh_results = self.backend.compute(&fresh_refs)?;
+        debug_assert_eq!(fresh_results.len(), fresh_refs.len());
+        drop(fresh_refs);
+        let compute_ms = sw_compute.elapsed_ms();
+
+        // --- Phase 3: route results back, combine, memoize -------------
+        let sw_finalize = Stopwatch::start();
+        let memoizes = self.cfg.mode.memoizes();
         let mut stratum_moments: BTreeMap<StratumId, Moments> = BTreeMap::new();
-        let mut full_path: BTreeMap<StratumId, Vec<Record>> = BTreeMap::new();
-        let mut delta_chunks: Vec<(StratumId, bool, Chunk)> = Vec::new(); // (s, is_add, chunk)
+        let mut chunks_total = 0usize;
+        let mut chunks_reused = 0usize;
         let mut fresh_items = 0usize;
-
-        for (&stratum, cur) in &biased.per_stratum {
-            let prev = prev_items.get(&stratum);
-            let prev_m = self.memo.stratum_moments(stratum);
-            if !self.cfg.mode.memoizes() || prev.is_none() || prev_m.is_none() || epoch_recompute
-            {
-                full_path.insert(stratum, cur.clone());
-                continue;
+        let mut cursor = 0usize;
+        for (&stratum, plan) in &plans {
+            match plan {
+                StratumPlan::Delta { base, added, removed, delta_items } => {
+                    let mut m = *base;
+                    for _ in added {
+                        m = m.combine(&fresh_results[cursor]);
+                        cursor += 1;
+                    }
+                    for _ in removed {
+                        m = m.inverse_combine(&fresh_results[cursor]);
+                        cursor += 1;
+                    }
+                    fresh_items += delta_items;
+                    stratum_moments.insert(stratum, m);
+                }
+                StratumPlan::Full { planned } => {
+                    chunks_total += planned.len();
+                    let mut parts: Vec<Moments> = Vec::with_capacity(planned.len());
+                    for p in planned {
+                        if let Some(hit) = p.memoized {
+                            chunks_reused += 1;
+                            parts.push(hit);
+                        } else {
+                            let m = fresh_results[cursor];
+                            cursor += 1;
+                            fresh_items += p.chunk.len();
+                            if memoizes {
+                                let min_ts = p
+                                    .chunk
+                                    .items
+                                    .iter()
+                                    .map(|r| r.timestamp)
+                                    .min()
+                                    .unwrap_or(0);
+                                self.memo.put_chunk_for(
+                                    stratum,
+                                    p.chunk.hash,
+                                    m,
+                                    min_ts,
+                                    window_id,
+                                );
+                            }
+                            parts.push(m);
+                        }
+                    }
+                    stratum_moments.insert(stratum, Moments::combine_all(parts.iter()));
+                }
             }
-            let prev = prev.expect("checked");
-            let prev_ids: FastSet<u64> = prev.iter().map(|r| r.id).collect();
-            let cur_ids: FastSet<u64> = cur.iter().map(|r| r.id).collect();
-            let added: Vec<Record> =
-                cur.iter().filter(|r| !prev_ids.contains(&r.id)).copied().collect();
-            let removed: Vec<Record> =
-                prev.iter().filter(|r| !cur_ids.contains(&r.id)).copied().collect();
-            if added.len() + removed.len() >= cur.len() {
-                // Delta as big as the sample: recompute instead.
-                full_path.insert(stratum, cur.clone());
-                continue;
-            }
-            fresh_items += added.len() + removed.len();
-            for chunk in chunk_stratum(stratum, added, self.cfg.chunk_size) {
-                delta_chunks.push((stratum, true, chunk));
-            }
-            for chunk in chunk_stratum(stratum, removed, self.cfg.chunk_size) {
-                delta_chunks.push((stratum, false, chunk));
-            }
-            stratum_moments.insert(stratum, prev_m.expect("checked"));
         }
-
-        // One batched backend call for every stratum's delta chunks.
-        let chunk_refs: Vec<&Chunk> = delta_chunks.iter().map(|(_, _, c)| c).collect();
-        let delta_moments = self.backend.compute(&chunk_refs)?;
-        for ((stratum, is_add, _), m) in delta_chunks.iter().zip(&delta_moments) {
-            let entry = stratum_moments.get_mut(stratum).expect("seeded above");
-            *entry =
-                if *is_add { entry.combine(m) } else { entry.inverse_combine(m) };
-        }
-
-        // Full/chunked path for the remaining strata.
-        let (planned_moments, chunks_total, chunks_reused, planned_fresh) =
-            self.plan_strata(&full_path, self.cfg.mode.memoizes(), window_id)?;
-        fresh_items += planned_fresh;
-        stratum_moments.extend(planned_moments);
+        debug_assert_eq!(cursor, fresh_results.len(), "unrouted chunk results");
 
         // --- Reduce to the estimate (§3.5) ------------------------------
         let mut aggs: Vec<StratumAgg> = Vec::with_capacity(stratum_moments.len());
@@ -389,6 +586,7 @@ impl Coordinator {
 
         self.windows_processed += 1;
         let latency_ms = sw.elapsed_ms();
+        self.profile.observe(plan_ms, compute_ms, sw_finalize.elapsed_ms());
         self.cost.observe(sample_size, latency_ms);
 
         Ok(WindowReport {
@@ -410,6 +608,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::system::ShardStrategy;
     use crate::workload::gen::MultiStream;
 
     fn config(mode: ExecModeSpec) -> SystemConfig {
@@ -427,6 +626,10 @@ mod tests {
 
     fn run(mode: ExecModeSpec, windows: usize) -> Vec<WindowReport> {
         let cfg = config(mode);
+        run_with(cfg, windows)
+    }
+
+    fn run_with(cfg: SystemConfig, windows: usize) -> Vec<WindowReport> {
         let mut gen = MultiStream::paper_section5(cfg.seed);
         let mut coord = Coordinator::new(cfg.clone());
         // Warm the window first.
@@ -437,6 +640,80 @@ mod tests {
             reports.push(coord.process_batch(batch).unwrap());
         }
         reports
+    }
+
+    fn assert_reports_identical(a: &[WindowReport], b: &[WindowReport], label: &str) {
+        assert_eq!(a.len(), b.len(), "{label}: report counts differ");
+        for (ra, rb) in a.iter().zip(b) {
+            assert_eq!(ra.window_id, rb.window_id, "{label}");
+            assert_eq!(
+                ra.estimate.value.to_bits(),
+                rb.estimate.value.to_bits(),
+                "{label} w{}: estimate {} vs {}",
+                ra.window_id,
+                ra.estimate.value,
+                rb.estimate.value
+            );
+            assert_eq!(
+                ra.estimate.margin.to_bits(),
+                rb.estimate.margin.to_bits(),
+                "{label} w{}: margin",
+                ra.window_id
+            );
+            assert_eq!(ra.window_len, rb.window_len, "{label}");
+            assert_eq!(ra.sample_size, rb.sample_size, "{label}");
+            assert_eq!(ra.chunks_total, rb.chunks_total, "{label}");
+            assert_eq!(ra.chunks_reused, rb.chunks_reused, "{label}");
+            assert_eq!(ra.fresh_items, rb.fresh_items, "{label}");
+            assert_eq!(ra.strata, rb.strata, "{label}");
+        }
+    }
+
+    #[test]
+    fn sharded_pipeline_matches_serial_exactly() {
+        // The acceptance bar of the sharded refactor: with the same seed,
+        // the parallel pipeline's reports are byte-identical to the
+        // serial reference path, for every mode.
+        for mode in [
+            ExecModeSpec::Native,
+            ExecModeSpec::IncrementalOnly,
+            ExecModeSpec::ApproxOnly,
+            ExecModeSpec::IncApprox,
+        ] {
+            let mut serial = config(mode);
+            serial.num_workers = 1;
+            let mut sharded = config(mode);
+            sharded.num_workers = 4;
+            let a = run_with(serial, 5);
+            let b = run_with(sharded, 5);
+            assert_reports_identical(&a, &b, mode.name());
+        }
+    }
+
+    #[test]
+    fn shard_strategy_does_not_change_outputs() {
+        let mut hash = config(ExecModeSpec::IncApprox);
+        hash.num_workers = 3;
+        hash.shard_strategy = ShardStrategy::Hash;
+        let mut modulo = config(ExecModeSpec::IncApprox);
+        modulo.num_workers = 3;
+        modulo.shard_strategy = ShardStrategy::Modulo;
+        assert_reports_identical(&run_with(hash, 4), &run_with(modulo, 4), "strategy");
+    }
+
+    #[test]
+    fn sharded_pipeline_is_default_and_profiled() {
+        let cfg = config(ExecModeSpec::IncApprox);
+        assert!(cfg.num_workers > 1, "sharded pipeline must be on by default");
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        assert_eq!(coord.backend_name(), "worker-pool");
+        coord.process_batch(gen.take_records(cfg.window_size)).unwrap();
+        coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+        let profile = coord.phase_profile();
+        assert_eq!(profile.windows(), 2);
+        assert!(profile.plan_mean_ms() >= 0.0);
+        assert!(profile.compute_mean_ms() >= 0.0);
     }
 
     #[test]
@@ -685,5 +962,35 @@ mod tests {
         coord.resize_window(1500);
         let r = coord.process_batch(gen.take_records(100)).unwrap();
         assert!(r.window_len <= 1500);
+    }
+
+    #[test]
+    fn empty_window_produces_empty_report() {
+        // Degenerate edge: a coordinator fed an empty batch before any
+        // data has a zero-length window and must not panic or error.
+        let mut coord = Coordinator::new(config(ExecModeSpec::IncApprox));
+        let r = coord.process_batch(vec![]).unwrap();
+        assert_eq!(r.window_len, 0);
+        assert_eq!(r.sample_size, 0);
+        assert_eq!(r.fresh_items, 0);
+        assert_eq!(r.estimate.value, 0.0);
+        assert!(r.strata.is_empty());
+    }
+
+    #[test]
+    fn single_stratum_stream_works_in_all_modes() {
+        // Degenerate stratification: every record in one stratum — the
+        // sharded pipeline runs with exactly one (serial) shard group.
+        for mode in [ExecModeSpec::Native, ExecModeSpec::IncApprox] {
+            let cfg = config(mode);
+            let mut coord = Coordinator::new(cfg.clone());
+            let records: Vec<Record> = (0..2400u64)
+                .map(|i| Record::new(i, 0, i / 12, 0, (i % 17) as f64 + 1.0))
+                .collect();
+            coord.process_batch(records[..2000].to_vec()).unwrap();
+            let r = coord.process_batch(records[2000..2200].to_vec()).unwrap();
+            assert_eq!(r.strata.len(), 1, "{}", mode.name());
+            assert!(r.estimate.value > 0.0);
+        }
     }
 }

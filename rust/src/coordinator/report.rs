@@ -7,7 +7,7 @@ use crate::workload::record::StratumId;
 
 /// Per-stratum reuse accounting for one window (the quantities Fig 5.1
 //  plots).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StratumReport {
     /// Items sampled from the stratum this window.
     pub sample_size: usize,

@@ -1,53 +1,82 @@
 //! Crate-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (no `thiserror` in the offline
+//! crate set — see DESIGN.md substitution table).
+
+use std::fmt;
 
 /// Unified error type for every IncApprox subsystem.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / CLI problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Stream-aggregator (kafka substrate) problems.
-    #[error("kafka error: {0}")]
     Kafka(String),
 
     /// Sampling invariant violations.
-    #[error("sampling error: {0}")]
     Sampling(String),
 
     /// Self-adjusting-computation / memoization problems.
-    #[error("sac error: {0}")]
     Sac(String),
 
     /// Statistics / error-estimation domain errors.
-    #[error("stats error: {0}")]
     Stats(String),
 
     /// PJRT runtime problems (artifact loading, compilation, execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Budget / cost-function problems.
-    #[error("budget error: {0}")]
     Budget(String),
 
     /// Job execution problems.
-    #[error("job error: {0}")]
     Job(String),
 
     /// Injected or real fault surfaced to the coordinator.
-    #[error("fault: {0}")]
     Fault(String),
 
     /// Underlying XLA/PJRT error.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O error (trace files, artifacts).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Kafka(m) => write!(f, "kafka error: {m}"),
+            Error::Sampling(m) => write!(f, "sampling error: {m}"),
+            Error::Sac(m) => write!(f, "sac error: {m}"),
+            Error::Stats(m) => write!(f, "stats error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Budget(m) => write!(f, "budget error: {m}"),
+            Error::Job(m) => write!(f, "job error: {m}"),
+            Error::Fault(m) => write!(f, "fault: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            // Transparent: the io::Error message stands alone.
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -56,3 +85,23 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(Error::Job("y".into()).to_string(), "job error: y");
+        assert_eq!(Error::Stats("z".into()).to_string(), "stats error: z");
+    }
+
+    #[test]
+    fn io_is_transparent_with_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert_eq!(err.to_string(), "gone");
+        assert!(std::error::Error::source(&err).is_some());
+    }
+}

@@ -144,6 +144,28 @@ impl WorkerPool {
     }
 }
 
+/// Run `tasks` concurrently on scoped threads and return their outputs in
+/// input order.
+///
+/// Scoped threads (rather than the long-lived pool workers) let tasks
+/// borrow per-window state — the biased sample, the previous-window item
+/// lists, and the memo shards — without cloning it into `'static`
+/// closures; the long-lived pool stays dedicated to chunk-moments
+/// batches. A panic in any task is resumed on the caller. Zero or one
+/// task runs inline with no thread spawned.
+pub fn run_sharded<T: Send, F: FnOnce() -> T + Send>(tasks: Vec<F>) -> Vec<T> {
+    if tasks.len() <= 1 {
+        return tasks.into_iter().map(|f| f()).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = tasks.into_iter().map(|f| scope.spawn(f)).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    })
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         for _ in &self.workers {
@@ -205,6 +227,32 @@ mod tests {
     fn pool_handles_empty_batch() {
         let pool = WorkerPool::new(2);
         assert!(pool.compute(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_sharded_preserves_order_and_runs_all() {
+        let inputs: Vec<usize> = (0..13).collect();
+        let tasks: Vec<_> =
+            inputs.iter().map(|&i| move || i * i).collect();
+        assert_eq!(
+            run_sharded(tasks),
+            inputs.iter().map(|&i| i * i).collect::<Vec<_>>()
+        );
+        // Degenerate sizes run inline.
+        assert_eq!(run_sharded::<usize, fn() -> usize>(vec![]), Vec::<usize>::new());
+        assert_eq!(run_sharded(vec![|| 7usize]), vec![7]);
+    }
+
+    #[test]
+    fn run_sharded_tasks_can_borrow_caller_state() {
+        let data: Vec<u64> = (0..1000).collect();
+        let slices: Vec<&[u64]> = data.chunks(250).collect();
+        let tasks: Vec<_> = slices
+            .iter()
+            .map(|s| move || s.iter().sum::<u64>())
+            .collect();
+        let partials = run_sharded(tasks);
+        assert_eq!(partials.iter().sum::<u64>(), data.iter().sum::<u64>());
     }
 
     #[test]

@@ -12,9 +12,9 @@ use std::collections::BTreeMap;
 use crate::job::chunk::{chunk_stratum, Chunk};
 use crate::job::moments::Moments;
 use crate::sac::ddg::{Ddg, NodeKind};
-use crate::sac::memo::MemoStore;
+use crate::sac::memo::{MemoShard, MemoStore};
 use crate::sampling::biased::BiasOutcome;
-use crate::workload::record::StratumId;
+use crate::workload::record::{Record, StratumId};
 
 /// A chunk with its memo classification.
 #[derive(Debug, Clone)]
@@ -65,6 +65,28 @@ impl JobPlan {
             per_stratum.insert(stratum, planned);
         }
         JobPlan { per_stratum, ddg }
+    }
+
+    /// Chunk + classify a single stratum against its memo shard — the
+    /// per-stratum unit of the sharded window pipeline.
+    ///
+    /// Read-only with respect to the memo (`MemoShard` lookups are
+    /// lock-free), so any number of strata can be planned concurrently.
+    /// Pass `memo: None` for the non-memoizing baselines: every chunk is
+    /// classified fresh and no hit/miss counters are touched.
+    pub fn plan_stratum(
+        stratum: StratumId,
+        items: Vec<Record>,
+        memo: Option<&MemoShard>,
+        chunk_target: usize,
+    ) -> Vec<PlannedChunk> {
+        chunk_stratum(stratum, items, chunk_target)
+            .into_iter()
+            .map(|chunk| {
+                let memoized = memo.and_then(|m| m.get_chunk(chunk.hash));
+                PlannedChunk { chunk, memoized }
+            })
+            .collect()
     }
 
     /// All fresh (to-execute) chunks in deterministic order.
@@ -153,6 +175,33 @@ mod tests {
         assert!(plan2.hit_count() > 0, "no reuse after slide");
         assert!(plan2.hit_count() < plan2.chunk_count(), "new items must be fresh");
         assert!(plan2.reuse_fraction() > 0.6, "reuse {}", plan2.reuse_fraction());
+    }
+
+    #[test]
+    fn plan_stratum_matches_legacy_build() {
+        let mut memo = MemoStore::new();
+        let b = biased(&[(0, 0..600)]);
+        let warm = JobPlan::build(&b, &mut memo, 32);
+        // Memoize every second chunk.
+        for p in warm.per_stratum[&0].iter().step_by(2) {
+            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+        }
+        let via_build = JobPlan::build(&b, &mut memo, 32);
+        let via_shard =
+            JobPlan::plan_stratum(0, b.per_stratum[&0].clone(), Some(memo.shard(0)), 32);
+        assert_eq!(via_build.per_stratum[&0].len(), via_shard.len());
+        for (a, c) in via_build.per_stratum[&0].iter().zip(&via_shard) {
+            assert_eq!(a.chunk.hash, c.chunk.hash);
+            assert_eq!(a.is_hit(), c.is_hit());
+        }
+        assert!(via_shard.iter().any(|p| p.is_hit()));
+        assert!(via_shard.iter().any(|p| !p.is_hit()));
+        // Without a shard (non-memoizing modes): all fresh, counters
+        // untouched.
+        let before = memo.stats();
+        let cold = JobPlan::plan_stratum(0, b.per_stratum[&0].clone(), None, 32);
+        assert!(cold.iter().all(|p| !p.is_hit()));
+        assert_eq!(memo.stats(), before);
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //!   graph, AOT-lowered once to HLO text.
 //! * **L1 (`python/compile/kernels/`)** — the Pallas chunk-moments kernel
 //!   the L2 graph calls; executed at runtime through the PJRT CPU client
-//!   (`runtime` module). Python is never on the request path.
+//!   (`runtime` module, behind the `pjrt` feature). Python is never on
+//!   the request path.
 //!
 //! Entry points: [`coordinator::Coordinator`] drives the paper's
 //! Algorithm 1 over any [`workload`] source; `examples/` show end-to-end
@@ -33,6 +34,7 @@ pub mod job;
 pub mod kafka;
 pub mod logging;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sac;
 pub mod sampling;

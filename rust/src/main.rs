@@ -14,7 +14,7 @@ use incapprox::cli::Args;
 use incapprox::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
 use incapprox::coordinator::{Coordinator, Pipeline};
 use incapprox::error::{Error, Result};
-use incapprox::job::executor::WorkerPool;
+#[cfg(feature = "pjrt")]
 use incapprox::runtime::{PjrtBackend, PjrtRuntime};
 use incapprox::workload::flows::FlowLogGen;
 use incapprox::workload::gen::MultiStream;
@@ -79,15 +79,24 @@ fn main() -> Result<()> {
     );
 
     let source = build_workload(workload, cfg.seed)?;
+    // With `num_workers > 1` the coordinator builds its own sharded
+    // worker-pool backend; only the PJRT override is wired here.
+    #[allow(unused_mut)]
     let mut coordinator = Coordinator::new(cfg.clone());
     if cfg.use_pjrt {
-        let rt = std::sync::Arc::new(PjrtRuntime::load(&cfg.artifacts_dir)?);
-        log::info!("pjrt platform: {}", rt.platform());
-        coordinator = coordinator
-            .with_backend(Box::new(PjrtBackend::with_rounds(rt, cfg.map_rounds)));
-    } else if cfg.workers > 1 {
-        coordinator = coordinator
-            .with_backend(Box::new(WorkerPool::with_rounds(cfg.workers, cfg.map_rounds)));
+        #[cfg(feature = "pjrt")]
+        {
+            let rt = std::sync::Arc::new(PjrtRuntime::load(&cfg.artifacts_dir)?);
+            log::info!("pjrt platform: {}", rt.platform());
+            coordinator = coordinator
+                .with_backend(Box::new(PjrtBackend::with_rounds(rt, cfg.map_rounds)));
+        }
+        #[cfg(not(feature = "pjrt"))]
+        return Err(Error::Config(
+            "this binary was built without the `pjrt` feature; rebuild with \
+             `cargo build --features pjrt`"
+                .into(),
+        ));
     }
 
     let mut pipeline = Pipeline::new(coordinator, source)?;

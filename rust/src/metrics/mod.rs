@@ -138,6 +138,62 @@ impl Registry {
     }
 }
 
+/// Cumulative plan / compute / finalize wall-clock breakdown of the
+/// coordinator's sharded window pipeline — one observation per window.
+/// Benches read it to attribute end-to-end speedups to the phase that
+/// earned them.
+#[derive(Debug, Default)]
+pub struct PhaseProfile {
+    plan: Histogram,
+    compute: Histogram,
+    finalize: Histogram,
+}
+
+impl PhaseProfile {
+    /// Empty profile.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one window's phase timings (milliseconds).
+    pub fn observe(&self, plan_ms: f64, compute_ms: f64, finalize_ms: f64) {
+        self.plan.observe(plan_ms);
+        self.compute.observe(compute_ms);
+        self.finalize.observe(finalize_ms);
+    }
+
+    /// Windows observed.
+    pub fn windows(&self) -> usize {
+        self.plan.count()
+    }
+
+    /// Mean planning-phase milliseconds per window.
+    pub fn plan_mean_ms(&self) -> f64 {
+        self.plan.mean()
+    }
+
+    /// Mean compute-phase (batched backend call) milliseconds per window.
+    pub fn compute_mean_ms(&self) -> f64 {
+        self.compute.mean()
+    }
+
+    /// Mean finalize-phase milliseconds per window.
+    pub fn finalize_mean_ms(&self) -> f64 {
+        self.finalize.mean()
+    }
+
+    /// One-line summary, e.g. for bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "phases over {} windows: plan {:.3} ms, compute {:.3} ms, finalize {:.3} ms (means)",
+            self.windows(),
+            self.plan_mean_ms(),
+            self.compute_mean_ms(),
+            self.finalize_mean_ms()
+        )
+    }
+}
+
 /// Wall-clock stopwatch in milliseconds.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -216,6 +272,19 @@ mod tests {
         let report = r.report();
         assert!(report.contains("counter x = 2"));
         assert!(report.contains("histogram lat"));
+    }
+
+    #[test]
+    fn phase_profile_accumulates() {
+        let p = PhaseProfile::new();
+        assert_eq!(p.windows(), 0);
+        p.observe(1.0, 4.0, 0.5);
+        p.observe(3.0, 2.0, 1.5);
+        assert_eq!(p.windows(), 2);
+        assert!((p.plan_mean_ms() - 2.0).abs() < 1e-12);
+        assert!((p.compute_mean_ms() - 3.0).abs() < 1e-12);
+        assert!((p.finalize_mean_ms() - 1.0).abs() < 1e-12);
+        assert!(p.summary().contains("2 windows"));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The memoization store.
+//! The memoization store — sharded per stratum.
 //!
 //! Holds (i) per-chunk sub-computation results keyed by stable content
 //! hash — the map-task memo of Figure 3.1 — and (ii) the per-stratum item
@@ -6,10 +6,29 @@
 //! the next sample toward. Algorithm 1's first step (drop items older
 //! than the window start *and the dependent results*) is
 //! [`MemoStore::evict_older_than`].
+//!
+//! ## Sharding
+//!
+//! State is partitioned into per-stratum **shards** behind `Arc` so the
+//! coordinator's parallel planning phase can read concurrently without
+//! locks: a shard handle ([`MemoStore::shard`]) is a plain shared
+//! reference whose only mutation is relaxed atomic hit/miss counters —
+//! the memo-hit path never takes a lock. All writes (eviction,
+//! memoization) happen in the serial sections of the window loop through
+//! [`Arc::make_mut`] copy-on-write, which also makes
+//! [`MemoStore::snapshot`] an O(shards) `Arc` clone instead of a deep
+//! copy (the §6.3 replication policy snapshots every window).
+//!
+//! A store built with [`MemoStore::new`] has a single shard and behaves
+//! exactly like the unsharded original; the coordinator builds one shard
+//! per worker via [`MemoStore::sharded`].
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use crate::util::hash::FastMap;
+use crate::config::system::ShardStrategy;
+use crate::util::hash::{mix64, FastMap};
 
 use crate::job::moments::Moments;
 use crate::workload::record::{Record, StratumId};
@@ -48,90 +67,255 @@ impl MemoStats {
     }
 }
 
-/// A full copy of the store's state, for replication-based recovery
-/// (§6.3 option iii).
-#[derive(Debug, Clone, Default)]
-pub struct MemoSnapshot {
-    chunks: FastMap<u64, MemoEntry>,
-    items: BTreeMap<StratumId, Vec<Record>>,
-    stratum_moments: BTreeMap<StratumId, Moments>,
-}
-
-/// The memoization store of one coordinator.
+/// One shard of the store: the chunk results, memoized item lists, and
+/// per-stratum moments of the strata mapped to it. Reads are `&self` and
+/// lock-free (counters are relaxed atomics); all mutation goes through
+/// the owning [`MemoStore`].
 #[derive(Debug, Default)]
-pub struct MemoStore {
+pub struct MemoShard {
     chunks: FastMap<u64, MemoEntry>,
-    /// Items of the previous window's biased sample, per stratum —
-    /// Algorithm 1's `memo` list.
     items: BTreeMap<StratumId, Vec<Record>>,
-    /// Combined per-stratum moments of the previous window's sample —
-    /// the state the §4.2.2 reduce/inverse-reduce path updates.
     stratum_moments: BTreeMap<StratumId, Moments>,
-    stats: MemoStats,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evicted: AtomicU64,
 }
 
-impl MemoStore {
-    /// Empty store.
-    pub fn new() -> Self {
-        Self::default()
+impl Clone for MemoShard {
+    fn clone(&self) -> Self {
+        MemoShard {
+            chunks: self.chunks.clone(),
+            items: self.items.clone(),
+            stratum_moments: self.stratum_moments.clone(),
+            hits: AtomicU64::new(self.hits.load(Ordering::Relaxed)),
+            misses: AtomicU64::new(self.misses.load(Ordering::Relaxed)),
+            evicted: AtomicU64::new(self.evicted.load(Ordering::Relaxed)),
+        }
     }
+}
 
-    /// Look up a chunk result by content hash (counts hit/miss).
-    pub fn get_chunk(&mut self, hash: u64) -> Option<Moments> {
+impl MemoShard {
+    /// Look up a chunk result by content hash (counts hit/miss with
+    /// relaxed atomics — the lock-free memo-hit path).
+    pub fn get_chunk(&self, hash: u64) -> Option<Moments> {
         match self.chunks.get(&hash) {
             Some(e) => {
-                self.stats.hits += 1;
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(e.moments)
             }
             None => {
-                self.stats.misses += 1;
+                self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
-    /// Peek without touching counters (planning phase).
+    /// Peek without touching counters (planning diagnostics).
     pub fn contains_chunk(&self, hash: u64) -> bool {
         self.chunks.contains_key(&hash)
     }
 
-    /// Memoize one chunk result.
+    /// Combined moments of one stratum's previous sample, if stored.
+    pub fn stratum_moments(&self, s: StratumId) -> Option<Moments> {
+        self.stratum_moments.get(&s).copied()
+    }
+
+    /// Memoized items of one stratum (empty slice if absent).
+    pub fn items(&self, s: StratumId) -> &[Record] {
+        self.items.get(&s).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Number of memoized chunk results in this shard.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+/// A full copy of the store's state, for replication-based recovery
+/// (§6.3 option iii). Snapshots are copy-on-write `Arc` handles — taking
+/// one is O(shards); the store clones a shard lazily on its next write.
+#[derive(Debug, Clone, Default)]
+pub struct MemoSnapshot {
+    shards: Vec<Arc<MemoShard>>,
+    strategy: ShardStrategy,
+}
+
+/// The memoization store of one coordinator.
+///
+/// # Example
+///
+/// Chunk memo round-trip plus Algorithm 1's eviction:
+///
+/// ```
+/// use incapprox::job::moments::Moments;
+/// use incapprox::sac::memo::MemoStore;
+///
+/// let mut memo = MemoStore::new();
+/// assert_eq!(memo.get_chunk(0xFEED), None); // cold: a miss
+///
+/// // Memoize a chunk result (min item timestamp 5, window 0)…
+/// memo.put_chunk(0xFEED, Moments::from_values(&[1.0, 2.0]), 5, 0);
+/// let hit = memo.get_chunk(0xFEED).expect("memoized");
+/// assert_eq!(hit.count, 2.0);
+/// assert_eq!(memo.stats().hits, 1);
+///
+/// // …then the window slides past it: the entry ages out.
+/// memo.evict_older_than(10);
+/// assert_eq!(memo.get_chunk(0xFEED), None);
+/// assert_eq!(memo.stats().evicted, 1);
+/// ```
+#[derive(Debug, Clone)]
+pub struct MemoStore {
+    shards: Vec<Arc<MemoShard>>,
+    strategy: ShardStrategy,
+}
+
+impl Default for MemoStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoStore {
+    /// Empty single-shard store (identical behavior to the unsharded
+    /// original).
+    pub fn new() -> Self {
+        Self::sharded(1, ShardStrategy::default())
+    }
+
+    /// Empty store with `shards` per-stratum shards (clamped to ≥ 1)
+    /// assigned by `strategy`.
+    pub fn sharded(shards: usize, strategy: ShardStrategy) -> Self {
+        let n = shards.max(1);
+        MemoStore {
+            shards: (0..n).map(|_| Arc::new(MemoShard::default())).collect(),
+            strategy,
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Index of the shard holding `stratum`'s state.
+    pub fn shard_for(&self, stratum: StratumId) -> usize {
+        let n = self.shards.len() as u64;
+        match self.strategy {
+            ShardStrategy::Hash => (mix64(stratum as u64) % n) as usize,
+            ShardStrategy::Modulo => (stratum as u64 % n) as usize,
+        }
+    }
+
+    /// Lock-free read handle to the shard holding `stratum` — the
+    /// parallel planning phase's entry point.
+    pub fn shard(&self, stratum: StratumId) -> &MemoShard {
+        &self.shards[self.shard_for(stratum)]
+    }
+
+    fn shard_mut(&mut self, idx: usize) -> &mut MemoShard {
+        Arc::make_mut(&mut self.shards[idx])
+    }
+
+    /// Look up a chunk result by content hash alone, searching shards in
+    /// order (counts one hit or miss in total). Callers that know the
+    /// stratum should use `shard(stratum).get_chunk(hash)` instead — a
+    /// single map lookup.
+    pub fn get_chunk(&self, hash: u64) -> Option<Moments> {
+        for shard in &self.shards {
+            if let Some(e) = shard.chunks.get(&hash) {
+                shard.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(e.moments);
+            }
+        }
+        self.shards[0].misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Peek without touching counters (planning phase).
+    pub fn contains_chunk(&self, hash: u64) -> bool {
+        self.shards.iter().any(|s| s.chunks.contains_key(&hash))
+    }
+
+    /// Memoize one chunk result under its stratum's shard.
+    pub fn put_chunk_for(
+        &mut self,
+        stratum: StratumId,
+        hash: u64,
+        moments: Moments,
+        min_timestamp: u64,
+        window_id: u64,
+    ) {
+        let idx = self.shard_for(stratum);
+        self.shard_mut(idx)
+            .chunks
+            .insert(hash, MemoEntry { moments, min_timestamp, window_id });
+    }
+
+    /// Memoize one chunk result without a stratum (stored in shard 0;
+    /// pairs with the hash-only [`MemoStore::get_chunk`]).
     pub fn put_chunk(&mut self, hash: u64, moments: Moments, min_timestamp: u64, window_id: u64) {
-        self.chunks.insert(hash, MemoEntry { moments, min_timestamp, window_id });
+        self.shard_mut(0)
+            .chunks
+            .insert(hash, MemoEntry { moments, min_timestamp, window_id });
     }
 
     /// Replace the memoized item lists with this window's biased sample
     /// (Algorithm 1's `memo ← memoize(biasedSample)`).
     pub fn memoize_items(&mut self, per_stratum: &BTreeMap<StratumId, Vec<Record>>) {
-        self.items = per_stratum.clone();
+        // Only touch shards that hold items now or will after — a
+        // `shard_mut` on an untouched shard would still pay the COW
+        // clone whenever a snapshot replica is alive.
+        let mut dirty: Vec<bool> = self.shards.iter().map(|s| !s.items.is_empty()).collect();
+        for &s in per_stratum.keys() {
+            dirty[self.shard_for(s)] = true;
+        }
+        for (i, d) in dirty.into_iter().enumerate() {
+            if d {
+                self.shard_mut(i).items.clear();
+            }
+        }
+        for (&s, recs) in per_stratum {
+            let idx = self.shard_for(s);
+            self.shard_mut(idx).items.insert(s, recs.clone());
+        }
     }
 
     /// All memoized items, pre-eviction — the inverse-reduce path diffs
     /// the new sample against this to find added/removed items.
     pub fn items_all(&self) -> BTreeMap<StratumId, Vec<Record>> {
-        self.items.clone()
+        let mut out = BTreeMap::new();
+        for shard in &self.shards {
+            for (&s, recs) in &shard.items {
+                out.insert(s, recs.clone());
+            }
+        }
+        out
     }
 
     /// Per-stratum combined moments of the previous window's sample.
     pub fn stratum_moments(&self, s: StratumId) -> Option<Moments> {
-        self.stratum_moments.get(&s).copied()
+        self.shard(s).stratum_moments.get(&s).copied()
     }
 
     /// Store a stratum's combined moments for the next window's
     /// inverse-reduce update.
     pub fn put_stratum_moments(&mut self, s: StratumId, m: Moments) {
-        self.stratum_moments.insert(s, m);
+        let idx = self.shard_for(s);
+        self.shard_mut(idx).stratum_moments.insert(s, m);
     }
 
     /// Memoized items still valid for biasing the next window: items with
     /// `timestamp ≥ window_start` (older ones just aged out).
     pub fn items_for_bias(&self, window_start: u64) -> BTreeMap<StratumId, Vec<Record>> {
         let mut out = BTreeMap::new();
-        for (&s, recs) in &self.items {
-            let valid: Vec<Record> =
-                recs.iter().filter(|r| r.timestamp >= window_start).copied().collect();
-            if !valid.is_empty() {
-                out.insert(s, valid);
+        for shard in &self.shards {
+            for (&s, recs) in &shard.items {
+                let valid: Vec<Record> =
+                    recs.iter().filter(|r| r.timestamp >= window_start).copied().collect();
+                if !valid.is_empty() {
+                    out.insert(s, valid);
+                }
             }
         }
         out
@@ -140,65 +324,96 @@ impl MemoStore {
     /// Algorithm 1's eviction: drop memoized items older than `t` and all
     /// chunk results whose input contains such items.
     pub fn evict_older_than(&mut self, t: u64) {
-        for recs in self.items.values_mut() {
-            recs.retain(|r| r.timestamp >= t);
+        for i in 0..self.shards.len() {
+            if self.shards[i].items.is_empty() && self.shards[i].chunks.is_empty() {
+                continue; // nothing to evict; skip the COW clone
+            }
+            let shard = self.shard_mut(i);
+            for recs in shard.items.values_mut() {
+                recs.retain(|r| r.timestamp >= t);
+            }
+            shard.items.retain(|_, recs| !recs.is_empty());
+            let before = shard.chunks.len();
+            shard.chunks.retain(|_, e| e.min_timestamp >= t);
+            let gone = (before - shard.chunks.len()) as u64;
+            shard.evicted.fetch_add(gone, Ordering::Relaxed);
         }
-        self.items.retain(|_, recs| !recs.is_empty());
-        let before = self.chunks.len();
-        self.chunks.retain(|_, e| e.min_timestamp >= t);
-        self.stats.evicted += (before - self.chunks.len()) as u64;
     }
 
     /// Drop every chunk whose producing window is older than
     /// `min_window_id` — a size-bounding secondary eviction for workloads
     /// with sparse timestamps.
     pub fn evict_windows_before(&mut self, min_window_id: u64) {
-        let before = self.chunks.len();
-        self.chunks.retain(|_, e| e.window_id >= min_window_id);
-        self.stats.evicted += (before - self.chunks.len()) as u64;
-    }
-
-    /// Lose everything (fault injection / §6.3).
-    pub fn clear(&mut self) {
-        self.chunks.clear();
-        self.items.clear();
-        self.stratum_moments.clear();
-    }
-
-    /// Snapshot for replication-based recovery (§6.3 option iii).
-    pub fn snapshot(&self) -> MemoSnapshot {
-        MemoSnapshot {
-            chunks: self.chunks.clone(),
-            items: self.items.clone(),
-            stratum_moments: self.stratum_moments.clone(),
+        for i in 0..self.shards.len() {
+            if self.shards[i].chunks.is_empty() {
+                continue;
+            }
+            let shard = self.shard_mut(i);
+            let before = shard.chunks.len();
+            shard.chunks.retain(|_, e| e.window_id >= min_window_id);
+            let gone = (before - shard.chunks.len()) as u64;
+            shard.evicted.fetch_add(gone, Ordering::Relaxed);
         }
     }
 
-    /// Restore from a snapshot.
+    /// Lose everything (fault injection / §6.3). Counters survive.
+    pub fn clear(&mut self) {
+        for i in 0..self.shards.len() {
+            let shard = self.shard_mut(i);
+            shard.chunks.clear();
+            shard.items.clear();
+            shard.stratum_moments.clear();
+        }
+    }
+
+    /// Snapshot for replication-based recovery (§6.3 option iii) —
+    /// O(shards) copy-on-write `Arc` clones, not a deep copy.
+    pub fn snapshot(&self) -> MemoSnapshot {
+        MemoSnapshot { shards: self.shards.clone(), strategy: self.strategy }
+    }
+
+    /// Restore from a snapshot (the store adopts the snapshot's shard
+    /// layout).
     pub fn restore(&mut self, snap: MemoSnapshot) {
-        self.chunks = snap.chunks;
-        self.items = snap.items;
-        self.stratum_moments = snap.stratum_moments;
+        if snap.shards.is_empty() {
+            let n = self.shards.len();
+            *self = MemoStore::sharded(n, self.strategy);
+            return;
+        }
+        self.shards = snap.shards;
+        self.strategy = snap.strategy;
     }
 
     /// Number of memoized chunk results.
     pub fn chunk_count(&self) -> usize {
-        self.chunks.len()
+        self.shards.iter().map(|s| s.chunks.len()).sum()
     }
 
     /// Total memoized items across strata.
     pub fn item_count(&self) -> usize {
-        self.items.values().map(Vec::len).sum()
+        self.shards.iter().flat_map(|s| s.items.values()).map(Vec::len).sum()
     }
 
-    /// Counters.
+    /// Counters, summed across shards.
     pub fn stats(&self) -> MemoStats {
-        self.stats
+        let mut out = MemoStats::default();
+        for s in &self.shards {
+            out.hits += s.hits.load(Ordering::Relaxed);
+            out.misses += s.misses.load(Ordering::Relaxed);
+            out.evicted += s.evicted.load(Ordering::Relaxed);
+        }
+        out
     }
 
-    /// Reset counters (per-experiment isolation).
+    /// Reset counters (per-experiment isolation). Goes through the COW
+    /// path so counters of live snapshots are not clobbered.
     pub fn reset_stats(&mut self) {
-        self.stats = MemoStats::default();
+        for i in 0..self.shards.len() {
+            let shard = self.shard_mut(i);
+            shard.hits.store(0, Ordering::Relaxed);
+            shard.misses.store(0, Ordering::Relaxed);
+            shard.evicted.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -274,5 +489,75 @@ mod tests {
         m.restore(snap);
         assert_eq!(m.chunk_count(), 1);
         assert_eq!(m.item_count(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_isolated_from_later_writes() {
+        // The COW snapshot must not see writes made after it was taken.
+        let mut m = MemoStore::sharded(4, ShardStrategy::Hash);
+        m.put_chunk_for(0, 10, Moments::EMPTY, 0, 0);
+        let snap = m.snapshot();
+        m.put_chunk_for(0, 11, Moments::EMPTY, 0, 1);
+        m.clear();
+        assert_eq!(m.chunk_count(), 0);
+        m.restore(snap);
+        assert_eq!(m.chunk_count(), 1);
+        assert!(m.contains_chunk(10));
+        assert!(!m.contains_chunk(11));
+    }
+
+    #[test]
+    fn sharded_state_is_stratum_partitioned() {
+        let mut m = MemoStore::sharded(4, ShardStrategy::Modulo);
+        assert_eq!(m.shard_count(), 4);
+        for s in 0..8u32 {
+            m.put_chunk_for(s, 100 + s as u64, Moments::from_values(&[s as f64]), 0, 0);
+            m.put_stratum_moments(s, Moments::from_values(&[s as f64]));
+        }
+        m.memoize_items(&BTreeMap::from([
+            (0u32, vec![rec(1, 0, 0)]),
+            (5u32, vec![rec(2, 5, 0), rec(3, 5, 0)]),
+        ]));
+        // Shard-local lookups find each stratum's state.
+        for s in 0..8u32 {
+            assert!(m.shard(s).get_chunk(100 + s as u64).is_some());
+            assert!(m.shard(s).stratum_moments(s).is_some());
+            assert_eq!(m.stratum_moments(s).unwrap().count, 1.0);
+        }
+        assert_eq!(m.shard(0).items(0).len(), 1);
+        assert_eq!(m.shard(5).items(5).len(), 2);
+        assert_eq!(m.item_count(), 3);
+        assert_eq!(m.chunk_count(), 8);
+        // Modulo strategy: strata 0 and 4 share a shard.
+        assert_eq!(m.shard_for(0), m.shard_for(4));
+        assert_ne!(m.shard_for(0), m.shard_for(1));
+        // The hash-only legacy lookup still finds everything.
+        assert!(m.get_chunk(105).is_some());
+    }
+
+    #[test]
+    fn concurrent_shard_reads_are_safe() {
+        // The lock-free read path: many threads hammer shard handles
+        // while the store is immutable.
+        let mut m = MemoStore::sharded(4, ShardStrategy::Hash);
+        for s in 0..16u32 {
+            m.put_chunk_for(s, s as u64, Moments::from_values(&[1.0]), 0, 0);
+        }
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let store = &m;
+                scope.spawn(move || {
+                    for round in 0..200u64 {
+                        for s in 0..16u32 {
+                            let hit = store.shard(s).get_chunk(s as u64);
+                            assert!(hit.is_some(), "round {round}");
+                        }
+                    }
+                });
+            }
+        });
+        let stats = m.stats();
+        assert_eq!(stats.hits, 8 * 200 * 16);
+        assert_eq!(stats.misses, 0);
     }
 }

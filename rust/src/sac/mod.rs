@@ -13,4 +13,4 @@ pub mod ddg;
 pub mod memo;
 
 pub use ddg::{Ddg, NodeId, NodeKind};
-pub use memo::{MemoEntry, MemoSnapshot, MemoStats, MemoStore};
+pub use memo::{MemoEntry, MemoShard, MemoSnapshot, MemoStats, MemoStore};

@@ -54,6 +54,30 @@ impl StratifiedSample {
 }
 
 /// Streaming stratified reservoir sampler (one instance per window).
+///
+/// # Example
+///
+/// One-shot sampling of a window with three equally sized strata:
+///
+/// ```
+/// use incapprox::sampling::stratified::StratifiedSampler;
+/// use incapprox::util::rng::Rng;
+/// use incapprox::workload::record::Record;
+///
+/// // 900 records, round-robin across strata 0/1/2 (300 each).
+/// let window: Vec<Record> = (0..900u64)
+///     .map(|i| Record::new(i, (i % 3) as u32, 0, 0, i as f64))
+///     .collect();
+///
+/// let sample = StratifiedSampler::sample_window(&window, 90, 300, Rng::new(7));
+/// assert_eq!(sample.total_len(), 90);
+/// for s in 0..3u32 {
+///     // Proportional allocation: every stratum gets its ~1/3 share…
+///     assert_eq!(sample.stratum(s).len(), 30);
+///     // …and the exact population |S_i| is tracked for the estimator.
+///     assert_eq!(sample.population[&s], 300);
+/// }
+/// ```
 #[derive(Debug)]
 pub struct StratifiedSampler {
     sample_size: usize,

@@ -121,7 +121,7 @@ impl TimeWindow {
     /// Feed records (must arrive in non-decreasing timestamp order).
     pub fn ingest(&mut self, records: impl IntoIterator<Item = Record>) {
         for r in records {
-            debug_assert!(self.buf.back().is_none_or(|b| b.timestamp <= r.timestamp));
+            debug_assert!(self.buf.back().map_or(true, |b| b.timestamp <= r.timestamp));
             self.buf.push_back(r);
         }
     }
@@ -216,6 +216,102 @@ mod tests {
         let b = w.slide(vec![rec(1, 1)]);
         assert_eq!(a.window_id, 0);
         assert_eq!(b.window_id, 1);
+    }
+
+    #[test]
+    fn count_window_empty_slide_and_empty_window() {
+        // Edge: sliding with no new items — including on a cold window —
+        // must produce a well-formed (possibly empty) snapshot.
+        let mut w = CountWindow::new(4);
+        let snap = w.slide(vec![]);
+        assert_eq!(snap.window_id, 0);
+        assert!(snap.items.is_empty());
+        assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
+        // Warm it, then empty-slide again: contents unchanged, id advances.
+        w.slide(vec![rec(0, 0), rec(1, 1)]);
+        let snap = w.slide(vec![]);
+        assert_eq!(snap.window_id, 2);
+        assert_eq!(snap.items.len(), 2);
+        assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
+    }
+
+    #[test]
+    fn count_window_slide_larger_than_window_size() {
+        // Edge: one slide delivers more items than the window holds — the
+        // overflow (including items from this very batch) falls out FIFO.
+        let mut w = CountWindow::new(5);
+        let snap = w.slide((0..12).map(|i| rec(i, i)).collect());
+        assert_eq!(snap.items.len(), 5);
+        assert_eq!(snap.items.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7, 8, 9, 10, 11]);
+        assert_eq!(snap.delta.inserted.len(), 12);
+        assert_eq!(snap.delta.removed.len(), 7);
+        // A second oversized slide removes the entire previous window.
+        let snap = w.slide((12..22).map(|i| rec(i, i)).collect());
+        assert_eq!(snap.items.iter().map(|r| r.id).collect::<Vec<_>>(), vec![17, 18, 19, 20, 21]);
+        assert!(snap.delta.removed.iter().any(|r| r.id == 7), "old window evicted");
+    }
+
+    #[test]
+    fn count_window_single_stratum_degenerate() {
+        // Degenerate stratification: all items in one stratum; the window
+        // must still report exact deltas (the coordinator's single-shard
+        // path builds on this).
+        let mut w = CountWindow::new(6);
+        w.slide((0..6).map(|i| Record::new(i, 0, i, 0, 1.0)).collect());
+        let snap = w.slide((6..9).map(|i| Record::new(i, 0, i, 0, 1.0)).collect());
+        assert!(snap.items.iter().all(|r| r.stratum == 0));
+        assert_eq!(snap.delta.inserted.len(), 3);
+        assert_eq!(snap.delta.removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn time_window_empty_window_still_emits() {
+        // Edge: a boundary with no data in range emits an empty snapshot
+        // (the stream went quiet), not None.
+        let mut w = TimeWindow::new(10, 5);
+        let snap = w.try_emit(10).expect("boundary reached");
+        assert_eq!(snap.window_id, 0);
+        assert!(snap.items.is_empty());
+        assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
+        // Data arriving later lands in subsequent windows.
+        w.ingest(vec![rec(1, 12)]);
+        let snap = w.try_emit(15).expect("next boundary");
+        assert_eq!(snap.items.len(), 1);
+    }
+
+    #[test]
+    fn time_window_slide_equals_length_tumbles() {
+        // slide == length is the largest legal slide: tumbling windows
+        // with no overlap.
+        let mut w = TimeWindow::new(4, 4);
+        w.ingest((0..8).map(|i| rec(i, i)));
+        let s0 = w.try_emit(4).unwrap();
+        let s1 = w.try_emit(8).unwrap();
+        assert_eq!(s0.items.len(), 4);
+        assert_eq!(s1.items.len(), 4);
+        let ids0: Vec<u64> = s0.items.iter().map(|r| r.id).collect();
+        let ids1: Vec<u64> = s1.items.iter().map(|r| r.id).collect();
+        assert!(ids0.iter().all(|id| !ids1.contains(id)), "tumbling windows overlap");
+    }
+
+    #[test]
+    #[should_panic]
+    fn time_window_slide_larger_than_length_rejected() {
+        // slide > length would skip data; the constructor forbids it.
+        TimeWindow::new(10, 11);
+    }
+
+    #[test]
+    fn time_window_single_stratum_degenerate() {
+        let mut w = TimeWindow::new(6, 3);
+        w.ingest((0..12).map(|i| Record::new(i, 0, i, 0, 2.0)));
+        let s0 = w.try_emit(6).unwrap();
+        assert!(s0.items.iter().all(|r| r.stratum == 0));
+        assert_eq!(s0.items.len(), 6);
+        let s1 = w.try_emit(9).unwrap();
+        assert_eq!(s1.delta.removed.len(), 3);
+        assert_eq!(s1.delta.inserted.len(), 3);
+        assert!(s1.items.iter().all(|r| r.stratum == 0));
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! PJRT end-to-end: the coordinator through the AOT-compiled artifacts
 //! must match the native backend numerically. These tests skip (with a
 //! notice) when `artifacts/` is not built; `make test` builds it first.
+//! The whole file is compiled only with the `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 mod common;
 

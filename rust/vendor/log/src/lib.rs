@@ -1,0 +1,238 @@
+//! Minimal, offline stand-in for the `log` crate.
+//!
+//! Implements exactly the subset of the `log` 0.4 facade that incapprox
+//! uses: the [`Level`]/[`LevelFilter`] enums, the [`Log`] trait, the
+//! global boxed-logger registration, and the `error!`/`warn!`/`info!`/
+//! `debug!`/`trace!` macros. API signatures mirror the real crate so it
+//! can be swapped in transparently when a registry is reachable.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a log record, most severe first.
+#[repr(usize)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// Unrecoverable or user-visible failures.
+    Error = 1,
+    /// Suspicious but survivable conditions.
+    Warn,
+    /// High-level progress.
+    Info,
+    /// Developer diagnostics.
+    Debug,
+    /// Very fine-grained tracing.
+    Trace,
+}
+
+/// Maximum-verbosity filter (a [`Level`] or `Off`).
+#[repr(usize)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// Disable all logging.
+    Off = 0,
+    /// Only `Error`.
+    Error,
+    /// `Warn` and above.
+    Warn,
+    /// `Info` and above.
+    Info,
+    /// `Debug` and above.
+    Debug,
+    /// Everything.
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a log record: its level and target (module path).
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// The record's target (module path by default).
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the pre-formatted message arguments.
+#[derive(Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// The record's target.
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    /// The message as format arguments.
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+
+    /// The record's metadata.
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+}
+
+/// A log sink. Implementations must be thread-safe.
+pub trait Log: Send + Sync {
+    /// Is a record with this metadata worth building?
+    fn enabled(&self, metadata: &Metadata) -> bool;
+
+    /// Consume one record.
+    fn log(&self, record: &Record);
+
+    /// Flush buffered output.
+    fn flush(&self);
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (once per process).
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+#[doc(hidden)]
+pub fn __private_api_log(level: Level, target: &str, args: fmt::Arguments) {
+    if let Some(logger) = LOGGER.get() {
+        let metadata = Metadata { level, target };
+        if logger.enabled(&metadata) {
+            logger.log(&Record { metadata, args });
+        }
+    }
+}
+
+/// Log at an explicit [`Level`].
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__private_api_log(lvl, module_path!(), format_args!($($arg)+));
+        }
+    }};
+}
+
+/// Log at `Error` level.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Error, $($arg)+));
+}
+
+/// Log at `Warn` level.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Warn, $($arg)+));
+}
+
+/// Log at `Info` level.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Info, $($arg)+));
+}
+
+/// Log at `Debug` level.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Debug, $($arg)+));
+}
+
+/// Log at `Trace` level.
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Trace, $($arg)+));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Error);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Trace);
+        assert!(LevelFilter::Off < Level::Error);
+    }
+
+    #[test]
+    fn max_level_roundtrip() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Off);
+        assert_eq!(max_level(), LevelFilter::Off);
+    }
+}

@@ -1,0 +1,121 @@
+//! Compile-time stub of the `xla` (PJRT) crate.
+//!
+//! Mirrors the API surface `incapprox::runtime` uses so the `pjrt`
+//! feature compiles in environments where the real XLA bindings are not
+//! reachable. Every entry point that would touch a device returns a
+//! descriptive [`Error`]; to execute for real, replace this directory
+//! with the actual `xla` crate (same module paths) and rebuild.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error produced by the stub (and, in the real crate, by XLA itself).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error(format!(
+            "{what}: xla stub build — replace rust/vendor/xla with the real xla crate \
+             to execute PJRT artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A PJRT client handle (never constructible in the stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client — always errors in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation — always errors in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always errors in the stub.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals — always errors in the
+    /// stub.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer holding one execution output.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal — always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal (typed n-d array).
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions — always errors in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub("Literal::reshape"))
+    }
+
+    /// Extract the single element of a 1-tuple — always errors in the
+    /// stub.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::stub("Literal::to_tuple1"))
+    }
+
+    /// Copy out as a typed vector — always errors in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+}
