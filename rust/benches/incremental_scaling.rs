@@ -1,0 +1,117 @@
+//! O(delta) slide scaling: from-scratch vs incremental slide path.
+//!
+//! **Paper mapping:** Fig 6.1 (latency vs slide interval) — the thesis
+//! claims per-window latency should track the *input change* between
+//! adjacent windows, not the window size. This bench sweeps the
+//! slide/window ratio (1/2 … 1/64) and, for each ratio, times the steady
+//! -state slide loop twice on identical traces: once with
+//! `incremental_slide = false` (every window re-materialized, the sampler
+//! re-offered every item — the O(window) baseline) and once with the
+//! default O(delta) path (persistent sampler + delta-only snapshots +
+//! chunk reuse). Reports are byte-identical between the two (the driver
+//! equivalence tests assert it); only the work differs. Per-slide
+//! **items touched** (window + sampler + plan + compute stages, from
+//! [`incapprox::metrics::WorkProfile`]) makes the asymptotics visible:
+//! the incremental column scales with |delta|, the from-scratch column
+//! is pinned at O(window).
+//!
+//! **JSON:** emits `target/bench-results/incremental_scaling.json` with
+//! one `scaling` row per (ratio, path): `ratio`, `slide`, `incremental`
+//! (0/1), `mean_ms` (whole slide loop), `records_per_s`,
+//! `items_per_slide`; plus one `speedup` row per ratio.
+//!
+//! ```bash
+//! cargo bench --bench incremental_scaling            # full sweep
+//! cargo bench --bench incremental_scaling -- --smoke # CI smoke (tiny)
+//! ```
+
+use incapprox::bench_harness::{black_box, section, JsonReporter};
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::Coordinator;
+use incapprox::metrics::Stopwatch;
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::record::Record;
+
+/// Warm a coordinator with one full window, then time `slides` slides.
+/// Returns (elapsed ms over the slide loop, items touched last slide).
+fn timed_slides(cfg: &SystemConfig, records: &[Record], slides: usize) -> (f64, u64) {
+    let mut coord = Coordinator::new(cfg.clone());
+    let mut cursor = 0usize;
+    coord.process_batch(records[..cfg.window_size].to_vec()).unwrap();
+    cursor += cfg.window_size;
+    let sw = Stopwatch::start();
+    for _ in 0..slides {
+        let batch = records[cursor..cursor + cfg.slide].to_vec();
+        cursor += cfg.slide;
+        let r = coord.process_batch(batch).unwrap();
+        black_box(r.estimate.value);
+    }
+    (sw.elapsed_ms(), coord.work_profile().last().total())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let window = if smoke { 2_048 } else { 16_384 };
+    let slides = if smoke { 4 } else { 24 };
+    let iters = if smoke { 1 } else { 5 };
+    let ratios: &[usize] = if smoke { &[2, 16] } else { &[2, 4, 8, 16, 32, 64] };
+    let mut json = JsonReporter::for_bench("incremental_scaling");
+
+    section(&format!(
+        "O(delta) slides: window {window}, {slides} slides/iter, {iters} iters \
+         (Fig 6.1 latency-vs-slide; items/slide from WorkProfile)"
+    ));
+    println!(
+        "{:<8} {:<8} {:<14} {:>10} {:>14} {:>16}",
+        "ratio", "slide", "path", "mean_ms", "records/s", "items/slide"
+    );
+    for &ratio in ratios {
+        let slide = (window / ratio).max(1);
+        let cfg_base = SystemConfig {
+            mode: ExecModeSpec::IncApprox,
+            window_size: window,
+            slide,
+            seed: 42,
+            map_rounds: 0, // isolate pipeline overhead, not map weight
+            ..SystemConfig::default()
+        };
+        let mut gen = MultiStream::paper_section5(cfg_base.seed);
+        let records = gen.take_records(window + slides * slide);
+        let mut mean_ms = [0.0f64; 2];
+        for (idx, incremental) in [(0usize, false), (1usize, true)] {
+            let cfg = SystemConfig { incremental_slide: incremental, ..cfg_base.clone() };
+            let mut total_ms = 0.0;
+            let mut items_per_slide = 0u64;
+            for _ in 0..iters {
+                let (ms, items) = timed_slides(&cfg, &records, slides);
+                total_ms += ms;
+                items_per_slide = items;
+            }
+            let ms = total_ms / iters as f64;
+            mean_ms[idx] = ms;
+            let processed = slides * slide;
+            let throughput = if ms > 0.0 { processed as f64 / (ms / 1e3) } else { 0.0 };
+            let path = if incremental { "incremental" } else { "from-scratch" };
+            println!(
+                "1/{:<6} {:<8} {:<14} {:>10.3} {:>14.0} {:>16}",
+                ratio, slide, path, ms, throughput, items_per_slide
+            );
+            json.record_point(
+                "scaling",
+                &[
+                    ("ratio", ratio as f64),
+                    ("slide", slide as f64),
+                    ("incremental", if incremental { 1.0 } else { 0.0 }),
+                    ("mean_ms", ms),
+                    ("records_per_s", throughput),
+                    ("items_per_slide", items_per_slide as f64),
+                ],
+            );
+        }
+        let speedup = if mean_ms[1] > 0.0 { mean_ms[0] / mean_ms[1] } else { 0.0 };
+        println!("        -> incremental speedup at 1/{ratio}: {speedup:.2}x");
+        json.record_point("speedup", &[("ratio", ratio as f64), ("speedup", speedup)]);
+    }
+
+    json.finish().expect("write bench results");
+}

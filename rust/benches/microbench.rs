@@ -17,12 +17,13 @@
 use std::collections::BTreeMap;
 
 use incapprox::bench_harness::{black_box, section, Bench, JsonReporter};
-use incapprox::job::chunk::chunk_stratum;
+use incapprox::job::chunk::{chunk_stratum, chunk_stratum_cached};
 use incapprox::job::executor::{ChunkBackend, NativeBackend, WorkerPool};
 use incapprox::job::moments::Moments;
 use incapprox::sac::memo::MemoStore;
 use incapprox::sampling::biased::bias_sample;
 use incapprox::sampling::stratified::StratifiedSampler;
+use incapprox::sampling::SampleRun;
 use incapprox::util::rng::Rng;
 use incapprox::workload::gen::MultiStream;
 use incapprox::workload::record::Record;
@@ -41,7 +42,11 @@ fn main() {
     json.record_measurement("stratified_sample", &m);
 
     let sample = StratifiedSampler::sample_window(&window, 1000, 500, Rng::new(1));
-    let memo: BTreeMap<_, _> = sample.per_stratum.clone();
+    let memo: BTreeMap<_, _> = sample
+        .per_stratum
+        .iter()
+        .map(|(&s, recs)| (s, SampleRun::from_vec(recs.clone())))
+        .collect();
     let m = Bench::new("bias_sample 1k vs 1k memo").iters(50).run_and_report(|_| {
         black_box(bias_sample(&sample, &memo).total_len());
     });
@@ -50,9 +55,16 @@ fn main() {
     section("chunking + moments");
     let items: Vec<Record> = window[..1000].to_vec();
     let m = Bench::new("chunk_stratum 1000 items / target 64").iters(50).run_and_report(|_| {
-        black_box(chunk_stratum(0, items.clone(), 64).len());
+        black_box(chunk_stratum(0, &items, 64).len());
     });
     json.record_measurement("chunk_stratum", &m);
+    let prev = chunk_stratum(0, &items, 64);
+    let m = Bench::new("chunk_stratum_cached (unchanged run reuse)")
+        .iters(50)
+        .run_and_report(|_| {
+            black_box(chunk_stratum_cached(0, &items, 64, &prev).0.len());
+        });
+    json.record_measurement("chunk_stratum_cached", &m);
     let m = Bench::new("moments 10k items (rounds=0)").iters(50).run_and_report(|_| {
         black_box(Moments::from_records(&window).sum);
     });
@@ -63,7 +75,7 @@ fn main() {
     json.record_measurement("moments_rounds16", &m);
 
     section("memo store");
-    let chunks = chunk_stratum(0, window.clone(), 64);
+    let chunks = chunk_stratum(0, &window, 64);
     let m = Bench::new("memo put+get 156 chunks").iters(50).run_and_report(|_| {
         let mut store = MemoStore::new();
         for c in &chunks {

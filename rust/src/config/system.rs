@@ -114,7 +114,11 @@ pub struct SystemConfig {
     pub slide: usize,
     /// Query budget.
     pub budget: BudgetSpec,
-    /// Reservoir re-allocation interval `T` of Algorithm 2, in items seen.
+    /// Reservoir re-allocation interval `T` of Algorithm 2, in items
+    /// seen. Governs the legacy one-shot
+    /// `StratifiedSampler::sample_window` API (benches, library users);
+    /// the coordinator's persistent sampler recomputes exact proportional
+    /// allocation every slide in O(strata), so no interval applies there.
     pub realloc_interval: usize,
     /// Target items per memoizable chunk (content-defined chunking mean).
     pub chunk_size: usize,
@@ -141,6 +145,14 @@ pub struct SystemConfig {
     pub num_workers: usize,
     /// How strata map to memo shards / worker partitions.
     pub shard_strategy: ShardStrategy,
+    /// O(delta) slide path (default). When true the coordinator maintains
+    /// the sampler, the window view, and the chunk plans incrementally
+    /// across slides — per-slide heavy work is proportional to the input
+    /// change, not the window. When false every window is rebuilt from
+    /// scratch (the O(window) reference baseline). Both settings produce
+    /// byte-identical `WindowReport`s; `benches/incremental_scaling.rs`
+    /// measures the gap.
+    pub incremental_slide: bool,
     /// Per-window probability of injected memo loss (fault testing).
     pub fault_memo_loss: f64,
 }
@@ -162,6 +174,7 @@ impl Default for SystemConfig {
             artifacts_dir: "artifacts".to_string(),
             num_workers: 4,
             shard_strategy: ShardStrategy::Hash,
+            incremental_slide: true,
             fault_memo_loss: 0.0,
         }
     }
@@ -259,6 +272,11 @@ impl SystemConfig {
                 .as_str()
                 .ok_or_else(|| Error::Config("`job.shard_strategy` must be a string".into()))?;
             cfg.shard_strategy = ShardStrategy::parse(s)?;
+        }
+        if let Some(v) = map.get("job.incremental_slide") {
+            cfg.incremental_slide = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("`job.incremental_slide` must be a bool".into()))?;
         }
         if let Some(v) = get_f64(&map, "fault.memo_loss")? {
             cfg.fault_memo_loss = v;
@@ -389,6 +407,16 @@ mod tests {
             assert_eq!(ExecModeSpec::parse(s).unwrap().name(), s);
         }
         assert!(ExecModeSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn incremental_slide_defaults_on_and_parses() {
+        assert!(SystemConfig::default().incremental_slide, "O(delta) path must be the default");
+        let cfg = SystemConfig::from_toml("[job]\nincremental_slide = false").unwrap();
+        assert!(!cfg.incremental_slide);
+        let cfg = SystemConfig::from_toml("[job]\nincremental_slide = true").unwrap();
+        assert!(cfg.incremental_slide);
+        assert!(SystemConfig::from_toml("[job]\nincremental_slide = 3").is_err());
     }
 
     #[test]

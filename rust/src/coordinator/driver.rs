@@ -1,4 +1,5 @@
-//! Algorithm 1 — the per-window driver, as a sharded parallel pipeline.
+//! Algorithm 1 — the per-window driver, as a sharded parallel pipeline
+//! with an O(delta) slide path.
 //!
 //! Two incremental mechanisms cooperate, mirroring the paper:
 //!
@@ -14,6 +15,31 @@
 //!   to the change, not the sample. The delta moments themselves are
 //!   computed by the chunk backend (PJRT on the hot path). Every
 //!   `recompute_epoch` windows a full recompute bounds float drift.
+//!
+//! ## The O(delta) slide path
+//!
+//! With `incremental_slide` on (the default) nothing per-slide costs
+//! O(window) anymore:
+//!
+//! * the window layer hands over a **delta-only snapshot** (no full item
+//!   copy; `len`/`start_ts` are maintained incrementally);
+//! * the **persistent sampler** (`sampling::incremental`) is updated with
+//!   the delta — evicted items removed, arrived items inserted — instead
+//!   of re-offering every window item;
+//! * planning diffs the biased sample against the previous window via the
+//!   id sets that ride along on every [`SampleRun`] (no per-window set
+//!   rebuilds, no sample clones), and full-path re-chunking reuses the
+//!   previous window's chunks for unchanged runs (no re-hashing);
+//! * memo item lists are `Arc`-shared `SampleRun`s — memoize/read-back is
+//!   O(strata) refcount traffic.
+//!
+//! With `incremental_slide` off the same sampler is **rebuilt** from the
+//! materialized window every slide — the O(window) reference baseline.
+//! Both paths produce byte-identical [`WindowReport`]s (the sample is a
+//! pure function of window contents and seed; chunk reuse is verified by
+//! record equality), which the driver equivalence tests assert three
+//! ways: serial, sharded, and incremental. Per-slide items touched per
+//! stage are recorded in [`Coordinator::work_profile`].
 //!
 //! ## The sharded pipeline
 //!
@@ -34,8 +60,8 @@
 //!    estimated.
 //!
 //! Per-stratum work is bit-identical to the serial reference path
-//! (`num_workers = 1`): same chunks, same combine order, same RNG use —
-//! so the two configurations produce identical [`WindowReport`]s, which
+//! (`num_workers = 1`): same chunks, same combine order — so the two
+//! configurations produce identical [`WindowReport`]s, which
 //! `sharded_pipeline_matches_serial_exactly` asserts.
 
 use std::collections::BTreeMap;
@@ -49,13 +75,13 @@ use crate::job::chunk::{chunk_stratum, Chunk};
 use crate::job::executor::{run_sharded, ChunkBackend, NativeBackend, WorkerPool};
 use crate::job::moments::Moments;
 use crate::job::plan::{JobPlan, PlannedChunk};
-use crate::metrics::{PhaseProfile, Stopwatch};
+use crate::metrics::{PhaseProfile, SlideWork, Stopwatch, WorkProfile};
 use crate::sac::memo::MemoStore;
 use crate::sampling::biased::{bias_sample, BiasOutcome};
-use crate::sampling::stratified::{StratifiedSample, StratifiedSampler};
+use crate::sampling::incremental::IncrementalSampler;
+use crate::sampling::stratified::StratifiedSample;
+use crate::sampling::SampleRun;
 use crate::stats::stratified::{estimate_sum, StratumAgg};
-use crate::util::hash::FastSet;
-use crate::util::rng::Rng;
 use crate::window::{CountWindow, TimeWindow, WindowSnapshot};
 use crate::workload::record::{Record, StratumId};
 
@@ -108,16 +134,26 @@ enum StratumPlan {
     Full {
         /// Chunks in bias order with their memo hits.
         planned: Vec<PlannedChunk>,
+        /// Items hashed into freshly built chunks (cache misses); the
+        /// O(delta) planning work metric.
+        rehashed_items: usize,
     },
 }
 
 /// Plan one stratum: decide delta vs. full path and do the chunking and
 /// memo classification. Pure and read-only (lock-free shard lookups), so
 /// the coordinator runs it concurrently across strata.
+///
+/// `cur`/`prev` are the biased sample runs of this and the previous
+/// window; their id sets drive the diff, so no per-window set is built.
+/// `prev_chunks` is the previous full-path chunk sequence (incremental
+/// chunk reuse; `None` on the from-scratch baseline).
+#[allow(clippy::too_many_arguments)]
 fn plan_one_stratum(
     stratum: StratumId,
-    cur: &[Record],
-    prev: Option<&Vec<Record>>,
+    cur: &SampleRun,
+    prev: Option<&SampleRun>,
+    prev_chunks: Option<&[Chunk]>,
     memo: &MemoStore,
     memoizes: bool,
     epoch_recompute: bool,
@@ -125,39 +161,46 @@ fn plan_one_stratum(
 ) -> StratumPlan {
     let shard = memo.shard(stratum);
     let prev_m = shard.stratum_moments(stratum);
+    let cache = prev_chunks.unwrap_or(&[]);
     if !memoizes || prev.is_none() || prev_m.is_none() || epoch_recompute {
-        let planned = JobPlan::plan_stratum(
+        let (planned, rehashed_items) = JobPlan::plan_stratum_cached(
             stratum,
-            cur.to_vec(),
+            cur.records(),
             if memoizes { Some(shard) } else { None },
             chunk_size,
+            cache,
         );
-        return StratumPlan::Full { planned };
+        return StratumPlan::Full { planned, rehashed_items };
     }
     let prev = prev.expect("checked");
-    let prev_ids: FastSet<u64> = prev.iter().map(|r| r.id).collect();
-    let cur_ids: FastSet<u64> = cur.iter().map(|r| r.id).collect();
+    // Diff via the runs' resident id sets — O(|cur| + |prev|) lookups,
+    // zero allocations beyond the outputs.
     let added: Vec<Record> =
-        cur.iter().filter(|r| !prev_ids.contains(&r.id)).copied().collect();
+        cur.records().iter().filter(|r| !prev.contains(r.id)).copied().collect();
     let removed: Vec<Record> =
-        prev.iter().filter(|r| !cur_ids.contains(&r.id)).copied().collect();
+        prev.records().iter().filter(|r| !cur.contains(r.id)).copied().collect();
     if added.len() + removed.len() >= cur.len() {
         // Delta as big as the sample: recompute instead.
-        let planned =
-            JobPlan::plan_stratum(stratum, cur.to_vec(), Some(shard), chunk_size);
-        return StratumPlan::Full { planned };
+        let (planned, rehashed_items) = JobPlan::plan_stratum_cached(
+            stratum,
+            cur.records(),
+            Some(shard),
+            chunk_size,
+            cache,
+        );
+        return StratumPlan::Full { planned, rehashed_items };
     }
     let delta_items = added.len() + removed.len();
     StratumPlan::Delta {
         base: prev_m.expect("checked"),
-        added: chunk_stratum(stratum, added, chunk_size),
-        removed: chunk_stratum(stratum, removed, chunk_size),
+        added: chunk_stratum(stratum, &added, chunk_size),
+        removed: chunk_stratum(stratum, &removed, chunk_size),
         delta_items,
     }
 }
 
-/// The streaming coordinator: owns the window, the memo store, the cost
-/// function, and the chunk execution backend.
+/// The streaming coordinator: owns the window, the persistent sampler,
+/// the memo store, the cost function, and the chunk execution backend.
 ///
 /// # Example
 ///
@@ -185,6 +228,8 @@ fn plan_one_stratum(
 /// // 10% sampling budget with a confidence interval around the estimate.
 /// assert!(report.sample_size <= report.window_len / 5);
 /// assert!(report.estimate.margin > 0.0);
+/// // The O(delta) slide touched far fewer items than the window holds.
+/// assert!(coord.work_profile().last().total() < 2000);
 /// ```
 pub struct Coordinator {
     cfg: SystemConfig,
@@ -192,12 +237,18 @@ pub struct Coordinator {
     memo: MemoStore,
     cost: Box<dyn CostFunction>,
     backend: Box<dyn ChunkBackend>,
-    rng: Rng,
+    /// Persistent rank-based sampler; maintained with window deltas on
+    /// the incremental path, rebuilt per window on the from-scratch path.
+    sampler: IncrementalSampler,
+    /// Previous full-path chunk sequences per stratum (incremental chunk
+    /// reuse; correctness-neutral — reuse is equality-verified).
+    chunk_cache: BTreeMap<StratumId, Vec<Chunk>>,
     injector: FaultInjector,
     recovery: RecoveryPolicy,
     replica: Option<MemoReplica>,
     windows_processed: u64,
     profile: PhaseProfile,
+    work: WorkProfile,
 }
 
 impl Coordinator {
@@ -229,16 +280,20 @@ impl Coordinator {
             Box::new(NativeBackend::new(cfg.map_rounds))
         };
         Coordinator {
-            rng: Rng::new(cfg.seed),
             window,
             memo: MemoStore::sharded(cfg.num_workers, cfg.shard_strategy),
             cost,
             backend,
+            // Keyed off the master seed so every slide path — serial,
+            // sharded, incremental, from-scratch — ranks items identically.
+            sampler: IncrementalSampler::new(cfg.seed ^ 0x0DE1_7A51_D35A_3D01),
+            chunk_cache: BTreeMap::new(),
             injector,
             recovery: RecoveryPolicy::LineageRecompute,
             replica: None,
             windows_processed: 0,
             profile: PhaseProfile::default(),
+            work: WorkProfile::default(),
             cfg,
         }
     }
@@ -271,6 +326,13 @@ impl Coordinator {
         &self.profile
     }
 
+    /// Per-slide items-touched accounting (window / sampler / plan /
+    /// compute stages) of every window processed so far — the O(delta)
+    /// invariant made measurable.
+    pub fn work_profile(&self) -> &WorkProfile {
+        &self.work
+    }
+
     /// Backend name (reports).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
@@ -283,12 +345,19 @@ impl Coordinator {
 
     /// Resize the sliding window (Fig 5.1(c): Δ between adjacent windows).
     /// Count-based windows only; a no-op for time-based windows (their
-    /// size is the time length).
+    /// size is the time length). Evicted items surface in the next
+    /// slide's delta, keeping the incremental sampler consistent.
     pub fn resize_window(&mut self, new_size: usize) {
         if let WindowState::Count(w) = &mut self.window {
             w.resize(new_size);
             self.cfg.window_size = new_size;
         }
+    }
+
+    /// Does this configuration need the full window view per slide?
+    /// Sampling modes on the incremental path run delta-only.
+    fn wants_full_view(&self) -> bool {
+        !(self.cfg.mode.samples() && self.cfg.incremental_slide)
     }
 
     /// Group a full window per stratum — the "sample" of the exact modes.
@@ -303,20 +372,22 @@ impl Coordinator {
 
     /// Build a no-bias outcome that still *reports* the overlap with the
     /// memoized items (so baselines expose comparable reuse accounting).
+    /// Membership tests ride on the memo runs' id sets — nothing is
+    /// rebuilt here.
     fn no_bias_outcome(
         sample: &StratifiedSample,
-        memo_items: &BTreeMap<StratumId, Vec<Record>>,
+        memo_items: &BTreeMap<StratumId, SampleRun>,
     ) -> BiasOutcome {
         let mut out = BiasOutcome::default();
         for (&s, items) in &sample.per_stratum {
-            let memo_ids: FastSet<u64> = memo_items
-                .get(&s)
-                .map(|v| v.iter().map(|r| r.id).collect())
-                .unwrap_or_default();
-            let reused = items.iter().filter(|r| memo_ids.contains(&r.id)).count();
-            out.memo_available.insert(s, memo_ids.len());
+            let memo_run = memo_items.get(&s);
+            let reused = match memo_run {
+                Some(run) => items.iter().filter(|r| run.contains(r.id)).count(),
+                None => 0,
+            };
+            out.memo_available.insert(s, memo_run.map_or(0, SampleRun::len));
             out.memo_reused.insert(s, reused);
-            out.per_stratum.insert(s, items.clone());
+            out.per_stratum.insert(s, SampleRun::from_slice(items));
         }
         out
     }
@@ -328,12 +399,25 @@ impl Coordinator {
     fn plan_strata(
         &self,
         biased: &BiasOutcome,
-        prev_items: &BTreeMap<StratumId, Vec<Record>>,
+        prev_items: &BTreeMap<StratumId, SampleRun>,
         epoch_recompute: bool,
     ) -> BTreeMap<StratumId, StratumPlan> {
         let memoizes = self.cfg.mode.memoizes();
         let chunk_size = self.cfg.chunk_size;
         let memo = &self.memo;
+        let chunk_cache = &self.chunk_cache;
+        let use_cache = self.cfg.incremental_slide;
+        fn cached_chunks(
+            cache: &BTreeMap<StratumId, Vec<Chunk>>,
+            use_cache: bool,
+            s: StratumId,
+        ) -> Option<&[Chunk]> {
+            if use_cache {
+                cache.get(&s).map(Vec::as_slice)
+            } else {
+                None
+            }
+        }
         if self.cfg.num_workers > 1 && biased.per_stratum.len() > 1 {
             // Group strata by their memo shard; one scoped task per group.
             let mut groups: BTreeMap<usize, Vec<StratumId>> = BTreeMap::new();
@@ -352,6 +436,7 @@ impl Coordinator {
                                     s,
                                     cur,
                                     prev_items.get(&s),
+                                    cached_chunks(chunk_cache, use_cache, s),
                                     memo,
                                     memoizes,
                                     epoch_recompute,
@@ -373,6 +458,7 @@ impl Coordinator {
                         s,
                         cur,
                         prev_items.get(&s),
+                        cached_chunks(chunk_cache, use_cache, s),
                         memo,
                         memoizes,
                         epoch_recompute,
@@ -388,8 +474,9 @@ impl Coordinator {
     /// runs the full Algorithm 1 body for the resulting window and
     /// returns its report.
     pub fn process_batch(&mut self, batch: Vec<Record>) -> Result<WindowReport> {
+        let want_full = self.wants_full_view();
         let snap = match &mut self.window {
-            WindowState::Count(w) => w.slide(batch),
+            WindowState::Count(w) => w.slide_with(batch, want_full),
             WindowState::Time(_) => {
                 return Err(crate::error::Error::Job(
                     "process_batch needs a count window; use ingest_tick".into(),
@@ -407,10 +494,11 @@ impl Coordinator {
         records: Vec<Record>,
         now: u64,
     ) -> Result<Option<WindowReport>> {
+        let want_full = self.wants_full_view();
         let snap = match &mut self.window {
             WindowState::Time(w) => {
                 w.ingest(records);
-                w.try_emit(now)
+                w.try_emit_with(now, want_full)
             }
             WindowState::Count(_) => {
                 return Err(crate::error::Error::Job(
@@ -425,8 +513,11 @@ impl Coordinator {
     fn process_snapshot(&mut self, snap: WindowSnapshot) -> Result<WindowReport> {
         let sw = Stopwatch::start();
         let window_id = snap.window_id;
-        let window_len = snap.items.len();
-        let window_start_ts = snap.items.iter().map(|r| r.timestamp).min().unwrap_or(0);
+        let window_len = snap.len;
+        let window_start_ts = snap.start_ts;
+        let mut slide_work = SlideWork::default();
+        slide_work.window_items =
+            snap.full_view().map_or(snap.delta.len(), <[Record]>::len) as u64;
 
         // Fault injection happens before eviction (a crash loses the
         // store; recovery may restore the previous window's replica).
@@ -434,22 +525,29 @@ impl Coordinator {
             self.injector.maybe_inject(&mut self.memo, self.recovery, self.replica.as_ref());
 
         // Previous sample (pre-eviction) — the inverse-reduce base state.
+        // Zero-copy: Arc handles onto the memoized runs.
         let prev_items = self.memo.items_all();
 
         // Algorithm 1: remove all old items (and dependent results) from memo.
         self.memo.evict_older_than(window_start_ts);
 
-        // Cost function gives the sample size based on the budget.
+        // Cost function gives the sample size based on the budget; the
+        // persistent sampler emits the window's stratified sample. On the
+        // incremental path it is maintained with the delta (O(delta));
+        // the from-scratch baseline rebuilds it (O(window)). Identical
+        // samples either way — the sample is a pure function of window
+        // contents and seed.
         let sample = if self.cfg.mode.samples() {
+            let touched = if self.cfg.incremental_slide {
+                self.sampler.apply_delta(&snap.delta)
+            } else {
+                self.sampler.rebuild(snap.items())
+            };
+            slide_work.sampler_items = touched as u64;
             let sample_size = self.cost.sample_size(window_len);
-            StratifiedSampler::sample_window(
-                &snap.items,
-                sample_size,
-                self.cfg.realloc_interval,
-                self.rng.fork(),
-            )
+            self.sampler.sample(sample_size)
         } else {
-            Self::full_window_sample(&snap.items)
+            Self::full_window_sample(snap.items())
         };
 
         // Bias the stratified sample to include memoized items (§3.3).
@@ -471,6 +569,13 @@ impl Coordinator {
         let sw_plan = Stopwatch::start();
         let plans = self.plan_strata(&biased, &prev_items, epoch_recompute);
         let plan_ms = sw_plan.elapsed_ms();
+        for plan in plans.values() {
+            let touched = match plan {
+                StratumPlan::Delta { delta_items, .. } => *delta_items,
+                StratumPlan::Full { rehashed_items, .. } => *rehashed_items,
+            };
+            slide_work.plan_items += touched as u64;
+        }
 
         // --- Phase 2: one batched backend call for EVERY fresh chunk ---
         // Delta chunks and full-path misses from all strata share a
@@ -484,7 +589,7 @@ impl Coordinator {
                     fresh_refs.extend(added.iter());
                     fresh_refs.extend(removed.iter());
                 }
-                StratumPlan::Full { planned } => {
+                StratumPlan::Full { planned, .. } => {
                     fresh_refs
                         .extend(planned.iter().filter(|p| !p.is_hit()).map(|p| &p.chunk));
                 }
@@ -518,7 +623,7 @@ impl Coordinator {
                     fresh_items += delta_items;
                     stratum_moments.insert(stratum, m);
                 }
-                StratumPlan::Full { planned } => {
+                StratumPlan::Full { planned, .. } => {
                     chunks_total += planned.len();
                     let mut parts: Vec<Moments> = Vec::with_capacity(planned.len());
                     for p in planned {
@@ -553,6 +658,24 @@ impl Coordinator {
             }
         }
         debug_assert_eq!(cursor, fresh_results.len(), "unrouted chunk results");
+        slide_work.compute_items = fresh_items as u64;
+
+        // Remember full-path chunk sequences so the next full re-chunking
+        // (epoch recompute, post-fault rebuild, exact modes) reuses
+        // unchanged runs instead of re-hashing the sample.
+        if self.cfg.incremental_slide {
+            for (&stratum, plan) in &plans {
+                if let StratumPlan::Full { planned, .. } = plan {
+                    self.chunk_cache.insert(
+                        stratum,
+                        planned.iter().map(|p| p.chunk.clone()).collect(),
+                    );
+                }
+            }
+            // Strata that left the stream must not pin their cached runs
+            // forever (delta-path strata keep their last Full sequence).
+            self.chunk_cache.retain(|s, _| plans.contains_key(s));
+        }
 
         // --- Reduce to the estimate (§3.5) ------------------------------
         let mut aggs: Vec<StratumAgg> = Vec::with_capacity(stratum_moments.len());
@@ -572,8 +695,9 @@ impl Coordinator {
         }
         let estimate = estimate_sum(&aggs, self.cfg.confidence)?;
 
-        // Memoize the biased sample's items + per-stratum state for the
-        // next window (Algorithm 1's `memo ← memoize(biasedSample)`).
+        // Memoize the biased sample's runs + per-stratum state for the
+        // next window (Algorithm 1's `memo ← memoize(biasedSample)`) —
+        // Arc clones, no record copies.
         if self.cfg.mode.memoizes() || self.cfg.mode.biases() {
             self.memo.memoize_items(&biased.per_stratum);
             for (&s, m) in &stratum_moments {
@@ -587,6 +711,7 @@ impl Coordinator {
         self.windows_processed += 1;
         let latency_ms = sw.elapsed_ms();
         self.profile.observe(plan_ms, compute_ms, sw_finalize.elapsed_ms());
+        self.work.observe(slide_work);
         self.cost.observe(sample_size, latency_ms);
 
         Ok(WindowReport {
@@ -630,6 +755,10 @@ mod tests {
     }
 
     fn run_with(cfg: SystemConfig, windows: usize) -> Vec<WindowReport> {
+        run_with_coord(cfg, windows).0
+    }
+
+    fn run_with_coord(cfg: SystemConfig, windows: usize) -> (Vec<WindowReport>, Coordinator) {
         let mut gen = MultiStream::paper_section5(cfg.seed);
         let mut coord = Coordinator::new(cfg.clone());
         // Warm the window first.
@@ -639,7 +768,7 @@ mod tests {
             let batch = gen.take_records(cfg.slide);
             reports.push(coord.process_batch(batch).unwrap());
         }
-        reports
+        (reports, coord)
     }
 
     fn assert_reports_identical(a: &[WindowReport], b: &[WindowReport], label: &str) {
@@ -671,9 +800,12 @@ mod tests {
 
     #[test]
     fn sharded_pipeline_matches_serial_exactly() {
-        // The acceptance bar of the sharded refactor: with the same seed,
-        // the parallel pipeline's reports are byte-identical to the
-        // serial reference path, for every mode.
+        // The acceptance bar, extended to a three-way assertion: the
+        // serial reference path, the sharded parallel pipeline, and the
+        // O(delta) incremental slide path must all produce byte-identical
+        // reports, in every mode. (The first two run from-scratch slides;
+        // the third maintains window, sampler, and chunk state across
+        // slides — identical outputs, fraction of the work.)
         for mode in [
             ExecModeSpec::Native,
             ExecModeSpec::IncrementalOnly,
@@ -682,11 +814,30 @@ mod tests {
         ] {
             let mut serial = config(mode);
             serial.num_workers = 1;
+            serial.incremental_slide = false;
             let mut sharded = config(mode);
             sharded.num_workers = 4;
+            sharded.incremental_slide = false;
+            let mut incremental = config(mode);
+            incremental.num_workers = 4;
+            assert!(incremental.incremental_slide, "O(delta) path is the default");
+            let mut serial_incremental = config(mode);
+            serial_incremental.num_workers = 1;
             let a = run_with(serial, 5);
             let b = run_with(sharded, 5);
-            assert_reports_identical(&a, &b, mode.name());
+            let c = run_with(incremental, 5);
+            let d = run_with(serial_incremental, 5);
+            assert_reports_identical(&a, &b, &format!("{}: serial vs sharded", mode.name()));
+            assert_reports_identical(
+                &a,
+                &c,
+                &format!("{}: from-scratch vs incremental", mode.name()),
+            );
+            assert_reports_identical(
+                &a,
+                &d,
+                &format!("{}: from-scratch vs serial-incremental", mode.name()),
+            );
         }
     }
 
@@ -702,6 +853,97 @@ mod tests {
     }
 
     #[test]
+    fn time_windowed_incremental_matches_from_scratch_exactly() {
+        // The three-way equivalence on the time-based window manager —
+        // this also pins the positional delta rewrite in
+        // `TimeWindow::try_emit_with`.
+        let mk = |workers: usize, incremental: bool| {
+            let mut cfg = config(ExecModeSpec::IncApprox);
+            cfg.num_workers = workers;
+            cfg.incremental_slide = incremental;
+            Coordinator::new_time_windowed(cfg, 400, 40)
+        };
+        let mut coords = [mk(1, false), mk(4, false), mk(4, true)];
+        let mut gens = [
+            MultiStream::paper_section5(23),
+            MultiStream::paper_section5(23),
+            MultiStream::paper_section5(23),
+        ];
+        let mut reports: [Vec<WindowReport>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for now in 1..=1000u64 {
+            for (i, (coord, gen)) in coords.iter_mut().zip(gens.iter_mut()).enumerate() {
+                if let Some(r) = coord.ingest_tick(gen.tick(), now).unwrap() {
+                    reports[i].push(r);
+                }
+            }
+        }
+        assert!(reports[0].len() > 10, "no windows emitted");
+        assert_reports_identical(&reports[0], &reports[1], "time: serial vs sharded");
+        assert_reports_identical(&reports[0], &reports[2], "time: scratch vs incremental");
+    }
+
+    #[test]
+    fn window_resize_matches_from_scratch() {
+        // Mid-stream resizes evict items outside any slide; the
+        // incremental path must observe them through the next delta and
+        // stay byte-identical to the rebuild path.
+        let mut scratch_cfg = config(ExecModeSpec::IncApprox);
+        scratch_cfg.incremental_slide = false;
+        let inc_cfg = config(ExecModeSpec::IncApprox);
+        let mut gen_a = MultiStream::paper_section5(41);
+        let mut gen_b = MultiStream::paper_section5(41);
+        let mut a = Coordinator::new(scratch_cfg);
+        let mut b = Coordinator::new(inc_cfg);
+        let mut ra = Vec::new();
+        let mut rb = Vec::new();
+        let (wa, wb) = (gen_a.take_records(2000), gen_b.take_records(2000));
+        ra.push(a.process_batch(wa).unwrap());
+        rb.push(b.process_batch(wb).unwrap());
+        for new_size in [1500usize, 2200, 900] {
+            a.resize_window(new_size);
+            b.resize_window(new_size);
+            for _ in 0..2 {
+                let (ba, bb) = (gen_a.take_records(200), gen_b.take_records(200));
+                ra.push(a.process_batch(ba).unwrap());
+                rb.push(b.process_batch(bb).unwrap());
+            }
+        }
+        assert_reports_identical(&ra, &rb, "resize: scratch vs incremental");
+    }
+
+    #[test]
+    fn incremental_slide_work_scales_with_delta() {
+        // The O(delta) invariant, measured: a steady-state incremental
+        // slide touches far fewer items than the window holds, while the
+        // from-scratch baseline pays O(window) every slide.
+        let mut scratch_cfg = config(ExecModeSpec::IncApprox);
+        scratch_cfg.incremental_slide = false;
+        let (_, scratch) = run_with_coord(scratch_cfg, 5);
+        let (_, incremental) = run_with_coord(config(ExecModeSpec::IncApprox), 5);
+        assert_eq!(incremental.work_profile().windows(), 6);
+        let w_inc = incremental.work_profile().last();
+        let w_scr = scratch.work_profile().last();
+        // Incremental: window + sampler stages are delta-bound — about
+        // 2 × slide items (inserted + evicted; `take_records` rounds a
+        // batch up to whole generator ticks, so not exactly 400).
+        let delta = w_inc.window_items;
+        assert!((400..800).contains(&(delta as usize)), "delta-only snapshot, got {delta}");
+        assert_eq!(w_inc.sampler_items, delta, "sampler maintained by the same delta");
+        assert!(
+            w_inc.total() < 2000,
+            "incremental slide touched {} items for a 2000-item window",
+            w_inc.total()
+        );
+        // From-scratch: the window is materialized and re-offered whole
+        // (the window itself is capped at exactly 2000 items).
+        assert_eq!(w_scr.window_items, 2000);
+        assert_eq!(w_scr.sampler_items, 2000);
+        assert!(w_scr.total() > 2 * w_inc.total());
+        // Both paths computed the same fresh moments.
+        assert_eq!(w_inc.compute_items, w_scr.compute_items);
+    }
+
+    #[test]
     fn sharded_pipeline_is_default_and_profiled() {
         let cfg = config(ExecModeSpec::IncApprox);
         assert!(cfg.num_workers > 1, "sharded pipeline must be on by default");
@@ -714,6 +956,8 @@ mod tests {
         assert_eq!(profile.windows(), 2);
         assert!(profile.plan_mean_ms() >= 0.0);
         assert!(profile.compute_mean_ms() >= 0.0);
+        assert_eq!(coord.work_profile().windows(), 2);
+        assert!(coord.work_profile().mean_total_per_slide() > 0.0);
     }
 
     #[test]

@@ -10,8 +10,18 @@
 //! hard cap at `4 × target` to bound the PJRT row width. Overlapping
 //! windows therefore produce byte-identical chunks — identical memo keys —
 //! for all unchanged runs of items.
+//!
+//! Chunks carry their items behind `Arc<[Record]>`, so cloning a chunk —
+//! the executor's per-worker batches, the coordinator's per-stratum chunk
+//! cache — never copies records. [`chunk_stratum_cached`] goes further:
+//! given the previous window's chunk sequence, runs whose records are
+//! unchanged reuse the previous `Chunk` outright (no re-hash, no
+//! allocation), making full-path re-chunking O(changed runs) instead of
+//! O(sample).
 
-use crate::util::hash::{mix64, StableHasher};
+use std::sync::Arc;
+
+use crate::util::hash::{mix64, FastMap, StableHasher};
 use crate::workload::record::{Record, StratumId};
 
 /// One map-task input: a stable run of sampled items from one stratum.
@@ -19,26 +29,22 @@ use crate::workload::record::{Record, StratumId};
 pub struct Chunk {
     /// Stratum all items belong to.
     pub stratum: StratumId,
-    /// Items, in the caller's (bias/window) order.
-    pub items: Vec<Record>,
+    /// Items, in the caller's (bias/window) order — shared, so cloning a
+    /// chunk is O(1).
+    pub items: Arc<[Record]>,
     /// Stable content hash (ids + value bits) — the memo key.
     pub hash: u64,
 }
 
 impl Chunk {
-    fn build(stratum: StratumId, items: Vec<Record>) -> Self {
+    fn from_run(stratum: StratumId, items: &[Record]) -> Self {
         let mut h = StableHasher::new();
         h.write_u64(stratum as u64);
-        for r in &items {
+        for r in items {
             h.write_u64(r.id);
             h.write_f64(r.value);
         }
-        Chunk { stratum, items, hash: h.finish() }
-    }
-
-    /// Values of the chunk's items.
-    pub fn values(&self) -> Vec<f64> {
-        self.items.iter().map(|r| r.value).collect()
+        Chunk { stratum, items: Arc::from(items), hash: h.finish() }
     }
 
     /// Item count.
@@ -58,6 +64,41 @@ fn is_boundary(id: u64, target: usize) -> bool {
     mix64(id) % target as u64 == 0
 }
 
+/// Bit-exact record-run equality: the reuse gate for cached chunks.
+/// Values compare by bit pattern (not f64 `==`), because the chunk hash
+/// absorbs `value.to_bits()`: `+0.0`/`-0.0` must NOT reuse each other's
+/// hash (they digest differently), while bit-identical NaNs may.
+#[inline]
+fn records_bit_equal(a: &[Record], b: &[Record]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.id == y.id
+                && x.stratum == y.stratum
+                && x.timestamp == y.timestamp
+                && x.key == y.key
+                && x.value.to_bits() == y.value.to_bits()
+        })
+}
+
+/// Content-defined run bounds over `items`: half-open `(start, end)`
+/// index pairs with expected length `target`, hard cap `4 × target`.
+fn run_bounds(items: &[Record], target: usize) -> Vec<(usize, usize)> {
+    assert!(target > 0, "chunk target must be positive");
+    let cap = 4 * target;
+    let mut bounds = Vec::new();
+    let mut start = 0usize;
+    for (i, r) in items.iter().enumerate() {
+        if is_boundary(r.id, target) || i + 1 - start >= cap {
+            bounds.push((start, i + 1));
+            start = i + 1;
+        }
+    }
+    if start < items.len() {
+        bounds.push((start, items.len()));
+    }
+    bounds
+}
+
 /// Split one stratum's sampled items into stable chunks with expected
 /// length `target` (hard cap `4 × target`).
 ///
@@ -70,21 +111,59 @@ fn is_boundary(id: u64, target: usize) -> bool {
 /// chunks — and their memo keys — stay identical. Sorting here (e.g. by
 /// id) would interleave fresh items between memoized ones and invalidate
 /// every chunk.
-pub fn chunk_stratum(stratum: StratumId, items: Vec<Record>, target: usize) -> Vec<Chunk> {
-    assert!(target > 0, "chunk target must be positive");
-    let cap = 4 * target;
-    let mut chunks = Vec::new();
-    let mut current: Vec<Record> = Vec::with_capacity(target);
-    for r in items {
-        current.push(r);
-        if is_boundary(r.id, target) || current.len() >= cap {
-            chunks.push(Chunk::build(stratum, std::mem::take(&mut current)));
+pub fn chunk_stratum(stratum: StratumId, items: &[Record], target: usize) -> Vec<Chunk> {
+    run_bounds(items, target)
+        .into_iter()
+        .map(|(a, b)| Chunk::from_run(stratum, &items[a..b]))
+        .collect()
+}
+
+/// [`chunk_stratum`] with reuse from `prev`, the previous window's chunk
+/// sequence for this stratum: any run whose records are byte-equal to a
+/// previous chunk reuses that `Chunk` — no re-hash, no record copy, just
+/// an `Arc` clone. Output is **identical** to `chunk_stratum` (reuse is
+/// verified by full record equality before a chunk is taken), so the
+/// incremental and from-scratch plans stay byte-identical.
+///
+/// Returns the chunks plus the number of items that had to be re-hashed
+/// (the O(delta) work metric; `prev = &[]` degrades to re-hashing
+/// everything).
+pub fn chunk_stratum_cached(
+    stratum: StratumId,
+    items: &[Record],
+    target: usize,
+    prev: &[Chunk],
+) -> (Vec<Chunk>, usize) {
+    let bounds = run_bounds(items, target);
+    if prev.is_empty() {
+        let chunks = bounds
+            .into_iter()
+            .map(|(a, b)| Chunk::from_run(stratum, &items[a..b]))
+            .collect();
+        return (chunks, items.len());
+    }
+    // Index the previous sequence by first item id (ids are unique within
+    // a stratum's sample run, so first ids are unique across its chunks).
+    let mut by_first: FastMap<u64, &Chunk> = FastMap::default();
+    for c in prev {
+        if let Some(first) = c.items.first() {
+            by_first.insert(first.id, c);
         }
     }
-    if !current.is_empty() {
-        chunks.push(Chunk::build(stratum, current));
+    let mut chunks = Vec::with_capacity(bounds.len());
+    let mut rehashed_items = 0usize;
+    for (a, b) in bounds {
+        let run = &items[a..b];
+        if let Some(&cached) = by_first.get(&run[0].id) {
+            if cached.stratum == stratum && records_bit_equal(&cached.items, run) {
+                chunks.push(cached.clone());
+                continue;
+            }
+        }
+        rehashed_items += run.len();
+        chunks.push(Chunk::from_run(stratum, run));
     }
-    chunks
+    (chunks, rehashed_items)
 }
 
 #[cfg(test)]
@@ -99,7 +178,7 @@ mod tests {
     #[test]
     fn all_items_kept_once() {
         let items = recs(0..1000);
-        let chunks = chunk_stratum(0, items.clone(), 64);
+        let chunks = chunk_stratum(0, &items, 64);
         let total: usize = chunks.iter().map(Chunk::len).sum();
         assert_eq!(total, 1000);
         let mut ids: Vec<u64> = chunks.iter().flat_map(|c| c.items.iter().map(|r| r.id)).collect();
@@ -110,7 +189,7 @@ mod tests {
     #[test]
     fn expected_chunk_size_near_target() {
         let items = recs(0..100_000);
-        let chunks = chunk_stratum(0, items, 64);
+        let chunks = chunk_stratum(0, &items, 64);
         let mean = 100_000.0 / chunks.len() as f64;
         assert!((mean - 64.0).abs() < 8.0, "mean chunk size {mean}");
     }
@@ -118,7 +197,7 @@ mod tests {
     #[test]
     fn size_cap_enforced() {
         let items = recs(0..50_000);
-        let chunks = chunk_stratum(0, items, 32);
+        let chunks = chunk_stratum(0, &items, 32);
         assert!(chunks.iter().all(|c| c.len() <= 128));
     }
 
@@ -128,8 +207,8 @@ mod tests {
         // newest) must keep interior chunks identical.
         let w1 = recs(0..10_000);
         let w2 = recs(400..10_400); // slide by 400
-        let c1 = chunk_stratum(0, w1, 64);
-        let c2 = chunk_stratum(0, w2, 64);
+        let c1 = chunk_stratum(0, &w1, 64);
+        let c2 = chunk_stratum(0, &w2, 64);
         let h1: std::collections::HashSet<u64> = c1.iter().map(|c| c.hash).collect();
         let h2: std::collections::HashSet<u64> = c2.iter().map(|c| c.hash).collect();
         let shared = h1.intersection(&h2).count();
@@ -143,10 +222,10 @@ mod tests {
 
     #[test]
     fn hash_depends_on_values() {
-        let a = chunk_stratum(0, recs(0..10), 100);
+        let a = chunk_stratum(0, &recs(0..10), 100);
         let mut items = recs(0..10);
         items[3].value += 1.0;
-        let b = chunk_stratum(0, items, 100);
+        let b = chunk_stratum(0, &items, 100);
         assert_eq!(a.len(), b.len());
         // The chunk containing item 3 must change hash; others must not.
         let ha: Vec<u64> = a.iter().map(|c| c.hash).collect();
@@ -158,8 +237,8 @@ mod tests {
 
     #[test]
     fn hash_depends_on_stratum() {
-        let a = chunk_stratum(0, recs(0..10), 100);
-        let b = chunk_stratum(1, recs(0..10), 100);
+        let a = chunk_stratum(0, &recs(0..10), 100);
+        let b = chunk_stratum(1, &recs(0..10), 100);
         assert_ne!(a[0].hash, b[0].hash);
     }
 
@@ -170,8 +249,8 @@ mod tests {
         // memoized prefix stable across windows.
         let mut shuffled = recs(0..500);
         Rng::new(1).shuffle(&mut shuffled);
-        let a = chunk_stratum(0, recs(0..500), 64);
-        let b = chunk_stratum(0, shuffled, 64);
+        let a = chunk_stratum(0, &recs(0..500), 64);
+        let b = chunk_stratum(0, &shuffled, 64);
         let ha: std::collections::HashSet<u64> = a.iter().map(|c| c.hash).collect();
         let hb: std::collections::HashSet<u64> = b.iter().map(|c| c.hash).collect();
         assert_ne!(ha, hb);
@@ -188,8 +267,8 @@ mod tests {
         let w1: Vec<Record> = recs(0..5_000);
         let mut w2: Vec<Record> = w1[600..].to_vec();
         w2.extend(recs(5_000..5_600));
-        let c1 = chunk_stratum(0, w1, 64);
-        let c2 = chunk_stratum(0, w2, 64);
+        let c1 = chunk_stratum(0, &w1, 64);
+        let c2 = chunk_stratum(0, &w2, 64);
         let h1: std::collections::HashSet<u64> = c1.iter().map(|c| c.hash).collect();
         let shared = c2.iter().filter(|c| h1.contains(&c.hash)).count();
         assert!(
@@ -201,12 +280,118 @@ mod tests {
 
     #[test]
     fn empty_input_no_chunks() {
-        assert!(chunk_stratum(0, vec![], 64).is_empty());
+        assert!(chunk_stratum(0, &[], 64).is_empty());
+        let (chunks, rehashed) = chunk_stratum_cached(0, &[], 64, &[]);
+        assert!(chunks.is_empty());
+        assert_eq!(rehashed, 0);
     }
 
     #[test]
     #[should_panic(expected = "positive")]
     fn zero_target_panics() {
-        chunk_stratum(0, recs(0..4), 0);
+        chunk_stratum(0, &recs(0..4), 0);
+    }
+
+    #[test]
+    fn cached_identical_input_reuses_everything() {
+        let items = recs(0..2_000);
+        let prev = chunk_stratum(0, &items, 64);
+        let (chunks, rehashed) = chunk_stratum_cached(0, &items, 64, &prev);
+        assert_eq!(rehashed, 0, "identical input must not re-hash");
+        assert_eq!(chunks.len(), prev.len());
+        for (c, p) in chunks.iter().zip(&prev) {
+            assert_eq!(c.hash, p.hash);
+            assert!(Arc::ptr_eq(&c.items, &p.items), "reuse must be zero-copy");
+        }
+    }
+
+    #[test]
+    fn cached_output_identical_to_uncached_across_slides() {
+        // The equivalence contract: cached chunking is an optimization,
+        // never a semantic change — hashes and items match the
+        // from-scratch sequence for arbitrary prefix-drop/suffix-append
+        // edits (with some mid-run removals thrown in).
+        let mut window: Vec<Record> = recs(0..4_000);
+        let mut prev = chunk_stratum(0, &window, 32);
+        let mut next_id = 4_000u64;
+        let mut rng = Rng::new(7);
+        for _ in 0..6 {
+            // Drop a prefix, remove a few interior items, append a suffix.
+            window.drain(..300);
+            for _ in 0..10 {
+                let victim = rng.below(window.len());
+                window.remove(victim);
+            }
+            window.extend(recs(next_id..next_id + 310));
+            next_id += 310;
+            let (cached, rehashed) = chunk_stratum_cached(0, &window, 32, &prev);
+            let scratch = chunk_stratum(0, &window, 32);
+            assert_eq!(cached.len(), scratch.len());
+            for (c, s) in cached.iter().zip(&scratch) {
+                assert_eq!(c.hash, s.hash);
+                assert_eq!(c.items[..], s.items[..]);
+            }
+            assert!(
+                rehashed < window.len() / 2,
+                "rehashed {rehashed}/{} — cache not reusing",
+                window.len()
+            );
+            prev = cached;
+        }
+    }
+
+    #[test]
+    fn cached_detects_value_mutation() {
+        // Same ids, one mutated value: the affected run must re-hash (the
+        // equality check, not just the first-id probe, gates reuse).
+        let items = recs(0..200);
+        let prev = chunk_stratum(0, &items, 32);
+        let mut mutated = items.clone();
+        mutated[100].value += 1.0;
+        let (cached, rehashed) = chunk_stratum_cached(0, &mutated, 32, &prev);
+        let scratch = chunk_stratum(0, &mutated, 32);
+        assert!(rehashed > 0);
+        for (c, s) in cached.iter().zip(&scratch) {
+            assert_eq!(c.hash, s.hash);
+        }
+    }
+
+    #[test]
+    fn cached_distinguishes_signed_zero_values() {
+        // +0.0 == -0.0 under f64 `==`, but their bit patterns — and thus
+        // their chunk hashes — differ. The reuse gate must compare bits,
+        // or a cached +0.0 chunk would masquerade as the -0.0 run and
+        // split the incremental path's memo keys from the from-scratch
+        // path's.
+        let mut items = recs(0..64);
+        items[10].value = 0.0;
+        let prev = chunk_stratum(0, &items, 16);
+        items[10].value = -0.0;
+        let (cached, rehashed) = chunk_stratum_cached(0, &items, 16, &prev);
+        let scratch = chunk_stratum(0, &items, 16);
+        assert!(rehashed > 0, "signed-zero flip must re-hash its run");
+        for (c, s) in cached.iter().zip(&scratch) {
+            assert_eq!(c.hash, s.hash);
+        }
+        // Bit-identical input still reuses everything.
+        let (again, rehashed) = chunk_stratum_cached(0, &items, 16, &cached);
+        assert_eq!(rehashed, 0);
+        for (a, c) in again.iter().zip(&cached) {
+            assert!(Arc::ptr_eq(&a.items, &c.items));
+        }
+    }
+
+    #[test]
+    fn cached_ignores_stale_other_stratum_cache() {
+        let items = recs(0..300);
+        let prev = chunk_stratum(1, &items, 32);
+        // A stratum-0 chunking must not adopt stratum-1 cached chunks.
+        let (cached, rehashed) = chunk_stratum_cached(0, &items, 32, &prev);
+        assert_eq!(rehashed, 300);
+        let scratch = chunk_stratum(0, &items, 32);
+        for (c, s) in cached.iter().zip(&scratch) {
+            assert_eq!(c.hash, s.hash);
+            assert_eq!(c.stratum, 0);
+        }
     }
 }

@@ -55,6 +55,8 @@ enum Job {
     /// A contiguous batch of chunks starting at `base` in the caller's
     /// order. Batching (vs one job per chunk) keeps channel and mutex
     /// traffic at O(workers), not O(chunks) — see EXPERIMENTS.md §Perf.
+    /// Chunks carry their items behind `Arc`, so building a batch bumps
+    /// refcounts instead of copying records.
     Run { base: usize, chunks: Vec<Chunk> },
     Shutdown,
 }
@@ -196,8 +198,9 @@ mod tests {
     use crate::workload::record::Record;
 
     fn chunks(n: u64) -> Vec<Chunk> {
-        let items = (0..n).map(|i| Record::new(i, 0, 0, 0, (i % 13) as f64)).collect();
-        chunk_stratum(0, items, 32)
+        let items: Vec<Record> =
+            (0..n).map(|i| Record::new(i, 0, 0, 0, (i % 13) as f64)).collect();
+        chunk_stratum(0, &items, 32)
     }
 
     #[test]

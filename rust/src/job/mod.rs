@@ -17,7 +17,7 @@ pub mod executor;
 pub mod moments;
 pub mod plan;
 
-pub use chunk::{chunk_stratum, Chunk};
+pub use chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
 pub use map_fn::apply_map;
 pub use executor::{ChunkBackend, NativeBackend, WorkerPool};
 pub use moments::Moments;

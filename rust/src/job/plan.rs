@@ -6,10 +6,15 @@
 //! dependence graph is built with one map node per chunk, one reduce node
 //! per stratum, and an output node — the concrete instantiation of
 //! Figure 3.1 for this pipeline.
+//!
+//! Planning borrows the sample runs (`&[Record]`) — it never clones the
+//! sample — and [`JobPlan::plan_stratum_cached`] additionally reuses the
+//! previous window's chunks for unchanged runs, so per-window planning
+//! work is O(changed items), not O(sample).
 
 use std::collections::BTreeMap;
 
-use crate::job::chunk::{chunk_stratum, Chunk};
+use crate::job::chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
 use crate::job::moments::Moments;
 use crate::sac::ddg::{Ddg, NodeKind};
 use crate::sac::memo::{MemoShard, MemoStore};
@@ -49,8 +54,8 @@ impl JobPlan {
         let mut per_stratum = BTreeMap::new();
         let mut ddg = Ddg::new();
         let output = ddg.add_node(NodeKind::Output);
-        for (&stratum, items) in &biased.per_stratum {
-            let chunks = chunk_stratum(stratum, items.clone(), chunk_target);
+        for (&stratum, run) in &biased.per_stratum {
+            let chunks = chunk_stratum(stratum, run.records(), chunk_target);
             let reduce = ddg.add_node(NodeKind::Reduce { group: stratum as u64 });
             ddg.add_edge(reduce, output);
             let planned: Vec<PlannedChunk> = chunks
@@ -76,17 +81,35 @@ impl JobPlan {
     /// classified fresh and no hit/miss counters are touched.
     pub fn plan_stratum(
         stratum: StratumId,
-        items: Vec<Record>,
+        items: &[Record],
         memo: Option<&MemoShard>,
         chunk_target: usize,
     ) -> Vec<PlannedChunk> {
-        chunk_stratum(stratum, items, chunk_target)
+        Self::plan_stratum_cached(stratum, items, memo, chunk_target, &[]).0
+    }
+
+    /// [`JobPlan::plan_stratum`] with chunk reuse from `prev_chunks`, the
+    /// previous window's chunk sequence for this stratum (see
+    /// [`chunk_stratum_cached`]): unchanged runs are neither copied nor
+    /// re-hashed, so planning cost tracks the change, not the sample.
+    /// Returns the planned chunks plus the number of re-hashed items.
+    pub fn plan_stratum_cached(
+        stratum: StratumId,
+        items: &[Record],
+        memo: Option<&MemoShard>,
+        chunk_target: usize,
+        prev_chunks: &[Chunk],
+    ) -> (Vec<PlannedChunk>, usize) {
+        let (chunks, rehashed_items) =
+            chunk_stratum_cached(stratum, items, chunk_target, prev_chunks);
+        let planned = chunks
             .into_iter()
             .map(|chunk| {
                 let memoized = memo.and_then(|m| m.get_chunk(chunk.hash));
                 PlannedChunk { chunk, memoized }
             })
-            .collect()
+            .collect();
+        (planned, rehashed_items)
     }
 
     /// All fresh (to-execute) chunks in deterministic order.
@@ -123,6 +146,7 @@ impl JobPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sampling::SampleRun;
     use crate::workload::record::Record;
 
     fn biased(strata: &[(StratumId, std::ops::Range<u64>)]) -> BiasOutcome {
@@ -130,7 +154,9 @@ mod tests {
         for (s, ids) in strata {
             out.per_stratum.insert(
                 *s,
-                ids.clone().map(|i| Record::new(i, *s, i, 0, i as f64)).collect(),
+                SampleRun::from_vec(
+                    ids.clone().map(|i| Record::new(i, *s, i, 0, i as f64)).collect(),
+                ),
             );
         }
         out
@@ -188,7 +214,7 @@ mod tests {
         }
         let via_build = JobPlan::build(&b, &mut memo, 32);
         let via_shard =
-            JobPlan::plan_stratum(0, b.per_stratum[&0].clone(), Some(memo.shard(0)), 32);
+            JobPlan::plan_stratum(0, b.per_stratum[&0].records(), Some(memo.shard(0)), 32);
         assert_eq!(via_build.per_stratum[&0].len(), via_shard.len());
         for (a, c) in via_build.per_stratum[&0].iter().zip(&via_shard) {
             assert_eq!(a.chunk.hash, c.chunk.hash);
@@ -199,9 +225,35 @@ mod tests {
         // Without a shard (non-memoizing modes): all fresh, counters
         // untouched.
         let before = memo.stats();
-        let cold = JobPlan::plan_stratum(0, b.per_stratum[&0].clone(), None, 32);
+        let cold = JobPlan::plan_stratum(0, b.per_stratum[&0].records(), None, 32);
         assert!(cold.iter().all(|p| !p.is_hit()));
         assert_eq!(memo.stats(), before);
+    }
+
+    #[test]
+    fn plan_stratum_cached_reuses_chunks_and_matches_uncached() {
+        let mut memo = MemoStore::new();
+        let b = biased(&[(0, 0..600)]);
+        let (cold, rehashed) =
+            JobPlan::plan_stratum_cached(0, b.per_stratum[&0].records(), None, 32, &[]);
+        assert_eq!(rehashed, 600, "no cache → everything hashed");
+        let prev: Vec<Chunk> = cold.iter().map(|p| p.chunk.clone()).collect();
+        for p in &cold {
+            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+        }
+        let (warm, rehashed) = JobPlan::plan_stratum_cached(
+            0,
+            b.per_stratum[&0].records(),
+            Some(memo.shard(0)),
+            32,
+            &prev,
+        );
+        assert_eq!(rehashed, 0, "identical sample must reuse every chunk");
+        assert_eq!(warm.len(), cold.len());
+        for (w, c) in warm.iter().zip(&cold) {
+            assert_eq!(w.chunk.hash, c.chunk.hash);
+            assert!(w.is_hit());
+        }
     }
 
     #[test]

@@ -194,6 +194,97 @@ impl PhaseProfile {
     }
 }
 
+/// Items touched by each pipeline stage during one window slide — the
+/// accounting behind the O(delta) invariant: on the incremental slide
+/// path every field scales with the input change (plus the sample for
+/// the biasing stages), never with the window. The from-scratch baseline
+/// pays `window_items`/`sampler_items` proportional to the whole window;
+/// `benches/incremental_scaling.rs` prints both side by side.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SlideWork {
+    /// Records materialized or scanned by the window layer (full-view
+    /// copies on the from-scratch path; |delta| on the incremental path).
+    pub window_items: u64,
+    /// Items offered to / removed from the sampler this slide.
+    pub sampler_items: u64,
+    /// Records hashed into fresh chunks during planning (delta chunks
+    /// plus cache-missed full-path runs).
+    pub plan_items: u64,
+    /// Items whose moments the backend computed fresh.
+    pub compute_items: u64,
+}
+
+impl SlideWork {
+    /// Sum over all stages — the headline per-slide items-touched number.
+    pub fn total(&self) -> u64 {
+        self.window_items + self.sampler_items + self.plan_items + self.compute_items
+    }
+}
+
+/// Cumulative [`SlideWork`] across windows, plus the most recent slide —
+/// the coordinator records one observation per window and benches read
+/// it to show per-slide cost tracking |delta| instead of |window|.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkProfile {
+    total: SlideWork,
+    last: SlideWork,
+    windows: u64,
+}
+
+impl WorkProfile {
+    /// Empty profile.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one window's work accounting.
+    pub fn observe(&mut self, w: SlideWork) {
+        self.total.window_items += w.window_items;
+        self.total.sampler_items += w.sampler_items;
+        self.total.plan_items += w.plan_items;
+        self.total.compute_items += w.compute_items;
+        self.last = w;
+        self.windows += 1;
+    }
+
+    /// The most recent window's work (steady-state per-slide cost).
+    pub fn last(&self) -> SlideWork {
+        self.last
+    }
+
+    /// Summed work across all observed windows.
+    pub fn total(&self) -> SlideWork {
+        self.total
+    }
+
+    /// Windows observed.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Mean items touched per slide across all observed windows.
+    pub fn mean_total_per_slide(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.total.total() as f64 / self.windows as f64
+        }
+    }
+
+    /// One-line summary, e.g. for bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "items/slide over {} windows: mean {:.0} (last: window {} + sampler {} + plan {} + compute {})",
+            self.windows,
+            self.mean_total_per_slide(),
+            self.last.window_items,
+            self.last.sampler_items,
+            self.last.plan_items,
+            self.last.compute_items
+        )
+    }
+}
+
 /// Wall-clock stopwatch in milliseconds.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -284,6 +375,24 @@ mod tests {
         assert!((p.plan_mean_ms() - 2.0).abs() < 1e-12);
         assert!((p.compute_mean_ms() - 3.0).abs() < 1e-12);
         assert!((p.finalize_mean_ms() - 1.0).abs() < 1e-12);
+        assert!(p.summary().contains("2 windows"));
+    }
+
+    #[test]
+    fn slide_work_totals_and_profile() {
+        let w1 = SlideWork { window_items: 10, sampler_items: 20, plan_items: 5, compute_items: 1 };
+        let w2 = SlideWork { window_items: 2, sampler_items: 4, plan_items: 3, compute_items: 7 };
+        assert_eq!(w1.total(), 36);
+        let mut p = WorkProfile::new();
+        assert_eq!(p.windows(), 0);
+        assert_eq!(p.mean_total_per_slide(), 0.0);
+        p.observe(w1);
+        p.observe(w2);
+        assert_eq!(p.windows(), 2);
+        assert_eq!(p.last(), w2);
+        assert_eq!(p.total().window_items, 12);
+        assert_eq!(p.total().total(), 52);
+        assert!((p.mean_total_per_slide() - 26.0).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
     }
 

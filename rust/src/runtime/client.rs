@@ -232,9 +232,9 @@ mod tests {
     }
 
     fn chunks(n: u64, target: usize) -> Vec<Chunk> {
-        let items =
+        let items: Vec<Record> =
             (0..n).map(|i| Record::new(i, 0, 0, 0, (i as f64 * 0.37).sin() * 10.0)).collect();
-        chunk_stratum(0, items, target)
+        chunk_stratum(0, &items, target)
     }
 
     #[test]

@@ -1,11 +1,18 @@
 //! The memoization store — sharded per stratum.
 //!
 //! Holds (i) per-chunk sub-computation results keyed by stable content
-//! hash — the map-task memo of Figure 3.1 — and (ii) the per-stratum item
-//! lists of the previous window's biased sample, which Algorithm 4 biases
-//! the next sample toward. Algorithm 1's first step (drop items older
-//! than the window start *and the dependent results*) is
-//! [`MemoStore::evict_older_than`].
+//! hash — the map-task memo of Figure 3.1 — and (ii) the per-stratum
+//! [`SampleRun`]s of the previous window's biased sample, which
+//! Algorithm 4 biases the next sample toward. Algorithm 1's first step
+//! (drop items older than the window start *and the dependent results*)
+//! is [`MemoStore::evict_older_than`].
+//!
+//! Item lists are stored as `Arc`-backed [`SampleRun`]s: memoizing a
+//! window's sample, reading it back for the next window's diff
+//! ([`MemoStore::items_all`]) and for biasing
+//! ([`MemoStore::items_for_bias`]) are all O(strata) refcount bumps —
+//! no per-window record copies, and the id set built at bias time rides
+//! along for O(1) membership tests in the planner.
 //!
 //! ## Sharding
 //!
@@ -31,6 +38,7 @@ use crate::config::system::ShardStrategy;
 use crate::util::hash::{mix64, FastMap};
 
 use crate::job::moments::Moments;
+use crate::sampling::SampleRun;
 use crate::workload::record::{Record, StratumId};
 
 /// A memoized map-task result.
@@ -67,14 +75,14 @@ impl MemoStats {
     }
 }
 
-/// One shard of the store: the chunk results, memoized item lists, and
+/// One shard of the store: the chunk results, memoized sample runs, and
 /// per-stratum moments of the strata mapped to it. Reads are `&self` and
 /// lock-free (counters are relaxed atomics); all mutation goes through
 /// the owning [`MemoStore`].
 #[derive(Debug, Default)]
 pub struct MemoShard {
     chunks: FastMap<u64, MemoEntry>,
-    items: BTreeMap<StratumId, Vec<Record>>,
+    items: BTreeMap<StratumId, SampleRun>,
     stratum_moments: BTreeMap<StratumId, Moments>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -122,7 +130,7 @@ impl MemoShard {
 
     /// Memoized items of one stratum (empty slice if absent).
     pub fn items(&self, s: StratumId) -> &[Record] {
-        self.items.get(&s).map(Vec::as_slice).unwrap_or(&[])
+        self.items.get(&s).map(SampleRun::records).unwrap_or(&[])
     }
 
     /// Number of memoized chunk results in this shard.
@@ -260,9 +268,10 @@ impl MemoStore {
             .insert(hash, MemoEntry { moments, min_timestamp, window_id });
     }
 
-    /// Replace the memoized item lists with this window's biased sample
-    /// (Algorithm 1's `memo ← memoize(biasedSample)`).
-    pub fn memoize_items(&mut self, per_stratum: &BTreeMap<StratumId, Vec<Record>>) {
+    /// Replace the memoized sample runs with this window's biased sample
+    /// (Algorithm 1's `memo ← memoize(biasedSample)`). Runs are stored as
+    /// `Arc` clones — no record copies.
+    pub fn memoize_items(&mut self, per_stratum: &BTreeMap<StratumId, SampleRun>) {
         // Only touch shards that hold items now or will after — a
         // `shard_mut` on an untouched shard would still pay the COW
         // clone whenever a snapshot replica is alive.
@@ -275,19 +284,20 @@ impl MemoStore {
                 self.shard_mut(i).items.clear();
             }
         }
-        for (&s, recs) in per_stratum {
+        for (&s, run) in per_stratum {
             let idx = self.shard_for(s);
-            self.shard_mut(idx).items.insert(s, recs.clone());
+            self.shard_mut(idx).items.insert(s, run.clone());
         }
     }
 
-    /// All memoized items, pre-eviction — the inverse-reduce path diffs
-    /// the new sample against this to find added/removed items.
-    pub fn items_all(&self) -> BTreeMap<StratumId, Vec<Record>> {
+    /// All memoized sample runs, pre-eviction — the inverse-reduce path
+    /// diffs the new sample against this to find added/removed items.
+    /// O(strata) `Arc` clones.
+    pub fn items_all(&self) -> BTreeMap<StratumId, SampleRun> {
         let mut out = BTreeMap::new();
         for shard in &self.shards {
-            for (&s, recs) in &shard.items {
-                out.insert(s, recs.clone());
+            for (&s, run) in &shard.items {
+                out.insert(s, run.clone());
             }
         }
         out
@@ -305,14 +315,16 @@ impl MemoStore {
         self.shard_mut(idx).stratum_moments.insert(s, m);
     }
 
-    /// Memoized items still valid for biasing the next window: items with
-    /// `timestamp ≥ window_start` (older ones just aged out).
-    pub fn items_for_bias(&self, window_start: u64) -> BTreeMap<StratumId, Vec<Record>> {
+    /// Memoized sample runs still valid for biasing the next window:
+    /// items with `timestamp ≥ window_start` (older ones just aged out).
+    /// Untouched runs — the common case once
+    /// [`MemoStore::evict_older_than`] has already pruned — come back as
+    /// zero-copy `Arc` clones.
+    pub fn items_for_bias(&self, window_start: u64) -> BTreeMap<StratumId, SampleRun> {
         let mut out = BTreeMap::new();
         for shard in &self.shards {
-            for (&s, recs) in &shard.items {
-                let valid: Vec<Record> =
-                    recs.iter().filter(|r| r.timestamp >= window_start).copied().collect();
+            for (&s, run) in &shard.items {
+                let valid = run.filter_ts(window_start);
                 if !valid.is_empty() {
                     out.insert(s, valid);
                 }
@@ -322,21 +334,32 @@ impl MemoStore {
     }
 
     /// Algorithm 1's eviction: drop memoized items older than `t` and all
-    /// chunk results whose input contains such items.
+    /// chunk results whose input contains such items. Shards with nothing
+    /// old enough are skipped without a COW write (run `min_ts` makes the
+    /// item check O(strata)).
     pub fn evict_older_than(&mut self, t: u64) {
         for i in 0..self.shards.len() {
-            if self.shards[i].items.is_empty() && self.shards[i].chunks.is_empty() {
+            let needs_items = self.shards[i].items.values().any(|r| r.min_ts() < t);
+            let needs_chunks =
+                self.shards[i].chunks.values().any(|e| e.min_timestamp < t);
+            if !needs_items && !needs_chunks {
                 continue; // nothing to evict; skip the COW clone
             }
             let shard = self.shard_mut(i);
-            for recs in shard.items.values_mut() {
-                recs.retain(|r| r.timestamp >= t);
+            if needs_items {
+                for run in shard.items.values_mut() {
+                    if run.min_ts() < t {
+                        *run = run.filter_ts(t);
+                    }
+                }
+                shard.items.retain(|_, run| !run.is_empty());
             }
-            shard.items.retain(|_, recs| !recs.is_empty());
-            let before = shard.chunks.len();
-            shard.chunks.retain(|_, e| e.min_timestamp >= t);
-            let gone = (before - shard.chunks.len()) as u64;
-            shard.evicted.fetch_add(gone, Ordering::Relaxed);
+            if needs_chunks {
+                let before = shard.chunks.len();
+                shard.chunks.retain(|_, e| e.min_timestamp >= t);
+                let gone = (before - shard.chunks.len()) as u64;
+                shard.evicted.fetch_add(gone, Ordering::Relaxed);
+            }
         }
     }
 
@@ -391,7 +414,7 @@ impl MemoStore {
 
     /// Total memoized items across strata.
     pub fn item_count(&self) -> usize {
-        self.shards.iter().flat_map(|s| s.items.values()).map(Vec::len).sum()
+        self.shards.iter().flat_map(|s| s.items.values()).map(SampleRun::len).sum()
     }
 
     /// Counters, summed across shards.
@@ -425,6 +448,13 @@ mod tests {
         Record::new(id, stratum, ts, 0, id as f64)
     }
 
+    fn runs(items: &[(StratumId, Vec<Record>)]) -> BTreeMap<StratumId, SampleRun> {
+        items
+            .iter()
+            .map(|(s, recs)| (*s, SampleRun::from_vec(recs.clone())))
+            .collect()
+    }
+
     #[test]
     fn chunk_hit_miss_accounting() {
         let mut m = MemoStore::new();
@@ -449,7 +479,7 @@ mod tests {
     #[test]
     fn items_for_bias_filters_by_window_start() {
         let mut m = MemoStore::new();
-        let items = BTreeMap::from([
+        let items = runs(&[
             (0u32, vec![rec(1, 0, 5), rec(2, 0, 20)]),
             (1u32, vec![rec(3, 1, 2)]),
         ]);
@@ -457,13 +487,22 @@ mod tests {
         let valid = m.items_for_bias(10);
         assert_eq!(valid.len(), 1);
         assert_eq!(valid[&0].len(), 1);
-        assert_eq!(valid[&0][0].id, 2);
+        assert_eq!(valid[&0].records()[0].id, 2);
+    }
+
+    #[test]
+    fn items_for_bias_is_zero_copy_when_untouched() {
+        let mut m = MemoStore::new();
+        m.memoize_items(&runs(&[(0u32, vec![rec(1, 0, 50), rec(2, 0, 60)])]));
+        let valid = m.items_for_bias(10);
+        // Same Arc allocation as the stored run: no records copied.
+        assert_eq!(valid[&0].records().as_ptr(), m.shard(0).items(0).as_ptr());
     }
 
     #[test]
     fn evict_older_than_prunes_item_lists_too() {
         let mut m = MemoStore::new();
-        m.memoize_items(&BTreeMap::from([(0u32, vec![rec(1, 0, 5), rec(2, 0, 20)])]));
+        m.memoize_items(&runs(&[(0u32, vec![rec(1, 0, 5), rec(2, 0, 20)])]));
         m.evict_older_than(10);
         assert_eq!(m.item_count(), 1);
     }
@@ -482,7 +521,7 @@ mod tests {
     fn snapshot_restore_roundtrip() {
         let mut m = MemoStore::new();
         m.put_chunk(1, Moments::from_values(&[2.0]), 0, 0);
-        m.memoize_items(&BTreeMap::from([(0u32, vec![rec(1, 0, 0)])]));
+        m.memoize_items(&runs(&[(0u32, vec![rec(1, 0, 0)])]));
         let snap = m.snapshot();
         m.clear();
         assert_eq!(m.chunk_count(), 0);
@@ -514,7 +553,7 @@ mod tests {
             m.put_chunk_for(s, 100 + s as u64, Moments::from_values(&[s as f64]), 0, 0);
             m.put_stratum_moments(s, Moments::from_values(&[s as f64]));
         }
-        m.memoize_items(&BTreeMap::from([
+        m.memoize_items(&runs(&[
             (0u32, vec![rec(1, 0, 0)]),
             (5u32, vec![rec(2, 5, 0), rec(3, 5, 0)]),
         ]));
@@ -533,6 +572,21 @@ mod tests {
         assert_ne!(m.shard_for(0), m.shard_for(1));
         // The hash-only legacy lookup still finds everything.
         assert!(m.get_chunk(105).is_some());
+    }
+
+    #[test]
+    fn items_all_returns_shared_runs() {
+        let mut m = MemoStore::sharded(2, ShardStrategy::Modulo);
+        m.memoize_items(&runs(&[
+            (0u32, vec![rec(1, 0, 3)]),
+            (1u32, vec![rec(2, 1, 4), rec(3, 1, 9)]),
+        ]));
+        let all = m.items_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[&1].len(), 2);
+        assert!(all[&1].contains(3));
+        // Zero-copy: the run points at the stored allocation.
+        assert_eq!(all[&0].records().as_ptr(), m.shard(0).items(0).as_ptr());
     }
 
     #[test]

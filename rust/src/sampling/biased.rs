@@ -6,20 +6,27 @@
 //! retained). A `HashSet` over item ids guards against duplicates when the
 //! fresh sample already contains some memoized items (issue (iii) in
 //! §3.3.1).
+//!
+//! Memoized inputs and biased outputs are [`SampleRun`]s: the memoized
+//! run arrives as a zero-copy handle from the memo store, and the id set
+//! built here for dedup ships out with the biased run, so downstream
+//! planning diffs never rebuild it.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::util::hash::FastSet;
 
 use crate::sampling::stratified::StratifiedSample;
+use crate::sampling::SampleRun;
 use crate::workload::record::{Record, StratumId};
 
 /// Result of biasing one window's stratified sample.
 #[derive(Debug, Clone, Default)]
 pub struct BiasOutcome {
     /// The biased sample, per stratum. Sizes match the input stratified
-    /// sample exactly.
-    pub per_stratum: BTreeMap<StratumId, Vec<Record>>,
+    /// sample exactly; each run carries its id set for O(1) membership.
+    pub per_stratum: BTreeMap<StratumId, SampleRun>,
     /// Per stratum: how many items in the biased sample carry memoized
     /// results (the reuse the marriage buys — what Fig 5.1 measures).
     pub memo_reused: BTreeMap<StratumId, usize>,
@@ -30,7 +37,7 @@ pub struct BiasOutcome {
 impl BiasOutcome {
     /// Total biased-sample size.
     pub fn total_len(&self) -> usize {
-        self.per_stratum.values().map(Vec::len).sum()
+        self.per_stratum.values().map(SampleRun::len).sum()
     }
 
     /// Total memoized items reused.
@@ -50,12 +57,12 @@ impl BiasOutcome {
 
     /// Items of one stratum.
     pub fn stratum(&self, s: StratumId) -> &[Record] {
-        self.per_stratum.get(&s).map(Vec::as_slice).unwrap_or(&[])
+        self.per_stratum.get(&s).map(SampleRun::records).unwrap_or(&[])
     }
 
     /// Flatten to a single vector (stratum order, deterministic).
     pub fn all_items(&self) -> Vec<Record> {
-        self.per_stratum.values().flatten().copied().collect()
+        self.per_stratum.values().flat_map(|r| r.records().iter().copied()).collect()
     }
 }
 
@@ -72,12 +79,13 @@ impl BiasOutcome {
 ///   skipping duplicates by item id.
 pub fn bias_sample(
     sample: &StratifiedSample,
-    memo: &BTreeMap<StratumId, Vec<Record>>,
+    memo: &BTreeMap<StratumId, SampleRun>,
 ) -> BiasOutcome {
     let mut out = BiasOutcome::default();
     for (&stratum, fresh) in &sample.per_stratum {
         let y = fresh.len();
-        let memoized: &[Record] = memo.get(&stratum).map(Vec::as_slice).unwrap_or(&[]);
+        let memoized: &[Record] =
+            memo.get(&stratum).map(SampleRun::records).unwrap_or(&[]);
         let x = memoized.len();
         out.memo_available.insert(stratum, x);
 
@@ -106,7 +114,10 @@ pub fn bias_sample(
 
         debug_assert_eq!(chosen.len(), y, "bias must preserve per-stratum size");
         out.memo_reused.insert(stratum, reused);
-        out.per_stratum.insert(stratum, chosen);
+        // `seen` holds exactly the chosen ids (the fill loop breaks before
+        // inserting an id it will not push), so it ships as the run's set.
+        out.per_stratum
+            .insert(stratum, SampleRun::from_parts(chosen.into(), Arc::new(seen)));
     }
     out
 }
@@ -129,11 +140,15 @@ mod tests {
         s
     }
 
+    fn memo_of(items: Vec<(StratumId, Vec<Record>)>) -> BTreeMap<StratumId, SampleRun> {
+        items.into_iter().map(|(s, recs)| (s, SampleRun::from_vec(recs))).collect()
+    }
+
     #[test]
     fn more_memo_than_sample_takes_y_memo_items() {
         let sample = sample_of(vec![(0, vec![1, 2, 3])]);
         let memo =
-            BTreeMap::from([(0, vec![rec(10, 0), rec(11, 0), rec(12, 0), rec(13, 0)])]);
+            memo_of(vec![(0, vec![rec(10, 0), rec(11, 0), rec(12, 0), rec(13, 0)])]);
         let out = bias_sample(&sample, &memo);
         assert_eq!(out.stratum(0).len(), 3);
         assert_eq!(out.memo_reused[&0], 3);
@@ -143,7 +158,7 @@ mod tests {
     #[test]
     fn fewer_memo_than_sample_fills_from_fresh() {
         let sample = sample_of(vec![(0, vec![1, 2, 3, 4])]);
-        let memo = BTreeMap::from([(0, vec![rec(10, 0)])]);
+        let memo = memo_of(vec![(0, vec![rec(10, 0)])]);
         let out = bias_sample(&sample, &memo);
         assert_eq!(out.stratum(0).len(), 4);
         assert_eq!(out.memo_reused[&0], 1);
@@ -155,7 +170,7 @@ mod tests {
     fn duplicates_between_memo_and_fresh_removed() {
         // Fresh sample already contains memoized item 2.
         let sample = sample_of(vec![(0, vec![1, 2, 3])]);
-        let memo = BTreeMap::from([(0, vec![rec(2, 0)])]);
+        let memo = memo_of(vec![(0, vec![rec(2, 0)])]);
         let out = bias_sample(&sample, &memo);
         let mut ids: Vec<u64> = out.stratum(0).iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -175,7 +190,7 @@ mod tests {
     #[test]
     fn per_stratum_sizes_preserved() {
         let sample = sample_of(vec![(0, vec![1, 2, 3]), (1, vec![4, 5]), (2, vec![6])]);
-        let memo = BTreeMap::from([
+        let memo = memo_of(vec![
             (0, vec![rec(10, 0), rec(11, 0), rec(12, 0), rec(13, 0), rec(14, 0)]),
             (2, vec![rec(20, 2)]),
         ]);
@@ -193,7 +208,7 @@ mod tests {
     fn biasing_is_per_stratum_no_cross_contamination() {
         // Memo items of stratum 1 must never enter stratum 0's sample.
         let sample = sample_of(vec![(0, vec![1, 2])]);
-        let memo = BTreeMap::from([(1, vec![rec(10, 1)])]);
+        let memo = memo_of(vec![(1, vec![rec(10, 1)])]);
         let out = bias_sample(&sample, &memo);
         assert!(out.stratum(0).iter().all(|r| r.stratum == 0));
         assert_eq!(out.memo_reused.get(&1), None);
@@ -204,5 +219,25 @@ mod tests {
         let out = bias_sample(&StratifiedSample::default(), &BTreeMap::new());
         assert_eq!(out.total_len(), 0);
         assert_eq!(out.reuse_fraction(), 0.0);
+    }
+
+    #[test]
+    fn biased_run_carries_usable_id_set() {
+        // The run's id set must mirror the chosen records exactly, so the
+        // planner can diff without rebuilding sets.
+        let sample = sample_of(vec![(0, vec![1, 2, 3, 4])]);
+        let memo = memo_of(vec![(0, vec![rec(2, 0), rec(10, 0)])]);
+        let out = bias_sample(&sample, &memo);
+        let run = &out.per_stratum[&0];
+        assert_eq!(run.len(), 4);
+        for r in run.records() {
+            assert!(run.contains(r.id));
+        }
+        // An id considered but superseded must not leak into the set.
+        let absent: Vec<u64> =
+            (1..=10).filter(|id| !run.records().iter().any(|r| r.id == *id)).collect();
+        for id in absent {
+            assert!(!run.contains(id), "id {id} leaked into the run set");
+        }
     }
 }

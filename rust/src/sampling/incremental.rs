@@ -1,0 +1,370 @@
+//! Persistent cross-slide stratified sampling — Algorithm 2 as
+//! self-adjusting state.
+//!
+//! [`StratifiedSampler`](crate::sampling::stratified::StratifiedSampler)
+//! is a one-shot streaming sampler: every window re-offers every item, so
+//! each slide costs O(window) no matter how small the input change was.
+//! This module keeps the sample alive *between* windows instead:
+//!
+//! * every item gets a deterministic pseudo-random **rank** — a keyed
+//!   64-bit avalanche of its id ([`mix64`]) — fixed for the sampler's
+//!   lifetime;
+//! * each stratum keeps its current-window items ordered by rank;
+//! * the per-stratum sample is the `cap_i` lowest-ranked residents, where
+//!   `cap_i` is Eq 3.1's proportional allocation
+//!   ([`allocate_proportional`]), recomputed from the exact per-stratum
+//!   populations in O(strata · log strata) per window — which subsumes
+//!   the legacy sampler's `T`-interval re-allocation (the interval
+//!   governed when rates were *re-estimated*; here the populations are
+//!   exact at every slide, so the allocation can never drift).
+//!
+//! Sliding is then O(|delta| · log window): remove the evicted items,
+//! insert the arrived ones ([`IncrementalSampler::apply_delta`]). Within
+//! a stratum, the `cap_i` lowest ranks of independently-ranked items are
+//! a uniform random subset without replacement (bottom-k sampling), so
+//! the §3.5 stratified error estimator applies unchanged.
+//!
+//! Because the sample is a pure function of *(window contents, seed)*,
+//! the incremental path and the from-scratch path
+//! ([`IncrementalSampler::rebuild`]) yield **identical** samples — the
+//! coordinator's serial/sharded/incremental equivalence tests and
+//! `prop_incremental_sampler_matches_from_scratch` pin this, and it is
+//! what lets the O(delta) slide path keep `WindowReport`s byte-identical
+//! to the O(window) baseline.
+
+use std::collections::BTreeMap;
+
+use crate::sampling::stratified::{allocate_proportional, StratifiedSample};
+use crate::util::hash::mix64;
+use crate::window::WindowDelta;
+use crate::workload::record::{Record, StratumId};
+
+/// Deterministic rank of an item under a sampler seed.
+#[inline]
+fn rank(seed: u64, id: u64) -> u64 {
+    mix64(seed ^ mix64(id))
+}
+
+/// One stratum's current-window items, ordered by (rank, id).
+#[derive(Debug, Clone, Default)]
+struct RankedStratum {
+    by_rank: BTreeMap<(u64, u64), Record>,
+}
+
+/// A stratified sampler whose state persists across window slides.
+///
+/// # Example
+///
+/// A slide updates the sample in O(delta), and matches a from-scratch
+/// rebuild exactly:
+///
+/// ```
+/// use incapprox::sampling::incremental::IncrementalSampler;
+/// use incapprox::window::CountWindow;
+/// use incapprox::workload::record::Record;
+///
+/// let mut window = CountWindow::new(1000);
+/// let mut sampler = IncrementalSampler::new(7);
+///
+/// // Warm window: 1000 records over strata 0/1/2, then one slide of 100.
+/// let rec = |i: u64| Record::new(i, (i % 3) as u32, i, 0, i as f64);
+/// let snap = window.slide((0..1000).map(rec).collect());
+/// sampler.apply_delta(&snap.delta);
+/// let snap = window.slide((1000..1100).map(rec).collect());
+/// let touched = sampler.apply_delta(&snap.delta);
+/// assert_eq!(touched, 200); // 100 inserted + 100 evicted, not 1000
+///
+/// let sample = sampler.sample(100);
+/// assert_eq!(sample.total_len(), 100);
+///
+/// // From-scratch over the same window contents: identical sample.
+/// let mut scratch = IncrementalSampler::new(7);
+/// scratch.rebuild(snap.items());
+/// assert_eq!(format!("{:?}", scratch.sample(100)), format!("{sample:?}"));
+/// ```
+#[derive(Debug, Clone)]
+pub struct IncrementalSampler {
+    seed: u64,
+    strata: BTreeMap<StratumId, RankedStratum>,
+    total: u64,
+}
+
+impl IncrementalSampler {
+    /// Empty sampler; `seed` keys the item ranks (same seed + same window
+    /// contents → same sample, regardless of the slide path taken).
+    pub fn new(seed: u64) -> Self {
+        IncrementalSampler { seed, strata: BTreeMap::new(), total: 0 }
+    }
+
+    /// Items currently tracked (the window population).
+    pub fn len(&self) -> usize {
+        self.total as usize
+    }
+
+    /// True when no items are tracked.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Number of strata currently present.
+    pub fn strata_len(&self) -> usize {
+        self.strata.len()
+    }
+
+    fn insert(&mut self, r: Record) {
+        let key = (rank(self.seed, r.id), r.id);
+        let slot = self.strata.entry(r.stratum).or_default();
+        let replaced = slot.by_rank.insert(key, r);
+        // Ids are globally unique within a window (the `Record::id`
+        // contract); a duplicate would silently desynchronize the
+        // incremental path from the rebuild path, so make it loud.
+        debug_assert!(replaced.is_none(), "duplicate record id {} in window", r.id);
+        if replaced.is_none() {
+            self.total += 1;
+        }
+    }
+
+    fn remove(&mut self, r: &Record) {
+        let key = (rank(self.seed, r.id), r.id);
+        let mut emptied = false;
+        if let Some(slot) = self.strata.get_mut(&r.stratum) {
+            if slot.by_rank.remove(&key).is_some() {
+                self.total -= 1;
+                emptied = slot.by_rank.is_empty();
+            }
+        }
+        if emptied {
+            self.strata.remove(&r.stratum);
+        }
+    }
+
+    /// Apply one window slide's change set: insert the arrived items,
+    /// remove the evicted ones — O(|delta| · log window). Insertions are
+    /// applied first so a batch that flows straight through an oversized
+    /// slide (inserted *and* removed in the same delta) nets out.
+    /// Returns the number of items touched (the O(delta) work metric).
+    pub fn apply_delta(&mut self, delta: &WindowDelta) -> usize {
+        for r in &delta.inserted {
+            self.insert(*r);
+        }
+        for r in &delta.removed {
+            self.remove(r);
+        }
+        delta.len()
+    }
+
+    /// Drop all state and re-index the full window — the O(window)
+    /// from-scratch reference path. Returns the number of items touched.
+    pub fn rebuild(&mut self, items: &[Record]) -> usize {
+        self.strata.clear();
+        self.total = 0;
+        for r in items {
+            self.insert(*r);
+        }
+        items.len()
+    }
+
+    /// Exact per-stratum populations of the tracked window.
+    pub fn populations(&self) -> BTreeMap<StratumId, u64> {
+        self.strata.iter().map(|(&s, st)| (s, st.by_rank.len() as u64)).collect()
+    }
+
+    /// Emit the stratified sample for a total budget of `sample_size`
+    /// slots: Eq 3.1 proportional capacities over the exact populations,
+    /// then each stratum's `cap_i` lowest-ranked residents, in rank order.
+    /// O(sample + strata · log strata); the window is never rescanned.
+    pub fn sample(&self, sample_size: usize) -> StratifiedSample {
+        let mut out = StratifiedSample::default();
+        let populations = self.populations();
+        let caps = allocate_proportional(sample_size, &populations);
+        for (&stratum, st) in &self.strata {
+            let cap = caps.get(&stratum).copied().unwrap_or(0);
+            let items: Vec<Record> =
+                st.by_rank.values().take(cap).copied().collect();
+            out.per_stratum.insert(stratum, items);
+        }
+        out.population = populations;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::window::CountWindow;
+    use crate::workload::gen::MultiStream;
+
+    fn window_records(n: usize, seed: u64) -> Vec<Record> {
+        MultiStream::paper_section5(seed).take_records(n)
+    }
+
+    fn sample_ids(s: &StratifiedSample) -> Vec<(StratumId, Vec<u64>)> {
+        s.per_stratum
+            .iter()
+            .map(|(&st, recs)| (st, recs.iter().map(|r| r.id).collect()))
+            .collect()
+    }
+
+    #[test]
+    fn incremental_matches_rebuild_across_slides() {
+        let mut w = CountWindow::new(2000);
+        let mut inc = IncrementalSampler::new(11);
+        let mut gen = MultiStream::paper_section5(3);
+        for step in 0..8 {
+            let n = if step == 0 { 2000 } else { 250 };
+            let snap = w.slide(gen.take_records(n));
+            inc.apply_delta(&snap.delta);
+            let mut scratch = IncrementalSampler::new(11);
+            scratch.rebuild(snap.items());
+            let a = inc.sample(200);
+            let b = scratch.sample(200);
+            assert_eq!(a.population, b.population, "step {step}");
+            assert_eq!(sample_ids(&a), sample_ids(&b), "step {step}");
+        }
+    }
+
+    #[test]
+    fn populations_are_exact() {
+        let items = window_records(5_000, 5);
+        let mut s = IncrementalSampler::new(1);
+        s.rebuild(&items);
+        let mut want: BTreeMap<StratumId, u64> = BTreeMap::new();
+        for r in &items {
+            *want.entry(r.stratum).or_default() += 1;
+        }
+        assert_eq!(s.populations(), want);
+        assert_eq!(s.sample(500).population, want);
+        // take_records rounds up to whole generator ticks — compare
+        // against the actual item count, not the requested one.
+        assert_eq!(s.len(), items.len());
+    }
+
+    #[test]
+    fn sample_size_is_respected() {
+        let items = window_records(10_000, 1);
+        let mut s = IncrementalSampler::new(2);
+        s.rebuild(&items);
+        // Populations dwarf the budget → capacities are all satisfiable
+        // and the sample is exactly the budget.
+        assert_eq!(s.sample(1000).total_len(), 1000);
+    }
+
+    #[test]
+    fn proportional_allocation_matches_rates() {
+        // Rates 3:4:5 → sample shares ≈ 25%, 33%, 42%.
+        let items = window_records(12_000, 3);
+        let mut s = IncrementalSampler::new(4);
+        s.rebuild(&items);
+        let sample = s.sample(1200);
+        let total = sample.total_len() as f64;
+        for (stratum, want) in [(0u32, 3.0 / 12.0), (1, 4.0 / 12.0), (2, 5.0 / 12.0)] {
+            let got = sample.stratum(stratum).len() as f64 / total;
+            assert!(
+                (got - want).abs() < 0.02,
+                "stratum {stratum}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_duplicates_and_items_from_window() {
+        let items = window_records(6_000, 11);
+        let mut s = IncrementalSampler::new(12);
+        s.rebuild(&items);
+        let sample = s.sample(600);
+        let window_ids: std::collections::HashSet<u64> =
+            items.iter().map(|r| r.id).collect();
+        let mut seen = std::collections::HashSet::new();
+        for (&stratum, recs) in &sample.per_stratum {
+            for r in recs {
+                assert_eq!(r.stratum, stratum);
+                assert!(window_ids.contains(&r.id));
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_larger_than_window_keeps_everything() {
+        let items = window_records(300, 13);
+        let mut s = IncrementalSampler::new(14);
+        s.rebuild(&items);
+        assert_eq!(s.sample(1000).total_len(), items.len());
+    }
+
+    #[test]
+    fn minority_stratum_not_neglected() {
+        let mut items = window_records(9_000, 7);
+        for r in items.iter_mut().take(9) {
+            r.stratum = 99;
+        }
+        let mut s = IncrementalSampler::new(8);
+        s.rebuild(&items);
+        let sample = s.sample(900);
+        assert!(!sample.stratum(99).is_empty(), "minority stratum neglected");
+    }
+
+    #[test]
+    fn uniform_inclusion_within_stratum() {
+        // Bottom-k by keyed rank: over many seeds, every item should be
+        // included at comparable rates (k/n each).
+        let n = 4_000usize;
+        let items: Vec<Record> =
+            (0..n as u64).map(|i| Record::new(i, 0, 0, 0, 1.0)).collect();
+        let k = 400usize;
+        let trials = 40u64;
+        let mut first_half = 0usize;
+        for t in 0..trials {
+            let mut s = IncrementalSampler::new(1000 + t);
+            s.rebuild(&items);
+            first_half +=
+                s.sample(k).stratum(0).iter().filter(|r| r.id < n as u64 / 2).count();
+        }
+        let frac = first_half as f64 / (trials as usize * k) as f64;
+        assert!((frac - 0.5).abs() < 0.05, "first-half fraction {frac}");
+    }
+
+    #[test]
+    fn eviction_and_strata_cleanup() {
+        let mut s = IncrementalSampler::new(1);
+        let r0 = Record::new(1, 0, 0, 0, 1.0);
+        let r1 = Record::new(2, 7, 0, 0, 2.0);
+        let delta = WindowDelta { inserted: vec![r0, r1], removed: vec![] };
+        assert_eq!(s.apply_delta(&delta), 2);
+        assert_eq!(s.strata_len(), 2);
+        let delta = WindowDelta { inserted: vec![], removed: vec![r1] };
+        s.apply_delta(&delta);
+        assert_eq!(s.strata_len(), 1);
+        assert_eq!(s.len(), 1);
+        // Removing an item that was never inserted (e.g. a pre-warm-up
+        // resize eviction) is a tolerated no-op.
+        s.apply_delta(&WindowDelta { inserted: vec![], removed: vec![r1] });
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn oversized_slide_nets_out() {
+        // A batch larger than the window: overflow items appear in both
+        // `inserted` and `removed` of the same delta and must net to
+        // absent (insert-before-remove ordering).
+        let mut w = CountWindow::new(5);
+        let mut s = IncrementalSampler::new(9);
+        let rec = |i: u64| Record::new(i, 0, i, 0, 1.0);
+        let snap = w.slide((0..12).map(rec).collect());
+        s.apply_delta(&snap.delta);
+        assert_eq!(s.len(), 5);
+        let mut scratch = IncrementalSampler::new(9);
+        scratch.rebuild(snap.items());
+        assert_eq!(sample_ids(&s.sample(3)), sample_ids(&scratch.sample(3)));
+    }
+
+    #[test]
+    fn empty_sampler_emits_empty_sample() {
+        let s = IncrementalSampler::new(0);
+        let sample = s.sample(100);
+        assert_eq!(sample.total_len(), 0);
+        assert!(sample.population.is_empty());
+        assert!(s.is_empty());
+    }
+}

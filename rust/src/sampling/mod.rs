@@ -3,14 +3,168 @@
 //! * [`reservoir`] — conventional reservoir sampling (CRS), Algorithm 3.
 //! * [`stratified`] — stratified reservoir sampling with periodic
 //!   proportional re-allocation and adaptive resizing (ARS), Algorithm 2 +
-//!   Eq 3.1.
+//!   Eq 3.1 (the one-shot, per-window streaming sampler).
+//! * [`incremental`] — Algorithm 2 as self-adjusting state: a persistent
+//!   rank-based sampler maintained across window slides in O(delta),
+//!   producing samples identical to a from-scratch rebuild.
 //! * [`biased`] — the marriage itself: per-stratum biasing of the
 //!   stratified sample toward memoized items, Algorithm 4.
+//!
+//! [`SampleRun`] is the shared currency between the stages: an immutable
+//! `Arc`-backed run of sampled records plus its id set, so the bias →
+//! plan → memoize plumbing passes samples around without copying records
+//! or rebuilding hash sets.
 
 pub mod biased;
+pub mod incremental;
 pub mod reservoir;
 pub mod stratified;
 
 pub use biased::{bias_sample, BiasOutcome};
+pub use incremental::IncrementalSampler;
 pub use reservoir::Reservoir;
-pub use stratified::{StratifiedSample, StratifiedSampler};
+pub use stratified::{allocate_proportional, StratifiedSample, StratifiedSampler};
+
+use std::sync::Arc;
+
+use crate::util::hash::FastSet;
+use crate::workload::record::Record;
+
+/// An immutable run of sampled records shared across pipeline stages.
+///
+/// Cloning is O(1) (two `Arc` bumps): the biased sample, the memo store's
+/// per-stratum item lists, and the planner's previous-window view all
+/// hand around the *same* allocation, and the id set built once during
+/// biasing serves every later membership test — no per-window
+/// re-hashing.
+#[derive(Debug, Clone)]
+pub struct SampleRun {
+    seq: Arc<[Record]>,
+    ids: Arc<FastSet<u64>>,
+    min_ts: u64,
+}
+
+impl Default for SampleRun {
+    fn default() -> Self {
+        SampleRun {
+            seq: Arc::from(Vec::new()),
+            ids: Arc::new(FastSet::default()),
+            min_ts: u64::MAX,
+        }
+    }
+}
+
+fn min_ts_of(seq: &[Record]) -> u64 {
+    seq.iter().map(|r| r.timestamp).min().unwrap_or(u64::MAX)
+}
+
+impl SampleRun {
+    /// Build from an owned record vector (computes the id set).
+    pub fn from_vec(seq: Vec<Record>) -> Self {
+        Self::from_slice(&seq)
+    }
+
+    /// Build from a record slice (copies once, computes the id set).
+    pub fn from_slice(seq: &[Record]) -> Self {
+        let ids: FastSet<u64> = seq.iter().map(|r| r.id).collect();
+        SampleRun { min_ts: min_ts_of(seq), seq: Arc::from(seq), ids: Arc::new(ids) }
+    }
+
+    /// Assemble from pre-built parts (e.g. the bias step, which already
+    /// owns the id set it used for dedup). `ids` must be exactly the ids
+    /// of `seq`.
+    pub fn from_parts(seq: Arc<[Record]>, ids: Arc<FastSet<u64>>) -> Self {
+        debug_assert_eq!(seq.len(), ids.len(), "id set must mirror the record run");
+        SampleRun { min_ts: min_ts_of(&seq), seq, ids }
+    }
+
+    /// The records, in sample (bias) order.
+    pub fn records(&self) -> &[Record] {
+        &self.seq
+    }
+
+    /// O(1) membership test by item id.
+    pub fn contains(&self, id: u64) -> bool {
+        self.ids.contains(&id)
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    /// True when the run holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.seq.is_empty()
+    }
+
+    /// Smallest timestamp in the run (`u64::MAX` when empty) — lets
+    /// eviction and bias filtering skip untouched runs in O(1).
+    pub fn min_ts(&self) -> u64 {
+        self.min_ts
+    }
+
+    /// The run restricted to records with `timestamp >= start`. Returns a
+    /// zero-copy clone when nothing is filtered out.
+    pub fn filter_ts(&self, start: u64) -> SampleRun {
+        if self.min_ts >= start {
+            return self.clone();
+        }
+        let kept: Vec<Record> =
+            self.seq.iter().filter(|r| r.timestamp >= start).copied().collect();
+        SampleRun::from_vec(kept)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, ts: u64) -> Record {
+        Record::new(id, 0, ts, 0, id as f64)
+    }
+
+    #[test]
+    fn run_tracks_ids_and_min_ts() {
+        let run = SampleRun::from_vec(vec![rec(1, 9), rec(2, 4), rec(3, 7)]);
+        assert_eq!(run.len(), 3);
+        assert!(!run.is_empty());
+        assert!(run.contains(2));
+        assert!(!run.contains(9));
+        assert_eq!(run.min_ts(), 4);
+        assert_eq!(run.records()[0].id, 1);
+    }
+
+    #[test]
+    fn empty_run_defaults() {
+        let run = SampleRun::default();
+        assert!(run.is_empty());
+        assert_eq!(run.min_ts(), u64::MAX);
+        assert!(!run.contains(0));
+        let built = SampleRun::from_vec(Vec::new());
+        assert_eq!(built.min_ts(), u64::MAX);
+    }
+
+    #[test]
+    fn filter_ts_is_zero_copy_when_untouched() {
+        let run = SampleRun::from_vec(vec![rec(1, 10), rec(2, 12)]);
+        let same = run.filter_ts(10);
+        assert!(Arc::ptr_eq(&run.seq, &same.seq), "untouched filter must not copy");
+        let trimmed = run.filter_ts(11);
+        assert_eq!(trimmed.len(), 1);
+        assert!(trimmed.contains(2));
+        assert!(!trimmed.contains(1));
+        assert_eq!(trimmed.min_ts(), 12);
+    }
+
+    #[test]
+    fn from_parts_mirrors_slice_build() {
+        let records = vec![rec(5, 3), rec(6, 8)];
+        let ids: FastSet<u64> = records.iter().map(|r| r.id).collect();
+        let a = SampleRun::from_parts(Arc::from(records.clone()), Arc::new(ids));
+        let b = SampleRun::from_slice(&records);
+        assert_eq!(a.records(), b.records());
+        assert_eq!(a.min_ts(), b.min_ts());
+        assert!(a.contains(5) && a.contains(6));
+    }
+}

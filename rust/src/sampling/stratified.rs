@@ -23,6 +23,75 @@ use crate::sampling::reservoir::Reservoir;
 use crate::util::rng::Rng;
 use crate::workload::record::{Record, StratumId};
 
+/// Eq 3.1 proportional allocation with largest-remainder rounding:
+/// distribute `budget` sample slots over strata proportionally to their
+/// `populations`, so capacities sum to exactly `budget` and every seen
+/// stratum keeps at least one slot (minority protection — "no sub-stream
+/// is neglected") when the budget allows.
+///
+/// Deterministic: ties in the remainder ranking break by stratum id, and
+/// the minority pass donates from the largest allocation. Shared by the
+/// streaming [`StratifiedSampler`] (populations = per-reservoir `seen`
+/// counts at the `T`-interval re-allocation) and the persistent
+/// [`IncrementalSampler`](crate::sampling::incremental::IncrementalSampler)
+/// (populations = exact per-stratum window counts, recomputed per slide
+/// in O(strata)).
+pub fn allocate_proportional(
+    budget: usize,
+    populations: &BTreeMap<StratumId, u64>,
+) -> BTreeMap<StratumId, usize> {
+    let k: u64 = populations.values().sum();
+    let n_strata = populations.len();
+    if k == 0 || n_strata == 0 {
+        return BTreeMap::new();
+    }
+    // Ideal fractional shares.
+    let mut shares: Vec<(StratumId, f64)> = populations
+        .iter()
+        .map(|(&s, &p)| (s, budget as f64 * p as f64 / k as f64))
+        .collect();
+    // Floor + largest remainder.
+    let mut caps: BTreeMap<StratumId, usize> =
+        shares.iter().map(|&(s, f)| (s, f.floor() as usize)).collect();
+    let assigned: usize = caps.values().sum();
+    let mut leftover = budget.saturating_sub(assigned);
+    shares.sort_by(|a, b| {
+        let fa = a.1 - a.1.floor();
+        let fb = b.1 - b.1.floor();
+        fb.partial_cmp(&fa).unwrap().then(a.0.cmp(&b.0))
+    });
+    for (s, _) in shares {
+        if leftover == 0 {
+            break;
+        }
+        *caps.get_mut(&s).expect("stratum present") += 1;
+        leftover -= 1;
+    }
+    // Minority protection: every seen stratum gets ≥ 1 slot if possible,
+    // taking slots from the largest allocations.
+    if budget >= n_strata {
+        loop {
+            let zero: Vec<StratumId> =
+                caps.iter().filter(|(_, &c)| c == 0).map(|(&s, _)| s).collect();
+            if zero.is_empty() {
+                break;
+            }
+            for s in zero {
+                let (&donor, _) = caps
+                    .iter()
+                    .max_by_key(|(_, &c)| c)
+                    .expect("non-empty caps");
+                if caps[&donor] <= 1 {
+                    break;
+                }
+                *caps.get_mut(&donor).expect("donor") -= 1;
+                *caps.get_mut(&s).expect("stratum") += 1;
+            }
+        }
+    }
+    caps
+}
+
 /// Per-stratum state: the sub-reservoir plus the ARS pending-grow credit.
 #[derive(Debug)]
 struct SubState {
@@ -121,62 +190,13 @@ impl StratifiedSampler {
         self.sub.values().map(|s| s.reservoir.len()).sum()
     }
 
-    /// Eq 3.1 with largest-remainder rounding so capacities sum to exactly
-    /// `sample_size` and every *seen* stratum keeps at least one slot
-    /// (minority protection) when the budget allows.
+    /// Eq 3.1 capacities for the current reservoir state — see
+    /// [`allocate_proportional`]. (Per-stratum `seen` counts sum to
+    /// `total_seen`, so they are the populations.)
     fn proportional_capacities(&self) -> BTreeMap<StratumId, usize> {
-        let k = self.total_seen as f64;
-        let n_strata = self.sub.len();
-        if k == 0.0 || n_strata == 0 {
-            return BTreeMap::new();
-        }
-        let budget = self.sample_size;
-        // Ideal fractional shares.
-        let mut shares: Vec<(StratumId, f64)> = self
-            .sub
-            .iter()
-            .map(|(&s, st)| (s, budget as f64 * st.reservoir.seen() as f64 / k))
-            .collect();
-        // Floor + largest remainder.
-        let mut caps: BTreeMap<StratumId, usize> =
-            shares.iter().map(|&(s, f)| (s, f.floor() as usize)).collect();
-        let assigned: usize = caps.values().sum();
-        let mut leftover = budget.saturating_sub(assigned);
-        shares.sort_by(|a, b| {
-            let fa = a.1 - a.1.floor();
-            let fb = b.1 - b.1.floor();
-            fb.partial_cmp(&fa).unwrap().then(a.0.cmp(&b.0))
-        });
-        for (s, _) in shares {
-            if leftover == 0 {
-                break;
-            }
-            *caps.get_mut(&s).expect("stratum present") += 1;
-            leftover -= 1;
-        }
-        // Minority protection: every seen stratum gets ≥ 1 slot if possible,
-        // taking slots from the largest allocations.
-        if budget >= n_strata {
-            loop {
-                let zero: Vec<StratumId> =
-                    caps.iter().filter(|(_, &c)| c == 0).map(|(&s, _)| s).collect();
-                if zero.is_empty() {
-                    break;
-                }
-                for s in zero {
-                    let (&donor, _) = caps
-                        .iter()
-                        .max_by_key(|(_, &c)| c)
-                        .expect("non-empty caps");
-                    if caps[&donor] <= 1 {
-                        break;
-                    }
-                    *caps.get_mut(&donor).expect("donor") -= 1;
-                    *caps.get_mut(&s).expect("stratum") += 1;
-                }
-            }
-        }
-        caps
+        let populations: BTreeMap<StratumId, u64> =
+            self.sub.iter().map(|(&s, st)| (s, st.reservoir.seen())).collect();
+        allocate_proportional(self.sample_size, &populations)
     }
 
     /// Re-allocate sub-reservoir sizes (the `T`-interval branch of
@@ -370,6 +390,25 @@ mod tests {
         let items = &items[..300];
         let s = StratifiedSampler::sample_window(items, 1000, 100, Rng::new(14));
         assert_eq!(s.total_len(), items.len());
+    }
+
+    #[test]
+    fn allocate_proportional_sums_and_protects_minorities() {
+        // Direct Eq 3.1 checks (shared by the streaming and persistent
+        // samplers): capacities sum to the budget exactly, shares track
+        // populations, tiny strata keep a slot when the budget allows.
+        let pops = BTreeMap::from([(0u32, 3000u64), (1, 4000), (2, 5000), (9, 2)]);
+        let caps = allocate_proportional(120, &pops);
+        assert_eq!(caps.values().sum::<usize>(), 120);
+        assert!(caps[&9] >= 1, "minority stratum starved: {caps:?}");
+        assert!(caps[&2] > caps[&0], "shares must track populations");
+        // Determinism.
+        assert_eq!(caps, allocate_proportional(120, &pops));
+        // Degenerate inputs.
+        assert!(allocate_proportional(10, &BTreeMap::new()).is_empty());
+        assert!(allocate_proportional(10, &BTreeMap::from([(0u32, 0u64)])).is_empty());
+        let one = allocate_proportional(0, &BTreeMap::from([(0u32, 5u64)]));
+        assert_eq!(one.values().sum::<usize>(), 0);
     }
 
     #[test]

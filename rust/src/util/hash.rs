@@ -159,6 +159,59 @@ mod tests {
     }
 
     #[test]
+    fn stable_hasher_golden_vectors() {
+        // Pinned digests (independently computed from the algorithm
+        // spec). The incremental chunking path reuses stored hashes
+        // instead of re-hashing unchanged runs, so any drift in
+        // `StableHasher` — especially `write_f64`'s bit-pattern rule —
+        // across toolchains or refactors would silently split the memo
+        // keyspace. These constants make that a loud failure instead.
+        assert_eq!(mix64(0), 0x0);
+        assert_eq!(mix64(1), 0x5692_161d_100b_05e5);
+        assert_eq!(mix64(0xDEAD_BEEF), 0x4e06_2702_ec92_9eea);
+
+        assert_eq!(StableHasher::new().finish(), 0xf52a_15e9_a9b5_e89b);
+
+        let mut h = StableHasher::new();
+        h.write_u64(42);
+        assert_eq!(h.finish(), 0x69de_48d0_775c_4d32);
+
+        let mut h = StableHasher::new();
+        h.write_u64(1);
+        h.write_u64(2);
+        h.write_u64(3);
+        assert_eq!(h.finish(), 0x0cf1_ccbd_e514_5998);
+
+        // write_f64 coverage: normal value, both zeros (distinct bit
+        // patterns, distinct digests), NaN collapse, negative value.
+        let f64_digest = |v: f64| {
+            let mut h = StableHasher::new();
+            h.write_f64(v);
+            h.finish()
+        };
+        assert_eq!(f64_digest(1.5), 0xf0d4_2273_9efe_9821);
+        assert_eq!(f64_digest(0.0), 0x51de_1b0e_99b4_c033);
+        assert_eq!(f64_digest(-0.0), 0xe9e7_6c7e_b7a2_c17f);
+        assert_eq!(f64_digest(f64::NAN), 0xda32_fe1e_8eb9_e7a5);
+        assert_eq!(f64_digest(-1.25), 0x2902_7a1c_ed6b_277e);
+
+        let mut h = StableHasher::new();
+        h.write_bytes(b"stratum-3");
+        assert_eq!(h.finish(), 0x4ff1_6c48_618a_c398);
+
+        // The exact absorb sequence `Chunk::from_run` uses: stratum id,
+        // then (id, value-bits) per record — stratum 3, ids 0..4 with
+        // values i * 0.5.
+        let mut h = StableHasher::new();
+        h.write_u64(3);
+        for i in 0..4u64 {
+            h.write_u64(i);
+            h.write_f64(i as f64 * 0.5);
+        }
+        assert_eq!(h.finish(), 0x9f4f_15df_2302_e94c);
+    }
+
+    #[test]
     fn mix64_spreads_low_entropy() {
         // Consecutive integers should not produce consecutive hashes.
         let h: Vec<u64> = (0u64..16).map(mix64).collect();

@@ -1,9 +1,17 @@
-//! Sliding-window computation model (§2.3.2, Figure 2.3).
+//! Sliding-window computation model (§2.3.2, Figure 2.3) — delta-first.
 //!
 //! The coordinator consumes the aggregated stream in slide-sized batches;
 //! the window manager maintains the current computation window and reports
 //! the **delta** (inserted / removed items) between adjacent windows — the
-//! input-change set that drives change propagation in `sac/`.
+//! input-change set that drives change propagation in `sac/` and the
+//! persistent sampler in `sampling::incremental`.
+//!
+//! Snapshots are **delta-first**: the change set, the window length, and
+//! the eviction horizon (`start_ts`) are always present and cost O(delta)
+//! to produce; the full item view is materialized (as a shared
+//! `Arc<[Record]>`) only when a consumer asks for it — the exact modes
+//! and the from-scratch baseline do, the incremental O(delta) slide path
+//! does not, so a slide never pays an O(window) copy it doesn't need.
 //!
 //! Two window kinds:
 //! * [`CountWindow`] — fixed item count with item-count slide. This is what
@@ -13,6 +21,7 @@
 //!   vary with arrival rate (the paper's stated general model, §2.3.3).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::workload::record::Record;
 
@@ -25,15 +34,60 @@ pub struct WindowDelta {
     pub removed: Vec<Record>,
 }
 
-/// A full window snapshot handed to the sampling stage.
+impl WindowDelta {
+    /// |inserted| + |removed| — the input-change size that O(delta) work
+    /// is proportional to.
+    pub fn len(&self) -> usize {
+        self.inserted.len() + self.removed.len()
+    }
+
+    /// True when the window did not change.
+    pub fn is_empty(&self) -> bool {
+        self.inserted.is_empty() && self.removed.is_empty()
+    }
+}
+
+/// A window snapshot handed to the sampling stage.
+///
+/// Always carries the delta, the item count, and the smallest in-window
+/// timestamp; the full item view is optional (see module docs) and shared
+/// behind an `Arc` so cloning a snapshot never copies records.
 #[derive(Debug, Clone)]
 pub struct WindowSnapshot {
     /// Monotonic window sequence number.
     pub window_id: u64,
-    /// Items currently in the window, oldest first.
-    pub items: Vec<Record>,
+    /// Number of items currently in the window.
+    pub len: usize,
+    /// Smallest timestamp in the window (0 when empty) — Algorithm 1's
+    /// memo-eviction horizon.
+    pub start_ts: u64,
     /// Change set vs. the previous window.
     pub delta: WindowDelta,
+    /// Full item view, present only when the slide materialized it.
+    items: Option<Arc<[Record]>>,
+}
+
+impl WindowSnapshot {
+    /// The full window view, if this snapshot materialized one.
+    pub fn full_view(&self) -> Option<&[Record]> {
+        self.items.as_deref()
+    }
+
+    /// The full window view; panics when the snapshot was taken
+    /// delta-only (use [`WindowSnapshot::full_view`] to probe).
+    pub fn items(&self) -> &[Record] {
+        self.full_view().expect("window snapshot has no full view (delta-only slide)")
+    }
+
+    /// Whether the full item view was materialized.
+    pub fn has_full_view(&self) -> bool {
+        self.items.is_some()
+    }
+
+    /// True when the window holds no items.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
 }
 
 /// Count-based sliding window.
@@ -41,6 +95,13 @@ pub struct WindowSnapshot {
 pub struct CountWindow {
     size: usize,
     buf: VecDeque<Record>,
+    /// Monotonic `(timestamp, id)` queue: the front is the minimum
+    /// timestamp of the buffered window, maintained in O(1) amortized per
+    /// slide item, so a delta-only snapshot never scans the window.
+    min_ts: VecDeque<(u64, u64)>,
+    /// Items evicted by [`CountWindow::resize`], reported in the next
+    /// slide's delta so downstream incremental state stays consistent.
+    pending_removed: Vec<Record>,
     next_window_id: u64,
 }
 
@@ -48,39 +109,79 @@ impl CountWindow {
     /// Window holding exactly `size` items once warm.
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
-        CountWindow { size, buf: VecDeque::with_capacity(size + 1), next_window_id: 0 }
+        CountWindow {
+            size,
+            buf: VecDeque::with_capacity(size + 1),
+            min_ts: VecDeque::new(),
+            pending_removed: Vec::new(),
+            next_window_id: 0,
+        }
+    }
+
+    fn push(&mut self, r: Record) {
+        while self.min_ts.back().map_or(false, |&(ts, _)| ts > r.timestamp) {
+            self.min_ts.pop_back();
+        }
+        self.min_ts.push_back((r.timestamp, r.id));
+        self.buf.push_back(r);
+    }
+
+    fn evict_front(&mut self) -> Record {
+        let r = self.buf.pop_front().expect("non-empty");
+        if self.min_ts.front().map_or(false, |&(_, id)| id == r.id) {
+            self.min_ts.pop_front();
+        }
+        r
     }
 
     /// Push one slide's worth of new items; returns the new window
-    /// snapshot. Items beyond `size` fall out FIFO (oldest first).
+    /// snapshot with the full item view materialized. Items beyond
+    /// `size` fall out FIFO (oldest first).
     pub fn slide(&mut self, batch: Vec<Record>) -> WindowSnapshot {
-        let mut removed = Vec::new();
+        self.slide_with(batch, true)
+    }
+
+    /// [`CountWindow::slide`] with explicit control over the full view:
+    /// `materialize = false` skips the O(window) item copy and produces a
+    /// delta-only snapshot (`len` and `start_ts` are still exact) — the
+    /// incremental slide path of the coordinator.
+    pub fn slide_with(&mut self, batch: Vec<Record>, materialize: bool) -> WindowSnapshot {
+        let mut removed = std::mem::take(&mut self.pending_removed);
         for r in &batch {
-            self.buf.push_back(*r);
+            self.push(*r);
             if self.buf.len() > self.size {
-                removed.push(self.buf.pop_front().expect("non-empty"));
+                removed.push(self.evict_front());
             }
         }
         let id = self.next_window_id;
         self.next_window_id += 1;
         WindowSnapshot {
             window_id: id,
-            items: self.buf.iter().copied().collect(),
+            len: self.buf.len(),
+            start_ts: self.min_ts.front().map_or(0, |&(ts, _)| ts),
+            items: materialize
+                .then(|| self.buf.iter().copied().collect::<Arc<[Record]>>()),
             delta: WindowDelta { inserted: batch, removed },
         }
     }
 
     /// Change the target size (Fig 5.1(c) varies window size between
-    /// adjacent windows). Shrinking evicts oldest items immediately;
-    /// the evicted items are reported by the *next* `slide`'s delta via
-    /// the returned vector here.
+    /// adjacent windows). Shrinking evicts oldest items immediately; the
+    /// evicted items are returned **and** queued into the *next* slide's
+    /// `delta.removed`, so delta-driven consumers (persistent sampler,
+    /// inverse-reduce planning) observe the eviction exactly once.
+    ///
+    /// The return value is for inspection only — the snapshot deltas are
+    /// the single source of truth. Do not feed the returned records into
+    /// a delta-driven consumer as well, or the eviction is applied twice.
     pub fn resize(&mut self, new_size: usize) -> Vec<Record> {
         assert!(new_size > 0);
         self.size = new_size;
         let mut evicted = Vec::new();
         while self.buf.len() > self.size {
-            evicted.push(self.buf.pop_front().expect("non-empty"));
+            evicted.push(self.evict_front());
         }
+        self.pending_removed.extend(evicted.iter().copied());
         evicted
     }
 
@@ -101,6 +202,11 @@ impl CountWindow {
 }
 
 /// Time-based sliding window (length and slide in logical ticks).
+///
+/// The buffer is kept in non-decreasing timestamp order (enforced by a
+/// debug assertion in [`TimeWindow::ingest`]); window membership and the
+/// delta are derived positionally, so one emit costs O(delta) plus a
+/// binary search — not a scan of the buffer.
 #[derive(Debug)]
 pub struct TimeWindow {
     length: u64,
@@ -108,6 +214,9 @@ pub struct TimeWindow {
     /// Exclusive end of the last emitted window.
     next_end: u64,
     buf: VecDeque<Record>,
+    /// Length of the buffered prefix that belonged to the previously
+    /// emitted window — the positional anchor the delta is derived from.
+    in_window: usize,
     next_window_id: u64,
 }
 
@@ -115,7 +224,14 @@ impl TimeWindow {
     /// Window covering `[end-length, end)` sliding by `slide` ticks.
     pub fn new(length: u64, slide: u64) -> Self {
         assert!(length > 0 && slide > 0 && slide <= length);
-        TimeWindow { length, slide, next_end: length, buf: VecDeque::new(), next_window_id: 0 }
+        TimeWindow {
+            length,
+            slide,
+            next_end: length,
+            buf: VecDeque::new(),
+            in_window: 0,
+            next_window_id: 0,
+        }
     }
 
     /// Feed records (must arrive in non-decreasing timestamp order).
@@ -127,36 +243,57 @@ impl TimeWindow {
     }
 
     /// Emit the next window if all its data (ticks < end) has been seen,
-    /// i.e. `now >= end`. Removes items older than the new start.
+    /// i.e. `now >= end`, with the full item view materialized. Removes
+    /// items older than the new start.
     pub fn try_emit(&mut self, now: u64) -> Option<WindowSnapshot> {
+        self.try_emit_with(now, true)
+    }
+
+    /// [`TimeWindow::try_emit`] with explicit control over the full view
+    /// (`materialize = false` produces a delta-only snapshot, skipping
+    /// the O(window) copy).
+    pub fn try_emit_with(&mut self, now: u64, materialize: bool) -> Option<WindowSnapshot> {
         if now < self.next_end {
             return None;
         }
         let end = self.next_end;
         let start = end.saturating_sub(self.length);
-        let prev_start = start.saturating_sub(self.slide);
-        // Remove all old items from the window (Algorithm 1: timestamp < t).
+        // Remove all old items from the window (Algorithm 1: timestamp
+        // < t). Only items that belonged to the previously emitted window
+        // are reported as removed; pre-window stragglers just drop.
         let mut removed = Vec::new();
         while let Some(front) = self.buf.front() {
-            if front.timestamp < start {
-                removed.push(self.buf.pop_front().expect("non-empty"));
-            } else {
+            if front.timestamp >= start {
                 break;
             }
+            let r = self.buf.pop_front().expect("non-empty");
+            if self.in_window > 0 {
+                self.in_window -= 1;
+                removed.push(r);
+            }
         }
-        // Inserted this slide: timestamps in [end - slide, end) — plus, for
-        // the first window, everything.
-        let ins_from = if self.next_window_id == 0 { 0 } else { end - self.slide };
-        let items: Vec<Record> =
-            self.buf.iter().filter(|r| r.timestamp < end).copied().collect();
-        let inserted =
-            items.iter().filter(|r| r.timestamp >= ins_from).copied().collect();
-        // Items removed must have been in the previous window.
-        removed.retain(|r| r.timestamp >= prev_start);
+        // The window is the buffered prefix with timestamp < end (the
+        // buffer is timestamp-ordered).
+        let cut = self.buf.partition_point(|r| r.timestamp < end);
+        // Inserted this slide: exactly the in-window items beyond the
+        // previous window's surviving prefix. Positional, so items that
+        // were already buffered ahead of the previous window's end are
+        // picked up when the window reaches them.
+        let inserted: Vec<Record> = self.buf.range(self.in_window..cut).copied().collect();
+        let start_ts = if cut > 0 { self.buf.front().expect("cut > 0").timestamp } else { 0 };
+        let items = materialize
+            .then(|| self.buf.range(..cut).copied().collect::<Arc<[Record]>>());
+        self.in_window = cut;
         let id = self.next_window_id;
         self.next_window_id += 1;
         self.next_end += self.slide;
-        Some(WindowSnapshot { window_id: id, items, delta: WindowDelta { inserted, removed } })
+        Some(WindowSnapshot {
+            window_id: id,
+            len: cut,
+            start_ts,
+            items,
+            delta: WindowDelta { inserted, removed },
+        })
     }
 
     /// Configured (length, slide).
@@ -173,20 +310,30 @@ mod tests {
         Record::new(id, 0, ts, 0, id as f64)
     }
 
+    /// Check a materialized snapshot's derived fields against its items.
+    fn assert_consistent(snap: &WindowSnapshot) {
+        let items = snap.items();
+        assert_eq!(snap.len, items.len());
+        let want_start = items.iter().map(|r| r.timestamp).min().unwrap_or(0);
+        assert_eq!(snap.start_ts, want_start);
+    }
+
     #[test]
     fn count_window_warms_then_slides() {
         let mut w = CountWindow::new(10);
         let snap = w.slide((0..10).map(|i| rec(i, i)).collect());
-        assert_eq!(snap.items.len(), 10);
+        assert_eq!(snap.items().len(), 10);
         assert!(snap.delta.removed.is_empty());
+        assert_consistent(&snap);
         let snap = w.slide((10..14).map(|i| rec(i, i)).collect());
-        assert_eq!(snap.items.len(), 10);
+        assert_eq!(snap.items().len(), 10);
         assert_eq!(snap.delta.inserted.len(), 4);
         assert_eq!(
             snap.delta.removed.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![0, 1, 2, 3]
         );
-        assert_eq!(snap.items[0].id, 4);
+        assert_eq!(snap.items()[0].id, 4);
+        assert_consistent(&snap);
     }
 
     #[test]
@@ -195,7 +342,7 @@ mod tests {
         let mut w = CountWindow::new(100);
         w.slide((0..100).map(|i| rec(i, 0)).collect());
         let s2 = w.slide((100..116).map(|i| rec(i, 1)).collect());
-        let overlap = s2.items.iter().filter(|r| r.id < 100).count();
+        let overlap = s2.items().iter().filter(|r| r.id < 100).count();
         assert_eq!(overlap, 84);
     }
 
@@ -207,6 +354,24 @@ mod tests {
         assert_eq!(evicted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
         assert_eq!(w.len(), 6);
         assert!(w.resize(20).is_empty());
+    }
+
+    #[test]
+    fn count_window_resize_reports_evictions_in_next_delta() {
+        // Delta consumers must observe resize evictions exactly once, in
+        // the next slide's `removed`.
+        let mut w = CountWindow::new(10);
+        w.slide((0..10).map(|i| rec(i, i)).collect());
+        let evicted = w.resize(6);
+        assert_eq!(evicted.len(), 4);
+        let snap = w.slide(vec![rec(100, 100)]);
+        let removed_ids: Vec<u64> = snap.delta.removed.iter().map(|r| r.id).collect();
+        assert_eq!(removed_ids, vec![0, 1, 2, 3, 4]); // 4 resized out + 1 slid out
+        assert_eq!(snap.len, 6);
+        assert_consistent(&snap);
+        // Nothing double-reported on the following slide.
+        let snap = w.slide(vec![]);
+        assert!(snap.delta.removed.is_empty());
     }
 
     #[test]
@@ -225,13 +390,15 @@ mod tests {
         let mut w = CountWindow::new(4);
         let snap = w.slide(vec![]);
         assert_eq!(snap.window_id, 0);
-        assert!(snap.items.is_empty());
-        assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
+        assert!(snap.items().is_empty());
+        assert!(snap.is_empty());
+        assert_eq!(snap.start_ts, 0);
+        assert!(snap.delta.is_empty());
         // Warm it, then empty-slide again: contents unchanged, id advances.
         w.slide(vec![rec(0, 0), rec(1, 1)]);
         let snap = w.slide(vec![]);
         assert_eq!(snap.window_id, 2);
-        assert_eq!(snap.items.len(), 2);
+        assert_eq!(snap.items().len(), 2);
         assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
     }
 
@@ -241,13 +408,14 @@ mod tests {
         // overflow (including items from this very batch) falls out FIFO.
         let mut w = CountWindow::new(5);
         let snap = w.slide((0..12).map(|i| rec(i, i)).collect());
-        assert_eq!(snap.items.len(), 5);
-        assert_eq!(snap.items.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7, 8, 9, 10, 11]);
+        assert_eq!(snap.items().len(), 5);
+        assert_eq!(snap.items().iter().map(|r| r.id).collect::<Vec<_>>(), vec![7, 8, 9, 10, 11]);
         assert_eq!(snap.delta.inserted.len(), 12);
         assert_eq!(snap.delta.removed.len(), 7);
+        assert_consistent(&snap);
         // A second oversized slide removes the entire previous window.
         let snap = w.slide((12..22).map(|i| rec(i, i)).collect());
-        assert_eq!(snap.items.iter().map(|r| r.id).collect::<Vec<_>>(), vec![17, 18, 19, 20, 21]);
+        assert_eq!(snap.items().iter().map(|r| r.id).collect::<Vec<_>>(), vec![17, 18, 19, 20, 21]);
         assert!(snap.delta.removed.iter().any(|r| r.id == 7), "old window evicted");
     }
 
@@ -259,9 +427,45 @@ mod tests {
         let mut w = CountWindow::new(6);
         w.slide((0..6).map(|i| Record::new(i, 0, i, 0, 1.0)).collect());
         let snap = w.slide((6..9).map(|i| Record::new(i, 0, i, 0, 1.0)).collect());
-        assert!(snap.items.iter().all(|r| r.stratum == 0));
+        assert!(snap.items().iter().all(|r| r.stratum == 0));
         assert_eq!(snap.delta.inserted.len(), 3);
         assert_eq!(snap.delta.removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn count_window_delta_only_snapshot() {
+        // The O(delta) path: no full view, but len / start_ts / delta are
+        // identical to the materializing slide.
+        let mut a = CountWindow::new(8);
+        let mut b = CountWindow::new(8);
+        for step in 0..5u64 {
+            let batch: Vec<Record> =
+                (step * 3..step * 3 + 3).map(|i| rec(i, i)).collect();
+            let full = a.slide_with(batch.clone(), true);
+            let lazy = b.slide_with(batch, false);
+            assert!(full.has_full_view());
+            assert!(!lazy.has_full_view());
+            assert!(lazy.full_view().is_none());
+            assert_eq!(full.len, lazy.len);
+            assert_eq!(full.start_ts, lazy.start_ts);
+            assert_eq!(full.window_id, lazy.window_id);
+            let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
+            assert_eq!(ids(&full.delta.inserted), ids(&lazy.delta.inserted));
+            assert_eq!(ids(&full.delta.removed), ids(&lazy.delta.removed));
+            assert_consistent(&full);
+        }
+    }
+
+    #[test]
+    fn count_window_min_ts_tracks_unordered_timestamps() {
+        // CountWindow makes no ordering assumption on timestamps; the
+        // monotonic deque must still report the exact minimum.
+        let ts = [9u64, 3, 7, 3, 11, 2, 5, 8, 2, 10, 6, 1, 4];
+        let mut w = CountWindow::new(4);
+        for (i, &t) in ts.iter().enumerate() {
+            let snap = w.slide(vec![rec(i as u64, t)]);
+            assert_consistent(&snap);
+        }
     }
 
     #[test]
@@ -271,12 +475,14 @@ mod tests {
         let mut w = TimeWindow::new(10, 5);
         let snap = w.try_emit(10).expect("boundary reached");
         assert_eq!(snap.window_id, 0);
-        assert!(snap.items.is_empty());
+        assert!(snap.items().is_empty());
+        assert_eq!(snap.start_ts, 0);
         assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
         // Data arriving later lands in subsequent windows.
         w.ingest(vec![rec(1, 12)]);
         let snap = w.try_emit(15).expect("next boundary");
-        assert_eq!(snap.items.len(), 1);
+        assert_eq!(snap.items().len(), 1);
+        assert_consistent(&snap);
     }
 
     #[test]
@@ -287,10 +493,10 @@ mod tests {
         w.ingest((0..8).map(|i| rec(i, i)));
         let s0 = w.try_emit(4).unwrap();
         let s1 = w.try_emit(8).unwrap();
-        assert_eq!(s0.items.len(), 4);
-        assert_eq!(s1.items.len(), 4);
-        let ids0: Vec<u64> = s0.items.iter().map(|r| r.id).collect();
-        let ids1: Vec<u64> = s1.items.iter().map(|r| r.id).collect();
+        assert_eq!(s0.items().len(), 4);
+        assert_eq!(s1.items().len(), 4);
+        let ids0: Vec<u64> = s0.items().iter().map(|r| r.id).collect();
+        let ids1: Vec<u64> = s1.items().iter().map(|r| r.id).collect();
         assert!(ids0.iter().all(|id| !ids1.contains(id)), "tumbling windows overlap");
     }
 
@@ -306,12 +512,12 @@ mod tests {
         let mut w = TimeWindow::new(6, 3);
         w.ingest((0..12).map(|i| Record::new(i, 0, i, 0, 2.0)));
         let s0 = w.try_emit(6).unwrap();
-        assert!(s0.items.iter().all(|r| r.stratum == 0));
-        assert_eq!(s0.items.len(), 6);
+        assert!(s0.items().iter().all(|r| r.stratum == 0));
+        assert_eq!(s0.items().len(), 6);
         let s1 = w.try_emit(9).unwrap();
         assert_eq!(s1.delta.removed.len(), 3);
         assert_eq!(s1.delta.inserted.len(), 3);
-        assert!(s1.items.iter().all(|r| r.stratum == 0));
+        assert!(s1.items().iter().all(|r| r.stratum == 0));
     }
 
     #[test]
@@ -320,15 +526,17 @@ mod tests {
         w.ingest((0..20).map(|i| rec(i, i)));
         assert!(w.try_emit(9).is_none());
         let s0 = w.try_emit(10).unwrap();
-        assert_eq!(s0.items.iter().map(|r| r.timestamp).max(), Some(9));
-        assert_eq!(s0.items.len(), 10);
+        assert_eq!(s0.items().iter().map(|r| r.timestamp).max(), Some(9));
+        assert_eq!(s0.items().len(), 10);
         assert_eq!(s0.delta.inserted.len(), 10); // first window: all new
+        assert_consistent(&s0);
         let s1 = w.try_emit(15).unwrap();
         // Window [5, 15): removed ts 0–4, inserted ts 10–14.
         assert_eq!(s1.delta.removed.len(), 5);
         assert_eq!(s1.delta.inserted.len(), 5);
-        assert_eq!(s1.items.len(), 10);
-        assert!(s1.items.iter().all(|r| (5..15).contains(&r.timestamp)));
+        assert_eq!(s1.items().len(), 10);
+        assert!(s1.items().iter().all(|r| (5..15).contains(&r.timestamp)));
+        assert_consistent(&s1);
     }
 
     #[test]
@@ -337,9 +545,51 @@ mod tests {
         // 2 records at tick 0, none at 1, 3 at tick 2, 1 at tick 3.
         w.ingest(vec![rec(0, 0), rec(1, 0), rec(2, 2), rec(3, 2), rec(4, 2), rec(5, 3)]);
         let s = w.try_emit(4).unwrap();
-        assert_eq!(s.items.len(), 6);
+        assert_eq!(s.items().len(), 6);
         let s = w.try_emit(6).unwrap(); // window [2,6): drops ts<2
-        assert_eq!(s.items.len(), 4);
+        assert_eq!(s.items().len(), 4);
         assert_eq!(s.delta.removed.len(), 2);
+    }
+
+    #[test]
+    fn time_window_delta_only_snapshot_matches_full() {
+        let mut a = TimeWindow::new(10, 5);
+        let mut b = TimeWindow::new(10, 5);
+        let records: Vec<Record> = (0..40).map(|i| rec(i, i)).collect();
+        a.ingest(records.clone());
+        b.ingest(records);
+        for boundary in [10u64, 15, 20, 25, 30] {
+            let full = a.try_emit_with(boundary, true).unwrap();
+            let lazy = b.try_emit_with(boundary, false).unwrap();
+            assert!(!lazy.has_full_view());
+            assert_eq!(full.len, lazy.len);
+            assert_eq!(full.start_ts, lazy.start_ts);
+            let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
+            assert_eq!(ids(&full.delta.inserted), ids(&lazy.delta.inserted));
+            assert_eq!(ids(&full.delta.removed), ids(&lazy.delta.removed));
+            assert_consistent(&full);
+        }
+    }
+
+    #[test]
+    fn time_window_buffered_ahead_items_enter_delta_when_reached() {
+        // Records buffered beyond the current window's end must show up in
+        // `inserted` when a later window covers them — the positional
+        // delta picks them up even though their timestamps pre-date the
+        // final slide interval.
+        let mut w = TimeWindow::new(10, 5);
+        w.ingest((0..18).map(|i| rec(i, i))); // ts 0..17 buffered up-front
+        let s0 = w.try_emit(10).unwrap(); // window [0,10)
+        assert_eq!(s0.delta.inserted.len(), 10);
+        let s1 = w.try_emit(15).unwrap(); // window [5,15): ts 10..14 arrive
+        assert_eq!(
+            s1.delta.inserted.iter().map(|r| r.timestamp).collect::<Vec<_>>(),
+            vec![10, 11, 12, 13, 14]
+        );
+        let s2 = w.try_emit(20).unwrap(); // window [10,20): ts 15..17 arrive
+        assert_eq!(
+            s2.delta.inserted.iter().map(|r| r.timestamp).collect::<Vec<_>>(),
+            vec![15, 16, 17]
+        );
     }
 }

@@ -6,12 +6,16 @@ mod common;
 use std::collections::{BTreeMap, HashSet};
 
 use common::{arb_batch, check_property};
-use incapprox::job::chunk::chunk_stratum;
+use incapprox::job::chunk::{chunk_stratum, chunk_stratum_cached};
 use incapprox::job::moments::Moments;
 use incapprox::sac::ddg::{Ddg, NodeKind};
+use incapprox::sampling::allocate_proportional;
 use incapprox::sampling::biased::bias_sample;
+use incapprox::sampling::incremental::IncrementalSampler;
 use incapprox::sampling::stratified::StratifiedSampler;
+use incapprox::sampling::SampleRun;
 use incapprox::util::rng::Rng;
+use incapprox::window::CountWindow;
 use incapprox::workload::record::Record;
 
 #[test]
@@ -56,10 +60,14 @@ fn prop_bias_preserves_sizes_and_dedups() {
             StratifiedSampler::sample_window(&items, 1 + rng.below(n), 200, rng.fork());
         // Memo: random subset of the window, plus some out-of-window junk
         // ids to be ignored via per-stratum lists.
-        let mut memo: BTreeMap<u32, Vec<Record>> = BTreeMap::new();
+        let mut memo_vecs: BTreeMap<u32, Vec<Record>> = BTreeMap::new();
         for r in items.iter().filter(|_| rng.bernoulli(0.3)) {
-            memo.entry(r.stratum).or_default().push(*r);
+            memo_vecs.entry(r.stratum).or_default().push(*r);
         }
+        let memo: BTreeMap<u32, SampleRun> = memo_vecs
+            .iter()
+            .map(|(&s, recs)| (s, SampleRun::from_vec(recs.clone())))
+            .collect();
         let out = bias_sample(&sample, &memo);
 
         for (&stratum, fresh) in &sample.per_stratum {
@@ -74,7 +82,7 @@ fn prop_bias_preserves_sizes_and_dedups() {
             }
             // (3) Memo priority: reused == min(x, y) when memo ∩ sample
             //     dedup cannot reduce it (reused counts memo items kept).
-            let x = memo.get(&stratum).map(Vec::len).unwrap_or(0);
+            let x = memo_vecs.get(&stratum).map(Vec::len).unwrap_or(0);
             let y = fresh.len();
             let reused = out.memo_reused[&stratum];
             assert!(reused <= y && reused <= x);
@@ -89,7 +97,7 @@ fn prop_chunking_partitions_input() {
         let n = rng.below(3000);
         let items = arb_batch(rng, n, 1, 50);
         let target = 1 + rng.below(200);
-        let chunks = chunk_stratum(0, items.clone(), target);
+        let chunks = chunk_stratum(0, &items, target);
         // Union of chunks == input, in order, no loss, size cap held.
         let mut flat = Vec::new();
         for c in &chunks {
@@ -106,7 +114,7 @@ fn prop_chunking_partitions_input() {
 fn prop_chunk_hashes_unique_per_content() {
     check_property("chunk hash uniqueness", 40, 4, |rng| {
         let items = arb_batch(rng, 2000, 1, 50);
-        let chunks = chunk_stratum(0, items, 32);
+        let chunks = chunk_stratum(0, &items, 32);
         let hashes: HashSet<u64> = chunks.iter().map(|c| c.hash).collect();
         assert_eq!(hashes.len(), chunks.len(), "hash collision in window");
     });
@@ -185,6 +193,118 @@ fn prop_ddg_propagation_closure() {
             if let (Some(&pi), Some(&pj)) = (pos.get(&nodes[i]), pos.get(&nodes[j])) {
                 assert!(pi < pj, "order violated for {i}->{j}");
             }
+        }
+    });
+}
+
+#[test]
+fn prop_incremental_sampler_matches_from_scratch() {
+    // The O(delta) slide invariant: maintaining the persistent sampler
+    // with window deltas across a randomized slide sequence yields
+    // *identical* samples — same populations, same per-stratum items in
+    // the same order — as rebuilding from the full window, under the
+    // same seed.
+    check_property("incremental sampler ≡ from-scratch", 40, 8, |rng| {
+        let window = 200 + rng.below(1200);
+        let slide = 1 + rng.below(window);
+        let sample_size = 1 + rng.below(window);
+        let strata = 1 + rng.below(5) as u32;
+        let seed = rng.next_u64();
+        let mut w = CountWindow::new(window);
+        let mut inc = IncrementalSampler::new(seed);
+        let mut next_id = 0u64;
+        for step in 0..5 {
+            let n = if step == 0 { window } else { slide };
+            let batch: Vec<Record> = (0..n)
+                .map(|_| {
+                    let id = next_id;
+                    next_id += 1;
+                    Record::new(
+                        id,
+                        rng.below(strata as usize) as u32,
+                        id, // monotone timestamps
+                        rng.below(64) as u64,
+                        rng.normal_with(10.0, 4.0),
+                    )
+                })
+                .collect();
+            let snap = w.slide(batch);
+            inc.apply_delta(&snap.delta);
+            let mut scratch = IncrementalSampler::new(seed);
+            scratch.rebuild(snap.items());
+
+            let a = inc.sample(sample_size);
+            let b = scratch.sample(sample_size);
+            // (1) Identical populations (and exact counts).
+            assert_eq!(a.population, b.population, "step {step}");
+            let mut true_counts: BTreeMap<u32, u64> = BTreeMap::new();
+            for r in snap.items() {
+                *true_counts.entry(r.stratum).or_default() += 1;
+            }
+            assert_eq!(a.population, true_counts, "step {step}");
+            // (2) Identical samples, item for item, in order.
+            assert_eq!(a.per_stratum.len(), b.per_stratum.len());
+            for (stratum, recs) in &a.per_stratum {
+                let ids_a: Vec<u64> = recs.iter().map(|r| r.id).collect();
+                let ids_b: Vec<u64> =
+                    b.stratum(*stratum).iter().map(|r| r.id).collect();
+                assert_eq!(ids_a, ids_b, "step {step} stratum {stratum}");
+            }
+            // (3) Capacities sum to the budget exactly.
+            let caps = allocate_proportional(sample_size, &a.population);
+            if !caps.is_empty() {
+                assert_eq!(caps.values().sum::<usize>(), sample_size);
+            }
+            // (4) Budget respected, no duplicates, items from the window.
+            assert!(a.total_len() <= sample_size);
+            let window_ids: HashSet<u64> = snap.items().iter().map(|r| r.id).collect();
+            let mut seen = HashSet::new();
+            for (stratum, recs) in &a.per_stratum {
+                for r in recs {
+                    assert_eq!(r.stratum, *stratum);
+                    assert!(window_ids.contains(&r.id));
+                    assert!(seen.insert(r.id), "duplicate id {}", r.id);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cached_chunking_is_equivalent() {
+    // Incremental chunk reuse must never change the chunk sequence:
+    // hashes and items match from-scratch chunking for random edits
+    // (prefix drops, interior removals, suffix appends).
+    check_property("cached chunking ≡ from-scratch", 40, 9, |rng| {
+        let n = 200 + rng.below(2000);
+        let target = 1 + rng.below(100);
+        let mut window = arb_batch(rng, n, 1, 50);
+        let mut next_id = n as u64;
+        let mut prev = chunk_stratum(0, &window, target);
+        for _ in 0..4 {
+            let drop_n = rng.below(window.len() / 2 + 1);
+            window.drain(..drop_n);
+            for _ in 0..rng.below(8) {
+                if window.is_empty() {
+                    break;
+                }
+                let victim = rng.below(window.len());
+                window.remove(victim);
+            }
+            let grow = rng.below(300);
+            for _ in 0..grow {
+                window.push(Record::new(next_id, 0, 50, 0, next_id as f64));
+                next_id += 1;
+            }
+            let (cached, rehashed) = chunk_stratum_cached(0, &window, target, &prev);
+            let scratch = chunk_stratum(0, &window, target);
+            assert_eq!(cached.len(), scratch.len());
+            assert!(rehashed <= window.len());
+            for (c, s) in cached.iter().zip(&scratch) {
+                assert_eq!(c.hash, s.hash);
+                assert_eq!(c.items[..], s.items[..]);
+            }
+            prev = cached;
         }
     });
 }
