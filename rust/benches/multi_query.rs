@@ -1,0 +1,149 @@
+//! Multi-query session scaling: N concurrent queries over one substrate.
+//!
+//! **Paper mapping:** §2.1 / §6.2 — IncApprox serves *user queries with
+//! individual budgets* over shared streams. The session redesign claims
+//! query count multiplies neither per-slide touched items nor memo
+//! traffic: the window, sampler, plan, and compute stages run once per
+//! slide regardless of N, and each extra query only adds an O(strata)
+//! derivation fold. This bench runs identical traces with N ∈ {1, 4, 16}
+//! registered queries (cycling through every [`AggregateKind`]) and
+//! prints, per N: per-slide ms, memo hits, substrate items/slide (must
+//! stay flat), and derive folds/slide (the only column allowed to grow).
+//!
+//! **JSON:** emits `target/bench-results/multi_query.json` with one
+//! `scaling` row per N: `queries`, `mean_ms_per_slide`, `memo_hits`,
+//! `substrate_items_per_slide`, `derive_per_slide`.
+//!
+//! ```bash
+//! cargo bench --bench multi_query            # full run
+//! cargo bench --bench multi_query -- --smoke # CI smoke (tiny, asserts)
+//! ```
+//!
+//! In `--smoke` mode the bench **asserts** the sharing invariants
+//! (substrate work and memo hits independent of N), so bench rot or a
+//! sharing regression fails CI.
+
+use incapprox::bench_harness::{black_box, section, JsonReporter};
+use incapprox::prelude::*;
+
+/// Run `slides` slides with `n_queries` registered; returns
+/// (ms over the slide loop, memo hits, last-slide work).
+fn run_queries(
+    cfg: &SystemConfig,
+    records: &[Record],
+    slides: usize,
+    n_queries: usize,
+) -> (f64, u64, incapprox::metrics::SlideWork) {
+    let mut coord = Coordinator::new(cfg.clone());
+    for i in 0..n_queries {
+        let kind = AggregateKind::ALL[i % AggregateKind::ALL.len()];
+        // Spread budgets so the union (max) logic is exercised too.
+        let fraction = if i % 2 == 0 { 0.1 } else { 0.05 };
+        coord
+            .submit_query(
+                QuerySpec::new(kind).with_budget(BudgetSpec::Fraction(fraction)),
+            )
+            .expect("valid spec");
+    }
+    let mut cursor = 0usize;
+    coord.process_batch(records[..cfg.window_size].to_vec()).unwrap();
+    cursor += cfg.window_size;
+    let sw = incapprox::metrics::Stopwatch::start();
+    for _ in 0..slides {
+        let batch = records[cursor..cursor + cfg.slide].to_vec();
+        cursor += cfg.slide;
+        let out = coord.process_batch_queries(batch).unwrap();
+        debug_assert_eq!(out.queries.len(), n_queries);
+        black_box(out.window.estimate.value);
+    }
+    let ms = sw.elapsed_ms();
+    (ms, coord.memo_stats().hits, coord.work_profile().last())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let window = if smoke { 2_048 } else { 8_192 };
+    let slides = if smoke { 4 } else { 16 };
+    let iters = if smoke { 1 } else { 5 };
+    let query_counts: &[usize] = &[1, 4, 16];
+    let mut json = JsonReporter::for_bench("multi_query");
+
+    let cfg = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: window,
+        slide: window / 16,
+        seed: 42,
+        map_rounds: 0,
+        ..SystemConfig::default()
+    };
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let records = gen.take_records(window + slides * cfg.slide);
+
+    section(&format!(
+        "multi-query sessions: window {window}, slide {}, {slides} slides/iter \
+         (substrate items and memo hits must not scale with N)",
+        cfg.slide
+    ));
+    println!(
+        "{:<8} {:>14} {:>10} {:>18} {:>14}",
+        "queries", "ms/slide", "memo_hits", "substrate_items", "derive/slide"
+    );
+    let mut baseline: Option<(u64, incapprox::metrics::SlideWork)> = None;
+    for &n in query_counts {
+        let mut total_ms = 0.0;
+        let mut hits = 0u64;
+        let mut work = incapprox::metrics::SlideWork::default();
+        for _ in 0..iters {
+            let (ms, h, w) = run_queries(&cfg, &records, slides, n);
+            total_ms += ms;
+            hits = h;
+            work = w;
+        }
+        let ms_per_slide = total_ms / (iters * slides) as f64;
+        println!(
+            "{:<8} {:>14.4} {:>10} {:>18} {:>14}",
+            n,
+            ms_per_slide,
+            hits,
+            work.substrate_total(),
+            work.derive_items
+        );
+        json.record_point(
+            "scaling",
+            &[
+                ("queries", n as f64),
+                ("mean_ms_per_slide", ms_per_slide),
+                ("memo_hits", hits as f64),
+                ("substrate_items_per_slide", work.substrate_total() as f64),
+                ("derive_per_slide", work.derive_items as f64),
+            ],
+        );
+        match baseline {
+            None => baseline = Some((hits, work)),
+            Some((h1, w1)) => {
+                // The sharing invariant: the substrate never scales with
+                // N; memo traffic grows sublinearly (it is in fact flat —
+                // lookups happen during the once-per-slide planning).
+                if smoke {
+                    assert_eq!(
+                        work.substrate_total(),
+                        w1.substrate_total(),
+                        "substrate work must be independent of query count"
+                    );
+                    assert_eq!(
+                        hits, h1,
+                        "memo hits must grow sublinearly in N (they are flat: \
+                         lookups happen in the once-per-slide planning), got \
+                         {h1} -> {hits} at N={n}"
+                    );
+                    assert!(
+                        work.derive_items >= w1.derive_items,
+                        "derive is the only counter allowed to grow"
+                    );
+                }
+            }
+        }
+    }
+
+    json.finish().expect("write bench results");
+}

@@ -16,9 +16,8 @@
 use std::sync::Arc;
 
 use incapprox::cli::Args;
-use incapprox::config::system::{ExecModeSpec, SystemConfig};
-use incapprox::coordinator::{Coordinator, WindowReport};
 use incapprox::metrics::Stopwatch;
+use incapprox::prelude::*;
 use incapprox::runtime::{PjrtBackend, PjrtRuntime};
 use incapprox::workload::flows::FlowLogGen;
 use incapprox::workload::trace::TraceReplay;

@@ -11,14 +11,13 @@
 //! achieved vs. the bound promised, plus the work saved.
 
 use incapprox::cli::Args;
-use incapprox::config::system::{ExecModeSpec, SystemConfig};
-use incapprox::coordinator::Coordinator;
+use incapprox::prelude::*;
 #[cfg(feature = "pjrt")]
 use incapprox::runtime::{PjrtBackend, PjrtRuntime};
 use incapprox::workload::flows::FlowLogGen;
 use incapprox::workload::trace::TraceReplay;
 
-fn main() -> incapprox::Result<()> {
+fn main() -> Result<()> {
     incapprox::logging::init();
     let args = Args::from_env(&["pjrt"])?;
     let windows: usize = args.get_parse("windows", 12)?;

@@ -1,18 +1,17 @@
-//! Quickstart: ten windows of IncApprox over the paper's §5 stream.
+//! Quickstart: a multi-query session over the paper's §5 stream.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
 //! Shows the minimal public-API flow: build a [`SystemConfig`], a
-//! workload, a [`Coordinator`], wire them with a [`Pipeline`], and read
-//! the per-window `output ± error bound` reports.
+//! workload, a [`Coordinator`], wire them with a [`Session`], register a
+//! few queries, and read the per-slide `output ± error bound` answers —
+//! all served from one shared window, sample, and memo store.
 
-use incapprox::config::system::SystemConfig;
-use incapprox::coordinator::{Coordinator, Pipeline};
-use incapprox::workload::gen::MultiStream;
+use incapprox::prelude::*;
 
-fn main() -> incapprox::Result<()> {
+fn main() -> Result<()> {
     incapprox::logging::init();
 
     // Defaults mirror §5: 10 000-item windows, 4% slide, 10% sample
@@ -22,24 +21,38 @@ fn main() -> incapprox::Result<()> {
     // Three Poisson sub-streams with arrival rates 3:4:5.
     let source = MultiStream::paper_section5(cfg.seed);
 
-    let coordinator = Coordinator::new(cfg);
-    let mut pipeline = Pipeline::new(coordinator, source)?;
+    let mut session = Session::new(Coordinator::new(cfg), source)?;
 
-    println!("window | output ± bound        | sample | computed | reuse");
-    println!("-------+-----------------------+--------+----------+------");
-    for report in pipeline.run(10)? {
+    // Three tenants, one stream: a windowed total, a 99%-confidence mean
+    // on a tighter budget, and an exact volume count. The sampler is
+    // sized to the hungriest budget; everything else is shared.
+    let total = session.submit(QuerySpec::new(AggregateKind::Sum))?;
+    let mean = session.submit(
+        QuerySpec::new(AggregateKind::Mean)
+            .with_confidence(0.99)
+            .with_budget(BudgetSpec::Fraction(0.05)),
+    )?;
+    let volume = session.submit(QuerySpec::new(AggregateKind::Count))?;
+
+    println!("window | total ± bound          | mean ± bound     | count  | reuse");
+    println!("-------+------------------------+------------------+--------+------");
+    for out in session.run(10)? {
+        let t = out.query(total).expect("registered");
+        let m = out.query(mean).expect("registered");
+        let c = out.query(volume).expect("registered");
         println!(
-            "{:>6} | {:>10.1} ± {:<8.1} | {:>6} | {:>8} | {:>4.1}%",
-            report.window_id,
-            report.estimate.value,
-            report.estimate.margin,
-            report.sample_size,
-            report.fresh_items,
-            report.item_reuse_fraction() * 100.0
+            "{:>6} | {:>10.1} ± {:<9.1} | {:>7.3} ± {:<6.3} | {:>6} | {:>4.1}%",
+            out.window.window_id,
+            t.estimate.value,
+            t.estimate.margin,
+            m.estimate.value,
+            m.estimate.margin,
+            c.estimate.value as u64,
+            out.window.item_reuse_fraction() * 100.0
         );
     }
 
-    let stats = pipeline.coordinator().memo_stats();
-    println!("\nmemo: {} hits, {} misses", stats.hits, stats.misses);
+    let stats = session.coordinator().memo_stats();
+    println!("\nmemo: {} hits, {} misses (shared across all 3 queries)", stats.hits, stats.misses);
     Ok(())
 }

@@ -12,15 +12,14 @@
 //! the uniform sample frequently under-represents the celebrity stratum,
 //! inflating error.
 
-use incapprox::config::system::{ExecModeSpec, SystemConfig};
-use incapprox::coordinator::Coordinator;
 use incapprox::job::moments::Moments;
+use incapprox::prelude::*;
 use incapprox::stats::stratified::{estimate_sum, StratumAgg};
 use incapprox::util::rng::Rng;
 use incapprox::workload::trace::TraceReplay;
 use incapprox::workload::tweets::TweetGen;
 
-fn main() -> incapprox::Result<()> {
+fn main() -> Result<()> {
     incapprox::logging::init();
     let cfg = SystemConfig {
         mode: ExecModeSpec::IncApprox,

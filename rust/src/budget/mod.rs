@@ -14,6 +14,7 @@
 //!   latencies drift.
 
 use crate::config::system::BudgetSpec;
+use crate::error::{Error, Result};
 
 /// Turns a window size into a sample size, within the query budget.
 pub trait CostFunction: Send {
@@ -137,6 +138,31 @@ impl CostFunction for LatencyCost {
     }
 }
 
+/// Check a budget spec's parameters — shared by `SystemConfig::validate`
+/// and the per-query validation in `Coordinator::submit_query`, so a bad
+/// budget surfaces as a config error instead of a construction panic.
+pub fn validate_spec(spec: &BudgetSpec) -> Result<()> {
+    // Guards are written positively (`!(x > 0.0)`) so NaN fails them too
+    // — `NaN <= 0.0` is false and would sneak past an inverted check
+    // straight into the constructors' asserts.
+    match *spec {
+        BudgetSpec::Fraction(f) if !(0.0 < f && f <= 1.0) => Err(Error::Config(format!(
+            "budget fraction must be in (0, 1], got {f}"
+        ))),
+        BudgetSpec::Tokens { per_window, cost_per_item }
+            if !(per_window > 0.0 && cost_per_item > 0.0) =>
+        {
+            Err(Error::Config(format!(
+                "token budget needs per_window > 0 and cost_per_item > 0, got {per_window} / {cost_per_item}"
+            )))
+        }
+        BudgetSpec::LatencyMs(ms) if !(ms > 0.0) => Err(Error::Config(format!(
+            "latency budget must be > 0 ms, got {ms}"
+        ))),
+        _ => Ok(()),
+    }
+}
+
 /// Build the configured cost function.
 pub fn from_spec(spec: &BudgetSpec) -> Box<dyn CostFunction> {
     match *spec {
@@ -202,6 +228,32 @@ mod tests {
             "token-bucket"
         );
         assert_eq!(from_spec(&BudgetSpec::LatencyMs(10.0)).name(), "latency-sla");
+    }
+
+    #[test]
+    fn validate_spec_accepts_good_rejects_bad() {
+        assert!(validate_spec(&BudgetSpec::Fraction(0.1)).is_ok());
+        assert!(validate_spec(&BudgetSpec::Fraction(1.0)).is_ok());
+        assert!(validate_spec(&BudgetSpec::Fraction(0.0)).is_err());
+        assert!(validate_spec(&BudgetSpec::Fraction(1.5)).is_err());
+        assert!(
+            validate_spec(&BudgetSpec::Tokens { per_window: 10.0, cost_per_item: 1.0 }).is_ok()
+        );
+        assert!(
+            validate_spec(&BudgetSpec::Tokens { per_window: 0.0, cost_per_item: 1.0 }).is_err()
+        );
+        assert!(
+            validate_spec(&BudgetSpec::Tokens { per_window: 10.0, cost_per_item: 0.0 }).is_err()
+        );
+        assert!(validate_spec(&BudgetSpec::LatencyMs(5.0)).is_ok());
+        assert!(validate_spec(&BudgetSpec::LatencyMs(0.0)).is_err());
+        // NaN must be rejected, not passed through to a constructor panic.
+        assert!(validate_spec(&BudgetSpec::Fraction(f64::NAN)).is_err());
+        assert!(
+            validate_spec(&BudgetSpec::Tokens { per_window: f64::NAN, cost_per_item: 1.0 })
+                .is_err()
+        );
+        assert!(validate_spec(&BudgetSpec::LatencyMs(f64::NAN)).is_err());
     }
 
     #[test]

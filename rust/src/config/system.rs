@@ -145,6 +145,14 @@ pub struct SystemConfig {
     pub num_workers: usize,
     /// How strata map to memo shards / worker partitions.
     pub shard_strategy: ShardStrategy,
+    /// Backpressure high watermark of the streaming pipeline, in slides:
+    /// when consumer lag exceeds `lag_watermark_slides × slide` records,
+    /// [`Session`](crate::coordinator::Session) steps drain catch-up
+    /// batches instead of single slides.
+    pub lag_watermark_slides: usize,
+    /// Catch-up batch size, in slides, drained per pipeline step while
+    /// the consumer is over the lag watermark.
+    pub catchup_factor: usize,
     /// O(delta) slide path (default). When true the coordinator maintains
     /// the sampler, the window view, and the chunk plans incrementally
     /// across slides — per-slide heavy work is proportional to the input
@@ -174,6 +182,8 @@ impl Default for SystemConfig {
             artifacts_dir: "artifacts".to_string(),
             num_workers: 4,
             shard_strategy: ShardStrategy::Hash,
+            lag_watermark_slides: 4,
+            catchup_factor: 4,
             incremental_slide: true,
             fault_memo_loss: 0.0,
         }
@@ -273,6 +283,12 @@ impl SystemConfig {
                 .ok_or_else(|| Error::Config("`job.shard_strategy` must be a string".into()))?;
             cfg.shard_strategy = ShardStrategy::parse(s)?;
         }
+        if let Some(v) = get_usize(&map, "pipeline.lag_watermark_slides")? {
+            cfg.lag_watermark_slides = v;
+        }
+        if let Some(v) = get_usize(&map, "pipeline.catchup_factor")? {
+            cfg.catchup_factor = v;
+        }
         if let Some(v) = map.get("job.incremental_slide") {
             cfg.incremental_slide = v
                 .as_bool()
@@ -302,13 +318,7 @@ impl SystemConfig {
                 self.window_size, self.slide
             )));
         }
-        if let BudgetSpec::Fraction(f) = self.budget {
-            if !(0.0 < f && f <= 1.0) {
-                return Err(Error::Config(format!(
-                    "budget.fraction must be in (0, 1], got {f}"
-                )));
-            }
-        }
+        crate::budget::validate_spec(&self.budget)?;
         if !(0.0 < self.confidence && self.confidence < 1.0) {
             return Err(Error::Config("stats.confidence must be in (0, 1)".into()));
         }
@@ -320,6 +330,12 @@ impl SystemConfig {
         }
         if self.num_workers == 0 {
             return Err(Error::Config("job.num_workers must be > 0".into()));
+        }
+        if self.lag_watermark_slides == 0 {
+            return Err(Error::Config("pipeline.lag_watermark_slides must be > 0".into()));
+        }
+        if self.catchup_factor == 0 {
+            return Err(Error::Config("pipeline.catchup_factor must be > 0".into()));
         }
         if !(0.0..=1.0).contains(&self.fault_memo_loss) {
             return Err(Error::Config("fault.memo_loss must be in [0, 1]".into()));
@@ -454,5 +470,21 @@ mod tests {
         assert!(SystemConfig::from_toml("[job]\nworkers = 0").is_err());
         assert!(SystemConfig::from_toml("[fault]\nmemo_loss = 2.0").is_err());
         assert!(SystemConfig::from_toml("mode = \"bogus\"").is_err());
+        assert!(SystemConfig::from_toml("[pipeline]\nlag_watermark_slides = 0").is_err());
+        assert!(SystemConfig::from_toml("[pipeline]\ncatchup_factor = 0").is_err());
+    }
+
+    #[test]
+    fn pipeline_backpressure_knobs_default_and_parse() {
+        // PR 2-era hardcoded values are the defaults.
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.lag_watermark_slides, 4);
+        assert_eq!(cfg.catchup_factor, 4);
+        let cfg = SystemConfig::from_toml(
+            "[pipeline]\nlag_watermark_slides = 2\ncatchup_factor = 8",
+        )
+        .unwrap();
+        assert_eq!(cfg.lag_watermark_slides, 2);
+        assert_eq!(cfg.catchup_factor, 8);
     }
 }

@@ -63,14 +63,28 @@
 //! (`num_workers = 1`): same chunks, same combine order — so the two
 //! configurations produce identical [`WindowReport`]s, which
 //! `sharded_pipeline_matches_serial_exactly` asserts.
+//!
+//! ## Multi-query serving
+//!
+//! N concurrent queries ([`Coordinator::submit_query`]) share one slide
+//! loop: the sampler is sized to the **union** (max) of the per-query
+//! budget allocations, planning/compute/memoization run exactly once,
+//! and each query's answer is an O(strata) derivation fold over the
+//! shared per-stratum moments ([`crate::job::aggregate`]). Per-slide
+//! touched items and memo entries are therefore independent of query
+//! count — only [`SlideWork::derive_items`] scales with N. With no
+//! queries registered the coordinator behaves exactly like the
+//! pre-session single-query API (the equivalence the session tests pin).
 
 use std::collections::BTreeMap;
 
 use crate::budget::{self, CostFunction};
 use crate::config::system::{ExecModeSpec, SystemConfig};
-use crate::coordinator::report::{StratumReport, WindowReport};
+use crate::coordinator::query::{QueryId, QuerySpec};
+use crate::coordinator::report::{QueryReport, SlideOutput, StratumReport, WindowReport};
 use crate::error::Result;
 use crate::fault::{FaultInjector, MemoReplica, RecoveryPolicy};
+use crate::job::aggregate::derive_aggregate;
 use crate::job::chunk::{chunk_stratum, Chunk};
 use crate::job::executor::{run_sharded, ChunkBackend, NativeBackend, WorkerPool};
 use crate::job::moments::Moments;
@@ -199,17 +213,24 @@ fn plan_one_stratum(
     }
 }
 
+/// One registered query: its spec plus its live cost function (the
+/// adaptive budgets carry per-query state, e.g. the latency EWMA).
+struct RegisteredQuery {
+    id: QueryId,
+    spec: QuerySpec,
+    cost: Box<dyn CostFunction>,
+}
+
 /// The streaming coordinator: owns the window, the persistent sampler,
-/// the memo store, the cost function, and the chunk execution backend.
+/// the memo store, the cost function, the chunk execution backend, and
+/// the registered queries (see [`Coordinator::submit_query`]).
 ///
 /// # Example
 ///
 /// One warm-up window plus one slide of the paper's §5 stream:
 ///
 /// ```
-/// use incapprox::config::system::{ExecModeSpec, SystemConfig};
-/// use incapprox::coordinator::Coordinator;
-/// use incapprox::workload::gen::MultiStream;
+/// use incapprox::prelude::*;
 ///
 /// let cfg = SystemConfig {
 ///     mode: ExecModeSpec::IncApprox,
@@ -243,6 +264,10 @@ pub struct Coordinator {
     /// Previous full-path chunk sequences per stratum (incremental chunk
     /// reuse; correctness-neutral — reuse is equality-verified).
     chunk_cache: BTreeMap<StratumId, Vec<Chunk>>,
+    /// Registered queries, in submission order. Empty = legacy
+    /// single-query behavior (the window budget sizes the sample).
+    queries: Vec<RegisteredQuery>,
+    next_query_id: u64,
     injector: FaultInjector,
     recovery: RecoveryPolicy,
     replica: Option<MemoReplica>,
@@ -288,6 +313,8 @@ impl Coordinator {
             // sharded, incremental, from-scratch — ranks items identically.
             sampler: IncrementalSampler::new(cfg.seed ^ 0x0DE1_7A51_D35A_3D01),
             chunk_cache: BTreeMap::new(),
+            queries: Vec::new(),
+            next_query_id: 0,
             injector,
             recovery: RecoveryPolicy::LineageRecompute,
             replica: None,
@@ -313,6 +340,54 @@ impl Coordinator {
     /// The active configuration.
     pub fn config(&self) -> &SystemConfig {
         &self.cfg
+    }
+
+    /// Register a query. Every subsequent slide answers it (one
+    /// [`QueryReport`] inside the [`SlideOutput`]) from the shared
+    /// window / sampler / memo substrate; the only added per-slide work
+    /// is an O(strata) derivation fold. Fails if the spec is invalid for
+    /// this session (see [`QuerySpec::validate_for`]).
+    pub fn submit_query(&mut self, spec: QuerySpec) -> Result<QueryId> {
+        spec.validate_for(&self.cfg)?;
+        let id = QueryId::new(self.next_query_id);
+        self.next_query_id += 1;
+        let cost = budget::from_spec(&spec.budget);
+        self.queries.push(RegisteredQuery { id, spec, cost });
+        Ok(id)
+    }
+
+    /// Deregister a query; later slides stop answering it. Returns
+    /// whether the id was registered. The shared substrate (sample,
+    /// memo) is untouched — remaining queries keep their amortization.
+    pub fn remove_query(&mut self, id: QueryId) -> bool {
+        let before = self.queries.len();
+        self.queries.retain(|q| q.id != id);
+        self.queries.len() != before
+    }
+
+    /// Number of registered queries.
+    pub fn query_count(&self) -> usize {
+        self.queries.len()
+    }
+
+    /// The specs of the registered queries, in submission order.
+    pub fn query_specs(&self) -> impl Iterator<Item = (QueryId, &QuerySpec)> {
+        self.queries.iter().map(|q| (q.id, &q.spec))
+    }
+
+    /// The slide's sample budget: the union (max) of the registered
+    /// queries' per-budget allocations, so every query gets at least the
+    /// accuracy its own budget affords; with no queries registered, the
+    /// session-level budget (legacy single-query behavior).
+    fn union_sample_size(&mut self, window_len: usize) -> usize {
+        if self.queries.is_empty() {
+            return self.cost.sample_size(window_len);
+        }
+        self.queries
+            .iter_mut()
+            .map(|q| q.cost.sample_size(window_len))
+            .max()
+            .unwrap_or(1)
     }
 
     /// Memoization statistics so far.
@@ -472,8 +547,18 @@ impl Coordinator {
 
     /// Process one slide's worth of new records (count-based windows):
     /// runs the full Algorithm 1 body for the resulting window and
-    /// returns its report.
+    /// returns its window-level report. Legacy single-query entry point —
+    /// a thin wrapper over [`Coordinator::process_batch_queries`] that
+    /// drops the per-query answers; its reports are byte-identical to the
+    /// pre-session API.
     pub fn process_batch(&mut self, batch: Vec<Record>) -> Result<WindowReport> {
+        Ok(self.process_batch_queries(batch)?.window)
+    }
+
+    /// Process one slide's worth of new records (count-based windows) and
+    /// return the full [`SlideOutput`]: window-level stats plus one
+    /// [`QueryReport`] per registered query.
+    pub fn process_batch_queries(&mut self, batch: Vec<Record>) -> Result<SlideOutput> {
         let want_full = self.wants_full_view();
         let snap = match &mut self.window {
             WindowState::Count(w) => w.slide_with(batch, want_full),
@@ -489,11 +574,22 @@ impl Coordinator {
     /// Feed one tick's records to a **time-based** window (records must
     /// carry timestamps ≤ `now`). Emits a report whenever a window
     /// boundary is crossed; between boundaries returns `Ok(None)`.
+    /// Legacy wrapper over [`Coordinator::ingest_tick_queries`].
     pub fn ingest_tick(
         &mut self,
         records: Vec<Record>,
         now: u64,
     ) -> Result<Option<WindowReport>> {
+        Ok(self.ingest_tick_queries(records, now)?.map(|s| s.window))
+    }
+
+    /// Time-based-window twin of [`Coordinator::process_batch_queries`]:
+    /// emits a [`SlideOutput`] whenever a window boundary is crossed.
+    pub fn ingest_tick_queries(
+        &mut self,
+        records: Vec<Record>,
+        now: u64,
+    ) -> Result<Option<SlideOutput>> {
         let want_full = self.wants_full_view();
         let snap = match &mut self.window {
             WindowState::Time(w) => {
@@ -510,7 +606,7 @@ impl Coordinator {
     }
 
     /// The Algorithm 1 body, shared by both window kinds.
-    fn process_snapshot(&mut self, snap: WindowSnapshot) -> Result<WindowReport> {
+    fn process_snapshot(&mut self, snap: WindowSnapshot) -> Result<SlideOutput> {
         let sw = Stopwatch::start();
         let window_id = snap.window_id;
         let window_len = snap.len;
@@ -544,7 +640,7 @@ impl Coordinator {
                 self.sampler.rebuild(snap.items())
             };
             slide_work.sampler_items = touched as u64;
-            let sample_size = self.cost.sample_size(window_len);
+            let sample_size = self.union_sample_size(window_len);
             self.sampler.sample(sample_size)
         } else {
             Self::full_window_sample(snap.items())
@@ -695,6 +791,29 @@ impl Coordinator {
         }
         let estimate = estimate_sum(&aggs, self.cfg.confidence)?;
 
+        // Answer every registered query from the *shared* per-stratum
+        // moments and exact populations — O(strata) per query, the only
+        // per-slide work that scales with query count (`derive_items`).
+        let mut query_reports: Vec<QueryReport> = Vec::with_capacity(self.queries.len());
+        for q in &self.queries {
+            let d = derive_aggregate(
+                q.spec.kind,
+                q.spec.stratum,
+                q.spec.confidence,
+                &stratum_moments,
+                &sample.population,
+            )?;
+            slide_work.derive_items += d.strata_touched;
+            query_reports.push(QueryReport {
+                id: q.id,
+                kind: q.spec.kind,
+                estimate: d.estimate,
+                sample_size: d.sample_size,
+                population: d.population,
+                extrema: d.extrema,
+            });
+        }
+
         // Memoize the biased sample's runs + per-stratum state for the
         // next window (Algorithm 1's `memo ← memoize(biasedSample)`) —
         // Arc clones, no record copies.
@@ -713,19 +832,27 @@ impl Coordinator {
         self.profile.observe(plan_ms, compute_ms, sw_finalize.elapsed_ms());
         self.work.observe(slide_work);
         self.cost.observe(sample_size, latency_ms);
+        // Adaptive per-query budgets observe the same realized cost (the
+        // substrate is shared, so every query "paid" the same slide).
+        for q in &mut self.queries {
+            q.cost.observe(sample_size, latency_ms);
+        }
 
-        Ok(WindowReport {
-            window_id,
-            mode: self.cfg.mode.name(),
-            estimate,
-            window_len,
-            sample_size,
-            chunks_total,
-            chunks_reused,
-            fresh_items,
-            strata: strata_reports,
-            latency_ms,
-            fault_injected,
+        Ok(SlideOutput {
+            window: WindowReport {
+                window_id,
+                mode: self.cfg.mode.name(),
+                estimate,
+                window_len,
+                sample_size,
+                chunks_total,
+                chunks_reused,
+                fresh_items,
+                strata: strata_reports,
+                latency_ms,
+                fault_injected,
+            },
+            queries: query_reports,
         })
     }
 }
@@ -733,7 +860,8 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::system::ShardStrategy;
+    use crate::config::system::{BudgetSpec, ShardStrategy};
+    use crate::job::aggregate::AggregateKind;
     use crate::workload::gen::MultiStream;
 
     fn config(mode: ExecModeSpec) -> SystemConfig {
@@ -1219,6 +1347,78 @@ mod tests {
         assert_eq!(r.fresh_items, 0);
         assert_eq!(r.estimate.value, 0.0);
         assert!(r.strata.is_empty());
+    }
+
+    #[test]
+    fn submitted_queries_are_answered_each_slide() {
+        let cfg = config(ExecModeSpec::IncApprox);
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        let sum = coord.submit_query(QuerySpec::new(AggregateKind::Sum)).unwrap();
+        let mean = coord
+            .submit_query(QuerySpec::new(AggregateKind::Mean).with_confidence(0.99))
+            .unwrap();
+        let count = coord.submit_query(QuerySpec::new(AggregateKind::Count)).unwrap();
+        assert_eq!(coord.query_count(), 3);
+        assert_eq!(coord.query_specs().count(), 3);
+        let out = coord.process_batch_queries(gen.take_records(cfg.window_size)).unwrap();
+        assert_eq!(out.queries.len(), 3);
+        // A whole-window Sum at the session confidence IS the window
+        // estimate — same strata, same populations, same fold.
+        let qs = out.query(sum).unwrap();
+        assert_eq!(qs.estimate.value.to_bits(), out.window.estimate.value.to_bits());
+        assert_eq!(qs.estimate.margin.to_bits(), out.window.estimate.margin.to_bits());
+        // Count is exact (populations are exact window counts).
+        let qc = out.query(count).unwrap();
+        assert_eq!(qc.estimate.value, out.window.window_len as f64);
+        assert_eq!(qc.estimate.margin, 0.0);
+        // Mean is the sum scaled by the observed population.
+        let qm = out.query(mean).unwrap();
+        let want = qs.estimate.value / out.window.window_len as f64;
+        assert!((qm.estimate.value - want).abs() <= 1e-9 * want.abs().max(1.0));
+        assert_eq!(qm.estimate.confidence, 0.99);
+        // Removal stops answering; the others keep flowing.
+        assert!(coord.remove_query(mean));
+        assert!(!coord.remove_query(mean), "second removal is a no-op");
+        let out = coord.process_batch_queries(gen.take_records(cfg.slide)).unwrap();
+        assert_eq!(out.queries.len(), 2);
+        assert!(out.query(mean).is_none());
+        assert!(out.query(sum).is_some());
+    }
+
+    #[test]
+    fn union_budget_sizes_the_shared_sample() {
+        let cfg = config(ExecModeSpec::IncApprox);
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        coord
+            .submit_query(
+                QuerySpec::new(AggregateKind::Sum).with_budget(BudgetSpec::Fraction(0.02)),
+            )
+            .unwrap();
+        coord
+            .submit_query(
+                QuerySpec::new(AggregateKind::Mean).with_budget(BudgetSpec::Fraction(0.2)),
+            )
+            .unwrap();
+        let out = coord.process_batch_queries(gen.take_records(cfg.window_size)).unwrap();
+        // max(2%, 20%) of the 2000-item window: the shared sample serves
+        // the hungriest budget, so no query loses accuracy to sharing.
+        assert_eq!(out.window.sample_size, 400);
+        // Both queries were answered from that one sample.
+        assert!(out.queries.iter().all(|q| q.sample_size == 400));
+    }
+
+    #[test]
+    fn submit_rejects_invalid_specs() {
+        let mut coord = Coordinator::new(config(ExecModeSpec::IncApprox));
+        assert!(coord
+            .submit_query(QuerySpec::new(AggregateKind::Sum).with_confidence(2.0))
+            .is_err());
+        assert!(coord
+            .submit_query(QuerySpec::new(AggregateKind::Sum).with_map_rounds(7))
+            .is_err());
+        assert_eq!(coord.query_count(), 0, "rejected specs must not register");
     }
 
     #[test]

@@ -1,16 +1,24 @@
 //! The coordinator — the paper's Algorithm 1 as a streaming orchestrator.
 //!
 //! [`driver::Coordinator`] executes one window per slide batch: evict old
-//! memo state → stratified-sample the window within the query budget →
-//! bias toward memoized items → plan the job against the memo (change
-//! propagation via the DDG) → execute only fresh chunks (native or PJRT)
-//! → combine → estimate error bounds → memoize. [`pipeline::Pipeline`]
-//! wires a kafka consumer to the coordinator with lag-based backpressure.
+//! memo state → stratified-sample the window within the **union** of the
+//! registered query budgets → bias toward memoized items → plan the job
+//! against the memo (change propagation via the DDG) → execute only
+//! fresh chunks (native or PJRT) → combine → derive every registered
+//! query's answer from the shared moments → estimate error bounds →
+//! memoize. [`session::Session`] wires a kafka consumer to the
+//! coordinator with lag-based backpressure and serves N concurrent
+//! [`query::QuerySpec`]s per slide; [`pipeline::Pipeline`] is the legacy
+//! single-query wrapper over it.
 
 pub mod driver;
 pub mod pipeline;
+pub mod query;
 pub mod report;
+pub mod session;
 
 pub use driver::{Coordinator, ExecMode};
 pub use pipeline::Pipeline;
-pub use report::{StratumReport, WindowReport};
+pub use query::{QueryId, QuerySpec};
+pub use report::{QueryReport, SlideOutput, StratumReport, WindowReport};
+pub use session::Session;

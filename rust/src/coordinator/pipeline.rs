@@ -1,125 +1,76 @@
-//! The end-to-end pipeline: generators → kafka substrate → coordinator.
+//! The legacy single-query pipeline — a thin wrapper over [`Session`].
 //!
-//! Wires Figure 2.1 together: sub-stream generators publish to a topic on
-//! the in-process broker (keyed by stratum, preserving per-sub-stream
-//! ordering), a single consumer pulls the merged stream, and the
-//! coordinator processes slide-sized batches. Backpressure: when consumer
-//! lag exceeds `lag_high_watermark`, the pipeline drains bigger batches
-//! (up to `catchup_factor` slides) per step so processing catches up
-//! instead of falling ever further behind.
+//! [`Pipeline`] is the pre-session public API: one stream, one implicit
+//! window-level query, [`WindowReport`]s out. It now delegates every
+//! step to a zero-query [`Session`] and drops the (empty) per-query
+//! answers, which is exactly the equivalence gate the session redesign
+//! is held to: `Pipeline::run` reports are byte-identical to the
+//! pre-session implementation. New code should use [`Session`] directly
+//! and register explicit [`QuerySpec`](crate::coordinator::QuerySpec)s.
 
 use std::sync::Arc;
 
 use crate::coordinator::driver::Coordinator;
 use crate::coordinator::report::WindowReport;
+use crate::coordinator::session::Session;
 use crate::error::Result;
 use crate::kafka::broker::Broker;
-use crate::kafka::consumer::Consumer;
-use crate::kafka::producer::{Partitioner, Producer};
 use crate::workload::gen::MultiStream;
 use crate::workload::record::Record;
 
-/// Default topic the pipeline publishes to.
-pub const TOPIC: &str = "incapprox-events";
+pub use crate::coordinator::session::TOPIC;
 
-/// The assembled streaming pipeline.
+/// The assembled single-query streaming pipeline (legacy API).
 pub struct Pipeline {
-    broker: Arc<Broker<Record>>,
-    producer: Producer<Record>,
-    consumer: Consumer<Record>,
-    coordinator: Coordinator,
-    source: MultiStream,
-    slide: usize,
-    lag_high_watermark: u64,
-    catchup_factor: usize,
+    inner: Session,
 }
 
 impl Pipeline {
     /// Build a pipeline over a generator source.
     pub fn new(coordinator: Coordinator, source: MultiStream) -> Result<Self> {
-        let slide = coordinator.config().slide;
-        let broker = Broker::new();
-        broker.create_topic(TOPIC, 4)?;
-        let producer = Producer::new(&broker, TOPIC, Partitioner::Keyed)?;
-        let mut consumer = Consumer::new();
-        consumer.subscribe(&broker, TOPIC)?;
-        Ok(Pipeline {
-            broker,
-            producer,
-            consumer,
-            coordinator,
-            source,
-            slide,
-            lag_high_watermark: (slide * 4) as u64,
-            catchup_factor: 4,
-        })
-    }
-
-    /// Produce from the generators until at least `n` records are queued.
-    fn produce_at_least(&mut self, n: usize) -> Result<()> {
-        let mut produced = 0;
-        while produced < n {
-            let records = self.source.tick();
-            for r in &records {
-                self.producer.send(Some(r.stratum as u64), r.timestamp, *r)?;
-            }
-            produced += records.len();
-        }
-        Ok(())
+        Ok(Pipeline { inner: Session::new(coordinator, source)? })
     }
 
     /// Warm the window: fill it completely and process the first window.
     pub fn warmup(&mut self) -> Result<WindowReport> {
-        let need = self.coordinator.config().window_size;
-        self.produce_at_least(need)?;
-        let batch: Vec<Record> =
-            self.consumer.poll(need)?.into_iter().map(|m| m.payload).collect();
-        self.coordinator.process_batch(batch)
+        Ok(self.inner.warmup()?.window)
     }
 
     /// One pipeline step: produce a slide, pull (with catch-up under
     /// backpressure), process the window.
     pub fn step(&mut self) -> Result<WindowReport> {
-        self.produce_at_least(self.slide)?;
-        let lag = self.consumer.lag()?;
-        let batch_size = if lag > self.lag_high_watermark {
-            log::warn!("backpressure: lag {lag} > {}, catching up", self.lag_high_watermark);
-            self.slide * self.catchup_factor
-        } else {
-            self.slide
-        };
-        let batch: Vec<Record> =
-            self.consumer.poll(batch_size)?.into_iter().map(|m| m.payload).collect();
-        self.coordinator.process_batch(batch)
+        Ok(self.inner.step()?.window)
     }
 
     /// Run `n` steps after warmup; returns all reports (warmup first).
     pub fn run(&mut self, n: usize) -> Result<Vec<WindowReport>> {
-        let mut reports = vec![self.warmup()?];
-        for _ in 0..n {
-            reports.push(self.step()?);
-        }
-        Ok(reports)
+        Ok(self.inner.run(n)?.into_iter().map(|s| s.window).collect())
     }
 
     /// Current consumer lag (monitoring).
     pub fn lag(&self) -> Result<u64> {
-        self.consumer.lag()
+        self.inner.lag()
     }
 
     /// Borrow the coordinator (stats inspection).
     pub fn coordinator(&self) -> &Coordinator {
-        &self.coordinator
+        self.inner.coordinator()
     }
 
     /// Mutably borrow the coordinator (e.g. window resizing mid-run).
     pub fn coordinator_mut(&mut self) -> &mut Coordinator {
-        &mut self.coordinator
+        self.inner.coordinator_mut()
     }
 
     /// The broker (for attaching extra producers/consumers in examples).
     pub fn broker(&self) -> Arc<Broker<Record>> {
-        self.broker.clone()
+        self.inner.broker()
+    }
+
+    /// Upgrade into the session-era API, keeping stream position, window
+    /// state, and memo store.
+    pub fn into_session(self) -> Session {
+        self.inner
     }
 }
 
@@ -169,7 +120,23 @@ mod tests {
     fn lag_bounded_during_run() {
         let mut p = pipeline(ExecModeSpec::IncApprox);
         p.run(6).unwrap();
-        // Consumer keeps up: lag below the catch-up ceiling.
-        assert!(p.lag().unwrap() < (p.slide * p.catchup_factor * 2) as u64);
+        // Consumer keeps up: lag below the *configured* catch-up ceiling
+        // (the knobs live in SystemConfig since the session redesign).
+        let cfg = p.coordinator().config();
+        assert!(p.lag().unwrap() < (cfg.slide * cfg.catchup_factor * 2) as u64);
+    }
+
+    #[test]
+    fn pipeline_upgrades_into_session() {
+        use crate::coordinator::query::QuerySpec;
+        use crate::job::aggregate::AggregateKind;
+        let mut p = pipeline(ExecModeSpec::IncApprox);
+        p.warmup().unwrap();
+        let mut s = p.into_session();
+        let id = s.submit(QuerySpec::new(AggregateKind::Mean)).unwrap();
+        let out = s.step().unwrap();
+        // Memo state survived the upgrade: still reusing, now answering.
+        assert!(out.window.item_reuse_fraction() > 0.5);
+        assert!(out.query(id).is_some());
     }
 }

@@ -1,0 +1,194 @@
+//! First-class queries over a shared streaming session.
+//!
+//! A [`QuerySpec`] describes *what* one tenant wants from the stream —
+//! which aggregate ([`AggregateKind`]), over which stratum, at which
+//! confidence, within which [`BudgetSpec`] — and is registered on a
+//! [`Session`](crate::coordinator::Session) (or directly on a
+//! [`Coordinator`](crate::coordinator::Coordinator)) via `submit`, which
+//! hands back a [`QueryId`]. Every registered query is answered **every
+//! slide** from the same shared substrate: one window, one persistent
+//! sampler (sized to the union — the max — of the per-query budget
+//! allocations), one memo store, one batched backend call. Adding a
+//! query adds an O(strata) derivation fold
+//! ([`derive_aggregate`](crate::job::aggregate::derive_aggregate)) and
+//! nothing else — per-slide touched items and memo entries are
+//! independent of query count (`metrics::SlideWork::derive_items` is the
+//! only counter that scales with N).
+
+use crate::budget;
+use crate::config::system::{BudgetSpec, SystemConfig};
+use crate::error::{Error, Result};
+use crate::job::aggregate::AggregateKind;
+use crate::workload::record::StratumId;
+
+/// Handle to a registered query (unique within its coordinator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QueryId(u64);
+
+impl QueryId {
+    /// Build from a raw sequence number (coordinator-internal).
+    pub(crate) fn new(raw: u64) -> Self {
+        QueryId(raw)
+    }
+
+    /// The raw id, for logging and report labels.
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+}
+
+/// One user query: aggregate kind, optional stratum restriction,
+/// per-query confidence level and budget, and (optionally pinned) map
+/// weight.
+///
+/// Built with [`QuerySpec::new`] plus `with_*` chainers:
+///
+/// ```
+/// use incapprox::prelude::*;
+///
+/// let spec = QuerySpec::new(AggregateKind::Mean)
+///     .with_stratum(2)
+///     .with_confidence(0.99)
+///     .with_budget(BudgetSpec::Fraction(0.05));
+/// assert_eq!(spec.kind, AggregateKind::Mean);
+/// assert_eq!(spec.stratum, Some(2));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuerySpec {
+    /// The aggregate to derive each slide.
+    pub kind: AggregateKind,
+    /// Restrict the query to one stratum (`None` = whole window).
+    pub stratum: Option<StratumId>,
+    /// Confidence level of the query's error bound (default 0.95).
+    pub confidence: f64,
+    /// The query's resource budget. The session samples at the **max**
+    /// of all registered budgets, so a query never gets *less* accuracy
+    /// than its own budget affords — sharing can only add headroom.
+    pub budget: BudgetSpec,
+    /// Per-item map iterations this query expects (`None` = inherit the
+    /// session's). Must match the session's `map_rounds`: memoized chunk
+    /// moments are computed under one shared map stage, and a divergent
+    /// weight would fork the memo per query (see
+    /// [`QuerySpec::validate_for`]).
+    pub map_rounds: Option<u32>,
+}
+
+impl QuerySpec {
+    /// A whole-window query for `kind` with the paper's defaults
+    /// (95% confidence, 10% sampling-fraction budget).
+    pub fn new(kind: AggregateKind) -> Self {
+        QuerySpec {
+            kind,
+            stratum: None,
+            confidence: 0.95,
+            budget: BudgetSpec::default(),
+            map_rounds: None,
+        }
+    }
+
+    /// Restrict the query to one stratum.
+    pub fn with_stratum(mut self, stratum: StratumId) -> Self {
+        self.stratum = Some(stratum);
+        self
+    }
+
+    /// Set the confidence level (must be in (0, 1)).
+    pub fn with_confidence(mut self, confidence: f64) -> Self {
+        self.confidence = confidence;
+        self
+    }
+
+    /// Set the query budget.
+    pub fn with_budget(mut self, budget: BudgetSpec) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Pin the expected map weight (validated against the session's).
+    pub fn with_map_rounds(mut self, rounds: u32) -> Self {
+        self.map_rounds = Some(rounds);
+        self
+    }
+
+    /// Check the spec against a session configuration. Rejects
+    /// out-of-range confidence, degenerate budgets, and a `map_rounds`
+    /// that differs from the session's: chunk moments are memoized under
+    /// **one** map stage — a query needing a different map weight needs
+    /// its own session, not a forked memo store.
+    pub fn validate_for(&self, cfg: &SystemConfig) -> Result<()> {
+        if !(0.0 < self.confidence && self.confidence < 1.0) {
+            return Err(Error::Config(format!(
+                "query confidence must be in (0, 1), got {}",
+                self.confidence
+            )));
+        }
+        budget::validate_spec(&self.budget)?;
+        if let Some(rounds) = self.map_rounds {
+            if rounds != cfg.map_rounds {
+                return Err(Error::Config(format!(
+                    "query map_rounds {rounds} != session map_rounds {}: memoized chunk \
+                     moments are computed under one shared map stage; use a separate \
+                     session for a different map weight",
+                    cfg.map_rounds
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_chainers() {
+        let spec = QuerySpec::new(AggregateKind::Sum);
+        assert_eq!(spec.kind, AggregateKind::Sum);
+        assert_eq!(spec.stratum, None);
+        assert_eq!(spec.confidence, 0.95);
+        assert_eq!(spec.budget, BudgetSpec::Fraction(0.1));
+        assert_eq!(spec.map_rounds, None);
+        let spec = spec
+            .with_stratum(3)
+            .with_confidence(0.9)
+            .with_budget(BudgetSpec::LatencyMs(5.0))
+            .with_map_rounds(0);
+        assert_eq!(spec.stratum, Some(3));
+        assert_eq!(spec.confidence, 0.9);
+        assert_eq!(spec.budget, BudgetSpec::LatencyMs(5.0));
+        assert_eq!(spec.map_rounds, Some(0));
+    }
+
+    #[test]
+    fn validation_gates() {
+        let cfg = SystemConfig::default();
+        assert!(QuerySpec::new(AggregateKind::Mean).validate_for(&cfg).is_ok());
+        assert!(QuerySpec::new(AggregateKind::Mean)
+            .with_confidence(1.0)
+            .validate_for(&cfg)
+            .is_err());
+        assert!(QuerySpec::new(AggregateKind::Mean)
+            .with_budget(BudgetSpec::Fraction(0.0))
+            .validate_for(&cfg)
+            .is_err());
+        // Matching map weight passes; a divergent one is rejected.
+        assert!(QuerySpec::new(AggregateKind::Mean)
+            .with_map_rounds(cfg.map_rounds)
+            .validate_for(&cfg)
+            .is_ok());
+        assert!(QuerySpec::new(AggregateKind::Mean)
+            .with_map_rounds(cfg.map_rounds + 1)
+            .validate_for(&cfg)
+            .is_err());
+    }
+
+    #[test]
+    fn query_ids_are_ordered_values() {
+        let a = QueryId::new(1);
+        let b = QueryId::new(2);
+        assert!(a < b);
+        assert_eq!(a.as_u64(), 1);
+        assert_eq!(a, QueryId::new(1));
+    }
+}

@@ -1,7 +1,11 @@
-//! Per-window output reports.
+//! Per-window output reports: window-level stats ([`WindowReport`]),
+//! per-query answers ([`QueryReport`]), and the per-slide envelope a
+//! session delivers ([`SlideOutput`]).
 
 use std::collections::BTreeMap;
 
+use crate::coordinator::query::QueryId;
+use crate::job::aggregate::AggregateKind;
 use crate::stats::stratified::Estimate;
 use crate::workload::record::StratumId;
 
@@ -88,6 +92,59 @@ impl WindowReport {
     }
 }
 
+/// One registered query's answer for one window, derived from the shared
+/// per-stratum moments (see [`crate::job::aggregate`]).
+#[derive(Debug, Clone)]
+pub struct QueryReport {
+    /// The query this answers.
+    pub id: QueryId,
+    /// The aggregate kind that was derived.
+    pub kind: AggregateKind,
+    /// `value ± margin` (margin 0 for exact answers / point estimates).
+    pub estimate: Estimate,
+    /// Sampled items that backed the answer (Σ bᵢ over queried strata).
+    pub sample_size: usize,
+    /// Window population over the queried strata (Σ Bᵢ — exact).
+    pub population: u64,
+    /// `(min, max)` of the queried sample (`Extrema` queries only;
+    /// conservative bounds on the inverse-reduce path).
+    pub extrema: Option<(f64, f64)>,
+}
+
+impl QueryReport {
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "q{} {} = {:.3} ± {:.3} ({}%) sample={} pop={}",
+            self.id.as_u64(),
+            self.kind.name(),
+            self.estimate.value,
+            self.estimate.margin,
+            (self.estimate.confidence * 100.0) as u32,
+            self.sample_size,
+            self.population
+        )
+    }
+}
+
+/// Everything one slide produced: the window-level stats every mode
+/// already reported, plus one [`QueryReport`] per registered query, in
+/// submission order.
+#[derive(Debug, Clone)]
+pub struct SlideOutput {
+    /// Window-level stats (reuse accounting, window estimate, latency).
+    pub window: WindowReport,
+    /// Per-query answers, in query submission order.
+    pub queries: Vec<QueryReport>,
+}
+
+impl SlideOutput {
+    /// The answer for one query id, if it is registered.
+    pub fn query(&self, id: QueryId) -> Option<&QueryReport> {
+        self.queries.iter().find(|q| q.id == id)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +194,36 @@ mod tests {
         };
         assert_eq!(r.item_reuse_fraction(), 0.0);
         assert_eq!(r.chunk_reuse_fraction(), 0.0);
+    }
+
+    #[test]
+    fn slide_output_lookup_and_query_summary() {
+        let window = WindowReport {
+            window_id: 0,
+            mode: "incapprox",
+            estimate: estimate(),
+            window_len: 10,
+            sample_size: 5,
+            chunks_total: 1,
+            chunks_reused: 0,
+            fresh_items: 5,
+            strata: BTreeMap::new(),
+            latency_ms: 0.1,
+            fault_injected: false,
+        };
+        let q = QueryReport {
+            id: QueryId::new(3),
+            kind: AggregateKind::Mean,
+            estimate: estimate(),
+            sample_size: 5,
+            population: 10,
+            extrema: None,
+        };
+        let out = SlideOutput { window, queries: vec![q] };
+        assert!(out.query(QueryId::new(3)).is_some());
+        assert!(out.query(QueryId::new(4)).is_none());
+        let s = out.queries[0].summary();
+        assert!(s.contains("q3 mean"), "{s}");
+        assert!(s.contains("95%"), "{s}");
     }
 }

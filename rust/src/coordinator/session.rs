@@ -1,0 +1,297 @@
+//! The multi-query streaming session: generators → kafka substrate →
+//! coordinator → N concurrent queries.
+//!
+//! [`Session`] is the session-era evolution of the original single-query
+//! pipeline: it wires Figure 2.1 together (sub-stream generators publish
+//! to a topic on the in-process broker, keyed by stratum; a single
+//! consumer pulls the merged stream; the coordinator processes
+//! slide-sized batches) and serves every query registered via
+//! [`Session::submit`] from that one stream. Each [`Session::step`]
+//! yields a [`SlideOutput`]: the window-level stats plus one
+//! [`QueryReport`](crate::coordinator::report::QueryReport) per
+//! registered query — all derived from the same window, sample, and memo
+//! store, so query count multiplies neither per-slide touched items nor
+//! memo entries.
+//!
+//! Backpressure: when consumer lag exceeds
+//! `lag_watermark_slides × slide` records (see
+//! [`SystemConfig`](crate::config::system::SystemConfig)), a step drains
+//! up to `catchup_factor` slides at once so processing catches up instead
+//! of falling ever further behind.
+//!
+//! # Example
+//!
+//! Three tenants, one stream, one memo store:
+//!
+//! ```
+//! use incapprox::prelude::*;
+//!
+//! let cfg = SystemConfig {
+//!     window_size: 1500,
+//!     slide: 150,
+//!     seed: 21,
+//!     ..SystemConfig::default()
+//! };
+//! let source = MultiStream::paper_section5(cfg.seed);
+//! let mut session = Session::new(Coordinator::new(cfg), source)?;
+//!
+//! let total = session.submit(QuerySpec::new(AggregateKind::Sum))?;
+//! let mean99 = session.submit(
+//!     QuerySpec::new(AggregateKind::Mean).with_confidence(0.99),
+//! )?;
+//! let volume = session.submit(QuerySpec::new(AggregateKind::Count))?;
+//!
+//! let out = session.warmup()?;
+//! assert_eq!(out.queries.len(), 3);
+//! assert!(out.query(total).unwrap().estimate.value > 0.0);
+//! assert_eq!(out.query(volume).unwrap().estimate.margin, 0.0); // exact
+//! assert!(out.query(mean99).unwrap().estimate.confidence == 0.99);
+//! # let _ = session.remove(mean99);
+//! # Ok::<(), incapprox::Error>(())
+//! ```
+
+use std::sync::Arc;
+
+use crate::coordinator::driver::Coordinator;
+use crate::coordinator::query::{QueryId, QuerySpec};
+use crate::coordinator::report::SlideOutput;
+use crate::error::Result;
+use crate::kafka::broker::Broker;
+use crate::kafka::consumer::Consumer;
+use crate::kafka::producer::{Partitioner, Producer};
+use crate::workload::gen::MultiStream;
+use crate::workload::record::Record;
+
+/// Default topic the session publishes to.
+pub const TOPIC: &str = "incapprox-events";
+
+/// A streaming session serving N concurrent queries over one shared
+/// window, sample, and memo store.
+pub struct Session {
+    broker: Arc<Broker<Record>>,
+    producer: Producer<Record>,
+    consumer: Consumer<Record>,
+    coordinator: Coordinator,
+    source: MultiStream,
+}
+
+impl Session {
+    /// Build a session over a generator source. The slide size and the
+    /// backpressure knobs (`lag_watermark_slides`, `catchup_factor`) are
+    /// read live from the coordinator's [`SystemConfig`] at each step,
+    /// so mid-run reconfiguration through
+    /// [`Session::coordinator_mut`] is honored.
+    ///
+    /// [`SystemConfig`]: crate::config::system::SystemConfig
+    pub fn new(coordinator: Coordinator, source: MultiStream) -> Result<Self> {
+        let broker = Broker::new();
+        broker.create_topic(TOPIC, 4)?;
+        let producer = Producer::new(&broker, TOPIC, Partitioner::Keyed)?;
+        let mut consumer = Consumer::new();
+        consumer.subscribe(&broker, TOPIC)?;
+        Ok(Session { broker, producer, consumer, coordinator, source })
+    }
+
+    /// Register a query; every subsequent slide answers it. See
+    /// [`Coordinator::submit_query`].
+    pub fn submit(&mut self, spec: QuerySpec) -> Result<QueryId> {
+        self.coordinator.submit_query(spec)
+    }
+
+    /// Deregister a query; returns whether the id was registered.
+    pub fn remove(&mut self, id: QueryId) -> bool {
+        self.coordinator.remove_query(id)
+    }
+
+    /// Number of registered queries.
+    pub fn query_count(&self) -> usize {
+        self.coordinator.query_count()
+    }
+
+    /// Produce from the generators until at least `n` records are queued.
+    fn produce_at_least(&mut self, n: usize) -> Result<()> {
+        let mut produced = 0;
+        while produced < n {
+            let records = self.source.tick();
+            for r in &records {
+                self.producer.send(Some(r.stratum as u64), r.timestamp, *r)?;
+            }
+            produced += records.len();
+        }
+        Ok(())
+    }
+
+    /// Warm the window: fill it completely and process the first window.
+    pub fn warmup(&mut self) -> Result<SlideOutput> {
+        let need = self.coordinator.config().window_size;
+        self.produce_at_least(need)?;
+        let batch: Vec<Record> =
+            self.consumer.poll(need)?.into_iter().map(|m| m.payload).collect();
+        self.coordinator.process_batch_queries(batch)
+    }
+
+    /// One session step: produce a slide, pull (with catch-up under
+    /// backpressure), process the window, answer every query.
+    pub fn step(&mut self) -> Result<SlideOutput> {
+        let cfg = self.coordinator.config();
+        let slide = cfg.slide;
+        let lag_high_watermark = (slide * cfg.lag_watermark_slides) as u64;
+        let catchup_factor = cfg.catchup_factor;
+        self.produce_at_least(slide)?;
+        let lag = self.consumer.lag()?;
+        let batch_size = if lag > lag_high_watermark {
+            log::warn!("backpressure: lag {lag} > {lag_high_watermark}, catching up");
+            slide * catchup_factor
+        } else {
+            slide
+        };
+        let batch: Vec<Record> =
+            self.consumer.poll(batch_size)?.into_iter().map(|m| m.payload).collect();
+        self.coordinator.process_batch_queries(batch)
+    }
+
+    /// Run `n` steps after warmup; returns all outputs (warmup first).
+    pub fn run(&mut self, n: usize) -> Result<Vec<SlideOutput>> {
+        let mut outputs = vec![self.warmup()?];
+        for _ in 0..n {
+            outputs.push(self.step()?);
+        }
+        Ok(outputs)
+    }
+
+    /// Current consumer lag (monitoring).
+    pub fn lag(&self) -> Result<u64> {
+        self.consumer.lag()
+    }
+
+    /// Borrow the coordinator (stats inspection).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coordinator
+    }
+
+    /// Mutably borrow the coordinator (e.g. window resizing mid-run).
+    pub fn coordinator_mut(&mut self) -> &mut Coordinator {
+        &mut self.coordinator
+    }
+
+    /// The broker (for attaching extra producers/consumers in examples).
+    pub fn broker(&self) -> Arc<Broker<Record>> {
+        self.broker.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
+    use crate::job::aggregate::AggregateKind;
+
+    fn session(mode: ExecModeSpec) -> Session {
+        let cfg = SystemConfig {
+            mode,
+            window_size: 1500,
+            slide: 150,
+            seed: 21,
+            ..SystemConfig::default()
+        };
+        let source = MultiStream::paper_section5(cfg.seed);
+        Session::new(Coordinator::new(cfg), source).unwrap()
+    }
+
+    #[test]
+    fn multi_query_session_end_to_end() {
+        let mut s = session(ExecModeSpec::IncApprox);
+        let sum = s.submit(QuerySpec::new(AggregateKind::Sum)).unwrap();
+        let mean = s
+            .submit(
+                QuerySpec::new(AggregateKind::Mean)
+                    .with_budget(BudgetSpec::Fraction(0.05)),
+            )
+            .unwrap();
+        let hot = s
+            .submit(QuerySpec::new(AggregateKind::Extrema).with_stratum(2))
+            .unwrap();
+        assert_eq!(s.query_count(), 3);
+        let outputs = s.run(4).unwrap();
+        assert_eq!(outputs.len(), 5);
+        for out in &outputs {
+            assert_eq!(out.queries.len(), 3);
+            assert!(out.query(sum).unwrap().estimate.value > 0.0);
+            assert!(out.query(mean).unwrap().estimate.value > 0.0);
+            let e = out.query(hot).unwrap();
+            assert_eq!(e.kind, AggregateKind::Extrema);
+            let (lo, hi) = e.extrema.expect("stratum 2 always populated");
+            assert!(lo <= hi);
+        }
+        // The steady-state window still shows the marriage working.
+        let last = &outputs.last().unwrap().window;
+        assert_eq!(last.window_len, 1500);
+        assert!(last.item_reuse_fraction() > 0.5);
+    }
+
+    #[test]
+    fn remove_mid_run_drops_only_that_query() {
+        let mut s = session(ExecModeSpec::IncApprox);
+        let a = s.submit(QuerySpec::new(AggregateKind::Sum)).unwrap();
+        let b = s.submit(QuerySpec::new(AggregateKind::Count)).unwrap();
+        let out = s.warmup().unwrap();
+        assert_eq!(out.queries.len(), 2);
+        assert!(s.remove(a));
+        let out = s.step().unwrap();
+        assert_eq!(out.queries.len(), 1);
+        assert!(out.query(a).is_none());
+        assert!(out.query(b).is_some());
+        assert!(!s.remove(a), "double remove is a no-op");
+    }
+
+    #[test]
+    fn configured_backpressure_knobs_are_honored() {
+        let cfg = SystemConfig {
+            window_size: 1500,
+            slide: 150,
+            seed: 21,
+            lag_watermark_slides: 2,
+            catchup_factor: 6,
+            ..SystemConfig::default()
+        };
+        let source = MultiStream::paper_section5(cfg.seed);
+        let mut s = Session::new(Coordinator::new(cfg.clone()), source).unwrap();
+        // The knobs are read live from the coordinator's config.
+        assert_eq!(s.coordinator().config().lag_watermark_slides, 2);
+        assert_eq!(s.coordinator().config().catchup_factor, 6);
+        s.run(6).unwrap();
+        // Consumer keeps up: lag bounded by the configured catch-up size.
+        assert!(s.lag().unwrap() < (cfg.slide * cfg.catchup_factor * 2) as u64);
+    }
+
+    #[test]
+    fn all_modes_serve_queries() {
+        for mode in [
+            ExecModeSpec::Native,
+            ExecModeSpec::IncrementalOnly,
+            ExecModeSpec::ApproxOnly,
+            ExecModeSpec::IncApprox,
+        ] {
+            let mut s = session(mode);
+            for kind in AggregateKind::ALL {
+                s.submit(QuerySpec::new(kind)).unwrap();
+            }
+            let outputs = s.run(2).unwrap();
+            assert_eq!(outputs.len(), 3, "{}", mode.name());
+            for out in &outputs {
+                assert_eq!(out.queries.len(), AggregateKind::ALL.len());
+                for q in &out.queries {
+                    assert!(q.estimate.value.is_finite(), "{}/{}", mode.name(), q.kind.name());
+                    assert!(q.estimate.margin >= 0.0);
+                }
+                // Exact modes sample the whole window → every bounded
+                // aggregate collapses to margin 0 via the FPC.
+                if matches!(mode, ExecModeSpec::Native | ExecModeSpec::IncrementalOnly) {
+                    for q in &out.queries {
+                        assert_eq!(q.estimate.margin, 0.0, "{}", q.kind.name());
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Query aggregates derived from the shared per-stratum [`Moments`].
+//!
+//! The paper's memoized sub-computation (a chunk's masked moments) is the
+//! reusable asset of the whole system: once a window's per-stratum
+//! `Moments` exist, *every* aggregate a query could ask for — sum, mean,
+//! count, variance, standard deviation, extrema — is a pure O(strata)
+//! fold over them. That is what lets a
+//! [`Session`](crate::coordinator::Session) serve N concurrent queries
+//! from **one** sample, one memo store, and one batched backend call per
+//! slide: the per-query cost is derivation only, never sampling or chunk
+//! execution.
+//!
+//! ## Error bounds per kind
+//!
+//! * [`AggregateKind::Sum`] / [`AggregateKind::Mean`] carry the rigorous
+//!   stratified confidence interval of §3.5 (Eqs 3.2–3.4) via
+//!   [`estimate_sum`] / [`estimate_mean`].
+//! * [`AggregateKind::Count`] is **exact** (the per-stratum populations
+//!   are exact window counts, not sampled), so its margin is 0.
+//! * [`AggregateKind::Variance`] / [`AggregateKind::StdDev`] are point
+//!   estimates (margin 0): a rigorous interval would need fourth moments
+//!   the chunk kernel does not produce. The estimate expands per-stratum
+//!   sums Eq 3.2-style: `σ̂² = τ̂₂/N − (τ̂/N)²`.
+//! * [`AggregateKind::Extrema`] reports the sample extrema (margin 0).
+//!   On the §4.2.2 inverse-reduce path `min`/`max` are *conservative*
+//!   (`min ≤ true min`, `max ≥ true max` — removing an extremal item
+//!   loses information), mirroring the paper's deferral of extreme-value
+//!   error estimation (§3.5.1).
+
+use std::collections::BTreeMap;
+
+use crate::error::Result;
+use crate::job::moments::Moments;
+use crate::stats::stratified::{estimate_mean, estimate_sum, Estimate, StratumAgg};
+use crate::workload::record::StratumId;
+
+/// The aggregate a query asks for over the (optionally filtered) window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AggregateKind {
+    /// Estimated population total τ̂ with a §3.5 confidence interval.
+    Sum,
+    /// Estimated population mean μ̂ = τ̂ / N with a confidence interval.
+    Mean,
+    /// Exact item count over the queried strata (populations are exact).
+    Count,
+    /// Estimated population variance (point estimate, margin 0).
+    Variance,
+    /// Estimated population standard deviation (point estimate, margin 0).
+    StdDev,
+    /// Sample extrema; conservative bounds on the inverse-reduce path.
+    Extrema,
+}
+
+impl AggregateKind {
+    /// Display name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sum => "sum",
+            Self::Mean => "mean",
+            Self::Count => "count",
+            Self::Variance => "variance",
+            Self::StdDev => "stddev",
+            Self::Extrema => "extrema",
+        }
+    }
+
+    /// Does this kind carry a rigorous §3.5 confidence interval? The
+    /// remaining kinds report margin 0 (exact, or a point estimate).
+    pub fn has_error_bounds(&self) -> bool {
+        matches!(self, Self::Sum | Self::Mean)
+    }
+
+    /// All kinds, in a fixed order (test matrices, benches).
+    pub const ALL: [AggregateKind; 6] = [
+        AggregateKind::Sum,
+        AggregateKind::Mean,
+        AggregateKind::Count,
+        AggregateKind::Variance,
+        AggregateKind::StdDev,
+        AggregateKind::Extrema,
+    ];
+}
+
+/// One derived query answer plus its accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct DerivedAggregate {
+    /// The answer with its (possibly zero) margin.
+    pub estimate: Estimate,
+    /// Sampled items that backed the answer (Σ bᵢ over queried strata).
+    pub sample_size: usize,
+    /// Window population over the queried strata (Σ Bᵢ).
+    pub population: u64,
+    /// `(min, max)` of the queried sample, when observed (`Extrema`).
+    pub extrema: Option<(f64, f64)>,
+    /// Strata folded over — the per-query derive work, O(strata).
+    pub strata_touched: u64,
+}
+
+/// Derive one aggregate from the window's shared per-stratum moments and
+/// exact populations. `stratum` restricts the query to one stratum
+/// (`None` = whole window). Pure and O(strata): this is the *entire*
+/// per-query, per-slide cost of a multi-query session.
+pub fn derive_aggregate(
+    kind: AggregateKind,
+    stratum: Option<StratumId>,
+    confidence: f64,
+    moments: &BTreeMap<StratumId, Moments>,
+    populations: &BTreeMap<StratumId, u64>,
+) -> Result<DerivedAggregate> {
+    let mut aggs: Vec<StratumAgg> = Vec::with_capacity(moments.len());
+    let mut sample_size = 0usize;
+    let mut population = 0u64;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    let mut strata_touched = 0u64;
+    for (&s, m) in moments {
+        if stratum.is_some_and(|want| want != s) {
+            continue;
+        }
+        strata_touched += 1;
+        let pop = populations.get(&s).copied().unwrap_or(0);
+        aggs.push(StratumAgg::from_moments(m, pop as f64));
+        sample_size += m.count as usize;
+        population += pop;
+        min = min.min(m.min);
+        max = max.max(m.max);
+    }
+    let estimate = match kind {
+        AggregateKind::Sum => estimate_sum(&aggs, confidence)?,
+        AggregateKind::Mean => estimate_mean(&aggs, confidence)?,
+        AggregateKind::Count => exact(population as f64, confidence),
+        AggregateKind::Variance => exact(variance_of(&aggs), confidence),
+        AggregateKind::StdDev => exact(variance_of(&aggs).sqrt(), confidence),
+        AggregateKind::Extrema => {
+            exact(if max.is_finite() { max } else { 0.0 }, confidence)
+        }
+    };
+    let extrema = if kind == AggregateKind::Extrema && min.is_finite() && max.is_finite() {
+        Some((min, max))
+    } else {
+        None
+    };
+    Ok(DerivedAggregate { estimate, sample_size, population, extrema, strata_touched })
+}
+
+/// A margin-free estimate (exact answers and point estimates).
+fn exact(value: f64, confidence: f64) -> Estimate {
+    Estimate { value, margin: 0.0, variance: 0.0, df: 0.0, t: 0.0, confidence }
+}
+
+/// Estimated population variance by stratified expansion of the first
+/// two moments: `τ̂ = Σ (Bᵢ/bᵢ)·Σv`, `τ̂₂ = Σ (Bᵢ/bᵢ)·Σv²`, then
+/// `σ̂² = τ̂₂/N − (τ̂/N)²` (clamped at 0 against round-off).
+fn variance_of(aggs: &[StratumAgg]) -> f64 {
+    let mut n = 0.0;
+    let mut tau = 0.0;
+    let mut tau2 = 0.0;
+    for a in aggs {
+        if a.b <= 0.0 {
+            continue;
+        }
+        n += a.population;
+        tau += a.population / a.b * a.sum;
+        tau2 += a.population / a.b * a.sumsq;
+    }
+    if n <= 0.0 {
+        return 0.0;
+    }
+    let mean = tau / n;
+    (tau2 / n - mean * mean).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::record::Record;
+
+    /// Shared fixture: two strata fully enumerated (sample == population)
+    /// so every estimator collapses to the exact answer.
+    fn census() -> (BTreeMap<StratumId, Moments>, BTreeMap<StratumId, u64>) {
+        let mut moments = BTreeMap::new();
+        let mut pops = BTreeMap::new();
+        moments.insert(0, Moments::from_values(&[1.0, 2.0, 3.0]));
+        pops.insert(0, 3);
+        moments.insert(1, Moments::from_values(&[10.0, 20.0]));
+        pops.insert(1, 2);
+        (moments, pops)
+    }
+
+    #[test]
+    fn census_sum_mean_count_are_exact() {
+        let (m, p) = census();
+        let sum = derive_aggregate(AggregateKind::Sum, None, 0.95, &m, &p).unwrap();
+        assert_eq!(sum.estimate.value, 36.0);
+        assert_eq!(sum.estimate.margin, 0.0, "census: FPC zeroes the margin");
+        assert_eq!(sum.sample_size, 5);
+        assert_eq!(sum.population, 5);
+        assert_eq!(sum.strata_touched, 2);
+        let mean = derive_aggregate(AggregateKind::Mean, None, 0.95, &m, &p).unwrap();
+        assert!((mean.estimate.value - 36.0 / 5.0).abs() < 1e-12);
+        let count = derive_aggregate(AggregateKind::Count, None, 0.95, &m, &p).unwrap();
+        assert_eq!(count.estimate.value, 5.0);
+        assert_eq!(count.estimate.margin, 0.0);
+    }
+
+    #[test]
+    fn census_variance_matches_population_variance() {
+        let (m, p) = census();
+        let values = [1.0f64, 2.0, 3.0, 10.0, 20.0];
+        let mean = values.iter().sum::<f64>() / values.len() as f64;
+        let want =
+            values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / values.len() as f64;
+        let var = derive_aggregate(AggregateKind::Variance, None, 0.95, &m, &p).unwrap();
+        assert!((var.estimate.value - want).abs() < 1e-9, "{} vs {want}", var.estimate.value);
+        let sd = derive_aggregate(AggregateKind::StdDev, None, 0.95, &m, &p).unwrap();
+        assert_eq!(sd.estimate.value.to_bits(), var.estimate.value.sqrt().to_bits());
+    }
+
+    #[test]
+    fn extrema_reports_min_max() {
+        let (m, p) = census();
+        let e = derive_aggregate(AggregateKind::Extrema, None, 0.95, &m, &p).unwrap();
+        assert_eq!(e.estimate.value, 20.0);
+        assert_eq!(e.extrema, Some((1.0, 20.0)));
+        assert_eq!(e.estimate.margin, 0.0);
+    }
+
+    #[test]
+    fn stratum_filter_restricts_the_fold() {
+        let (m, p) = census();
+        let sum = derive_aggregate(AggregateKind::Sum, Some(1), 0.9, &m, &p).unwrap();
+        assert_eq!(sum.estimate.value, 30.0);
+        assert_eq!(sum.population, 2);
+        assert_eq!(sum.strata_touched, 1);
+        assert_eq!(sum.estimate.confidence, 0.9);
+        // Absent stratum: empty fold, zero answer, zero work beyond the scan.
+        let none = derive_aggregate(AggregateKind::Sum, Some(99), 0.9, &m, &p).unwrap();
+        assert_eq!(none.estimate.value, 0.0);
+        assert_eq!(none.strata_touched, 0);
+        assert_eq!(none.population, 0);
+    }
+
+    #[test]
+    fn sampled_stratum_gets_a_positive_margin() {
+        // 3 of 30 sampled → expansion + a real confidence interval.
+        let mut m = BTreeMap::new();
+        let mut p = BTreeMap::new();
+        m.insert(0, Moments::from_values(&[1.0, 2.0, 6.0]));
+        p.insert(0, 30);
+        let sum = derive_aggregate(AggregateKind::Sum, None, 0.95, &m, &p).unwrap();
+        assert!((sum.estimate.value - 90.0).abs() < 1e-12, "10× expansion");
+        assert!(sum.estimate.margin > 0.0);
+        assert!(AggregateKind::Sum.has_error_bounds());
+        assert!(!AggregateKind::Variance.has_error_bounds());
+    }
+
+    #[test]
+    fn empty_moments_yield_zero_answers() {
+        let m = BTreeMap::new();
+        let p = BTreeMap::new();
+        for kind in AggregateKind::ALL {
+            let d = derive_aggregate(kind, None, 0.95, &m, &p).unwrap();
+            assert_eq!(d.estimate.value, 0.0, "{}", kind.name());
+            assert_eq!(d.extrema, None);
+            assert_eq!(d.strata_touched, 0);
+        }
+    }
+
+    #[test]
+    fn derivation_from_combined_chunks_matches_direct_records() {
+        // The sharing theorem in miniature: moments built by chunked
+        // combine (how the driver produces them) derive the same answers
+        // as a direct pass over the records.
+        let records: Vec<Record> =
+            (0..100u64).map(|i| Record::new(i, (i % 3) as u32, i, 0, (i % 13) as f64 + 0.5)).collect();
+        let mut by_stratum: BTreeMap<StratumId, Vec<Record>> = BTreeMap::new();
+        for r in &records {
+            by_stratum.entry(r.stratum).or_default().push(*r);
+        }
+        let mut chunked = BTreeMap::new();
+        let mut direct = BTreeMap::new();
+        let mut pops = BTreeMap::new();
+        for (&s, recs) in &by_stratum {
+            let chunks = crate::job::chunk::chunk_stratum(s, recs, 8);
+            let parts: Vec<Moments> =
+                chunks.iter().map(|c| Moments::from_records(&c.items)).collect();
+            chunked.insert(s, Moments::combine_all(parts.iter()));
+            direct.insert(s, Moments::from_records(recs));
+            pops.insert(s, recs.len() as u64);
+        }
+        for kind in AggregateKind::ALL {
+            let a = derive_aggregate(kind, None, 0.95, &chunked, &pops).unwrap();
+            let b = derive_aggregate(kind, None, 0.95, &direct, &pops).unwrap();
+            let tol = 1e-9 * b.estimate.value.abs().max(1.0);
+            assert!(
+                (a.estimate.value - b.estimate.value).abs() <= tol,
+                "{}: {} vs {}",
+                kind.name(),
+                a.estimate.value,
+                b.estimate.value
+            );
+        }
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        let names: Vec<&str> = AggregateKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names, ["sum", "mean", "count", "variance", "stddev", "extrema"]);
+    }
+}

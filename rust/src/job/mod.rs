@@ -2,6 +2,10 @@
 //!
 //! * [`moments`] — the sub-computation result type (count, Σv, Σv², min,
 //!   max) with an exact combine, mirroring the L1 kernel's output row.
+//! * [`aggregate`] — per-query aggregate derivation (sum / mean / count /
+//!   variance / stddev / extrema) from the shared per-stratum moments —
+//!   the O(strata) fold that lets one window's memoized state answer N
+//!   concurrent queries.
 //! * [`chunk`] — content-defined chunking of per-stratum item lists into
 //!   stable, memoizable map-task inputs (Incoop-style stable partitioning:
 //!   boundaries depend on item ids, not positions, so window overlap
@@ -11,12 +15,14 @@
 //! * [`executor`] — the worker-pool backend that computes fresh chunks
 //!   (native scalar path; the PJRT path lives in `runtime/`).
 
+pub mod aggregate;
 pub mod chunk;
 pub mod map_fn;
 pub mod executor;
 pub mod moments;
 pub mod plan;
 
+pub use aggregate::{derive_aggregate, AggregateKind, DerivedAggregate};
 pub use chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
 pub use map_fn::apply_map;
 pub use executor::{ChunkBackend, NativeBackend, WorkerPool};

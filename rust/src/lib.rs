@@ -16,9 +16,12 @@
 //!   (`runtime` module, behind the `pjrt` feature). Python is never on
 //!   the request path.
 //!
-//! Entry points: [`coordinator::Coordinator`] drives the paper's
-//! Algorithm 1 over any [`workload`] source; `examples/` show end-to-end
-//! usage; `rust/benches/` regenerate the paper's figures.
+//! Entry points: a [`coordinator::Session`] serves N concurrent
+//! [`coordinator::QuerySpec`]s over one shared stream, window, sample,
+//! and memo store ([`prelude`] re-exports the session-era API);
+//! [`coordinator::Coordinator`] drives the paper's Algorithm 1 over any
+//! [`workload`] source; `examples/` show end-to-end usage;
+//! `rust/benches/` regenerate the paper's figures.
 
 #![warn(missing_docs)]
 
@@ -34,6 +37,7 @@ pub mod job;
 pub mod kafka;
 pub mod logging;
 pub mod metrics;
+pub mod prelude;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sac;

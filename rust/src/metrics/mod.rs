@@ -212,11 +212,22 @@ pub struct SlideWork {
     pub plan_items: u64,
     /// Items whose moments the backend computed fresh.
     pub compute_items: u64,
+    /// Per-stratum moment reads performed to derive the registered
+    /// queries' answers — the only counter allowed to scale with query
+    /// count (O(strata) per query; derivation never touches items).
+    pub derive_items: u64,
 }
 
 impl SlideWork {
     /// Sum over all stages — the headline per-slide items-touched number.
     pub fn total(&self) -> u64 {
+        self.substrate_total() + self.derive_items
+    }
+
+    /// Items touched by the shared substrate stages (window, sampler,
+    /// plan, compute) — everything except per-query derivation. The
+    /// multi-query invariant: this must be independent of query count.
+    pub fn substrate_total(&self) -> u64 {
         self.window_items + self.sampler_items + self.plan_items + self.compute_items
     }
 }
@@ -243,6 +254,7 @@ impl WorkProfile {
         self.total.sampler_items += w.sampler_items;
         self.total.plan_items += w.plan_items;
         self.total.compute_items += w.compute_items;
+        self.total.derive_items += w.derive_items;
         self.last = w;
         self.windows += 1;
     }
@@ -274,13 +286,14 @@ impl WorkProfile {
     /// One-line summary, e.g. for bench output.
     pub fn summary(&self) -> String {
         format!(
-            "items/slide over {} windows: mean {:.0} (last: window {} + sampler {} + plan {} + compute {})",
+            "items/slide over {} windows: mean {:.0} (last: window {} + sampler {} + plan {} + compute {} + derive {})",
             self.windows,
             self.mean_total_per_slide(),
             self.last.window_items,
             self.last.sampler_items,
             self.last.plan_items,
-            self.last.compute_items
+            self.last.compute_items,
+            self.last.derive_items
         )
     }
 }
@@ -380,9 +393,23 @@ mod tests {
 
     #[test]
     fn slide_work_totals_and_profile() {
-        let w1 = SlideWork { window_items: 10, sampler_items: 20, plan_items: 5, compute_items: 1 };
-        let w2 = SlideWork { window_items: 2, sampler_items: 4, plan_items: 3, compute_items: 7 };
-        assert_eq!(w1.total(), 36);
+        let w1 = SlideWork {
+            window_items: 10,
+            sampler_items: 20,
+            plan_items: 5,
+            compute_items: 1,
+            derive_items: 6,
+        };
+        let w2 = SlideWork {
+            window_items: 2,
+            sampler_items: 4,
+            plan_items: 3,
+            compute_items: 7,
+            derive_items: 0,
+        };
+        assert_eq!(w1.substrate_total(), 36);
+        assert_eq!(w1.total(), 42);
+        assert_eq!(w2.total(), 16);
         let mut p = WorkProfile::new();
         assert_eq!(p.windows(), 0);
         assert_eq!(p.mean_total_per_slide(), 0.0);
@@ -391,8 +418,9 @@ mod tests {
         assert_eq!(p.windows(), 2);
         assert_eq!(p.last(), w2);
         assert_eq!(p.total().window_items, 12);
-        assert_eq!(p.total().total(), 52);
-        assert!((p.mean_total_per_slide() - 26.0).abs() < 1e-12);
+        assert_eq!(p.total().derive_items, 6);
+        assert_eq!(p.total().total(), 58);
+        assert!((p.mean_total_per_slide() - 29.0).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
     }
 

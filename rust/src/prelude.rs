@@ -1,0 +1,24 @@
+//! One-line import of the session-era public API.
+//!
+//! ```
+//! use incapprox::prelude::*;
+//!
+//! let cfg = SystemConfig { window_size: 1000, slide: 100, seed: 7, ..SystemConfig::default() };
+//! let source = MultiStream::paper_section5(cfg.seed);
+//! let mut session = Session::new(Coordinator::new(cfg), source)?;
+//! let q = session.submit(QuerySpec::new(AggregateKind::Mean))?;
+//! let out = session.warmup()?;
+//! assert!(out.query(q).is_some());
+//! # Ok::<(), incapprox::Error>(())
+//! ```
+
+pub use crate::config::system::{BudgetSpec, ExecModeSpec, ShardStrategy, SystemConfig};
+pub use crate::coordinator::{
+    Coordinator, Pipeline, QueryId, QueryReport, QuerySpec, Session, SlideOutput,
+    StratumReport, WindowReport,
+};
+pub use crate::error::{Error, Result};
+pub use crate::job::aggregate::AggregateKind;
+pub use crate::stats::stratified::Estimate;
+pub use crate::workload::gen::MultiStream;
+pub use crate::workload::record::{Record, StratumId};

@@ -1,0 +1,406 @@
+//! The multi-query session gates.
+//!
+//! (1) **Legacy equivalence** — a 1-query session produces
+//! `WindowReport`s byte-identical to the legacy single-query
+//! `Coordinator::process_batch` path across serial / sharded /
+//! incremental configurations (extends the
+//! `sharded_pipeline_matches_serial_exactly` gate to the session API).
+//! (2) **Sharing** — per-slide substrate work (window / sampler / plan /
+//! compute `SlideWork` counters) and memo traffic are independent of
+//! query count; only the derive counter scales with N.
+//! (3) **Derivation correctness** — every `QuerySpec` aggregate derived
+//! from shared chunk `Moments` equals the same aggregate computed
+//! directly on the sampled records, in every exec mode (extrema are
+//! conservative on the inverse-reduce path, exact elsewhere).
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use common::{arb_batch, check_property};
+use incapprox::job::aggregate::derive_aggregate;
+use incapprox::job::chunk::chunk_stratum;
+use incapprox::job::moments::Moments;
+use incapprox::prelude::*;
+
+fn config(mode: ExecModeSpec) -> SystemConfig {
+    SystemConfig {
+        mode,
+        window_size: 2000,
+        slide: 200,
+        seed: 11,
+        chunk_size: 16,
+        ..SystemConfig::default()
+    }
+}
+
+fn assert_windows_identical(a: &WindowReport, b: &WindowReport, label: &str) {
+    assert_eq!(a.window_id, b.window_id, "{label}");
+    assert_eq!(
+        a.estimate.value.to_bits(),
+        b.estimate.value.to_bits(),
+        "{label} w{}: estimate {} vs {}",
+        a.window_id,
+        a.estimate.value,
+        b.estimate.value
+    );
+    assert_eq!(a.estimate.margin.to_bits(), b.estimate.margin.to_bits(), "{label}");
+    assert_eq!(a.window_len, b.window_len, "{label}");
+    assert_eq!(a.sample_size, b.sample_size, "{label}");
+    assert_eq!(a.chunks_total, b.chunks_total, "{label}");
+    assert_eq!(a.chunks_reused, b.chunks_reused, "{label}");
+    assert_eq!(a.fresh_items, b.fresh_items, "{label}");
+    assert_eq!(a.strata, b.strata, "{label}");
+}
+
+/// The legacy spec: what `process_batch` implicitly computes — a
+/// whole-window Sum at the session's confidence and budget.
+fn legacy_spec(cfg: &SystemConfig) -> QuerySpec {
+    QuerySpec::new(AggregateKind::Sum)
+        .with_confidence(cfg.confidence)
+        .with_budget(cfg.budget.clone())
+}
+
+#[test]
+fn one_query_session_matches_legacy_exactly() {
+    // Serial / sharded / incremental × every mode: registering one query
+    // with the session's own budget must not perturb the window path by
+    // a single bit — and the query's answer IS the window estimate.
+    for mode in [
+        ExecModeSpec::Native,
+        ExecModeSpec::IncrementalOnly,
+        ExecModeSpec::ApproxOnly,
+        ExecModeSpec::IncApprox,
+    ] {
+        let mut configs = Vec::new();
+        let mut serial = config(mode);
+        serial.num_workers = 1;
+        serial.incremental_slide = false;
+        configs.push(("serial", serial));
+        let mut sharded = config(mode);
+        sharded.num_workers = 4;
+        sharded.incremental_slide = false;
+        configs.push(("sharded", sharded));
+        let incremental = config(mode);
+        assert!(incremental.incremental_slide, "O(delta) path is the default");
+        configs.push(("incremental", incremental));
+        for (cname, cfg) in configs {
+            let mut gen_a = MultiStream::paper_section5(cfg.seed);
+            let mut gen_b = MultiStream::paper_section5(cfg.seed);
+            let mut legacy = Coordinator::new(cfg.clone());
+            let mut session = Coordinator::new(cfg.clone());
+            let qid = session.submit_query(legacy_spec(&cfg)).unwrap();
+            for step in 0..6 {
+                let n = if step == 0 { cfg.window_size } else { cfg.slide };
+                let ra = legacy.process_batch(gen_a.take_records(n)).unwrap();
+                let out = session.process_batch_queries(gen_b.take_records(n)).unwrap();
+                let label = format!("{}/{cname} step {step}", mode.name());
+                assert_windows_identical(&ra, &out.window, &label);
+                let q = out.query(qid).expect("registered");
+                assert_eq!(
+                    q.estimate.value.to_bits(),
+                    out.window.estimate.value.to_bits(),
+                    "{label}: legacy-equivalent query must equal the window estimate"
+                );
+                assert_eq!(q.estimate.margin.to_bits(), out.window.estimate.margin.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn one_query_session_run_matches_legacy_pipeline_run() {
+    // The broker-fed paths too: Session::run with the legacy spec vs
+    // Pipeline::run, same seeds — byte-identical window reports.
+    let cfg = config(ExecModeSpec::IncApprox);
+    let mut pipeline = Pipeline::new(
+        Coordinator::new(cfg.clone()),
+        MultiStream::paper_section5(cfg.seed),
+    )
+    .unwrap();
+    let mut session = Session::new(
+        Coordinator::new(cfg.clone()),
+        MultiStream::paper_section5(cfg.seed),
+    )
+    .unwrap();
+    session.submit(legacy_spec(&cfg)).unwrap();
+    let legacy = pipeline.run(5).unwrap();
+    let outputs = session.run(5).unwrap();
+    assert_eq!(legacy.len(), outputs.len());
+    for (r, out) in legacy.iter().zip(&outputs) {
+        assert_windows_identical(r, &out.window, "pipeline vs 1-query session");
+    }
+}
+
+#[test]
+fn substrate_work_independent_of_query_count() {
+    // N ∈ {1, 4, 16}: identical traces, identical window reports,
+    // identical substrate SlideWork and memo traffic; only the derive
+    // counter may scale with N (and does, linearly: strata × N).
+    let cfg = config(ExecModeSpec::IncApprox);
+    let mut runs = Vec::new();
+    for &n_queries in &[1usize, 4, 16] {
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        for i in 0..n_queries {
+            let kind = AggregateKind::ALL[i % AggregateKind::ALL.len()];
+            coord.submit_query(QuerySpec::new(kind)).unwrap();
+        }
+        let mut last = None;
+        for step in 0..6 {
+            let n = if step == 0 { cfg.window_size } else { cfg.slide };
+            last = Some(coord.process_batch_queries(gen.take_records(n)).unwrap());
+        }
+        let out = last.unwrap();
+        assert_eq!(out.queries.len(), n_queries);
+        let work = coord.work_profile().last();
+        let totals = coord.work_profile().total();
+        runs.push((n_queries, out, work, totals, coord.memo_stats()));
+    }
+    let (_, base_out, base_work, base_totals, base_memo) = &runs[0];
+    let strata = base_out.window.strata.len() as u64;
+    assert!(strata > 1, "need a stratified stream for a meaningful gate");
+    for (n, out, work, totals, memo) in &runs {
+        assert_windows_identical(
+            &base_out.window,
+            &out.window,
+            &format!("N={n} vs N=1 window"),
+        );
+        // Substrate counters: bit-for-bit independent of query count.
+        assert_eq!(work.window_items, base_work.window_items, "N={n}");
+        assert_eq!(work.sampler_items, base_work.sampler_items, "N={n}");
+        assert_eq!(work.plan_items, base_work.plan_items, "N={n}");
+        assert_eq!(work.compute_items, base_work.compute_items, "N={n}");
+        assert_eq!(work.substrate_total(), base_work.substrate_total(), "N={n}");
+        assert_eq!(totals.substrate_total(), base_totals.substrate_total(), "N={n}");
+        // Memo traffic (hits / misses / evictions) is flat too: lookups
+        // happen during the once-per-slide planning, entries are keyed by
+        // chunk content — query count multiplies neither.
+        assert_eq!(memo, base_memo, "N={n}: memo traffic must not scale");
+        // Only derivation scales, and exactly linearly: strata per query.
+        assert_eq!(work.derive_items, *n as u64 * strata, "N={n} derive");
+    }
+}
+
+#[test]
+fn queries_consistent_in_every_exec_mode() {
+    // All six aggregate kinds answered every slide in every mode, with
+    // the cross-kind identities that must hold when everything is
+    // derived from one shared set of moments.
+    for mode in [
+        ExecModeSpec::Native,
+        ExecModeSpec::IncrementalOnly,
+        ExecModeSpec::ApproxOnly,
+        ExecModeSpec::IncApprox,
+    ] {
+        let cfg = config(mode);
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        let ids: Vec<QueryId> = AggregateKind::ALL
+            .iter()
+            .map(|&k| coord.submit_query(QuerySpec::new(k)).unwrap())
+            .collect();
+        let stratum1 = coord
+            .submit_query(QuerySpec::new(AggregateKind::Sum).with_stratum(1))
+            .unwrap();
+        // Track the window contents alongside, for ground truth.
+        let mut window: Vec<Record> = Vec::new();
+        for step in 0..5 {
+            let n = if step == 0 { cfg.window_size } else { cfg.slide };
+            let batch = gen.take_records(n);
+            window.extend(batch.iter().copied());
+            let excess = window.len().saturating_sub(cfg.window_size);
+            window.drain(..excess);
+            let out = coord.process_batch_queries(batch).unwrap();
+            let label = format!("{} step {step}", mode.name());
+            let get = |i: usize| out.query(ids[i]).expect("registered");
+            let (sum, mean, count, var, sd, ext) =
+                (get(0), get(1), get(2), get(3), get(4), get(5));
+            // Sum at the session confidence IS the window estimate.
+            assert_eq!(
+                sum.estimate.value.to_bits(),
+                out.window.estimate.value.to_bits(),
+                "{label}"
+            );
+            // Count is exact: the sum of the (exact) strata populations.
+            let pop: u64 = out.window.strata.values().map(|s| s.population).sum();
+            assert_eq!(count.estimate.value, pop as f64, "{label}");
+            assert_eq!(count.estimate.margin, 0.0, "{label}");
+            assert_eq!(pop as usize, window.len(), "{label}: tracked window");
+            // Mean = Sum / population (both derived from the same fold).
+            let want_mean = sum.estimate.value / pop as f64;
+            assert!(
+                (mean.estimate.value - want_mean).abs() <= 1e-9 * want_mean.abs().max(1.0),
+                "{label}: mean {} vs {}",
+                mean.estimate.value,
+                want_mean
+            );
+            // StdDev = sqrt(Variance), bit for bit.
+            assert!(var.estimate.value >= 0.0, "{label}");
+            assert_eq!(
+                sd.estimate.value.to_bits(),
+                var.estimate.value.sqrt().to_bits(),
+                "{label}"
+            );
+            // Extrema: finite, ordered; exact in Native (full window, no
+            // inverse-reduce), conservative elsewhere.
+            let (lo, hi) = ext.extrema.expect("populated stream");
+            assert!(lo <= hi && lo.is_finite() && hi.is_finite(), "{label}");
+            if mode == ExecModeSpec::Native {
+                let true_min =
+                    window.iter().map(|r| r.value).fold(f64::INFINITY, f64::min);
+                let true_max =
+                    window.iter().map(|r| r.value).fold(f64::NEG_INFINITY, f64::max);
+                assert_eq!(lo.to_bits(), true_min.to_bits(), "{label}");
+                assert_eq!(hi.to_bits(), true_max.to_bits(), "{label}");
+            }
+            // The filtered query sees exactly stratum 1's share.
+            let q1 = out.query(stratum1).expect("registered");
+            let s1 = out.window.strata.get(&1).expect("stratum 1 exists");
+            assert_eq!(q1.population, s1.population, "{label}");
+            assert_eq!(q1.sample_size, s1.sample_size, "{label}");
+            assert!(q1.estimate.value > 0.0, "{label}");
+            assert!(q1.estimate.value < sum.estimate.value, "{label}");
+        }
+    }
+}
+
+#[test]
+fn time_windowed_coordinator_answers_queries() {
+    let cfg = config(ExecModeSpec::IncApprox);
+    let mut coord = Coordinator::new_time_windowed(cfg, 400, 40);
+    let q = coord.submit_query(QuerySpec::new(AggregateKind::Mean)).unwrap();
+    let mut gen = MultiStream::paper_section5(23);
+    let mut outputs = Vec::new();
+    for now in 1..=800u64 {
+        if let Some(out) = coord.ingest_tick_queries(gen.tick(), now).unwrap() {
+            outputs.push(out);
+        }
+    }
+    assert!(outputs.len() > 5, "no windows emitted");
+    for out in &outputs {
+        let r = out.query(q).expect("registered");
+        assert!(r.estimate.value.is_finite() && r.estimate.value > 0.0);
+        assert_eq!(r.population as usize, out.window.window_len);
+    }
+}
+
+#[test]
+fn prop_query_derivation_matches_direct_records() {
+    // The tentpole's correctness core, as a property: aggregates derived
+    // from chunked-and-combined moments (the driver's full path) and
+    // from inverse-reduce-updated moments (the §4.2.2 delta path) equal
+    // the same aggregates computed directly on the record set. Extrema
+    // are exact on the full path and conservative on the delta path.
+    check_property("query derivation ≡ direct", 40, 11, |rng| {
+        let n = 50 + rng.below(800);
+        let strata = 1 + rng.below(4) as u32;
+        let chunk_size = 1 + rng.below(40);
+        let pop_factor = 1 + rng.below(10) as u64;
+        let confidence = 0.8 + 0.001 * rng.below(190) as f64;
+        let items = arb_batch(rng, n, strata, 50);
+
+        let group = |recs: &[Record]| {
+            let mut by: BTreeMap<StratumId, Vec<Record>> = BTreeMap::new();
+            for r in recs {
+                by.entry(r.stratum).or_default().push(*r);
+            }
+            by
+        };
+        let chunked_moments = |by: &BTreeMap<StratumId, Vec<Record>>| {
+            by.iter()
+                .map(|(&s, recs)| {
+                    let chunks = chunk_stratum(s, recs, chunk_size);
+                    let parts: Vec<Moments> =
+                        chunks.iter().map(|c| Moments::from_records(&c.items)).collect();
+                    (s, Moments::combine_all(parts.iter()))
+                })
+                .collect::<BTreeMap<StratumId, Moments>>()
+        };
+        let direct_moments = |by: &BTreeMap<StratumId, Vec<Record>>| {
+            by.iter()
+                .map(|(&s, recs)| (s, Moments::from_records(recs)))
+                .collect::<BTreeMap<StratumId, Moments>>()
+        };
+        let pops = |by: &BTreeMap<StratumId, Vec<Record>>| {
+            by.iter()
+                .map(|(&s, recs)| (s, recs.len() as u64 * pop_factor))
+                .collect::<BTreeMap<StratumId, u64>>()
+        };
+        let assert_close = |kind: AggregateKind, a: f64, b: f64, what: &str| {
+            let tol = 1e-9 * b.abs().max(1.0);
+            assert!(
+                (a - b).abs() <= tol,
+                "{} {what}: {a} vs {b}",
+                kind.name()
+            );
+        };
+
+        // --- Full path: chunked == direct, every kind, every filter ----
+        let by = group(&items);
+        let (chunked, direct, p) = (chunked_moments(&by), direct_moments(&by), pops(&by));
+        let filters: Vec<Option<StratumId>> =
+            std::iter::once(None).chain(by.keys().map(|&s| Some(s))).collect();
+        for kind in AggregateKind::ALL {
+            for &filter in &filters {
+                let a = derive_aggregate(kind, filter, confidence, &chunked, &p).unwrap();
+                let b = derive_aggregate(kind, filter, confidence, &direct, &p).unwrap();
+                assert_close(kind, a.estimate.value, b.estimate.value, "value");
+                assert_close(kind, a.estimate.margin, b.estimate.margin, "margin");
+                assert_eq!(a.sample_size, b.sample_size);
+                assert_eq!(a.population, b.population);
+                if kind == AggregateKind::Extrema {
+                    // Full path: exact extremes.
+                    assert_eq!(a.extrema, b.extrema, "full-path extrema must be exact");
+                }
+            }
+        }
+
+        // --- Delta path: combine added, inverse-combine removed --------
+        let keep_from = rng.below(items.len() / 2 + 1);
+        let removed: Vec<Record> = items[..keep_from].to_vec();
+        let mut next: Vec<Record> = items[keep_from..].to_vec();
+        let added: Vec<Record> = (0..rng.below(200))
+            .map(|i| {
+                Record::new(
+                    items.len() as u64 + i as u64,
+                    rng.below(strata as usize) as u32,
+                    60,
+                    0,
+                    rng.normal_with(10.0, 4.0),
+                )
+            })
+            .collect();
+        next.extend(added.iter().copied());
+        let by_removed = group(&removed);
+        let by_added = group(&added);
+        let by_next = group(&next);
+        let mut updated: BTreeMap<StratumId, Moments> = direct.clone();
+        for (&s, recs) in &by_added {
+            let m = updated.entry(s).or_default();
+            *m = m.combine(&Moments::from_records(recs));
+        }
+        for (&s, recs) in &by_removed {
+            let m = updated.entry(s).or_default();
+            *m = m.inverse_combine(&Moments::from_records(recs));
+        }
+        // Drop strata that emptied out (the driver's eviction does this).
+        updated.retain(|s, m| m.count > 0.0 || by_next.contains_key(s));
+        let direct_next = direct_moments(&by_next);
+        let p_next = pops(&by_next);
+        for kind in AggregateKind::ALL {
+            let a = derive_aggregate(kind, None, confidence, &updated, &p_next).unwrap();
+            let b = derive_aggregate(kind, None, confidence, &direct_next, &p_next).unwrap();
+            if kind == AggregateKind::Extrema {
+                // Conservative bounds: the inverse can only widen them.
+                if let (Some((alo, ahi)), Some((blo, bhi))) = (a.extrema, b.extrema) {
+                    assert!(alo <= blo, "delta min {alo} must bound {blo} from below");
+                    assert!(ahi >= bhi, "delta max {ahi} must bound {bhi} from above");
+                }
+            } else {
+                assert_close(kind, a.estimate.value, b.estimate.value, "delta value");
+                assert_close(kind, a.estimate.margin, b.estimate.margin, "delta margin");
+            }
+        }
+    });
+}
