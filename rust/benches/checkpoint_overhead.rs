@@ -1,0 +1,180 @@
+//! Checkpoint overhead: full (base) vs incremental (delta) cost, and
+//! restore fidelity.
+//!
+//! **Paper mapping:** §6.3 — the thesis assumes memoized state survives
+//! failures (its sketched backup replica of the memoization cache); this
+//! bench measures what that durability costs in our substrate. Per
+//! slide/window ratio it reports the base-segment size (O(state): window
+//! buffer + memo + sample runs), the steady-state per-slide delta-segment
+//! size (O(state change): journal + run diffs), the per-checkpoint
+//! wall-clock, and the restore replay cost
+//! ([`SlideWork::restore_items`]). Expected shape: base bytes pinned at
+//! O(window) regardless of slide, delta bytes tracking the slide.
+//!
+//! **JSON:** emits `target/bench-results/checkpoint_overhead.json` with
+//! one `checkpoint` row per ratio (`ratio`, `slide`, `base_bytes`,
+//! `delta_bytes_per_slide`, `ckpt_ms`, `restore_items`,
+//! `restore_ms`) plus one `roundtrip` row (`slides_compared`,
+//! `identical` = 1).
+//!
+//! ```bash
+//! cargo bench --bench checkpoint_overhead            # full sweep
+//! cargo bench --bench checkpoint_overhead -- --smoke # CI smoke (tiny, asserts)
+//! ```
+//!
+//! In `--smoke` mode the bench **asserts** the durability invariants:
+//! steady-state delta segments are a small fraction of the base (the
+//! O(state delta) claim — a new `SlideWork` counter, not an O(window)
+//! rescan), delta bytes shrink with the slide, and a restored
+//! coordinator's reports are byte-identical to the uninterrupted run.
+
+use incapprox::bench_harness::{section, JsonReporter};
+use incapprox::config::system::{ExecModeSpec, SystemConfig};
+use incapprox::coordinator::{Coordinator, WindowReport};
+use incapprox::metrics::Stopwatch;
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::record::Record;
+
+fn reports_identical(a: &WindowReport, b: &WindowReport) -> bool {
+    a.window_id == b.window_id
+        && a.estimate.value.to_bits() == b.estimate.value.to_bits()
+        && a.estimate.margin.to_bits() == b.estimate.margin.to_bits()
+        && a.window_len == b.window_len
+        && a.sample_size == b.sample_size
+        && a.chunks_total == b.chunks_total
+        && a.chunks_reused == b.chunks_reused
+        && a.fresh_items == b.fresh_items
+        && a.strata == b.strata
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let window = if smoke { 2_048 } else { 16_384 };
+    let steady_slides = if smoke { 3 } else { 12 };
+    let ratios: &[usize] = if smoke { &[4, 16] } else { &[2, 4, 8, 16, 32, 64] };
+    let mut json = JsonReporter::for_bench("checkpoint_overhead");
+
+    section(&format!(
+        "checkpoint overhead: window {window}, {steady_slides} steady-state delta \
+         checkpoints per ratio (base = O(state), delta = O(state change))"
+    ));
+    println!(
+        "{:<8} {:<8} {:>12} {:>18} {:>10} {:>14} {:>12}",
+        "ratio", "slide", "base_bytes", "delta_bytes/slide", "ckpt_ms", "restore_items", "restore_ms"
+    );
+
+    let mut smoke_deltas: Vec<(usize, f64, u64)> = Vec::new(); // (slide, delta/slide, base)
+    for &ratio in ratios {
+        let slide = (window / ratio).max(1);
+        let cfg = SystemConfig {
+            mode: ExecModeSpec::IncApprox,
+            window_size: window,
+            slide,
+            seed: 42,
+            map_rounds: 0,
+            ..SystemConfig::default()
+        };
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        coord.process_batch(gen.take_records(window)).unwrap();
+        // Two warm slides so the memo and sample are in steady state.
+        for _ in 0..2 {
+            coord.process_batch(gen.take_records(slide)).unwrap();
+        }
+        // First checkpoint: the full base segment.
+        let mut sink = Vec::new();
+        coord.checkpoint(&mut sink).unwrap();
+        let base_bytes = coord.work_profile().total().checkpoint_bytes;
+        // Steady state: one slide, one checkpoint — each appends a delta.
+        let mut delta_total = 0u64;
+        let mut ckpt_ms = 0.0f64;
+        let mut last_artifact = Vec::new();
+        for _ in 0..steady_slides {
+            coord.process_batch(gen.take_records(slide)).unwrap();
+            let before = coord.work_profile().total().checkpoint_bytes;
+            let sw = Stopwatch::start();
+            last_artifact.clear();
+            coord.checkpoint(&mut last_artifact).unwrap();
+            ckpt_ms += sw.elapsed_ms();
+            delta_total += coord.work_profile().total().checkpoint_bytes - before;
+        }
+        let delta_per_slide = delta_total as f64 / steady_slides as f64;
+        let ckpt_ms_mean = ckpt_ms / steady_slides as f64;
+        // Restore from the last artifact and measure the replay cost.
+        let sw = Stopwatch::start();
+        let restored = Coordinator::restore(&last_artifact[..], cfg.clone()).unwrap();
+        let restore_ms = sw.elapsed_ms();
+        let restore_items = restored.work_profile().total().restore_items;
+        println!(
+            "1/{:<6} {:<8} {:>12} {:>18.0} {:>10.3} {:>14} {:>12.3}",
+            ratio, slide, base_bytes, delta_per_slide, ckpt_ms_mean, restore_items, restore_ms
+        );
+        json.record_point(
+            "checkpoint",
+            &[
+                ("ratio", ratio as f64),
+                ("slide", slide as f64),
+                ("base_bytes", base_bytes as f64),
+                ("delta_bytes_per_slide", delta_per_slide),
+                ("ckpt_ms", ckpt_ms_mean),
+                ("restore_items", restore_items as f64),
+                ("restore_ms", restore_ms),
+            ],
+        );
+        if smoke {
+            // The durability invariant: delta checkpoints are bounded by
+            // the state change, not the window.
+            assert!(
+                delta_per_slide * 3.0 < base_bytes as f64,
+                "delta {delta_per_slide:.0} B/slide should be well under base {base_bytes} B"
+            );
+        }
+        smoke_deltas.push((slide, delta_per_slide, base_bytes));
+
+        // Roundtrip fidelity: the restored coordinator continues
+        // byte-identically on the same upcoming batches.
+        let mut live = coord;
+        let mut restored = restored;
+        let mut compared = 0usize;
+        let mut all_identical = true;
+        for _ in 0..3 {
+            let batch: Vec<Record> = gen.take_records(slide);
+            let a = live.process_batch(batch.clone()).unwrap();
+            let r = restored.process_batch(batch).unwrap();
+            all_identical &= reports_identical(&a, &r);
+            compared += 1;
+        }
+        if smoke {
+            assert!(all_identical, "restored run diverged at ratio 1/{ratio}");
+        }
+        json.record_point(
+            "roundtrip",
+            &[
+                ("ratio", ratio as f64),
+                ("slides_compared", compared as f64),
+                ("identical", if all_identical { 1.0 } else { 0.0 }),
+            ],
+        );
+    }
+
+    if smoke {
+        // Delta bytes must track the slide: the smaller slide writes
+        // less, the base does not shrink with it.
+        let (big_slide, big_delta, _) = smoke_deltas[0];
+        let (small_slide, small_delta, small_base) = smoke_deltas[1];
+        assert!(small_slide < big_slide);
+        assert!(
+            small_delta < big_delta,
+            "delta bytes should shrink with the slide: 1/{} -> {small_delta:.0} B \
+             vs 1/{} -> {big_delta:.0} B",
+            16,
+            4
+        );
+        assert!(
+            (small_base as f64) > small_delta * 3.0,
+            "base stays O(window) while deltas track the slide"
+        );
+    }
+
+    json.finish().expect("write bench results");
+}

@@ -18,6 +18,7 @@
 use incapprox::bench_harness::{section, JsonReporter};
 use incapprox::config::system::{ExecModeSpec, SystemConfig};
 use incapprox::coordinator::{Coordinator, WindowReport};
+use incapprox::fault::RecoveryPolicy;
 use incapprox::workload::gen::MultiStream;
 
 const WINDOW: usize = 10_000;
@@ -162,11 +163,61 @@ fn fig_d(json: &mut JsonReporter) {
     println!("min per-stream memoization across phases: {min:.1}% (paper: >97%)");
 }
 
+/// §6.3 companion table: memoization under injected memo loss, per
+/// recovery policy. Injected-fault counts come from the coordinator's
+/// [`WorkProfile`](incapprox::metrics::WorkProfile)
+/// (`SlideWork::fault_injections`) — the counter that finally surfaces
+/// what `FaultInjector::maybe_inject` has been counting privately.
+fn fault_recovery(json: &mut JsonReporter) {
+    section("§6.3: memoization under injected memo loss (20%/window), by recovery policy");
+    println!("policy\tinjected\tmean_reuse%\tcheckpoint_bytes");
+    for (name, policy) in [
+        ("continue", RecoveryPolicy::ContinueWithout),
+        ("lineage", RecoveryPolicy::LineageRecompute),
+        ("replicated", RecoveryPolicy::Replicated),
+        ("checkpoint", RecoveryPolicy::Checkpoint),
+    ] {
+        let mut c = cfg(0.1, WINDOW * 4 / 100);
+        c.fault_memo_loss = 0.2;
+        if policy == RecoveryPolicy::Checkpoint {
+            c.checkpoint_every_slides = 1;
+        }
+        let coordinator = Coordinator::new(c.clone()).with_recovery(policy);
+        let mut session = incapprox::coordinator::Session::new(
+            coordinator,
+            MultiStream::paper_section5(c.seed),
+        )
+        .unwrap();
+        session.warmup().unwrap();
+        let mut reuse = 0.0f64;
+        let windows = 15usize;
+        for _ in 0..windows {
+            reuse += session.step().unwrap().window.item_reuse_fraction();
+        }
+        let totals = session.coordinator().work_profile().total();
+        let injected = totals.fault_injections;
+        // Hard assert (benches build with debug assertions off): the
+        // profile counter must mirror the injector's private count.
+        assert_eq!(injected, session.coordinator().faults_injected());
+        let mean_reuse = reuse / windows as f64 * 100.0;
+        println!("{name}\t{injected}\t{mean_reuse:.1}\t{}", totals.checkpoint_bytes);
+        json.record_point(
+            &format!("fault_recovery_{name}"),
+            &[
+                ("injected", injected as f64),
+                ("mean_reuse_pct", mean_reuse),
+                ("checkpoint_bytes", totals.checkpoint_bytes as f64),
+            ],
+        );
+    }
+}
+
 fn main() {
     let mut json = JsonReporter::for_bench("fig5_memoization");
     fig_a(&mut json);
     fig_b(&mut json);
     fig_c(&mut json);
     fig_d(&mut json);
+    fault_recovery(&mut json);
     json.finish().expect("write bench results");
 }

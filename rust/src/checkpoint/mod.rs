@@ -1,0 +1,1367 @@
+//! Crash-recoverable substrate — checkpoint/restore of the full
+//! incremental state.
+//!
+//! The thesis assumes memoized state is stored fault-tolerantly (§2.3.3
+//! assumption 3, §6.3): without that, a crash throws away the entire
+//! memoized substrate and the next run pays full from-scratch cost —
+//! exactly what incremental computation exists to avoid. This module
+//! makes the substrate durable: a checkpoint captures the sharded
+//! [`MemoStore`](crate::sac::memo::MemoStore) (chunk results keyed by
+//! content hash, per-stratum sample runs, combined moments), the window
+//! buffer (count- or time-based), the
+//! [`Session`](crate::coordinator::Session) query registry, and the
+//! fault-injector RNG — everything a restored coordinator needs to
+//! continue **byte-identically** from the next slide onward. The
+//! persistent sampler is deliberately *not* serialized: its sample is a
+//! pure function of (window contents, seed), so restore rebuilds it from
+//! the restored window and counts that work in
+//! [`SlideWork::restore_items`](crate::metrics::SlideWork).
+//!
+//! ## Artifact format
+//!
+//! A hand-rolled, versioned, checksummed binary stream (the workspace is
+//! offline — no `serde`; see [`wire`] for the primitives):
+//!
+//! ```text
+//! magic "IACK" | version | compat (seed, mode, chunk_size, map_rounds)
+//! segment count | segments… | session section? | checksum
+//! ```
+//!
+//! Segments form an incremental chain:
+//!
+//! * a **Base** segment is a full snapshot — O(state);
+//! * a **Delta** segment holds only the *journal* of substrate
+//!   mutations since the previous segment (slide batches, eviction
+//!   horizons, freshly memoized chunks, resizes) plus a Copy/Insert
+//!   diff of the memoized sample runs — O(state delta).
+//!
+//! The coordinator maintains the chain in memory at the
+//! `pipeline.checkpoint_every_slides` cadence, so steady-state
+//! checkpoint cost tracks the slide delta, never the window
+//! (`SlideWork::checkpoint_bytes` measures it;
+//! `benches/checkpoint_overhead.rs --smoke` asserts it). The chain
+//! re-bases when deltas outgrow the base or after an injected fault.
+//! Restore decodes the base, replays each delta through the real window
+//! and memo implementations, rebuilds the sampler, and verifies the
+//! trailing checksum — corruption or truncation yields
+//! [`Error::Checkpoint`], never a panic or a silently wrong state.
+
+pub(crate) mod wire;
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use crate::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
+use crate::coordinator::query::QuerySpec;
+use crate::error::{Error, Result};
+use crate::fault::RecoveryPolicy;
+use crate::job::aggregate::AggregateKind;
+use crate::job::moments::Moments;
+use crate::sampling::SampleRun;
+use crate::util::hash::FastMap;
+use crate::workload::gen::{MultiStreamSpec, SubstreamSpec, ValueDist};
+use crate::workload::record::{Record, StratumId};
+
+use wire::{CkptReader, CkptWriter};
+
+/// Artifact magic ("IACK" little-endian).
+const MAGIC: u32 = 0x4B43_4149;
+/// Format version. Bump on any wire change; readers reject newer
+/// versions instead of misparsing them.
+const VERSION: u32 = 1;
+
+/// Configuration facts baked into an artifact. Restore demands they
+/// match the target config: a different seed, mode, chunk size, map
+/// weight, or slide would change sampling ranks, chunk boundaries,
+/// memoized values, or the batch pacing itself, silently breaking
+/// byte-identical continuation — better a loud error. (Worker count,
+/// shard strategy, and budgets may differ freely: sharding is
+/// output-neutral and the memo re-places entries by stratum;
+/// `window_size` is carried by the window state itself.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Compat {
+    pub seed: u64,
+    pub mode: ExecModeSpec,
+    pub chunk_size: u64,
+    pub map_rounds: u32,
+    pub slide: u64,
+}
+
+fn mode_tag(mode: ExecModeSpec) -> u8 {
+    match mode {
+        ExecModeSpec::Native => 0,
+        ExecModeSpec::IncrementalOnly => 1,
+        ExecModeSpec::ApproxOnly => 2,
+        ExecModeSpec::IncApprox => 3,
+    }
+}
+
+fn mode_from_tag(tag: u8) -> Result<ExecModeSpec> {
+    Ok(match tag {
+        0 => ExecModeSpec::Native,
+        1 => ExecModeSpec::IncrementalOnly,
+        2 => ExecModeSpec::ApproxOnly,
+        3 => ExecModeSpec::IncApprox,
+        other => return Err(Error::Checkpoint(format!("unknown mode tag {other}"))),
+    })
+}
+
+impl Compat {
+    /// Extract the compat facts from a config.
+    pub fn of(cfg: &SystemConfig) -> Compat {
+        Compat {
+            seed: cfg.seed,
+            mode: cfg.mode,
+            chunk_size: cfg.chunk_size as u64,
+            map_rounds: cfg.map_rounds,
+            slide: cfg.slide as u64,
+        }
+    }
+
+    /// Reject a restore target whose config would diverge from the
+    /// checkpointed run.
+    pub fn check(&self, cfg: &SystemConfig) -> Result<()> {
+        let target = Compat::of(cfg);
+        if *self != target {
+            return Err(Error::Checkpoint(format!(
+                "config mismatch: checkpoint was taken under seed={} mode={} \
+                 chunk_size={} map_rounds={} slide={}, restore target has seed={} \
+                 mode={} chunk_size={} map_rounds={} slide={}",
+                self.seed,
+                self.mode.name(),
+                self.chunk_size,
+                self.map_rounds,
+                self.slide,
+                target.seed,
+                target.mode.name(),
+                target.chunk_size,
+                target.map_rounds,
+                target.slide,
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Durable window state (both kinds; the min-timestamp deque and the
+/// delta anchors are rebuilt by the window's own `restore_parts`).
+#[derive(Debug, Clone)]
+pub(crate) enum WindowCkpt {
+    /// A [`CountWindow`](crate::window::CountWindow).
+    Count { size: u64, next_window_id: u64, buf: Vec<Record>, pending: Vec<Record> },
+    /// A [`TimeWindow`](crate::window::TimeWindow).
+    Time {
+        length: u64,
+        slide: u64,
+        next_end: u64,
+        in_window: u64,
+        next_window_id: u64,
+        buf: Vec<Record>,
+    },
+}
+
+/// One memoized chunk result, with the stratum that owns it (so restore
+/// can re-place it under any shard count).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ChunkEntry {
+    pub stratum: StratumId,
+    pub hash: u64,
+    pub moments: Moments,
+    pub min_ts: u64,
+    pub window_id: u64,
+}
+
+/// One registered query with its stable id.
+#[derive(Debug, Clone)]
+pub(crate) struct QueryEntry {
+    pub raw_id: u64,
+    pub spec: QuerySpec,
+}
+
+/// Small always-current state written into every segment: counters that
+/// drive recompute epochs, the query registry, the recovery policy, and
+/// the fault-injector RNG (so a restored run replays the same fault
+/// schedule *and* handles it the same way).
+#[derive(Debug, Clone)]
+pub(crate) struct Misc {
+    pub windows_processed: u64,
+    pub next_query_id: u64,
+    pub queries: Vec<QueryEntry>,
+    pub recovery: RecoveryPolicy,
+    pub injector_rng: [u64; 4],
+    pub injector_count: u64,
+}
+
+fn policy_tag(p: RecoveryPolicy) -> u8 {
+    match p {
+        RecoveryPolicy::ContinueWithout => 0,
+        RecoveryPolicy::LineageRecompute => 1,
+        RecoveryPolicy::Replicated => 2,
+        RecoveryPolicy::Checkpoint => 3,
+    }
+}
+
+fn policy_from_tag(tag: u8) -> Result<RecoveryPolicy> {
+    Ok(match tag {
+        0 => RecoveryPolicy::ContinueWithout,
+        1 => RecoveryPolicy::LineageRecompute,
+        2 => RecoveryPolicy::Replicated,
+        3 => RecoveryPolicy::Checkpoint,
+        other => return Err(Error::Checkpoint(format!("unknown recovery tag {other}"))),
+    })
+}
+
+/// A full snapshot of the substrate.
+#[derive(Debug, Clone)]
+pub(crate) struct BaseState {
+    pub window: WindowCkpt,
+    pub chunks: Vec<ChunkEntry>,
+    pub items: BTreeMap<StratumId, Vec<Record>>,
+    pub moments: BTreeMap<StratumId, Moments>,
+    pub misc: Misc,
+}
+
+/// One journaled substrate mutation. Deltas replay these through the
+/// *real* window and memo implementations at restore, so the rebuilt
+/// internal state (min-ts deque, pending resize evictions, shard
+/// contents) is exactly what the live run held.
+#[derive(Debug, Clone)]
+pub(crate) enum JournalOp {
+    /// One count-window slide's input batch.
+    Slide { inserted: Vec<Record> },
+    /// One time-window ingest + emit attempt.
+    Tick { records: Vec<Record>, now: u64 },
+    /// A mid-stream window resize.
+    Resize { new_size: u64 },
+    /// Algorithm 1's memo eviction horizon for one window.
+    Evict { horizon: u64 },
+    /// A freshly memoized chunk result.
+    PutChunk {
+        stratum: StratumId,
+        hash: u64,
+        moments: Moments,
+        min_ts: u64,
+        window_id: u64,
+    },
+}
+
+impl JournalOp {
+    /// Record-count cost of the op (journal-size cap accounting).
+    pub fn record_cost(&self) -> usize {
+        match self {
+            JournalOp::Slide { inserted } => inserted.len(),
+            JournalOp::Tick { records, .. } => records.len(),
+            _ => 1,
+        }
+    }
+}
+
+/// One edit op of a sample-run diff: either a contiguous copy out of the
+/// previous run or literally inserted records. Adjacent windows share
+/// most of their runs (the bias keeps a memoized prefix, the sampler
+/// keeps rank order), so steady-state diffs are a few ops + the delta's
+/// records.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum RunOp {
+    /// Copy `prev[start .. start + len]`.
+    Copy { start: u64, len: u64 },
+    /// Append these records.
+    Insert(Vec<Record>),
+}
+
+/// Changes since the previous segment.
+#[derive(Debug, Clone)]
+pub(crate) struct DeltaState {
+    pub ops: Vec<JournalOp>,
+    /// Per current stratum: `(final_len, edit ops vs the previous
+    /// segment's run)`. Strata absent here are dropped.
+    pub items: Vec<(StratumId, u64, Vec<RunOp>)>,
+    pub moments: BTreeMap<StratumId, Moments>,
+    pub misc: Misc,
+}
+
+/// One link of the checkpoint chain.
+#[derive(Debug, Clone)]
+pub(crate) enum Segment {
+    Base(BaseState),
+    Delta(DeltaState),
+}
+
+/// Extra state a [`Session`](crate::coordinator::Session) checkpoint
+/// carries beyond the coordinator: the generator spec (so the restored
+/// stream emits the exact same records), the periodic-checkpoint cadence
+/// position (so post-restore fallback images refresh on the same
+/// schedule), and the broker backlog (produced but not yet consumed
+/// records, replayed into the fresh broker).
+#[derive(Debug, Clone)]
+pub(crate) struct SessionSection {
+    pub source: MultiStreamSpec,
+    pub slides_since_ckpt: u64,
+    pub backlog: Vec<Record>,
+}
+
+/// A decoded artifact: compat facts, the segment chain (still encoded —
+/// decoded lazily segment by segment during restore), and the optional
+/// session section.
+#[derive(Debug, Clone)]
+pub(crate) struct Artifact {
+    pub compat: Compat,
+    pub segments: Vec<Vec<u8>>,
+    pub session: Option<SessionSection>,
+}
+
+// ---------------------------------------------------------------------
+// Run diffing
+// ---------------------------------------------------------------------
+
+#[inline]
+fn records_bit_equal(a: &Record, b: &Record) -> bool {
+    a.id == b.id
+        && a.stratum == b.stratum
+        && a.timestamp == b.timestamp
+        && a.key == b.key
+        && a.value.to_bits() == b.value.to_bits()
+}
+
+/// Diff `cur` against `prev` into Copy/Insert ops. Retained items keep
+/// their relative order across adjacent runs (bias preserves the
+/// memoized prefix; the sampler preserves rank order), so the monotone
+/// single-pass walk below finds long copy ranges; any out-of-order
+/// retained item simply degrades to a literal insert — correctness never
+/// depends on the order assumption.
+pub(crate) fn diff_run(prev: &SampleRun, cur: &SampleRun) -> Vec<RunOp> {
+    let prev_recs = prev.records();
+    if prev_recs.is_empty() {
+        if cur.is_empty() {
+            return Vec::new();
+        }
+        return vec![RunOp::Insert(cur.records().to_vec())];
+    }
+    let pos: FastMap<u64, usize> =
+        prev_recs.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+    let mut ops: Vec<RunOp> = Vec::new();
+    let mut copy: Option<(usize, usize)> = None; // (start, len)
+    let mut pending: Vec<Record> = Vec::new();
+    let mut floor = 0usize; // next prev index eligible for a copy
+    for r in cur.records() {
+        let hit = pos
+            .get(&r.id)
+            .copied()
+            .filter(|&p| p >= floor && records_bit_equal(&prev_recs[p], r));
+        match hit {
+            Some(p) => {
+                if !pending.is_empty() {
+                    ops.push(RunOp::Insert(std::mem::take(&mut pending)));
+                }
+                copy = match copy {
+                    Some((s, l)) if s + l == p => Some((s, l + 1)),
+                    Some((s, l)) => {
+                        ops.push(RunOp::Copy { start: s as u64, len: l as u64 });
+                        Some((p, 1))
+                    }
+                    None => Some((p, 1)),
+                };
+                floor = p + 1;
+            }
+            None => {
+                if let Some((s, l)) = copy.take() {
+                    ops.push(RunOp::Copy { start: s as u64, len: l as u64 });
+                }
+                pending.push(*r);
+            }
+        }
+    }
+    if let Some((s, l)) = copy {
+        ops.push(RunOp::Copy { start: s as u64, len: l as u64 });
+    }
+    if !pending.is_empty() {
+        ops.push(RunOp::Insert(pending));
+    }
+    ops
+}
+
+/// Rebuild a run from `prev` and its diff ops. Bounds and the expected
+/// final length are verified — a corrupted delta errors out instead of
+/// producing a silently wrong sample.
+pub(crate) fn apply_run_ops(
+    prev: &SampleRun,
+    ops: &[RunOp],
+    expect_len: usize,
+) -> Result<Vec<Record>> {
+    let prev_recs = prev.records();
+    let mut out: Vec<Record> = Vec::with_capacity(expect_len);
+    for op in ops {
+        match op {
+            RunOp::Copy { start, len } => {
+                let s = *start as usize;
+                let e = s
+                    .checked_add(*len as usize)
+                    .filter(|&e| e <= prev_recs.len())
+                    .ok_or_else(|| {
+                        Error::Checkpoint(format!(
+                            "run diff copy out of bounds ({start}+{len} > {})",
+                            prev_recs.len()
+                        ))
+                    })?;
+                out.extend_from_slice(&prev_recs[s..e]);
+            }
+            RunOp::Insert(rs) => out.extend_from_slice(rs),
+        }
+    }
+    if out.len() != expect_len {
+        return Err(Error::Checkpoint(format!(
+            "run diff rebuilt {} records, expected {expect_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Segment encoding
+// ---------------------------------------------------------------------
+
+fn put_moments<W: Write>(w: &mut CkptWriter<W>, m: &Moments) -> Result<()> {
+    w.f64(m.count)?;
+    w.f64(m.sum)?;
+    w.f64(m.sumsq)?;
+    w.f64(m.min)?;
+    w.f64(m.max)
+}
+
+fn get_moments<R: Read>(r: &mut CkptReader<R>) -> Result<Moments> {
+    Ok(Moments {
+        count: r.f64()?,
+        sum: r.f64()?,
+        sumsq: r.f64()?,
+        min: r.f64()?,
+        max: r.f64()?,
+    })
+}
+
+fn put_budget<W: Write>(w: &mut CkptWriter<W>, b: &BudgetSpec) -> Result<()> {
+    match b {
+        BudgetSpec::Fraction(f) => {
+            w.u8(0)?;
+            w.f64(*f)?;
+            w.f64(0.0)
+        }
+        BudgetSpec::Tokens { per_window, cost_per_item } => {
+            w.u8(1)?;
+            w.f64(*per_window)?;
+            w.f64(*cost_per_item)
+        }
+        BudgetSpec::LatencyMs(ms) => {
+            w.u8(2)?;
+            w.f64(*ms)?;
+            w.f64(0.0)
+        }
+    }
+}
+
+fn get_budget<R: Read>(r: &mut CkptReader<R>) -> Result<BudgetSpec> {
+    let tag = r.u8()?;
+    let a = r.f64()?;
+    let b = r.f64()?;
+    Ok(match tag {
+        0 => BudgetSpec::Fraction(a),
+        1 => BudgetSpec::Tokens { per_window: a, cost_per_item: b },
+        2 => BudgetSpec::LatencyMs(a),
+        other => return Err(Error::Checkpoint(format!("unknown budget tag {other}"))),
+    })
+}
+
+fn put_misc<W: Write>(w: &mut CkptWriter<W>, m: &Misc) -> Result<()> {
+    w.u64(m.windows_processed)?;
+    w.u64(m.next_query_id)?;
+    w.u64(m.queries.len() as u64)?;
+    for q in &m.queries {
+        w.u64(q.raw_id)?;
+        let kind = AggregateKind::ALL
+            .iter()
+            .position(|k| *k == q.spec.kind)
+            .expect("every kind is in ALL");
+        w.u8(kind as u8)?;
+        match q.spec.stratum {
+            Some(s) => {
+                w.u8(1)?;
+                w.u32(s)?;
+            }
+            None => {
+                w.u8(0)?;
+                w.u32(0)?;
+            }
+        }
+        w.f64(q.spec.confidence)?;
+        put_budget(w, &q.spec.budget)?;
+        match q.spec.map_rounds {
+            Some(rounds) => {
+                w.u8(1)?;
+                w.u32(rounds)?;
+            }
+            None => {
+                w.u8(0)?;
+                w.u32(0)?;
+            }
+        }
+    }
+    w.u8(policy_tag(m.recovery))?;
+    for s in m.injector_rng {
+        w.u64(s)?;
+    }
+    w.u64(m.injector_count)
+}
+
+fn get_misc<R: Read>(r: &mut CkptReader<R>) -> Result<Misc> {
+    let windows_processed = r.u64()?;
+    let next_query_id = r.u64()?;
+    let n = r.len()?;
+    let mut queries = Vec::with_capacity(n.min(1 << 12));
+    for _ in 0..n {
+        let raw_id = r.u64()?;
+        let kind_idx = r.u8()? as usize;
+        let kind = *AggregateKind::ALL.get(kind_idx).ok_or_else(|| {
+            Error::Checkpoint(format!("unknown aggregate kind tag {kind_idx}"))
+        })?;
+        let has_stratum = r.u8()? != 0;
+        let stratum_raw = r.u32()?;
+        let confidence = r.f64()?;
+        let budget = get_budget(r)?;
+        let has_rounds = r.u8()? != 0;
+        let rounds_raw = r.u32()?;
+        queries.push(QueryEntry {
+            raw_id,
+            spec: QuerySpec {
+                kind,
+                stratum: has_stratum.then_some(stratum_raw),
+                confidence,
+                budget,
+                map_rounds: has_rounds.then_some(rounds_raw),
+            },
+        });
+    }
+    let recovery = policy_from_tag(r.u8()?)?;
+    let mut injector_rng = [0u64; 4];
+    for s in &mut injector_rng {
+        *s = r.u64()?;
+    }
+    let injector_count = r.u64()?;
+    Ok(Misc {
+        windows_processed,
+        next_query_id,
+        queries,
+        recovery,
+        injector_rng,
+        injector_count,
+    })
+}
+
+fn put_window<W: Write>(w: &mut CkptWriter<W>, win: &WindowCkpt) -> Result<()> {
+    match win {
+        WindowCkpt::Count { size, next_window_id, buf, pending } => {
+            w.u8(0)?;
+            w.u64(*size)?;
+            w.u64(*next_window_id)?;
+            w.records(buf)?;
+            w.records(pending)
+        }
+        WindowCkpt::Time { length, slide, next_end, in_window, next_window_id, buf } => {
+            w.u8(1)?;
+            w.u64(*length)?;
+            w.u64(*slide)?;
+            w.u64(*next_end)?;
+            w.u64(*in_window)?;
+            w.u64(*next_window_id)?;
+            w.records(buf)
+        }
+    }
+}
+
+fn get_window<R: Read>(r: &mut CkptReader<R>) -> Result<WindowCkpt> {
+    match r.u8()? {
+        0 => Ok(WindowCkpt::Count {
+            size: r.u64()?,
+            next_window_id: r.u64()?,
+            buf: r.records()?,
+            pending: r.records()?,
+        }),
+        1 => Ok(WindowCkpt::Time {
+            length: r.u64()?,
+            slide: r.u64()?,
+            next_end: r.u64()?,
+            in_window: r.u64()?,
+            next_window_id: r.u64()?,
+            buf: r.records()?,
+        }),
+        other => Err(Error::Checkpoint(format!("unknown window tag {other}"))),
+    }
+}
+
+fn put_chunk_entry<W: Write>(w: &mut CkptWriter<W>, c: &ChunkEntry) -> Result<()> {
+    w.u32(c.stratum)?;
+    w.u64(c.hash)?;
+    put_moments(w, &c.moments)?;
+    w.u64(c.min_ts)?;
+    w.u64(c.window_id)
+}
+
+fn get_chunk_entry<R: Read>(r: &mut CkptReader<R>) -> Result<ChunkEntry> {
+    Ok(ChunkEntry {
+        stratum: r.u32()?,
+        hash: r.u64()?,
+        moments: get_moments(r)?,
+        min_ts: r.u64()?,
+        window_id: r.u64()?,
+    })
+}
+
+fn put_stratum_moments<W: Write>(
+    w: &mut CkptWriter<W>,
+    m: &BTreeMap<StratumId, Moments>,
+) -> Result<()> {
+    w.u64(m.len() as u64)?;
+    for (&s, mo) in m {
+        w.u32(s)?;
+        put_moments(w, mo)?;
+    }
+    Ok(())
+}
+
+fn get_stratum_moments<R: Read>(
+    r: &mut CkptReader<R>,
+) -> Result<BTreeMap<StratumId, Moments>> {
+    let n = r.len()?;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let s = r.u32()?;
+        out.insert(s, get_moments(r)?);
+    }
+    Ok(out)
+}
+
+fn put_journal_op<W: Write>(w: &mut CkptWriter<W>, op: &JournalOp) -> Result<()> {
+    match op {
+        JournalOp::Slide { inserted } => {
+            w.u8(0)?;
+            w.records(inserted)
+        }
+        JournalOp::Tick { records, now } => {
+            w.u8(1)?;
+            w.u64(*now)?;
+            w.records(records)
+        }
+        JournalOp::Resize { new_size } => {
+            w.u8(2)?;
+            w.u64(*new_size)
+        }
+        JournalOp::Evict { horizon } => {
+            w.u8(3)?;
+            w.u64(*horizon)
+        }
+        JournalOp::PutChunk { stratum, hash, moments, min_ts, window_id } => {
+            w.u8(4)?;
+            put_chunk_entry(
+                w,
+                &ChunkEntry {
+                    stratum: *stratum,
+                    hash: *hash,
+                    moments: *moments,
+                    min_ts: *min_ts,
+                    window_id: *window_id,
+                },
+            )
+        }
+    }
+}
+
+fn get_journal_op<R: Read>(r: &mut CkptReader<R>) -> Result<JournalOp> {
+    Ok(match r.u8()? {
+        0 => JournalOp::Slide { inserted: r.records()? },
+        1 => {
+            let now = r.u64()?;
+            JournalOp::Tick { records: r.records()?, now }
+        }
+        2 => JournalOp::Resize { new_size: r.u64()? },
+        3 => JournalOp::Evict { horizon: r.u64()? },
+        4 => {
+            let c = get_chunk_entry(r)?;
+            JournalOp::PutChunk {
+                stratum: c.stratum,
+                hash: c.hash,
+                moments: c.moments,
+                min_ts: c.min_ts,
+                window_id: c.window_id,
+            }
+        }
+        other => return Err(Error::Checkpoint(format!("unknown journal op tag {other}"))),
+    })
+}
+
+/// Encode one segment into a standalone blob (the outer artifact
+/// checksum covers it; segments carry no checksum of their own).
+pub(crate) fn encode_segment(seg: &Segment) -> Vec<u8> {
+    let mut buf = Vec::new();
+    {
+        let mut w = CkptWriter::new(&mut buf);
+        let encode = |w: &mut CkptWriter<&mut Vec<u8>>| -> Result<()> {
+            match seg {
+                Segment::Base(b) => {
+                    w.u8(0)?;
+                    put_window(w, &b.window)?;
+                    w.u64(b.chunks.len() as u64)?;
+                    for c in &b.chunks {
+                        put_chunk_entry(w, c)?;
+                    }
+                    w.u64(b.items.len() as u64)?;
+                    for (&s, recs) in &b.items {
+                        w.u32(s)?;
+                        w.records(recs)?;
+                    }
+                    put_stratum_moments(w, &b.moments)?;
+                    put_misc(w, &b.misc)
+                }
+                Segment::Delta(d) => {
+                    w.u8(1)?;
+                    w.u64(d.ops.len() as u64)?;
+                    for op in &d.ops {
+                        put_journal_op(w, op)?;
+                    }
+                    w.u64(d.items.len() as u64)?;
+                    for (s, final_len, ops) in &d.items {
+                        w.u32(*s)?;
+                        w.u64(*final_len)?;
+                        w.u64(ops.len() as u64)?;
+                        for op in ops {
+                            match op {
+                                RunOp::Copy { start, len } => {
+                                    w.u8(0)?;
+                                    w.u64(*start)?;
+                                    w.u64(*len)?;
+                                }
+                                RunOp::Insert(rs) => {
+                                    w.u8(1)?;
+                                    w.records(rs)?;
+                                }
+                            }
+                        }
+                    }
+                    put_stratum_moments(w, &d.moments)?;
+                    put_misc(w, &d.misc)
+                }
+            }
+        };
+        encode(&mut w).expect("Vec sink cannot fail");
+    }
+    buf
+}
+
+/// Decode one segment blob.
+pub(crate) fn decode_segment(bytes: &[u8]) -> Result<Segment> {
+    let mut r = CkptReader::new(bytes);
+    match r.u8()? {
+        0 => {
+            let window = get_window(&mut r)?;
+            let n_chunks = r.len()?;
+            let mut chunks = Vec::with_capacity(n_chunks.min(1 << 16));
+            for _ in 0..n_chunks {
+                chunks.push(get_chunk_entry(&mut r)?);
+            }
+            let n_items = r.len()?;
+            let mut items = BTreeMap::new();
+            for _ in 0..n_items {
+                let s = r.u32()?;
+                items.insert(s, r.records()?);
+            }
+            let moments = get_stratum_moments(&mut r)?;
+            let misc = get_misc(&mut r)?;
+            Ok(Segment::Base(BaseState { window, chunks, items, moments, misc }))
+        }
+        1 => {
+            let n_ops = r.len()?;
+            let mut ops = Vec::with_capacity(n_ops.min(1 << 16));
+            for _ in 0..n_ops {
+                ops.push(get_journal_op(&mut r)?);
+            }
+            let n_items = r.len()?;
+            let mut items = Vec::with_capacity(n_items.min(1 << 12));
+            for _ in 0..n_items {
+                let s = r.u32()?;
+                let final_len = r.u64()?;
+                let n_run_ops = r.len()?;
+                let mut run_ops = Vec::with_capacity(n_run_ops.min(1 << 12));
+                for _ in 0..n_run_ops {
+                    run_ops.push(match r.u8()? {
+                        0 => RunOp::Copy { start: r.u64()?, len: r.u64()? },
+                        1 => RunOp::Insert(r.records()?),
+                        other => {
+                            return Err(Error::Checkpoint(format!(
+                                "unknown run op tag {other}"
+                            )))
+                        }
+                    });
+                }
+                items.push((s, final_len, run_ops));
+            }
+            let moments = get_stratum_moments(&mut r)?;
+            let misc = get_misc(&mut r)?;
+            Ok(Segment::Delta(DeltaState { ops, items, moments, misc }))
+        }
+        other => Err(Error::Checkpoint(format!("unknown segment tag {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Artifact framing
+// ---------------------------------------------------------------------
+
+fn put_dist<W: Write>(w: &mut CkptWriter<W>, d: &ValueDist) -> Result<()> {
+    match d {
+        ValueDist::Constant(v) => {
+            w.u8(0)?;
+            w.f64(*v)?;
+            w.f64(0.0)
+        }
+        ValueDist::Uniform(lo, hi) => {
+            w.u8(1)?;
+            w.f64(*lo)?;
+            w.f64(*hi)
+        }
+        ValueDist::Normal(m, s) => {
+            w.u8(2)?;
+            w.f64(*m)?;
+            w.f64(*s)
+        }
+        ValueDist::LogNormal(mu, sigma) => {
+            w.u8(3)?;
+            w.f64(*mu)?;
+            w.f64(*sigma)
+        }
+    }
+}
+
+fn get_dist<R: Read>(r: &mut CkptReader<R>) -> Result<ValueDist> {
+    let tag = r.u8()?;
+    let a = r.f64()?;
+    let b = r.f64()?;
+    Ok(match tag {
+        0 => ValueDist::Constant(a),
+        1 => ValueDist::Uniform(a, b),
+        2 => ValueDist::Normal(a, b),
+        3 => ValueDist::LogNormal(a, b),
+        other => return Err(Error::Checkpoint(format!("unknown dist tag {other}"))),
+    })
+}
+
+fn put_session<W: Write>(w: &mut CkptWriter<W>, s: &SessionSection) -> Result<()> {
+    w.u64(s.source.subs.len() as u64)?;
+    for sub in &s.source.subs {
+        match sub {
+            SubstreamSpec::Poisson { stratum, rate, dist, rng } => {
+                w.u8(0)?;
+                w.u32(*stratum)?;
+                put_dist(w, dist)?;
+                for v in rng {
+                    w.u64(*v)?;
+                }
+                w.f64(*rate)?;
+            }
+            SubstreamSpec::Fluctuating { stratum, schedule, dist, rng } => {
+                w.u8(1)?;
+                w.u32(*stratum)?;
+                put_dist(w, dist)?;
+                for v in rng {
+                    w.u64(*v)?;
+                }
+                w.u64(schedule.len() as u64)?;
+                for (start, rate) in schedule {
+                    w.u64(*start)?;
+                    w.f64(*rate)?;
+                }
+            }
+        }
+    }
+    w.u64(s.source.next_id)?;
+    w.u64(s.source.now)?;
+    w.u64(s.slides_since_ckpt)?;
+    w.records(&s.backlog)
+}
+
+fn get_session<R: Read>(r: &mut CkptReader<R>) -> Result<SessionSection> {
+    let n = r.len()?;
+    let mut subs = Vec::with_capacity(n.min(1 << 10));
+    for _ in 0..n {
+        let tag = r.u8()?;
+        let stratum = r.u32()?;
+        let dist = get_dist(r)?;
+        let mut rng = [0u64; 4];
+        for v in &mut rng {
+            *v = r.u64()?;
+        }
+        subs.push(match tag {
+            0 => SubstreamSpec::Poisson { stratum, rate: r.f64()?, dist, rng },
+            1 => {
+                let n_sched = r.len()?;
+                let mut schedule = Vec::with_capacity(n_sched.min(1 << 10));
+                for _ in 0..n_sched {
+                    let start = r.u64()?;
+                    schedule.push((start, r.f64()?));
+                }
+                SubstreamSpec::Fluctuating { stratum, schedule, dist, rng }
+            }
+            other => {
+                return Err(Error::Checkpoint(format!("unknown sub-stream tag {other}")))
+            }
+        });
+    }
+    let next_id = r.u64()?;
+    let now = r.u64()?;
+    let slides_since_ckpt = r.u64()?;
+    let backlog = r.records()?;
+    Ok(SessionSection {
+        source: MultiStreamSpec { subs, next_id, now },
+        slides_since_ckpt,
+        backlog,
+    })
+}
+
+impl Artifact {
+    /// Write the full artifact (header, segments, optional session
+    /// section, trailing checksum). Returns bytes written.
+    pub fn write<W: Write>(&self, sink: &mut W) -> Result<u64> {
+        let mut w = CkptWriter::new(sink);
+        w.u32(MAGIC)?;
+        w.u32(VERSION)?;
+        w.u64(self.compat.seed)?;
+        w.u8(mode_tag(self.compat.mode))?;
+        w.u64(self.compat.chunk_size)?;
+        w.u32(self.compat.map_rounds)?;
+        w.u64(self.compat.slide)?;
+        w.u32(self.segments.len() as u32)?;
+        for seg in &self.segments {
+            w.bytes(seg)?;
+        }
+        match &self.session {
+            Some(s) => {
+                w.u8(1)?;
+                put_session(&mut w, s)?;
+            }
+            None => w.u8(0)?,
+        }
+        w.finish()
+    }
+
+    /// Read and checksum-verify an artifact. Every malformation —
+    /// truncation, bit flips, a future version — is an
+    /// [`Error::Checkpoint`].
+    pub fn read<R: Read>(source: R) -> Result<Artifact> {
+        let mut r = CkptReader::new(source);
+        let magic = r.u32()?;
+        if magic != MAGIC {
+            return Err(Error::Checkpoint(format!(
+                "bad magic {magic:#010x} — not an IncApprox checkpoint"
+            )));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(Error::Checkpoint(format!(
+                "unsupported checkpoint version {version} (this build reads {VERSION})"
+            )));
+        }
+        let seed = r.u64()?;
+        let mode = mode_from_tag(r.u8()?)?;
+        let chunk_size = r.u64()?;
+        let map_rounds = r.u32()?;
+        let slide = r.u64()?;
+        let n_segments = r.u32()? as usize;
+        if n_segments > 1 << 20 {
+            return Err(Error::Checkpoint(format!(
+                "implausible segment count {n_segments} (corrupted?)"
+            )));
+        }
+        let mut segments = Vec::with_capacity(n_segments.min(1 << 10));
+        for _ in 0..n_segments {
+            segments.push(r.bytes()?);
+        }
+        let session = match r.u8()? {
+            0 => None,
+            1 => Some(get_session(&mut r)?),
+            other => {
+                return Err(Error::Checkpoint(format!("unknown session flag {other}")))
+            }
+        };
+        r.verify_checksum()?;
+        if segments.is_empty() {
+            return Err(Error::Checkpoint("artifact holds no segments".into()));
+        }
+        Ok(Artifact {
+            compat: Compat { seed, mode, chunk_size, map_rounds, slide },
+            segments,
+            session,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// The coordinator-side chain tracker
+// ---------------------------------------------------------------------
+
+/// Cap on journaled records between checkpoints. A coordinator that was
+/// armed but never checkpointed again would otherwise grow its journal
+/// without bound; past the cap the tracker drops the journal and forces
+/// the next checkpoint to re-base.
+const JOURNAL_RECORD_CAP: usize = 1 << 20;
+
+/// In-memory incremental checkpoint chain, owned by the coordinator once
+/// checkpointing is armed (first checkpoint call or the periodic knob).
+#[derive(Debug, Default)]
+pub(crate) struct CkptTracker {
+    /// Encoded segments: one base, then deltas.
+    pub segments: Vec<Vec<u8>>,
+    /// Size of the base segment.
+    pub base_bytes: u64,
+    /// Total size of the delta segments.
+    pub delta_bytes: u64,
+    /// Substrate mutations since the last segment.
+    pub journal: Vec<JournalOp>,
+    /// Record-count cost of the journal (cap accounting).
+    pub journal_cost: usize,
+    /// Memoized sample runs as of the last segment (diff anchors).
+    pub prev_items: BTreeMap<StratumId, SampleRun>,
+    /// Force a re-base at the next checkpoint (set after faults or a
+    /// journal overflow — any history the journal can no longer
+    /// represent faithfully).
+    pub force_base: bool,
+    /// Memo image as of the last segment — what
+    /// [`RecoveryPolicy::Checkpoint`](crate::fault::RecoveryPolicy)
+    /// falls back to on injected memo loss.
+    pub memo_image: Option<crate::sac::memo::MemoSnapshot>,
+}
+
+impl CkptTracker {
+    /// Append a journal op, enforcing the record cap.
+    pub fn push(&mut self, op: JournalOp) {
+        if self.force_base {
+            return; // journal is already invalid; the next segment re-bases
+        }
+        self.journal_cost += op.record_cost();
+        if self.journal_cost > JOURNAL_RECORD_CAP {
+            self.invalidate();
+            return;
+        }
+        self.journal.push(op);
+    }
+
+    /// Drop the journal and force the next checkpoint to re-base.
+    pub fn invalidate(&mut self) {
+        self.force_base = true;
+        self.journal.clear();
+        self.journal_cost = 0;
+    }
+
+    /// Should the next segment be a base? (First segment, invalidated
+    /// history, or deltas have outgrown the base — the classic
+    /// incremental-checkpoint compaction rule.)
+    pub fn wants_base(&self) -> bool {
+        self.segments.is_empty() || self.force_base || self.delta_bytes > self.base_bytes
+    }
+
+    /// Install a freshly encoded base segment, dropping older history.
+    pub fn install_base(&mut self, seg: Vec<u8>) -> u64 {
+        let n = seg.len() as u64;
+        self.base_bytes = n;
+        self.delta_bytes = 0;
+        self.segments.clear();
+        self.segments.push(seg);
+        self.after_segment();
+        n
+    }
+
+    /// Append a freshly encoded delta segment.
+    pub fn install_delta(&mut self, seg: Vec<u8>) -> u64 {
+        let n = seg.len() as u64;
+        self.delta_bytes += n;
+        self.segments.push(seg);
+        self.after_segment();
+        n
+    }
+
+    fn after_segment(&mut self) {
+        self.journal.clear();
+        self.journal_cost = 0;
+        self.force_base = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, ts: u64) -> Record {
+        Record::new(id, (id % 3) as u32, ts, id % 7, id as f64 * 0.5)
+    }
+
+    fn run_of(ids: &[u64]) -> SampleRun {
+        SampleRun::from_vec(ids.iter().map(|&i| rec(i, i)).collect())
+    }
+
+    fn rebuilt(prev: &SampleRun, cur: &SampleRun) -> Vec<Record> {
+        let ops = diff_run(prev, cur);
+        apply_run_ops(prev, &ops, cur.len()).unwrap()
+    }
+
+    #[test]
+    fn diff_roundtrips_and_compresses_shared_runs() {
+        let prev = run_of(&(0..500).collect::<Vec<_>>());
+        // Slide-like edit: drop a prefix, keep the middle, append fresh.
+        let cur = run_of(&(40..560).collect::<Vec<_>>());
+        let ops = diff_run(&prev, &cur);
+        assert_eq!(apply_run_ops(&prev, &ops, cur.len()).unwrap(), cur.records());
+        // One long copy + one insert — not hundreds of literals.
+        assert!(ops.len() <= 3, "diff should compress: {} ops", ops.len());
+        let inserted: usize = ops
+            .iter()
+            .map(|o| match o {
+                RunOp::Insert(rs) => rs.len(),
+                RunOp::Copy { .. } => 0,
+            })
+            .sum();
+        assert_eq!(inserted, 60, "only the fresh suffix is literal");
+    }
+
+    #[test]
+    fn diff_handles_disorder_empties_and_identity() {
+        let prev = run_of(&[1, 2, 3, 4, 5]);
+        // Reordered retained items degrade to inserts but stay correct.
+        let cur = run_of(&[5, 1, 9, 2]);
+        assert_eq!(rebuilt(&prev, &cur), cur.records());
+        // Identity: a single whole-run copy.
+        let ops = diff_run(&prev, &prev.clone());
+        assert_eq!(ops, vec![RunOp::Copy { start: 0, len: 5 }]);
+        // Empty prev / empty cur.
+        assert_eq!(rebuilt(&SampleRun::default(), &cur), cur.records());
+        assert!(diff_run(&prev, &SampleRun::default()).is_empty());
+        assert!(diff_run(&SampleRun::default(), &SampleRun::default()).is_empty());
+    }
+
+    #[test]
+    fn diff_detects_value_mutation() {
+        // Same id, different value bits: must not be copied as shared.
+        let prev = run_of(&[1, 2, 3]);
+        let mut records = prev.records().to_vec();
+        records[1].value += 1.0;
+        let cur = SampleRun::from_vec(records);
+        assert_eq!(rebuilt(&prev, &cur), cur.records());
+        let ops = diff_run(&prev, &cur);
+        assert!(
+            ops.iter().any(|o| matches!(o, RunOp::Insert(_))),
+            "mutated record must be inserted literally"
+        );
+    }
+
+    #[test]
+    fn apply_rejects_corrupted_ops() {
+        let prev = run_of(&[1, 2, 3]);
+        let oob = [RunOp::Copy { start: 2, len: 5 }];
+        assert!(apply_run_ops(&prev, &oob, 5).is_err());
+        let overflow = [RunOp::Copy { start: u64::MAX, len: 2 }];
+        assert!(apply_run_ops(&prev, &overflow, 2).is_err());
+        let short = [RunOp::Copy { start: 0, len: 2 }];
+        assert!(apply_run_ops(&prev, &short, 3).is_err(), "length mismatch must error");
+    }
+
+    #[test]
+    fn segment_roundtrip_base_and_delta() {
+        let misc = Misc {
+            windows_processed: 7,
+            next_query_id: 3,
+            queries: vec![QueryEntry {
+                raw_id: 2,
+                spec: QuerySpec {
+                    kind: AggregateKind::Mean,
+                    stratum: Some(1),
+                    confidence: 0.99,
+                    budget: BudgetSpec::Tokens { per_window: 100.0, cost_per_item: 2.0 },
+                    map_rounds: Some(0),
+                },
+            }],
+            recovery: RecoveryPolicy::Checkpoint,
+            injector_rng: [1, 2, 3, 4],
+            injector_count: 5,
+        };
+        let base = Segment::Base(BaseState {
+            window: WindowCkpt::Count {
+                size: 10,
+                next_window_id: 4,
+                buf: vec![rec(1, 1), rec(2, 2)],
+                pending: vec![rec(9, 0)],
+            },
+            chunks: vec![ChunkEntry {
+                stratum: 2,
+                hash: 0xABCD,
+                moments: Moments::from_values(&[1.0, 2.0]),
+                min_ts: 1,
+                window_id: 3,
+            }],
+            items: BTreeMap::from([(0u32, vec![rec(1, 1)])]),
+            moments: BTreeMap::from([(0u32, Moments::from_values(&[3.0]))]),
+            misc: misc.clone(),
+        });
+        let bytes = encode_segment(&base);
+        match decode_segment(&bytes).unwrap() {
+            Segment::Base(b) => {
+                assert!(matches!(b.window, WindowCkpt::Count { size: 10, .. }));
+                assert_eq!(b.chunks.len(), 1);
+                assert_eq!(b.chunks[0].hash, 0xABCD);
+                assert_eq!(b.chunks[0].stratum, 2);
+                assert_eq!(b.items[&0].len(), 1);
+                assert_eq!(b.misc.windows_processed, 7);
+                assert_eq!(b.misc.queries[0].spec.confidence, 0.99);
+                assert_eq!(b.misc.recovery, RecoveryPolicy::Checkpoint);
+                assert_eq!(b.misc.injector_rng, [1, 2, 3, 4]);
+            }
+            Segment::Delta(_) => panic!("expected base"),
+        }
+
+        let delta = Segment::Delta(DeltaState {
+            ops: vec![
+                JournalOp::Slide { inserted: vec![rec(5, 5)] },
+                JournalOp::Tick { records: vec![rec(6, 6)], now: 9 },
+                JournalOp::Resize { new_size: 20 },
+                JournalOp::Evict { horizon: 4 },
+                JournalOp::PutChunk {
+                    stratum: 1,
+                    hash: 0xFEED,
+                    moments: Moments::EMPTY,
+                    min_ts: 5,
+                    window_id: 8,
+                },
+            ],
+            items: vec![(
+                1u32,
+                3,
+                vec![RunOp::Copy { start: 0, len: 2 }, RunOp::Insert(vec![rec(7, 7)])],
+            )],
+            moments: BTreeMap::new(),
+            misc,
+        });
+        let bytes = encode_segment(&delta);
+        match decode_segment(&bytes).unwrap() {
+            Segment::Delta(d) => {
+                assert_eq!(d.ops.len(), 5);
+                assert!(matches!(d.ops[2], JournalOp::Resize { new_size: 20 }));
+                assert_eq!(d.items.len(), 1);
+                assert_eq!(d.items[0].1, 3);
+                assert_eq!(d.items[0].2.len(), 2);
+            }
+            Segment::Base(_) => panic!("expected delta"),
+        }
+        // Garbage does not decode.
+        assert!(decode_segment(&[0xFF, 0x00]).is_err());
+        assert!(decode_segment(&[]).is_err());
+    }
+
+    #[test]
+    fn artifact_roundtrip_with_session_section() {
+        let seg = encode_segment(&Segment::Delta(DeltaState {
+            ops: vec![],
+            items: vec![],
+            moments: BTreeMap::new(),
+            misc: Misc {
+                windows_processed: 0,
+                next_query_id: 0,
+                queries: vec![],
+                recovery: RecoveryPolicy::LineageRecompute,
+                injector_rng: [0; 4],
+                injector_count: 0,
+            },
+        }));
+        let art = Artifact {
+            compat: Compat {
+                seed: 42,
+                mode: ExecModeSpec::IncApprox,
+                chunk_size: 64,
+                map_rounds: 0,
+                slide: 400,
+            },
+            segments: vec![seg.clone(), seg],
+            session: Some(SessionSection {
+                source: MultiStreamSpec {
+                    subs: vec![
+                        SubstreamSpec::Poisson {
+                            stratum: 0,
+                            rate: 3.0,
+                            dist: ValueDist::Normal(10.0, 2.0),
+                            rng: [9, 8, 7, 6],
+                        },
+                        SubstreamSpec::Fluctuating {
+                            stratum: 1,
+                            schedule: vec![(0, 1.0), (100, 2.5)],
+                            dist: ValueDist::LogNormal(1.0, 0.5),
+                            rng: [5, 4, 3, 2],
+                        },
+                    ],
+                    next_id: 1234,
+                    now: 99,
+                },
+                slides_since_ckpt: 1,
+                backlog: vec![rec(10, 10), rec(11, 11)],
+            }),
+        };
+        let mut buf = Vec::new();
+        let written = art.write(&mut buf).unwrap();
+        assert_eq!(written as usize, buf.len());
+
+        let back = Artifact::read(&buf[..]).unwrap();
+        assert_eq!(back.compat, art.compat);
+        assert_eq!(back.segments.len(), 2);
+        let sect = back.session.expect("session section");
+        assert_eq!(sect.source.subs.len(), 2);
+        assert_eq!(sect.source.next_id, 1234);
+        assert_eq!(sect.source.now, 99);
+        assert_eq!(sect.slides_since_ckpt, 1);
+        assert_eq!(sect.backlog.len(), 2);
+        match &sect.source.subs[1] {
+            SubstreamSpec::Fluctuating { schedule, rng, .. } => {
+                assert_eq!(schedule, &vec![(0, 1.0), (100, 2.5)]);
+                assert_eq!(rng, &[5, 4, 3, 2]);
+            }
+            other => panic!("wrong sub spec: {other:?}"),
+        }
+
+        // Corruption in a segment blob is caught by the outer checksum.
+        let mut bad = buf.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(matches!(Artifact::read(&bad[..]), Err(Error::Checkpoint(_))));
+        // Truncation too.
+        assert!(matches!(Artifact::read(&buf[..buf.len() - 3]), Err(Error::Checkpoint(_))));
+        // Wrong magic.
+        let mut wrong = buf.clone();
+        wrong[0] ^= 0xFF;
+        assert!(matches!(Artifact::read(&wrong[..]), Err(Error::Checkpoint(_))));
+    }
+
+    #[test]
+    fn tracker_rebases_on_invalidation_and_growth() {
+        let mut t = CkptTracker::default();
+        assert!(t.wants_base(), "empty chain must start with a base");
+        t.install_base(vec![0; 100]);
+        assert!(!t.wants_base());
+        t.push(JournalOp::Evict { horizon: 1 });
+        assert_eq!(t.journal.len(), 1);
+        t.install_delta(vec![0; 60]);
+        assert!(t.journal.is_empty(), "segment install drains the journal");
+        assert!(!t.wants_base());
+        t.install_delta(vec![0; 60]);
+        assert!(t.wants_base(), "deltas outgrew the base: compact");
+        // Fault-style invalidation drops the journal and forces a base.
+        let mut t = CkptTracker::default();
+        t.install_base(vec![0; 100]);
+        t.push(JournalOp::Evict { horizon: 1 });
+        t.invalidate();
+        assert!(t.journal.is_empty());
+        assert!(t.wants_base());
+        t.push(JournalOp::Evict { horizon: 2 });
+        assert!(t.journal.is_empty(), "invalidated tracker ignores ops until re-based");
+    }
+}

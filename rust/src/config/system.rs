@@ -153,6 +153,15 @@ pub struct SystemConfig {
     /// Catch-up batch size, in slides, drained per pipeline step while
     /// the consumer is over the lag watermark.
     pub catchup_factor: usize,
+    /// Refresh the coordinator's in-memory checkpoint chain every N
+    /// slides (0 = checkpointing off, the default). The first refresh
+    /// encodes a full base segment; each later one appends a delta
+    /// segment whose size is O(state change since the last checkpoint) —
+    /// see [`crate::checkpoint`]. `Session::checkpoint` /
+    /// `Coordinator::checkpoint` flush the chain to a writer at any time,
+    /// and [`RecoveryPolicy::Checkpoint`](crate::fault::RecoveryPolicy)
+    /// falls back to the chain's memo image on injected memo loss.
+    pub checkpoint_every_slides: usize,
     /// O(delta) slide path (default). When true the coordinator maintains
     /// the sampler, the window view, and the chunk plans incrementally
     /// across slides — per-slide heavy work is proportional to the input
@@ -184,6 +193,7 @@ impl Default for SystemConfig {
             shard_strategy: ShardStrategy::Hash,
             lag_watermark_slides: 4,
             catchup_factor: 4,
+            checkpoint_every_slides: 0,
             incremental_slide: true,
             fault_memo_loss: 0.0,
         }
@@ -288,6 +298,9 @@ impl SystemConfig {
         }
         if let Some(v) = get_usize(&map, "pipeline.catchup_factor")? {
             cfg.catchup_factor = v;
+        }
+        if let Some(v) = get_usize(&map, "pipeline.checkpoint_every_slides")? {
+            cfg.checkpoint_every_slides = v;
         }
         if let Some(v) = map.get("job.incremental_slide") {
             cfg.incremental_slide = v
@@ -486,5 +499,14 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.lag_watermark_slides, 2);
         assert_eq!(cfg.catchup_factor, 8);
+    }
+
+    #[test]
+    fn checkpoint_knob_defaults_off_and_parses() {
+        assert_eq!(SystemConfig::default().checkpoint_every_slides, 0);
+        let cfg =
+            SystemConfig::from_toml("[pipeline]\ncheckpoint_every_slides = 3").unwrap();
+        assert_eq!(cfg.checkpoint_every_slides, 3);
+        assert!(SystemConfig::from_toml("[pipeline]\ncheckpoint_every_slides = -1").is_err());
     }
 }

@@ -77,8 +77,13 @@
 //! pre-session single-query API (the equivalence the session tests pin).
 
 use std::collections::BTreeMap;
+use std::io::{Read, Write};
 
 use crate::budget::{self, CostFunction};
+use crate::checkpoint::{
+    self, Artifact, BaseState, ChunkEntry, CkptTracker, Compat, DeltaState, JournalOp,
+    Misc, QueryEntry, Segment, SessionSection, WindowCkpt,
+};
 use crate::config::system::{ExecModeSpec, SystemConfig};
 use crate::coordinator::query::{QueryId, QuerySpec};
 use crate::coordinator::report::{QueryReport, SlideOutput, StratumReport, WindowReport};
@@ -271,6 +276,11 @@ pub struct Coordinator {
     injector: FaultInjector,
     recovery: RecoveryPolicy,
     replica: Option<MemoReplica>,
+    /// In-memory incremental checkpoint chain. `None` until armed by the
+    /// first [`Coordinator::checkpoint`] call or the periodic
+    /// `pipeline.checkpoint_every_slides` knob; once armed, substrate
+    /// mutations are journaled so later checkpoints cost O(state delta).
+    ckpt: Option<CkptTracker>,
     windows_processed: u64,
     profile: PhaseProfile,
     work: WorkProfile,
@@ -318,6 +328,7 @@ impl Coordinator {
             injector,
             recovery: RecoveryPolicy::LineageRecompute,
             replica: None,
+            ckpt: None,
             windows_processed: 0,
             profile: PhaseProfile::default(),
             work: WorkProfile::default(),
@@ -423,9 +434,15 @@ impl Coordinator {
     /// size is the time length). Evicted items surface in the next
     /// slide's delta, keeping the incremental sampler consistent.
     pub fn resize_window(&mut self, new_size: usize) {
-        if let WindowState::Count(w) = &mut self.window {
+        let resized = if let WindowState::Count(w) = &mut self.window {
             w.resize(new_size);
+            true
+        } else {
+            false
+        };
+        if resized {
             self.cfg.window_size = new_size;
+            self.ckpt_push(JournalOp::Resize { new_size: new_size as u64 });
         }
     }
 
@@ -559,14 +576,18 @@ impl Coordinator {
     /// return the full [`SlideOutput`]: window-level stats plus one
     /// [`QueryReport`] per registered query.
     pub fn process_batch_queries(&mut self, batch: Vec<Record>) -> Result<SlideOutput> {
+        if !matches!(self.window, WindowState::Count(_)) {
+            return Err(crate::error::Error::Job(
+                "process_batch needs a count window; use ingest_tick".into(),
+            ));
+        }
+        if self.ckpt_wants_ops() {
+            self.ckpt_push(JournalOp::Slide { inserted: batch.clone() });
+        }
         let want_full = self.wants_full_view();
         let snap = match &mut self.window {
             WindowState::Count(w) => w.slide_with(batch, want_full),
-            WindowState::Time(_) => {
-                return Err(crate::error::Error::Job(
-                    "process_batch needs a count window; use ingest_tick".into(),
-                ))
-            }
+            WindowState::Time(_) => unreachable!("window kind checked above"),
         };
         self.process_snapshot(snap)
     }
@@ -590,17 +611,21 @@ impl Coordinator {
         records: Vec<Record>,
         now: u64,
     ) -> Result<Option<SlideOutput>> {
+        if !matches!(self.window, WindowState::Time(_)) {
+            return Err(crate::error::Error::Job(
+                "ingest_tick needs a time window; use process_batch".into(),
+            ));
+        }
+        if self.ckpt_wants_ops() {
+            self.ckpt_push(JournalOp::Tick { records: records.clone(), now });
+        }
         let want_full = self.wants_full_view();
         let snap = match &mut self.window {
             WindowState::Time(w) => {
                 w.ingest(records);
                 w.try_emit_with(now, want_full)
             }
-            WindowState::Count(_) => {
-                return Err(crate::error::Error::Job(
-                    "ingest_tick needs a time window; use process_batch".into(),
-                ))
-            }
+            WindowState::Count(_) => unreachable!("window kind checked above"),
         };
         snap.map(|s| self.process_snapshot(s)).transpose()
     }
@@ -616,9 +641,27 @@ impl Coordinator {
             snap.full_view().map_or(snap.delta.len(), <[Record]>::len) as u64;
 
         // Fault injection happens before eviction (a crash loses the
-        // store; recovery may restore the previous window's replica).
+        // store; recovery may restore the previous window's replica, or —
+        // under `RecoveryPolicy::Checkpoint` — the memo image of the last
+        // checkpoint segment).
+        let fallback = match self.recovery {
+            RecoveryPolicy::Replicated => self.replica.as_ref(),
+            RecoveryPolicy::Checkpoint => {
+                self.ckpt.as_ref().and_then(|t| t.memo_image.as_ref())
+            }
+            _ => None,
+        };
         let fault_injected =
-            self.injector.maybe_inject(&mut self.memo, self.recovery, self.replica.as_ref());
+            self.injector.maybe_inject(&mut self.memo, self.recovery, fallback);
+        if fault_injected {
+            // The journal can no longer reproduce the live memo (it was
+            // cleared, or reset to an older image): drop it and re-base
+            // at the next checkpoint.
+            if let Some(t) = &mut self.ckpt {
+                t.invalidate();
+            }
+        }
+        slide_work.fault_injections = u64::from(fault_injected);
 
         // Previous sample (pre-eviction) — the inverse-reduce base state.
         // Zero-copy: Arc handles onto the memoized runs.
@@ -626,6 +669,7 @@ impl Coordinator {
 
         // Algorithm 1: remove all old items (and dependent results) from memo.
         self.memo.evict_older_than(window_start_ts);
+        self.ckpt_push(JournalOp::Evict { horizon: window_start_ts });
 
         // Cost function gives the sample size based on the budget; the
         // persistent sampler emits the window's stratified sample. On the
@@ -745,6 +789,13 @@ impl Coordinator {
                                     min_ts,
                                     window_id,
                                 );
+                                self.ckpt_push(JournalOp::PutChunk {
+                                    stratum,
+                                    hash: p.chunk.hash,
+                                    moments: m,
+                                    min_ts,
+                                    window_id,
+                                });
                             }
                             parts.push(m);
                         }
@@ -854,6 +905,356 @@ impl Coordinator {
             },
             queries: query_reports,
         })
+    }
+
+    // --- Checkpoint / restore (see `crate::checkpoint` for the format) --
+
+    /// Is the journal live? (Armed, and not already waiting to re-base.)
+    fn ckpt_wants_ops(&self) -> bool {
+        self.ckpt.as_ref().map_or(false, |t| !t.force_base)
+    }
+
+    /// Journal one substrate mutation (no-op until checkpointing is
+    /// armed; `CkptTracker::push` enforces the journal size cap).
+    fn ckpt_push(&mut self, op: JournalOp) {
+        if let Some(t) = &mut self.ckpt {
+            t.push(op);
+        }
+    }
+
+    /// Export the window's durable state.
+    fn ckpt_window_state(&self) -> WindowCkpt {
+        match &self.window {
+            WindowState::Count(w) => {
+                let (buf, pending) = w.checkpoint_parts();
+                WindowCkpt::Count {
+                    size: w.size() as u64,
+                    next_window_id: w.next_window_id(),
+                    buf,
+                    pending,
+                }
+            }
+            WindowState::Time(w) => {
+                let (buf, next_end, in_window) = w.checkpoint_parts();
+                let (length, slide) = w.params();
+                WindowCkpt::Time {
+                    length,
+                    slide,
+                    next_end,
+                    in_window: in_window as u64,
+                    next_window_id: w.next_window_id(),
+                    buf,
+                }
+            }
+        }
+    }
+
+    /// Export the small always-current state every segment carries.
+    fn ckpt_misc(&self) -> Misc {
+        let (injector_rng, injector_count) = self.injector.state();
+        Misc {
+            windows_processed: self.windows_processed,
+            next_query_id: self.next_query_id,
+            queries: self
+                .queries
+                .iter()
+                .map(|q| QueryEntry { raw_id: q.id.as_u64(), spec: q.spec.clone() })
+                .collect(),
+            recovery: self.recovery,
+            injector_rng,
+            injector_count,
+        }
+    }
+
+    /// Export the full substrate (a base segment's payload). Chunk
+    /// entries are sorted by hash so identical state always encodes to
+    /// identical bytes.
+    fn ckpt_base_state(&self) -> BaseState {
+        let mut chunks: Vec<ChunkEntry> = self
+            .memo
+            .chunk_entries()
+            .map(|(hash, e)| ChunkEntry {
+                stratum: e.stratum,
+                hash,
+                moments: e.moments,
+                min_ts: e.min_timestamp,
+                window_id: e.window_id,
+            })
+            .collect();
+        chunks.sort_by_key(|c| c.hash);
+        let items = self
+            .memo
+            .items_all()
+            .into_iter()
+            .map(|(s, run)| (s, run.records().to_vec()))
+            .collect();
+        BaseState {
+            window: self.ckpt_window_state(),
+            chunks,
+            items,
+            moments: self.memo.stratum_moments_all(),
+            misc: self.ckpt_misc(),
+        }
+    }
+
+    /// Bring the in-memory checkpoint chain up to the current slide:
+    /// encode a base segment (first checkpoint, post-fault, or when the
+    /// deltas have outgrown the base) or a delta segment (the journal
+    /// since the last segment plus run diffs — O(state delta)). Arms
+    /// journaling on first use. The appended bytes are recorded in
+    /// [`SlideWork::checkpoint_bytes`].
+    pub(crate) fn refresh_checkpoint_chain(&mut self) {
+        if self.ckpt.is_none() {
+            self.ckpt = Some(CkptTracker::default());
+        }
+        let wants_base = self.ckpt.as_ref().map_or(true, CkptTracker::wants_base);
+        let appended = if wants_base {
+            let seg = checkpoint::encode_segment(&Segment::Base(self.ckpt_base_state()));
+            self.ckpt.as_mut().expect("armed above").install_base(seg)
+        } else {
+            let cur_items = self.memo.items_all();
+            let moments = self.memo.stratum_moments_all();
+            let misc = self.ckpt_misc();
+            let tracker = self.ckpt.as_mut().expect("armed above");
+            let items: Vec<(StratumId, u64, Vec<checkpoint::RunOp>)> = cur_items
+                .iter()
+                .map(|(&s, run)| {
+                    let prev = tracker.prev_items.get(&s).cloned().unwrap_or_default();
+                    (s, run.len() as u64, checkpoint::diff_run(&prev, run))
+                })
+                .collect();
+            let ops = std::mem::take(&mut tracker.journal);
+            let seg = checkpoint::encode_segment(&Segment::Delta(DeltaState {
+                ops,
+                items,
+                moments,
+                misc,
+            }));
+            tracker.install_delta(seg)
+        };
+        // Anchor the next delta's diffs and the fault-recovery image on
+        // this segment (both are O(strata) Arc traffic, not copies).
+        let prev_items = self.memo.items_all();
+        let image = self.memo.snapshot();
+        let tracker = self.ckpt.as_mut().expect("armed above");
+        tracker.prev_items = prev_items;
+        tracker.memo_image = Some(image);
+        self.work.note_checkpoint_bytes(appended);
+    }
+
+    /// Flush the checkpoint chain as one artifact, with an optional
+    /// session section (the `Session` wrapper adds source + backlog).
+    pub(crate) fn write_checkpoint<W: Write>(
+        &mut self,
+        sink: &mut W,
+        session: Option<SessionSection>,
+    ) -> Result<u64> {
+        self.refresh_checkpoint_chain();
+        let artifact = Artifact {
+            compat: Compat::of(&self.cfg),
+            segments: self.ckpt.as_ref().expect("refreshed above").segments.clone(),
+            session,
+        };
+        artifact.write(sink)
+    }
+
+    /// Serialize the full incremental substrate — window buffer, sharded
+    /// memo contents, memoized sample runs, per-stratum moments, query
+    /// registry, fault-injector RNG — into the versioned checkpoint
+    /// format (see [`crate::checkpoint`]). The first call writes a full
+    /// base; once armed, later calls append O(state delta) segments.
+    /// Returns bytes written. [`Coordinator::restore`] rebuilds a
+    /// coordinator that continues **byte-identically** from the next
+    /// slide onward.
+    pub fn checkpoint<W: Write>(&mut self, sink: &mut W) -> Result<u64> {
+        self.write_checkpoint(sink, None)
+    }
+
+    /// Rebuild a coordinator from a checkpoint artifact. `cfg` must
+    /// match the checkpointed run's seed, mode, chunk size, map weight,
+    /// and slide (anything else silently changes outputs — a loud
+    /// [`Error::Checkpoint`](crate::error::Error) instead); worker
+    /// count, shard strategy, and budgets may differ freely. The
+    /// persistent sampler is rebuilt from the restored window (the
+    /// sample is a pure function of window contents and seed); the
+    /// one-time replay cost lands in
+    /// [`SlideWork::restore_items`](crate::metrics::SlideWork).
+    /// Corrupted or truncated artifacts error out — they never panic or
+    /// restore partial state.
+    pub fn restore<R: Read>(source: R, cfg: SystemConfig) -> Result<Coordinator> {
+        let artifact = Artifact::read(source)?;
+        Self::restore_from_artifact(artifact, cfg).map(|(coord, _)| coord)
+    }
+
+    /// [`Coordinator::restore`], also yielding the artifact's session
+    /// section for the `Session` wrapper.
+    pub(crate) fn restore_from_artifact(
+        artifact: Artifact,
+        mut cfg: SystemConfig,
+    ) -> Result<(Coordinator, Option<SessionSection>)> {
+        use crate::error::Error;
+        artifact.compat.check(&cfg)?;
+        let mut restore_items = 0u64;
+
+        // --- Base segment: materialize window, memo, runs ---------------
+        let mut segments = artifact.segments.iter();
+        let first = segments.next().expect("Artifact::read guarantees >= 1 segment");
+        let base = match checkpoint::decode_segment(first)? {
+            Segment::Base(b) => b,
+            Segment::Delta(_) => {
+                return Err(Error::Checkpoint("first segment is not a base".into()))
+            }
+        };
+        let mut memo = MemoStore::sharded(cfg.num_workers.max(1), cfg.shard_strategy);
+        restore_items += base.chunks.len() as u64;
+        for c in &base.chunks {
+            memo.put_chunk_for(c.stratum, c.hash, c.moments, c.min_ts, c.window_id);
+        }
+        let mut items: BTreeMap<StratumId, SampleRun> = base
+            .items
+            .into_iter()
+            .map(|(s, recs)| (s, SampleRun::from_vec(recs)))
+            .collect();
+        restore_items += items.values().map(SampleRun::len).sum::<usize>() as u64;
+        let mut moments = base.moments;
+        let mut misc = base.misc;
+        let mut window = match base.window {
+            WindowCkpt::Count { size, next_window_id, buf, pending } => {
+                restore_items += (buf.len() + pending.len()) as u64;
+                WindowState::Count(CountWindow::restore_parts(
+                    size as usize,
+                    buf,
+                    pending,
+                    next_window_id,
+                ))
+            }
+            WindowCkpt::Time { length, slide, next_end, in_window, next_window_id, buf } => {
+                restore_items += buf.len() as u64;
+                WindowState::Time(TimeWindow::restore_parts(
+                    length,
+                    slide,
+                    buf,
+                    next_end,
+                    in_window as usize,
+                    next_window_id,
+                ))
+            }
+        };
+
+        // --- Delta segments: replay the journal through the real window
+        // and memo implementations, then patch the sample runs ----------
+        for seg_bytes in segments {
+            let delta = match checkpoint::decode_segment(seg_bytes)? {
+                Segment::Delta(d) => d,
+                Segment::Base(_) => {
+                    return Err(Error::Checkpoint("unexpected base segment mid-chain".into()))
+                }
+            };
+            for op in delta.ops {
+                match op {
+                    JournalOp::Slide { inserted } => match &mut window {
+                        WindowState::Count(w) => {
+                            restore_items += inserted.len() as u64;
+                            let _ = w.slide_with(inserted, false);
+                        }
+                        WindowState::Time(_) => {
+                            return Err(Error::Checkpoint(
+                                "slide op journaled against a time window".into(),
+                            ))
+                        }
+                    },
+                    JournalOp::Tick { records, now } => match &mut window {
+                        WindowState::Time(w) => {
+                            restore_items += records.len() as u64;
+                            w.ingest(records);
+                            let _ = w.try_emit_with(now, false);
+                        }
+                        WindowState::Count(_) => {
+                            return Err(Error::Checkpoint(
+                                "tick op journaled against a count window".into(),
+                            ))
+                        }
+                    },
+                    JournalOp::Resize { new_size } => match &mut window {
+                        WindowState::Count(w) => {
+                            let _ = w.resize((new_size as usize).max(1));
+                        }
+                        WindowState::Time(_) => {
+                            return Err(Error::Checkpoint(
+                                "resize op journaled against a time window".into(),
+                            ))
+                        }
+                    },
+                    JournalOp::Evict { horizon } => memo.evict_older_than(horizon),
+                    JournalOp::PutChunk { stratum, hash, moments: m, min_ts, window_id } => {
+                        restore_items += 1;
+                        memo.put_chunk_for(stratum, hash, m, min_ts, window_id);
+                    }
+                }
+            }
+            let mut next_items = BTreeMap::new();
+            for (s, final_len, ops) in delta.items {
+                let prev = items.get(&s).cloned().unwrap_or_default();
+                let recs = checkpoint::apply_run_ops(&prev, &ops, final_len as usize)?;
+                restore_items += recs.len() as u64;
+                next_items.insert(s, SampleRun::from_vec(recs));
+            }
+            items = next_items;
+            moments = delta.moments;
+            misc = delta.misc;
+        }
+
+        // --- Assemble the coordinator -----------------------------------
+        // The checkpointed window geometry is authoritative (it absorbed
+        // any replayed resizes); keep cfg consistent with it.
+        if let WindowState::Count(w) = &window {
+            cfg.window_size = w.size();
+        }
+        let sampler_source: Vec<Record> = match &window {
+            WindowState::Count(w) => {
+                // The sampler tracks the window population *plus* pending
+                // resize evictions (it only learns of them via the next
+                // slide's delta, exactly like the live run).
+                let (mut buf, pending) = w.checkpoint_parts();
+                buf.extend(pending);
+                buf
+            }
+            WindowState::Time(w) => w.window_records(),
+        };
+        let mut coord = Coordinator::with_window(cfg, window);
+        coord.memo = memo;
+        coord.memo.memoize_items(&items);
+        for (&s, m) in &moments {
+            coord.memo.put_stratum_moments(s, *m);
+        }
+        restore_items += coord.sampler.rebuild(&sampler_source) as u64;
+        coord.windows_processed = misc.windows_processed;
+        coord.next_query_id = misc.next_query_id;
+        for q in misc.queries {
+            q.spec.validate_for(&coord.cfg)?;
+            let cost = budget::from_spec(&q.spec.budget);
+            coord.queries.push(RegisteredQuery { id: QueryId::new(q.raw_id), spec: q.spec, cost });
+        }
+        coord.injector.restore_state(misc.injector_rng, misc.injector_count);
+        // The recovery policy survives too: the injector RNG replays the
+        // exact fault schedule, so the restored run must also *handle*
+        // each fault the same way the live run would have.
+        coord.recovery = misc.recovery;
+        // Keep `Replicated` recovery seamless across the restore boundary
+        // (the live run would have held last window's snapshot here).
+        coord.replica = Some(coord.memo.snapshot());
+        // Arm the checkpoint chain with the restored memo as its fault
+        // fallback image, so `RecoveryPolicy::Checkpoint` handles a fault
+        // on the very first post-restore slide exactly like the live run
+        // (whose chain held the same image). `force_base` keeps the
+        // journal off until the first refresh re-bases on current state.
+        let mut tracker = CkptTracker::default();
+        tracker.prev_items = coord.memo.items_all();
+        tracker.memo_image = Some(coord.memo.snapshot());
+        tracker.force_base = true;
+        coord.ckpt = Some(tracker);
+        coord.work.note_restore_items(restore_items);
+        Ok((coord, artifact.session))
     }
 }
 
@@ -1419,6 +1820,150 @@ mod tests {
             .submit_query(QuerySpec::new(AggregateKind::Sum).with_map_rounds(7))
             .is_err());
         assert_eq!(coord.query_count(), 0, "rejected specs must not register");
+    }
+
+    /// Warm-up batch plus `n` slide batches off one deterministic stream.
+    fn batches(cfg: &SystemConfig, n: usize) -> Vec<Vec<Record>> {
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut out = vec![gen.take_records(cfg.window_size)];
+        for _ in 0..n {
+            out.push(gen.take_records(cfg.slide));
+        }
+        out
+    }
+
+    fn assert_outputs_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
+        assert_reports_identical(
+            std::slice::from_ref(&a.window),
+            std::slice::from_ref(&b.window),
+            label,
+        );
+        assert_eq!(a.queries.len(), b.queries.len(), "{label}");
+        for (qa, qb) in a.queries.iter().zip(&b.queries) {
+            assert_eq!(qa.id, qb.id, "{label}");
+            assert_eq!(qa.kind, qb.kind, "{label}");
+            assert_eq!(qa.estimate.value.to_bits(), qb.estimate.value.to_bits(), "{label}");
+            assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
+            assert_eq!(qa.sample_size, qb.sample_size, "{label}");
+            assert_eq!(qa.population, qb.population, "{label}");
+            assert_eq!(
+                qa.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
+                qb.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
+                "{label}"
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_continues_byte_identically() {
+        let cfg = config(ExecModeSpec::IncApprox);
+        let data = batches(&cfg, 8);
+        let mut live = Coordinator::new(cfg.clone());
+        let mut victim = Coordinator::new(cfg.clone());
+        for coord in [&mut live, &mut victim] {
+            coord.submit_query(QuerySpec::new(AggregateKind::Mean)).unwrap();
+            coord.submit_query(QuerySpec::new(AggregateKind::Extrema)).unwrap();
+        }
+        for b in &data[..4] {
+            live.process_batch_queries(b.clone()).unwrap();
+            victim.process_batch_queries(b.clone()).unwrap();
+        }
+        let mut artifact = Vec::new();
+        victim.checkpoint(&mut artifact).unwrap();
+        drop(victim); // the crash
+        let mut restored = Coordinator::restore(&artifact[..], cfg).unwrap();
+        assert!(restored.work_profile().last().restore_items > 0);
+        assert_eq!(restored.query_count(), 2);
+        for (i, b) in data[4..].iter().enumerate() {
+            let a = live.process_batch_queries(b.clone()).unwrap();
+            let r = restored.process_batch_queries(b.clone()).unwrap();
+            assert_outputs_identical(&a, &r, &format!("slide {i} after restore"));
+        }
+    }
+
+    #[test]
+    fn checkpoint_survives_mid_stream_resize() {
+        // A resize between checkpoints flows through the journal; a
+        // resize *after* the last checkpoint still reaches the artifact
+        // because `checkpoint` refreshes the chain before flushing.
+        let cfg = config(ExecModeSpec::IncApprox);
+        let data = batches(&cfg, 8);
+        let mut live = Coordinator::new(cfg.clone());
+        let mut victim = Coordinator::new(cfg.clone());
+        for b in &data[..3] {
+            live.process_batch(b.clone()).unwrap();
+            victim.process_batch(b.clone()).unwrap();
+        }
+        let mut early = Vec::new();
+        victim.checkpoint(&mut early).unwrap(); // arm journaling
+        live.resize_window(1500);
+        victim.resize_window(1500);
+        live.process_batch(data[3].clone()).unwrap();
+        victim.process_batch(data[3].clone()).unwrap();
+        live.resize_window(2300);
+        victim.resize_window(2300);
+        let mut artifact = Vec::new();
+        victim.checkpoint(&mut artifact).unwrap();
+        let mut restored = Coordinator::restore(&artifact[..], cfg).unwrap();
+        assert_eq!(restored.config().window_size, 2300, "resize must survive restore");
+        for (i, b) in data[4..].iter().enumerate() {
+            let a = live.process_batch(b.clone()).unwrap();
+            let r = restored.process_batch(b.clone()).unwrap();
+            assert_reports_identical(
+                std::slice::from_ref(&a),
+                std::slice::from_ref(&r),
+                &format!("post-resize slide {i}"),
+            );
+        }
+    }
+
+    #[test]
+    fn delta_checkpoints_are_bounded_by_slide_delta() {
+        let cfg = config(ExecModeSpec::IncApprox);
+        let data = batches(&cfg, 7);
+        let mut coord = Coordinator::new(cfg.clone());
+        for b in &data[..3] {
+            coord.process_batch(b.clone()).unwrap();
+        }
+        let mut sink = Vec::new();
+        coord.checkpoint(&mut sink).unwrap(); // first = full base
+        let base_bytes = coord.work_profile().total().checkpoint_bytes;
+        assert!(base_bytes > 0, "base segment must be accounted");
+        let mut deltas = Vec::new();
+        for b in &data[3..7] {
+            coord.process_batch(b.clone()).unwrap();
+            let before = coord.work_profile().total().checkpoint_bytes;
+            let mut sink = Vec::new();
+            coord.checkpoint(&mut sink).unwrap();
+            deltas.push(coord.work_profile().total().checkpoint_bytes - before);
+        }
+        // Steady state: a per-slide delta segment is far smaller than the
+        // base — durability costs O(state delta), not O(window).
+        for (i, &d) in deltas.iter().enumerate() {
+            assert!(d > 0, "delta {i} must be accounted");
+            assert!(d * 3 < base_bytes, "delta {i}: {d} bytes vs base {base_bytes}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_recovery_restores_memo_after_injected_loss() {
+        let mut cfg = config(ExecModeSpec::IncApprox);
+        cfg.fault_memo_loss = 1.0; // lose memo every window
+        let mut gen = MultiStream::paper_section5(13);
+        let mut coord =
+            Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::Checkpoint);
+        coord.process_batch(gen.take_records(cfg.window_size)).unwrap();
+        coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+        coord.refresh_checkpoint_chain(); // what the periodic knob does
+        let r = coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+        assert!(r.fault_injected);
+        assert!(
+            r.fresh_items < r.sample_size,
+            "checkpoint image should preserve incremental state across the fault"
+        );
+        // The injections surface through the work profile (satellite fix).
+        assert_eq!(coord.work_profile().total().fault_injections, coord.faults_injected());
+        assert!(coord.faults_injected() >= 3);
     }
 
     #[test]

@@ -50,12 +50,14 @@
 //! # Ok::<(), incapprox::Error>(())
 //! ```
 
+use std::io::{Read, Write};
 use std::sync::Arc;
 
+use crate::checkpoint::{Artifact, SessionSection};
 use crate::coordinator::driver::Coordinator;
 use crate::coordinator::query::{QueryId, QuerySpec};
 use crate::coordinator::report::SlideOutput;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::kafka::broker::Broker;
 use crate::kafka::consumer::Consumer;
 use crate::kafka::producer::{Partitioner, Producer};
@@ -73,6 +75,9 @@ pub struct Session {
     consumer: Consumer<Record>,
     coordinator: Coordinator,
     source: MultiStream,
+    /// Slides processed since the last periodic checkpoint (the
+    /// `pipeline.checkpoint_every_slides` cadence).
+    slides_since_ckpt: usize,
 }
 
 impl Session {
@@ -89,7 +94,7 @@ impl Session {
         let producer = Producer::new(&broker, TOPIC, Partitioner::Keyed)?;
         let mut consumer = Consumer::new();
         consumer.subscribe(&broker, TOPIC)?;
-        Ok(Session { broker, producer, consumer, coordinator, source })
+        Ok(Session { broker, producer, consumer, coordinator, source, slides_since_ckpt: 0 })
     }
 
     /// Register a query; every subsequent slide answers it. See
@@ -121,13 +126,30 @@ impl Session {
         Ok(())
     }
 
+    /// Take a periodic checkpoint when the configured cadence says so
+    /// (`pipeline.checkpoint_every_slides`, 0 = off). The chain lives in
+    /// memory; [`Session::checkpoint`] flushes it to a writer.
+    fn maybe_periodic_checkpoint(&mut self) {
+        let every = self.coordinator.config().checkpoint_every_slides;
+        if every == 0 {
+            return;
+        }
+        self.slides_since_ckpt += 1;
+        if self.slides_since_ckpt >= every {
+            self.slides_since_ckpt = 0;
+            self.coordinator.refresh_checkpoint_chain();
+        }
+    }
+
     /// Warm the window: fill it completely and process the first window.
     pub fn warmup(&mut self) -> Result<SlideOutput> {
         let need = self.coordinator.config().window_size;
         self.produce_at_least(need)?;
         let batch: Vec<Record> =
             self.consumer.poll(need)?.into_iter().map(|m| m.payload).collect();
-        self.coordinator.process_batch_queries(batch)
+        let out = self.coordinator.process_batch_queries(batch)?;
+        self.maybe_periodic_checkpoint();
+        Ok(out)
     }
 
     /// One session step: produce a slide, pull (with catch-up under
@@ -147,7 +169,60 @@ impl Session {
         };
         let batch: Vec<Record> =
             self.consumer.poll(batch_size)?.into_iter().map(|m| m.payload).collect();
-        self.coordinator.process_batch_queries(batch)
+        let out = self.coordinator.process_batch_queries(batch)?;
+        self.maybe_periodic_checkpoint();
+        Ok(out)
+    }
+
+    /// Serialize the session's full recoverable state — the
+    /// coordinator's checkpoint chain (window, memo, sample runs, query
+    /// registry) plus the generator state and the broker backlog of
+    /// produced-but-unconsumed records — into `sink`. Returns bytes
+    /// written. A session rebuilt with [`Session::restore`] continues
+    /// the stream **byte-identically**: every subsequent
+    /// [`SlideOutput`] matches the uninterrupted run's.
+    pub fn checkpoint<W: Write>(&mut self, sink: &mut W) -> Result<u64> {
+        let source = self.source.checkpoint_spec()?;
+        let backlog: Vec<Record> =
+            self.consumer.backlog()?.into_iter().map(|m| m.payload).collect();
+        let section = SessionSection {
+            source,
+            slides_since_ckpt: self.slides_since_ckpt as u64,
+            backlog,
+        };
+        self.coordinator.write_checkpoint(sink, Some(section))
+    }
+
+    /// Rebuild a session mid-stream from a checkpoint written by
+    /// [`Session::checkpoint`]. `cfg` must match the checkpointed run's
+    /// seed, mode, chunk size, map weight, and slide (see
+    /// [`Coordinator::restore`]); worker count and shard strategy may
+    /// differ. In-flight records captured in the checkpoint are replayed
+    /// into the fresh broker in delivery order, so nothing queued is
+    /// lost. Corrupted or truncated artifacts yield an
+    /// [`Error::Checkpoint`](crate::error::Error), never a panic.
+    pub fn restore<R: Read>(source: R, cfg: crate::config::system::SystemConfig) -> Result<Session> {
+        let artifact = Artifact::read(source)?;
+        let (coordinator, section) = Coordinator::restore_from_artifact(artifact, cfg)?;
+        let section = section.ok_or_else(|| {
+            Error::Checkpoint(
+                "artifact has no session section (a bare Coordinator checkpoint?); \
+                 use Coordinator::restore"
+                    .into(),
+            )
+        })?;
+        let stream = MultiStream::from_spec(section.source);
+        let mut session = Session::new(coordinator, stream)?;
+        // Resume the periodic cadence where the live run left it, so the
+        // fault-fallback image refreshes on the same schedule.
+        session.slides_since_ckpt = section.slides_since_ckpt as usize;
+        // Replay in-flight records in delivery order: keyed partitioning
+        // re-places each on its stratum's partition, so subsequent polls
+        // return exactly what the checkpointed consumer would have seen.
+        for r in &section.backlog {
+            session.producer.send(Some(r.stratum as u64), r.timestamp, *r)?;
+        }
+        Ok(session)
     }
 
     /// Run `n` steps after warmup; returns all outputs (warmup first).

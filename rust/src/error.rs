@@ -35,6 +35,11 @@ pub enum Error {
     /// Injected or real fault surfaced to the coordinator.
     Fault(String),
 
+    /// Checkpoint encode/decode problems (version or seed mismatch,
+    /// truncation, corruption). Restoring from a damaged artifact returns
+    /// this instead of panicking.
+    Checkpoint(String),
+
     /// Underlying XLA/PJRT error.
     Xla(String),
 
@@ -54,6 +59,7 @@ impl fmt::Display for Error {
             Error::Budget(m) => write!(f, "budget error: {m}"),
             Error::Job(m) => write!(f, "job error: {m}"),
             Error::Fault(m) => write!(f, "fault: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             // Transparent: the io::Error message stands alone.
             Error::Io(e) => write!(f, "{e}"),
@@ -95,6 +101,7 @@ mod tests {
         assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
         assert_eq!(Error::Job("y".into()).to_string(), "job error: y");
         assert_eq!(Error::Stats("z".into()).to_string(), "stats error: z");
+        assert_eq!(Error::Checkpoint("w".into()).to_string(), "checkpoint error: w");
     }
 
     #[test]

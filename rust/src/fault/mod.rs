@@ -11,6 +11,36 @@
 //!    window still holds), i.e. the chunks simply re-execute as fresh.
 //! 3. [`RecoveryPolicy::Replicated`] — keep an asynchronous replica of the
 //!    memo store and restore from it.
+//! 4. [`RecoveryPolicy::Checkpoint`] — restore from the coordinator's
+//!    last durable checkpoint (see [`crate::checkpoint`]); like
+//!    `Replicated` but the fallback state is the same artifact that
+//!    survives a full process crash, refreshed at the
+//!    `pipeline.checkpoint_every_slides` cadence instead of every window.
+//!
+//! Correctness under all four policies rests on chunk results being
+//! content-addressed: a stale or missing memo can only cause extra fresh
+//! computation, never a wrong answer.
+//!
+//! # Example
+//!
+//! Injected memo loss under the replica policy: the store survives.
+//!
+//! ```
+//! use incapprox::fault::{FaultInjector, RecoveryPolicy};
+//! use incapprox::job::moments::Moments;
+//! use incapprox::sac::memo::MemoStore;
+//!
+//! let mut memo = MemoStore::new();
+//! memo.put_chunk(0xFEED, Moments::from_values(&[1.0, 2.0]), 0, 0);
+//! let replica = memo.snapshot(); // taken before the crash
+//!
+//! let mut injector = FaultInjector::new(1.0, 7); // lose memo every window
+//! let injected =
+//!     injector.maybe_inject(&mut memo, RecoveryPolicy::Replicated, Some(&replica));
+//! assert!(injected);
+//! assert_eq!(injector.injected(), 1);
+//! assert_eq!(memo.chunk_count(), 1, "replica restored the lost entry");
+//! ```
 
 use crate::sac::memo::MemoStore;
 use crate::util::rng::Rng;
@@ -25,6 +55,12 @@ pub enum RecoveryPolicy {
     LineageRecompute,
     /// Restore from an asynchronously maintained replica (option iii).
     Replicated,
+    /// Restore from the coordinator's last checkpoint (option iii with a
+    /// crash-durable source): the memo falls back to the state captured
+    /// by the most recent `pipeline.checkpoint_every_slides` checkpoint.
+    /// Like `Replicated`, a stale fallback only costs extra fresh
+    /// computation (chunk results are content-addressed).
+    Checkpoint,
 }
 
 /// Per-window fault injector: with probability `memo_loss_p`, the memo
@@ -52,8 +88,9 @@ impl FaultInjector {
     }
 
     /// Maybe inject a memo-loss fault; returns true if injected. With
-    /// `Replicated`, the caller's replica (taken *before* this window) is
-    /// used to restore.
+    /// `Replicated` or `Checkpoint`, the caller's fallback snapshot
+    /// (taken *before* this window — the per-window replica, or the memo
+    /// image of the last checkpoint) is used to restore.
     pub fn maybe_inject(
         &mut self,
         memo: &mut MemoStore,
@@ -71,7 +108,7 @@ impl FaultInjector {
                 // LineageRecompute lets the planner classify every chunk
                 // as fresh, recomputing from the in-window inputs.
             }
-            RecoveryPolicy::Replicated => {
+            RecoveryPolicy::Replicated | RecoveryPolicy::Checkpoint => {
                 if let Some(snap) = replica {
                     memo.restore(snap.clone());
                 }
@@ -83,6 +120,19 @@ impl FaultInjector {
     /// Number of faults injected so far.
     pub fn injected(&self) -> u64 {
         self.injected
+    }
+
+    /// Internal state (RNG + counter) for checkpointing: restoring it via
+    /// [`FaultInjector::restore_state`] continues the exact injection
+    /// stream, so a restored run replays the same fault schedule.
+    pub fn state(&self) -> ([u64; 4], u64) {
+        (self.rng.state(), self.injected)
+    }
+
+    /// Restore state captured by [`FaultInjector::state`].
+    pub fn restore_state(&mut self, rng: [u64; 4], injected: u64) {
+        self.rng = Rng::from_state(rng);
+        self.injected = injected;
     }
 }
 
@@ -134,6 +184,37 @@ mod tests {
         inj.maybe_inject(&mut memo, RecoveryPolicy::LineageRecompute, None);
         // Chunks will be misses → planner schedules them fresh.
         assert_eq!(memo.chunk_count(), 0);
+    }
+
+    #[test]
+    fn checkpoint_policy_restores_like_replicated() {
+        let mut inj = FaultInjector::new(1.0, 5);
+        let mut memo = warm_store();
+        let ckpt_image = memo.snapshot();
+        assert!(inj.maybe_inject(&mut memo, RecoveryPolicy::Checkpoint, Some(&ckpt_image)));
+        assert_eq!(memo.chunk_count(), 2);
+        // Without a fallback image the loss stands (pre-first-checkpoint).
+        let mut memo = warm_store();
+        assert!(inj.maybe_inject(&mut memo, RecoveryPolicy::Checkpoint, None));
+        assert_eq!(memo.chunk_count(), 0);
+    }
+
+    #[test]
+    fn state_roundtrip_replays_identical_fault_schedule() {
+        let mut a = FaultInjector::new(0.5, 77);
+        let mut memo = MemoStore::new();
+        for _ in 0..10 {
+            a.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None);
+        }
+        let (rng, injected) = a.state();
+        let mut b = FaultInjector::new(0.5, 0);
+        b.restore_state(rng, injected);
+        assert_eq!(b.injected(), a.injected());
+        for _ in 0..50 {
+            let ia = a.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None);
+            let ib = b.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None);
+            assert_eq!(ia, ib, "restored injector must replay the same schedule");
+        }
     }
 
     #[test]

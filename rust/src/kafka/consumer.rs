@@ -43,12 +43,12 @@ impl<T: Clone> Consumer<T> {
         Ok(())
     }
 
-    /// Pull up to `max` messages, merged across all subscriptions in
-    /// timestamp order (ties broken by topic/partition for determinism).
-    /// Advances offsets past everything returned.
-    pub fn poll(&mut self, max: usize) -> Result<Vec<Message<T>>> {
-        // (timestamp, sub_idx, partition, message) candidates, merged lazily:
-        // fetch per-partition in slices to avoid pulling more than `max`.
+    /// Fetch up to `max` messages per partition past the committed
+    /// offsets and merge them in `(timestamp, subscription, partition,
+    /// offset)` order — the deterministic delivery order shared by
+    /// [`Consumer::poll`] and [`Consumer::backlog`]. Does not advance
+    /// offsets.
+    fn fetch_merged(&self, max: usize) -> Result<Vec<(usize, usize, Message<T>)>> {
         let mut out: Vec<(usize, usize, Message<T>)> = Vec::new();
         for (si, sub) in self.subs.iter().enumerate() {
             for (pi, &from) in sub.offsets.iter().enumerate() {
@@ -60,6 +60,14 @@ impl<T: Clone> Consumer<T> {
         out.sort_by(|a, b| {
             (a.2.timestamp, a.0, a.1, a.2.offset).cmp(&(b.2.timestamp, b.0, b.1, b.2.offset))
         });
+        Ok(out)
+    }
+
+    /// Pull up to `max` messages, merged across all subscriptions in
+    /// timestamp order (ties broken by topic/partition for determinism).
+    /// Advances offsets past everything returned.
+    pub fn poll(&mut self, max: usize) -> Result<Vec<Message<T>>> {
+        let mut out = self.fetch_merged(max)?;
         out.truncate(max);
         let mut result = Vec::with_capacity(out.len());
         for (si, pi, msg) in out {
@@ -67,6 +75,15 @@ impl<T: Clone> Consumer<T> {
             result.push(msg);
         }
         Ok(result)
+    }
+
+    /// Every message published but not yet polled, in exactly the order
+    /// [`Consumer::poll`] would deliver it, **without** advancing the
+    /// committed offsets. Session checkpoints capture in-flight records
+    /// this way, so a restored session replays them instead of losing
+    /// them.
+    pub fn backlog(&self) -> Result<Vec<Message<T>>> {
+        Ok(self.fetch_merged(usize::MAX)?.into_iter().map(|(_, _, m)| m).collect())
     }
 
     /// Total backlog (messages available but not yet consumed) — the
@@ -143,6 +160,27 @@ mod tests {
         assert_eq!(c.lag().unwrap(), 5);
         c.poll(3).unwrap();
         assert_eq!(c.lag().unwrap(), 2);
+    }
+
+    #[test]
+    fn backlog_previews_poll_order_without_advancing() {
+        let broker = Broker::new();
+        broker.create_topic("t", 2).unwrap();
+        let mut p = Producer::new(&broker, "t", Partitioner::Keyed).unwrap();
+        for i in 0..10u64 {
+            p.send(Some(i % 3), i, i).unwrap();
+        }
+        let mut c = Consumer::new();
+        c.subscribe(&broker, "t").unwrap();
+        c.poll(4).unwrap();
+        let preview: Vec<u64> =
+            c.backlog().unwrap().into_iter().map(|m| m.payload).collect();
+        assert_eq!(preview.len(), 6);
+        assert_eq!(c.lag().unwrap(), 6, "backlog must not advance offsets");
+        let polled: Vec<u64> =
+            c.poll(100).unwrap().into_iter().map(|m| m.payload).collect();
+        assert_eq!(preview, polled, "backlog must mirror poll order exactly");
+        assert!(c.backlog().unwrap().is_empty());
     }
 
     #[test]

@@ -56,7 +56,9 @@ impl<T: Clone> PartitionLog<T> {
             return Vec::new();
         }
         let start = (from - self.base_offset) as usize;
-        let end = (start + max).min(self.records.len());
+        // Saturate: callers like `Consumer::backlog` pass usize::MAX to
+        // mean "everything", which must not overflow past `start`.
+        let end = start.saturating_add(max).min(self.records.len());
         self.records[start..end].to_vec()
     }
 
@@ -105,6 +107,18 @@ mod tests {
         assert_eq!(got[0].payload, 4);
         assert!(log.fetch(10, 5).is_empty());
         assert_eq!(log.fetch(8, 100).len(), 2);
+    }
+
+    #[test]
+    fn fetch_unbounded_max_from_mid_offset_does_not_overflow() {
+        // `Consumer::backlog` passes usize::MAX as "everything"; a
+        // non-zero start must saturate, not overflow `start + max`.
+        let mut log = PartitionLog::new();
+        for i in 0..5u64 {
+            log.append(i, i);
+        }
+        let got = log.fetch(2, usize::MAX);
+        assert_eq!(got.iter().map(|m| m.offset).collect::<Vec<_>>(), vec![2, 3, 4]);
     }
 
     #[test]

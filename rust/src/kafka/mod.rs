@@ -8,6 +8,35 @@
 //! (keyed or round-robin partitioning), [`Consumer`]s pull from committed
 //! offsets. Payloads are generic — the pipeline uses
 //! [`crate::workload::Record`].
+//!
+//! # Example
+//!
+//! The full produce → partition → pull cycle the session runs per slide:
+//!
+//! ```
+//! use incapprox::kafka::{Broker, Consumer, Partitioner, Producer};
+//!
+//! let broker = Broker::new();
+//! broker.create_topic("events", 2)?;
+//!
+//! // Keyed partitioning: all messages of one key stay in one partition,
+//! // preserving per-sub-stream order (the paper's per-stratum streams).
+//! let mut producer = Producer::new(&broker, "events", Partitioner::Keyed)?;
+//! for tick in 0..6u64 {
+//!     producer.send(Some(tick % 2), tick, format!("event-{tick}"))?;
+//! }
+//!
+//! // A consumer pulls the merged stream in timestamp order and tracks
+//! // its own offsets; `lag` is the backpressure signal.
+//! let mut consumer = Consumer::new();
+//! consumer.subscribe(&broker, "events")?;
+//! assert_eq!(consumer.lag()?, 6);
+//! let batch = consumer.poll(4)?;
+//! assert_eq!(batch.len(), 4);
+//! assert!(batch.windows(2).all(|w| w[0].timestamp <= w[1].timestamp));
+//! assert_eq!(consumer.lag()?, 2); // two messages still queued
+//! # Ok::<(), incapprox::Error>(())
+//! ```
 
 pub mod broker;
 pub mod consumer;

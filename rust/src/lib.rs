@@ -27,6 +27,7 @@
 
 pub mod bench_harness;
 pub mod budget;
+pub mod checkpoint;
 pub mod classify;
 pub mod cli;
 pub mod config;

@@ -216,10 +216,29 @@ pub struct SlideWork {
     /// queries' answers — the only counter allowed to scale with query
     /// count (O(strata) per query; derivation never touches items).
     pub derive_items: u64,
+    /// Bytes appended to the in-memory checkpoint chain this slide (0
+    /// when checkpointing is off). The durability analog of the O(delta)
+    /// invariant: once the base segment exists, periodic checkpoints
+    /// append delta segments whose size tracks the state change since the
+    /// last checkpoint, never the window —
+    /// `benches/checkpoint_overhead.rs --smoke` asserts it.
+    pub checkpoint_bytes: u64,
+    /// Items replayed to rebuild state from a checkpoint (window buffer,
+    /// memoized runs, chunk entries, journaled batches). Recorded once on
+    /// the restored coordinator's profile; 0 on every later slide.
+    pub restore_items: u64,
+    /// Injected memo-loss faults observed this slide (0 or 1) — surfaces
+    /// `FaultInjector::maybe_inject` through the work profile so benches
+    /// and tests can report fault counts alongside the work they caused.
+    pub fault_injections: u64,
 }
 
 impl SlideWork {
-    /// Sum over all stages — the headline per-slide items-touched number.
+    /// Sum over all item-touching stages — the headline per-slide
+    /// items-touched number. Excludes `checkpoint_bytes` (bytes, not
+    /// items), `restore_items` (one-time recovery cost, not steady-state
+    /// slide work), and `fault_injections` (an event count), so enabling
+    /// durability never perturbs the O(delta) work comparisons.
     pub fn total(&self) -> u64 {
         self.substrate_total() + self.derive_items
     }
@@ -255,8 +274,26 @@ impl WorkProfile {
         self.total.plan_items += w.plan_items;
         self.total.compute_items += w.compute_items;
         self.total.derive_items += w.derive_items;
+        self.total.checkpoint_bytes += w.checkpoint_bytes;
+        self.total.restore_items += w.restore_items;
+        self.total.fault_injections += w.fault_injections;
         self.last = w;
         self.windows += 1;
+    }
+
+    /// Attribute checkpoint bytes written after the slide's observation
+    /// (the coordinator takes periodic checkpoints once the slide's
+    /// report is out, so the cost lands on the slide that paid it).
+    pub fn note_checkpoint_bytes(&mut self, bytes: u64) {
+        self.total.checkpoint_bytes += bytes;
+        self.last.checkpoint_bytes += bytes;
+    }
+
+    /// Record the one-time item-replay cost of a restore on the restored
+    /// coordinator's profile.
+    pub fn note_restore_items(&mut self, items: u64) {
+        self.total.restore_items += items;
+        self.last.restore_items += items;
     }
 
     /// The most recent window's work (steady-state per-slide cost).
@@ -399,6 +436,7 @@ mod tests {
             plan_items: 5,
             compute_items: 1,
             derive_items: 6,
+            ..SlideWork::default()
         };
         let w2 = SlideWork {
             window_items: 2,
@@ -406,10 +444,15 @@ mod tests {
             plan_items: 3,
             compute_items: 7,
             derive_items: 0,
+            checkpoint_bytes: 100,
+            restore_items: 9,
+            fault_injections: 1,
         };
         assert_eq!(w1.substrate_total(), 36);
         assert_eq!(w1.total(), 42);
+        // Durability counters stay out of the items-touched totals.
         assert_eq!(w2.total(), 16);
+        assert_eq!(w2.substrate_total(), 16);
         let mut p = WorkProfile::new();
         assert_eq!(p.windows(), 0);
         assert_eq!(p.mean_total_per_slide(), 0.0);
@@ -419,9 +462,27 @@ mod tests {
         assert_eq!(p.last(), w2);
         assert_eq!(p.total().window_items, 12);
         assert_eq!(p.total().derive_items, 6);
+        assert_eq!(p.total().checkpoint_bytes, 100);
+        assert_eq!(p.total().restore_items, 9);
+        assert_eq!(p.total().fault_injections, 1);
         assert_eq!(p.total().total(), 58);
         assert!((p.mean_total_per_slide() - 29.0).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
+    }
+
+    #[test]
+    fn checkpoint_and_restore_notes_accumulate_without_new_windows() {
+        let mut p = WorkProfile::new();
+        p.observe(SlideWork { window_items: 3, ..SlideWork::default() });
+        p.note_checkpoint_bytes(512);
+        p.note_checkpoint_bytes(64);
+        p.note_restore_items(40);
+        assert_eq!(p.windows(), 1, "notes must not count as windows");
+        assert_eq!(p.last().checkpoint_bytes, 576);
+        assert_eq!(p.total().checkpoint_bytes, 576);
+        assert_eq!(p.total().restore_items, 40);
+        // Items-touched totals are untouched by durability notes.
+        assert_eq!(p.total().total(), 3);
     }
 
     #[test]

@@ -7,6 +7,32 @@
 //! everything transitively reachable from them. Unaffected nodes keep
 //! their memoized results (Figure 3.1: fresh maps M5, M6 invalidate only
 //! reduces R3, R5; R1, R2, R4 are reused).
+//!
+//! # Example
+//!
+//! A two-map, two-reduce job where only one map's input changed: the
+//! untouched reduce keeps its memoized result.
+//!
+//! ```
+//! use incapprox::sac::ddg::{Ddg, NodeKind};
+//!
+//! let mut g = Ddg::new();
+//! let m0 = g.add_node(NodeKind::Map { chunk_hash: 0xA });
+//! let m1 = g.add_node(NodeKind::Map { chunk_hash: 0xB });
+//! let r0 = g.add_node(NodeKind::Reduce { group: 0 });
+//! let r1 = g.add_node(NodeKind::Reduce { group: 1 });
+//! let out = g.add_node(NodeKind::Output);
+//! g.add_edge(m0, r0);
+//! g.add_edge(m1, r1);
+//! g.add_edge(r0, out);
+//! g.add_edge(r1, out);
+//!
+//! // Only m1's chunk changed: m1 → r1 → out re-execute, in that order.
+//! let affected = g.propagate(&[m1]);
+//! assert_eq!(affected, vec![m1, r1, out]);
+//! // m0 and r0 reuse their memoized results.
+//! assert_eq!(g.reusable(&[m1]), vec![m0, r0]);
+//! ```
 
 use std::collections::VecDeque;
 

@@ -50,6 +50,12 @@ pub struct MemoEntry {
     pub min_timestamp: u64,
     /// Window that produced the entry (diagnostics / LRU-ish eviction).
     pub window_id: u64,
+    /// Stratum whose sample produced the chunk. Shard placement is
+    /// derived from this, so a checkpoint can re-place entries under a
+    /// different shard count at restore (entries stored through the
+    /// legacy stratum-less [`MemoStore::put_chunk`] carry stratum 0,
+    /// which maps to shard 0 under both strategies).
+    pub stratum: StratumId,
 }
 
 /// Hit/miss counters.
@@ -257,7 +263,7 @@ impl MemoStore {
         let idx = self.shard_for(stratum);
         self.shard_mut(idx)
             .chunks
-            .insert(hash, MemoEntry { moments, min_timestamp, window_id });
+            .insert(hash, MemoEntry { moments, min_timestamp, window_id, stratum });
     }
 
     /// Memoize one chunk result without a stratum (stored in shard 0;
@@ -265,7 +271,28 @@ impl MemoStore {
     pub fn put_chunk(&mut self, hash: u64, moments: Moments, min_timestamp: u64, window_id: u64) {
         self.shard_mut(0)
             .chunks
-            .insert(hash, MemoEntry { moments, min_timestamp, window_id });
+            .insert(hash, MemoEntry { moments, min_timestamp, window_id, stratum: 0 });
+    }
+
+    /// Iterate every memoized chunk entry as `(hash, entry)`, across all
+    /// shards — the checkpoint export path. Order is shard-major and
+    /// hash-map-internal within a shard; consumers that need determinism
+    /// (the checkpoint encoder does, for stable artifact bytes) sort by
+    /// hash themselves.
+    pub fn chunk_entries(&self) -> impl Iterator<Item = (u64, &MemoEntry)> + '_ {
+        self.shards.iter().flat_map(|s| s.chunks.iter().map(|(&h, e)| (h, e)))
+    }
+
+    /// All per-stratum combined moments currently stored (checkpoint
+    /// export; pairs with [`MemoStore::put_stratum_moments`]).
+    pub fn stratum_moments_all(&self) -> BTreeMap<StratumId, Moments> {
+        let mut out = BTreeMap::new();
+        for shard in &self.shards {
+            for (&s, &m) in &shard.stratum_moments {
+                out.insert(s, m);
+            }
+        }
+        out
     }
 
     /// Replace the memoized sample runs with this window's biased sample
@@ -587,6 +614,30 @@ mod tests {
         assert!(all[&1].contains(3));
         // Zero-copy: the run points at the stored allocation.
         assert_eq!(all[&0].records().as_ptr(), m.shard(0).items(0).as_ptr());
+    }
+
+    #[test]
+    fn chunk_entries_export_carries_strata_for_resharding() {
+        // Export from a 4-shard store and re-place into a 2-shard store:
+        // every entry must land on its stratum's shard and stay findable.
+        let mut m = MemoStore::sharded(4, ShardStrategy::Hash);
+        for s in 0..8u32 {
+            m.put_chunk_for(s, 200 + s as u64, Moments::from_values(&[s as f64]), s as u64, 1);
+        }
+        m.put_stratum_moments(3, Moments::from_values(&[1.0, 2.0]));
+        let mut entries: Vec<(u64, MemoEntry)> =
+            m.chunk_entries().map(|(h, e)| (h, e.clone())).collect();
+        entries.sort_by_key(|(h, _)| *h);
+        assert_eq!(entries.len(), 8);
+        let mut resharded = MemoStore::sharded(2, ShardStrategy::Modulo);
+        for (h, e) in &entries {
+            resharded.put_chunk_for(e.stratum, *h, e.moments, e.min_timestamp, e.window_id);
+        }
+        for s in 0..8u32 {
+            assert!(resharded.shard(s).contains_chunk(200 + s as u64), "stratum {s}");
+        }
+        assert_eq!(m.stratum_moments_all().len(), 1);
+        assert_eq!(m.stratum_moments_all()[&3].count, 2.0);
     }
 
     #[test]

@@ -31,6 +31,14 @@
 //! `prop_incremental_sampler_matches_from_scratch` pin this, and it is
 //! what lets the O(delta) slide path keep `WindowReport`s byte-identical
 //! to the O(window) baseline.
+//!
+//! The same purity is the checkpoint contract: [`crate::checkpoint`]
+//! never serializes the sampler. Restore calls
+//! [`IncrementalSampler::rebuild`] on the restored window contents under
+//! the same seed and gets back the exact ranked state the crashed run
+//! held — one less subsystem whose drift could break the byte-identical
+//! restore-equivalence gate (the replay cost is surfaced in
+//! [`SlideWork::restore_items`](crate::metrics::SlideWork)).
 
 use std::collections::BTreeMap;
 

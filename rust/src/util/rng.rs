@@ -39,6 +39,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// Snapshot of the internal xoshiro256** state, for checkpointing.
+    /// Restoring via [`Rng::from_state`] continues the exact stream.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a snapshot taken by [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
     /// Next raw 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -199,6 +199,40 @@ impl CountWindow {
     pub fn size(&self) -> usize {
         self.size
     }
+
+    /// Sequence number the next slide's snapshot will carry.
+    pub fn next_window_id(&self) -> u64 {
+        self.next_window_id
+    }
+
+    /// Export the window's durable state for checkpointing: the buffered
+    /// records in insertion order, plus resize evictions still pending
+    /// for the next slide's delta. The min-timestamp deque is *not*
+    /// exported — it is a pure function of the buffer order and
+    /// [`CountWindow::restore_parts`] rebuilds it.
+    pub fn checkpoint_parts(&self) -> (Vec<Record>, Vec<Record>) {
+        (self.buf.iter().copied().collect(), self.pending_removed.clone())
+    }
+
+    /// Rebuild a window from state exported by
+    /// [`CountWindow::checkpoint_parts`] (plus the configured `size` and
+    /// the [`CountWindow::next_window_id`] sequence number). Records are
+    /// re-pushed in order, which reconstructs the exact monotonic
+    /// min-timestamp deque the live window held.
+    pub fn restore_parts(
+        size: usize,
+        buf: Vec<Record>,
+        pending_removed: Vec<Record>,
+        next_window_id: u64,
+    ) -> Self {
+        let mut w = CountWindow::new(size.max(1));
+        for r in buf {
+            w.push(r);
+        }
+        w.pending_removed = pending_removed;
+        w.next_window_id = next_window_id;
+        w
+    }
 }
 
 /// Time-based sliding window (length and slide in logical ticks).
@@ -299,6 +333,45 @@ impl TimeWindow {
     /// Configured (length, slide).
     pub fn params(&self) -> (u64, u64) {
         (self.length, self.slide)
+    }
+
+    /// Sequence number the next emitted snapshot will carry.
+    pub fn next_window_id(&self) -> u64 {
+        self.next_window_id
+    }
+
+    /// Export the window's durable state for checkpointing: the buffered
+    /// records (timestamp order, including records buffered ahead of the
+    /// current window), the exclusive end of the next window, and the
+    /// length of the prefix belonging to the previously emitted window.
+    pub fn checkpoint_parts(&self) -> (Vec<Record>, u64, usize) {
+        (self.buf.iter().copied().collect(), self.next_end, self.in_window)
+    }
+
+    /// Rebuild a window from state exported by
+    /// [`TimeWindow::checkpoint_parts`] plus the constructor params and
+    /// the [`TimeWindow::next_window_id`] sequence number.
+    pub fn restore_parts(
+        length: u64,
+        slide: u64,
+        buf: Vec<Record>,
+        next_end: u64,
+        in_window: usize,
+        next_window_id: u64,
+    ) -> Self {
+        let mut w = TimeWindow::new(length.max(1), slide.clamp(1, length.max(1)));
+        w.buf = buf.into();
+        w.next_end = next_end;
+        w.in_window = in_window.min(w.buf.len());
+        w.next_window_id = next_window_id;
+        w
+    }
+
+    /// The records of the previously emitted window (the prefix the
+    /// positional delta anchors on) — what a restored coordinator rebuilds
+    /// its persistent sampler from.
+    pub fn window_records(&self) -> Vec<Record> {
+        self.buf.range(..self.in_window).copied().collect()
     }
 }
 
@@ -568,6 +641,72 @@ mod tests {
             assert_eq!(ids(&full.delta.inserted), ids(&lazy.delta.inserted));
             assert_eq!(ids(&full.delta.removed), ids(&lazy.delta.removed));
             assert_consistent(&full);
+        }
+    }
+
+    #[test]
+    fn count_window_checkpoint_roundtrip_continues_identically() {
+        // Export/import mid-stream (with a pending resize eviction and
+        // unordered timestamps) and drive both windows forward: every
+        // subsequent snapshot must match field for field.
+        let ts = [9u64, 3, 7, 3, 11, 2, 5, 8];
+        let mut live = CountWindow::new(6);
+        for (i, &t) in ts.iter().enumerate() {
+            live.slide(vec![rec(i as u64, t)]);
+        }
+        live.resize(4); // leaves pending_removed for the next delta
+        let (buf, pending) = live.checkpoint_parts();
+        assert!(!pending.is_empty());
+        let mut restored =
+            CountWindow::restore_parts(live.size(), buf, pending, live.next_window_id());
+        assert_eq!(restored.len(), live.len());
+        for step in 0..6u64 {
+            let batch: Vec<Record> =
+                (100 + step * 2..102 + step * 2).map(|i| rec(i, i % 7)).collect();
+            let a = live.slide(batch.clone());
+            let b = restored.slide(batch);
+            assert_eq!(a.window_id, b.window_id);
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.start_ts, b.start_ts);
+            let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
+            assert_eq!(ids(&a.delta.inserted), ids(&b.delta.inserted));
+            assert_eq!(ids(&a.delta.removed), ids(&b.delta.removed));
+            assert_eq!(ids(a.items()), ids(b.items()));
+        }
+    }
+
+    #[test]
+    fn time_window_checkpoint_roundtrip_continues_identically() {
+        let mut live = TimeWindow::new(10, 5);
+        live.ingest((0..18).map(|i| rec(i, i))); // some buffered ahead
+        live.try_emit(10).unwrap();
+        let (buf, next_end, in_window) = live.checkpoint_parts();
+        assert_eq!(live.window_records().len(), in_window);
+        let (length, slide) = live.params();
+        let mut restored = TimeWindow::restore_parts(
+            length,
+            slide,
+            buf,
+            next_end,
+            in_window,
+            live.next_window_id(),
+        );
+        let mut next_id = 18u64;
+        for boundary in [15u64, 20, 25, 30] {
+            let batch: Vec<Record> =
+                (0..3).map(|k| rec(next_id + k, boundary - 3 + k)).collect();
+            next_id += 3;
+            live.ingest(batch.clone());
+            restored.ingest(batch);
+            let a = live.try_emit(boundary).unwrap();
+            let b = restored.try_emit(boundary).unwrap();
+            assert_eq!(a.window_id, b.window_id);
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.start_ts, b.start_ts);
+            let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
+            assert_eq!(ids(&a.delta.inserted), ids(&b.delta.inserted));
+            assert_eq!(ids(&a.delta.removed), ids(&b.delta.removed));
+            assert_eq!(ids(a.items()), ids(b.items()));
         }
     }
 

@@ -56,6 +56,55 @@ pub trait Generator {
     /// Current mean arrival rate (records/tick) — used by tests and the
     /// aggregator's rate counters that pick the re-allocation interval T.
     fn rate(&self, t: u64) -> f64;
+
+    /// Durable description of this generator's full state (structure +
+    /// RNG), for session checkpoints. `None` (the default) marks the
+    /// generator as non-checkpointable; a session over it refuses to
+    /// checkpoint instead of silently diverging on restore.
+    fn spec(&self) -> Option<SubstreamSpec> {
+        None
+    }
+}
+
+/// Durable description of one checkpointable sub-stream: everything
+/// needed to rebuild the generator mid-stream, including its RNG state
+/// (see [`crate::util::rng::Rng::state`]).
+#[derive(Debug, Clone)]
+pub enum SubstreamSpec {
+    /// A [`PoissonSubstream`].
+    Poisson {
+        /// Stratum the sub-stream feeds.
+        stratum: StratumId,
+        /// Mean arrival rate (records/tick).
+        rate: f64,
+        /// Value distribution.
+        dist: ValueDist,
+        /// RNG state at checkpoint time.
+        rng: [u64; 4],
+    },
+    /// A [`FluctuatingSubstream`].
+    Fluctuating {
+        /// Stratum the sub-stream feeds.
+        stratum: StratumId,
+        /// `(start_tick, rate)` schedule, sorted by start.
+        schedule: Vec<(u64, f64)>,
+        /// Value distribution.
+        dist: ValueDist,
+        /// RNG state at checkpoint time.
+        rng: [u64; 4],
+    },
+}
+
+/// Durable description of a whole [`MultiStream`] (see
+/// [`MultiStream::checkpoint_spec`]).
+#[derive(Debug, Clone)]
+pub struct MultiStreamSpec {
+    /// Per-sub-stream specs, in merge order.
+    pub subs: Vec<SubstreamSpec>,
+    /// Next record id to assign.
+    pub next_id: u64,
+    /// Current logical time.
+    pub now: u64,
 }
 
 /// Constant-rate Poisson sub-stream.
@@ -92,6 +141,15 @@ impl Generator for PoissonSubstream {
 
     fn rate(&self, _t: u64) -> f64 {
         self.rate
+    }
+
+    fn spec(&self) -> Option<SubstreamSpec> {
+        Some(SubstreamSpec::Poisson {
+            stratum: self.stratum,
+            rate: self.rate,
+            dist: self.dist,
+            rng: self.rng.state(),
+        })
     }
 }
 
@@ -151,6 +209,15 @@ impl Generator for FluctuatingSubstream {
             }
         }
         rate
+    }
+
+    fn spec(&self) -> Option<SubstreamSpec> {
+        Some(SubstreamSpec::Fluctuating {
+            stratum: self.stratum,
+            schedule: self.schedule.clone(),
+            dist: self.dist,
+            rng: self.rng.state(),
+        })
     }
 }
 
@@ -236,6 +303,49 @@ impl MultiStream {
     pub fn now(&self) -> u64 {
         self.now
     }
+
+    /// Export the stream's full durable state (per-sub-stream structure +
+    /// RNG, id cursor, clock) for a session checkpoint. Errors if any
+    /// sub-stream does not support checkpointing (its
+    /// [`Generator::spec`] returns `None`).
+    pub fn checkpoint_spec(&self) -> crate::error::Result<MultiStreamSpec> {
+        let mut subs = Vec::with_capacity(self.subs.len());
+        for (i, sub) in self.subs.iter().enumerate() {
+            match sub.spec() {
+                Some(s) => subs.push(s),
+                None => {
+                    return Err(crate::error::Error::Checkpoint(format!(
+                        "sub-stream {i} (stratum {}) is not checkpointable",
+                        sub.stratum()
+                    )))
+                }
+            }
+        }
+        Ok(MultiStreamSpec { subs, next_id: self.next_id, now: self.now })
+    }
+
+    /// Rebuild a stream mid-flight from a [`MultiStreamSpec`]: the
+    /// restored stream emits exactly the records the checkpointed one
+    /// would have emitted next.
+    pub fn from_spec(spec: MultiStreamSpec) -> Self {
+        let subs = spec
+            .subs
+            .into_iter()
+            .map(|s| match s {
+                SubstreamSpec::Poisson { stratum, rate, dist, rng } => {
+                    let mut sub = PoissonSubstream::new(stratum, rate, dist, 0);
+                    sub.rng = Rng::from_state(rng);
+                    Box::new(sub) as Box<dyn Generator + Send>
+                }
+                SubstreamSpec::Fluctuating { stratum, schedule, dist, rng } => {
+                    let mut sub = FluctuatingSubstream::new(stratum, schedule, dist, 0);
+                    sub.rng = Rng::from_state(rng);
+                    Box::new(sub) as Box<dyn Generator + Send>
+                }
+            })
+            .collect();
+        MultiStream { subs, next_id: spec.next_id, now: spec.now }
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +424,31 @@ mod tests {
                 "{dist:?}: mean {mean} want {}",
                 dist.mean()
             );
+        }
+    }
+
+    #[test]
+    fn multistream_spec_roundtrip_continues_identically() {
+        // Checkpoint both generator shapes mid-stream; the restored
+        // stream must emit the exact same records as the original.
+        for mut live in
+            [MultiStream::paper_section5(7), MultiStream::paper_fluctuating(7, 50)]
+        {
+            live.take_records(1234);
+            let spec = live.checkpoint_spec().unwrap();
+            let mut restored = MultiStream::from_spec(spec);
+            assert_eq!(restored.now(), live.now());
+            for _ in 0..40 {
+                let (a, b) = (live.tick(), restored.tick());
+                assert_eq!(a.len(), b.len());
+                for (ra, rb) in a.iter().zip(&b) {
+                    assert_eq!(ra.id, rb.id);
+                    assert_eq!(ra.stratum, rb.stratum);
+                    assert_eq!(ra.timestamp, rb.timestamp);
+                    assert_eq!(ra.key, rb.key);
+                    assert_eq!(ra.value.to_bits(), rb.value.to_bits());
+                }
+            }
         }
     }
 

@@ -14,7 +14,10 @@ pub mod trace;
 pub mod tweets;
 
 pub use flows::FlowLogGen;
-pub use gen::{FluctuatingSubstream, Generator, MultiStream, PoissonSubstream, ValueDist};
+pub use gen::{
+    FluctuatingSubstream, Generator, MultiStream, MultiStreamSpec, PoissonSubstream,
+    SubstreamSpec, ValueDist,
+};
 pub use record::{Record, StratumId};
 pub use trace::{read_trace, write_trace, TraceReplay};
 pub use tweets::TweetGen;

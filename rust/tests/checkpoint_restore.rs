@@ -1,0 +1,243 @@
+//! Checkpoint edge cases: cold and mid-warmup checkpoints, re-sharded
+//! restores, damaged artifacts, the periodic knob, and end-to-end
+//! checkpoint-backed fault recovery. The byte-identical continuation
+//! gates themselves live in `tests/session_queries.rs`
+//! (`restore_equivalence_*`); this file covers the corners.
+
+use incapprox::fault::RecoveryPolicy;
+use incapprox::prelude::*;
+
+fn config() -> SystemConfig {
+    SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 2000,
+        slide: 200,
+        seed: 11,
+        chunk_size: 16,
+        ..SystemConfig::default()
+    }
+}
+
+fn assert_windows_identical(a: &WindowReport, b: &WindowReport, label: &str) {
+    assert_eq!(a.window_id, b.window_id, "{label}");
+    assert_eq!(a.estimate.value.to_bits(), b.estimate.value.to_bits(), "{label}");
+    assert_eq!(a.estimate.margin.to_bits(), b.estimate.margin.to_bits(), "{label}");
+    assert_eq!(a.window_len, b.window_len, "{label}");
+    assert_eq!(a.sample_size, b.sample_size, "{label}");
+    assert_eq!(a.chunks_total, b.chunks_total, "{label}");
+    assert_eq!(a.chunks_reused, b.chunks_reused, "{label}");
+    assert_eq!(a.fresh_items, b.fresh_items, "{label}");
+    assert_eq!(a.strata, b.strata, "{label}");
+}
+
+#[test]
+fn empty_session_checkpoint_restores_and_warms_up_identically() {
+    // Checkpoint before any data has flowed (window empty, memo empty,
+    // queries registered but never answered): restore must work and the
+    // first window must match a never-interrupted twin bit for bit.
+    let cfg = config();
+    let mut live = Session::new(
+        Coordinator::new(cfg.clone()),
+        MultiStream::paper_section5(cfg.seed),
+    )
+    .unwrap();
+    let mut victim = Session::new(
+        Coordinator::new(cfg.clone()),
+        MultiStream::paper_section5(cfg.seed),
+    )
+    .unwrap();
+    let qa = live.submit(QuerySpec::new(AggregateKind::Sum)).unwrap();
+    let qb = victim.submit(QuerySpec::new(AggregateKind::Sum)).unwrap();
+    assert_eq!(qa, qb);
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    let mut restored = Session::restore(&artifact[..], cfg).unwrap();
+    assert_eq!(restored.query_count(), 1);
+    let a = live.warmup().unwrap();
+    let r = restored.warmup().unwrap();
+    assert_windows_identical(&a.window, &r.window, "cold-checkpoint warmup");
+    assert_eq!(
+        a.query(qa).unwrap().estimate.value.to_bits(),
+        r.query(qb).unwrap().estimate.value.to_bits()
+    );
+}
+
+#[test]
+fn mid_warmup_coordinator_checkpoint_roundtrips() {
+    // A half-filled window (fewer items than window_size — no eviction
+    // has ever happened) checkpoints and continues identically.
+    let cfg = config();
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let partial = gen.take_records(cfg.window_size / 2);
+    let rest: Vec<Vec<Record>> = (0..4).map(|_| gen.take_records(cfg.slide)).collect();
+    let mut live = Coordinator::new(cfg.clone());
+    let mut victim = Coordinator::new(cfg.clone());
+    live.process_batch(partial.clone()).unwrap();
+    victim.process_batch(partial).unwrap();
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    let mut restored = Coordinator::restore(&artifact[..], cfg).unwrap();
+    for (i, b) in rest.iter().enumerate() {
+        let a = live.process_batch(b.clone()).unwrap();
+        let r = restored.process_batch(b.clone()).unwrap();
+        assert_windows_identical(&a, &r, &format!("mid-warmup slide {i}"));
+    }
+}
+
+#[test]
+fn restore_under_different_workers_and_strategy_is_output_neutral() {
+    let cfg = config();
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let warm = gen.take_records(cfg.window_size);
+    let slides: Vec<Vec<Record>> = (0..4).map(|_| gen.take_records(cfg.slide)).collect();
+    let mut victim = Coordinator::new(cfg.clone());
+    victim.process_batch(warm.clone()).unwrap();
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    for (workers, strategy) in [(1usize, ShardStrategy::Hash), (3, ShardStrategy::Modulo)] {
+        let mut alt = cfg.clone();
+        alt.num_workers = workers;
+        alt.shard_strategy = strategy;
+        let mut restored = Coordinator::restore(&artifact[..], alt).unwrap();
+        // Drive an identical live twin forward for this comparison arm.
+        let mut twin = Coordinator::new(cfg.clone());
+        twin.process_batch(warm.clone()).unwrap();
+        for (i, b) in slides.iter().enumerate() {
+            let a = twin.process_batch(b.clone()).unwrap();
+            let r = restored.process_batch(b.clone()).unwrap();
+            assert_windows_identical(&a, &r, &format!("workers={workers} slide {i}"));
+        }
+    }
+}
+
+#[test]
+fn exact_mode_checkpoint_roundtrips() {
+    // Native (no sampling, no memo) exercises the full-window snapshot
+    // path through checkpoint/restore too.
+    let cfg = SystemConfig { mode: ExecModeSpec::Native, ..config() };
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let warm = gen.take_records(cfg.window_size);
+    let slides: Vec<Vec<Record>> = (0..3).map(|_| gen.take_records(cfg.slide)).collect();
+    let mut live = Coordinator::new(cfg.clone());
+    let mut victim = Coordinator::new(cfg.clone());
+    live.process_batch(warm.clone()).unwrap();
+    victim.process_batch(warm).unwrap();
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    let mut restored = Coordinator::restore(&artifact[..], cfg).unwrap();
+    for (i, b) in slides.iter().enumerate() {
+        let a = live.process_batch(b.clone()).unwrap();
+        let r = restored.process_batch(b.clone()).unwrap();
+        assert_windows_identical(&a, &r, &format!("native slide {i}"));
+    }
+}
+
+#[test]
+fn damaged_artifacts_error_instead_of_panicking() {
+    let cfg = config();
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let mut session =
+        Session::new(Coordinator::new(cfg.clone()), MultiStream::paper_section5(cfg.seed))
+            .unwrap();
+    session.warmup().unwrap();
+    let mut artifact = Vec::new();
+    session.checkpoint(&mut artifact).unwrap();
+
+    // Truncations at many depths: always a checkpoint error.
+    for cut in [0, 4, artifact.len() / 3, artifact.len() / 2, artifact.len() - 1] {
+        let err = Session::restore(&artifact[..cut], cfg.clone())
+            .err()
+            .expect("truncated artifact must not restore");
+        assert!(
+            err.to_string().contains("checkpoint error"),
+            "cut={cut}: unexpected error {err}"
+        );
+    }
+    // Bit flips across the artifact: caught by the checksum (or an
+    // earlier structural check) — never a panic, never an Ok.
+    for pos in [8usize, 64, artifact.len() / 2, artifact.len() - 9] {
+        let mut bad = artifact.clone();
+        bad[pos] ^= 0x20;
+        assert!(
+            Session::restore(&bad[..], cfg.clone()).is_err(),
+            "flip at {pos} must not restore"
+        );
+    }
+    // Not a checkpoint at all.
+    assert!(Session::restore(&b"not a checkpoint"[..], cfg.clone()).is_err());
+    assert!(Coordinator::restore(&[][..], cfg.clone()).is_err());
+
+    // Config mismatches are loud, not silent divergence.
+    let mut wrong_seed = cfg.clone();
+    wrong_seed.seed ^= 1;
+    assert!(Session::restore(&artifact[..], wrong_seed).is_err());
+    let mut wrong_chunk = cfg.clone();
+    wrong_chunk.chunk_size += 1;
+    assert!(Session::restore(&artifact[..], wrong_chunk).is_err());
+    let mut wrong_slide = cfg.clone();
+    wrong_slide.slide /= 2;
+    assert!(
+        Session::restore(&artifact[..], wrong_slide).is_err(),
+        "a different slide would silently change batch pacing"
+    );
+
+    // A bare coordinator artifact is not a session artifact.
+    let mut coord = Coordinator::new(cfg.clone());
+    coord.process_batch(gen.take_records(cfg.window_size)).unwrap();
+    let mut bare = Vec::new();
+    coord.checkpoint(&mut bare).unwrap();
+    assert!(Session::restore(&bare[..], cfg.clone()).is_err());
+    // …but a session artifact restores fine as a bare coordinator (the
+    // session section is simply unused).
+    assert!(Coordinator::restore(&artifact[..], cfg).is_ok());
+}
+
+#[test]
+fn periodic_knob_with_checkpoint_recovery_end_to_end() {
+    // The §6.3 story end to end: periodic checkpoints + injected memo
+    // loss + `RecoveryPolicy::Checkpoint`. Reuse survives the faults
+    // (the fallback image comes from the checkpoint chain) and the
+    // injections surface through the work profile.
+    let mut cfg = config();
+    cfg.checkpoint_every_slides = 1;
+    cfg.fault_memo_loss = 0.4;
+    let coordinator =
+        Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::Checkpoint);
+    let mut session =
+        Session::new(coordinator, MultiStream::paper_section5(cfg.seed)).unwrap();
+    session.warmup().unwrap();
+    let mut faulted_reuse = Vec::new();
+    for _ in 0..12 {
+        let out = session.step().unwrap();
+        if out.window.fault_injected {
+            faulted_reuse.push(out.window.item_reuse_fraction());
+        }
+    }
+    let coord = session.coordinator();
+    let totals = coord.work_profile().total();
+    assert!(coord.faults_injected() >= 1, "p=0.4 over 13 windows should inject");
+    assert_eq!(totals.fault_injections, coord.faults_injected());
+    assert!(totals.checkpoint_bytes > 0);
+    assert!(
+        faulted_reuse.iter().all(|&f| f > 0.5),
+        "checkpoint fallback should preserve reuse on faulted windows: {faulted_reuse:?}"
+    );
+
+    // The recovery policy and the injector RNG both round-trip, so a
+    // restored session replays the remaining fault schedule with the
+    // same handling — byte-identical even under ongoing faults.
+    let mut artifact = Vec::new();
+    session.checkpoint(&mut artifact).unwrap();
+    let mut restored = Session::restore(&artifact[..], cfg.clone()).unwrap();
+    for i in 0..6 {
+        let a = session.step().unwrap();
+        let r = restored.step().unwrap();
+        assert_eq!(a.window.fault_injected, r.window.fault_injected, "slide {i}");
+        assert_eq!(
+            a.window.estimate.value.to_bits(),
+            r.window.estimate.value.to_bits(),
+            "slide {i}"
+        );
+        assert_eq!(a.window.fresh_items, r.window.fresh_items, "slide {i}");
+    }
+}

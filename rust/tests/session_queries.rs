@@ -265,6 +265,164 @@ fn queries_consistent_in_every_exec_mode() {
     }
 }
 
+fn assert_outputs_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
+    assert_windows_identical(&a.window, &b.window, label);
+    assert_eq!(a.queries.len(), b.queries.len(), "{label}");
+    for (qa, qb) in a.queries.iter().zip(&b.queries) {
+        assert_eq!(qa.id, qb.id, "{label}");
+        assert_eq!(qa.kind, qb.kind, "{label}");
+        assert_eq!(qa.estimate.value.to_bits(), qb.estimate.value.to_bits(), "{label}");
+        assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
+        assert_eq!(qa.sample_size, qb.sample_size, "{label}");
+        assert_eq!(qa.population, qb.population, "{label}");
+        assert_eq!(
+            qa.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
+            qb.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
+            "{label}"
+        );
+    }
+}
+
+fn submit_n(coord: &mut Coordinator, n: usize) {
+    for i in 0..n {
+        let kind = AggregateKind::ALL[i % AggregateKind::ALL.len()];
+        coord.submit_query(QuerySpec::new(kind)).unwrap();
+    }
+}
+
+#[test]
+fn restore_equivalence_count_windows_all_paths_and_query_counts() {
+    // The tentpole's recovery gate: a coordinator restored from a
+    // checkpoint taken at slide k continues byte-identically to the
+    // uninterrupted run from slide k+1 onward — across the serial,
+    // sharded, and O(delta) incremental configurations and N ∈ {1,4,16}
+    // concurrent queries. The restore deliberately runs under a
+    // *different* worker count (sharded ≡ serial is already pinned, so
+    // re-sharding the memo must be output-neutral).
+    let mut configs = Vec::new();
+    let mut serial = config(ExecModeSpec::IncApprox);
+    serial.num_workers = 1;
+    serial.incremental_slide = false;
+    configs.push(("serial", serial));
+    let mut sharded = config(ExecModeSpec::IncApprox);
+    sharded.num_workers = 4;
+    sharded.incremental_slide = false;
+    configs.push(("sharded", sharded));
+    let incremental = config(ExecModeSpec::IncApprox);
+    assert!(incremental.incremental_slide);
+    configs.push(("incremental", incremental));
+    for (cname, cfg) in configs {
+        for &n_queries in &[1usize, 4, 16] {
+            let mut gen = MultiStream::paper_section5(cfg.seed);
+            let mut data = vec![gen.take_records(cfg.window_size)];
+            for _ in 0..6 {
+                data.push(gen.take_records(cfg.slide));
+            }
+            let mut live = Coordinator::new(cfg.clone());
+            let mut victim = Coordinator::new(cfg.clone());
+            submit_n(&mut live, n_queries);
+            submit_n(&mut victim, n_queries);
+            for b in &data[..4] {
+                live.process_batch_queries(b.clone()).unwrap();
+                victim.process_batch_queries(b.clone()).unwrap();
+            }
+            let mut artifact = Vec::new();
+            victim.checkpoint(&mut artifact).unwrap();
+            let mut alt = cfg.clone();
+            alt.num_workers = if cfg.num_workers == 1 { 4 } else { 1 };
+            let mut restored = Coordinator::restore(&artifact[..], alt).unwrap();
+            assert_eq!(restored.query_count(), n_queries);
+            for (i, b) in data[4..].iter().enumerate() {
+                let a = live.process_batch_queries(b.clone()).unwrap();
+                let r = restored.process_batch_queries(b.clone()).unwrap();
+                assert_outputs_identical(&a, &r, &format!("{cname}/N={n_queries} slide {i}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn restore_equivalence_time_windows() {
+    // Same gate on the time-based window manager: checkpoint mid-stream
+    // (including records buffered ahead of the current window), restore,
+    // and require byte-identical emissions at every later boundary.
+    let cfg = config(ExecModeSpec::IncApprox);
+    for &n_queries in &[1usize, 4, 16] {
+        let mut gen = MultiStream::paper_section5(23);
+        let ticks: Vec<Vec<Record>> = (0..1000).map(|_| gen.tick()).collect();
+        let mut live = Coordinator::new_time_windowed(cfg.clone(), 400, 40);
+        let mut victim = Coordinator::new_time_windowed(cfg.clone(), 400, 40);
+        submit_n(&mut live, n_queries);
+        submit_n(&mut victim, n_queries);
+        let mut emitted = 0usize;
+        for now in 1..=500u64 {
+            let batch = ticks[now as usize - 1].clone();
+            let a = live.ingest_tick_queries(batch.clone(), now).unwrap();
+            let b = victim.ingest_tick_queries(batch, now).unwrap();
+            assert_eq!(a.is_some(), b.is_some());
+            emitted += usize::from(a.is_some());
+        }
+        assert!(emitted > 2, "warm-up must emit windows");
+        let mut artifact = Vec::new();
+        victim.checkpoint(&mut artifact).unwrap();
+        let mut restored = Coordinator::restore(&artifact[..], cfg.clone()).unwrap();
+        let mut compared = 0usize;
+        for now in 501..=1000u64 {
+            let batch = ticks[now as usize - 1].clone();
+            let a = live.ingest_tick_queries(batch.clone(), now).unwrap();
+            let r = restored.ingest_tick_queries(batch, now).unwrap();
+            assert_eq!(a.is_some(), r.is_some(), "N={n_queries} now={now}");
+            if let (Some(a), Some(r)) = (a, r) {
+                assert_outputs_identical(&a, &r, &format!("time/N={n_queries} now={now}"));
+                compared += 1;
+            }
+        }
+        assert!(compared > 10, "too few windows compared: {compared}");
+    }
+}
+
+#[test]
+fn session_restore_continues_byte_identically() {
+    // End to end through the broker substrate: generator state and the
+    // in-flight backlog survive the checkpoint, and the periodic
+    // `pipeline.checkpoint_every_slides` knob keeps the chain warm so
+    // the flush is an O(delta) append.
+    let mut cfg = config(ExecModeSpec::IncApprox);
+    cfg.checkpoint_every_slides = 2;
+    let mk = |cfg: &SystemConfig| {
+        let mut s = Session::new(
+            Coordinator::new(cfg.clone()),
+            MultiStream::paper_section5(cfg.seed),
+        )
+        .unwrap();
+        s.submit(QuerySpec::new(AggregateKind::Sum)).unwrap();
+        s.submit(QuerySpec::new(AggregateKind::Mean).with_confidence(0.99)).unwrap();
+        s.submit(QuerySpec::new(AggregateKind::Extrema).with_stratum(2)).unwrap();
+        s
+    };
+    let mut live = mk(&cfg);
+    let mut victim = mk(&cfg);
+    live.warmup().unwrap();
+    victim.warmup().unwrap();
+    for _ in 0..3 {
+        live.step().unwrap();
+        victim.step().unwrap();
+    }
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    // The periodic knob kept the chain warm: the flush appended a delta,
+    // and the cumulative checkpoint bytes are visible in the profile.
+    assert!(victim.coordinator().work_profile().total().checkpoint_bytes > 0);
+    drop(victim); // the crash
+    let mut restored = Session::restore(&artifact[..], cfg.clone()).unwrap();
+    assert_eq!(restored.query_count(), 3);
+    for i in 0..5 {
+        let a = live.step().unwrap();
+        let r = restored.step().unwrap();
+        assert_outputs_identical(&a, &r, &format!("session slide {i}"));
+    }
+}
+
 #[test]
 fn time_windowed_coordinator_answers_queries() {
     let cfg = config(ExecModeSpec::IncApprox);
