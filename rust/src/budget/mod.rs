@@ -1,20 +1,31 @@
 //! The virtual cost function (§2.3.3 assumption 2, §6.2).
 //!
-//! Maps the user's query budget to a per-window sample size. Three
-//! implementations, matching the budget forms §2.1 lists:
+//! Maps the user's query budget to a per-window sample size. Four
+//! implementations, matching the budget forms §2.1 lists plus the
+//! OLA-style error contract:
 //!
 //! * [`FractionCost`] — direct sampling fraction (what §5's
 //!   micro-benchmarks parameterize).
 //! * [`TokenBucketCost`] — Pulsar-style resource budget: a token bucket
-//!   refilled per window; every processed item costs tokens, the sample
-//!   size is what the bucket can afford.
+//!   refilled per window (unused tokens carry over up to a burst cap);
+//!   every processed item costs tokens, the sample size is what the
+//!   bucket can afford.
 //! * [`LatencyCost`] — latency SLA: an EWMA predictor of per-item
 //!   processing cost (the "resource prediction model" of §6.2) converts a
 //!   window latency budget into an item count, adapting as observed
 //!   latencies drift.
+//! * [`TargetErrorCost`] — error-target contract ("≤ 2% relative error at
+//!   95%"): a closed-loop controller that reads the achieved §3.5
+//!   interval after every slide and solves Eq 3.2 backwards
+//!   ([`required_sample_size`]) for the next slide's sample size.
+//!
+//! The first three run **open-loop** over the error bound (they size the
+//! sample from resources and never look at the margin the system just
+//! emitted); `TargetErrorCost` is the one that closes the loop.
 
 use crate::config::system::BudgetSpec;
 use crate::error::{Error, Result};
+use crate::stats::stratified::{estimate_sum, required_sample_size, StratumAgg};
 
 /// Turns a window size into a sample size, within the query budget.
 pub trait CostFunction: Send {
@@ -23,10 +34,67 @@ pub trait CostFunction: Send {
 
     /// Feed back the observed processing cost of the last window
     /// (`items` processed in `elapsed_ms`). Only adaptive policies react.
+    /// `elapsed_ms` is the cost *attributable to this budget's query*
+    /// (its substrate share plus its own derivation — see
+    /// [`attribute_query_cost`]), never the whole-slide latency.
     fn observe(&mut self, items: usize, elapsed_ms: f64);
+
+    /// Feed back the achieved §3.5 per-stratum aggregates of the last
+    /// slide, restricted to the strata the budget's query covers.
+    /// `window_population` is the whole window's item count: the sampler
+    /// allocates proportionally across *all* strata, so a budget whose
+    /// query covers only part of the window must scale its demand by
+    /// `window_population / covered_population` to actually land the
+    /// samples it needs inside its own strata. Only error-target
+    /// policies react; the default is a no-op.
+    fn observe_bound(&mut self, _strata: &[StratumAgg], _window_population: f64) {}
+
+    /// Does this policy consume [`CostFunction::observe_bound`] feedback?
+    /// The coordinator skips building the per-stratum aggregates (and
+    /// charges no `SlideWork::budget_adjust` work) when not.
+    fn wants_bound_feedback(&self) -> bool {
+        false
+    }
+
+    /// Durable adaptive state, if any — checkpointed as one base-segment
+    /// entry plus journaled `BudgetAdjust` ops so a restored run
+    /// continues with the same controller trajectory. `None` (the
+    /// default) for stateless policies.
+    fn export_state(&self) -> Option<f64> {
+        None
+    }
+
+    /// Restore durable adaptive state exported by
+    /// [`CostFunction::export_state`]. No-op by default.
+    fn import_state(&mut self, _state: f64) {}
 
     /// Name for reports.
     fn name(&self) -> &'static str;
+}
+
+/// Split one slide's realized cost into the share attributable to a
+/// single query: its proportional share of the shared substrate cost
+/// (`substrate_ms · alloc / union`) plus its own derivation time.
+/// Returns the `(items, elapsed_ms)` pair to feed that query's
+/// [`CostFunction::observe`].
+///
+/// This is the fix for the cross-contamination bug: feeding every query
+/// the union sample size and the whole-slide latency let query A's load
+/// inflate query B's per-item `LatencyCost` model. A query's observation
+/// must scale with *its own* allocation — doubling A's budget leaves B's
+/// `(items, elapsed)` untouched (see the unit tests).
+pub fn attribute_query_cost(
+    alloc: usize,
+    union_realized: usize,
+    substrate_ms: f64,
+    derive_ms: f64,
+) -> (usize, f64) {
+    let share = if union_realized == 0 {
+        0.0
+    } else {
+        substrate_ms * alloc as f64 / union_realized as f64
+    };
+    (alloc, share + derive_ms)
 }
 
 /// Fixed sampling fraction.
@@ -55,23 +123,48 @@ impl CostFunction for FractionCost {
     }
 }
 
-/// Pulsar-style token bucket: `capacity` tokens refill each window;
-/// processing one item costs `cost_per_item` tokens.
+/// Pulsar-style token bucket: `capacity` tokens refill each window and
+/// processing one item costs `cost_per_item` tokens. **Unused tokens
+/// carry over** to later windows, capped at a burst ceiling (default
+/// 2 × capacity), so a small window's leftover budget buys a larger
+/// sample when the stream picks back up.
+///
+/// (Historical note: carry-over used to be dead code — `sample_size`
+/// reset the bucket to `capacity` before spending, so the post-spend
+/// subtraction never influenced anything and [`TokenBucketCost::tokens`]
+/// reported a stale value between windows. The refill semantics are now
+/// explicit: the bucket starts *empty*, gains `capacity` tokens at the
+/// start of each window, is clamped to the burst cap, and keeps whatever
+/// the window didn't spend.)
 #[derive(Debug, Clone, Copy)]
 pub struct TokenBucketCost {
     capacity: f64,
     cost_per_item: f64,
+    /// Carry-over ceiling: refills never push the bucket past this.
+    burst: f64,
+    /// Tokens currently banked (post-spend; pre-refill of the next
+    /// window). Starts at 0 — the first window affords exactly one
+    /// refill, not refill + a phantom full bucket.
     tokens: f64,
 }
 
 impl TokenBucketCost {
-    /// Bucket with `capacity` tokens per window.
+    /// Bucket with `capacity` tokens per window and the default burst cap
+    /// of `2 × capacity`.
     pub fn new(capacity: f64, cost_per_item: f64) -> Self {
         assert!(capacity > 0.0 && cost_per_item > 0.0);
-        TokenBucketCost { capacity, cost_per_item, tokens: capacity }
+        TokenBucketCost { capacity, cost_per_item, burst: 2.0 * capacity, tokens: 0.0 }
     }
 
-    /// Tokens currently available.
+    /// Override the burst cap (clamped to at least one refill).
+    pub fn with_burst(mut self, burst: f64) -> Self {
+        assert!(burst > 0.0);
+        self.burst = burst.max(self.capacity);
+        self
+    }
+
+    /// Tokens currently banked — live between windows: refills and spends
+    /// update it, so this is the real carry-over balance.
     pub fn tokens(&self) -> f64 {
         self.tokens
     }
@@ -79,15 +172,26 @@ impl TokenBucketCost {
 
 impl CostFunction for TokenBucketCost {
     fn sample_size(&mut self, window_len: usize) -> usize {
-        // Refill, then spend.
-        self.tokens = self.capacity;
+        // Refill (carry-over + one window's allowance, burst-capped),
+        // then spend what the window actually uses.
+        self.tokens = (self.tokens + self.capacity).min(self.burst);
         let affordable = (self.tokens / self.cost_per_item).floor() as usize;
         let n = affordable.min(window_len).max(1);
-        self.tokens -= n as f64 * self.cost_per_item;
+        // The forced minimum of 1 item may overdraw a sub-item budget;
+        // saturate at 0 rather than carrying debt.
+        self.tokens = (self.tokens - n as f64 * self.cost_per_item).max(0.0);
         n
     }
 
     fn observe(&mut self, _items: usize, _elapsed_ms: f64) {}
+
+    fn export_state(&self) -> Option<f64> {
+        Some(self.tokens)
+    }
+
+    fn import_state(&mut self, state: f64) {
+        self.tokens = state.clamp(0.0, self.burst);
+    }
 
     fn name(&self) -> &'static str {
         "token-bucket"
@@ -133,8 +237,152 @@ impl CostFunction for LatencyCost {
         self.per_item_ms = self.alpha * observed + (1.0 - self.alpha) * self.per_item_ms;
     }
 
+    fn export_state(&self) -> Option<f64> {
+        Some(self.per_item_ms)
+    }
+
+    fn import_state(&mut self, state: f64) {
+        if state > 0.0 {
+            self.per_item_ms = state;
+        }
+    }
+
     fn name(&self) -> &'static str {
         "latency-sla"
+    }
+}
+
+/// Error-target budget (`BudgetSpec::TargetError`): the §6.2 cost
+/// function run **closed-loop** over the §3.5 error bound, the way
+/// OLA-style systems (BlinkDB's error-bounded queries, StreamApprox's
+/// budget loop) let a user ask for "≤ 2% relative error at 95%".
+///
+/// After every slide its [`CostFunction::observe_bound`] hook receives
+/// the per-stratum aggregates the query actually saw, re-estimates the
+/// achieved interval at the controller's own confidence, and solves
+/// Eq 3.2 backwards ([`required_sample_size`]: per stratum
+/// `nᵢ ≈ (t·sᵢ/εᵢ)²`, aggregated under proportional allocation with
+/// finite-population correction) for the sample size the target needs.
+/// The demand is smoothed (EWMA) so one noisy variance estimate does not
+/// whipsaw the sampler, floored at two samples per observed stratum (the
+/// minimum that yields a variance estimate at all), and clamped to the
+/// window at `sample_size` time.
+///
+/// Everything the controller reads — moments, populations, t-scores — is
+/// byte-identical across the serial, sharded, and incremental execution
+/// paths, so the controller trajectory (and therefore every sample size
+/// it picks) is deterministic: no wall-clock input, unlike
+/// [`LatencyCost`].
+#[derive(Debug, Clone, Copy)]
+pub struct TargetErrorCost {
+    relative_bound: f64,
+    confidence: f64,
+    /// EWMA-smoothed sample-size demand; `None` until the first
+    /// feedback arrives (the seed fraction sizes the warm-up windows).
+    smoothed_n: Option<f64>,
+    /// EWMA weight of the newest demand.
+    alpha: f64,
+    /// Sampling fraction used before any feedback exists.
+    seed_fraction: f64,
+}
+
+impl TargetErrorCost {
+    /// Controller targeting `relative_bound` (ε/|value|, > 0) at
+    /// `confidence` ∈ (0, 1).
+    pub fn new(relative_bound: f64, confidence: f64) -> Self {
+        assert!(relative_bound > 0.0);
+        assert!(0.0 < confidence && confidence < 1.0);
+        TargetErrorCost {
+            relative_bound,
+            confidence,
+            smoothed_n: None,
+            alpha: 0.3,
+            seed_fraction: 0.1,
+        }
+    }
+
+    /// The target relative bound.
+    pub fn relative_bound(&self) -> f64 {
+        self.relative_bound
+    }
+
+    /// The confidence the bound is promised at.
+    pub fn confidence(&self) -> f64 {
+        self.confidence
+    }
+
+    /// The controller's current smoothed sample-size demand, if feedback
+    /// has arrived yet.
+    pub fn demand(&self) -> Option<f64> {
+        self.smoothed_n
+    }
+}
+
+impl CostFunction for TargetErrorCost {
+    fn sample_size(&mut self, window_len: usize) -> usize {
+        let n = match self.smoothed_n {
+            Some(n) => n.round() as usize,
+            // No feedback yet: the paper's default 10% fraction seeds the
+            // loop (a pilot sample the first windows refine).
+            None => (window_len as f64 * self.seed_fraction).round() as usize,
+        };
+        n.clamp(1, window_len.max(1))
+    }
+
+    fn observe(&mut self, _items: usize, _elapsed_ms: f64) {}
+
+    fn observe_bound(&mut self, strata: &[StratumAgg], window_population: f64) {
+        // Achieved interval at the controller's own confidence (the
+        // query's report may be at a different level).
+        let Ok(est) = estimate_sum(strata, self.confidence) else {
+            return;
+        };
+        if !(est.value.abs() > 0.0) {
+            return; // no scale to target a *relative* bound against
+        }
+        let observed = strata.iter().filter(|s| s.b > 0.0).count();
+        let covered_pop: f64 =
+            strata.iter().filter(|s| s.b > 0.0).map(|s| s.population).sum();
+        if !(covered_pop > 0.0) {
+            return;
+        }
+        // b ≥ 2 per observed stratum: the least that estimates variance —
+        // capped at the covered population itself (a 1-item stratum can
+        // never yield 2 samples, and an inverted clamp range panics).
+        let floor = ((2 * observed.max(1)) as f64).min(covered_pop).max(1.0);
+        let target_margin = self.relative_bound * est.value.abs();
+        let required_covered = required_sample_size(strata, target_margin, est.t)
+            // `None` = zero observed variance: any size meets the target.
+            .unwrap_or(floor)
+            .clamp(floor, covered_pop);
+        // The backsolve is in covered-strata samples; the sampler spreads
+        // a total budget across the WHOLE window proportionally, so scale
+        // up by the uncovered remainder (×1 for whole-window queries).
+        let scale = (window_population / covered_pop).max(1.0);
+        let required =
+            (required_covered * scale).clamp(floor, window_population.max(floor));
+        self.smoothed_n = Some(match self.smoothed_n {
+            Some(prev) => self.alpha * required + (1.0 - self.alpha) * prev,
+            None => required,
+        });
+    }
+
+    fn wants_bound_feedback(&self) -> bool {
+        true
+    }
+
+    fn export_state(&self) -> Option<f64> {
+        self.smoothed_n
+    }
+
+    fn import_state(&mut self, state: f64) {
+        if state > 0.0 {
+            self.smoothed_n = Some(state);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "target-error"
     }
 }
 
@@ -159,6 +407,14 @@ pub fn validate_spec(spec: &BudgetSpec) -> Result<()> {
         BudgetSpec::LatencyMs(ms) if !(ms > 0.0) => Err(Error::Config(format!(
             "latency budget must be > 0 ms, got {ms}"
         ))),
+        BudgetSpec::TargetError { relative_bound, confidence }
+            if !(relative_bound > 0.0 && 0.0 < confidence && confidence < 1.0) =>
+        {
+            Err(Error::Config(format!(
+                "target-error budget needs relative_bound > 0 and confidence in (0, 1), \
+                 got {relative_bound} @ {confidence}"
+            )))
+        }
         _ => Ok(()),
     }
 }
@@ -171,6 +427,9 @@ pub fn from_spec(spec: &BudgetSpec) -> Box<dyn CostFunction> {
             Box::new(TokenBucketCost::new(per_window, cost_per_item))
         }
         BudgetSpec::LatencyMs(ms) => Box::new(LatencyCost::new(ms, 0.001)),
+        BudgetSpec::TargetError { relative_bound, confidence } => {
+            Box::new(TargetErrorCost::new(relative_bound, confidence))
+        }
     }
 }
 
@@ -190,11 +449,44 @@ mod tests {
     #[test]
     fn token_bucket_affords_budget() {
         let mut c = TokenBucketCost::new(500.0, 2.0);
+        // The bucket starts empty: the first window affords exactly one
+        // refill, not refill + a phantom full bucket.
         assert_eq!(c.sample_size(10_000), 250);
-        // Refills every window.
+        // A fully spent bucket refills to the same allowance.
         assert_eq!(c.sample_size(10_000), 250);
         // Small windows capped at window length.
         assert_eq!(c.sample_size(100), 100);
+    }
+
+    #[test]
+    fn token_bucket_carries_over_with_burst_cap() {
+        let mut c = TokenBucketCost::new(500.0, 2.0);
+        assert_eq!(c.tokens(), 0.0, "bucket starts empty");
+        // A 100-item window spends 200 of the 500-token refill…
+        assert_eq!(c.sample_size(100), 100);
+        assert_eq!(c.tokens(), 300.0, "accessor reports the live balance");
+        // …and the leftover carries into the next window's budget:
+        // refill min(300 + 500, burst 1000) = 800 → 400 items.
+        assert_eq!(c.sample_size(10_000), 400);
+        assert_eq!(c.tokens(), 0.0);
+        // Two idle (1-item) windows bank tokens only up to the burst cap.
+        assert_eq!(c.sample_size(1), 1);
+        assert_eq!(c.sample_size(1), 1);
+        assert_eq!(c.tokens(), 996.0); // 500−2, then min(498+500, 1000)−2
+        assert_eq!(c.sample_size(10_000), 500, "burst cap bounds the binge");
+        // A custom burst cap of one refill disables carry-over entirely.
+        let mut c = TokenBucketCost::new(500.0, 2.0).with_burst(500.0);
+        assert_eq!(c.sample_size(100), 100);
+        assert_eq!(c.sample_size(10_000), 250, "burst = capacity → no carry-over");
+        // Carry-over state round-trips through the checkpoint hooks.
+        let mut c = TokenBucketCost::new(500.0, 2.0);
+        c.sample_size(100);
+        let state = c.export_state().unwrap();
+        assert_eq!(state, 300.0);
+        let mut restored = TokenBucketCost::new(500.0, 2.0);
+        restored.import_state(state);
+        assert_eq!(restored.tokens(), 300.0);
+        assert_eq!(restored.sample_size(10_000), 400);
     }
 
     #[test]
@@ -228,6 +520,123 @@ mod tests {
             "token-bucket"
         );
         assert_eq!(from_spec(&BudgetSpec::LatencyMs(10.0)).name(), "latency-sla");
+        let target =
+            from_spec(&BudgetSpec::TargetError { relative_bound: 0.02, confidence: 0.95 });
+        assert_eq!(target.name(), "target-error");
+        assert!(target.wants_bound_feedback(), "the loop-closing policy");
+        assert!(!from_spec(&BudgetSpec::Fraction(0.5)).wants_bound_feedback());
+    }
+
+    /// One stratum's aggregates with the given sample/population shape.
+    fn agg(b: f64, sum: f64, sumsq: f64, population: f64) -> StratumAgg {
+        StratumAgg { b, sum, sumsq, population }
+    }
+
+    #[test]
+    fn target_error_seeds_then_tracks_demand() {
+        let mut c = TargetErrorCost::new(0.01, 0.95);
+        // Before feedback: the 10% pilot fraction, window-clamped.
+        assert_eq!(c.sample_size(10_000), 1000);
+        assert_eq!(c.sample_size(5), 1);
+        assert!(c.demand().is_none());
+        // Feedback: one stratum, b = 100 of B = 10 000, mean 50, s² ≈ 64.
+        // A 1% relative target on τ̂ ≈ 500 000 is ε = 5000.
+        let strata = [agg(100.0, 5000.0, 256_400.0, 10_000.0)];
+        c.observe_bound(&strata, 10_000.0);
+        let first = c.demand().expect("feedback must set a demand");
+        assert!(first > 2.0, "non-degenerate demand, got {first}");
+        // The controller's next ask is its smoothed demand, clamped.
+        assert_eq!(c.sample_size(10_000), first.round() as usize);
+        assert!(c.sample_size(10) <= 10, "never exceeds the window");
+        // Stationary feedback converges: repeated identical observations
+        // move the EWMA monotonically toward the same fixed point.
+        let mut prev = first;
+        for _ in 0..20 {
+            c.observe_bound(&strata, 10_000.0);
+            let cur = c.demand().unwrap();
+            assert!(
+                (cur - prev).abs() <= (first - prev).abs().max(1e-9) + 1e-9,
+                "demand must not diverge: {prev} -> {cur}"
+            );
+            prev = cur;
+        }
+        // Tighter target, larger demand.
+        let mut tight = TargetErrorCost::new(0.001, 0.95);
+        tight.observe_bound(&strata, 10_000.0);
+        assert!(tight.demand().unwrap() > prev, "0.1% must cost more than 1%");
+        assert!(
+            tight.demand().unwrap() <= 10_000.0,
+            "demand is population-clamped (FPC)"
+        );
+        // A stratum-restricted query covering 1/4 of the window must
+        // scale its demand by 4×: proportional allocation only lands a
+        // quarter of the total budget inside its stratum.
+        let mut whole = TargetErrorCost::new(0.01, 0.95);
+        let mut filtered = TargetErrorCost::new(0.01, 0.95);
+        whole.observe_bound(&strata, 10_000.0);
+        filtered.observe_bound(&strata, 40_000.0);
+        let (dw, df) = (whole.demand().unwrap(), filtered.demand().unwrap());
+        assert!(
+            (df - 4.0 * dw).abs() < 1e-6 * dw,
+            "filtered demand must scale with the uncovered window: {dw} vs {df}"
+        );
+    }
+
+    #[test]
+    fn target_error_handles_degenerate_feedback() {
+        let mut c = TargetErrorCost::new(0.02, 0.95);
+        // Empty / zero-value / zero-variance feedback must not poison the
+        // controller with NaN or zero demands.
+        c.observe_bound(&[], 100.0);
+        assert!(c.demand().is_none());
+        c.observe_bound(&[agg(10.0, 0.0, 0.0, 100.0)], 100.0); // τ̂ = 0
+        assert!(c.demand().is_none());
+        c.observe_bound(&[agg(10.0, 50.0, 250.0, 100.0)], 100.0); // s² = 0
+        let d = c.demand().expect("zero variance still sets the floor demand");
+        assert_eq!(d, 2.0, "floor = 2 per observed stratum");
+        // A single-item stratum: the 2-per-stratum floor exceeds the
+        // covered population — must cap at the population, not panic on
+        // an inverted clamp range. (Scale-up then asks for the whole
+        // window: landing 1 sample in a 1-item stratum under
+        // proportional allocation takes a census.)
+        let mut tiny = TargetErrorCost::new(0.02, 0.95);
+        tiny.observe_bound(&[agg(1.0, 5.0, 25.0, 1.0)], 100.0);
+        assert_eq!(tiny.demand(), Some(100.0));
+        assert!(c.sample_size(1000) >= 1);
+        // State round-trips through the checkpoint hooks.
+        let state = c.export_state().unwrap();
+        let mut restored = TargetErrorCost::new(0.02, 0.95);
+        restored.import_state(state);
+        assert_eq!(restored.demand(), c.demand());
+    }
+
+    #[test]
+    fn attribution_scales_with_own_allocation_not_the_union() {
+        // The cross-contamination regression, pinned at the unit level:
+        // two queries on wildly different budgets share one slide.
+        let (big_alloc, small_alloc, union) = (10_000usize, 100usize, 10_000usize);
+        let substrate_ms = 80.0;
+        let (items_b, ms_b) = attribute_query_cost(big_alloc, union, substrate_ms, 0.5);
+        let (items_s, ms_s) = attribute_query_cost(small_alloc, union, substrate_ms, 0.5);
+        // Each query observes *its own* allocation, never the union.
+        assert_eq!(items_b, big_alloc);
+        assert_eq!(items_s, small_alloc);
+        // The small query pays its 1% substrate share plus its derive.
+        assert!((ms_s - (0.8 + 0.5)).abs() < 1e-12, "got {ms_s}");
+        assert!((ms_b - (80.0 + 0.5)).abs() < 1e-12, "got {ms_b}");
+        // Query A's load must NOT inflate query B's observation: double
+        // A's allocation (union and substrate cost grow with it) and B's
+        // per-item estimate stays put.
+        let (_, ms_s2) =
+            attribute_query_cost(small_alloc, 2 * union, 2.0 * substrate_ms, 0.5);
+        assert!(
+            (ms_s2 - ms_s).abs() < 1e-12,
+            "B's share changed with A's load: {ms_s} -> {ms_s2}"
+        );
+        // Degenerate union: only the derive cost is attributable.
+        let (items_0, ms_0) = attribute_query_cost(0, 0, substrate_ms, 0.25);
+        assert_eq!(items_0, 0);
+        assert_eq!(ms_0, 0.25);
     }
 
     #[test]
@@ -247,6 +656,14 @@ mod tests {
         );
         assert!(validate_spec(&BudgetSpec::LatencyMs(5.0)).is_ok());
         assert!(validate_spec(&BudgetSpec::LatencyMs(0.0)).is_err());
+        let te = |relative_bound, confidence| {
+            validate_spec(&BudgetSpec::TargetError { relative_bound, confidence })
+        };
+        assert!(te(0.02, 0.95).is_ok());
+        assert!(te(0.0, 0.95).is_err());
+        assert!(te(-0.1, 0.95).is_err());
+        assert!(te(0.02, 0.0).is_err());
+        assert!(te(0.02, 1.0).is_err());
         // NaN must be rejected, not passed through to a constructor panic.
         assert!(validate_spec(&BudgetSpec::Fraction(f64::NAN)).is_err());
         assert!(
@@ -254,6 +671,8 @@ mod tests {
                 .is_err()
         );
         assert!(validate_spec(&BudgetSpec::LatencyMs(f64::NAN)).is_err());
+        assert!(te(f64::NAN, 0.95).is_err());
+        assert!(te(0.02, f64::NAN).is_err());
     }
 
     #[test]
@@ -264,5 +683,8 @@ mod tests {
         assert!(c.sample_size(10) >= 1);
         let mut c = LatencyCost::new(0.0001, 1.0);
         assert!(c.sample_size(10) >= 1);
+        let mut c = TargetErrorCost::new(0.5, 0.95);
+        assert!(c.sample_size(10) >= 1);
+        assert!(c.sample_size(0) >= 1);
     }
 }

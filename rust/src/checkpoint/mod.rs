@@ -66,9 +66,18 @@ use wire::{CkptReader, CkptWriter};
 
 /// Artifact magic ("IACK" little-endian).
 const MAGIC: u32 = 0x4B43_4149;
-/// Format version. Bump on any wire change; readers reject newer
-/// versions instead of misparsing them.
-const VERSION: u32 = 1;
+/// Format version. Bump on any wire change; readers reject other
+/// versions instead of misparsing them. History: v1 = PR 4's initial
+/// format; v2 adds adaptive-budget controller state (the
+/// `budget_states` base-segment field, the `BudgetAdjust` journal op,
+/// and budget wire tag 3 for `BudgetSpec::TargetError`).
+const VERSION: u32 = 2;
+
+/// The `budget_states` slot of the coordinator's *session-level* cost
+/// function (`SystemConfig::budget`). Per-query controllers use their
+/// raw `QueryId`, which is a sequence number and can never collide with
+/// this sentinel.
+pub(crate) const SESSION_BUDGET_SLOT: u64 = u64::MAX;
 
 /// Configuration facts baked into an artifact. Restore demands they
 /// match the target config: a different seed, mode, chunk size, map
@@ -219,6 +228,17 @@ pub(crate) struct BaseState {
     pub items: BTreeMap<StratumId, Vec<Record>>,
     pub moments: BTreeMap<StratumId, Moments>,
     pub misc: Misc,
+    /// Adaptive-budget controller state at the snapshot:
+    /// `(slot, policy, state)` per cost function that carries durable
+    /// state (`CostFunction::export_state`), where `slot` is the raw
+    /// query id or [`SESSION_BUDGET_SLOT`] and `policy` is the cost
+    /// function's name. Later `BudgetAdjust` journal ops update these
+    /// slots; restore applies the final value — but only onto a cost
+    /// function of the *same policy* (budgets may differ freely between
+    /// checkpoint and restore configs, and e.g. a banked-token count
+    /// must never be imported as a latency EWMA) — so the controller
+    /// trajectory continues exactly where the live run was.
+    pub budget_states: Vec<(u64, String, f64)>,
 }
 
 /// One journaled substrate mutation. Deltas replay these through the
@@ -243,6 +263,11 @@ pub(crate) enum JournalOp {
         min_ts: u64,
         window_id: u64,
     },
+    /// An adaptive budget's post-slide controller state (absolute, not a
+    /// delta — replay is last-wins). `slot` is the raw query id or
+    /// [`SESSION_BUDGET_SLOT`]; `policy` is the cost function's name,
+    /// checked at import so a state never lands on a different policy.
+    BudgetAdjust { slot: u64, policy: String, state: f64 },
 }
 
 impl JournalOp {
@@ -456,6 +481,11 @@ fn put_budget<W: Write>(w: &mut CkptWriter<W>, b: &BudgetSpec) -> Result<()> {
             w.f64(*ms)?;
             w.f64(0.0)
         }
+        BudgetSpec::TargetError { relative_bound, confidence } => {
+            w.u8(3)?;
+            w.f64(*relative_bound)?;
+            w.f64(*confidence)
+        }
     }
 }
 
@@ -467,6 +497,7 @@ fn get_budget<R: Read>(r: &mut CkptReader<R>) -> Result<BudgetSpec> {
         0 => BudgetSpec::Fraction(a),
         1 => BudgetSpec::Tokens { per_window: a, cost_per_item: b },
         2 => BudgetSpec::LatencyMs(a),
+        3 => BudgetSpec::TargetError { relative_bound: a, confidence: b },
         other => return Err(Error::Checkpoint(format!("unknown budget tag {other}"))),
     })
 }
@@ -671,6 +702,12 @@ fn put_journal_op<W: Write>(w: &mut CkptWriter<W>, op: &JournalOp) -> Result<()>
                 },
             )
         }
+        JournalOp::BudgetAdjust { slot, policy, state } => {
+            w.u8(5)?;
+            w.u64(*slot)?;
+            w.bytes(policy.as_bytes())?;
+            w.f64(*state)
+        }
     }
 }
 
@@ -693,8 +730,20 @@ fn get_journal_op<R: Read>(r: &mut CkptReader<R>) -> Result<JournalOp> {
                 window_id: c.window_id,
             }
         }
+        5 => {
+            let slot = r.u64()?;
+            let policy = policy_name(r.bytes()?)?;
+            JournalOp::BudgetAdjust { slot, policy, state: r.f64()? }
+        }
         other => return Err(Error::Checkpoint(format!("unknown journal op tag {other}"))),
     })
+}
+
+/// Decode a budget-policy name (always ASCII in practice; anything
+/// non-UTF-8 is corruption).
+fn policy_name(bytes: Vec<u8>) -> Result<String> {
+    String::from_utf8(bytes)
+        .map_err(|_| Error::Checkpoint("budget policy name is not UTF-8".into()))
 }
 
 /// Encode one segment into a standalone blob (the outer artifact
@@ -718,7 +767,14 @@ pub(crate) fn encode_segment(seg: &Segment) -> Vec<u8> {
                         w.records(recs)?;
                     }
                     put_stratum_moments(w, &b.moments)?;
-                    put_misc(w, &b.misc)
+                    put_misc(w, &b.misc)?;
+                    w.u64(b.budget_states.len() as u64)?;
+                    for (slot, policy, state) in &b.budget_states {
+                        w.u64(*slot)?;
+                        w.bytes(policy.as_bytes())?;
+                        w.f64(*state)?;
+                    }
+                    Ok(())
                 }
                 Segment::Delta(d) => {
                     w.u8(1)?;
@@ -774,7 +830,14 @@ pub(crate) fn decode_segment(bytes: &[u8]) -> Result<Segment> {
             }
             let moments = get_stratum_moments(&mut r)?;
             let misc = get_misc(&mut r)?;
-            Ok(Segment::Base(BaseState { window, chunks, items, moments, misc }))
+            let n_states = r.len()?;
+            let mut budget_states = Vec::with_capacity(n_states.min(1 << 12));
+            for _ in 0..n_states {
+                let slot = r.u64()?;
+                let policy = policy_name(r.bytes()?)?;
+                budget_states.push((slot, policy, r.f64()?));
+            }
+            Ok(Segment::Base(BaseState { window, chunks, items, moments, misc, budget_states }))
         }
         1 => {
             let n_ops = r.len()?;
@@ -1180,7 +1243,10 @@ mod tests {
                     kind: AggregateKind::Mean,
                     stratum: Some(1),
                     confidence: 0.99,
-                    budget: BudgetSpec::Tokens { per_window: 100.0, cost_per_item: 2.0 },
+                    budget: BudgetSpec::TargetError {
+                        relative_bound: 0.02,
+                        confidence: 0.95,
+                    },
                     map_rounds: Some(0),
                 },
             }],
@@ -1205,6 +1271,10 @@ mod tests {
             items: BTreeMap::from([(0u32, vec![rec(1, 1)])]),
             moments: BTreeMap::from([(0u32, Moments::from_values(&[3.0]))]),
             misc: misc.clone(),
+            budget_states: vec![
+                (SESSION_BUDGET_SLOT, "target-error".to_string(), 123.5),
+                (2, "token-bucket".to_string(), 77.25),
+            ],
         });
         let bytes = encode_segment(&base);
         match decode_segment(&bytes).unwrap() {
@@ -1216,8 +1286,21 @@ mod tests {
                 assert_eq!(b.items[&0].len(), 1);
                 assert_eq!(b.misc.windows_processed, 7);
                 assert_eq!(b.misc.queries[0].spec.confidence, 0.99);
+                assert_eq!(
+                    b.misc.queries[0].spec.budget,
+                    BudgetSpec::TargetError { relative_bound: 0.02, confidence: 0.95 },
+                    "budget wire tag 3 must round-trip"
+                );
                 assert_eq!(b.misc.recovery, RecoveryPolicy::Checkpoint);
                 assert_eq!(b.misc.injector_rng, [1, 2, 3, 4]);
+                assert_eq!(
+                    b.budget_states,
+                    vec![
+                        (SESSION_BUDGET_SLOT, "target-error".to_string(), 123.5),
+                        (2, "token-bucket".to_string(), 77.25),
+                    ],
+                    "controller state must round-trip with its policy tag"
+                );
             }
             Segment::Delta(_) => panic!("expected base"),
         }
@@ -1235,6 +1318,11 @@ mod tests {
                     min_ts: 5,
                     window_id: 8,
                 },
+                JournalOp::BudgetAdjust {
+                    slot: SESSION_BUDGET_SLOT,
+                    policy: "target-error".to_string(),
+                    state: 321.75,
+                },
             ],
             items: vec![(
                 1u32,
@@ -1247,8 +1335,13 @@ mod tests {
         let bytes = encode_segment(&delta);
         match decode_segment(&bytes).unwrap() {
             Segment::Delta(d) => {
-                assert_eq!(d.ops.len(), 5);
+                assert_eq!(d.ops.len(), 6);
                 assert!(matches!(d.ops[2], JournalOp::Resize { new_size: 20 }));
+                assert!(matches!(
+                    &d.ops[5],
+                    JournalOp::BudgetAdjust { slot: SESSION_BUDGET_SLOT, policy, state }
+                        if policy == "target-error" && *state == 321.75
+                ));
                 assert_eq!(d.items.len(), 1);
                 assert_eq!(d.items[0].1, 3);
                 assert_eq!(d.items[0].2.len(), 2);

@@ -93,6 +93,18 @@ pub enum BudgetSpec {
     /// Latency SLA per window in milliseconds; the EWMA predictor converts
     /// it to an item count.
     LatencyMs(f64),
+    /// Error-target budget (the OLA-style contract: "≤ 2% relative error
+    /// at 95% confidence"). Closed-loop: after each slide the adaptive
+    /// controller in `budget/` reads the achieved §3.5 margin and solves
+    /// Eq 3.2 backwards for the sample size the *next* slide needs —
+    /// finite-population-corrected, smoothed, clamped to the window.
+    TargetError {
+        /// Target relative half-width ε/|value| of the confidence
+        /// interval (must be > 0; e.g. `0.02` for ±2%).
+        relative_bound: f64,
+        /// Confidence level the bound is promised at, in (0, 1).
+        confidence: f64,
+    },
 }
 
 impl Default for BudgetSpec {
@@ -253,6 +265,11 @@ impl SystemConfig {
         }
         if let Some(v) = get_f64(&map, "budget.latency_ms")? {
             cfg.budget = BudgetSpec::LatencyMs(v);
+        }
+        if let Some(rb) = get_f64(&map, "budget.target_relative_error")? {
+            let confidence =
+                get_f64(&map, "budget.target_confidence")?.unwrap_or(0.95);
+            cfg.budget = BudgetSpec::TargetError { relative_bound: rb, confidence };
         }
         if let Some(v) = get_usize(&map, "sampling.realloc_interval")? {
             cfg.realloc_interval = v;
@@ -422,6 +439,31 @@ mod tests {
     fn latency_budget() {
         let cfg = SystemConfig::from_toml("[budget]\nlatency_ms = 50").unwrap();
         assert_eq!(cfg.budget, BudgetSpec::LatencyMs(50.0));
+    }
+
+    #[test]
+    fn target_error_budget() {
+        let cfg =
+            SystemConfig::from_toml("[budget]\ntarget_relative_error = 0.02").unwrap();
+        assert_eq!(
+            cfg.budget,
+            BudgetSpec::TargetError { relative_bound: 0.02, confidence: 0.95 },
+            "target confidence defaults to 95%"
+        );
+        let cfg = SystemConfig::from_toml(
+            "[budget]\ntarget_relative_error = 0.05\ntarget_confidence = 0.99",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.budget,
+            BudgetSpec::TargetError { relative_bound: 0.05, confidence: 0.99 }
+        );
+        // Degenerate targets are config errors, not controller panics.
+        assert!(SystemConfig::from_toml("[budget]\ntarget_relative_error = 0.0").is_err());
+        assert!(SystemConfig::from_toml(
+            "[budget]\ntarget_relative_error = 0.02\ntarget_confidence = 1.0"
+        )
+        .is_err());
     }
 
     #[test]

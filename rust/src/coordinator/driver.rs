@@ -72,9 +72,27 @@
 //! and each query's answer is an O(strata) derivation fold over the
 //! shared per-stratum moments ([`crate::job::aggregate`]). Per-slide
 //! touched items and memo entries are therefore independent of query
-//! count — only [`SlideWork::derive_items`] scales with N. With no
-//! queries registered the coordinator behaves exactly like the
-//! pre-session single-query API (the equivalence the session tests pin).
+//! count — only [`SlideWork::derive_items`] and
+//! [`SlideWork::budget_adjust`] scale with N. With no queries registered
+//! the coordinator behaves exactly like the pre-session single-query API
+//! (the equivalence the session tests pin).
+//!
+//! ## The closed error-bound loop
+//!
+//! Budgets of kind [`BudgetSpec::TargetError`] run **closed-loop**: after
+//! every slide the driver hands each adaptive budget the per-stratum
+//! aggregates its query covers
+//! ([`CostFunction::observe_bound`](crate::budget::CostFunction)), and
+//! the controller solves Eq 3.2 backwards for the sample size the next
+//! slide needs (see [`crate::budget::TargetErrorCost`]). Everything the
+//! controller reads is byte-identical across the serial, sharded, and
+//! incremental paths, so the adaptive trajectory is deterministic and
+//! checkpointable: controller states ride in the base segment and as
+//! `BudgetAdjust` journal ops, and a restored run continues the exact
+//! trajectory. Per-query *cost* feedback is attributed too: each query's
+//! `observe` receives its own allocation and its own cost share
+//! ([`crate::budget::attribute_query_cost`]), never the union sample +
+//! whole-slide latency.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -82,9 +100,9 @@ use std::io::{Read, Write};
 use crate::budget::{self, CostFunction};
 use crate::checkpoint::{
     self, Artifact, BaseState, ChunkEntry, CkptTracker, Compat, DeltaState, JournalOp,
-    Misc, QueryEntry, Segment, SessionSection, WindowCkpt,
+    Misc, QueryEntry, Segment, SessionSection, WindowCkpt, SESSION_BUDGET_SLOT,
 };
-use crate::config::system::{ExecModeSpec, SystemConfig};
+use crate::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
 use crate::coordinator::query::{QueryId, QuerySpec};
 use crate::coordinator::report::{QueryReport, SlideOutput, StratumReport, WindowReport};
 use crate::error::Result;
@@ -219,11 +237,18 @@ fn plan_one_stratum(
 }
 
 /// One registered query: its spec plus its live cost function (the
-/// adaptive budgets carry per-query state, e.g. the latency EWMA).
+/// adaptive budgets carry per-query state, e.g. the latency EWMA or the
+/// error-target controller's smoothed demand).
 struct RegisteredQuery {
     id: QueryId,
     spec: QuerySpec,
     cost: Box<dyn CostFunction>,
+    /// The sample size this query's own budget asked for on the current
+    /// slide (set by `union_sample_size`). Cost feedback is attributed
+    /// against this, never against the union the shared sampler ran at —
+    /// feeding every query the union + whole-slide latency let one
+    /// query's load contaminate every other query's cost model.
+    last_alloc: usize,
 }
 
 /// The streaming coordinator: owns the window, the persistent sampler,
@@ -363,7 +388,24 @@ impl Coordinator {
         let id = QueryId::new(self.next_query_id);
         self.next_query_id += 1;
         let cost = budget::from_spec(&spec.budget);
-        self.queries.push(RegisteredQuery { id, spec, cost });
+        self.queries.push(RegisteredQuery { id, spec, cost, last_alloc: 0 });
+        Ok(id)
+    }
+
+    /// Test seam: register a query with a caller-supplied cost function
+    /// (the driver tests use a recording stub to pin what `observe`
+    /// actually receives). Production budgets always come from
+    /// [`budget::from_spec`] via [`Coordinator::submit_query`].
+    #[cfg(test)]
+    pub(crate) fn submit_query_with_cost(
+        &mut self,
+        spec: QuerySpec,
+        cost: Box<dyn CostFunction>,
+    ) -> Result<QueryId> {
+        spec.validate_for(&self.cfg)?;
+        let id = QueryId::new(self.next_query_id);
+        self.next_query_id += 1;
+        self.queries.push(RegisteredQuery { id, spec, cost, last_alloc: 0 });
         Ok(id)
     }
 
@@ -396,7 +438,12 @@ impl Coordinator {
         }
         self.queries
             .iter_mut()
-            .map(|q| q.cost.sample_size(window_len))
+            .map(|q| {
+                // Remember each query's own ask: post-slide cost feedback
+                // is attributed against it, not against the union.
+                q.last_alloc = q.cost.sample_size(window_len);
+                q.last_alloc
+            })
             .max()
             .unwrap_or(1)
     }
@@ -843,10 +890,13 @@ impl Coordinator {
         let estimate = estimate_sum(&aggs, self.cfg.confidence)?;
 
         // Answer every registered query from the *shared* per-stratum
-        // moments and exact populations — O(strata) per query, the only
-        // per-slide work that scales with query count (`derive_items`).
+        // moments and exact populations — O(strata) per query. Each
+        // derivation is timed individually so post-slide cost feedback
+        // can charge a query for its own derive, not its neighbors'.
         let mut query_reports: Vec<QueryReport> = Vec::with_capacity(self.queries.len());
+        let mut derive_ms: Vec<f64> = Vec::with_capacity(self.queries.len());
         for q in &self.queries {
+            let sw_derive = Stopwatch::start();
             let d = derive_aggregate(
                 q.spec.kind,
                 q.spec.stratum,
@@ -854,6 +904,7 @@ impl Coordinator {
                 &stratum_moments,
                 &sample.population,
             )?;
+            derive_ms.push(sw_derive.elapsed_ms());
             slide_work.derive_items += d.strata_touched;
             query_reports.push(QueryReport {
                 id: q.id,
@@ -862,7 +913,39 @@ impl Coordinator {
                 sample_size: d.sample_size,
                 population: d.population,
                 extrema: d.extrema,
+                target_rel_bound: match q.spec.budget {
+                    BudgetSpec::TargetError { relative_bound, .. } => Some(relative_bound),
+                    _ => None,
+                },
             });
+        }
+
+        // Close the error-bound loop (§3.5 margin → Eq 3.2 backwards):
+        // every adaptive error-target budget reads the achieved
+        // per-stratum aggregates its own query covers and re-solves for
+        // the sample size the *next* slide needs. O(strata) per adaptive
+        // budget, charged to `budget_adjust` — with `derive_items` the
+        // only work allowed to scale with query count.
+        if self.cost.wants_bound_feedback() {
+            slide_work.budget_adjust += aggs.len() as u64;
+            self.cost.observe_bound(&aggs, window_len as f64);
+        }
+        for q in &mut self.queries {
+            if !q.cost.wants_bound_feedback() {
+                continue;
+            }
+            let feedback: Vec<StratumAgg> = stratum_moments
+                .iter()
+                .filter(|entry| q.spec.stratum.map_or(true, |want| want == *entry.0))
+                .map(|(s, m)| {
+                    StratumAgg::from_moments(
+                        m,
+                        sample.population.get(s).copied().unwrap_or(0) as f64,
+                    )
+                })
+                .collect();
+            slide_work.budget_adjust += feedback.len() as u64;
+            q.cost.observe_bound(&feedback, window_len as f64);
         }
 
         // Memoize the biased sample's runs + per-stratum state for the
@@ -882,11 +965,32 @@ impl Coordinator {
         let latency_ms = sw.elapsed_ms();
         self.profile.observe(plan_ms, compute_ms, sw_finalize.elapsed_ms());
         self.work.observe(slide_work);
+        // The session-level budget owns the whole window: it observes the
+        // realized union sample and the full slide latency.
         self.cost.observe(sample_size, latency_ms);
-        // Adaptive per-query budgets observe the same realized cost (the
-        // substrate is shared, so every query "paid" the same slide).
-        for q in &mut self.queries {
-            q.cost.observe(sample_size, latency_ms);
+        // Per-query budgets observe their OWN cost: their proportional
+        // share of the shared substrate plus their own derivation time.
+        // (Feeding every query the union sample + whole-slide latency
+        // cross-contaminated the per-query `LatencyCost` EWMA models —
+        // query A's load inflated query B's per-item estimate.)
+        let total_derive_ms: f64 = derive_ms.iter().sum();
+        let substrate_ms = (latency_ms - total_derive_ms).max(0.0);
+        for (q, &d_ms) in self.queries.iter_mut().zip(&derive_ms) {
+            let (items, elapsed) =
+                budget::attribute_query_cost(q.last_alloc, sample_size, substrate_ms, d_ms);
+            q.cost.observe(items, elapsed);
+        }
+        // Journal the post-slide controller states so a restored run
+        // continues on the same budget trajectory (absolute values;
+        // replay is last-wins).
+        if self.ckpt_wants_ops() {
+            for (slot, policy, state) in self.budget_state_slots() {
+                self.ckpt_push(JournalOp::BudgetAdjust {
+                    slot,
+                    policy: policy.to_string(),
+                    state,
+                });
+            }
         }
 
         Ok(SlideOutput {
@@ -920,6 +1024,25 @@ impl Coordinator {
         if let Some(t) = &mut self.ckpt {
             t.push(op);
         }
+    }
+
+    /// Every adaptive budget's durable state, as `(slot, policy, state)`
+    /// — the session cost under [`SESSION_BUDGET_SLOT`], then each query
+    /// under its raw id. The single source of truth for *which* states
+    /// are durable: both the per-slide `BudgetAdjust` journaling and the
+    /// base-segment `budget_states` field walk this, so the journal and
+    /// the base can never disagree.
+    fn budget_state_slots(&self) -> Vec<(u64, &'static str, f64)> {
+        let mut slots: Vec<(u64, &'static str, f64)> = Vec::new();
+        if let Some(state) = self.cost.export_state() {
+            slots.push((SESSION_BUDGET_SLOT, self.cost.name(), state));
+        }
+        for q in &self.queries {
+            if let Some(state) = q.cost.export_state() {
+                slots.push((q.id.as_u64(), q.cost.name(), state));
+            }
+        }
+        slots
     }
 
     /// Export the window's durable state.
@@ -988,12 +1111,23 @@ impl Coordinator {
             .into_iter()
             .map(|(s, run)| (s, run.records().to_vec()))
             .collect();
+        // Adaptive-budget controller state (error-target demand, token
+        // carry-over, latency EWMA) — one slot per stateful cost
+        // function, tagged with its policy name, so restored runs
+        // continue the same trajectory (and never import a state onto a
+        // different policy).
+        let budget_states: Vec<(u64, String, f64)> = self
+            .budget_state_slots()
+            .into_iter()
+            .map(|(slot, policy, state)| (slot, policy.to_string(), state))
+            .collect();
         BaseState {
             window: self.ckpt_window_state(),
             chunks,
             items,
             moments: self.memo.stratum_moments_all(),
             misc: self.ckpt_misc(),
+            budget_states,
         }
     }
 
@@ -1118,6 +1252,14 @@ impl Coordinator {
         restore_items += items.values().map(SampleRun::len).sum::<usize>() as u64;
         let mut moments = base.moments;
         let mut misc = base.misc;
+        // Adaptive-budget controller trajectory: seeded by the base
+        // snapshot, updated by every journaled adjustment (last-wins),
+        // applied once the cost functions exist below.
+        let mut budget_states: BTreeMap<u64, (String, f64)> = base
+            .budget_states
+            .into_iter()
+            .map(|(slot, policy, state)| (slot, (policy, state)))
+            .collect();
         let mut window = match base.window {
             WindowCkpt::Count { size, next_window_id, buf, pending } => {
                 restore_items += (buf.len() + pending.len()) as u64;
@@ -1190,6 +1332,9 @@ impl Coordinator {
                         restore_items += 1;
                         memo.put_chunk_for(stratum, hash, m, min_ts, window_id);
                     }
+                    JournalOp::BudgetAdjust { slot, policy, state } => {
+                        budget_states.insert(slot, (policy, state));
+                    }
                 }
             }
             let mut next_items = BTreeMap::new();
@@ -1233,7 +1378,30 @@ impl Coordinator {
         for q in misc.queries {
             q.spec.validate_for(&coord.cfg)?;
             let cost = budget::from_spec(&q.spec.budget);
-            coord.queries.push(RegisteredQuery { id: QueryId::new(q.raw_id), spec: q.spec, cost });
+            coord.queries.push(RegisteredQuery {
+                id: QueryId::new(q.raw_id),
+                spec: q.spec,
+                cost,
+                last_alloc: 0,
+            });
+        }
+        // Resume the adaptive-budget trajectories. A state only lands on
+        // a cost function of the SAME policy: `Compat` deliberately lets
+        // budgets differ between checkpoint and restore configs, and a
+        // banked-token count imported as, say, a latency EWMA would
+        // poison the model. Mismatched or orphaned slots (removed
+        // queries, a swapped session budget) are simply ignored.
+        if let Some((policy, state)) = budget_states.get(&SESSION_BUDGET_SLOT) {
+            if policy == coord.cost.name() {
+                coord.cost.import_state(*state);
+            }
+        }
+        for q in &mut coord.queries {
+            if let Some((policy, state)) = budget_states.get(&q.id.as_u64()) {
+                if policy == q.cost.name() {
+                    q.cost.import_state(*state);
+                }
+            }
         }
         coord.injector.restore_state(misc.injector_rng, misc.injector_count);
         // The recovery policy survives too: the injector RNG replays the
@@ -1808,6 +1976,76 @@ mod tests {
         assert_eq!(out.window.sample_size, 400);
         // Both queries were answered from that one sample.
         assert!(out.queries.iter().all(|q| q.sample_size == 400));
+    }
+
+    /// Fixed-allocation cost stub that records every `observe` call —
+    /// the seam that pins what the driver actually feeds per-query cost
+    /// models.
+    struct RecordingCost {
+        alloc: usize,
+        observed: std::sync::Arc<std::sync::Mutex<Vec<(usize, f64)>>>,
+    }
+
+    impl CostFunction for RecordingCost {
+        fn sample_size(&mut self, window_len: usize) -> usize {
+            self.alloc.clamp(1, window_len.max(1))
+        }
+
+        fn observe(&mut self, items: usize, elapsed_ms: f64) {
+            self.observed.lock().unwrap().push((items, elapsed_ms));
+        }
+
+        fn name(&self) -> &'static str {
+            "recording"
+        }
+    }
+
+    #[test]
+    fn per_query_cost_feedback_is_own_allocation_not_union() {
+        // The cross-contamination regression: two queries on wildly
+        // different budgets (20× apart). Before the fix every query's
+        // cost function observed the UNION sample size and the
+        // whole-slide latency, so the small query's model was fed the big
+        // query's load. Now each observes its own allocation and its own
+        // cost share.
+        use std::sync::{Arc, Mutex};
+        let cfg = config(ExecModeSpec::IncApprox);
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        let big_log = Arc::new(Mutex::new(Vec::new()));
+        let small_log = Arc::new(Mutex::new(Vec::new()));
+        coord
+            .submit_query_with_cost(
+                QuerySpec::new(AggregateKind::Sum),
+                Box::new(RecordingCost { alloc: 400, observed: big_log.clone() }),
+            )
+            .unwrap();
+        coord
+            .submit_query_with_cost(
+                QuerySpec::new(AggregateKind::Mean),
+                Box::new(RecordingCost { alloc: 20, observed: small_log.clone() }),
+            )
+            .unwrap();
+        coord.process_batch(gen.take_records(cfg.window_size)).unwrap();
+        for _ in 0..3 {
+            coord.process_batch(gen.take_records(cfg.slide)).unwrap();
+        }
+        let big = big_log.lock().unwrap();
+        let small = small_log.lock().unwrap();
+        assert_eq!(big.len(), 4);
+        assert_eq!(small.len(), 4);
+        for ((items_b, ms_b), (items_s, ms_s)) in big.iter().zip(small.iter()) {
+            // Each budget sees its OWN ask — the small query must never
+            // observe the ~400-item union its neighbor forced.
+            assert_eq!(*items_b, 400);
+            assert_eq!(*items_s, 20);
+            // And its attributed cost share is no larger than the big
+            // query's (1/20th of the substrate plus its own derive).
+            assert!(
+                ms_s <= ms_b,
+                "small query charged more than the big one: {ms_s} vs {ms_b}"
+            );
+        }
     }
 
     #[test]

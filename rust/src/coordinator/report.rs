@@ -109,20 +109,49 @@ pub struct QueryReport {
     /// `(min, max)` of the queried sample (`Extrema` queries only;
     /// conservative bounds on the inverse-reduce path).
     pub extrema: Option<(f64, f64)>,
+    /// The relative error bound the query's `BudgetSpec::TargetError`
+    /// budget promises (`None` for open-loop budgets). Compare against
+    /// [`QueryReport::achieved_rel_bound`] to see the closed loop at
+    /// work: after convergence the achieved bound tracks this target
+    /// instead of whatever a fixed resource budget happens to buy.
+    pub target_rel_bound: Option<f64>,
 }
 
 impl QueryReport {
+    /// The relative error bound this slide actually delivered
+    /// (margin / |value|; 0 for exact answers).
+    pub fn achieved_rel_bound(&self) -> f64 {
+        self.estimate.relative_error()
+    }
+
+    /// Did this slide's achieved bound meet the query's error target?
+    /// `None` when the query runs an open-loop budget (no target to
+    /// meet).
+    pub fn meets_target(&self) -> Option<bool> {
+        self.target_rel_bound.map(|t| self.achieved_rel_bound() <= t)
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
+        let target = match self.target_rel_bound {
+            Some(t) => format!(
+                " bound={:.2}%/≤{:.2}%{}",
+                self.achieved_rel_bound() * 100.0,
+                t * 100.0,
+                if self.meets_target() == Some(true) { "" } else { " [MISS]" }
+            ),
+            None => String::new(),
+        };
         format!(
-            "q{} {} = {:.3} ± {:.3} ({}%) sample={} pop={}",
+            "q{} {} = {:.3} ± {:.3} ({}%) sample={} pop={}{}",
             self.id.as_u64(),
             self.kind.name(),
             self.estimate.value,
             self.estimate.margin,
             (self.estimate.confidence * 100.0) as u32,
             self.sample_size,
-            self.population
+            self.population,
+            target
         )
     }
 }
@@ -218,6 +247,7 @@ mod tests {
             sample_size: 5,
             population: 10,
             extrema: None,
+            target_rel_bound: None,
         };
         let out = SlideOutput { window, queries: vec![q] };
         assert!(out.query(QueryId::new(3)).is_some());
@@ -225,5 +255,31 @@ mod tests {
         let s = out.queries[0].summary();
         assert!(s.contains("q3 mean"), "{s}");
         assert!(s.contains("95%"), "{s}");
+        // Open-loop queries have no target to report against.
+        assert_eq!(out.queries[0].meets_target(), None);
+        assert!(!s.contains("bound="), "{s}");
+    }
+
+    #[test]
+    fn target_bound_surfaced_and_compared() {
+        // estimate(): 100 ± 5 → achieved relative bound 5%.
+        let mut q = QueryReport {
+            id: QueryId::new(1),
+            kind: AggregateKind::Sum,
+            estimate: estimate(),
+            sample_size: 5,
+            population: 10,
+            extrema: None,
+            target_rel_bound: Some(0.10),
+        };
+        assert!((q.achieved_rel_bound() - 0.05).abs() < 1e-12);
+        assert_eq!(q.meets_target(), Some(true));
+        let s = q.summary();
+        assert!(s.contains("bound=5.00%/≤10.00%"), "{s}");
+        assert!(!s.contains("[MISS]"), "{s}");
+        // A missed target is called out.
+        q.target_rel_bound = Some(0.01);
+        assert_eq!(q.meets_target(), Some(false));
+        assert!(q.summary().contains("[MISS]"), "{}", q.summary());
     }
 }

@@ -213,9 +213,16 @@ pub struct SlideWork {
     /// Items whose moments the backend computed fresh.
     pub compute_items: u64,
     /// Per-stratum moment reads performed to derive the registered
-    /// queries' answers — the only counter allowed to scale with query
-    /// count (O(strata) per query; derivation never touches items).
+    /// queries' answers — with `budget_adjust`, the only counters allowed
+    /// to scale with query count (O(strata) per query; derivation never
+    /// touches items).
     pub derive_items: u64,
+    /// Per-stratum aggregate reads fed back to **adaptive error-target
+    /// budgets** (`BudgetSpec::TargetError`) to re-solve Eq 3.2 for the
+    /// next slide's sample size. O(strata) per adaptive budget; 0 when
+    /// every budget is open-loop. Like `derive_items`, allowed to scale
+    /// with query count — never with the window.
+    pub budget_adjust: u64,
     /// Bytes appended to the in-memory checkpoint chain this slide (0
     /// when checkpointing is off). The durability analog of the O(delta)
     /// invariant: once the base segment exists, periodic checkpoints
@@ -240,7 +247,7 @@ impl SlideWork {
     /// slide work), and `fault_injections` (an event count), so enabling
     /// durability never perturbs the O(delta) work comparisons.
     pub fn total(&self) -> u64 {
-        self.substrate_total() + self.derive_items
+        self.substrate_total() + self.derive_items + self.budget_adjust
     }
 
     /// Items touched by the shared substrate stages (window, sampler,
@@ -274,6 +281,7 @@ impl WorkProfile {
         self.total.plan_items += w.plan_items;
         self.total.compute_items += w.compute_items;
         self.total.derive_items += w.derive_items;
+        self.total.budget_adjust += w.budget_adjust;
         self.total.checkpoint_bytes += w.checkpoint_bytes;
         self.total.restore_items += w.restore_items;
         self.total.fault_injections += w.fault_injections;
@@ -436,6 +444,7 @@ mod tests {
             plan_items: 5,
             compute_items: 1,
             derive_items: 6,
+            budget_adjust: 4,
             ..SlideWork::default()
         };
         let w2 = SlideWork {
@@ -444,12 +453,15 @@ mod tests {
             plan_items: 3,
             compute_items: 7,
             derive_items: 0,
+            budget_adjust: 0,
             checkpoint_bytes: 100,
             restore_items: 9,
             fault_injections: 1,
         };
         assert_eq!(w1.substrate_total(), 36);
-        assert_eq!(w1.total(), 42);
+        // Per-query derivation and budget feedback count toward the
+        // headline total but never the substrate.
+        assert_eq!(w1.total(), 46);
         // Durability counters stay out of the items-touched totals.
         assert_eq!(w2.total(), 16);
         assert_eq!(w2.substrate_total(), 16);
@@ -462,11 +474,12 @@ mod tests {
         assert_eq!(p.last(), w2);
         assert_eq!(p.total().window_items, 12);
         assert_eq!(p.total().derive_items, 6);
+        assert_eq!(p.total().budget_adjust, 4);
         assert_eq!(p.total().checkpoint_bytes, 100);
         assert_eq!(p.total().restore_items, 9);
         assert_eq!(p.total().fault_injections, 1);
-        assert_eq!(p.total().total(), 58);
-        assert!((p.mean_total_per_slide() - 29.0).abs() < 1e-12);
+        assert_eq!(p.total().total(), 62);
+        assert!((p.mean_total_per_slide() - 31.0).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
     }
 

@@ -117,6 +117,52 @@ pub fn estimate_sum(strata: &[StratumAgg], confidence: f64) -> Result<Estimate> 
     Ok(Estimate { value: tau, margin: t * var.sqrt(), variance: var, df: df_raw, t, confidence })
 }
 
+/// Solve Eq 3.2 **backwards**: the total sample size `n` (under the
+/// sampler's proportional allocation, Eq 3.1) whose margin
+/// `t·√V̂ar(n)` stays within `target_margin`, finite-population-corrected.
+///
+/// Per stratum the classic backsolve is `nᵢ ≈ (t·sᵢ/εᵢ)²`; aggregating
+/// it under proportional allocation `bᵢ = n·Bᵢ/N` gives
+/// `V̂ar(n) = (N/n)·A − A` with `A = Σ Bᵢ·s²ᵢ`, so the requirement
+/// `t²·V̂ar(n) ≤ ε²` solves to
+///
+/// ```text
+/// n ≥ t²·N·A / (ε² + t²·A)
+/// ```
+///
+/// — the FPC form (without correction it would be the larger
+/// `n₀ = t²·N·A/ε²`; the returned value is `n₀/(1 + n₀/N)`). As
+/// `ε → 0` the requirement approaches the census `n = N`, never exceeds
+/// it. Returns `None` when no sampling is needed at all: zero observed
+/// variance (`A = 0` — every margin is already 0) or a degenerate
+/// target/t. Strata with `bᵢ < 2` contribute `s²ᵢ = 0` (no variance
+/// estimate yet), so early windows under-ask and the caller's smoothing
+/// ramps in the truth.
+pub fn required_sample_size(
+    strata: &[StratumAgg],
+    target_margin: f64,
+    t: f64,
+) -> Option<f64> {
+    if !(target_margin > 0.0) || !(t > 0.0) {
+        return None;
+    }
+    let mut a = 0.0f64; // A = Σ Bᵢ·s²ᵢ
+    let mut n_pop = 0.0f64; // N = Σ Bᵢ over observed strata
+    for s in strata {
+        if s.b <= 0.0 {
+            continue;
+        }
+        n_pop += s.population;
+        a += s.population * s.sample_variance();
+    }
+    if !(a > 0.0) || !(n_pop > 0.0) {
+        return None;
+    }
+    let eps2 = target_margin * target_margin;
+    let t2a = t * t * a;
+    Some((t2a * n_pop / (eps2 + t2a)).min(n_pop))
+}
+
 /// Estimate the population **mean** μ = τ / ΣBᵢ.
 pub fn estimate_mean(strata: &[StratumAgg], confidence: f64) -> Result<Estimate> {
     let total_pop: f64 = strata.iter().filter(|s| s.b > 0.0).map(|s| s.population).sum();
@@ -250,6 +296,57 @@ mod tests {
         let m_small = margin_at(100, &mut rng);
         let m_big = margin_at(4000, &mut rng);
         assert!(m_big < m_small * 0.4, "margins {m_small} -> {m_big}");
+    }
+
+    #[test]
+    fn required_sample_size_inverts_the_margin() {
+        // Forward-check the backsolve: sample a population at the size the
+        // formula demands and the achieved margin must be ≈ the target.
+        let mut rng = Rng::new(17);
+        let pop: Vec<f64> = (0..20_000).map(|_| rng.normal_with(50.0, 8.0)).collect();
+        let probe = |b: usize, rng: &mut Rng| -> (StratumAgg, Estimate) {
+            let idx = rng.sample_indices(pop.len(), b);
+            let vals: Vec<f64> = idx.iter().map(|&i| pop[i]).collect();
+            let m = Moments::from_values(&vals);
+            let agg = StratumAgg::from_moments(&m, pop.len() as f64);
+            let e = estimate_sum(&[agg], 0.95).unwrap();
+            (agg, e)
+        };
+        // Pilot at 500 samples, then ask for half the pilot's margin.
+        let (agg, pilot) = probe(500, &mut rng);
+        let target = pilot.margin / 2.0;
+        let n = required_sample_size(&[agg], target, pilot.t).unwrap();
+        assert!(n > 500.0, "halving the margin must cost more samples");
+        let (_, achieved) = probe(n.ceil() as usize, &mut rng);
+        assert!(
+            achieved.margin <= target * 1.2,
+            "achieved {} vs target {target}",
+            achieved.margin
+        );
+        assert!(
+            achieved.margin >= target * 0.7,
+            "gross over-sampling: achieved {} vs target {target}",
+            achieved.margin
+        );
+    }
+
+    #[test]
+    fn required_sample_size_fpc_and_degenerate_cases() {
+        let s = [agg(100.0, 5000.0, 256_400.0, 10_000.0)];
+        // Tighter targets ask for more, and a vanishing target approaches
+        // the census instead of diverging past the population.
+        let loose = required_sample_size(&s, 500.0, 1.96).unwrap();
+        let tight = required_sample_size(&s, 50.0, 1.96).unwrap();
+        let census = required_sample_size(&s, 1e-9, 1.96).unwrap();
+        assert!(loose < tight, "{loose} !< {tight}");
+        assert!(tight < census);
+        assert!((census - 10_000.0).abs() < 1.0, "ε→0 must clamp at N, got {census}");
+        // Zero variance, empty strata, or degenerate targets: no demand.
+        assert!(required_sample_size(&[agg(10.0, 50.0, 250.0, 100.0)], 1.0, 1.96).is_none());
+        assert!(required_sample_size(&s, 0.0, 1.96).is_none());
+        assert!(required_sample_size(&s, f64::NAN, 1.96).is_none());
+        assert!(required_sample_size(&s, 10.0, 0.0).is_none());
+        assert!(required_sample_size(&[], 10.0, 1.96).is_none());
     }
 
     #[test]

@@ -285,7 +285,15 @@ impl MultiStream {
         out
     }
 
-    /// Generate at least `n` records (whole ticks).
+    /// Generate **at least** `n` records — the batch is rounded *up* to
+    /// whole generator ticks, so `take_records(n).len() ≥ n` and usually
+    /// strictly greater (with the §5 rates 3+4+5 the overshoot is up to
+    /// ~a dozen records per call). Ticks are never split because records
+    /// within one tick share a timestamp: splitting would let a later
+    /// call emit records "before" ones already handed out. Callers
+    /// sizing slides/windows off `n` must therefore treat `n` as a floor
+    /// — e.g. the driver tests accept `2×slide..4×slide` deltas instead
+    /// of exactly `2×slide` (pinned by `take_records_rounds_up_to_ticks`).
     pub fn take_records(&mut self, n: usize) -> Vec<Record> {
         let mut out = Vec::with_capacity(n);
         while out.len() < n {
@@ -360,6 +368,35 @@ mod tests {
         let mean = n as f64 / 20_000.0;
         assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
         assert_eq!(next_id as usize, n);
+    }
+
+    #[test]
+    fn take_records_rounds_up_to_ticks() {
+        // The ≥ n gotcha, pinned: batches are whole ticks, so a request
+        // for n records overshoots by up to one tick's worth — and never
+        // undershoots or splits a tick across calls.
+        let mut ms = MultiStream::paper_section5(11);
+        for &n in &[1usize, 200, 2000] {
+            let batch = ms.take_records(n);
+            assert!(batch.len() >= n, "take_records({n}) returned {}", batch.len());
+            // §5 rates 3+4+5 = 12/tick on average: the overshoot is
+            // bounded by one tick, not proportional to n.
+            assert!(
+                batch.len() < n + 64,
+                "overshoot must stay within ~one tick: {} for n={n}",
+                batch.len()
+            );
+            // Whole ticks only: the last timestamp never continues into
+            // the next call's first record (no tick is split).
+            let last_ts = batch.last().unwrap().timestamp;
+            let next = ms.take_records(1);
+            assert!(
+                next.first().unwrap().timestamp > last_ts,
+                "tick split across calls: {} then {}",
+                last_ts,
+                next.first().unwrap().timestamp
+            );
+        }
     }
 
     #[test]

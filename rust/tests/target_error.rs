@@ -1,0 +1,343 @@
+//! Gates for the closed error-bound loop (`BudgetSpec::TargetError`).
+//!
+//! (1) **Determinism** — the adaptive controller reads only quantities
+//! that are byte-identical across the serial, sharded, and O(delta)
+//! incremental paths, so the full `QueryReport` stream (and every
+//! sample size the controller picks) is byte-identical across all
+//! three. (2) **Safety** — the controller never asks for more than the
+//! window holds, even for absurd targets. (3) **Convergence** — on a
+//! stationary stream the smoothed demand approaches the Eq 3.2
+//! backsolve monotonically and the achieved relative bound lands on the
+//! target. (4) **Durability** — controller state rides the checkpoint
+//! chain (base field + `BudgetAdjust` journal ops) and a restored run
+//! continues byte-identically, including its budget trajectory.
+//! (5) **Flat substrate** — N adaptive queries still share one
+//! window/sampler/memo; only `derive_items` and the new `budget_adjust`
+//! counter scale with N.
+
+use incapprox::prelude::*;
+
+fn config() -> SystemConfig {
+    SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 2000,
+        slide: 200,
+        seed: 11,
+        chunk_size: 16,
+        ..SystemConfig::default()
+    }
+}
+
+fn target_budget(relative_bound: f64) -> BudgetSpec {
+    BudgetSpec::TargetError { relative_bound, confidence: 0.95 }
+}
+
+/// Warm-up batch plus `n` slide batches off one deterministic stream.
+fn batches(cfg: &SystemConfig, n: usize) -> Vec<Vec<Record>> {
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let mut out = vec![gen.take_records(cfg.window_size)];
+    for _ in 0..n {
+        out.push(gen.take_records(cfg.slide));
+    }
+    out
+}
+
+fn assert_outputs_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
+    assert_eq!(a.window.window_id, b.window.window_id, "{label}");
+    assert_eq!(
+        a.window.estimate.value.to_bits(),
+        b.window.estimate.value.to_bits(),
+        "{label}"
+    );
+    assert_eq!(
+        a.window.estimate.margin.to_bits(),
+        b.window.estimate.margin.to_bits(),
+        "{label}"
+    );
+    assert_eq!(a.window.sample_size, b.window.sample_size, "{label}: sample size");
+    assert_eq!(a.window.window_len, b.window.window_len, "{label}");
+    assert_eq!(a.window.fresh_items, b.window.fresh_items, "{label}");
+    assert_eq!(a.queries.len(), b.queries.len(), "{label}");
+    for (qa, qb) in a.queries.iter().zip(&b.queries) {
+        assert_eq!(qa.id, qb.id, "{label}");
+        assert_eq!(qa.estimate.value.to_bits(), qb.estimate.value.to_bits(), "{label}");
+        assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
+        assert_eq!(qa.sample_size, qb.sample_size, "{label}");
+        assert_eq!(qa.population, qb.population, "{label}");
+        assert_eq!(qa.target_rel_bound, qb.target_rel_bound, "{label}");
+    }
+}
+
+#[test]
+fn adaptive_controller_deterministic_across_execution_paths() {
+    // The property the whole design hangs on: serial, sharded, and
+    // incremental runs feed the controller byte-identical moments, so
+    // the adaptive sample-size trajectory — and therefore every report —
+    // is byte-identical too. A wall-clock leak into the controller (the
+    // LatencyCost mistake) would fail this immediately.
+    let mut serial = config();
+    serial.num_workers = 1;
+    serial.incremental_slide = false;
+    let mut sharded = config();
+    sharded.num_workers = 4;
+    sharded.incremental_slide = false;
+    let incremental = config();
+    assert!(incremental.incremental_slide);
+    let data = batches(&serial, 10);
+    let run = |cfg: &SystemConfig| -> Vec<SlideOutput> {
+        let mut coord = Coordinator::new(cfg.clone());
+        coord
+            .submit_query(QuerySpec::new(AggregateKind::Sum).with_budget(target_budget(0.01)))
+            .unwrap();
+        coord
+            .submit_query(
+                QuerySpec::new(AggregateKind::Mean)
+                    .with_stratum(2)
+                    .with_budget(target_budget(0.02)),
+            )
+            .unwrap();
+        data.iter().map(|b| coord.process_batch_queries(b.clone()).unwrap()).collect()
+    };
+    let a = run(&serial);
+    let b = run(&sharded);
+    let c = run(&incremental);
+    for (i, ((ra, rb), rc)) in a.iter().zip(&b).zip(&c).enumerate() {
+        assert_outputs_identical(ra, rb, &format!("slide {i}: serial vs sharded"));
+        assert_outputs_identical(ra, rc, &format!("slide {i}: serial vs incremental"));
+        // The loop is live: targets are surfaced on every report.
+        assert_eq!(ra.queries[0].target_rel_bound, Some(0.01));
+        assert_eq!(ra.queries[1].target_rel_bound, Some(0.02));
+    }
+    // The controller actually moved the sample away from the 10% seed
+    // (1% on this stream needs noticeably more than 200 items).
+    let first = a.first().unwrap().window.sample_size;
+    let last = a.last().unwrap().window.sample_size;
+    assert!(last > first, "controller never adapted: {first} -> {last}");
+}
+
+#[test]
+fn controller_never_exceeds_window_even_for_absurd_targets() {
+    // A target far below what the stream allows drives the demand to the
+    // census — and the FPC clamps it there instead of diverging. At the
+    // census the margin is exactly 0, so even an "impossible" target is
+    // met the only way it can be.
+    let mut cfg = config();
+    cfg.budget = target_budget(1e-6);
+    let mut coord = Coordinator::new(cfg.clone());
+    let data = batches(&cfg, 8);
+    let mut last = None;
+    for b in &data {
+        last = Some(coord.process_batch(b.clone()).unwrap());
+    }
+    let last = last.unwrap();
+    assert!(last.sample_size <= last.window_len, "sample exceeded the window");
+    assert_eq!(
+        last.sample_size, last.window_len,
+        "an impossible target must escalate to the census"
+    );
+    assert_eq!(last.estimate.margin, 0.0, "census ⇒ FPC zeroes the margin");
+}
+
+#[test]
+fn controller_converges_monotonically_on_stationary_stream() {
+    // Stationary §5 stream, 0.5% @ 95% target. The 10% pilot (200 items)
+    // achieves ~1.2%, so the demand must GROW toward the Eq 3.2
+    // backsolve (~800 items on this stream) — monotonically under the
+    // EWMA, then hold, with the achieved bound landing on the target.
+    let mut cfg = config();
+    cfg.budget = target_budget(0.005);
+    let mut coord = Coordinator::new(cfg.clone());
+    let data = batches(&cfg, 25);
+    let mut sizes = Vec::new();
+    let mut bounds = Vec::new();
+    for b in &data {
+        let r = coord.process_batch(b.clone()).unwrap();
+        assert!(r.sample_size <= r.window_len);
+        sizes.push(r.sample_size as f64);
+        bounds.push(r.estimate.relative_error());
+    }
+    let final_n: f64 = sizes[sizes.len() - 5..].iter().sum::<f64>() / 5.0;
+    assert!(
+        sizes[0] < 0.6 * final_n,
+        "seed {} vs converged {final_n}: no headroom to demonstrate growth",
+        sizes[0]
+    );
+    // Monotone approach: every step moves toward the converged demand
+    // (small slack absorbs per-slide variance-estimate jitter).
+    let slack = (final_n / 10.0).max(5.0);
+    for w in sizes.windows(2) {
+        let (prev, cur) = (w[0], w[1]);
+        let (d_prev, d_cur) = ((prev - final_n).abs(), (cur - final_n).abs());
+        assert!(
+            d_cur <= d_prev + slack,
+            "demand moved away from convergence: {prev} -> {cur} (final {final_n})"
+        );
+    }
+    // Steady state: the achieved bound tracks the target — neither blown
+    // (≤ 1.25×) nor wastefully over-sampled (≥ 0.5×).
+    let steady: f64 = bounds[bounds.len() - 5..].iter().sum::<f64>() / 5.0;
+    assert!(
+        steady <= 0.005 * 1.25,
+        "steady-state bound {steady} blew the 0.5% target"
+    );
+    assert!(
+        steady >= 0.005 * 0.5,
+        "steady-state bound {steady}: controller grossly over-samples"
+    );
+    // And the loose direction works too: a 5% target shrinks the sample
+    // far below the 10% pilot instead of coasting on it.
+    let mut cfg = config();
+    cfg.budget = target_budget(0.05);
+    let mut coord = Coordinator::new(cfg.clone());
+    let mut last = None;
+    for b in &data {
+        last = Some(coord.process_batch(b.clone()).unwrap());
+    }
+    let last = last.unwrap();
+    assert!(
+        (last.sample_size as f64) < sizes[0] / 2.0,
+        "5% target should need far fewer than the 10% pilot's {} items, got {}",
+        sizes[0],
+        last.sample_size
+    );
+}
+
+#[test]
+fn restore_continues_controller_trajectory_byte_identically() {
+    // The recovery gate extended to adaptive budgets: checkpoint at
+    // slide k (with the journal armed early, so `BudgetAdjust` ops flow
+    // through DELTA segments, not just the base snapshot), restore under
+    // a different worker count, and require byte-identical continuation —
+    // which can only happen if the controller state round-tripped, since
+    // it picks every later sample size.
+    let cfg = config();
+    let data = batches(&cfg, 10);
+    let mut live = Coordinator::new(cfg.clone());
+    let mut victim = Coordinator::new(cfg.clone());
+    for coord in [&mut live, &mut victim] {
+        coord
+            .submit_query(QuerySpec::new(AggregateKind::Sum).with_budget(target_budget(0.008)))
+            .unwrap();
+        coord
+            .submit_query(QuerySpec::new(AggregateKind::Mean).with_budget(
+                BudgetSpec::Tokens { per_window: 500.0, cost_per_item: 2.0 },
+            ))
+            .unwrap();
+        coord
+            .submit_query(
+                QuerySpec::new(AggregateKind::Count).with_budget(BudgetSpec::Fraction(0.05)),
+            )
+            .unwrap();
+    }
+    for b in &data[..2] {
+        live.process_batch_queries(b.clone()).unwrap();
+        victim.process_batch_queries(b.clone()).unwrap();
+    }
+    let mut early = Vec::new();
+    victim.checkpoint(&mut early).unwrap(); // arms journaling
+    for b in &data[2..6] {
+        live.process_batch_queries(b.clone()).unwrap();
+        victim.process_batch_queries(b.clone()).unwrap();
+    }
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    drop(victim); // the crash
+    let mut alt = cfg.clone();
+    alt.num_workers = 1;
+    let mut restored = Coordinator::restore(&artifact[..], alt).unwrap();
+    assert_eq!(restored.query_count(), 3);
+    for (i, b) in data[6..].iter().enumerate() {
+        let a = live.process_batch_queries(b.clone()).unwrap();
+        let r = restored.process_batch_queries(b.clone()).unwrap();
+        assert_outputs_identical(&a, &r, &format!("post-restore slide {i}"));
+    }
+}
+
+#[test]
+fn restore_with_different_session_budget_ignores_foreign_state() {
+    // `Compat` lets budgets differ between checkpoint and restore. The
+    // checkpointed session controller state (a target-error demand of
+    // hundreds of items) must NOT be imported into a different policy —
+    // as a latency EWMA it would read "hundreds of ms per item" and
+    // collapse every sample to the 1-item floor.
+    let mut cfg = config();
+    cfg.budget = target_budget(0.01);
+    let mut coord = Coordinator::new(cfg.clone());
+    let data = batches(&cfg, 4);
+    for b in &data[..4] {
+        coord.process_batch(b.clone()).unwrap();
+    }
+    let mut artifact = Vec::new();
+    coord.checkpoint(&mut artifact).unwrap();
+    let mut alt = cfg.clone();
+    alt.budget = BudgetSpec::LatencyMs(50.0);
+    let mut restored = Coordinator::restore(&artifact[..], alt).unwrap();
+    let r = restored.process_batch(data[4].clone()).unwrap();
+    assert!(
+        r.sample_size > 1,
+        "foreign controller state poisoned the latency model: sample collapsed to {}",
+        r.sample_size
+    );
+    // Same artifact restored under the SAME policy does keep its state:
+    // the very first post-restore slide samples at the converged demand,
+    // not at the 10% pilot a fresh controller would start from.
+    let mut same = Coordinator::restore(&artifact[..], cfg.clone()).unwrap();
+    let fresh_seed = (cfg.window_size as f64 * 0.1).round() as usize;
+    let r = same.process_batch(data[4].clone()).unwrap();
+    assert_ne!(
+        r.sample_size, fresh_seed,
+        "controller state was dropped on a same-policy restore"
+    );
+}
+
+#[test]
+fn adaptive_budgets_keep_the_substrate_flat() {
+    // N TargetError queries (same target, different aggregate kinds) see
+    // the same feedback, demand the same sample, and share one substrate:
+    // window/sampler/plan/compute counters and the window reports are
+    // bit-identical across N; only derive_items and budget_adjust scale,
+    // each exactly strata × N.
+    let cfg = config();
+    let data = batches(&cfg, 5);
+    let mut runs = Vec::new();
+    for &n_queries in &[1usize, 4] {
+        let mut coord = Coordinator::new(cfg.clone());
+        for i in 0..n_queries {
+            let kind = AggregateKind::ALL[i % AggregateKind::ALL.len()];
+            coord
+                .submit_query(QuerySpec::new(kind).with_budget(target_budget(0.01)))
+                .unwrap();
+        }
+        let mut last = None;
+        for b in &data {
+            last = Some(coord.process_batch_queries(b.clone()).unwrap());
+        }
+        runs.push((n_queries, last.unwrap(), coord.work_profile().last()));
+    }
+    let (_, base_out, base_work) = &runs[0];
+    let strata = base_out.window.strata.len() as u64;
+    assert!(strata > 1);
+    for (n, out, work) in &runs {
+        assert_eq!(
+            out.window.estimate.value.to_bits(),
+            base_out.window.estimate.value.to_bits(),
+            "N={n}: same feedback ⇒ same demand ⇒ same window estimate"
+        );
+        assert_eq!(out.window.sample_size, base_out.window.sample_size, "N={n}");
+        assert_eq!(work.window_items, base_work.window_items, "N={n}");
+        assert_eq!(work.sampler_items, base_work.sampler_items, "N={n}");
+        assert_eq!(work.plan_items, base_work.plan_items, "N={n}");
+        assert_eq!(work.compute_items, base_work.compute_items, "N={n}");
+        assert_eq!(work.substrate_total(), base_work.substrate_total(), "N={n}");
+        // The two per-query counters scale exactly linearly.
+        assert_eq!(work.derive_items, *n as u64 * strata, "N={n} derive");
+        assert_eq!(work.budget_adjust, *n as u64 * strata, "N={n} budget_adjust");
+    }
+    // Open-loop budgets pay no feedback work at all.
+    let mut coord = Coordinator::new(cfg.clone());
+    coord.submit_query(QuerySpec::new(AggregateKind::Sum)).unwrap();
+    for b in &data {
+        coord.process_batch_queries(b.clone()).unwrap();
+    }
+    assert_eq!(coord.work_profile().total().budget_adjust, 0);
+}
