@@ -1,0 +1,221 @@
+//! Sketch accuracy: observed error vs the declared error surface, per
+//! aggregate kind, on a deterministic zipf-keyed stream.
+//!
+//! **Paper mapping:** §3.5 gives moment aggregates a closed-form error
+//! interval; the sketch-backed kinds (quantile, top-K, distinct) instead
+//! declare kind-appropriate surfaces (DKW rank error, exact count
+//! bounds + coverage, HLL standard error). This bench measures the error
+//! actually realized on a stream where ground truth is computable in
+//! closed form, and checks it stays inside what the surface declares.
+//! The bundle is built the way the substrate builds it — per-chunk
+//! sketches merged pairwise — so the numbers reflect the merged state a
+//! query actually reads, not a single-pass ideal.
+//!
+//! **Stream:** n records with `value = (i * 2654435761) % n` (an odd
+//! multiplier over a power-of-two n is a permutation, so the true rank
+//! of value v is exactly v / (n-1)) and zipf(s=1, K=1000) keys drawn by
+//! inverse CDF from a splitmix-derived uniform — fully deterministic,
+//! truth computed in-bench.
+//!
+//! **JSON:** emits `target/bench-results/sketch_accuracy.json` with one
+//! `quantile` row per (n, q) (`observed_rank_err`, `declared_eps`,
+//! `kept`), one `topk` row per n (`entries`, `exact` = 1, `coverage`),
+//! and one `distinct` row per n (`truth`, `estimate`, `rel_err`,
+//! `bound`).
+//!
+//! ```bash
+//! cargo bench --bench sketch_accuracy            # full sweep
+//! cargo bench --bench sketch_accuracy -- --smoke # CI smoke (tiny, asserts)
+//! ```
+//!
+//! In `--smoke` mode the bench **asserts** the accuracy contract: every
+//! observed quantile rank error is within the declared DKW epsilon at
+//! 99.99% confidence, every retained top-K count is exactly the true
+//! count (count_lo == count_hi == truth), and the distinct estimate is
+//! within 4 standard errors of the true cardinality.
+
+use incapprox::bench_harness::{section, JsonReporter};
+use incapprox::job::sketch::SketchBundle;
+use incapprox::metrics::Stopwatch;
+use incapprox::util::hash::mix64;
+use incapprox::workload::record::Record;
+use std::collections::HashMap;
+
+const SEED: u64 = 0xACC;
+const ZIPF_KEYS: usize = 1000;
+const CHUNK: usize = 64;
+
+/// Inverse-CDF zipf(s=1) sampler over keys 0..ZIPF_KEYS, driven by a
+/// splitmix-derived uniform so the stream is identical on every run.
+struct Zipf {
+    cumulative: Vec<f64>,
+}
+
+impl Zipf {
+    fn new() -> Zipf {
+        let mut cumulative = Vec::with_capacity(ZIPF_KEYS);
+        let mut total = 0.0f64;
+        for r in 1..=ZIPF_KEYS {
+            total += 1.0 / r as f64;
+            cumulative.push(total);
+        }
+        for c in &mut cumulative {
+            *c /= total;
+        }
+        Zipf { cumulative }
+    }
+
+    fn key_for(&self, i: u64) -> u64 {
+        let u = (mix64(i ^ 0xBEEF) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        self.cumulative.partition_point(|&c| c < u) as u64
+    }
+}
+
+fn build_stream(n: usize, zipf: &Zipf) -> Vec<Record> {
+    (0..n as u64)
+        .map(|i| {
+            let value = (i.wrapping_mul(2_654_435_761) % n as u64) as f64;
+            Record::new(i, 0, i, zipf.key_for(i), value)
+        })
+        .collect()
+}
+
+/// Build the bundle the way the memo substrate does: one sketch per
+/// chunk, merged pairwise into the window-level answer.
+fn merged_bundle(records: &[Record]) -> SketchBundle {
+    let mut acc = SketchBundle::new(SEED);
+    for chunk in records.chunks(CHUNK) {
+        acc.merge(&SketchBundle::from_records(SEED, chunk));
+    }
+    acc
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sizes: &[usize] = if smoke { &[4_096, 16_384] } else { &[4_096, 16_384, 65_536, 262_144] };
+    let quantiles = [0.5f64, 0.9, 0.99];
+    let mut json = JsonReporter::for_bench("sketch_accuracy");
+    let zipf = Zipf::new();
+
+    section(&format!(
+        "sketch accuracy: observed error vs declared surface, zipf(s=1, K={ZIPF_KEYS}) keys, \
+         merged per-chunk (chunk {CHUNK})"
+    ));
+    println!(
+        "{:<9} {:<10} {:>8} {:>14} {:>13} {:>9} {:>11} {:>10} {:>10}",
+        "n", "series", "q", "observed", "declared", "kept", "build_ms", "estimate", "truth"
+    );
+
+    for &n in sizes {
+        let records = build_stream(n, &zipf);
+        let sw = Stopwatch::start();
+        let bundle = merged_bundle(&records);
+        let build_ms = sw.elapsed_ms();
+
+        // --- Quantile: observed rank error vs the DKW epsilon. -------
+        let declared_eps = bundle.quantile.rank_error(0.9999);
+        for &q in &quantiles {
+            // True rank of value v is v / (n-1): the permutation keeps
+            // values exactly 0..n, so rank error is directly readable.
+            let v = bundle.quantile.quantile(q);
+            let observed = (v / (n - 1) as f64 - q).abs();
+            println!(
+                "{:<9} {:<10} {:>8.2} {:>14.4} {:>13.4} {:>9} {:>11.3} {:>10} {:>10}",
+                n,
+                "quantile",
+                q,
+                observed,
+                declared_eps,
+                bundle.quantile.kept(),
+                build_ms,
+                "-",
+                "-"
+            );
+            json.record_point(
+                "quantile",
+                &[
+                    ("n", n as f64),
+                    ("q", q),
+                    ("observed_rank_err", observed),
+                    ("declared_eps", declared_eps),
+                    ("kept", bundle.quantile.kept() as f64),
+                    ("build_ms", build_ms),
+                ],
+            );
+            if smoke {
+                assert!(
+                    observed <= declared_eps,
+                    "n={n} q={q}: observed rank error {observed:.4} breaks the \
+                     declared DKW bound {declared_eps:.4}"
+                );
+            }
+        }
+
+        // --- Top-K: retained counts must be exact. -------------------
+        let mut true_counts: HashMap<u64, u64> = HashMap::new();
+        for r in &records {
+            *true_counts.entry(r.key).or_insert(0) += 1;
+        }
+        let top = bundle.topk.top_k(16);
+        let coverage = bundle.topk.coverage();
+        let mut exact = true;
+        for e in &top {
+            let truth = true_counts.get(&e.key).copied().unwrap_or(0);
+            exact &= e.count_lo == truth && e.count_hi == truth;
+        }
+        println!(
+            "{:<9} {:<10} {:>8} {:>14} {:>13.4} {:>9} {:>11.3} {:>10} {:>10}",
+            n,
+            "topk",
+            "-",
+            if exact { "exact" } else { "DRIFTED" },
+            coverage,
+            top.len(),
+            build_ms,
+            "-",
+            "-"
+        );
+        json.record_point(
+            "topk",
+            &[
+                ("n", n as f64),
+                ("entries", top.len() as f64),
+                ("exact", if exact { 1.0 } else { 0.0 }),
+                ("coverage", coverage),
+            ],
+        );
+        if smoke {
+            assert!(!top.is_empty(), "n={n}: top-K came back empty");
+            assert!(exact, "n={n}: a retained top-K count drifted from the true count");
+        }
+
+        // --- Distinct: relative error vs 4 standard errors. ----------
+        let truth = true_counts.len() as f64;
+        let estimate = bundle.distinct.estimate();
+        let rel_err = (estimate - truth).abs() / truth;
+        let bound = 4.0 * bundle.distinct.std_error();
+        println!(
+            "{:<9} {:<10} {:>8} {:>14.4} {:>13.4} {:>9} {:>11.3} {:>10.1} {:>10}",
+            n, "distinct", "-", rel_err, bound, "-", build_ms, estimate, truth
+        );
+        json.record_point(
+            "distinct",
+            &[
+                ("n", n as f64),
+                ("truth", truth),
+                ("estimate", estimate),
+                ("rel_err", rel_err),
+                ("bound", bound),
+            ],
+        );
+        if smoke {
+            assert!(
+                rel_err <= bound,
+                "n={n}: distinct relative error {rel_err:.4} breaks 4 standard \
+                 errors ({bound:.4})"
+            );
+        }
+    }
+
+    json.finish().expect("write bench results");
+}

@@ -25,6 +25,7 @@
 
 use crate::config::system::BudgetSpec;
 use crate::error::{Error, Result};
+use crate::job::aggregate::AggregateKind;
 use crate::stats::stratified::{estimate_sum, required_sample_size, StratumAgg};
 
 /// Turns a window size into a sample size, within the query budget.
@@ -419,6 +420,29 @@ pub fn validate_spec(spec: &BudgetSpec) -> Result<()> {
     }
 }
 
+/// Check a budget spec against the aggregate kind it would drive.
+/// Sketch kinds (`Quantile` / `TopK` / `DistinctCount`) opt out of the
+/// closed-loop `TargetError` budget: `TargetErrorCost` backsolves
+/// Eq 3.2 — a moment-variance identity — for the sample size that hits
+/// a *relative moment-interval* bound, and a sketch answer has no such
+/// interval. Its honest uncertainty is a rank / count-bound /
+/// standard-error surface whose width is set by the sketch caps, not by
+/// the sample size the controller steers — the loop could never
+/// converge on anything. Open-loop budgets (fraction, tokens, latency)
+/// remain fully supported for sketch kinds.
+pub fn validate_kind_budget(kind: AggregateKind, spec: &BudgetSpec) -> Result<()> {
+    if kind.is_sketch() && matches!(spec, BudgetSpec::TargetError { .. }) {
+        return Err(Error::Config(format!(
+            "a target-error budget cannot drive a `{}` query: the §3.5 backsolve \
+             controls a moment-interval width, and sketch kinds report rank / \
+             count-bound / standard-error surfaces instead — use an open-loop \
+             budget (fraction, tokens, latency)",
+            kind.name()
+        )));
+    }
+    Ok(())
+}
+
 /// Build the configured cost function.
 pub fn from_spec(spec: &BudgetSpec) -> Box<dyn CostFunction> {
     match *spec {
@@ -673,6 +697,29 @@ mod tests {
         assert!(validate_spec(&BudgetSpec::LatencyMs(f64::NAN)).is_err());
         assert!(te(f64::NAN, 0.95).is_err());
         assert!(te(0.02, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn sketch_kinds_opt_out_of_target_error_budgets() {
+        let closed = BudgetSpec::TargetError { relative_bound: 0.02, confidence: 0.95 };
+        // Moment kinds may close the loop; sketch kinds must not — the
+        // Eq 3.2 backsolve steers a moment-interval width that sketch
+        // surfaces do not have.
+        for kind in AggregateKind::ALL {
+            let verdict = validate_kind_budget(kind, &closed);
+            if kind.is_sketch() {
+                let err = verdict.expect_err("sketch kind must reject TargetError");
+                assert!(
+                    matches!(err, Error::Config(ref msg) if msg.contains(kind.name())),
+                    "rejection must name the kind"
+                );
+            } else {
+                assert!(verdict.is_ok(), "{} under TargetError", kind.name());
+            }
+            // Open-loop budgets are kind-agnostic.
+            assert!(validate_kind_budget(kind, &BudgetSpec::Fraction(0.1)).is_ok());
+            assert!(validate_kind_budget(kind, &BudgetSpec::LatencyMs(2.0)).is_ok());
+        }
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! exactly what incremental computation exists to avoid. This module
 //! makes the substrate durable: a checkpoint captures the sharded
 //! [`MemoStore`](crate::sac::memo::MemoStore) (chunk results keyed by
-//! content hash, per-stratum sample runs, combined moments), the window
+//! content hash, per-chunk sketch bundles under the same hashes,
+//! per-stratum sample runs, combined moments), the window
 //! buffer (count- or time-based), the
 //! [`Session`](crate::coordinator::Session) query registry, and the
 //! fault-injector RNG — everything a restored coordinator needs to
@@ -57,6 +58,7 @@ use crate::error::{Error, Result};
 use crate::fault::RecoveryPolicy;
 use crate::job::aggregate::AggregateKind;
 use crate::job::moments::Moments;
+use crate::job::sketch::SketchBundle;
 use crate::sampling::SampleRun;
 use crate::util::hash::FastMap;
 use crate::workload::gen::{MultiStreamSpec, SubstreamSpec, ValueDist};
@@ -70,8 +72,13 @@ const MAGIC: u32 = 0x4B43_4149;
 /// versions instead of misparsing them. History: v1 = PR 4's initial
 /// format; v2 adds adaptive-budget controller state (the
 /// `budget_states` base-segment field, the `BudgetAdjust` journal op,
-/// and budget wire tag 3 for `BudgetSpec::TargetError`).
-const VERSION: u32 = 2;
+/// and budget wire tag 3 for `BudgetSpec::TargetError`); v3 adds
+/// per-chunk sketch state (the `sketches` base-segment field, the
+/// `PutChunkSketch` journal op) and replaces the aggregate-kind wire
+/// byte — previously an index into `AggregateKind::ALL`, which cannot
+/// represent parameterized kinds like `Quantile(750)` — with an
+/// explicit tag plus a `u32` parameter for `Quantile`/`TopK`.
+const VERSION: u32 = 3;
 
 /// The `budget_states` slot of the coordinator's *session-level* cost
 /// function (`SystemConfig::budget`). Per-query controllers use their
@@ -180,6 +187,20 @@ pub(crate) struct ChunkEntry {
     pub window_id: u64,
 }
 
+/// One memoized per-chunk sketch bundle (the synopsis side map behind
+/// the `Quantile`/`TopK`/`DistinctCount` kinds), keyed by the same
+/// content hash as the chunk's [`ChunkEntry`]. The folded per-stratum
+/// sketches are never serialized — they are a pure function of
+/// (window, seed) and the restored run refolds them from these.
+#[derive(Debug, Clone)]
+pub(crate) struct SketchChunkEntry {
+    pub stratum: StratumId,
+    pub hash: u64,
+    pub bundle: SketchBundle,
+    pub min_ts: u64,
+    pub window_id: u64,
+}
+
 /// One registered query with its stable id.
 #[derive(Debug, Clone)]
 pub(crate) struct QueryEntry {
@@ -239,6 +260,10 @@ pub(crate) struct BaseState {
     /// must never be imported as a latency EWMA) — so the controller
     /// trajectory continues exactly where the live run was.
     pub budget_states: Vec<(u64, String, f64)>,
+    /// Memoized per-chunk sketch bundles, sorted by hash (stable
+    /// artifact bytes). Empty on runs without sketch queries — such
+    /// artifacts pay zero bytes for the field beyond its count.
+    pub sketches: Vec<SketchChunkEntry>,
 }
 
 /// One journaled substrate mutation. Deltas replay these through the
@@ -268,6 +293,15 @@ pub(crate) enum JournalOp {
     /// [`SESSION_BUDGET_SLOT`]; `policy` is the cost function's name,
     /// checked at import so a state never lands on a different policy.
     BudgetAdjust { slot: u64, policy: String, state: f64 },
+    /// A freshly memoized per-chunk sketch bundle (the sketch analog of
+    /// `PutChunk`, keyed by the same content hash).
+    PutChunkSketch {
+        stratum: StratumId,
+        hash: u64,
+        bundle: SketchBundle,
+        min_ts: u64,
+        window_id: u64,
+    },
 }
 
 impl JournalOp {
@@ -502,17 +536,65 @@ fn get_budget<R: Read>(r: &mut CkptReader<R>) -> Result<BudgetSpec> {
     })
 }
 
+/// Aggregate-kind wire encoding: an explicit tag byte, plus a `u32`
+/// parameter for the parameterized kinds. (v2 wrote an index into
+/// `AggregateKind::ALL`, which cannot name a kind like `Quantile(750)`
+/// that is not literally in `ALL` — the `position(..).expect(..)` there
+/// was a latent panic the moment parameterized kinds arrived.)
+fn put_kind<W: Write>(w: &mut CkptWriter<W>, k: AggregateKind) -> Result<()> {
+    match k {
+        AggregateKind::Sum => w.u8(0),
+        AggregateKind::Mean => w.u8(1),
+        AggregateKind::Count => w.u8(2),
+        AggregateKind::Variance => w.u8(3),
+        AggregateKind::StdDev => w.u8(4),
+        AggregateKind::Extrema => w.u8(5),
+        AggregateKind::Quantile(permille) => {
+            w.u8(6)?;
+            w.u32(permille as u32)
+        }
+        AggregateKind::TopK(k) => {
+            w.u8(7)?;
+            w.u32(k as u32)
+        }
+        AggregateKind::DistinctCount => w.u8(8),
+    }
+}
+
+fn get_kind<R: Read>(r: &mut CkptReader<R>) -> Result<AggregateKind> {
+    Ok(match r.u8()? {
+        0 => AggregateKind::Sum,
+        1 => AggregateKind::Mean,
+        2 => AggregateKind::Count,
+        3 => AggregateKind::Variance,
+        4 => AggregateKind::StdDev,
+        5 => AggregateKind::Extrema,
+        6 => {
+            let p = r.u32()?;
+            AggregateKind::Quantile(u16::try_from(p).map_err(|_| {
+                Error::Checkpoint(format!("quantile parameter {p} out of range"))
+            })?)
+        }
+        7 => {
+            let k = r.u32()?;
+            AggregateKind::TopK(u16::try_from(k).map_err(|_| {
+                Error::Checkpoint(format!("top-k parameter {k} out of range"))
+            })?)
+        }
+        8 => AggregateKind::DistinctCount,
+        other => {
+            return Err(Error::Checkpoint(format!("unknown aggregate kind tag {other}")))
+        }
+    })
+}
+
 fn put_misc<W: Write>(w: &mut CkptWriter<W>, m: &Misc) -> Result<()> {
     w.u64(m.windows_processed)?;
     w.u64(m.next_query_id)?;
     w.u64(m.queries.len() as u64)?;
     for q in &m.queries {
         w.u64(q.raw_id)?;
-        let kind = AggregateKind::ALL
-            .iter()
-            .position(|k| *k == q.spec.kind)
-            .expect("every kind is in ALL");
-        w.u8(kind as u8)?;
+        put_kind(w, q.spec.kind)?;
         match q.spec.stratum {
             Some(s) => {
                 w.u8(1)?;
@@ -550,10 +632,7 @@ fn get_misc<R: Read>(r: &mut CkptReader<R>) -> Result<Misc> {
     let mut queries = Vec::with_capacity(n.min(1 << 12));
     for _ in 0..n {
         let raw_id = r.u64()?;
-        let kind_idx = r.u8()? as usize;
-        let kind = *AggregateKind::ALL.get(kind_idx).ok_or_else(|| {
-            Error::Checkpoint(format!("unknown aggregate kind tag {kind_idx}"))
-        })?;
+        let kind = get_kind(r)?;
         let has_stratum = r.u8()? != 0;
         let stratum_raw = r.u32()?;
         let confidence = r.f64()?;
@@ -646,6 +725,24 @@ fn get_chunk_entry<R: Read>(r: &mut CkptReader<R>) -> Result<ChunkEntry> {
     })
 }
 
+fn put_sketch_entry<W: Write>(w: &mut CkptWriter<W>, s: &SketchChunkEntry) -> Result<()> {
+    w.u32(s.stratum)?;
+    w.u64(s.hash)?;
+    w.bytes(&s.bundle.to_bytes())?;
+    w.u64(s.min_ts)?;
+    w.u64(s.window_id)
+}
+
+fn get_sketch_entry<R: Read>(r: &mut CkptReader<R>) -> Result<SketchChunkEntry> {
+    let stratum = r.u32()?;
+    let hash = r.u64()?;
+    // `from_bytes` revalidates the bundle (caps, key order, level/rho
+    // ranges), so a bit flip inside a sketch segment that survives the
+    // outer checksum check still cannot smuggle in malformed state.
+    let bundle = SketchBundle::from_bytes(&r.bytes()?)?;
+    Ok(SketchChunkEntry { stratum, hash, bundle, min_ts: r.u64()?, window_id: r.u64()? })
+}
+
 fn put_stratum_moments<W: Write>(
     w: &mut CkptWriter<W>,
     m: &BTreeMap<StratumId, Moments>,
@@ -708,6 +805,19 @@ fn put_journal_op<W: Write>(w: &mut CkptWriter<W>, op: &JournalOp) -> Result<()>
             w.bytes(policy.as_bytes())?;
             w.f64(*state)
         }
+        JournalOp::PutChunkSketch { stratum, hash, bundle, min_ts, window_id } => {
+            w.u8(6)?;
+            put_sketch_entry(
+                w,
+                &SketchChunkEntry {
+                    stratum: *stratum,
+                    hash: *hash,
+                    bundle: bundle.clone(),
+                    min_ts: *min_ts,
+                    window_id: *window_id,
+                },
+            )
+        }
     }
 }
 
@@ -734,6 +844,16 @@ fn get_journal_op<R: Read>(r: &mut CkptReader<R>) -> Result<JournalOp> {
             let slot = r.u64()?;
             let policy = policy_name(r.bytes()?)?;
             JournalOp::BudgetAdjust { slot, policy, state: r.f64()? }
+        }
+        6 => {
+            let s = get_sketch_entry(r)?;
+            JournalOp::PutChunkSketch {
+                stratum: s.stratum,
+                hash: s.hash,
+                bundle: s.bundle,
+                min_ts: s.min_ts,
+                window_id: s.window_id,
+            }
         }
         other => return Err(Error::Checkpoint(format!("unknown journal op tag {other}"))),
     })
@@ -773,6 +893,10 @@ pub(crate) fn encode_segment(seg: &Segment) -> Vec<u8> {
                         w.u64(*slot)?;
                         w.bytes(policy.as_bytes())?;
                         w.f64(*state)?;
+                    }
+                    w.u64(b.sketches.len() as u64)?;
+                    for s in &b.sketches {
+                        put_sketch_entry(w, s)?;
                     }
                     Ok(())
                 }
@@ -837,7 +961,20 @@ pub(crate) fn decode_segment(bytes: &[u8]) -> Result<Segment> {
                 let policy = policy_name(r.bytes()?)?;
                 budget_states.push((slot, policy, r.f64()?));
             }
-            Ok(Segment::Base(BaseState { window, chunks, items, moments, misc, budget_states }))
+            let n_sketches = r.len()?;
+            let mut sketches = Vec::with_capacity(n_sketches.min(1 << 16));
+            for _ in 0..n_sketches {
+                sketches.push(get_sketch_entry(&mut r)?);
+            }
+            Ok(Segment::Base(BaseState {
+                window,
+                chunks,
+                items,
+                moments,
+                misc,
+                budget_states,
+                sketches,
+            }))
         }
         1 => {
             let n_ops = r.len()?;
@@ -1237,23 +1374,38 @@ mod tests {
         let misc = Misc {
             windows_processed: 7,
             next_query_id: 3,
-            queries: vec![QueryEntry {
-                raw_id: 2,
-                spec: QuerySpec {
-                    kind: AggregateKind::Mean,
-                    stratum: Some(1),
-                    confidence: 0.99,
-                    budget: BudgetSpec::TargetError {
-                        relative_bound: 0.02,
-                        confidence: 0.95,
+            queries: vec![
+                QueryEntry {
+                    raw_id: 2,
+                    spec: QuerySpec {
+                        kind: AggregateKind::Mean,
+                        stratum: Some(1),
+                        confidence: 0.99,
+                        budget: BudgetSpec::TargetError {
+                            relative_bound: 0.02,
+                            confidence: 0.95,
+                        },
+                        map_rounds: Some(0),
                     },
-                    map_rounds: Some(0),
                 },
-            }],
+                QueryEntry {
+                    // A parameterized kind NOT in `AggregateKind::ALL` —
+                    // under the v2 ALL-index encoding this would panic.
+                    raw_id: 3,
+                    spec: QuerySpec {
+                        kind: AggregateKind::Quantile(750),
+                        stratum: None,
+                        confidence: 0.9,
+                        budget: BudgetSpec::Fraction(0.2),
+                        map_rounds: None,
+                    },
+                },
+            ],
             recovery: RecoveryPolicy::Checkpoint,
             injector_rng: [1, 2, 3, 4],
             injector_count: 5,
         };
+        let sketch = SketchBundle::from_records(7, &[rec(1, 1), rec(2, 2)]);
         let base = Segment::Base(BaseState {
             window: WindowCkpt::Count {
                 size: 10,
@@ -1275,6 +1427,13 @@ mod tests {
                 (SESSION_BUDGET_SLOT, "target-error".to_string(), 123.5),
                 (2, "token-bucket".to_string(), 77.25),
             ],
+            sketches: vec![SketchChunkEntry {
+                stratum: 2,
+                hash: 0xABCD,
+                bundle: sketch.clone(),
+                min_ts: 1,
+                window_id: 3,
+            }],
         });
         let bytes = encode_segment(&base);
         match decode_segment(&bytes).unwrap() {
@@ -1291,6 +1450,11 @@ mod tests {
                     BudgetSpec::TargetError { relative_bound: 0.02, confidence: 0.95 },
                     "budget wire tag 3 must round-trip"
                 );
+                assert_eq!(
+                    b.misc.queries[1].spec.kind,
+                    AggregateKind::Quantile(750),
+                    "parameterized kinds must round-trip through the tag encoding"
+                );
                 assert_eq!(b.misc.recovery, RecoveryPolicy::Checkpoint);
                 assert_eq!(b.misc.injector_rng, [1, 2, 3, 4]);
                 assert_eq!(
@@ -1300,6 +1464,13 @@ mod tests {
                         (2, "token-bucket".to_string(), 77.25),
                     ],
                     "controller state must round-trip with its policy tag"
+                );
+                assert_eq!(b.sketches.len(), 1);
+                assert_eq!(b.sketches[0].stratum, 2);
+                assert_eq!(b.sketches[0].hash, 0xABCD);
+                assert_eq!(
+                    b.sketches[0].bundle, sketch,
+                    "sketch bundles must round-trip bit-exactly"
                 );
             }
             Segment::Delta(_) => panic!("expected base"),
@@ -1323,6 +1494,13 @@ mod tests {
                     policy: "target-error".to_string(),
                     state: 321.75,
                 },
+                JournalOp::PutChunkSketch {
+                    stratum: 1,
+                    hash: 0xFEED,
+                    bundle: sketch.clone(),
+                    min_ts: 5,
+                    window_id: 8,
+                },
             ],
             items: vec![(
                 1u32,
@@ -1335,12 +1513,17 @@ mod tests {
         let bytes = encode_segment(&delta);
         match decode_segment(&bytes).unwrap() {
             Segment::Delta(d) => {
-                assert_eq!(d.ops.len(), 6);
+                assert_eq!(d.ops.len(), 7);
                 assert!(matches!(d.ops[2], JournalOp::Resize { new_size: 20 }));
                 assert!(matches!(
                     &d.ops[5],
                     JournalOp::BudgetAdjust { slot: SESSION_BUDGET_SLOT, policy, state }
                         if policy == "target-error" && *state == 321.75
+                ));
+                assert!(matches!(
+                    &d.ops[6],
+                    JournalOp::PutChunkSketch { hash: 0xFEED, bundle, .. }
+                        if *bundle == sketch
                 ));
                 assert_eq!(d.items.len(), 1);
                 assert_eq!(d.items[0].1, 3);

@@ -100,18 +100,20 @@ use std::io::{Read, Write};
 use crate::budget::{self, CostFunction};
 use crate::checkpoint::{
     self, Artifact, BaseState, ChunkEntry, CkptTracker, Compat, DeltaState, JournalOp,
-    Misc, QueryEntry, Segment, SessionSection, WindowCkpt, SESSION_BUDGET_SLOT,
+    Misc, QueryEntry, Segment, SessionSection, SketchChunkEntry, WindowCkpt,
+    SESSION_BUDGET_SLOT,
 };
 use crate::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
 use crate::coordinator::query::{QueryId, QuerySpec};
 use crate::coordinator::report::{QueryReport, SlideOutput, StratumReport, WindowReport};
 use crate::error::Result;
 use crate::fault::{FaultInjector, MemoReplica, RecoveryPolicy};
-use crate::job::aggregate::derive_aggregate;
-use crate::job::chunk::{chunk_stratum, Chunk};
+use crate::job::aggregate::derive_aggregate_sketched;
+use crate::job::chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
 use crate::job::executor::{run_sharded, ChunkBackend, NativeBackend, WorkerPool};
 use crate::job::moments::Moments;
 use crate::job::plan::{JobPlan, PlannedChunk};
+use crate::job::sketch::{SketchBundle, SKETCH_SEED_SALT};
 use crate::metrics::{PhaseProfile, SlideWork, Stopwatch, WorkProfile};
 use crate::sac::memo::MemoStore;
 use crate::sampling::biased::{bias_sample, BiasOutcome};
@@ -294,6 +296,11 @@ pub struct Coordinator {
     /// Previous full-path chunk sequences per stratum (incremental chunk
     /// reuse; correctness-neutral — reuse is equality-verified).
     chunk_cache: BTreeMap<StratumId, Vec<Chunk>>,
+    /// Previous sketch-pass chunk sequences per stratum (same equality-
+    /// verified reuse, kept separate because the sketch pass chunks the
+    /// biased sample even on slides where the moment path takes the
+    /// inverse-reduce route and never re-chunks).
+    sketch_chunks: BTreeMap<StratumId, Vec<Chunk>>,
     /// Registered queries, in submission order. Empty = legacy
     /// single-query behavior (the window budget sizes the sample).
     queries: Vec<RegisteredQuery>,
@@ -348,6 +355,7 @@ impl Coordinator {
             // sharded, incremental, from-scratch — ranks items identically.
             sampler: IncrementalSampler::new(cfg.seed ^ 0x0DE1_7A51_D35A_3D01),
             chunk_cache: BTreeMap::new(),
+            sketch_chunks: BTreeMap::new(),
             queries: Vec::new(),
             next_query_id: 0,
             injector,
@@ -871,6 +879,74 @@ impl Coordinator {
             self.chunk_cache.retain(|s, _| plans.contains_key(s));
         }
 
+        // --- Sketch pass: per-chunk synopses for the sketch-backed
+        // queries (Quantile / TopK / DistinctCount). Runs only when such
+        // a query is registered, over the same biased sample the moment
+        // path consumed, with the same content-defined chunking — so the
+        // memoized bundles share the chunks' content hashes and age out
+        // with them. Bundles are pure functions of (seed, chunk items)
+        // and merging is order-independent, so every mode and worker
+        // count folds to byte-identical per-stratum sketches. One pass
+        // serves all registered sketch queries; its work is charged to
+        // `sketch_items`, never to the moment substrate's counters.
+        let mut stratum_sketches: BTreeMap<StratumId, SketchBundle> = BTreeMap::new();
+        if self.queries.iter().any(|q| q.spec.kind.is_sketch()) {
+            let sketch_seed = self.cfg.seed ^ SKETCH_SEED_SALT;
+            for (&stratum, run) in &biased.per_stratum {
+                let (chunks, rehashed) = {
+                    let prev: &[Chunk] = if self.cfg.incremental_slide {
+                        self.sketch_chunks.get(&stratum).map_or(&[], Vec::as_slice)
+                    } else {
+                        &[]
+                    };
+                    chunk_stratum_cached(stratum, run.records(), self.cfg.chunk_size, prev)
+                };
+                slide_work.sketch_items += rehashed as u64;
+                let mut bundle = SketchBundle::new(sketch_seed);
+                for c in &chunks {
+                    let memoized = if memoizes {
+                        self.memo.shard(stratum).get_chunk_sketch(c.hash)
+                    } else {
+                        None
+                    };
+                    let part = match memoized {
+                        Some(b) => b,
+                        None => {
+                            slide_work.sketch_items += c.len() as u64;
+                            let b = SketchBundle::from_records(sketch_seed, &c.items);
+                            if memoizes {
+                                let min_ts =
+                                    c.items.iter().map(|r| r.timestamp).min().unwrap_or(0);
+                                self.memo.put_chunk_sketch_for(
+                                    stratum,
+                                    c.hash,
+                                    b.clone(),
+                                    min_ts,
+                                    window_id,
+                                );
+                                self.ckpt_push(JournalOp::PutChunkSketch {
+                                    stratum,
+                                    hash: c.hash,
+                                    bundle: b.clone(),
+                                    min_ts,
+                                    window_id,
+                                });
+                            }
+                            b
+                        }
+                    };
+                    bundle.merge(&part);
+                }
+                stratum_sketches.insert(stratum, bundle);
+                if self.cfg.incremental_slide {
+                    self.sketch_chunks.insert(stratum, chunks);
+                }
+            }
+            if self.cfg.incremental_slide {
+                self.sketch_chunks.retain(|s, _| biased.per_stratum.contains_key(s));
+            }
+        }
+
         // --- Reduce to the estimate (§3.5) ------------------------------
         let mut aggs: Vec<StratumAgg> = Vec::with_capacity(stratum_moments.len());
         let mut strata_reports: BTreeMap<StratumId, StratumReport> = BTreeMap::new();
@@ -897,12 +973,13 @@ impl Coordinator {
         let mut derive_ms: Vec<f64> = Vec::with_capacity(self.queries.len());
         for q in &self.queries {
             let sw_derive = Stopwatch::start();
-            let d = derive_aggregate(
+            let d = derive_aggregate_sketched(
                 q.spec.kind,
                 q.spec.stratum,
                 q.spec.confidence,
                 &stratum_moments,
                 &sample.population,
+                &stratum_sketches,
             )?;
             derive_ms.push(sw_derive.elapsed_ms());
             slide_work.derive_items += d.strata_touched;
@@ -913,6 +990,7 @@ impl Coordinator {
                 sample_size: d.sample_size,
                 population: d.population,
                 extrema: d.extrema,
+                surface: d.surface,
                 target_rel_bound: match q.spec.budget {
                     BudgetSpec::TargetError { relative_bound, .. } => Some(relative_bound),
                     _ => None,
@@ -1105,6 +1183,21 @@ impl Coordinator {
             })
             .collect();
         chunks.sort_by_key(|c| c.hash);
+        // Per-chunk sketch bundles ride along under the same hash keys.
+        // The folded per-stratum sketches are NOT exported: they are pure
+        // functions of (window, seed) and the restored run refolds them.
+        let mut sketches: Vec<SketchChunkEntry> = self
+            .memo
+            .sketch_entries()
+            .map(|(hash, e)| SketchChunkEntry {
+                stratum: e.stratum,
+                hash,
+                bundle: e.bundle.clone(),
+                min_ts: e.min_timestamp,
+                window_id: e.window_id,
+            })
+            .collect();
+        sketches.sort_by_key(|s| s.hash);
         let items = self
             .memo
             .items_all()
@@ -1128,6 +1221,7 @@ impl Coordinator {
             moments: self.memo.stratum_moments_all(),
             misc: self.ckpt_misc(),
             budget_states,
+            sketches,
         }
     }
 
@@ -1244,6 +1338,10 @@ impl Coordinator {
         for c in &base.chunks {
             memo.put_chunk_for(c.stratum, c.hash, c.moments, c.min_ts, c.window_id);
         }
+        restore_items += base.sketches.len() as u64;
+        for s in base.sketches {
+            memo.put_chunk_sketch_for(s.stratum, s.hash, s.bundle, s.min_ts, s.window_id);
+        }
         let mut items: BTreeMap<StratumId, SampleRun> = base
             .items
             .into_iter()
@@ -1331,6 +1429,10 @@ impl Coordinator {
                     JournalOp::PutChunk { stratum, hash, moments: m, min_ts, window_id } => {
                         restore_items += 1;
                         memo.put_chunk_for(stratum, hash, m, min_ts, window_id);
+                    }
+                    JournalOp::PutChunkSketch { stratum, hash, bundle, min_ts, window_id } => {
+                        restore_items += 1;
+                        memo.put_chunk_sketch_for(stratum, hash, bundle, min_ts, window_id);
                     }
                     JournalOp::BudgetAdjust { slot, policy, state } => {
                         budget_states.insert(slot, (policy, state));

@@ -111,8 +111,11 @@ impl QuerySpec {
     }
 
     /// Check the spec against a session configuration. Rejects
-    /// out-of-range confidence, degenerate budgets, and a `map_rounds`
-    /// that differs from the session's: chunk moments are memoized under
+    /// out-of-range confidence, degenerate kind parameters and budgets,
+    /// a sketch kind under a `TargetError` budget (the §3.5 backsolve
+    /// has no meaning for rank/count/cardinality surfaces — see
+    /// [`budget::validate_kind_budget`]), and a `map_rounds` that
+    /// differs from the session's: chunk moments are memoized under
     /// **one** map stage — a query needing a different map weight needs
     /// its own session, not a forked memo store.
     pub fn validate_for(&self, cfg: &SystemConfig) -> Result<()> {
@@ -122,7 +125,9 @@ impl QuerySpec {
                 self.confidence
             )));
         }
+        self.kind.validate()?;
         budget::validate_spec(&self.budget)?;
+        budget::validate_kind_budget(self.kind, &self.budget)?;
         if let Some(rounds) = self.map_rounds {
             if rounds != cfg.map_rounds {
                 return Err(Error::Config(format!(
@@ -181,6 +186,30 @@ mod tests {
             .with_map_rounds(cfg.map_rounds + 1)
             .validate_for(&cfg)
             .is_err());
+        // Degenerate sketch parameters are rejected at submit time.
+        assert!(QuerySpec::new(AggregateKind::Quantile(0)).validate_for(&cfg).is_err());
+        assert!(QuerySpec::new(AggregateKind::Quantile(1000)).validate_for(&cfg).is_err());
+        assert!(QuerySpec::new(AggregateKind::TopK(0)).validate_for(&cfg).is_err());
+        // Sketch kinds run fine under open-loop budgets…
+        assert!(QuerySpec::new(AggregateKind::Quantile(990)).validate_for(&cfg).is_ok());
+        assert!(QuerySpec::new(AggregateKind::TopK(8))
+            .with_budget(BudgetSpec::LatencyMs(5.0))
+            .validate_for(&cfg)
+            .is_ok());
+        // …but a TargetError budget is meaningless for a sketch surface.
+        let closed = BudgetSpec::TargetError { relative_bound: 0.05, confidence: 0.95 };
+        for kind in [AggregateKind::Quantile(500), AggregateKind::TopK(4),
+                     AggregateKind::DistinctCount] {
+            assert!(
+                QuerySpec::new(kind).with_budget(closed.clone()).validate_for(&cfg).is_err(),
+                "{} must reject a target-error budget",
+                kind.name()
+            );
+        }
+        assert!(QuerySpec::new(AggregateKind::Mean)
+            .with_budget(closed)
+            .validate_for(&cfg)
+            .is_ok());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::query::QueryId;
-use crate::job::aggregate::AggregateKind;
+use crate::job::aggregate::{AggregateKind, ErrorSurface};
 use crate::stats::stratified::Estimate;
 use crate::workload::record::StratumId;
 
@@ -109,6 +109,10 @@ pub struct QueryReport {
     /// `(min, max)` of the queried sample (`Extrema` queries only;
     /// conservative bounds on the inverse-reduce path).
     pub extrema: Option<(f64, f64)>,
+    /// Sketch-kind uncertainty (rank error / count bounds / standard
+    /// error). `Some` exactly when a sketch kind had data; moment kinds
+    /// carry their uncertainty in `estimate.margin` instead.
+    pub surface: Option<ErrorSurface>,
     /// The relative error bound the query's `BudgetSpec::TargetError`
     /// budget promises (`None` for open-loop budgets). Compare against
     /// [`QueryReport::achieved_rel_bound`] to see the closed loop at
@@ -142,8 +146,20 @@ impl QueryReport {
             ),
             None => String::new(),
         };
+        let surface = match &self.surface {
+            Some(ErrorSurface::RankError { epsilon, kept }) => {
+                format!(" rank±{epsilon:.3} (kept={kept})")
+            }
+            Some(ErrorSurface::CountBounds { entries, coverage }) => {
+                format!(" top{} coverage={:.3}", entries.len(), coverage)
+            }
+            Some(ErrorSurface::StdError { relative, registers }) => {
+                format!(" rse={:.1}% (m={registers})", relative * 100.0)
+            }
+            None => String::new(),
+        };
         format!(
-            "q{} {} = {:.3} ± {:.3} ({}%) sample={} pop={}{}",
+            "q{} {} = {:.3} ± {:.3} ({}%) sample={} pop={}{}{}",
             self.id.as_u64(),
             self.kind.name(),
             self.estimate.value,
@@ -151,7 +167,8 @@ impl QueryReport {
             (self.estimate.confidence * 100.0) as u32,
             self.sample_size,
             self.population,
-            target
+            target,
+            surface
         )
     }
 }
@@ -247,6 +264,7 @@ mod tests {
             sample_size: 5,
             population: 10,
             extrema: None,
+            surface: None,
             target_rel_bound: None,
         };
         let out = SlideOutput { window, queries: vec![q] };
@@ -270,6 +288,7 @@ mod tests {
             sample_size: 5,
             population: 10,
             extrema: None,
+            surface: None,
             target_rel_bound: Some(0.10),
         };
         assert!((q.achieved_rel_bound() - 0.05).abs() < 1e-12);
@@ -281,5 +300,36 @@ mod tests {
         q.target_rel_bound = Some(0.01);
         assert_eq!(q.meets_target(), Some(false));
         assert!(q.summary().contains("[MISS]"), "{}", q.summary());
+    }
+
+    #[test]
+    fn sketch_surfaces_show_in_query_summaries() {
+        let mut q = QueryReport {
+            id: QueryId::new(2),
+            kind: AggregateKind::Quantile(990),
+            estimate: estimate(),
+            sample_size: 5,
+            population: 10,
+            extrema: None,
+            surface: Some(ErrorSurface::RankError { epsilon: 0.081, kept: 153 }),
+            target_rel_bound: None,
+        };
+        let s = q.summary();
+        assert!(s.contains("q2 quantile"), "{s}");
+        assert!(s.contains("rank±0.081"), "{s}");
+        assert!(s.contains("kept=153"), "{s}");
+
+        q.kind = AggregateKind::TopK(2);
+        q.surface = Some(ErrorSurface::CountBounds {
+            entries: vec![crate::job::sketch::TopEntry { key: 7, count_lo: 30, count_hi: 30 }],
+            coverage: 0.5,
+        });
+        let s = q.summary();
+        assert!(s.contains("top1 coverage=0.500"), "{s}");
+
+        q.kind = AggregateKind::DistinctCount;
+        q.surface = Some(ErrorSurface::StdError { relative: 0.065, registers: 256 });
+        let s = q.summary();
+        assert!(s.contains("rse=6.5% (m=256)"), "{s}");
     }
 }

@@ -26,11 +26,19 @@
 //!   (`min ≤ true min`, `max ≥ true max` — removing an extremal item
 //!   loses information), mirroring the paper's deferral of extreme-value
 //!   error estimation (§3.5.1).
+//! * [`AggregateKind::Quantile`] / [`AggregateKind::TopK`] /
+//!   [`AggregateKind::DistinctCount`] are **sketch-backed**
+//!   ([`crate::job::sketch`]): the §3.5 moment interval does not apply
+//!   to rank, count, or cardinality statistics, so their `Estimate`
+//!   margin stays 0 and the honest uncertainty lives in the
+//!   kind-appropriate [`ErrorSurface`] instead (DKW rank error,
+//!   guaranteed count bounds + coverage, HLL standard error).
 
 use std::collections::BTreeMap;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::job::moments::Moments;
+use crate::job::sketch::{SketchBundle, TopEntry, DISTINCT_BUCKETS};
 use crate::stats::stratified::{estimate_mean, estimate_sum, Estimate, StratumAgg};
 use crate::workload::record::StratumId;
 
@@ -49,6 +57,15 @@ pub enum AggregateKind {
     StdDev,
     /// Sample extrema; conservative bounds on the inverse-reduce path.
     Extrema,
+    /// Sketch-backed quantile at `q = permille / 1000` (e.g. `Quantile(990)`
+    /// is p99). Reports a DKW rank-error surface.
+    Quantile(u16),
+    /// Sketch-backed `k` heaviest keys. Reports guaranteed count bounds
+    /// plus the retained key-space coverage.
+    TopK(u16),
+    /// Sketch-backed distinct-key cardinality (HLL). Reports the
+    /// estimator's relative standard error.
+    DistinctCount,
 }
 
 impl AggregateKind {
@@ -61,28 +78,75 @@ impl AggregateKind {
             Self::Variance => "variance",
             Self::StdDev => "stddev",
             Self::Extrema => "extrema",
+            Self::Quantile(_) => "quantile",
+            Self::TopK(_) => "topk",
+            Self::DistinctCount => "distinct",
         }
     }
 
     /// Does this kind carry a rigorous §3.5 confidence interval? The
-    /// remaining kinds report margin 0 (exact, or a point estimate).
+    /// remaining kinds report margin 0 (exact, a point estimate, or a
+    /// sketch answer whose uncertainty lives in its [`ErrorSurface`]).
     pub fn has_error_bounds(&self) -> bool {
         matches!(self, Self::Sum | Self::Mean)
     }
 
-    /// All kinds, in a fixed order (test matrices, benches).
-    pub const ALL: [AggregateKind; 6] = [
+    /// Is this kind answered from the per-stratum sketch bundles rather
+    /// than the moments? Sketch kinds carry an [`ErrorSurface`] and opt
+    /// out of the §3.5 target-error budget loop.
+    pub fn is_sketch(&self) -> bool {
+        matches!(self, Self::Quantile(_) | Self::TopK(_) | Self::DistinctCount)
+    }
+
+    /// Reject parameterizations that cannot denote a valid answer.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            Self::Quantile(permille) if !(1..=999).contains(permille) => {
+                Err(Error::Config(format!(
+                    "quantile permille must be in 1..=999, got {permille}"
+                )))
+            }
+            Self::TopK(0) => Err(Error::Config("top-k needs k >= 1".into())),
+            _ => Ok(()),
+        }
+    }
+
+    /// All kinds, in a fixed order (test matrices, benches). Sketch
+    /// kinds sit at the end so positional assertions over the moment
+    /// kinds — and the checkpoint kind tags — stay stable.
+    pub const ALL: [AggregateKind; 9] = [
         AggregateKind::Sum,
         AggregateKind::Mean,
         AggregateKind::Count,
         AggregateKind::Variance,
         AggregateKind::StdDev,
         AggregateKind::Extrema,
+        AggregateKind::Quantile(500),
+        AggregateKind::TopK(4),
+        AggregateKind::DistinctCount,
     ];
 }
 
+/// The kind-appropriate uncertainty of a sketch-backed answer — never
+/// the §3.5 moment interval, which would be dishonest for rank, count,
+/// or cardinality statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ErrorSurface {
+    /// Quantiles: with the query's confidence, the reported value's
+    /// rank is within `epsilon` of the requested rank (DKW over the
+    /// sketch's `kept` retained values; `0.0` = exact).
+    RankError { epsilon: f64, kept: usize },
+    /// Top-K: retained keys carry guaranteed `[count_lo, count_hi]`
+    /// bounds (exact for this sketch), over `coverage` of key space
+    /// (`1.0` = every key observed).
+    CountBounds { entries: Vec<TopEntry>, coverage: f64 },
+    /// Distinct count: the HLL estimator's relative standard error over
+    /// `registers` registers.
+    StdError { relative: f64, registers: usize },
+}
+
 /// One derived query answer plus its accounting.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct DerivedAggregate {
     /// The answer with its (possibly zero) margin.
     pub estimate: Estimate,
@@ -92,6 +156,8 @@ pub struct DerivedAggregate {
     pub population: u64,
     /// `(min, max)` of the queried sample, when observed (`Extrema`).
     pub extrema: Option<(f64, f64)>,
+    /// Sketch-kind uncertainty; `None` for moment kinds or an empty fold.
+    pub surface: Option<ErrorSurface>,
     /// Strata folded over — the per-query derive work, O(strata).
     pub strata_touched: u64,
 }
@@ -99,7 +165,9 @@ pub struct DerivedAggregate {
 /// Derive one aggregate from the window's shared per-stratum moments and
 /// exact populations. `stratum` restricts the query to one stratum
 /// (`None` = whole window). Pure and O(strata): this is the *entire*
-/// per-query, per-slide cost of a multi-query session.
+/// per-query, per-slide cost of a multi-query session. Sketch kinds
+/// answer zero here (no bundles supplied) — the coordinator calls
+/// [`derive_aggregate_sketched`].
 pub fn derive_aggregate(
     kind: AggregateKind,
     stratum: Option<StratumId>,
@@ -107,12 +175,36 @@ pub fn derive_aggregate(
     moments: &BTreeMap<StratumId, Moments>,
     populations: &BTreeMap<StratumId, u64>,
 ) -> Result<DerivedAggregate> {
+    derive_aggregate_sketched(
+        kind,
+        stratum,
+        confidence,
+        moments,
+        populations,
+        &BTreeMap::new(),
+    )
+}
+
+/// [`derive_aggregate`] plus the window's per-stratum sketch bundles.
+/// The sketch fold rides the same O(strata) loop as the moment fold, so
+/// a sketch query costs exactly as much derive work as a moment query —
+/// the flat-substrate gate (`tests/session_queries.rs`) pins this at
+/// N = 16 concurrent queries.
+pub fn derive_aggregate_sketched(
+    kind: AggregateKind,
+    stratum: Option<StratumId>,
+    confidence: f64,
+    moments: &BTreeMap<StratumId, Moments>,
+    populations: &BTreeMap<StratumId, u64>,
+    sketches: &BTreeMap<StratumId, SketchBundle>,
+) -> Result<DerivedAggregate> {
     let mut aggs: Vec<StratumAgg> = Vec::with_capacity(moments.len());
     let mut sample_size = 0usize;
     let mut population = 0u64;
     let mut min = f64::INFINITY;
     let mut max = f64::NEG_INFINITY;
     let mut strata_touched = 0u64;
+    let mut folded: Option<SketchBundle> = None;
     for (&s, m) in moments {
         if stratum.is_some_and(|want| want != s) {
             continue;
@@ -124,23 +216,63 @@ pub fn derive_aggregate(
         population += pop;
         min = min.min(m.min);
         max = max.max(m.max);
-    }
-    let estimate = match kind {
-        AggregateKind::Sum => estimate_sum(&aggs, confidence)?,
-        AggregateKind::Mean => estimate_mean(&aggs, confidence)?,
-        AggregateKind::Count => exact(population as f64, confidence),
-        AggregateKind::Variance => exact(variance_of(&aggs), confidence),
-        AggregateKind::StdDev => exact(variance_of(&aggs).sqrt(), confidence),
-        AggregateKind::Extrema => {
-            exact(if max.is_finite() { max } else { 0.0 }, confidence)
+        if kind.is_sketch() {
+            if let Some(b) = sketches.get(&s) {
+                match &mut folded {
+                    Some(acc) => acc.merge(b),
+                    None => folded = Some(b.clone()),
+                }
+            }
         }
+    }
+    let (estimate, surface) = match kind {
+        AggregateKind::Sum => (estimate_sum(&aggs, confidence)?, None),
+        AggregateKind::Mean => (estimate_mean(&aggs, confidence)?, None),
+        AggregateKind::Count => (exact(population as f64, confidence), None),
+        AggregateKind::Variance => (exact(variance_of(&aggs), confidence), None),
+        AggregateKind::StdDev => (exact(variance_of(&aggs).sqrt(), confidence), None),
+        AggregateKind::Extrema => {
+            (exact(if max.is_finite() { max } else { 0.0 }, confidence), None)
+        }
+        AggregateKind::Quantile(permille) => match &folded {
+            Some(b) if !b.quantile.is_empty() => (
+                exact(b.quantile.quantile(permille as f64 / 1000.0), confidence),
+                Some(ErrorSurface::RankError {
+                    epsilon: b.quantile.rank_error(confidence),
+                    kept: b.quantile.kept(),
+                }),
+            ),
+            _ => (exact(0.0, confidence), None),
+        },
+        AggregateKind::TopK(k) => match &folded {
+            Some(b) if !b.topk.is_empty() => {
+                let entries = b.topk.top_k(k as usize);
+                let value = entries.first().map(|e| e.count_hi as f64).unwrap_or(0.0);
+                let coverage = b.topk.coverage();
+                (
+                    exact(value, confidence),
+                    Some(ErrorSurface::CountBounds { entries, coverage }),
+                )
+            }
+            _ => (exact(0.0, confidence), None),
+        },
+        AggregateKind::DistinctCount => match &folded {
+            Some(b) if !b.distinct.is_empty() => (
+                exact(b.distinct.estimate(), confidence),
+                Some(ErrorSurface::StdError {
+                    relative: b.distinct.std_error(),
+                    registers: DISTINCT_BUCKETS,
+                }),
+            ),
+            _ => (exact(0.0, confidence), None),
+        },
     };
     let extrema = if kind == AggregateKind::Extrema && min.is_finite() && max.is_finite() {
         Some((min, max))
     } else {
         None
     };
-    Ok(DerivedAggregate { estimate, sample_size, population, extrema, strata_touched })
+    Ok(DerivedAggregate { estimate, sample_size, population, extrema, surface, strata_touched })
 }
 
 /// A margin-free estimate (exact answers and point estimates).
@@ -305,6 +437,116 @@ mod tests {
     #[test]
     fn kind_names_are_stable() {
         let names: Vec<&str> = AggregateKind::ALL.iter().map(|k| k.name()).collect();
-        assert_eq!(names, ["sum", "mean", "count", "variance", "stddev", "extrema"]);
+        assert_eq!(
+            names,
+            ["sum", "mean", "count", "variance", "stddev", "extrema", "quantile", "topk",
+             "distinct"]
+        );
+    }
+
+    #[test]
+    fn kind_validation_rejects_degenerate_parameters() {
+        assert!(AggregateKind::Quantile(0).validate().is_err());
+        assert!(AggregateKind::Quantile(1000).validate().is_err());
+        assert!(AggregateKind::TopK(0).validate().is_err());
+        for kind in AggregateKind::ALL {
+            assert!(kind.validate().is_ok(), "{} in ALL must be valid", kind.name());
+        }
+    }
+
+    /// Sketch fixture: two strata with known values/keys, plus the
+    /// moments/populations the shared loop folds alongside.
+    fn sketched() -> (
+        BTreeMap<StratumId, Moments>,
+        BTreeMap<StratumId, u64>,
+        BTreeMap<StratumId, SketchBundle>,
+    ) {
+        let mut moments = BTreeMap::new();
+        let mut pops = BTreeMap::new();
+        let mut sketches = BTreeMap::new();
+        // Stratum 0: values 0..10, all key 5. Stratum 1: values 100..105,
+        // keys 7 (x3) and 9 (x2).
+        let s0: Vec<Record> =
+            (0..10u64).map(|i| Record::new(i, 0, i, 5, i as f64)).collect();
+        let s1: Vec<Record> = (0..5u64)
+            .map(|i| Record::new(100 + i, 1, i, if i < 3 { 7 } else { 9 }, 100.0 + i as f64))
+            .collect();
+        for (s, recs) in [(0u32, &s0), (1u32, &s1)] {
+            moments.insert(s, Moments::from_records(recs));
+            pops.insert(s, recs.len() as u64);
+            sketches.insert(s, SketchBundle::from_records(77, recs));
+        }
+        (moments, pops, sketches)
+    }
+
+    #[test]
+    fn sketch_kinds_answer_from_folded_bundles() {
+        let (m, p, sk) = sketched();
+        let med = derive_aggregate_sketched(
+            AggregateKind::Quantile(500), None, 0.95, &m, &p, &sk,
+        )
+        .unwrap();
+        // 15 values, all retained (floor 0): nearest rank of q=0.5 is 7.0.
+        assert_eq!(med.estimate.value, 7.0);
+        assert_eq!(med.estimate.margin, 0.0, "sketch kinds never claim a §3.5 interval");
+        assert_eq!(med.strata_touched, 2);
+        assert_eq!(med.sample_size, 15);
+        assert_eq!(
+            med.surface,
+            Some(ErrorSurface::RankError { epsilon: 0.0, kept: 15 }),
+            "below the cap the quantile sketch is exact"
+        );
+
+        let top = derive_aggregate_sketched(AggregateKind::TopK(2), None, 0.95, &m, &p, &sk)
+            .unwrap();
+        assert_eq!(top.estimate.value, 10.0, "top-1 count is the scalar answer");
+        match top.surface {
+            Some(ErrorSurface::CountBounds { ref entries, coverage }) => {
+                assert_eq!(coverage, 1.0);
+                assert_eq!(
+                    entries,
+                    &vec![
+                        TopEntry { key: 5, count_lo: 10, count_hi: 10 },
+                        TopEntry { key: 7, count_lo: 3, count_hi: 3 },
+                    ]
+                );
+            }
+            ref other => panic!("wrong surface: {other:?}"),
+        }
+
+        let distinct =
+            derive_aggregate_sketched(AggregateKind::DistinctCount, None, 0.95, &m, &p, &sk)
+                .unwrap();
+        // 3 distinct keys; small-range linear counting is near-exact here.
+        assert!(
+            (distinct.estimate.value - 3.0).abs() < 0.1,
+            "distinct estimate {}",
+            distinct.estimate.value
+        );
+        assert!(matches!(
+            distinct.surface,
+            Some(ErrorSurface::StdError { relative, registers: DISTINCT_BUCKETS })
+                if relative == 1.04 / 16.0
+        ));
+    }
+
+    #[test]
+    fn sketch_kinds_respect_the_stratum_filter_and_empty_input() {
+        let (m, p, sk) = sketched();
+        let med = derive_aggregate_sketched(
+            AggregateKind::Quantile(500), Some(1), 0.95, &m, &p, &sk,
+        )
+        .unwrap();
+        assert_eq!(med.estimate.value, 102.0, "median of 100..=104");
+        assert_eq!(med.strata_touched, 1);
+
+        // No bundles at all (the plain 5-arg path): defined zeros.
+        for kind in [AggregateKind::Quantile(500), AggregateKind::TopK(2),
+                     AggregateKind::DistinctCount] {
+            let d = derive_aggregate(kind, None, 0.95, &m, &p).unwrap();
+            assert_eq!(d.estimate.value, 0.0, "{}", kind.name());
+            assert_eq!(d.surface, None);
+            assert_eq!(d.strata_touched, 2, "fold accounting is kind-independent");
+        }
     }
 }

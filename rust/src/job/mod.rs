@@ -3,9 +3,13 @@
 //! * [`moments`] — the sub-computation result type (count, Σv, Σv², min,
 //!   max) with an exact combine, mirroring the L1 kernel's output row.
 //! * [`aggregate`] — per-query aggregate derivation (sum / mean / count /
-//!   variance / stddev / extrema) from the shared per-stratum moments —
-//!   the O(strata) fold that lets one window's memoized state answer N
+//!   variance / stddev / extrema, plus the sketch-backed quantile /
+//!   top-K / distinct kinds) from the shared per-stratum moments — the
+//!   O(strata) fold that lets one window's memoized state answer N
 //!   concurrent queries.
+//! * [`sketch`] — mergeable, byte-deterministic synopses (level-filtered
+//!   quantile + top-K, refcounted HLL) memoized per chunk next to the
+//!   moments; the substrate behind the non-moment aggregate kinds.
 //! * [`chunk`] — content-defined chunking of per-stratum item lists into
 //!   stable, memoizable map-task inputs (Incoop-style stable partitioning:
 //!   boundaries depend on item ids, not positions, so window overlap
@@ -21,8 +25,12 @@ pub mod map_fn;
 pub mod executor;
 pub mod moments;
 pub mod plan;
+pub mod sketch;
 
-pub use aggregate::{derive_aggregate, AggregateKind, DerivedAggregate};
+pub use aggregate::{
+    derive_aggregate, derive_aggregate_sketched, AggregateKind, DerivedAggregate, ErrorSurface,
+};
+pub use sketch::{DistinctSketch, QuantileSketch, SketchBundle, TopEntry, TopKSketch};
 pub use chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
 pub use map_fn::apply_map;
 pub use executor::{ChunkBackend, NativeBackend, WorkerPool};

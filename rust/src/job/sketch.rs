@@ -1,0 +1,771 @@
+//! Mergeable, deterministic sketches backing the non-moment aggregates
+//! (`Quantile`, `TopK`, `DistinctCount`).
+//!
+//! §3.5's error-bounded estimation only covers moment-derivable
+//! statistics; quantiles, heavy hitters, and cardinalities need
+//! mergeable synopses. The three sketches here are hand-rolled for the
+//! offline workspace and chosen for one non-negotiable property on top
+//! of the usual space/accuracy trade: **byte determinism under any
+//! merge order**, because the equivalence gate demands serial, sharded,
+//! and incremental execution produce identical bytes.
+//!
+//! The quantile and top-K sketches share a *level filter*: each element
+//! gets `level(x) = trailing_zeros(mix64(x ^ seed))`, a geometric
+//! random variable derived only from the element and the seed. A sketch
+//! keeps every element with `level >= floor` and raises `floor` when
+//! the kept set outgrows its cap (KLL-style compaction by level). The
+//! final floor is the *minimal* `F` with
+//! `|{x : level(x) >= F}| <= cap` over the full element set: during any
+//! insertion/merge order, the kept set at a floor is a subset of the
+//! full set's, so intermediate floors never overshoot, and the final
+//! compaction lands every replica on the same `(floor, kept set)`
+//! regardless of order. Merge is therefore associative, commutative,
+//! and bit-identical to rebuild-from-scratch (`tests/sketch_laws.rs`
+//! pins all three laws). The cardinality sketch is an HLL-style
+//! register file stored as a refcounted `(bucket, rho)` histogram,
+//! which is commutative by construction.
+//!
+//! Inverse-reduce support differs by sketch and is part of the public
+//! contract (see the README aggregates matrix):
+//!
+//! * [`DistinctSketch`] — **exact deletion**: the refcounted cell
+//!   histogram is an invertible multiset, so `delete` is the exact
+//!   inverse of `insert` (law-tested as delete ≡ rebuild).
+//! * [`QuantileSketch`] / [`TopKSketch`] — **merge-only**: once a
+//!   compaction raises the floor, sub-floor elements are gone; deleting
+//!   the elements that forced the raise could not lower it again, so
+//!   deletion would diverge from rebuild. The coordinator instead
+//!   re-folds memoized per-chunk sketches each slide (the re-chunk
+//!   fallback): unchanged chunks are never re-sketched, and the fold is
+//!   O(chunks), never O(items).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::hash::mix64;
+use crate::workload::record::Record;
+
+/// Kept-set cap of the quantile sketch. At `floor == 0` (any input up
+/// to the cap) the sketch is exact.
+pub const QUANTILE_CAP: usize = 256;
+/// Kept-key cap of the top-K sketch.
+pub const TOPK_CAP: usize = 128;
+/// HLL bucket count (`b = 8` index bits); relative standard error is
+/// `1.04 / sqrt(256) = 6.5%`.
+pub const DISTINCT_BUCKETS: usize = 256;
+
+/// Salt folded into `SystemConfig::seed` by the coordinator so sketch
+/// levels are decorrelated from every other seeded subsystem (sampler
+/// ranks, fault injector, workload generators).
+pub(crate) const SKETCH_SEED_SALT: u64 = 0x5CE7_C41B_3F9D_2A6E;
+
+// Per-sketch salts decorrelate the three level/bucket hashes from each
+// other even though they share one bundle seed.
+const QUANTILE_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+const TOPK_SALT: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const DISTINCT_SALT: u64 = 0x1656_67B1_9E37_79F9;
+
+/// Geometric level of an element: the number of trailing zeros of its
+/// salted hash (capped so it fits a `u8` comparison against any floor).
+fn level_of(seed: u64, salt: u64, x: u64) -> u8 {
+    mix64(x ^ seed ^ salt).trailing_zeros().min(63) as u8
+}
+
+/// One retained heavy-hitter entry. Counts of retained keys are exact
+/// (`count_lo == count_hi`): the level filter drops whole keys, never
+/// partial counts, so what survives is the true frequency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopEntry {
+    pub key: u64,
+    /// Guaranteed lower bound on the key's true count.
+    pub count_lo: u64,
+    /// Guaranteed upper bound on the key's true count.
+    pub count_hi: u64,
+}
+
+// ---------------------------------------------------------------------
+// Quantile
+// ---------------------------------------------------------------------
+
+/// KLL-style quantile sketch: a level-filtered subsample of
+/// `(id, value)` pairs. Exact while `floor == 0`; past the cap it keeps
+/// a ~`2^-floor` uniform subsample and reports a DKW rank-error bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    seed: u64,
+    floor: u8,
+    /// `id -> (value bits, level)`, sorted by id for deterministic
+    /// iteration and serialization.
+    entries: BTreeMap<u64, (u64, u8)>,
+}
+
+impl QuantileSketch {
+    pub fn new(seed: u64) -> QuantileSketch {
+        QuantileSketch { seed, floor: 0, entries: BTreeMap::new() }
+    }
+
+    /// Absorb one record's value, keyed by its (window-unique) id.
+    pub fn insert(&mut self, id: u64, value: f64) {
+        let level = level_of(self.seed, QUANTILE_SALT, id);
+        if level >= self.floor {
+            self.entries.insert(id, (value.to_bits(), level));
+            self.compact();
+        }
+    }
+
+    /// Fold another sketch of the same seed into this one.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        debug_assert_eq!(self.seed, other.seed, "cannot merge differently-seeded sketches");
+        if other.floor > self.floor {
+            self.floor = other.floor;
+            let f = self.floor;
+            self.entries.retain(|_, v| v.1 >= f);
+        }
+        for (&id, &(bits, level)) in &other.entries {
+            if level >= self.floor {
+                self.entries.insert(id, (bits, level));
+            }
+        }
+        self.compact();
+    }
+
+    fn compact(&mut self) {
+        while self.entries.len() > QUANTILE_CAP {
+            self.floor += 1;
+            let f = self.floor;
+            self.entries.retain(|_, v| v.1 >= f);
+        }
+    }
+
+    /// Nearest-rank quantile over the kept values; `0.0` when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        let mut values: Vec<f64> =
+            self.entries.values().map(|&(bits, _)| f64::from_bits(bits)).collect();
+        values.sort_by(|a, b| a.total_cmp(b));
+        let q = q.clamp(0.0, 1.0);
+        let idx = (q * (values.len() - 1) as f64).round() as usize;
+        values[idx.min(values.len() - 1)]
+    }
+
+    /// DKW rank-error bound at `confidence`: the reported quantile's
+    /// rank is within `epsilon` of the true rank. `0.0` while the
+    /// sketch is exact (`floor == 0`), `1.0` when empty (no claim).
+    pub fn rank_error(&self, confidence: f64) -> f64 {
+        if self.entries.is_empty() {
+            return 1.0;
+        }
+        if self.floor == 0 {
+            return 0.0;
+        }
+        let conf = confidence.clamp(0.5, 1.0 - 1e-12);
+        let eps = ((2.0 / (1.0 - conf)).ln() / (2.0 * self.entries.len() as f64)).sqrt();
+        eps.min(1.0)
+    }
+
+    /// Number of retained `(id, value)` pairs.
+    pub fn kept(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Current compaction floor (`0` = exact).
+    pub fn floor(&self) -> u8 {
+        self.floor
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Top-K
+// ---------------------------------------------------------------------
+
+/// Heavy-hitter sketch with a SpaceSaving-style memory cap enforced by
+/// the deterministic level filter over *keys*: retained keys carry
+/// exact counts, and `coverage()` reports the retained fraction of
+/// key-hash space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopKSketch {
+    seed: u64,
+    floor: u8,
+    /// `key -> (count, level)`, sorted by key.
+    keys: BTreeMap<u64, (u64, u8)>,
+}
+
+impl TopKSketch {
+    pub fn new(seed: u64) -> TopKSketch {
+        TopKSketch { seed, floor: 0, keys: BTreeMap::new() }
+    }
+
+    /// Count one occurrence of `key`.
+    pub fn insert(&mut self, key: u64) {
+        let level = level_of(self.seed, TOPK_SALT, key);
+        if level >= self.floor {
+            self.keys.entry(key).or_insert((0, level)).0 += 1;
+            self.compact();
+        }
+    }
+
+    /// Fold another sketch of the same seed into this one.
+    pub fn merge(&mut self, other: &TopKSketch) {
+        debug_assert_eq!(self.seed, other.seed, "cannot merge differently-seeded sketches");
+        if other.floor > self.floor {
+            self.floor = other.floor;
+            let f = self.floor;
+            self.keys.retain(|_, v| v.1 >= f);
+        }
+        for (&key, &(count, level)) in &other.keys {
+            if level >= self.floor {
+                self.keys.entry(key).or_insert((0, level)).0 += count;
+            }
+        }
+        self.compact();
+    }
+
+    fn compact(&mut self) {
+        while self.keys.len() > TOPK_CAP {
+            self.floor += 1;
+            let f = self.floor;
+            self.keys.retain(|_, v| v.1 >= f);
+        }
+    }
+
+    /// The `k` heaviest retained keys (count descending, key ascending
+    /// for determinism), with exact count bounds.
+    pub fn top_k(&self, k: usize) -> Vec<TopEntry> {
+        let mut all: Vec<TopEntry> = self
+            .keys
+            .iter()
+            .map(|(&key, &(count, _))| TopEntry { key, count_lo: count, count_hi: count })
+            .collect();
+        all.sort_by(|a, b| b.count_lo.cmp(&a.count_lo).then(a.key.cmp(&b.key)));
+        all.truncate(k);
+        all
+    }
+
+    /// Fraction of key-hash space the sketch still observes
+    /// (`1.0` = every key retained, counts are the complete truth).
+    pub fn coverage(&self) -> f64 {
+        1.0 / (1u64 << self.floor.min(63)) as f64
+    }
+
+    /// Current compaction floor (`0` = exact).
+    pub fn floor(&self) -> u8 {
+        self.floor
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Distinct count
+// ---------------------------------------------------------------------
+
+/// HLL-style cardinality sketch stored as a refcounted
+/// `(bucket, rho) -> multiplicity` histogram. The histogram is an
+/// invertible multiset, so unlike classic HLL register files this
+/// sketch supports **exact deletion** — the property the inverse-reduce
+/// path needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistinctSketch {
+    seed: u64,
+    cells: BTreeMap<(u8, u8), u64>,
+}
+
+impl DistinctSketch {
+    pub fn new(seed: u64) -> DistinctSketch {
+        DistinctSketch { seed, cells: BTreeMap::new() }
+    }
+
+    fn cell(&self, key: u64) -> (u8, u8) {
+        let h = mix64(key ^ self.seed ^ DISTINCT_SALT);
+        let bucket = (h & 0xFF) as u8;
+        let rho = ((h >> 8).trailing_zeros().min(55) + 1) as u8;
+        (bucket, rho)
+    }
+
+    /// Observe `key` once.
+    pub fn insert(&mut self, key: u64) {
+        *self.cells.entry(self.cell(key)).or_insert(0) += 1;
+    }
+
+    /// Exactly undo one prior `insert(key)`. Deleting a key that was
+    /// never inserted is a no-op.
+    pub fn delete(&mut self, key: u64) {
+        let cell = self.cell(key);
+        if let Some(count) = self.cells.get_mut(&cell) {
+            *count -= 1;
+            if *count == 0 {
+                self.cells.remove(&cell);
+            }
+        }
+    }
+
+    /// Fold another sketch of the same seed into this one.
+    pub fn merge(&mut self, other: &DistinctSketch) {
+        debug_assert_eq!(self.seed, other.seed, "cannot merge differently-seeded sketches");
+        for (&cell, &count) in &other.cells {
+            *self.cells.entry(cell).or_insert(0) += count;
+        }
+    }
+
+    /// HLL cardinality estimate with the standard small-range
+    /// (linear-counting) correction.
+    pub fn estimate(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
+        let m = DISTINCT_BUCKETS as f64;
+        let mut registers = [0u8; DISTINCT_BUCKETS];
+        for (&(bucket, rho), _) in &self.cells {
+            let slot = &mut registers[bucket as usize];
+            if rho > *slot {
+                *slot = rho;
+            }
+        }
+        let alpha = 0.7213 / (1.0 + 1.079 / m);
+        let sum: f64 = registers.iter().map(|&r| 2f64.powi(-(r as i32))).sum();
+        let raw = alpha * m * m / sum;
+        let zeros = registers.iter().filter(|&&r| r == 0).count();
+        if raw <= 2.5 * m && zeros > 0 {
+            m * (m / zeros as f64).ln()
+        } else {
+            raw
+        }
+    }
+
+    /// Relative standard error of the estimator: `1.04 / sqrt(m)`.
+    pub fn std_error(&self) -> f64 {
+        1.04 / (DISTINCT_BUCKETS as f64).sqrt()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bundle
+// ---------------------------------------------------------------------
+
+/// The per-chunk (and, folded, per-stratum) synopsis: one sketch of
+/// each kind over the same records, sharing one seed. This is what the
+/// memo substrate stores next to `Moments` and what the checkpoint
+/// serializes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SketchBundle {
+    pub quantile: QuantileSketch,
+    pub topk: TopKSketch,
+    pub distinct: DistinctSketch,
+}
+
+impl SketchBundle {
+    pub fn new(seed: u64) -> SketchBundle {
+        SketchBundle {
+            quantile: QuantileSketch::new(seed),
+            topk: TopKSketch::new(seed),
+            distinct: DistinctSketch::new(seed),
+        }
+    }
+
+    /// Sketch a chunk's records: values (keyed by record id) feed the
+    /// quantile sketch; keys feed the top-K and distinct sketches.
+    pub fn from_records(seed: u64, records: &[Record]) -> SketchBundle {
+        let mut bundle = SketchBundle::new(seed);
+        for r in records {
+            bundle.insert(r);
+        }
+        bundle
+    }
+
+    /// Absorb one record.
+    pub fn insert(&mut self, r: &Record) {
+        self.quantile.insert(r.id, r.value);
+        self.topk.insert(r.key);
+        self.distinct.insert(r.key);
+    }
+
+    /// Fold another bundle of the same seed into this one.
+    pub fn merge(&mut self, other: &SketchBundle) {
+        self.quantile.merge(&other.quantile);
+        self.topk.merge(&other.topk);
+        self.distinct.merge(&other.distinct);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.quantile.is_empty() && self.topk.is_empty() && self.distinct.is_empty()
+    }
+
+    /// Canonical wire encoding (little-endian, BTreeMap order — byte
+    /// deterministic). Layout:
+    ///
+    /// ```text
+    /// u64 seed
+    /// u8 q_floor | u32 q_len | (u64 id, u64 value_bits, u8 level)*
+    /// u8 t_floor | u32 t_len | (u64 key, u64 count,      u8 level)*
+    ///             u32 d_len  | (u8 bucket, u8 rho,       u64 count)*
+    /// ```
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        push_u64(&mut buf, self.quantile.seed);
+        buf.push(self.quantile.floor);
+        push_u32(&mut buf, self.quantile.entries.len() as u32);
+        for (&id, &(bits, level)) in &self.quantile.entries {
+            push_u64(&mut buf, id);
+            push_u64(&mut buf, bits);
+            buf.push(level);
+        }
+        buf.push(self.topk.floor);
+        push_u32(&mut buf, self.topk.keys.len() as u32);
+        for (&key, &(count, level)) in &self.topk.keys {
+            push_u64(&mut buf, key);
+            push_u64(&mut buf, count);
+            buf.push(level);
+        }
+        push_u32(&mut buf, self.distinct.cells.len() as u32);
+        for (&(bucket, rho), &count) in &self.distinct.cells {
+            buf.push(bucket);
+            buf.push(rho);
+            push_u64(&mut buf, count);
+        }
+        buf
+    }
+
+    /// Decode a canonical encoding. Truncation, trailing bytes, and any
+    /// violated structural invariant (caps, sort order, level/floor
+    /// consistency) yield [`Error::Checkpoint`], never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SketchBundle> {
+        let mut c = Cursor { buf: bytes, pos: 0 };
+        let seed = c.u64()?;
+
+        let q_floor = c.u8()?;
+        let q_len = c.u32()? as usize;
+        if q_len > QUANTILE_CAP {
+            return Err(corrupt(format!("quantile sketch holds {q_len} > cap entries")));
+        }
+        let mut entries = BTreeMap::new();
+        let mut prev_id: Option<u64> = None;
+        for _ in 0..q_len {
+            let id = c.u64()?;
+            let bits = c.u64()?;
+            let level = c.u8()?;
+            if prev_id.is_some_and(|p| p >= id) {
+                return Err(corrupt("quantile sketch ids out of order".into()));
+            }
+            if level > 63 || level < q_floor {
+                return Err(corrupt(format!("quantile level {level} vs floor {q_floor}")));
+            }
+            prev_id = Some(id);
+            entries.insert(id, (bits, level));
+        }
+
+        let t_floor = c.u8()?;
+        let t_len = c.u32()? as usize;
+        if t_len > TOPK_CAP {
+            return Err(corrupt(format!("top-k sketch holds {t_len} > cap keys")));
+        }
+        let mut keys = BTreeMap::new();
+        let mut prev_key: Option<u64> = None;
+        for _ in 0..t_len {
+            let key = c.u64()?;
+            let count = c.u64()?;
+            let level = c.u8()?;
+            if prev_key.is_some_and(|p| p >= key) {
+                return Err(corrupt("top-k sketch keys out of order".into()));
+            }
+            if level > 63 || level < t_floor || count == 0 {
+                return Err(corrupt(format!("top-k entry level {level} count {count}")));
+            }
+            prev_key = Some(key);
+            keys.insert(key, (count, level));
+        }
+
+        let d_len = c.u32()? as usize;
+        if d_len > DISTINCT_BUCKETS * 56 {
+            return Err(corrupt(format!("distinct sketch holds {d_len} cells")));
+        }
+        let mut cells = BTreeMap::new();
+        let mut prev_cell: Option<(u8, u8)> = None;
+        for _ in 0..d_len {
+            let bucket = c.u8()?;
+            let rho = c.u8()?;
+            let count = c.u64()?;
+            if prev_cell.is_some_and(|p| p >= (bucket, rho)) {
+                return Err(corrupt("distinct sketch cells out of order".into()));
+            }
+            if rho == 0 || rho > 56 || count == 0 {
+                return Err(corrupt(format!("distinct cell rho {rho} count {count}")));
+            }
+            prev_cell = Some((bucket, rho));
+            cells.insert((bucket, rho), count);
+        }
+
+        if c.pos != bytes.len() {
+            return Err(corrupt(format!(
+                "{} trailing bytes after sketch bundle",
+                bytes.len() - c.pos
+            )));
+        }
+        Ok(SketchBundle {
+            quantile: QuantileSketch { seed, floor: q_floor, entries },
+            topk: TopKSketch { seed, floor: t_floor, keys },
+            distinct: DistinctSketch { seed, cells },
+        })
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn corrupt(msg: String) -> Error {
+    Error::Checkpoint(format!("sketch bundle: {msg}"))
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| corrupt("truncated".into()))?;
+        let slice = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hash::fnv1a;
+    use crate::util::rng::Rng;
+
+    fn rec(id: u64, key: u64, value: f64) -> Record {
+        Record::new(id, 0, id, key, value)
+    }
+
+    fn arb_records(rng: &mut Rng, n: usize) -> Vec<Record> {
+        (0..n as u64).map(|i| rec(i, rng.below(40) as u64, rng.normal_with(50.0, 20.0))).collect()
+    }
+
+    #[test]
+    fn quantile_is_exact_below_the_cap() {
+        let mut s = QuantileSketch::new(3);
+        for i in 0..100u64 {
+            s.insert(i, i as f64);
+        }
+        assert_eq!(s.floor(), 0);
+        assert_eq!(s.kept(), 100);
+        assert_eq!(s.rank_error(0.95), 0.0, "exact sketches declare zero rank error");
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(1.0), 99.0);
+        assert_eq!(s.quantile(0.5), 50.0, "nearest rank of q=0.5 over 0..=99");
+        // Empty sketch: defined answers, no claim.
+        let empty = QuantileSketch::new(3);
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!(empty.rank_error(0.95), 1.0);
+    }
+
+    #[test]
+    fn quantile_compacts_to_cap_and_reports_dkw_error() {
+        let mut s = QuantileSketch::new(17);
+        let n = 5000u64;
+        for i in 0..n {
+            s.insert(i, i as f64);
+        }
+        assert!(s.kept() <= QUANTILE_CAP);
+        assert!(s.floor() > 0, "5000 inserts must exceed a 256-entry cap");
+        let eps = s.rank_error(0.95);
+        assert!(eps > 0.0 && eps < 1.0);
+        // The declared 99.99%-confidence rank band must hold for the
+        // median (a deterministic check: fixed seed, fixed input).
+        let wide = s.rank_error(0.9999);
+        let med = s.quantile(0.5);
+        let observed = (med / (n - 1) as f64 - 0.5).abs();
+        assert!(
+            observed <= wide,
+            "median rank error {observed:.4} exceeds declared {wide:.4}"
+        );
+    }
+
+    #[test]
+    fn topk_counts_are_exact_below_the_cap() {
+        let mut s = TopKSketch::new(5);
+        for _ in 0..30 {
+            s.insert(7);
+        }
+        for _ in 0..20 {
+            s.insert(3);
+        }
+        s.insert(11);
+        assert_eq!(s.floor(), 0);
+        assert_eq!(s.coverage(), 1.0);
+        let top = s.top_k(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0], TopEntry { key: 7, count_lo: 30, count_hi: 30 });
+        assert_eq!(top[1], TopEntry { key: 3, count_lo: 20, count_hi: 20 });
+        // Ties break by key ascending, deterministically.
+        let mut t = TopKSketch::new(5);
+        t.insert(9);
+        t.insert(2);
+        let tied = t.top_k(2);
+        assert_eq!(tied[0].key, 2);
+        assert_eq!(tied[1].key, 9);
+    }
+
+    #[test]
+    fn topk_compaction_keeps_exact_counts_for_survivors() {
+        let mut s = TopKSketch::new(23);
+        // 1000 distinct keys, key k inserted (k % 5 + 1) times.
+        for k in 0..1000u64 {
+            for _ in 0..(k % 5 + 1) {
+                s.insert(k);
+            }
+        }
+        assert!(s.floor() > 0, "1000 keys must exceed a 128-key cap");
+        assert!(s.coverage() < 1.0);
+        for e in s.top_k(TOPK_CAP) {
+            assert_eq!(e.count_lo, e.count_hi, "retained counts are exact");
+            assert_eq!(e.count_lo, e.key % 5 + 1, "count of key {} is wrong", e.key);
+        }
+    }
+
+    #[test]
+    fn distinct_estimate_tracks_true_cardinality() {
+        let mut s = DistinctSketch::new(29);
+        let truth = 10_000u64;
+        for k in 0..truth {
+            s.insert(k);
+            // Duplicates must not move the estimate's registers.
+            if k % 3 == 0 {
+                s.insert(k);
+            }
+        }
+        let est = s.estimate();
+        let rel = (est - truth as f64).abs() / truth as f64;
+        // 4x the declared standard error — a deterministic check.
+        assert!(rel <= 4.0 * s.std_error(), "relative error {rel:.3} too large");
+        assert_eq!(s.std_error(), 1.04 / 16.0);
+        assert_eq!(DistinctSketch::new(29).estimate(), 0.0);
+    }
+
+    #[test]
+    fn distinct_delete_is_the_exact_inverse_of_insert() {
+        let keep: Vec<u64> = (0..500).collect();
+        let churn: Vec<u64> = (500..900).collect();
+        let mut s = DistinctSketch::new(31);
+        for &k in keep.iter().chain(&churn) {
+            s.insert(k);
+        }
+        for &k in &churn {
+            s.delete(k);
+        }
+        let mut direct = DistinctSketch::new(31);
+        for &k in &keep {
+            direct.insert(k);
+        }
+        assert_eq!(s, direct, "delete must equal rebuild-from-scratch");
+        // Deleting an absent key is a no-op.
+        let before = s.clone();
+        s.delete(123_456);
+        assert_eq!(s, before);
+    }
+
+    #[test]
+    fn merge_is_bit_identical_to_rebuild() {
+        let mut rng = Rng::new(0xFACE);
+        for case in 0..20 {
+            let n = 200 + case * 97;
+            let records = arb_records(&mut rng, n);
+            let direct = SketchBundle::from_records(42, &records);
+            // Split into uneven chunks, sketch each, merge in reverse.
+            let cut1 = n / 3;
+            let cut2 = 2 * n / 3 + 7;
+            let parts = [&records[..cut1], &records[cut1..cut2], &records[cut2..]];
+            let mut merged = SketchBundle::new(42);
+            for part in parts.iter().rev() {
+                merged.merge(&SketchBundle::from_records(42, part));
+            }
+            assert_eq!(merged, direct);
+            assert_eq!(merged.to_bytes(), direct.to_bytes(), "byte-identical, case {case}");
+        }
+    }
+
+    #[test]
+    fn bundle_bytes_roundtrip_and_reject_corruption() {
+        let mut rng = Rng::new(0xB0B);
+        let records = arb_records(&mut rng, 700);
+        let bundle = SketchBundle::from_records(9, &records);
+        let bytes = bundle.to_bytes();
+        let back = SketchBundle::from_bytes(&bytes).unwrap();
+        assert_eq!(back, bundle);
+        assert_eq!(back.to_bytes(), bytes, "decode/encode is canonical");
+
+        // Truncation at every prefix length fails loudly.
+        for cut in [0, 1, 7, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(SketchBundle::from_bytes(&bytes[..cut]), Err(Error::Checkpoint(_))),
+                "truncation at {cut} must be rejected"
+            );
+        }
+        // Trailing garbage fails.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(SketchBundle::from_bytes(&long), Err(Error::Checkpoint(_))));
+        // An implausible length field fails (offsets 0..8 = seed,
+        // 8 = q_floor, 9..13 = q_len LE; 12 is q_len's high byte).
+        let mut bad = bytes.clone();
+        bad[12] = 0xFF;
+        assert!(matches!(SketchBundle::from_bytes(&bad), Err(Error::Checkpoint(_))));
+    }
+
+    #[test]
+    fn golden_vectors_pin_the_wire_layout() {
+        // Tiny bundle: full byte image. Any layout, hash, or ordering
+        // drift shows up here at `cargo test` time.
+        let records = [rec(1, 10, 1.5), rec(2, 10, -2.25), rec(3, 42, 100.0)];
+        let bundle = SketchBundle::from_records(7, &records);
+        let hex: String = bundle.to_bytes().iter().map(|b| format!("{b:02x}")).collect();
+        assert_eq!(hex, GOLDEN_SMALL_HEX);
+
+        // Larger bundle: pinned digest.
+        let records: Vec<Record> =
+            (0..64u64).map(|i| rec(i, i % 7, i as f64 * 0.5 - 16.0)).collect();
+        let bundle = SketchBundle::from_records(0xDEAD_BEEF, &records);
+        assert_eq!(fnv1a(&bundle.to_bytes()), GOLDEN_LARGE_DIGEST);
+    }
+
+    const GOLDEN_SMALL_HEX: &str = "070000000000000000030000000100000000000000000000000000f83f000200\
+                                    00000000000000000000000002c0010300000000000000000000000000594001\
+                                    00020000000a000000000000000200000000000000002a000000000000000100\
+                                    00000000000000020000000b02010000000000000026010200000000000000";
+    const GOLDEN_LARGE_DIGEST: u64 = 0xEE55_6A44_65A7_2ADE;
+}

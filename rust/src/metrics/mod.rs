@@ -223,6 +223,16 @@ pub struct SlideWork {
     /// every budget is open-loop. Like `derive_items`, allowed to scale
     /// with query count — never with the window.
     pub budget_adjust: u64,
+    /// Items hashed or folded into per-chunk **sketch bundles** this
+    /// slide (rehashed records on cache-missed runs plus items of chunks
+    /// whose bundle was not memoized). 0 unless a sketch-backed query
+    /// (`Quantile`/`TopK`/`DistinctCount`) is registered, so it lives
+    /// outside `substrate_total` — the moment substrate's flatness gate
+    /// must not move when a sketch query joins the mix. On the
+    /// incremental path this tracks the delta, never the window, and it
+    /// is independent of *how many* sketch queries are registered (one
+    /// side map serves them all).
+    pub sketch_items: u64,
     /// Bytes appended to the in-memory checkpoint chain this slide (0
     /// when checkpointing is off). The durability analog of the O(delta)
     /// invariant: once the base segment exists, periodic checkpoints
@@ -247,7 +257,7 @@ impl SlideWork {
     /// slide work), and `fault_injections` (an event count), so enabling
     /// durability never perturbs the O(delta) work comparisons.
     pub fn total(&self) -> u64 {
-        self.substrate_total() + self.derive_items + self.budget_adjust
+        self.substrate_total() + self.derive_items + self.budget_adjust + self.sketch_items
     }
 
     /// Items touched by the shared substrate stages (window, sampler,
@@ -282,6 +292,7 @@ impl WorkProfile {
         self.total.compute_items += w.compute_items;
         self.total.derive_items += w.derive_items;
         self.total.budget_adjust += w.budget_adjust;
+        self.total.sketch_items += w.sketch_items;
         self.total.checkpoint_bytes += w.checkpoint_bytes;
         self.total.restore_items += w.restore_items;
         self.total.fault_injections += w.fault_injections;
@@ -445,6 +456,7 @@ mod tests {
             compute_items: 1,
             derive_items: 6,
             budget_adjust: 4,
+            sketch_items: 2,
             ..SlideWork::default()
         };
         let w2 = SlideWork {
@@ -454,14 +466,15 @@ mod tests {
             compute_items: 7,
             derive_items: 0,
             budget_adjust: 0,
+            sketch_items: 0,
             checkpoint_bytes: 100,
             restore_items: 9,
             fault_injections: 1,
         };
         assert_eq!(w1.substrate_total(), 36);
-        // Per-query derivation and budget feedback count toward the
-        // headline total but never the substrate.
-        assert_eq!(w1.total(), 46);
+        // Per-query derivation, budget feedback, and sketch folds count
+        // toward the headline total but never the substrate.
+        assert_eq!(w1.total(), 48);
         // Durability counters stay out of the items-touched totals.
         assert_eq!(w2.total(), 16);
         assert_eq!(w2.substrate_total(), 16);
@@ -475,11 +488,12 @@ mod tests {
         assert_eq!(p.total().window_items, 12);
         assert_eq!(p.total().derive_items, 6);
         assert_eq!(p.total().budget_adjust, 4);
+        assert_eq!(p.total().sketch_items, 2);
         assert_eq!(p.total().checkpoint_bytes, 100);
         assert_eq!(p.total().restore_items, 9);
         assert_eq!(p.total().fault_injections, 1);
-        assert_eq!(p.total().total(), 62);
-        assert!((p.mean_total_per_slide() - 31.0).abs() < 1e-12);
+        assert_eq!(p.total().total(), 64);
+        assert!((p.mean_total_per_slide() - 32.0).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
     }
 

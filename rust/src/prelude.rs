@@ -18,7 +18,7 @@ pub use crate::coordinator::{
     StratumReport, WindowReport,
 };
 pub use crate::error::{Error, Result};
-pub use crate::job::aggregate::AggregateKind;
+pub use crate::job::aggregate::{AggregateKind, ErrorSurface};
 pub use crate::stats::stratified::Estimate;
 pub use crate::workload::gen::MultiStream;
 pub use crate::workload::record::{Record, StratumId};

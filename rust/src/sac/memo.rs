@@ -38,6 +38,7 @@ use crate::config::system::ShardStrategy;
 use crate::util::hash::{mix64, FastMap};
 
 use crate::job::moments::Moments;
+use crate::job::sketch::SketchBundle;
 use crate::sampling::SampleRun;
 use crate::workload::record::{Record, StratumId};
 
@@ -55,6 +56,25 @@ pub struct MemoEntry {
     /// different shard count at restore (entries stored through the
     /// legacy stratum-less [`MemoStore::put_chunk`] carry stratum 0,
     /// which maps to shard 0 under both strategies).
+    pub stratum: StratumId,
+}
+
+/// A memoized per-chunk sketch bundle (the synopsis behind the
+/// `Quantile` / `TopK` / `DistinctCount` aggregate kinds), keyed by the
+/// same content hash as the chunk's [`MemoEntry`]. Kept in a *side map*
+/// rather than inside `MemoEntry` so windows that never register a
+/// sketch query pay nothing — and so sketch lookups stay invisible to
+/// [`MemoStats`] (the flat-substrate gate asserts hit/miss/evicted
+/// equality across query mixes).
+#[derive(Debug, Clone)]
+pub struct SketchEntry {
+    /// The chunk's sketches.
+    pub bundle: SketchBundle,
+    /// Earliest item timestamp in the chunk (eviction key).
+    pub min_timestamp: u64,
+    /// Window that produced the entry.
+    pub window_id: u64,
+    /// Stratum whose sample produced the chunk (restore re-placement).
     pub stratum: StratumId,
 }
 
@@ -88,6 +108,7 @@ impl MemoStats {
 #[derive(Debug, Default)]
 pub struct MemoShard {
     chunks: FastMap<u64, MemoEntry>,
+    sketches: FastMap<u64, SketchEntry>,
     items: BTreeMap<StratumId, SampleRun>,
     stratum_moments: BTreeMap<StratumId, Moments>,
     hits: AtomicU64,
@@ -99,6 +120,7 @@ impl Clone for MemoShard {
     fn clone(&self) -> Self {
         MemoShard {
             chunks: self.chunks.clone(),
+            sketches: self.sketches.clone(),
             items: self.items.clone(),
             stratum_moments: self.stratum_moments.clone(),
             hits: AtomicU64::new(self.hits.load(Ordering::Relaxed)),
@@ -127,6 +149,14 @@ impl MemoShard {
     /// Peek without touching counters (planning diagnostics).
     pub fn contains_chunk(&self, hash: u64) -> bool {
         self.chunks.contains_key(&hash)
+    }
+
+    /// Look up a chunk's sketch bundle by content hash. Deliberately
+    /// **silent** — no hit/miss accounting: [`MemoStats`] must be
+    /// byte-identical whether or not sketch queries are registered
+    /// (the flat-substrate gate compares stats across query mixes).
+    pub fn get_chunk_sketch(&self, hash: u64) -> Option<SketchBundle> {
+        self.sketches.get(&hash).map(|e| e.bundle.clone())
     }
 
     /// Combined moments of one stratum's previous sample, if stored.
@@ -274,6 +304,23 @@ impl MemoStore {
             .insert(hash, MemoEntry { moments, min_timestamp, window_id, stratum: 0 });
     }
 
+    /// Memoize one chunk's sketch bundle under its stratum's shard. Like
+    /// [`MemoShard::get_chunk_sketch`], this never touches the hit/miss
+    /// counters — sketch state is a silent side map.
+    pub fn put_chunk_sketch_for(
+        &mut self,
+        stratum: StratumId,
+        hash: u64,
+        bundle: SketchBundle,
+        min_timestamp: u64,
+        window_id: u64,
+    ) {
+        let idx = self.shard_for(stratum);
+        self.shard_mut(idx)
+            .sketches
+            .insert(hash, SketchEntry { bundle, min_timestamp, window_id, stratum });
+    }
+
     /// Iterate every memoized chunk entry as `(hash, entry)`, across all
     /// shards — the checkpoint export path. Order is shard-major and
     /// hash-map-internal within a shard; consumers that need determinism
@@ -281,6 +328,13 @@ impl MemoStore {
     /// hash themselves.
     pub fn chunk_entries(&self) -> impl Iterator<Item = (u64, &MemoEntry)> + '_ {
         self.shards.iter().flat_map(|s| s.chunks.iter().map(|(&h, e)| (h, e)))
+    }
+
+    /// Iterate every memoized chunk sketch as `(hash, entry)` — the
+    /// checkpoint export path for sketch state. Same ordering caveat as
+    /// [`MemoStore::chunk_entries`]: the encoder sorts by hash.
+    pub fn sketch_entries(&self) -> impl Iterator<Item = (u64, &SketchEntry)> + '_ {
+        self.shards.iter().flat_map(|s| s.sketches.iter().map(|(&h, e)| (h, e)))
     }
 
     /// All per-stratum combined moments currently stored (checkpoint
@@ -369,7 +423,9 @@ impl MemoStore {
             let needs_items = self.shards[i].items.values().any(|r| r.min_ts() < t);
             let needs_chunks =
                 self.shards[i].chunks.values().any(|e| e.min_timestamp < t);
-            if !needs_items && !needs_chunks {
+            let needs_sketches =
+                self.shards[i].sketches.values().any(|e| e.min_timestamp < t);
+            if !needs_items && !needs_chunks && !needs_sketches {
                 continue; // nothing to evict; skip the COW clone
             }
             let shard = self.shard_mut(i);
@@ -387,6 +443,11 @@ impl MemoStore {
                 let gone = (before - shard.chunks.len()) as u64;
                 shard.evicted.fetch_add(gone, Ordering::Relaxed);
             }
+            if needs_sketches {
+                // Sketch entries age out with their chunk but are not
+                // counted: `evicted` must match across query mixes.
+                shard.sketches.retain(|_, e| e.min_timestamp >= t);
+            }
         }
     }
 
@@ -395,7 +456,7 @@ impl MemoStore {
     /// with sparse timestamps.
     pub fn evict_windows_before(&mut self, min_window_id: u64) {
         for i in 0..self.shards.len() {
-            if self.shards[i].chunks.is_empty() {
+            if self.shards[i].chunks.is_empty() && self.shards[i].sketches.is_empty() {
                 continue;
             }
             let shard = self.shard_mut(i);
@@ -403,6 +464,7 @@ impl MemoStore {
             shard.chunks.retain(|_, e| e.window_id >= min_window_id);
             let gone = (before - shard.chunks.len()) as u64;
             shard.evicted.fetch_add(gone, Ordering::Relaxed);
+            shard.sketches.retain(|_, e| e.window_id >= min_window_id);
         }
     }
 
@@ -411,6 +473,7 @@ impl MemoStore {
         for i in 0..self.shards.len() {
             let shard = self.shard_mut(i);
             shard.chunks.clear();
+            shard.sketches.clear();
             shard.items.clear();
             shard.stratum_moments.clear();
         }
@@ -437,6 +500,11 @@ impl MemoStore {
     /// Number of memoized chunk results.
     pub fn chunk_count(&self) -> usize {
         self.shards.iter().map(|s| s.chunks.len()).sum()
+    }
+
+    /// Number of memoized chunk sketch bundles.
+    pub fn sketch_count(&self) -> usize {
+        self.shards.iter().map(|s| s.sketches.len()).sum()
     }
 
     /// Total memoized items across strata.
@@ -638,6 +706,86 @@ mod tests {
         }
         assert_eq!(m.stratum_moments_all().len(), 1);
         assert_eq!(m.stratum_moments_all()[&3].count, 2.0);
+    }
+
+    fn bundle(seed: u64, recs: &[Record]) -> SketchBundle {
+        SketchBundle::from_records(seed, recs)
+    }
+
+    #[test]
+    fn sketch_side_map_is_invisible_to_stats() {
+        let mut m = MemoStore::new();
+        let before = m.stats();
+        // A miss, a put, then a hit — none of it shows up in MemoStats.
+        assert!(m.shard(0).get_chunk_sketch(0xABC).is_none());
+        m.put_chunk_sketch_for(0, 0xABC, bundle(7, &[rec(1, 0, 5)]), 5, 0);
+        let got = m.shard(0).get_chunk_sketch(0xABC).expect("memoized");
+        assert!(!got.is_empty());
+        assert_eq!(m.sketch_count(), 1);
+        assert_eq!(m.stats(), before, "sketch traffic must not move hit/miss/evicted");
+    }
+
+    #[test]
+    fn sketch_entries_age_out_with_their_chunk_uncounted() {
+        let mut m = MemoStore::new();
+        m.put_chunk(1, Moments::EMPTY, 5, 0);
+        m.put_chunk_sketch_for(0, 1, bundle(7, &[rec(1, 0, 5)]), 5, 0);
+        m.put_chunk_sketch_for(0, 2, bundle(7, &[rec(2, 0, 15)]), 15, 0);
+        m.evict_older_than(10);
+        assert!(m.shard(0).get_chunk_sketch(1).is_none());
+        assert!(m.shard(0).get_chunk_sketch(2).is_some());
+        // Only the chunk result counts toward `evicted`.
+        assert_eq!(m.stats().evicted, 1);
+        // A sketch-only shard still gets pruned (no chunk to trigger it).
+        m.evict_older_than(20);
+        assert_eq!(m.sketch_count(), 0);
+        assert_eq!(m.stats().evicted, 1);
+    }
+
+    #[test]
+    fn sketch_entries_respect_window_eviction_and_clear() {
+        let mut m = MemoStore::new();
+        m.put_chunk_sketch_for(0, 1, bundle(7, &[rec(1, 0, 0)]), 0, 3);
+        m.put_chunk_sketch_for(0, 2, bundle(7, &[rec(2, 0, 0)]), 0, 7);
+        m.evict_windows_before(5);
+        assert!(m.shard(0).get_chunk_sketch(1).is_none());
+        assert!(m.shard(0).get_chunk_sketch(2).is_some());
+        m.clear();
+        assert_eq!(m.sketch_count(), 0);
+    }
+
+    #[test]
+    fn sketch_entries_export_replaces_under_a_different_shard_count() {
+        let mut m = MemoStore::sharded(4, ShardStrategy::Hash);
+        for s in 0..6u32 {
+            m.put_chunk_sketch_for(s, 300 + s as u64, bundle(9, &[rec(s as u64, s, 1)]), 1, 2);
+        }
+        let mut entries: Vec<(u64, SketchEntry)> =
+            m.sketch_entries().map(|(h, e)| (h, e.clone())).collect();
+        entries.sort_by_key(|(h, _)| *h);
+        assert_eq!(entries.len(), 6);
+        let mut resharded = MemoStore::sharded(2, ShardStrategy::Modulo);
+        for (h, e) in entries {
+            resharded.put_chunk_sketch_for(e.stratum, h, e.bundle, e.min_timestamp, e.window_id);
+        }
+        for s in 0..6u32 {
+            assert!(
+                resharded.shard(s).get_chunk_sketch(300 + s as u64).is_some(),
+                "stratum {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_covers_sketch_state() {
+        let mut m = MemoStore::new();
+        m.put_chunk_sketch_for(0, 1, bundle(7, &[rec(1, 0, 0)]), 0, 0);
+        let snap = m.snapshot();
+        m.put_chunk_sketch_for(0, 2, bundle(7, &[rec(2, 0, 0)]), 0, 1);
+        m.clear();
+        m.restore(snap);
+        assert!(m.shard(0).get_chunk_sketch(1).is_some());
+        assert!(m.shard(0).get_chunk_sketch(2).is_none());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! (`restore_equivalence_*`); this file covers the corners.
 
 use incapprox::fault::RecoveryPolicy;
+use incapprox::job::sketch::SketchBundle;
 use incapprox::prelude::*;
 
 fn config() -> SystemConfig {
@@ -239,5 +240,156 @@ fn periodic_knob_with_checkpoint_recovery_end_to_end() {
             "slide {i}"
         );
         assert_eq!(a.window.fresh_items, r.window.fresh_items, "slide {i}");
+    }
+}
+
+#[test]
+fn v2_artifacts_are_rejected_loudly() {
+    // The sketch substrate changed the wire (sketch entries in the base
+    // segment, the PutChunkSketch journal op, tag-based kind encoding),
+    // so the format is v3 — and a v2 artifact must be refused *by
+    // version*, before any checksum or segment parsing, with an error
+    // that names the actual problem instead of "corrupted".
+    let cfg = config();
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let mut coord = Coordinator::new(cfg.clone());
+    coord.submit_query(QuerySpec::new(AggregateKind::Quantile(500))).unwrap();
+    coord.process_batch_queries(gen.take_records(cfg.window_size)).unwrap();
+    let mut artifact = Vec::new();
+    coord.checkpoint(&mut artifact).unwrap();
+    // Header layout: magic (0..4) | version (4..8, little-endian).
+    assert_eq!(
+        u32::from_le_bytes(artifact[4..8].try_into().unwrap()),
+        3,
+        "sketch-bearing artifacts are wire v3"
+    );
+
+    let mut old = artifact.clone();
+    old[4..8].copy_from_slice(&2u32.to_le_bytes());
+    let err = Coordinator::restore(&old[..], cfg.clone())
+        .err()
+        .expect("a v2 artifact must not restore");
+    assert!(matches!(err, Error::Checkpoint(_)), "wrong error kind: {err}");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("version 2") && msg.contains('3'),
+        "the refusal must name both versions: {msg}"
+    );
+
+    // Unknown future versions are refused the same way, never guessed at.
+    let mut future = artifact.clone();
+    future[4..8].copy_from_slice(&99u32.to_le_bytes());
+    let err = Coordinator::restore(&future[..], cfg).err().expect("v99 must not restore");
+    assert!(err.to_string().contains("version 99"), "{err}");
+}
+
+#[test]
+fn sketch_state_survives_restore_under_a_different_worker_count() {
+    // v3's new payload end to end: memoized per-chunk sketch bundles
+    // travel through the base segment *and* the PutChunkSketch journal
+    // ops, re-shard with the memo under a different worker count and
+    // shard strategy, and the restored coordinator answers all three
+    // sketch kinds byte-identically — values and error surfaces.
+    let cfg = config();
+    let submit = |c: &mut Coordinator| {
+        c.submit_query(QuerySpec::new(AggregateKind::Quantile(900))).unwrap();
+        c.submit_query(QuerySpec::new(AggregateKind::TopK(8))).unwrap();
+        c.submit_query(QuerySpec::new(AggregateKind::DistinctCount)).unwrap();
+        c.submit_query(QuerySpec::new(AggregateKind::Sum)).unwrap();
+    };
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let mut data = vec![gen.take_records(cfg.window_size)];
+    for _ in 0..7 {
+        data.push(gen.take_records(cfg.slide));
+    }
+    let mut live = Coordinator::new(cfg.clone());
+    let mut victim = Coordinator::new(cfg.clone());
+    submit(&mut live);
+    submit(&mut victim);
+    // First checkpoint arms the chain after 3 batches; two more slides
+    // then journal their fresh sketch bundles as PutChunkSketch deltas
+    // on top of a base that already carries sketch entries, so the
+    // second flush exercises both restore paths at once.
+    for b in &data[..3] {
+        live.process_batch_queries(b.clone()).unwrap();
+        victim.process_batch_queries(b.clone()).unwrap();
+    }
+    let mut first = Vec::new();
+    victim.checkpoint(&mut first).unwrap();
+    for b in &data[3..5] {
+        live.process_batch_queries(b.clone()).unwrap();
+        victim.process_batch_queries(b.clone()).unwrap();
+    }
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    assert!(artifact.len() > first.len(), "the second flush must append deltas");
+
+    let mut alt = cfg.clone();
+    alt.num_workers = if cfg.num_workers == 1 { 4 } else { 1 };
+    alt.shard_strategy = ShardStrategy::Modulo;
+    let mut restored = Coordinator::restore(&artifact[..], alt).unwrap();
+    assert_eq!(restored.query_count(), 4);
+    for (i, b) in data[5..].iter().enumerate() {
+        let a = live.process_batch_queries(b.clone()).unwrap();
+        let r = restored.process_batch_queries(b.clone()).unwrap();
+        assert_windows_identical(&a.window, &r.window, &format!("sketch restore slide {i}"));
+        assert_eq!(a.queries.len(), r.queries.len());
+        for (qa, qr) in a.queries.iter().zip(&r.queries) {
+            let label = format!("slide {i} {}", qa.kind.name());
+            assert_eq!(qa.kind, qr.kind, "{label}");
+            assert_eq!(
+                qa.estimate.value.to_bits(),
+                qr.estimate.value.to_bits(),
+                "{label}: {} vs {}",
+                qa.estimate.value,
+                qr.estimate.value
+            );
+            assert_eq!(qa.sample_size, qr.sample_size, "{label}");
+            assert_eq!(qa.population, qr.population, "{label}");
+            assert_eq!(qa.surface, qr.surface, "{label}: surfaces must restore exactly");
+        }
+    }
+}
+
+#[test]
+fn corrupted_sketch_state_errors_instead_of_panicking() {
+    // (a) Bit flips swept across a sketch-bearing artifact: every one is
+    // refused (outer checksum or a structural check), never a panic,
+    // never a silent Ok.
+    let cfg = config();
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let mut coord = Coordinator::new(cfg.clone());
+    coord.submit_query(QuerySpec::new(AggregateKind::DistinctCount)).unwrap();
+    coord.process_batch_queries(gen.take_records(cfg.window_size)).unwrap();
+    coord.process_batch_queries(gen.take_records(cfg.slide)).unwrap();
+    let mut artifact = Vec::new();
+    coord.checkpoint(&mut artifact).unwrap();
+    let step = (artifact.len() / 23).max(1);
+    for pos in (8..artifact.len() - 1).step_by(step) {
+        let mut bad = artifact.clone();
+        bad[pos] ^= 0x04;
+        assert!(
+            Coordinator::restore(&bad[..], cfg.clone()).is_err(),
+            "flip at byte {pos} must not restore"
+        );
+    }
+
+    // (b) The second line of defense the base-segment and journal
+    // decoders route through: `SketchBundle::from_bytes` revalidates the
+    // bundle's structural invariants, so even an artifact with a forged
+    // outer checksum cannot smuggle malformed sketch state into the
+    // memo. A floor above every stored level is structurally impossible
+    // for a real sketch — the decoder must say so.
+    let records: Vec<Record> =
+        (0..40u64).map(|i| Record::new(i, 0, i, i % 5, i as f64)).collect();
+    let good = SketchBundle::from_records(7, &records).to_bytes();
+    assert!(SketchBundle::from_bytes(&good).is_ok());
+    let mut bad = good.clone();
+    bad[8] = 0xFF; // the quantile floor byte: no entry carries level 255
+    match SketchBundle::from_bytes(&bad) {
+        Err(Error::Checkpoint(msg)) => {
+            assert!(msg.contains("sketch"), "unhelpful message: {msg}")
+        }
+        other => panic!("malformed bundle must be rejected, got {other:?}"),
     }
 }

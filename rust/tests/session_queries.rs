@@ -183,6 +183,78 @@ fn substrate_work_independent_of_query_count() {
 }
 
 #[test]
+fn sketch_substrate_work_independent_of_query_count() {
+    // The flat-substrate gate extended to the sketch-backed kinds:
+    // one sketch pass per slide serves *every* registered sketch query,
+    // its work is charged to `sketch_items` (outside `substrate_total`),
+    // the memo's sketch side map never moves `MemoStats`, and only
+    // `derive_items` scales with N — pinned at N ∈ {1, 4, 16} against a
+    // moment-only baseline (N = 0).
+    let cfg = config(ExecModeSpec::IncApprox);
+    let sketch_kinds =
+        [AggregateKind::Quantile(500), AggregateKind::TopK(4), AggregateKind::DistinctCount];
+    let mut runs = Vec::new();
+    for &n_sketch in &[0usize, 1, 4, 16] {
+        let mut gen = MultiStream::paper_section5(cfg.seed);
+        let mut coord = Coordinator::new(cfg.clone());
+        coord.submit_query(QuerySpec::new(AggregateKind::Sum)).unwrap();
+        for i in 0..n_sketch {
+            coord.submit_query(QuerySpec::new(sketch_kinds[i % sketch_kinds.len()])).unwrap();
+        }
+        let mut last = None;
+        for step in 0..6 {
+            let n = if step == 0 { cfg.window_size } else { cfg.slide };
+            last = Some(coord.process_batch_queries(gen.take_records(n)).unwrap());
+        }
+        let out = last.unwrap();
+        assert_eq!(out.queries.len(), n_sketch + 1);
+        let work = coord.work_profile().last();
+        let totals = coord.work_profile().total();
+        runs.push((n_sketch, out, work, totals, coord.memo_stats()));
+    }
+    let (_, base_out, base_work, base_totals, base_memo) = &runs[0];
+    let strata = base_out.window.strata.len() as u64;
+    assert!(strata > 1, "need a stratified stream for a meaningful gate");
+    assert_eq!(base_work.sketch_items, 0, "no sketch queries → no sketch pass");
+    assert_eq!(base_totals.sketch_items, 0);
+    let pass_work = runs[1].2.sketch_items;
+    assert!(pass_work > 0, "a registered sketch query must run the sketch pass");
+    for (n, out, work, totals, memo) in &runs {
+        // The window path is not perturbed by a single bit.
+        assert_windows_identical(&base_out.window, &out.window, &format!("N={n} window"));
+        // Moment-substrate counters: flat, sketch queries or not.
+        assert_eq!(work.window_items, base_work.window_items, "N={n}");
+        assert_eq!(work.sampler_items, base_work.sampler_items, "N={n}");
+        assert_eq!(work.plan_items, base_work.plan_items, "N={n}");
+        assert_eq!(work.compute_items, base_work.compute_items, "N={n}");
+        assert_eq!(work.substrate_total(), base_work.substrate_total(), "N={n}");
+        assert_eq!(
+            totals.substrate_total(),
+            base_totals.substrate_total(),
+            "N={n}: sketch work must live outside the moment substrate"
+        );
+        // The sketch side map is invisible to memo traffic accounting.
+        assert_eq!(memo, base_memo, "N={n}: MemoStats must not see the sketch side map");
+        // Derivation is the only per-query cost — strata per query.
+        assert_eq!(work.derive_items, (*n as u64 + 1) * strata, "N={n} derive");
+        if *n > 0 {
+            // One pass serves all N sketch queries: identical work at
+            // every N, not N× the work.
+            assert_eq!(work.sketch_items, pass_work, "N={n}: sketch pass must be shared");
+            assert!(totals.sketch_items > 0, "N={n}");
+        }
+    }
+    // Sharing the pass does not change the answers: the first sketch
+    // query (Quantile(500)) reads the same folded bundles at every N.
+    let a = &runs[1].1.queries[1];
+    let b = &runs[3].1.queries[1];
+    assert_eq!(a.kind, b.kind);
+    assert_eq!(a.estimate.value.to_bits(), b.estimate.value.to_bits());
+    assert_eq!(a.surface, b.surface);
+    assert!(a.surface.is_some(), "a live sketch answer carries its surface");
+}
+
+#[test]
 fn queries_consistent_in_every_exec_mode() {
     // All six aggregate kinds answered every slide in every mode, with
     // the cross-kind identities that must hold when everything is
@@ -254,6 +326,41 @@ fn queries_consistent_in_every_exec_mode() {
                 assert_eq!(lo.to_bits(), true_min.to_bits(), "{label}");
                 assert_eq!(hi.to_bits(), true_max.to_bits(), "{label}");
             }
+            // Sketch kinds: margin-free answers (never a §3.5 interval)
+            // with kind-appropriate error surfaces, live in every mode.
+            let (med, top, distinct) = (get(6), get(7), get(8));
+            assert_eq!(med.estimate.margin, 0.0, "{label}");
+            assert!(med.estimate.value.is_finite(), "{label}");
+            assert!(
+                matches!(med.surface, Some(ErrorSurface::RankError { epsilon, .. })
+                    if (0.0..=1.0).contains(&epsilon)),
+                "{label}: quantile surface {:?}",
+                med.surface
+            );
+            match &top.surface {
+                Some(ErrorSurface::CountBounds { entries, coverage }) => {
+                    assert!(!entries.is_empty() && entries.len() <= 4, "{label}");
+                    assert!(
+                        entries.iter().all(|e| e.count_lo == e.count_hi && e.count_lo > 0),
+                        "{label}: retained top-k counts are exact"
+                    );
+                    assert!(*coverage > 0.0 && *coverage <= 1.0, "{label}");
+                    assert_eq!(top.estimate.value, entries[0].count_hi as f64, "{label}");
+                }
+                other => panic!("{label}: wrong top-k surface {other:?}"),
+            }
+            // The generators draw from 97 keys; the HLL estimate must
+            // land in that ballpark (sampled modes see a subset).
+            assert!(
+                distinct.estimate.value > 40.0 && distinct.estimate.value < 200.0,
+                "{label}: distinct {}",
+                distinct.estimate.value
+            );
+            assert!(
+                matches!(distinct.surface, Some(ErrorSurface::StdError { registers: 256, .. })),
+                "{label}: distinct surface {:?}",
+                distinct.surface
+            );
             // The filtered query sees exactly stratum 1's share.
             let q1 = out.query(stratum1).expect("registered");
             let s1 = out.window.strata.get(&1).expect("stratum 1 exists");
@@ -280,6 +387,7 @@ fn assert_outputs_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
             qb.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
             "{label}"
         );
+        assert_eq!(qa.surface, qb.surface, "{label}: sketch error surfaces must match");
     }
 }
 

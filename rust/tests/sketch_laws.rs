@@ -1,0 +1,342 @@
+//! The sketch substrate's merge-law gates.
+//!
+//! The non-moment aggregates (`Quantile` / `TopK` / `DistinctCount`)
+//! are answered by folding memoized per-chunk [`SketchBundle`]s, and the
+//! whole design rests on four laws this file pins:
+//!
+//! 1. **Merge laws** — folding per-chunk sketches is associative,
+//!    commutative, and *byte*-deterministic: any chunking, any grouping,
+//!    any permutation of merge order lands on the same `to_bytes()`
+//!    image as sketching the records directly. This is what lets the
+//!    serial, sharded, and incremental configurations share one memo
+//!    entry per chunk and still agree bit for bit.
+//! 2. **Declared bounds hold** — the kind-appropriate error surface
+//!    (DKW rank error, exact count bounds, HLL standard error) bounds
+//!    the observed error on a known-ground-truth input.
+//! 3. **Inverse-reduce where supported** — the distinct sketch's
+//!    refcounted deletion is the *exact* inverse of insertion (delete ≡
+//!    rebuild, bit for bit); the quantile/top-K sketches are merge-only
+//!    by contract, and the coordinator's re-fold fallback makes the
+//!    incremental configuration agree with serial anyway (law 4).
+//! 4. **Cross-mode equivalence** — sketch-backed query reports
+//!    (values *and* surfaces) are byte-identical across serial, sharded,
+//!    and O(delta) incremental execution in every exec mode.
+
+mod common;
+
+use common::{arb_batch, check_property};
+use incapprox::job::sketch::{
+    DistinctSketch, SketchBundle, DISTINCT_BUCKETS, QUANTILE_CAP, TOPK_CAP,
+};
+use incapprox::prelude::*;
+
+fn config(mode: ExecModeSpec) -> SystemConfig {
+    SystemConfig {
+        mode,
+        window_size: 2000,
+        slide: 200,
+        seed: 11,
+        chunk_size: 16,
+        ..SystemConfig::default()
+    }
+}
+
+/// Pairwise tree fold — a different association than the left fold.
+fn tree_fold(seed: u64, bundles: &[SketchBundle]) -> SketchBundle {
+    match bundles {
+        [] => SketchBundle::new(seed),
+        [one] => one.clone(),
+        _ => {
+            let mid = bundles.len() / 2;
+            let mut left = tree_fold(seed, &bundles[..mid]);
+            left.merge(&tree_fold(seed, &bundles[mid..]));
+            left
+        }
+    }
+}
+
+#[test]
+fn prop_merge_is_associative_commutative_and_byte_deterministic() {
+    // Any chunking of the records, any grouping of the merges, any
+    // permutation of the chunk order: same sketch, same bytes, and all
+    // equal to sketching the full record set in one pass.
+    check_property("sketch merge laws", 25, 0xA11CE, |rng| {
+        let n = 100 + rng.below(1500);
+        let strata = 1 + rng.below(3) as u32;
+        let seed = 0x5EED ^ rng.below(1 << 16) as u64;
+        let records = arb_batch(rng, n, strata, 500);
+
+        // Random uneven chunking.
+        let mut parts: Vec<&[Record]> = Vec::new();
+        let mut rest: &[Record] = &records;
+        while !rest.is_empty() {
+            let take = (1 + rng.below(64)).min(rest.len());
+            let (head, tail) = rest.split_at(take);
+            parts.push(head);
+            rest = tail;
+        }
+        let bundles: Vec<SketchBundle> =
+            parts.iter().map(|p| SketchBundle::from_records(seed, p)).collect();
+
+        let direct = SketchBundle::from_records(seed, &records);
+        let direct_bytes = direct.to_bytes();
+
+        // Left fold.
+        let mut left = SketchBundle::new(seed);
+        for b in &bundles {
+            left.merge(b);
+        }
+        assert_eq!(left, direct, "left fold != direct over {} chunks", bundles.len());
+        assert_eq!(left.to_bytes(), direct_bytes, "left fold bytes differ");
+
+        // A different association (pairwise tree).
+        let tree = tree_fold(seed, &bundles);
+        assert_eq!(tree.to_bytes(), direct_bytes, "associativity violated");
+
+        // A random permutation of the merge order.
+        let mut perm: Vec<usize> = (0..bundles.len()).collect();
+        for i in (1..perm.len()).rev() {
+            perm.swap(i, rng.below(i + 1));
+        }
+        let mut shuffled = SketchBundle::new(seed);
+        for &i in &perm {
+            shuffled.merge(&bundles[i]);
+        }
+        assert_eq!(shuffled.to_bytes(), direct_bytes, "commutativity violated");
+
+        // Determinism is seed-scoped: a different seed is a different
+        // sketch family (otherwise the salt-fold would be dead code).
+        if !records.is_empty() {
+            let other = SketchBundle::from_records(seed ^ 0xFFFF, &records);
+            assert_ne!(other.to_bytes(), direct_bytes, "seed must reach the bytes");
+        }
+    });
+}
+
+#[test]
+fn merged_answers_stay_within_declared_bounds() {
+    // A fixed input with analytic ground truth: ids 0..4096 carry
+    // `value = id` (so the true rank of value v is exactly v/4095) and
+    // `key = id % 97` (so every key's true frequency is known). The
+    // bundle is built by chunked merge — the coordinator's fold — and
+    // every declared error surface must bound the observed error.
+    // (Constants below cross-checked against an independent simulation
+    // of the level/bucket hashes.)
+    let n = 4096u64;
+    let records: Vec<Record> =
+        (0..n).map(|i| Record::new(i, 0, i, i % 97, i as f64)).collect();
+    let mut bundle = SketchBundle::new(33);
+    for chunk in records.chunks(64) {
+        bundle.merge(&SketchBundle::from_records(33, chunk));
+    }
+    assert_eq!(bundle, SketchBundle::from_records(33, &records));
+
+    // Quantile: compacted (4096 > 256-entry cap), DKW band holds.
+    assert!(bundle.quantile.kept() <= QUANTILE_CAP);
+    assert_eq!(bundle.quantile.floor(), 4, "pinned: minimal floor for this input");
+    assert_eq!(bundle.quantile.kept(), 242);
+    let eps = bundle.quantile.rank_error(0.9999);
+    assert!(eps > 0.0 && eps < 0.15, "DKW eps for 242 kept is ~0.143, got {eps}");
+    for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+        let v = bundle.quantile.quantile(q);
+        let observed = (v / (n - 1) as f64 - q).abs();
+        assert!(
+            observed <= eps,
+            "q={q}: observed rank error {observed:.4} exceeds declared {eps:.4}"
+        );
+    }
+
+    // Top-K: 97 distinct keys fit the 128-key cap — full coverage and
+    // exact counts for every key.
+    assert_eq!(bundle.topk.floor(), 0);
+    assert_eq!(bundle.topk.coverage(), 1.0);
+    let top = bundle.topk.top_k(TOPK_CAP);
+    assert_eq!(top.len(), 97);
+    for e in &top {
+        assert_eq!(e.count_lo, e.count_hi, "retained counts are exact");
+        let truth = (0..n).filter(|i| i % 97 == e.key).count() as u64;
+        assert_eq!(e.count_lo, truth, "count of key {}", e.key);
+    }
+    // 4096 = 97·42 + 22: keys 0..=21 appear 43 times, the rest 42.
+    assert_eq!(top[0].count_lo, 43);
+    assert_eq!(top[96].count_lo, 42);
+
+    // Distinct: HLL estimate of 97 well within the declared 4σ band.
+    let est = bundle.distinct.estimate();
+    let rel = (est - 97.0).abs() / 97.0;
+    assert!(
+        rel <= 4.0 * bundle.distinct.std_error(),
+        "distinct relative error {rel:.3} exceeds 4σ = {:.3}",
+        4.0 * bundle.distinct.std_error()
+    );
+    assert_eq!(bundle.distinct.std_error(), 1.04 / (DISTINCT_BUCKETS as f64).sqrt());
+}
+
+#[test]
+fn prop_distinct_delete_equals_rebuild() {
+    // The inverse-reduce law for the one sketch that supports it: after
+    // any interleaving of inserts (with duplicates) and merges, deleting
+    // the churned multiset lands bit-for-bit on the sketch built from
+    // the survivors alone.
+    check_property("distinct delete ≡ rebuild", 25, 0xDE1, |rng| {
+        let seed = rng.below(1 << 16) as u64;
+        let keep: Vec<u64> = (0..rng.below(600) as u64).collect();
+        // Churned keys may overlap the kept ones and repeat — the
+        // refcounts must track exact multiplicities through it all.
+        let churn: Vec<u64> =
+            (0..rng.below(400)).map(|_| rng.below(800) as u64).collect();
+
+        // Build by merging two halves (merge + delete must commute).
+        let mut all: Vec<u64> = keep.iter().chain(&churn).copied().collect();
+        for i in (1..all.len()).rev() {
+            all.swap(i, rng.below(i + 1));
+        }
+        let mid = all.len() / 2;
+        let mut s = DistinctSketch::new(seed);
+        for &k in &all[..mid] {
+            s.insert(k);
+        }
+        let mut other = DistinctSketch::new(seed);
+        for &k in &all[mid..] {
+            other.insert(k);
+        }
+        s.merge(&other);
+        for &k in &churn {
+            s.delete(k);
+        }
+
+        let mut rebuilt = DistinctSketch::new(seed);
+        for &k in &keep {
+            rebuilt.insert(k);
+        }
+        assert_eq!(s, rebuilt, "delete must be the exact inverse of insert");
+        assert_eq!(s.estimate().to_bits(), rebuilt.estimate().to_bits());
+    });
+}
+
+fn sketch_specs() -> Vec<QuerySpec> {
+    vec![
+        QuerySpec::new(AggregateKind::Quantile(500)),
+        QuerySpec::new(AggregateKind::Quantile(990)).with_confidence(0.99),
+        QuerySpec::new(AggregateKind::TopK(8)),
+        QuerySpec::new(AggregateKind::DistinctCount),
+        QuerySpec::new(AggregateKind::Quantile(250)).with_stratum(1),
+    ]
+}
+
+#[test]
+fn sketch_queries_identical_across_serial_sharded_incremental() {
+    // Law 4, end to end: the same sketch queries over the same stream
+    // under serial, sharded, and O(delta) incremental execution — every
+    // slide's answers *and* error surfaces must be byte-identical, in
+    // every exec mode. (The incremental arm exercises the re-fold
+    // fallback: quantile/top-K have no inverse, so the driver re-folds
+    // memoized per-chunk bundles instead of deleting from them.)
+    for mode in [
+        ExecModeSpec::Native,
+        ExecModeSpec::IncrementalOnly,
+        ExecModeSpec::ApproxOnly,
+        ExecModeSpec::IncApprox,
+    ] {
+        let mut serial = config(mode);
+        serial.num_workers = 1;
+        serial.incremental_slide = false;
+        let mut sharded = config(mode);
+        sharded.num_workers = 4;
+        sharded.incremental_slide = false;
+        let incremental = config(mode);
+        assert!(incremental.incremental_slide, "O(delta) path is the default");
+
+        let run = |cfg: &SystemConfig| -> Vec<SlideOutput> {
+            let mut gen = MultiStream::paper_section5(cfg.seed);
+            let mut coord = Coordinator::new(cfg.clone());
+            for spec in sketch_specs() {
+                coord.submit_query(spec).unwrap();
+            }
+            (0..6)
+                .map(|step| {
+                    let n = if step == 0 { cfg.window_size } else { cfg.slide };
+                    coord.process_batch_queries(gen.take_records(n)).unwrap()
+                })
+                .collect()
+        };
+        let base = run(&serial);
+        // Sanity: the sketch answers are live, not degenerate zeros.
+        let last = base.last().unwrap();
+        assert!(last.queries[0].estimate.value > 0.0, "{}: dead median", mode.name());
+        assert!(
+            last.queries.iter().take(4).all(|q| q.surface.is_some()),
+            "{}: whole-window sketch queries must carry surfaces",
+            mode.name()
+        );
+        for (cname, cfg) in [("sharded", sharded), ("incremental", incremental)] {
+            let outs = run(&cfg);
+            assert_eq!(outs.len(), base.len());
+            for (step, (a, b)) in base.iter().zip(&outs).enumerate() {
+                let label = format!("{}/{cname} step {step}", mode.name());
+                assert_eq!(a.queries.len(), b.queries.len(), "{label}");
+                for (qa, qb) in a.queries.iter().zip(&b.queries) {
+                    assert_eq!(qa.id, qb.id, "{label}");
+                    assert_eq!(qa.kind, qb.kind, "{label}");
+                    assert_eq!(
+                        qa.estimate.value.to_bits(),
+                        qb.estimate.value.to_bits(),
+                        "{label} {}: {} vs {}",
+                        qa.kind.name(),
+                        qa.estimate.value,
+                        qb.estimate.value
+                    );
+                    assert_eq!(qa.sample_size, qb.sample_size, "{label}");
+                    assert_eq!(qa.population, qb.population, "{label}");
+                    assert_eq!(
+                        qa.surface, qb.surface,
+                        "{label} {}: surfaces must match exactly",
+                        qa.kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sketch_answers_are_slide_fresh_under_incremental_refold() {
+    // The re-fold fallback must track the *current* window, not a stale
+    // union: as the window slides past distinct key regimes, the distinct
+    // estimate must come back down once high-cardinality records age out
+    // (a pure merge-accumulating implementation would only ever grow).
+    let mut cfg = config(ExecModeSpec::IncApprox);
+    // Census budget: the sketch pass runs over the biased sample, and
+    // this test wants window-sized ground truth, not sampling noise.
+    cfg.budget = BudgetSpec::Fraction(1.0);
+    let mut coord = Coordinator::new(cfg.clone());
+    let q = coord.submit_query(QuerySpec::new(AggregateKind::DistinctCount)).unwrap();
+    let mut id = 0u64;
+    let mut batch = |n: usize, keyspace: u64, t: u64| -> Vec<Record> {
+        (0..n)
+            .map(|_| {
+                id += 1;
+                Record::new(id, (id % 3) as u32, t, id % keyspace, 1.0 + (id % 7) as f64)
+            })
+            .collect()
+    };
+    // Warm window: tiny keyspace (8 keys). Then a burst of slides with a
+    // huge keyspace, then back to tiny and slide the burst all the way out.
+    let mut outs = Vec::new();
+    outs.push(coord.process_batch_queries(batch(cfg.window_size, 8, 1)).unwrap());
+    for t in 0..4 {
+        outs.push(coord.process_batch_queries(batch(cfg.slide, 5000, 2 + t)).unwrap());
+    }
+    let peak = outs.last().unwrap().query(q).unwrap().estimate.value;
+    for t in 0..12 {
+        outs.push(coord.process_batch_queries(batch(cfg.slide, 8, 10 + t)).unwrap());
+    }
+    let settled = outs.last().unwrap().query(q).unwrap().estimate.value;
+    let start = outs[0].query(q).unwrap().estimate.value;
+    assert!(start < 20.0, "8-key warmup should read ~8 distinct, got {start}");
+    assert!(peak > 10.0 * start, "burst must raise the estimate, got {peak}");
+    assert!(
+        settled < peak / 4.0,
+        "estimate must fall once the burst leaves the window: settled {settled} vs peak {peak}"
+    );
+}
