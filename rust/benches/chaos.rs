@@ -1,0 +1,199 @@
+//! Chaos soak as a benchmark: one seeded multi-channel fault campaign
+//! per recovery policy, reporting what graceful degradation costs.
+//!
+//! **Paper mapping:** §6.3 considers memoized state lost to failures;
+//! this bench widens that to the full fault matrix the runtime absorbs —
+//! memo loss, transient compute failures (retried with deterministic
+//! bounded backoff, degrading the slide on exhaustion), broker poll
+//! stalls (typed errors + backpressure catch-up), and torn periodic
+//! checkpoint writes (chain invalidation + re-base) — plus the
+//! overload-adaptive error widening the lag feed drives.
+//!
+//! **JSON:** emits `target/bench-results/chaos.json` with one `campaign`
+//! row per recovery policy (`policy` index in [ContinueWithout,
+//! LineageRecompute, Replicated, Checkpoint] order, per-channel fault
+//! counts, `retries`, `degraded_slides`, `kafka_errs`, `ckpt_errs`,
+//! `max_bound_scale`, `final_lag`, `mean_latency_ms`).
+//!
+//! ```bash
+//! cargo bench --bench chaos            # full campaign, all 4 policies
+//! cargo bench --bench chaos -- --smoke # CI smoke (short, asserts)
+//! ```
+//!
+//! In `--smoke` mode the bench **asserts** the soak contract: every step
+//! either succeeds or fails with a typed kafka/checkpoint error, every
+//! fault channel actually fired, lag stays bounded by one catch-up
+//! round, and the degradation ladder both widened under overload and
+//! returned to baseline.
+
+use incapprox::bench_harness::{section, JsonReporter};
+use incapprox::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
+use incapprox::coordinator::{Coordinator, QuerySpec, Session};
+use incapprox::error::Error;
+use incapprox::fault::RecoveryPolicy;
+use incapprox::job::aggregate::AggregateKind;
+use incapprox::workload::gen::MultiStream;
+
+const POLICIES: [RecoveryPolicy; 4] = [
+    RecoveryPolicy::ContinueWithout,
+    RecoveryPolicy::LineageRecompute,
+    RecoveryPolicy::Replicated,
+    RecoveryPolicy::Checkpoint,
+];
+
+struct CampaignStats {
+    ok: usize,
+    kafka_errs: usize,
+    ckpt_errs: usize,
+    degraded: usize,
+    retries: u64,
+    channels: [u64; 4],
+    max_bound_scale: f64,
+    final_level: u32,
+    final_lag: u64,
+    mean_latency_ms: f64,
+}
+
+fn campaign(policy: RecoveryPolicy, slides: usize, seed: u64) -> CampaignStats {
+    let cfg = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 1000,
+        slide: 100,
+        seed,
+        chunk_size: 16,
+        fault_memo_loss: 0.05,
+        fault_compute: 0.10,
+        fault_broker: 0.06,
+        fault_checkpoint_write: 0.25,
+        checkpoint_every_slides: 7,
+        lag_watermark_slides: 2,
+        catchup_factor: 4,
+        degradation_step_factor: 1.5,
+        degradation_max_steps: 3,
+        degradation_recover_slides: 2,
+        ..SystemConfig::default()
+    };
+    let source = MultiStream::paper_section5(cfg.seed);
+    let mut session =
+        Session::new(Coordinator::new(cfg.clone()).with_recovery(policy), source)
+            .expect("session");
+    session
+        .submit(QuerySpec::new(AggregateKind::Sum).with_budget(BudgetSpec::TargetError {
+            relative_bound: 0.05,
+            confidence: 0.95,
+        }))
+        .expect("submit");
+    session.submit(QuerySpec::new(AggregateKind::Mean)).expect("submit");
+    session.warmup().expect("warmup");
+
+    let mut stats = CampaignStats {
+        ok: 0,
+        kafka_errs: 0,
+        ckpt_errs: 0,
+        degraded: 0,
+        retries: 0,
+        channels: [0; 4],
+        max_bound_scale: 1.0,
+        final_level: 0,
+        final_lag: 0,
+        mean_latency_ms: 0.0,
+    };
+    let mut latency_total = 0.0f64;
+    for step in 0..slides {
+        match session.step() {
+            Ok(out) => {
+                stats.ok += 1;
+                stats.degraded += usize::from(out.window.degraded);
+                latency_total += out.window.latency_ms;
+                for q in &out.queries {
+                    if q.bound_scale > stats.max_bound_scale {
+                        stats.max_bound_scale = q.bound_scale;
+                    }
+                }
+            }
+            Err(Error::Kafka(_)) => stats.kafka_errs += 1,
+            Err(Error::Checkpoint(_)) => stats.ckpt_errs += 1,
+            Err(other) => panic!("{policy:?} step {step}: untyped failure {other}"),
+        }
+    }
+    stats.retries = session.coordinator().work_profile().total().retries;
+    stats.channels = session.coordinator().faults_by_channel();
+    stats.final_level = session.coordinator().degradation_level();
+    stats.final_lag = session.lag().expect("lag");
+    stats.mean_latency_ms = latency_total / stats.ok.max(1) as f64;
+    stats
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let slides = if smoke { 60 } else { 400 };
+    let policies: &[RecoveryPolicy] = if smoke { &POLICIES[..2] } else { &POLICIES };
+    let mut json = JsonReporter::for_bench("chaos");
+
+    section(&format!(
+        "chaos soak: {slides} slides per policy, all four fault channels live \
+         (memo 5%, compute 10%, broker 6%, ckpt-write 25%)"
+    ));
+    println!(
+        "{:<18} {:>5} {:>6} {:>6} {:>9} {:>8} {:>18} {:>10} {:>9}",
+        "policy", "ok", "kafka", "ckpt", "degraded", "retries", "faults m/c/b/w", "max_widen", "lat_ms"
+    );
+
+    for (pi, &policy) in policies.iter().enumerate() {
+        let s = campaign(policy, slides, 0xC405 + pi as u64);
+        println!(
+            "{:<18} {:>5} {:>6} {:>6} {:>9} {:>8} {:>4}/{:>4}/{:>4}/{:>4} {:>9.2}x {:>9.3}",
+            format!("{policy:?}"),
+            s.ok,
+            s.kafka_errs,
+            s.ckpt_errs,
+            s.degraded,
+            s.retries,
+            s.channels[0],
+            s.channels[1],
+            s.channels[2],
+            s.channels[3],
+            s.max_bound_scale,
+            s.mean_latency_ms
+        );
+        json.record_point(
+            "campaign",
+            &[
+                ("policy", pi as f64),
+                ("slides", slides as f64),
+                ("ok", s.ok as f64),
+                ("kafka_errs", s.kafka_errs as f64),
+                ("ckpt_errs", s.ckpt_errs as f64),
+                ("degraded_slides", s.degraded as f64),
+                ("retries", s.retries as f64),
+                ("memo_faults", s.channels[0] as f64),
+                ("compute_faults", s.channels[1] as f64),
+                ("broker_faults", s.channels[2] as f64),
+                ("ckpt_write_faults", s.channels[3] as f64),
+                ("max_bound_scale", s.max_bound_scale),
+                ("final_level", f64::from(s.final_level)),
+                ("final_lag", s.final_lag as f64),
+                ("mean_latency_ms", s.mean_latency_ms),
+            ],
+        );
+
+        // The soak contract, asserted where CI watches.
+        assert_eq!(s.ok + s.kafka_errs + s.ckpt_errs, slides, "{policy:?}: untyped loss");
+        assert!(s.ok > slides / 2, "{policy:?}: only {}/{slides} slides succeeded", s.ok);
+        if smoke {
+            for (ch, &count) in s.channels.iter().enumerate() {
+                assert!(count > 0, "{policy:?}: fault channel {ch} never fired");
+            }
+            assert!(s.retries > 0, "{policy:?}: retry loop never engaged");
+            assert!(s.max_bound_scale >= 1.0, "{policy:?}: widening below baseline");
+            let lag_bound = (100 * 4 * 2) as u64; // slide × catchup_factor × 2
+            assert!(
+                s.final_lag < lag_bound,
+                "{policy:?}: lag {} ran away past {lag_bound}",
+                s.final_lag
+            );
+        }
+    }
+
+    json.finish().expect("write bench results");
+}

@@ -69,6 +69,15 @@ pub trait CostFunction: Send {
     /// [`CostFunction::export_state`]. No-op by default.
     fn import_state(&mut self, _state: f64) {}
 
+    /// Overload-degradation hook: multiply the policy's error target by
+    /// `scale` (≥ 1; exactly 1 restores the configured baseline). Only
+    /// closed-loop error-target policies react — open-loop budgets size
+    /// the sample from resources, not from a bound, so there is nothing
+    /// to widen and the default is a no-op. The
+    /// [`DegradationController`] calls this every slide with its current
+    /// ladder position.
+    fn set_bound_scale(&mut self, _scale: f64) {}
+
     /// Name for reports.
     fn name(&self) -> &'static str;
 }
@@ -285,6 +294,12 @@ pub struct TargetErrorCost {
     alpha: f64,
     /// Sampling fraction used before any feedback exists.
     seed_fraction: f64,
+    /// Overload-degradation multiplier on the relative bound (≥ 1;
+    /// exactly 1 at baseline). Set per slide by the
+    /// [`DegradationController`], never persisted: the controller's
+    /// ladder position is the durable state and re-applies the scale
+    /// after a restore.
+    bound_scale: f64,
 }
 
 impl TargetErrorCost {
@@ -299,12 +314,20 @@ impl TargetErrorCost {
             smoothed_n: None,
             alpha: 0.3,
             seed_fraction: 0.1,
+            bound_scale: 1.0,
         }
     }
 
-    /// The target relative bound.
+    /// The target relative bound (the configured baseline, before any
+    /// degradation widening).
     pub fn relative_bound(&self) -> f64 {
         self.relative_bound
+    }
+
+    /// The bound actually targeted right now: baseline × degradation
+    /// scale.
+    pub fn effective_bound(&self) -> f64 {
+        self.relative_bound * self.bound_scale
     }
 
     /// The confidence the bound is promised at.
@@ -351,7 +374,10 @@ impl CostFunction for TargetErrorCost {
         // capped at the covered population itself (a 1-item stratum can
         // never yield 2 samples, and an inverted clamp range panics).
         let floor = ((2 * observed.max(1)) as f64).min(covered_pop).max(1.0);
-        let target_margin = self.relative_bound * est.value.abs();
+        // The effective target: baseline bound widened by the current
+        // degradation scale (×1 at baseline). Widening the margin shrinks
+        // the backsolved demand — the load-shedding lever.
+        let target_margin = self.relative_bound * self.bound_scale * est.value.abs();
         let required_covered = required_sample_size(strata, target_margin, est.t)
             // `None` = zero observed variance: any size meets the target.
             .unwrap_or(floor)
@@ -382,8 +408,112 @@ impl CostFunction for TargetErrorCost {
         }
     }
 
+    fn set_bound_scale(&mut self, scale: f64) {
+        self.bound_scale = scale.max(1.0);
+    }
+
     fn name(&self) -> &'static str {
         "target-error"
+    }
+}
+
+/// Configuration of the overload-degradation ladder (the `degradation.*`
+/// TOML knobs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradationPolicy {
+    /// Multiplicative widening per ladder step; > 1.
+    pub step_factor: f64,
+    /// Highest ladder level; 0 disables the controller entirely.
+    pub max_steps: u32,
+    /// Consecutive calm slides (lag at or below the watermark) required
+    /// before stepping one level back down; ≥ 1.
+    pub recover_slides: u32,
+}
+
+impl Default for DegradationPolicy {
+    fn default() -> Self {
+        DegradationPolicy { step_factor: 1.5, max_steps: 0, recover_slides: 2 }
+    }
+}
+
+/// Overload-adaptive error widening, the StreamApprox-style degradation
+/// lever: when consumer lag crosses the `pipeline.lag_watermark_slides`
+/// watermark, step every `TargetError` bound up a configured ladder
+/// (shedding sample demand through the Eq 3.2 backsolve — see
+/// [`TargetErrorCost::observe_bound`]); as lag drains, walk back down to
+/// the configured baseline.
+///
+/// The controller reads only byte-identical quantities — lag measured in
+/// slides, never wall-clock — so its trajectory is deterministic across
+/// the serial, sharded, and incremental execution paths and across
+/// checkpoint/restore (its `(level, calm)` position rides the
+/// checkpoint's `Misc` record).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradationController {
+    policy: DegradationPolicy,
+    /// Current ladder level in `0..=policy.max_steps`.
+    level: u32,
+    /// Consecutive calm slides observed at the current level.
+    calm: u32,
+}
+
+impl DegradationController {
+    /// Controller at the configured baseline (level 0).
+    pub fn new(policy: DegradationPolicy) -> Self {
+        DegradationController { policy, level: 0, calm: 0 }
+    }
+
+    /// Controller that never widens (`max_steps = 0`).
+    pub fn disabled() -> Self {
+        Self::new(DegradationPolicy::default())
+    }
+
+    /// Feed one slide's lag (in slides, i.e. `lag_items / slide_len`)
+    /// against the watermark. Above the watermark: climb one level (up to
+    /// `max_steps`) and reset the calm streak. At or below: extend the
+    /// streak, and after `recover_slides` consecutive calm slides step
+    /// one level back down.
+    pub fn observe_lag_slides(&mut self, lag_slides: u64, watermark_slides: u64) {
+        if self.policy.max_steps == 0 {
+            return;
+        }
+        if lag_slides > watermark_slides {
+            self.calm = 0;
+            self.level = (self.level + 1).min(self.policy.max_steps);
+        } else {
+            self.calm += 1;
+            if self.level > 0 && self.calm >= self.policy.recover_slides.max(1) {
+                self.level -= 1;
+                self.calm = 0;
+            }
+        }
+    }
+
+    /// Current ladder level.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// The bound multiplier at the current level: `step_factor^level`,
+    /// exactly 1.0 at baseline.
+    pub fn scale(&self) -> f64 {
+        if self.level == 0 {
+            1.0
+        } else {
+            self.policy.step_factor.powi(self.level as i32)
+        }
+    }
+
+    /// Checkpointable `(level, calm)` position.
+    pub fn state(&self) -> (u32, u32) {
+        (self.level, self.calm)
+    }
+
+    /// Restore a position captured by [`DegradationController::state`]
+    /// (level clamped to the configured ladder).
+    pub fn restore_state(&mut self, level: u32, calm: u32) {
+        self.level = level.min(self.policy.max_steps);
+        self.calm = calm;
     }
 }
 
@@ -719,6 +849,157 @@ mod tests {
             // Open-loop budgets are kind-agnostic.
             assert!(validate_kind_budget(kind, &BudgetSpec::Fraction(0.1)).is_ok());
             assert!(validate_kind_budget(kind, &BudgetSpec::LatencyMs(2.0)).is_ok());
+        }
+    }
+
+    fn ladder(step_factor: f64, max_steps: u32, recover_slides: u32) -> DegradationController {
+        DegradationController::new(DegradationPolicy { step_factor, max_steps, recover_slides })
+    }
+
+    /// Satellite property: the ladder is monotone under rising lag — the
+    /// scale never decreases while lag stays above the watermark — and is
+    /// capped at the configured ceiling.
+    #[test]
+    fn degradation_monotone_under_rising_lag() {
+        let mut c = ladder(1.5, 4, 2);
+        assert_eq!(c.scale(), 1.0);
+        let mut prev = c.scale();
+        for lag in 5..40u64 {
+            c.observe_lag_slides(lag, 4);
+            let cur = c.scale();
+            assert!(cur >= prev, "scale regressed under rising lag: {prev} -> {cur}");
+            assert!(c.level() <= 4, "ladder must cap at max_steps");
+            prev = cur;
+        }
+        assert_eq!(c.level(), 4);
+        assert!((c.scale() - 1.5f64.powi(4)).abs() < 1e-12);
+    }
+
+    /// Satellite property: once lag clears, the controller returns
+    /// EXACTLY to the configured baseline — scale() == 1.0 bit-for-bit,
+    /// not merely approximately.
+    #[test]
+    fn degradation_returns_exactly_to_baseline() {
+        for &(factor, steps, recover) in
+            &[(1.5, 3u32, 2u32), (2.0, 5, 1), (1.1, 8, 4), (3.0, 1, 3)]
+        {
+            let mut c = ladder(factor, steps, recover);
+            // Drive to the top of the ladder…
+            for _ in 0..(steps + 5) {
+                c.observe_lag_slides(100, 4);
+            }
+            assert_eq!(c.level(), steps);
+            // …then drain: each level takes `recover` calm slides.
+            for _ in 0..(steps * recover + recover) {
+                c.observe_lag_slides(0, 4);
+            }
+            assert_eq!(c.level(), 0, "factor={factor} steps={steps}");
+            assert_eq!(c.scale().to_bits(), 1.0f64.to_bits(), "baseline must be exact");
+        }
+    }
+
+    /// Recovery requires `recover_slides` CONSECUTIVE calm slides: a lag
+    /// spike mid-streak resets it.
+    #[test]
+    fn degradation_recovery_streak_resets_on_spike() {
+        let mut c = ladder(1.5, 4, 3);
+        for _ in 0..2 {
+            c.observe_lag_slides(10, 4);
+        }
+        assert_eq!(c.level(), 2);
+        c.observe_lag_slides(0, 4);
+        c.observe_lag_slides(0, 4);
+        assert_eq!(c.level(), 2, "streak of 2 < recover_slides 3");
+        c.observe_lag_slides(10, 4); // spike resets the streak (and climbs)
+        assert_eq!(c.level(), 3);
+        for _ in 0..3 {
+            c.observe_lag_slides(0, 4);
+        }
+        assert_eq!(c.level(), 2, "a full fresh streak steps down once");
+    }
+
+    /// A disabled ladder (max_steps = 0) never moves, whatever the lag.
+    #[test]
+    fn degradation_disabled_never_widens() {
+        let mut c = DegradationController::disabled();
+        for lag in [0u64, 5, 500, u64::MAX] {
+            c.observe_lag_slides(lag, 4);
+            assert_eq!(c.level(), 0);
+            assert_eq!(c.scale().to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn degradation_state_roundtrip_and_clamp() {
+        let mut c = ladder(1.5, 4, 2);
+        for _ in 0..3 {
+            c.observe_lag_slides(10, 4);
+        }
+        c.observe_lag_slides(0, 4);
+        let (level, calm) = c.state();
+        assert_eq!((level, calm), (3, 1));
+        let mut restored = ladder(1.5, 4, 2);
+        restored.restore_state(level, calm);
+        assert_eq!(restored.state(), c.state());
+        assert_eq!(restored.scale().to_bits(), c.scale().to_bits());
+        // A shrunk ladder clamps a restored out-of-range level.
+        let mut narrow = ladder(1.5, 2, 2);
+        narrow.restore_state(7, 0);
+        assert_eq!(narrow.level(), 2);
+    }
+
+    /// Satellite property: degradation never widens an open-loop budget.
+    /// `set_bound_scale` is a no-op for fraction/token/latency policies —
+    /// their sample sizing is resource-driven and must be untouched by
+    /// the ladder — and `validate_kind_budget` guarantees sketch kinds
+    /// only ever carry open-loop budgets, so no sketch query can widen.
+    #[test]
+    fn degradation_never_widens_open_loop_budgets() {
+        let window = 10_000usize;
+        let specs = [
+            BudgetSpec::Fraction(0.1),
+            BudgetSpec::Tokens { per_window: 500.0, cost_per_item: 2.0 },
+            BudgetSpec::LatencyMs(100.0),
+        ];
+        for spec in &specs {
+            let mut plain = from_spec(spec);
+            let mut scaled = from_spec(spec);
+            scaled.set_bound_scale(8.0);
+            for _ in 0..5 {
+                assert_eq!(
+                    plain.sample_size(window),
+                    scaled.sample_size(window),
+                    "{} must ignore the degradation scale",
+                    plain.name()
+                );
+            }
+        }
+        // The closed-loop policy DOES react: a widened bound sheds
+        // sample demand through the backsolve.
+        let strata = [agg(100.0, 5000.0, 256_400.0, 10_000.0)];
+        let mut base = TargetErrorCost::new(0.01, 0.95);
+        let mut wide = TargetErrorCost::new(0.01, 0.95);
+        wide.set_bound_scale(4.0);
+        base.observe_bound(&strata, 10_000.0);
+        wide.observe_bound(&strata, 10_000.0);
+        assert!(
+            wide.demand().unwrap() < base.demand().unwrap(),
+            "widened bound must shed demand: {:?} vs {:?}",
+            base.demand(),
+            wide.demand()
+        );
+        assert!((wide.effective_bound() - 0.04).abs() < 1e-12);
+        // Returning the scale to baseline restores the exact configured
+        // target.
+        wide.set_bound_scale(1.0);
+        assert_eq!(wide.effective_bound().to_bits(), 0.01f64.to_bits());
+        // Sketch kinds cannot even carry a TargetError budget, so the
+        // ladder can never reach a sketch query's surface.
+        let closed = BudgetSpec::TargetError { relative_bound: 0.02, confidence: 0.95 };
+        for kind in AggregateKind::ALL {
+            if kind.is_sketch() {
+                assert!(validate_kind_budget(kind, &closed).is_err());
+            }
         }
     }
 

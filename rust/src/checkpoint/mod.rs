@@ -55,7 +55,7 @@ use std::io::{Read, Write};
 use crate::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
 use crate::coordinator::query::QuerySpec;
 use crate::error::{Error, Result};
-use crate::fault::RecoveryPolicy;
+use crate::fault::{FaultPlanState, RecoveryPolicy};
 use crate::job::aggregate::AggregateKind;
 use crate::job::moments::Moments;
 use crate::job::sketch::SketchBundle;
@@ -77,8 +77,14 @@ const MAGIC: u32 = 0x4B43_4149;
 /// `PutChunkSketch` journal op) and replaces the aggregate-kind wire
 /// byte — previously an index into `AggregateKind::ALL`, which cannot
 /// represent parameterized kinds like `Quantile(750)` — with an
-/// explicit tag plus a `u32` parameter for `Quantile`/`TopK`.
-const VERSION: u32 = 3;
+/// explicit tag plus a `u32` parameter for `Quantile`/`TopK`; v4
+/// replaces the single memo-channel injector RNG in `Misc` with the
+/// full multi-channel fault-plan state (four RNGs, four counters, the
+/// latched broker / checkpoint-write verdicts) and adds the
+/// degradation-controller ladder position, so restored runs replay the
+/// exact fault schedule on every channel *and* continue the same
+/// bound-widening trajectory.
+const VERSION: u32 = 4;
 
 /// The `budget_states` slot of the coordinator's *session-level* cost
 /// function (`SystemConfig::budget`). Per-query controllers use their
@@ -209,17 +215,20 @@ pub(crate) struct QueryEntry {
 }
 
 /// Small always-current state written into every segment: counters that
-/// drive recompute epochs, the query registry, the recovery policy, and
-/// the fault-injector RNG (so a restored run replays the same fault
-/// schedule *and* handles it the same way).
+/// drive recompute epochs, the query registry, the recovery policy, the
+/// multi-channel fault-plan state (so a restored run replays the same
+/// fault schedule *and* handles it the same way — including any broker
+/// or checkpoint-write verdict drawn but not yet consumed), and the
+/// degradation controller's ladder position.
 #[derive(Debug, Clone)]
 pub(crate) struct Misc {
     pub windows_processed: u64,
     pub next_query_id: u64,
     pub queries: Vec<QueryEntry>,
     pub recovery: RecoveryPolicy,
-    pub injector_rng: [u64; 4],
-    pub injector_count: u64,
+    pub fault: FaultPlanState,
+    pub degrade_level: u32,
+    pub degrade_calm: u32,
 }
 
 fn policy_tag(p: RecoveryPolicy) -> u8 {
@@ -619,10 +628,20 @@ fn put_misc<W: Write>(w: &mut CkptWriter<W>, m: &Misc) -> Result<()> {
         }
     }
     w.u8(policy_tag(m.recovery))?;
-    for s in m.injector_rng {
-        w.u64(s)?;
+    // Fault-plan state in fixed channel order (memo, compute, broker,
+    // checkpoint-write): RNG words, injected counters, latched verdicts.
+    for rng in m.fault.rngs {
+        for word in rng {
+            w.u64(word)?;
+        }
     }
-    w.u64(m.injector_count)
+    for count in m.fault.injected {
+        w.u64(count)?;
+    }
+    w.u8(u8::from(m.fault.pending_broker))?;
+    w.u8(u8::from(m.fault.pending_checkpoint_write))?;
+    w.u32(m.degrade_level)?;
+    w.u32(m.degrade_calm)
 }
 
 fn get_misc<R: Read>(r: &mut CkptReader<R>) -> Result<Misc> {
@@ -651,18 +670,27 @@ fn get_misc<R: Read>(r: &mut CkptReader<R>) -> Result<Misc> {
         });
     }
     let recovery = policy_from_tag(r.u8()?)?;
-    let mut injector_rng = [0u64; 4];
-    for s in &mut injector_rng {
-        *s = r.u64()?;
+    let mut fault = FaultPlanState::default();
+    for rng in &mut fault.rngs {
+        for word in rng.iter_mut() {
+            *word = r.u64()?;
+        }
     }
-    let injector_count = r.u64()?;
+    for count in &mut fault.injected {
+        *count = r.u64()?;
+    }
+    fault.pending_broker = r.u8()? != 0;
+    fault.pending_checkpoint_write = r.u8()? != 0;
+    let degrade_level = r.u32()?;
+    let degrade_calm = r.u32()?;
     Ok(Misc {
         windows_processed,
         next_query_id,
         queries,
         recovery,
-        injector_rng,
-        injector_count,
+        fault,
+        degrade_level,
+        degrade_calm,
     })
 }
 
@@ -1402,8 +1430,14 @@ mod tests {
                 },
             ],
             recovery: RecoveryPolicy::Checkpoint,
-            injector_rng: [1, 2, 3, 4],
-            injector_count: 5,
+            fault: FaultPlanState {
+                rngs: [[1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12], [13, 14, 15, 16]],
+                injected: [5, 2, 1, 0],
+                pending_broker: true,
+                pending_checkpoint_write: false,
+            },
+            degrade_level: 2,
+            degrade_calm: 1,
         };
         let sketch = SketchBundle::from_records(7, &[rec(1, 1), rec(2, 2)]);
         let base = Segment::Base(BaseState {
@@ -1456,7 +1490,11 @@ mod tests {
                     "parameterized kinds must round-trip through the tag encoding"
                 );
                 assert_eq!(b.misc.recovery, RecoveryPolicy::Checkpoint);
-                assert_eq!(b.misc.injector_rng, [1, 2, 3, 4]);
+                assert_eq!(
+                    b.misc.fault, misc.fault,
+                    "the full multi-channel fault plan must round-trip"
+                );
+                assert_eq!((b.misc.degrade_level, b.misc.degrade_calm), (2, 1));
                 assert_eq!(
                     b.budget_states,
                     vec![
@@ -1547,8 +1585,9 @@ mod tests {
                 next_query_id: 0,
                 queries: vec![],
                 recovery: RecoveryPolicy::LineageRecompute,
-                injector_rng: [0; 4],
-                injector_count: 0,
+                fault: FaultPlanState::default(),
+                degrade_level: 0,
+                degrade_calm: 0,
             },
         }));
         let art = Artifact {

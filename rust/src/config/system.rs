@@ -184,6 +184,36 @@ pub struct SystemConfig {
     pub incremental_slide: bool,
     /// Per-window probability of injected memo loss (fault testing).
     pub fault_memo_loss: f64,
+    /// Per-slide probability of an injected transient failure of the
+    /// batched `ChunkBackend::compute` call (fault testing). The driver's
+    /// retry policy absorbs it; exhaustion degrades the slide.
+    pub fault_compute: f64,
+    /// Per-slide probability of an injected broker stall: the session's
+    /// next poll fails with a typed `Error::Kafka`, nothing is consumed,
+    /// and lag builds until the next step drains it.
+    pub fault_broker: f64,
+    /// Per-slide probability of an injected torn checkpoint write: the
+    /// next segment append fails with a typed `Error::Checkpoint` and the
+    /// chain re-bases at the next cadence.
+    pub fault_checkpoint_write: f64,
+    /// Total attempts (first try + retries) the driver gives the batched
+    /// compute call per slide before degrading the slide; ≥ 1.
+    pub retry_max_attempts: usize,
+    /// Backoff after the first compute failure, in abstract retry slots
+    /// (deterministic — never wall-clock); ≥ 1.
+    pub retry_backoff_base_slots: usize,
+    /// Backoff ceiling in retry slots; ≥ `retry_backoff_base_slots`.
+    pub retry_backoff_cap_slots: usize,
+    /// Multiplicative widening per degradation-ladder step (> 1). Applied
+    /// to `TargetError` relative bounds while consumer lag is above
+    /// `pipeline.lag_watermark_slides`.
+    pub degradation_step_factor: f64,
+    /// Highest degradation-ladder level; 0 (default) disables
+    /// overload-adaptive error widening.
+    pub degradation_max_steps: usize,
+    /// Consecutive calm slides (lag at or below the watermark) before the
+    /// ladder steps one level back toward the baseline; ≥ 1.
+    pub degradation_recover_slides: usize,
 }
 
 impl Default for SystemConfig {
@@ -208,6 +238,15 @@ impl Default for SystemConfig {
             checkpoint_every_slides: 0,
             incremental_slide: true,
             fault_memo_loss: 0.0,
+            fault_compute: 0.0,
+            fault_broker: 0.0,
+            fault_checkpoint_write: 0.0,
+            retry_max_attempts: 3,
+            retry_backoff_base_slots: 1,
+            retry_backoff_cap_slots: 8,
+            degradation_step_factor: 1.5,
+            degradation_max_steps: 0,
+            degradation_recover_slides: 2,
         }
     }
 }
@@ -327,6 +366,33 @@ impl SystemConfig {
         if let Some(v) = get_f64(&map, "fault.memo_loss")? {
             cfg.fault_memo_loss = v;
         }
+        if let Some(v) = get_f64(&map, "fault.compute")? {
+            cfg.fault_compute = v;
+        }
+        if let Some(v) = get_f64(&map, "fault.broker")? {
+            cfg.fault_broker = v;
+        }
+        if let Some(v) = get_f64(&map, "fault.checkpoint_write")? {
+            cfg.fault_checkpoint_write = v;
+        }
+        if let Some(v) = get_usize(&map, "retry.max_attempts")? {
+            cfg.retry_max_attempts = v;
+        }
+        if let Some(v) = get_usize(&map, "retry.backoff_base_slots")? {
+            cfg.retry_backoff_base_slots = v;
+        }
+        if let Some(v) = get_usize(&map, "retry.backoff_cap_slots")? {
+            cfg.retry_backoff_cap_slots = v;
+        }
+        if let Some(v) = get_f64(&map, "degradation.step_factor")? {
+            cfg.degradation_step_factor = v;
+        }
+        if let Some(v) = get_usize(&map, "degradation.max_steps")? {
+            cfg.degradation_max_steps = v;
+        }
+        if let Some(v) = get_usize(&map, "degradation.recover_slides")? {
+            cfg.degradation_recover_slides = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -367,10 +433,71 @@ impl SystemConfig {
         if self.catchup_factor == 0 {
             return Err(Error::Config("pipeline.catchup_factor must be > 0".into()));
         }
+        // Probability guards: `contains` is false for NaN, so NaN fails
+        // them the same way the positive guards in `validate_spec` do.
         if !(0.0..=1.0).contains(&self.fault_memo_loss) {
             return Err(Error::Config("fault.memo_loss must be in [0, 1]".into()));
         }
+        if !(0.0..=1.0).contains(&self.fault_compute) {
+            return Err(Error::Config("fault.compute must be in [0, 1]".into()));
+        }
+        if !(0.0..=1.0).contains(&self.fault_broker) {
+            return Err(Error::Config("fault.broker must be in [0, 1]".into()));
+        }
+        if !(0.0..=1.0).contains(&self.fault_checkpoint_write) {
+            return Err(Error::Config("fault.checkpoint_write must be in [0, 1]".into()));
+        }
+        if self.retry_max_attempts == 0 {
+            return Err(Error::Config("retry.max_attempts must be ≥ 1".into()));
+        }
+        if self.retry_backoff_base_slots == 0 {
+            return Err(Error::Config("retry.backoff_base_slots must be ≥ 1".into()));
+        }
+        if self.retry_backoff_cap_slots < self.retry_backoff_base_slots {
+            return Err(Error::Config(format!(
+                "retry.backoff_cap_slots must be ≥ retry.backoff_base_slots ({} < {})",
+                self.retry_backoff_cap_slots, self.retry_backoff_base_slots
+            )));
+        }
+        // Positive guard so NaN fails too (`NaN > 1.0` is false).
+        if !(self.degradation_step_factor > 1.0) {
+            return Err(Error::Config(format!(
+                "degradation.step_factor must be > 1, got {}",
+                self.degradation_step_factor
+            )));
+        }
+        if self.degradation_recover_slides == 0 {
+            return Err(Error::Config("degradation.recover_slides must be ≥ 1".into()));
+        }
         Ok(())
+    }
+
+    /// The configured fault spec for the injector's four channels.
+    pub fn fault_spec(&self) -> crate::fault::FaultSpec {
+        crate::fault::FaultSpec {
+            memo_loss_p: self.fault_memo_loss,
+            compute_p: self.fault_compute,
+            broker_p: self.fault_broker,
+            checkpoint_write_p: self.fault_checkpoint_write,
+        }
+    }
+
+    /// The configured compute retry policy (validated fields).
+    pub fn retry_policy(&self) -> crate::fault::RetryPolicy {
+        crate::fault::RetryPolicy::new(
+            self.retry_max_attempts as u32,
+            self.retry_backoff_base_slots as u64,
+            self.retry_backoff_cap_slots as u64,
+        )
+    }
+
+    /// The configured degradation-ladder policy.
+    pub fn degradation_policy(&self) -> crate::budget::DegradationPolicy {
+        crate::budget::DegradationPolicy {
+            step_factor: self.degradation_step_factor,
+            max_steps: self.degradation_max_steps as u32,
+            recover_slides: self.degradation_recover_slides as u32,
+        }
     }
 }
 
@@ -541,6 +668,77 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.lag_watermark_slides, 2);
         assert_eq!(cfg.catchup_factor, 8);
+    }
+
+    #[test]
+    fn fault_retry_degradation_knobs_default_and_roundtrip() {
+        let cfg = SystemConfig::default();
+        assert_eq!(cfg.fault_compute, 0.0);
+        assert_eq!(cfg.fault_broker, 0.0);
+        assert_eq!(cfg.fault_checkpoint_write, 0.0);
+        assert_eq!(cfg.retry_max_attempts, 3);
+        assert_eq!(cfg.retry_backoff_base_slots, 1);
+        assert_eq!(cfg.retry_backoff_cap_slots, 8);
+        assert_eq!(cfg.degradation_step_factor, 1.5);
+        assert_eq!(cfg.degradation_max_steps, 0, "degradation off by default");
+        assert_eq!(cfg.degradation_recover_slides, 2);
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [fault]
+            memo_loss = 0.1
+            compute = 0.2
+            broker = 0.05
+            checkpoint_write = 0.01
+            [retry]
+            max_attempts = 5
+            backoff_base_slots = 2
+            backoff_cap_slots = 32
+            [degradation]
+            step_factor = 2.0
+            max_steps = 4
+            recover_slides = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_memo_loss, 0.1);
+        assert_eq!(cfg.fault_compute, 0.2);
+        assert_eq!(cfg.fault_broker, 0.05);
+        assert_eq!(cfg.fault_checkpoint_write, 0.01);
+        assert_eq!(cfg.retry_max_attempts, 5);
+        assert_eq!(cfg.retry_backoff_base_slots, 2);
+        assert_eq!(cfg.retry_backoff_cap_slots, 32);
+        assert_eq!(cfg.degradation_step_factor, 2.0);
+        assert_eq!(cfg.degradation_max_steps, 4);
+        assert_eq!(cfg.degradation_recover_slides, 3);
+        // Typed builders reflect the parsed knobs.
+        assert_eq!(cfg.fault_spec().compute_p, 0.2);
+        assert_eq!(cfg.retry_policy().max_attempts, 5);
+        assert_eq!(cfg.degradation_policy().max_steps, 4);
+    }
+
+    #[test]
+    fn fault_retry_degradation_knobs_reject_bad_values() {
+        // Out-of-range probabilities.
+        assert!(SystemConfig::from_toml("[fault]\ncompute = 1.5").is_err());
+        assert!(SystemConfig::from_toml("[fault]\nbroker = -0.1").is_err());
+        assert!(SystemConfig::from_toml("[fault]\ncheckpoint_write = 2").is_err());
+        // NaN never reaches a constructor panic.
+        assert!(SystemConfig::from_toml("[fault]\ncompute = nan").is_err());
+        assert!(SystemConfig::from_toml("[degradation]\nstep_factor = nan").is_err());
+        // Retry shape.
+        assert!(SystemConfig::from_toml("[retry]\nmax_attempts = 0").is_err());
+        assert!(SystemConfig::from_toml("[retry]\nbackoff_base_slots = 0").is_err());
+        assert!(SystemConfig::from_toml(
+            "[retry]\nbackoff_base_slots = 8\nbackoff_cap_slots = 4"
+        )
+        .is_err());
+        // Degradation shape: factor must widen, recovery needs a streak.
+        assert!(SystemConfig::from_toml("[degradation]\nstep_factor = 1.0").is_err());
+        assert!(SystemConfig::from_toml("[degradation]\nstep_factor = 0.5").is_err());
+        assert!(SystemConfig::from_toml("[degradation]\nrecover_slides = 0").is_err());
+        // Everything above surfaces as Error::Config.
+        let err = SystemConfig::from_toml("[retry]\nmax_attempts = 0").unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
     }
 
     #[test]

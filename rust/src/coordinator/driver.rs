@@ -97,7 +97,7 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 
-use crate::budget::{self, CostFunction};
+use crate::budget::{self, CostFunction, DegradationController};
 use crate::checkpoint::{
     self, Artifact, BaseState, ChunkEntry, CkptTracker, Compat, DeltaState, JournalOp,
     Misc, QueryEntry, Segment, SessionSection, SketchChunkEntry, WindowCkpt,
@@ -308,6 +308,12 @@ pub struct Coordinator {
     injector: FaultInjector,
     recovery: RecoveryPolicy,
     replica: Option<MemoReplica>,
+    /// Overload-degradation ladder: widens error-target bounds while
+    /// consumer lag stays above the watermark, walks back to baseline as
+    /// it drains. Fed only byte-identical quantities (lag in slides), so
+    /// the trajectory is deterministic across worker counts and survives
+    /// checkpoint/restore.
+    degrade: DegradationController,
     /// In-memory incremental checkpoint chain. `None` until armed by the
     /// first [`Coordinator::checkpoint`] call or the periodic
     /// `pipeline.checkpoint_every_slides` knob; once armed, substrate
@@ -337,7 +343,10 @@ impl Coordinator {
 
     fn with_window(cfg: SystemConfig, window: WindowState) -> Self {
         let cost = budget::from_spec(&cfg.budget);
-        let injector = FaultInjector::new(cfg.fault_memo_loss, cfg.seed ^ 0xFA17);
+        // Multi-channel fault plan off one derived seed. The memo channel
+        // keeps the exact pre-existing stream (`FaultSpec::memo_only`
+        // compatibility); the other channels fold in per-channel salts.
+        let injector = FaultInjector::with_spec(cfg.fault_spec(), cfg.seed ^ 0xFA17);
         // `use_pjrt` callers install their backend via `with_backend`
         // right after construction — don't spawn a worker pool they
         // would immediately discard.
@@ -361,6 +370,7 @@ impl Coordinator {
             injector,
             recovery: RecoveryPolicy::LineageRecompute,
             replica: None,
+            degrade: DegradationController::new(cfg.degradation_policy()),
             ckpt: None,
             windows_processed: 0,
             profile: PhaseProfile::default(),
@@ -479,9 +489,45 @@ impl Coordinator {
         self.backend.name()
     }
 
-    /// Faults injected so far.
+    /// Memo-loss faults injected so far (the original single-channel
+    /// counter; see [`Coordinator::faults_by_channel`]).
     pub fn faults_injected(&self) -> u64 {
         self.injector.injected()
+    }
+
+    /// Faults injected per channel so far: `[memo, compute, broker,
+    /// checkpoint_write]`.
+    pub fn faults_by_channel(&self) -> [u64; 4] {
+        self.injector.injected_by_channel()
+    }
+
+    /// Consume a pending injected broker fault (drawn by the fault plan
+    /// on the last slide). The `Session` polls this before each consumer
+    /// poll and surfaces a typed [`Error::Kafka`](crate::error::Error)
+    /// for that step; unconsumed verdicts stay latched (and survive
+    /// checkpoints), so coordinator-only runs are unaffected.
+    pub fn take_broker_fault(&mut self) -> bool {
+        self.injector.take_broker_fault()
+    }
+
+    /// Feed one slide's consumer lag, measured in slides
+    /// (`lag_items / slide_len` — an integer division, so every worker
+    /// count computes the same value), to the degradation controller.
+    /// The watermark is `pipeline.lag_watermark_slides`. Called by the
+    /// `Session` before each poll; standalone coordinators may call it
+    /// directly to model external overload.
+    pub fn observe_lag_slides(&mut self, lag_slides: u64) {
+        self.degrade.observe_lag_slides(lag_slides, self.cfg.lag_watermark_slides as u64);
+    }
+
+    /// Current degradation ladder level (0 = configured baseline).
+    pub fn degradation_level(&self) -> u32 {
+        self.degrade.level()
+    }
+
+    /// Current error-bound multiplier (1.0 at baseline).
+    pub fn bound_scale(&self) -> f64 {
+        self.degrade.scale()
     }
 
     /// Resize the sliding window (Fig 5.1(c): Δ between adjacent windows).
@@ -695,20 +741,24 @@ impl Coordinator {
         slide_work.window_items =
             snap.full_view().map_or(snap.delta.len(), <[Record]>::len) as u64;
 
-        // Fault injection happens before eviction (a crash loses the
-        // store; recovery may restore the previous window's replica, or —
-        // under `RecoveryPolicy::Checkpoint` — the memo image of the last
-        // checkpoint segment).
-        let fallback = match self.recovery {
-            RecoveryPolicy::Replicated => self.replica.as_ref(),
-            RecoveryPolicy::Checkpoint => {
-                self.ckpt.as_ref().and_then(|t| t.memo_image.as_ref())
-            }
-            _ => None,
-        };
-        let fault_injected =
-            self.injector.maybe_inject(&mut self.memo, self.recovery, fallback);
+        // Draw this slide's faults from the seeded multi-channel plan.
+        // Memo loss applies before eviction (a crash loses the store;
+        // recovery may restore the previous window's replica, or — under
+        // `RecoveryPolicy::Checkpoint` — the memo image of the last
+        // checkpoint segment). Broker / checkpoint-write verdicts latch
+        // in the injector until the session or checkpoint path consumes
+        // them; the compute verdict drives the retry loop below.
+        let faults = self.injector.begin_slide();
+        let fault_injected = faults.memo_loss;
         if fault_injected {
+            let fallback = match self.recovery {
+                RecoveryPolicy::Replicated => self.replica.as_ref(),
+                RecoveryPolicy::Checkpoint => {
+                    self.ckpt.as_ref().and_then(|t| t.memo_image.as_ref())
+                }
+                _ => None,
+            };
+            FaultInjector::apply_memo_loss(&mut self.memo, self.recovery, fallback);
             // The journal can no longer reproduce the live memo (it was
             // cleared, or reset to an older image): drop it and re-base
             // at the next checkpoint.
@@ -717,6 +767,17 @@ impl Coordinator {
             }
         }
         slide_work.fault_injections = u64::from(fault_injected);
+
+        // Overload degradation: the controller's current ladder level
+        // widens every error-target budget's relative bound *before* it
+        // sizes this slide's sample, so demand sheds through the same
+        // Eq 3.2 backsolve that normally tightens it. Open-loop budgets
+        // (fraction / tokens / latency) ignore the scale by contract.
+        let bound_scale = self.degrade.scale();
+        self.cost.set_bound_scale(bound_scale);
+        for q in &mut self.queries {
+            q.cost.set_bound_scale(bound_scale);
+        }
 
         // Previous sample (pre-eviction) — the inverse-reduce base state.
         // Zero-copy: Arc handles onto the memoized runs.
@@ -790,8 +851,55 @@ impl Coordinator {
                 }
             }
         }
-        let fresh_results = self.backend.compute(&fresh_refs)?;
-        debug_assert_eq!(fresh_results.len(), fresh_refs.len());
+        // The batched call runs under the configured retry policy. An
+        // injected compute fault fails the first
+        // `1 + ⌊severity · max_attempts⌋` attempts, so severity spans
+        // recovers-on-retry through exhausts-the-budget. Backoff is
+        // deterministic bounded exponential in retry *slots* (never
+        // wall-clock — the schedule must be byte-identical across serial,
+        // sharded, and restored runs). Exhaustion degrades the slide
+        // instead of aborting it: `None` takes the surviving-strata
+        // route below.
+        let retry = self.cfg.retry_policy();
+        let mut injected_failures: u32 = if faults.compute {
+            1 + (faults.compute_severity * f64::from(retry.max_attempts)) as u32
+        } else {
+            0
+        };
+        let mut retries: u32 = 0;
+        let fresh_results: Option<Vec<Moments>> = loop {
+            let attempt = if injected_failures > 0 {
+                injected_failures -= 1;
+                Err(crate::error::Error::Fault(
+                    "injected transient compute failure".into(),
+                ))
+            } else {
+                self.backend.compute(&fresh_refs)
+            };
+            match attempt {
+                Ok(results) => break Some(results),
+                Err(err) if retries + 1 < retry.max_attempts => {
+                    retries += 1;
+                    log::debug!(
+                        "compute attempt {retries} failed ({err}); retrying after {} slots",
+                        retry.backoff_slots(retries)
+                    );
+                }
+                Err(err) => {
+                    log::warn!(
+                        "compute failed after {} attempts ({} backoff slots): {err}; \
+                         degrading slide to surviving strata",
+                        retry.max_attempts,
+                        retry.total_backoff_slots(retries),
+                    );
+                    break None;
+                }
+            }
+        };
+        slide_work.retries = u64::from(retries);
+        if let Some(results) = &fresh_results {
+            debug_assert_eq!(results.len(), fresh_refs.len());
+        }
         drop(fresh_refs);
         let compute_ms = sw_compute.elapsed_ms();
 
@@ -802,64 +910,98 @@ impl Coordinator {
         let mut chunks_total = 0usize;
         let mut chunks_reused = 0usize;
         let mut fresh_items = 0usize;
-        let mut cursor = 0usize;
-        for (&stratum, plan) in &plans {
-            match plan {
-                StratumPlan::Delta { base, added, removed, delta_items } => {
-                    let mut m = *base;
-                    for _ in added {
-                        m = m.combine(&fresh_results[cursor]);
-                        cursor += 1;
-                    }
-                    for _ in removed {
-                        m = m.inverse_combine(&fresh_results[cursor]);
-                        cursor += 1;
-                    }
-                    fresh_items += delta_items;
-                    stratum_moments.insert(stratum, m);
-                }
-                StratumPlan::Full { planned, .. } => {
-                    chunks_total += planned.len();
-                    let mut parts: Vec<Moments> = Vec::with_capacity(planned.len());
-                    for p in planned {
-                        if let Some(hit) = p.memoized {
-                            chunks_reused += 1;
-                            parts.push(hit);
-                        } else {
-                            let m = fresh_results[cursor];
+        let mut degraded_strata: Vec<StratumId> = Vec::new();
+        if let Some(fresh_results) = &fresh_results {
+            let mut cursor = 0usize;
+            for (&stratum, plan) in &plans {
+                match plan {
+                    StratumPlan::Delta { base, added, removed, delta_items } => {
+                        let mut m = *base;
+                        for _ in added {
+                            m = m.combine(&fresh_results[cursor]);
                             cursor += 1;
-                            fresh_items += p.chunk.len();
-                            if memoizes {
-                                let min_ts = p
-                                    .chunk
-                                    .items
-                                    .iter()
-                                    .map(|r| r.timestamp)
-                                    .min()
-                                    .unwrap_or(0);
-                                self.memo.put_chunk_for(
-                                    stratum,
-                                    p.chunk.hash,
-                                    m,
-                                    min_ts,
-                                    window_id,
-                                );
-                                self.ckpt_push(JournalOp::PutChunk {
-                                    stratum,
-                                    hash: p.chunk.hash,
-                                    moments: m,
-                                    min_ts,
-                                    window_id,
-                                });
-                            }
-                            parts.push(m);
                         }
+                        for _ in removed {
+                            m = m.inverse_combine(&fresh_results[cursor]);
+                            cursor += 1;
+                        }
+                        fresh_items += delta_items;
+                        stratum_moments.insert(stratum, m);
                     }
-                    stratum_moments.insert(stratum, Moments::combine_all(parts.iter()));
+                    StratumPlan::Full { planned, .. } => {
+                        chunks_total += planned.len();
+                        let mut parts: Vec<Moments> = Vec::with_capacity(planned.len());
+                        for p in planned {
+                            if let Some(hit) = p.memoized {
+                                chunks_reused += 1;
+                                parts.push(hit);
+                            } else {
+                                let m = fresh_results[cursor];
+                                cursor += 1;
+                                fresh_items += p.chunk.len();
+                                if memoizes {
+                                    let min_ts = p
+                                        .chunk
+                                        .items
+                                        .iter()
+                                        .map(|r| r.timestamp)
+                                        .min()
+                                        .unwrap_or(0);
+                                    self.memo.put_chunk_for(
+                                        stratum,
+                                        p.chunk.hash,
+                                        m,
+                                        min_ts,
+                                        window_id,
+                                    );
+                                    self.ckpt_push(JournalOp::PutChunk {
+                                        stratum,
+                                        hash: p.chunk.hash,
+                                        moments: m,
+                                        min_ts,
+                                        window_id,
+                                    });
+                                }
+                                parts.push(m);
+                            }
+                        }
+                        stratum_moments
+                            .insert(stratum, Moments::combine_all(parts.iter()));
+                    }
+                }
+            }
+            debug_assert_eq!(cursor, fresh_results.len(), "unrouted chunk results");
+        } else {
+            // Degraded slide: the compute budget is exhausted, so no
+            // fresh chunk results exist. Strata that need none — an empty
+            // inverse-reduce delta, or a full path served entirely by
+            // memo hits — still finalize normally; the rest drop out of
+            // this window's answer (queries answer from the survivors,
+            // flagged `degraded` below).
+            for (&stratum, plan) in &plans {
+                match plan {
+                    StratumPlan::Delta { base, added, removed, .. }
+                        if added.is_empty() && removed.is_empty() =>
+                    {
+                        stratum_moments.insert(stratum, *base);
+                    }
+                    StratumPlan::Full { planned, .. }
+                        if planned.iter().all(PlannedChunk::is_hit) =>
+                    {
+                        chunks_total += planned.len();
+                        chunks_reused += planned.len();
+                        stratum_moments.insert(
+                            stratum,
+                            Moments::combine_all(
+                                planned.iter().filter_map(|p| p.memoized.as_ref()),
+                            ),
+                        );
+                    }
+                    _ => degraded_strata.push(stratum),
                 }
             }
         }
-        debug_assert_eq!(cursor, fresh_results.len(), "unrouted chunk results");
+        let degraded = !degraded_strata.is_empty();
         slide_work.compute_items = fresh_items as u64;
 
         // Remember full-path chunk sequences so the next full re-chunking
@@ -992,9 +1134,18 @@ impl Coordinator {
                 extrema: d.extrema,
                 surface: d.surface,
                 target_rel_bound: match q.spec.budget {
-                    BudgetSpec::TargetError { relative_bound, .. } => Some(relative_bound),
+                    // The *effective* target: the configured baseline
+                    // widened by the degradation ladder's current level.
+                    BudgetSpec::TargetError { relative_bound, .. } => {
+                        Some(relative_bound * bound_scale)
+                    }
                     _ => None,
                 },
+                bound_scale: match q.spec.budget {
+                    BudgetSpec::TargetError { .. } => bound_scale,
+                    _ => 1.0,
+                },
+                degraded,
             });
         }
 
@@ -1030,7 +1181,24 @@ impl Coordinator {
         // next window (Algorithm 1's `memo ← memoize(biasedSample)`) —
         // Arc clones, no record copies.
         if self.cfg.mode.memoizes() || self.cfg.mode.biases() {
-            self.memo.memoize_items(&biased.per_stratum);
+            if degraded_strata.is_empty() {
+                self.memo.memoize_items(&biased.per_stratum);
+            } else {
+                // Degraded strata drop from the memo entirely (Arc
+                // handles, no copies): with no memoized run, the next
+                // slide's planner takes the Full path for them
+                // (`prev.is_none()`) and recomputes from in-window
+                // inputs — their stale stratum moments are unreachable
+                // without the run, and their chunk results stay
+                // content-addressed for reuse.
+                let surviving: BTreeMap<StratumId, SampleRun> = biased
+                    .per_stratum
+                    .iter()
+                    .filter(|(s, _)| stratum_moments.contains_key(s))
+                    .map(|(&s, run)| (s, run.clone()))
+                    .collect();
+                self.memo.memoize_items(&surviving);
+            }
             for (&s, m) in &stratum_moments {
                 self.memo.put_stratum_moments(s, *m);
             }
@@ -1084,6 +1252,7 @@ impl Coordinator {
                 strata: strata_reports,
                 latency_ms,
                 fault_injected,
+                degraded,
             },
             queries: query_reports,
         })
@@ -1152,7 +1321,7 @@ impl Coordinator {
 
     /// Export the small always-current state every segment carries.
     fn ckpt_misc(&self) -> Misc {
-        let (injector_rng, injector_count) = self.injector.state();
+        let (degrade_level, degrade_calm) = self.degrade.state();
         Misc {
             windows_processed: self.windows_processed,
             next_query_id: self.next_query_id,
@@ -1162,8 +1331,9 @@ impl Coordinator {
                 .map(|q| QueryEntry { raw_id: q.id.as_u64(), spec: q.spec.clone() })
                 .collect(),
             recovery: self.recovery,
-            injector_rng,
-            injector_count,
+            fault: self.injector.state(),
+            degrade_level,
+            degrade_calm,
         }
     }
 
@@ -1231,7 +1401,23 @@ impl Coordinator {
     /// since the last segment plus run diffs — O(state delta)). Arms
     /// journaling on first use. The appended bytes are recorded in
     /// [`SlideWork::checkpoint_bytes`].
-    pub(crate) fn refresh_checkpoint_chain(&mut self) {
+    ///
+    /// An injected checkpoint-write fault (the `fault.checkpoint_write`
+    /// channel) tears the segment *before* it lands: the chain is
+    /// invalidated — a torn suffix must never be read back — and a typed
+    /// [`Error::Checkpoint`](crate::error::Error) surfaces to the
+    /// caller. The next refresh re-bases on current state, exactly like
+    /// the post-memo-loss path.
+    pub(crate) fn refresh_checkpoint_chain(&mut self) -> Result<()> {
+        if self.injector.take_checkpoint_write_fault() {
+            if let Some(t) = &mut self.ckpt {
+                t.invalidate();
+            }
+            return Err(crate::error::Error::Checkpoint(
+                "injected torn checkpoint write; chain invalidated, re-basing at next cadence"
+                    .into(),
+            ));
+        }
         if self.ckpt.is_none() {
             self.ckpt = Some(CkptTracker::default());
         }
@@ -1268,6 +1454,7 @@ impl Coordinator {
         tracker.prev_items = prev_items;
         tracker.memo_image = Some(image);
         self.work.note_checkpoint_bytes(appended);
+        Ok(())
     }
 
     /// Flush the checkpoint chain as one artifact, with an optional
@@ -1277,7 +1464,7 @@ impl Coordinator {
         sink: &mut W,
         session: Option<SessionSection>,
     ) -> Result<u64> {
-        self.refresh_checkpoint_chain();
+        self.refresh_checkpoint_chain()?;
         let artifact = Artifact {
             compat: Compat::of(&self.cfg),
             segments: self.ckpt.as_ref().expect("refreshed above").segments.clone(),
@@ -1505,10 +1692,13 @@ impl Coordinator {
                 }
             }
         }
-        coord.injector.restore_state(misc.injector_rng, misc.injector_count);
-        // The recovery policy survives too: the injector RNG replays the
-        // exact fault schedule, so the restored run must also *handle*
-        // each fault the same way the live run would have.
+        coord.injector.restore_state(misc.fault);
+        coord.degrade.restore_state(misc.degrade_level, misc.degrade_calm);
+        // The recovery policy survives too: the injector RNGs replay the
+        // exact multi-channel fault schedule (including any latched but
+        // unconsumed broker / checkpoint-write verdicts), so the restored
+        // run must also *handle* each fault the same way the live run
+        // would have.
         coord.recovery = misc.recovery;
         // Keep `Replicated` recovery seamless across the restore boundary
         // (the live run would have held last window's snapshot here).
@@ -1594,6 +1784,7 @@ mod tests {
             assert_eq!(ra.chunks_reused, rb.chunks_reused, "{label}");
             assert_eq!(ra.fresh_items, rb.fresh_items, "{label}");
             assert_eq!(ra.strata, rb.strata, "{label}");
+            assert_eq!(ra.degraded, rb.degraded, "{label}");
         }
     }
 
@@ -2186,6 +2377,8 @@ mod tests {
             assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
             assert_eq!(qa.sample_size, qb.sample_size, "{label}");
             assert_eq!(qa.population, qb.population, "{label}");
+            assert_eq!(qa.bound_scale.to_bits(), qb.bound_scale.to_bits(), "{label}");
+            assert_eq!(qa.degraded, qb.degraded, "{label}");
             assert_eq!(
                 qa.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
                 qb.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
@@ -2294,7 +2487,7 @@ mod tests {
             Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::Checkpoint);
         coord.process_batch(gen.take_records(cfg.window_size)).unwrap();
         coord.process_batch(gen.take_records(cfg.slide)).unwrap();
-        coord.refresh_checkpoint_chain(); // what the periodic knob does
+        coord.refresh_checkpoint_chain().unwrap(); // what the periodic knob does
         let r = coord.process_batch(gen.take_records(cfg.slide)).unwrap();
         assert!(r.fault_injected);
         assert!(

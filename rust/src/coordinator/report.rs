@@ -50,6 +50,13 @@ pub struct WindowReport {
     pub latency_ms: f64,
     /// True if a fault was injected before this window.
     pub fault_injected: bool,
+    /// True when the slide was answered from surviving strata only: the
+    /// batched compute call exhausted its retry budget, so strata that
+    /// needed fresh computation dropped out of this window's estimate
+    /// (they rejoin on the next slide via a full recompute). The answer
+    /// is still a valid estimate over the strata it covers — this flag is
+    /// how the error contract stays honest about the missing ones.
+    pub degraded: bool,
 }
 
 impl WindowReport {
@@ -87,7 +94,12 @@ impl WindowReport {
             self.fresh_items,
             self.item_reuse_fraction() * 100.0,
             self.latency_ms,
-            if self.fault_injected { " [FAULT]" } else { "" }
+            match (self.fault_injected, self.degraded) {
+                (true, true) => " [FAULT] [DEGRADED]",
+                (true, false) => " [FAULT]",
+                (false, true) => " [DEGRADED]",
+                (false, false) => "",
+            }
         )
     }
 }
@@ -118,7 +130,18 @@ pub struct QueryReport {
     /// [`QueryReport::achieved_rel_bound`] to see the closed loop at
     /// work: after convergence the achieved bound tracks this target
     /// instead of whatever a fixed resource budget happens to buy.
+    /// Under overload degradation this is the *effective* (widened)
+    /// target — baseline × [`QueryReport::bound_scale`].
     pub target_rel_bound: Option<f64>,
+    /// The degradation-ladder multiplier applied to this query's error
+    /// target this slide: 1.0 at baseline (and always 1.0 for open-loop
+    /// and sketch queries, which have no target to widen); > 1 while the
+    /// `DegradationController` is shedding load.
+    pub bound_scale: f64,
+    /// True when this answer was derived from a degraded slide (some
+    /// strata dropped out after retry exhaustion) — see
+    /// [`WindowReport::degraded`].
+    pub degraded: bool,
 }
 
 impl QueryReport {
@@ -158,8 +181,13 @@ impl QueryReport {
             }
             None => String::new(),
         };
+        let widened = if self.bound_scale > 1.0 {
+            format!(" widened=×{:.2}", self.bound_scale)
+        } else {
+            String::new()
+        };
         format!(
-            "q{} {} = {:.3} ± {:.3} ({}%) sample={} pop={}{}{}",
+            "q{} {} = {:.3} ± {:.3} ({}%) sample={} pop={}{}{}{}{}",
             self.id.as_u64(),
             self.kind.name(),
             self.estimate.value,
@@ -168,7 +196,9 @@ impl QueryReport {
             self.sample_size,
             self.population,
             target,
-            surface
+            widened,
+            surface,
+            if self.degraded { " [DEGRADED]" } else { "" }
         )
     }
 }
@@ -216,6 +246,7 @@ mod tests {
             strata,
             latency_ms: 1.5,
             fault_injected: false,
+            degraded: false,
         };
         assert!((r.item_reuse_fraction() - 0.7).abs() < 1e-12);
         assert!((r.chunk_reuse_fraction() - 0.4).abs() < 1e-12);
@@ -237,6 +268,7 @@ mod tests {
             strata: BTreeMap::new(),
             latency_ms: 0.0,
             fault_injected: false,
+            degraded: false,
         };
         assert_eq!(r.item_reuse_fraction(), 0.0);
         assert_eq!(r.chunk_reuse_fraction(), 0.0);
@@ -256,6 +288,7 @@ mod tests {
             strata: BTreeMap::new(),
             latency_ms: 0.1,
             fault_injected: false,
+            degraded: false,
         };
         let q = QueryReport {
             id: QueryId::new(3),
@@ -266,6 +299,8 @@ mod tests {
             extrema: None,
             surface: None,
             target_rel_bound: None,
+            bound_scale: 1.0,
+            degraded: false,
         };
         let out = SlideOutput { window, queries: vec![q] };
         assert!(out.query(QueryId::new(3)).is_some());
@@ -290,6 +325,8 @@ mod tests {
             extrema: None,
             surface: None,
             target_rel_bound: Some(0.10),
+            bound_scale: 1.0,
+            degraded: false,
         };
         assert!((q.achieved_rel_bound() - 0.05).abs() < 1e-12);
         assert_eq!(q.meets_target(), Some(true));
@@ -303,6 +340,47 @@ mod tests {
     }
 
     #[test]
+    fn degraded_and_widened_markers_surface_in_summaries() {
+        let mut w = WindowReport {
+            window_id: 9,
+            mode: "incapprox",
+            estimate: estimate(),
+            window_len: 10,
+            sample_size: 5,
+            chunks_total: 1,
+            chunks_reused: 0,
+            fresh_items: 5,
+            strata: BTreeMap::new(),
+            latency_ms: 0.1,
+            fault_injected: true,
+            degraded: true,
+        };
+        assert!(w.summary().contains("[FAULT] [DEGRADED]"), "{}", w.summary());
+        w.fault_injected = false;
+        assert!(w.summary().contains("[DEGRADED]"), "{}", w.summary());
+        let mut q = QueryReport {
+            id: QueryId::new(1),
+            kind: AggregateKind::Sum,
+            estimate: estimate(),
+            sample_size: 5,
+            population: 10,
+            extrema: None,
+            surface: None,
+            target_rel_bound: Some(0.10),
+            bound_scale: 1.5,
+            degraded: true,
+        };
+        let s = q.summary();
+        assert!(s.contains("widened=×1.50"), "{s}");
+        assert!(s.contains("[DEGRADED]"), "{s}");
+        q.bound_scale = 1.0;
+        q.degraded = false;
+        let s = q.summary();
+        assert!(!s.contains("widened"), "{s}");
+        assert!(!s.contains("DEGRADED"), "{s}");
+    }
+
+    #[test]
     fn sketch_surfaces_show_in_query_summaries() {
         let mut q = QueryReport {
             id: QueryId::new(2),
@@ -313,6 +391,8 @@ mod tests {
             extrema: None,
             surface: Some(ErrorSurface::RankError { epsilon: 0.081, kept: 153 }),
             target_rel_bound: None,
+            bound_scale: 1.0,
+            degraded: false,
         };
         let s = q.summary();
         assert!(s.contains("q2 quantile"), "{s}");

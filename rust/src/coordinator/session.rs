@@ -128,17 +128,22 @@ impl Session {
 
     /// Take a periodic checkpoint when the configured cadence says so
     /// (`pipeline.checkpoint_every_slides`, 0 = off). The chain lives in
-    /// memory; [`Session::checkpoint`] flushes it to a writer.
-    fn maybe_periodic_checkpoint(&mut self) {
+    /// memory; [`Session::checkpoint`] flushes it to a writer. A torn
+    /// segment write (the `fault.checkpoint_write` channel) surfaces as
+    /// a typed [`Error::Checkpoint`](crate::error::Error): the slide
+    /// itself already processed — only its durability is late, and the
+    /// invalidated chain re-bases at the next cadence.
+    fn maybe_periodic_checkpoint(&mut self) -> Result<()> {
         let every = self.coordinator.config().checkpoint_every_slides;
         if every == 0 {
-            return;
+            return Ok(());
         }
         self.slides_since_ckpt += 1;
         if self.slides_since_ckpt >= every {
             self.slides_since_ckpt = 0;
-            self.coordinator.refresh_checkpoint_chain();
+            self.coordinator.refresh_checkpoint_chain()?;
         }
+        Ok(())
     }
 
     /// Warm the window: fill it completely and process the first window.
@@ -148,19 +153,34 @@ impl Session {
         let batch: Vec<Record> =
             self.consumer.poll(need)?.into_iter().map(|m| m.payload).collect();
         let out = self.coordinator.process_batch_queries(batch)?;
-        self.maybe_periodic_checkpoint();
+        self.maybe_periodic_checkpoint()?;
         Ok(out)
     }
 
     /// One session step: produce a slide, pull (with catch-up under
     /// backpressure), process the window, answer every query.
+    ///
+    /// An injected broker fault (the `fault.broker` channel, drawn on
+    /// the previous slide) stalls this step's poll: the step returns a
+    /// typed [`Error::Kafka`](crate::error::Error) *after* producing, so
+    /// the records queue on the broker and lag grows — the next
+    /// successful step sees the backlog and the backpressure / catch-up
+    /// path drains it, feeding the degradation controller on the way.
     pub fn step(&mut self) -> Result<SlideOutput> {
         let cfg = self.coordinator.config();
         let slide = cfg.slide;
         let lag_high_watermark = (slide * cfg.lag_watermark_slides) as u64;
         let catchup_factor = cfg.catchup_factor;
         self.produce_at_least(slide)?;
+        if self.coordinator.take_broker_fault() {
+            return Err(Error::Kafka(
+                "injected broker fault: consumer poll stalled this step".into(),
+            ));
+        }
         let lag = self.consumer.lag()?;
+        // Overload feedback, in *slides* (an integer division, so every
+        // worker count and every restored run computes the same value).
+        self.coordinator.observe_lag_slides(lag / slide.max(1) as u64);
         let batch_size = if lag > lag_high_watermark {
             log::warn!("backpressure: lag {lag} > {lag_high_watermark}, catching up");
             slide * catchup_factor
@@ -170,7 +190,7 @@ impl Session {
         let batch: Vec<Record> =
             self.consumer.poll(batch_size)?.into_iter().map(|m| m.payload).collect();
         let out = self.coordinator.process_batch_queries(batch)?;
-        self.maybe_periodic_checkpoint();
+        self.maybe_periodic_checkpoint()?;
         Ok(out)
     }
 

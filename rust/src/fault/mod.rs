@@ -21,6 +21,25 @@
 //! content-addressed: a stale or missing memo can only cause extra fresh
 //! computation, never a wrong answer.
 //!
+//! # The fault plan
+//!
+//! Beyond the paper's single memo-loss fault, [`FaultInjector`] is a
+//! seeded, deterministic *fault plan* with four independent channels:
+//!
+//! | channel | what fails | who consumes the verdict |
+//! |---|---|---|
+//! | memo loss | the memo store "crashes" before planning | driver, via [`FaultInjector::apply_memo_loss`] + `RecoveryPolicy` |
+//! | compute | the batched `ChunkBackend::compute` call fails transiently | driver's [`RetryPolicy`] loop; exhaustion degrades the slide |
+//! | broker | the consumer's next poll stalls (typed `Error::Kafka`) | `Session::step`, before polling — lag builds, nothing is lost |
+//! | checkpoint write | the next segment append tears (typed `Error::Checkpoint`) | `refresh_checkpoint_chain` — chain invalidated, re-based next cadence |
+//!
+//! Each channel owns its own RNG, and [`FaultInjector::begin_slide`]
+//! draws a **fixed number of variates per channel on every slide** —
+//! independent of the configured probabilities, of whether any fault
+//! fires, and of the `RecoveryPolicy` in force. That invariant is what
+//! lets the checkpointed RNG state replay the *identical* fault schedule
+//! after a restore (see `draw_count_invariant_across_probability_and_policy`).
+//!
 //! # Example
 //!
 //! Injected memo loss under the replica policy: the store survives.
@@ -63,23 +82,121 @@ pub enum RecoveryPolicy {
     Checkpoint,
 }
 
-/// Per-window fault injector: with probability `memo_loss_p`, the memo
-/// store "crashes" (is cleared) before planning.
+/// Per-channel fault probabilities (all per-slide, in `[0, 1]`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Probability the memo store is lost before planning.
+    pub memo_loss_p: f64,
+    /// Probability the batched compute call fails transiently.
+    pub compute_p: f64,
+    /// Probability the next consumer poll stalls with a broker error.
+    pub broker_p: f64,
+    /// Probability the next checkpoint segment write tears.
+    pub checkpoint_write_p: f64,
+}
+
+impl FaultSpec {
+    /// Spec with only the memo-loss channel enabled (the original §6.3
+    /// fault model).
+    pub fn memo_only(memo_loss_p: f64) -> Self {
+        FaultSpec { memo_loss_p, ..FaultSpec::default() }
+    }
+}
+
+/// The faults drawn for one slide by [`FaultInjector::begin_slide`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SlideFaults {
+    /// Memo store lost this slide.
+    pub memo_loss: bool,
+    /// The batched compute call fails transiently this slide.
+    pub compute: bool,
+    /// Severity of the compute fault in `[0, 1)`: scales how many
+    /// consecutive attempts fail (drawn every slide so the per-slide draw
+    /// count never depends on whether the fault fired).
+    pub compute_severity: f64,
+    /// The next consumer poll stalls.
+    pub broker: bool,
+    /// The next checkpoint segment write tears.
+    pub checkpoint_write: bool,
+}
+
+/// Checkpointable state of the whole fault plan: one RNG + injected
+/// counter per channel, plus the pending broker/checkpoint verdicts that
+/// have been drawn but not yet consumed. Restoring it replays the exact
+/// fault schedule *and* delivers any in-flight fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPlanState {
+    /// Channel RNG states in channel order: memo, compute, broker,
+    /// checkpoint-write.
+    pub rngs: [[u64; 4]; 4],
+    /// Faults injected per channel, same order.
+    pub injected: [u64; 4],
+    /// A broker fault was drawn but the session has not yet consumed it.
+    pub pending_broker: bool,
+    /// A checkpoint-write fault was drawn but no segment write has
+    /// consumed it yet.
+    pub pending_checkpoint_write: bool,
+}
+
+/// Channel indices into [`FaultPlanState::rngs`] / `injected`.
+const CH_MEMO: usize = 0;
+const CH_COMPUTE: usize = 1;
+const CH_BROKER: usize = 2;
+const CH_CKPT: usize = 3;
+
+/// Seed salts keeping the three new channels' streams independent of the
+/// memo channel (which keeps the caller's seed verbatim, preserving the
+/// pre-fault-plan memo-loss schedule byte-for-byte).
+const SALT_COMPUTE: u64 = 0xC0DE_FA17_0000_0001;
+const SALT_BROKER: u64 = 0xC0DE_FA17_0000_0002;
+const SALT_CKPT: u64 = 0xC0DE_FA17_0000_0003;
+
+/// Seeded deterministic fault plan over four independent channels.
+///
+/// Per slide, [`FaultInjector::begin_slide`] draws exactly one Bernoulli
+/// variate on the memo, broker, and checkpoint-write channels and one
+/// Bernoulli plus one severity `f64` on the compute channel — always,
+/// regardless of probabilities, outcomes, or recovery policy — so the
+/// schedule is a pure function of the seed and the slide index.
 #[derive(Debug)]
 pub struct FaultInjector {
-    memo_loss_p: f64,
-    rng: Rng,
-    injected: u64,
+    spec: FaultSpec,
+    rngs: [Rng; 4],
+    injected: [u64; 4],
+    pending_broker: bool,
+    pending_checkpoint_write: bool,
 }
 
 /// A snapshot replica for [`RecoveryPolicy::Replicated`].
 pub type MemoReplica = crate::sac::memo::MemoSnapshot;
 
 impl FaultInjector {
-    /// Injector losing memo state with probability `memo_loss_p` per window.
+    /// Injector losing memo state with probability `memo_loss_p` per
+    /// window; the other channels are disabled. The memo channel's RNG is
+    /// seeded with `seed` verbatim, so the memo-loss schedule matches the
+    /// original single-channel injector exactly.
     pub fn new(memo_loss_p: f64, seed: u64) -> Self {
-        assert!((0.0..=1.0).contains(&memo_loss_p));
-        FaultInjector { memo_loss_p, rng: Rng::new(seed), injected: 0 }
+        Self::with_spec(FaultSpec::memo_only(memo_loss_p), seed)
+    }
+
+    /// Injector for a full multi-channel fault spec.
+    pub fn with_spec(spec: FaultSpec, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&spec.memo_loss_p));
+        assert!((0.0..=1.0).contains(&spec.compute_p));
+        assert!((0.0..=1.0).contains(&spec.broker_p));
+        assert!((0.0..=1.0).contains(&spec.checkpoint_write_p));
+        FaultInjector {
+            spec,
+            rngs: [
+                Rng::new(seed),
+                Rng::new(seed ^ SALT_COMPUTE),
+                Rng::new(seed ^ SALT_BROKER),
+                Rng::new(seed ^ SALT_CKPT),
+            ],
+            injected: [0; 4],
+            pending_broker: false,
+            pending_checkpoint_write: false,
+        }
     }
 
     /// Disabled injector.
@@ -87,20 +204,65 @@ impl FaultInjector {
         Self::new(0.0, 0)
     }
 
-    /// Maybe inject a memo-loss fault; returns true if injected. With
+    /// The configured per-channel probabilities.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Draw this slide's faults. Exactly one Bernoulli per channel (plus
+    /// one severity `f64` on the compute channel) is consumed every call,
+    /// whatever the probabilities or outcomes — the draw-count invariant
+    /// that keeps restored RNG state replaying the identical schedule.
+    ///
+    /// Broker and checkpoint-write verdicts are latched into pending
+    /// flags (they fire at a different point in the pipeline than where
+    /// they are drawn) and consumed via [`FaultInjector::take_broker_fault`] /
+    /// [`FaultInjector::take_checkpoint_write_fault`].
+    pub fn begin_slide(&mut self) -> SlideFaults {
+        let memo_loss = self.rngs[CH_MEMO].bernoulli(self.spec.memo_loss_p);
+        let compute = self.rngs[CH_COMPUTE].bernoulli(self.spec.compute_p);
+        let compute_severity = self.rngs[CH_COMPUTE].f64();
+        let broker = self.rngs[CH_BROKER].bernoulli(self.spec.broker_p);
+        let checkpoint_write = self.rngs[CH_CKPT].bernoulli(self.spec.checkpoint_write_p);
+        if memo_loss {
+            self.injected[CH_MEMO] += 1;
+        }
+        if compute {
+            self.injected[CH_COMPUTE] += 1;
+        }
+        if broker {
+            self.injected[CH_BROKER] += 1;
+            self.pending_broker = true;
+        }
+        if checkpoint_write {
+            self.injected[CH_CKPT] += 1;
+            self.pending_checkpoint_write = true;
+        }
+        SlideFaults { memo_loss, compute, compute_severity, broker, checkpoint_write }
+    }
+
+    /// Consume a pending broker fault (drawn by an earlier
+    /// [`FaultInjector::begin_slide`]). Returns true at most once per
+    /// drawn fault.
+    pub fn take_broker_fault(&mut self) -> bool {
+        std::mem::take(&mut self.pending_broker)
+    }
+
+    /// Consume a pending checkpoint-write fault.
+    pub fn take_checkpoint_write_fault(&mut self) -> bool {
+        std::mem::take(&mut self.pending_checkpoint_write)
+    }
+
+    /// Apply a memo-loss fault drawn by [`FaultInjector::begin_slide`]:
+    /// clear the store, then restore per the recovery policy. With
     /// `Replicated` or `Checkpoint`, the caller's fallback snapshot
     /// (taken *before* this window — the per-window replica, or the memo
     /// image of the last checkpoint) is used to restore.
-    pub fn maybe_inject(
-        &mut self,
+    pub fn apply_memo_loss(
         memo: &mut MemoStore,
         policy: RecoveryPolicy,
         replica: Option<&MemoReplica>,
-    ) -> bool {
-        if self.memo_loss_p == 0.0 || !self.rng.bernoulli(self.memo_loss_p) {
-            return false;
-        }
-        self.injected += 1;
+    ) {
         memo.clear();
         match policy {
             RecoveryPolicy::ContinueWithout | RecoveryPolicy::LineageRecompute => {
@@ -114,25 +276,107 @@ impl FaultInjector {
                 }
             }
         }
-        true
     }
 
-    /// Number of faults injected so far.
+    /// Single-channel convenience: draw this slide's faults and apply a
+    /// memo loss if one fired; returns true if it did. (Kept for the
+    /// memo-only call sites and doctests; the driver uses
+    /// [`FaultInjector::begin_slide`] + [`FaultInjector::apply_memo_loss`]
+    /// so the other channels ride along.)
+    pub fn maybe_inject(
+        &mut self,
+        memo: &mut MemoStore,
+        policy: RecoveryPolicy,
+        replica: Option<&MemoReplica>,
+    ) -> bool {
+        let faults = self.begin_slide();
+        if faults.memo_loss {
+            Self::apply_memo_loss(memo, policy, replica);
+        }
+        faults.memo_loss
+    }
+
+    /// Number of memo-loss faults injected so far (the original
+    /// single-channel counter; see [`FaultInjector::injected_by_channel`]
+    /// for the full picture).
     pub fn injected(&self) -> u64 {
+        self.injected[CH_MEMO]
+    }
+
+    /// Faults injected per channel: `[memo, compute, broker,
+    /// checkpoint_write]`.
+    pub fn injected_by_channel(&self) -> [u64; 4] {
         self.injected
     }
 
-    /// Internal state (RNG + counter) for checkpointing: restoring it via
+    /// Internal state (per-channel RNGs + counters + pending verdicts)
+    /// for checkpointing: restoring it via
     /// [`FaultInjector::restore_state`] continues the exact injection
     /// stream, so a restored run replays the same fault schedule.
-    pub fn state(&self) -> ([u64; 4], u64) {
-        (self.rng.state(), self.injected)
+    pub fn state(&self) -> FaultPlanState {
+        FaultPlanState {
+            rngs: [
+                self.rngs[CH_MEMO].state(),
+                self.rngs[CH_COMPUTE].state(),
+                self.rngs[CH_BROKER].state(),
+                self.rngs[CH_CKPT].state(),
+            ],
+            injected: self.injected,
+            pending_broker: self.pending_broker,
+            pending_checkpoint_write: self.pending_checkpoint_write,
+        }
     }
 
     /// Restore state captured by [`FaultInjector::state`].
-    pub fn restore_state(&mut self, rng: [u64; 4], injected: u64) {
-        self.rng = Rng::from_state(rng);
-        self.injected = injected;
+    pub fn restore_state(&mut self, state: FaultPlanState) {
+        self.rngs = [
+            Rng::from_state(state.rngs[CH_MEMO]),
+            Rng::from_state(state.rngs[CH_COMPUTE]),
+            Rng::from_state(state.rngs[CH_BROKER]),
+            Rng::from_state(state.rngs[CH_CKPT]),
+        ];
+        self.injected = state.injected;
+        self.pending_broker = state.pending_broker;
+        self.pending_checkpoint_write = state.pending_checkpoint_write;
+    }
+}
+
+/// Deterministic bounded-backoff retry policy for the batched compute
+/// call. Backoff is expressed in abstract retry *slots*, never
+/// wall-clock, so retrying is byte-identical across machines and across
+/// checkpoint/restore.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per slide (first try + retries); ≥ 1.
+    pub max_attempts: u32,
+    /// Backoff after the first failure, in slots; ≥ 1.
+    pub backoff_base_slots: u64,
+    /// Backoff ceiling, in slots; ≥ base.
+    pub backoff_cap_slots: u64,
+}
+
+impl RetryPolicy {
+    /// Policy with validated fields (the config layer re-validates; the
+    /// asserts here guard direct construction in tests).
+    pub fn new(max_attempts: u32, backoff_base_slots: u64, backoff_cap_slots: u64) -> Self {
+        assert!(max_attempts >= 1);
+        assert!(backoff_base_slots >= 1);
+        assert!(backoff_cap_slots >= backoff_base_slots);
+        RetryPolicy { max_attempts, backoff_base_slots, backoff_cap_slots }
+    }
+
+    /// Backoff before retry number `retry` (1-based): exponential
+    /// `base · 2^(retry-1)`, capped.
+    pub fn backoff_slots(&self, retry: u32) -> u64 {
+        let shift = (retry.saturating_sub(1)).min(62);
+        self.backoff_base_slots
+            .saturating_mul(1u64 << shift)
+            .min(self.backoff_cap_slots)
+    }
+
+    /// Total backoff slots charged for `retries` retries.
+    pub fn total_backoff_slots(&self, retries: u32) -> u64 {
+        (1..=retries).map(|r| self.backoff_slots(r)).sum()
     }
 }
 
@@ -157,6 +401,7 @@ mod tests {
         }
         assert_eq!(memo.chunk_count(), 2);
         assert_eq!(inj.injected(), 0);
+        assert_eq!(inj.injected_by_channel(), [0; 4]);
     }
 
     #[test]
@@ -201,20 +446,43 @@ mod tests {
 
     #[test]
     fn state_roundtrip_replays_identical_fault_schedule() {
-        let mut a = FaultInjector::new(0.5, 77);
-        let mut memo = MemoStore::new();
+        let spec = FaultSpec {
+            memo_loss_p: 0.5,
+            compute_p: 0.3,
+            broker_p: 0.2,
+            checkpoint_write_p: 0.1,
+        };
+        let mut a = FaultInjector::with_spec(spec, 77);
         for _ in 0..10 {
-            a.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None);
+            a.begin_slide();
         }
-        let (rng, injected) = a.state();
-        let mut b = FaultInjector::new(0.5, 0);
-        b.restore_state(rng, injected);
+        let state = a.state();
+        let mut b = FaultInjector::with_spec(spec, 0);
+        b.restore_state(state);
         assert_eq!(b.injected(), a.injected());
+        assert_eq!(b.injected_by_channel(), a.injected_by_channel());
         for _ in 0..50 {
-            let ia = a.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None);
-            let ib = b.maybe_inject(&mut memo, RecoveryPolicy::ContinueWithout, None);
-            assert_eq!(ia, ib, "restored injector must replay the same schedule");
+            let fa = a.begin_slide();
+            let fb = b.begin_slide();
+            assert_eq!(fa, fb, "restored injector must replay the same schedule");
+            assert_eq!(a.take_broker_fault(), b.take_broker_fault());
+            assert_eq!(a.take_checkpoint_write_fault(), b.take_checkpoint_write_fault());
         }
+    }
+
+    #[test]
+    fn pending_verdicts_survive_state_roundtrip() {
+        let spec = FaultSpec { broker_p: 1.0, checkpoint_write_p: 1.0, ..FaultSpec::default() };
+        let mut a = FaultInjector::with_spec(spec, 9);
+        a.begin_slide();
+        // Both verdicts drawn but not consumed — e.g. a checkpoint lands
+        // between the draw and the poll.
+        let mut b = FaultInjector::disabled();
+        b.restore_state(a.state());
+        assert!(b.take_broker_fault(), "in-flight broker fault must survive restore");
+        assert!(!b.take_broker_fault(), "a verdict is consumed at most once");
+        assert!(b.take_checkpoint_write_fault());
+        assert!(!b.take_checkpoint_write_fault());
     }
 
     #[test]
@@ -227,5 +495,118 @@ mod tests {
         }
         let rate = inj.injected() as f64 / n as f64;
         assert!((rate - 0.3).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn multi_channel_rates_are_independent() {
+        let spec = FaultSpec {
+            memo_loss_p: 0.5,
+            compute_p: 0.2,
+            broker_p: 0.1,
+            checkpoint_write_p: 0.05,
+        };
+        let mut inj = FaultInjector::with_spec(spec, 6);
+        let n = 5000u64;
+        for _ in 0..n {
+            inj.begin_slide();
+            inj.take_broker_fault();
+            inj.take_checkpoint_write_fault();
+        }
+        let counts = inj.injected_by_channel();
+        let expect = [0.5, 0.2, 0.1, 0.05];
+        for (i, &p) in expect.iter().enumerate() {
+            let rate = counts[i] as f64 / n as f64;
+            assert!((rate - p).abs() < 0.03, "channel {i}: rate {rate} vs p {p}");
+        }
+    }
+
+    /// The satellite fix: per-slide RNG advancement is identical whether
+    /// or not a fault fires, for any probability (including 0.0 — the old
+    /// injector skipped the draw entirely then) and any recovery policy.
+    #[test]
+    fn draw_count_invariant_across_probability_and_policy() {
+        let policies = [
+            RecoveryPolicy::ContinueWithout,
+            RecoveryPolicy::LineageRecompute,
+            RecoveryPolicy::Replicated,
+            RecoveryPolicy::Checkpoint,
+        ];
+        let probs = [0.0, 0.001, 0.5, 1.0];
+        let slides = 37;
+        // Reference: the per-channel RNG state after `slides` slides is a
+        // pure function of (seed, slides) — compute it directly.
+        let expect_state = |seed: u64, draws_per_slide: u32| {
+            let mut rng = Rng::new(seed);
+            for _ in 0..slides {
+                for _ in 0..draws_per_slide {
+                    rng.f64();
+                }
+            }
+            rng.state()
+        };
+        for &policy in &policies {
+            for &p in &probs {
+                let spec = FaultSpec {
+                    memo_loss_p: p,
+                    compute_p: p,
+                    broker_p: p,
+                    checkpoint_write_p: p,
+                };
+                let seed = 123;
+                let mut inj = FaultInjector::with_spec(spec, seed);
+                let mut memo = warm_store();
+                let replica = memo.snapshot();
+                for _ in 0..slides {
+                    let faults = inj.begin_slide();
+                    if faults.memo_loss {
+                        FaultInjector::apply_memo_loss(&mut memo, policy, Some(&replica));
+                    }
+                    inj.take_broker_fault();
+                    inj.take_checkpoint_write_fault();
+                }
+                let got = inj.state();
+                assert_eq!(got.rngs[0], expect_state(seed, 1), "memo channel, p={p}");
+                assert_eq!(
+                    got.rngs[1],
+                    expect_state(seed ^ SALT_COMPUTE, 2),
+                    "compute channel draws bernoulli + severity, p={p}"
+                );
+                assert_eq!(got.rngs[2], expect_state(seed ^ SALT_BROKER, 1), "broker, p={p}");
+                assert_eq!(got.rngs[3], expect_state(seed ^ SALT_CKPT, 1), "ckpt, p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn memo_channel_schedule_matches_original_single_channel_injector() {
+        // The memo channel keeps the caller's seed verbatim, so enabling
+        // the other channels must not perturb the memo-loss schedule.
+        let mut memo_only = FaultInjector::new(0.4, 11);
+        let mut full = FaultInjector::with_spec(
+            FaultSpec { memo_loss_p: 0.4, compute_p: 0.9, broker_p: 0.9, checkpoint_write_p: 0.9 },
+            11,
+        );
+        let mut store = MemoStore::new();
+        for _ in 0..200 {
+            let a = memo_only.maybe_inject(&mut store, RecoveryPolicy::ContinueWithout, None);
+            let b = full.begin_slide().memo_loss;
+            full.take_broker_fault();
+            full.take_checkpoint_write_fault();
+            assert_eq!(a, b);
+        }
+        assert_eq!(memo_only.injected(), full.injected());
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential_and_capped() {
+        let p = RetryPolicy::new(5, 2, 16);
+        assert_eq!(p.backoff_slots(1), 2);
+        assert_eq!(p.backoff_slots(2), 4);
+        assert_eq!(p.backoff_slots(3), 8);
+        assert_eq!(p.backoff_slots(4), 16);
+        assert_eq!(p.backoff_slots(5), 16, "capped");
+        assert_eq!(p.backoff_slots(63), 16, "shift saturates, no overflow");
+        assert_eq!(p.total_backoff_slots(0), 0);
+        assert_eq!(p.total_backoff_slots(3), 2 + 4 + 8);
     }
 }

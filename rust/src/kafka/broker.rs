@@ -1,7 +1,15 @@
 //! Thread-safe broker: named topics over partitioned logs.
+//!
+//! Every fallible broker path reachable from library code returns a
+//! typed [`Error::Kafka`] — out-of-range partitions, poisoned locks (a
+//! producer panicking mid-append), and operations on a dropped topic all
+//! surface as errors, never panics. Consumers hold `Arc<Topic>` handles,
+//! so [`Broker::drop_topic`] marks the topic dropped instead of freeing
+//! it: in-flight handles see the error on their next operation.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
 use crate::error::{Error, Result};
 use crate::kafka::log::{Message, PartitionLog};
@@ -9,12 +17,17 @@ use crate::kafka::log::{Message, PartitionLog};
 /// A topic: a fixed set of partitioned logs.
 pub struct Topic<T> {
     partitions: Vec<Mutex<PartitionLog<T>>>,
+    /// Set by [`Broker::drop_topic`]; checked by every operation so
+    /// consumers still holding an `Arc` to this topic get a typed error
+    /// instead of silently reading a zombie log.
+    dropped: AtomicBool,
 }
 
 impl<T: Clone> Topic<T> {
     fn new(partitions: usize) -> Self {
         Topic {
             partitions: (0..partitions).map(|_| Mutex::new(PartitionLog::new())).collect(),
+            dropped: AtomicBool::new(false),
         }
     }
 
@@ -23,37 +36,53 @@ impl<T: Clone> Topic<T> {
         self.partitions.len()
     }
 
+    /// Typed-error guard for operations on a dropped topic.
+    fn check_live(&self) -> Result<()> {
+        if self.dropped.load(Ordering::Acquire) {
+            return Err(Error::Kafka("topic was dropped".into()));
+        }
+        Ok(())
+    }
+
+    /// Lock one partition's log, converting an out-of-range index or a
+    /// poisoned lock (a writer panicked mid-operation) into a typed
+    /// error.
+    fn partition(&self, partition: usize) -> Result<MutexGuard<'_, PartitionLog<T>>> {
+        self.partitions
+            .get(partition)
+            .ok_or_else(|| Error::Kafka(format!("partition {partition} out of range")))?
+            .lock()
+            .map_err(|_| Error::Kafka(format!("partition {partition} lock poisoned")))
+    }
+
     /// Append to one partition; returns the offset.
     pub fn append(&self, partition: usize, timestamp: u64, payload: T) -> Result<u64> {
-        let log = self
-            .partitions
-            .get(partition)
-            .ok_or_else(|| Error::Kafka(format!("partition {partition} out of range")))?;
-        Ok(log.lock().unwrap().append(timestamp, payload))
+        self.check_live()?;
+        Ok(self.partition(partition)?.append(timestamp, payload))
     }
 
     /// Fetch from one partition.
     pub fn fetch(&self, partition: usize, from: u64, max: usize) -> Result<Vec<Message<T>>> {
-        let log = self
-            .partitions
-            .get(partition)
-            .ok_or_else(|| Error::Kafka(format!("partition {partition} out of range")))?;
-        Ok(log.lock().unwrap().fetch(from, max))
+        self.check_live()?;
+        Ok(self.partition(partition)?.fetch(from, max))
     }
 
     /// Log-end offset of one partition.
     pub fn end_offset(&self, partition: usize) -> Result<u64> {
-        let log = self
-            .partitions
-            .get(partition)
-            .ok_or_else(|| Error::Kafka(format!("partition {partition} out of range")))?;
-        Ok(log.lock().unwrap().end_offset())
+        self.check_live()?;
+        Ok(self.partition(partition)?.end_offset())
     }
 
-    /// Apply retention to every partition.
+    /// Apply retention to every partition. Skips poisoned partitions
+    /// (retention is best-effort) and is a no-op on a dropped topic.
     pub fn truncate_before(&self, upto: u64) {
+        if self.dropped.load(Ordering::Acquire) {
+            return;
+        }
         for log in &self.partitions {
-            log.lock().unwrap().truncate_before(upto);
+            if let Ok(mut guard) = log.lock() {
+                guard.truncate_before(upto);
+            }
         }
     }
 }
@@ -80,7 +109,10 @@ impl<T: Clone> Broker<T> {
         if partitions == 0 {
             return Err(Error::Kafka("topic needs at least one partition".into()));
         }
-        let mut topics = self.topics.write().unwrap();
+        let mut topics = self
+            .topics
+            .write()
+            .map_err(|_| Error::Kafka("broker registry lock poisoned".into()))?;
         if let Some(existing) = topics.get(name) {
             if existing.partition_count() != partitions {
                 return Err(Error::Kafka(format!(
@@ -95,19 +127,41 @@ impl<T: Clone> Broker<T> {
         Ok(topic)
     }
 
+    /// Remove a topic from the registry and mark it dropped. Consumers
+    /// still holding a subscription see [`Error::Kafka`] on their next
+    /// poll / lag / backlog call instead of reading a zombie log.
+    /// Returns an error if the topic does not exist.
+    pub fn drop_topic(&self, name: &str) -> Result<()> {
+        let mut topics = self
+            .topics
+            .write()
+            .map_err(|_| Error::Kafka("broker registry lock poisoned".into()))?;
+        match topics.remove(name) {
+            Some(topic) => {
+                topic.dropped.store(true, Ordering::Release);
+                Ok(())
+            }
+            None => Err(Error::Kafka(format!("unknown topic `{name}`"))),
+        }
+    }
+
     /// Look up a topic.
     pub fn topic(&self, name: &str) -> Result<Arc<Topic<T>>> {
         self.topics
             .read()
-            .unwrap()
+            .map_err(|_| Error::Kafka("broker registry lock poisoned".into()))?
             .get(name)
             .cloned()
             .ok_or_else(|| Error::Kafka(format!("unknown topic `{name}`")))
     }
 
-    /// All topic names (sorted, deterministic).
+    /// All topic names (sorted, deterministic). Returns empty on a
+    /// poisoned registry (monitoring surface, best-effort).
     pub fn topic_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.topics.read().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = match self.topics.read() {
+            Ok(topics) => topics.keys().cloned().collect(),
+            Err(_) => Vec::new(),
+        };
         names.sort();
         names
     }
@@ -143,6 +197,24 @@ mod tests {
         let t = broker.create_topic("t", 1).unwrap();
         assert!(t.append(5, 0, 1).is_err());
         assert!(t.fetch(5, 0, 1).is_err());
+    }
+
+    #[test]
+    fn dropped_topic_errors_on_every_operation() {
+        let broker = Broker::<u32>::new();
+        let t = broker.create_topic("t", 2).unwrap();
+        t.append(0, 1, 7).unwrap();
+        broker.drop_topic("t").unwrap();
+        // The registry forgets it; held handles get typed errors.
+        assert!(broker.topic("t").is_err());
+        assert!(t.append(0, 2, 8).is_err());
+        assert!(t.fetch(0, 0, 10).is_err());
+        assert!(t.end_offset(0).is_err());
+        // Dropping twice is an unknown-topic error, not a panic.
+        assert!(broker.drop_topic("t").is_err());
+        // The name is free for reuse with a fresh log.
+        let t2 = broker.create_topic("t", 1).unwrap();
+        assert_eq!(t2.end_offset(0).unwrap(), 0);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::kafka::broker::{Broker, Topic};
 use crate::kafka::log::Message;
 
@@ -36,7 +36,16 @@ impl<T: Clone> Consumer<T> {
     }
 
     /// Subscribe to a topic from the earliest retained offset.
+    /// Subscribing to the same topic twice is a typed error — a
+    /// duplicate subscription would double-deliver every message
+    /// through the merged stream.
     pub fn subscribe(&mut self, broker: &Broker<T>, topic: &str) -> Result<()> {
+        if self.subs.iter().any(|s| s.topic_name == topic) {
+            return Err(Error::Kafka(format!(
+                "already subscribed to topic `{topic}` (a duplicate subscription \
+                 would double-deliver every message)"
+            )));
+        }
         let t = broker.topic(topic)?;
         let offsets = vec![0; t.partition_count()];
         self.subs.push(Subscription { topic_name: topic.to_string(), topic: t, offsets });

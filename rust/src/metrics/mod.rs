@@ -248,14 +248,20 @@ pub struct SlideWork {
     /// `FaultInjector::maybe_inject` through the work profile so benches
     /// and tests can report fault counts alongside the work they caused.
     pub fault_injections: u64,
+    /// Compute-call retries spent this slide by the driver's
+    /// `RetryPolicy` (0 on a clean slide). Like `fault_injections`, an
+    /// event count — excluded from the items-touched totals so the
+    /// O(delta) work comparisons are untouched by fault handling.
+    pub retries: u64,
 }
 
 impl SlideWork {
     /// Sum over all item-touching stages — the headline per-slide
     /// items-touched number. Excludes `checkpoint_bytes` (bytes, not
     /// items), `restore_items` (one-time recovery cost, not steady-state
-    /// slide work), and `fault_injections` (an event count), so enabling
-    /// durability never perturbs the O(delta) work comparisons.
+    /// slide work), and the event counts `fault_injections` / `retries`,
+    /// so enabling durability or fault handling never perturbs the
+    /// O(delta) work comparisons.
     pub fn total(&self) -> u64 {
         self.substrate_total() + self.derive_items + self.budget_adjust + self.sketch_items
     }
@@ -296,6 +302,7 @@ impl WorkProfile {
         self.total.checkpoint_bytes += w.checkpoint_bytes;
         self.total.restore_items += w.restore_items;
         self.total.fault_injections += w.fault_injections;
+        self.total.retries += w.retries;
         self.last = w;
         self.windows += 1;
     }
@@ -470,6 +477,7 @@ mod tests {
             checkpoint_bytes: 100,
             restore_items: 9,
             fault_injections: 1,
+            retries: 2,
         };
         assert_eq!(w1.substrate_total(), 36);
         // Per-query derivation, budget feedback, and sketch folds count
@@ -492,7 +500,8 @@ mod tests {
         assert_eq!(p.total().checkpoint_bytes, 100);
         assert_eq!(p.total().restore_items, 9);
         assert_eq!(p.total().fault_injections, 1);
-        assert_eq!(p.total().total(), 64);
+        assert_eq!(p.total().retries, 2, "retries accumulate like the other event counts");
+        assert_eq!(p.total().total(), 64, "event counts stay out of the totals");
         assert!((p.mean_total_per_slide() - 32.0).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
     }

@@ -1,0 +1,484 @@
+//! The chaos-soak gate: a seeded multi-channel fault campaign (memo
+//! loss, transient compute failures, broker poll stalls, torn checkpoint
+//! writes) soaked across every recovery policy and query count. The
+//! contract under chaos:
+//!
+//! 1. **No panics, typed errors only** — every failed step surfaces
+//!    `Error::Kafka` or `Error::Checkpoint`; every successful slide's
+//!    answers are finite.
+//! 2. **Fault isolation** — faults the runtime fully absorbs (memo loss
+//!    under replication, compute faults masked by the retry budget) leave
+//!    outputs *byte-identical* to a fault-free run; only retry-exhausted
+//!    slides are allowed to differ, and those are flagged `degraded`.
+//! 3. **Replayable chaos** — a mid-campaign checkpoint/restore continues
+//!    the exact fault schedule, per-channel injection counters, and the
+//!    degradation-ladder trajectory, byte-identically, even under a
+//!    different worker count.
+
+use incapprox::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
+use incapprox::coordinator::{Coordinator, QuerySpec, Session, SlideOutput};
+use incapprox::error::Error;
+use incapprox::fault::RecoveryPolicy;
+use incapprox::job::aggregate::AggregateKind;
+use incapprox::workload::gen::MultiStream;
+use incapprox::workload::record::Record;
+
+const ALL_POLICIES: [RecoveryPolicy; 4] = [
+    RecoveryPolicy::ContinueWithout,
+    RecoveryPolicy::LineageRecompute,
+    RecoveryPolicy::Replicated,
+    RecoveryPolicy::Checkpoint,
+];
+
+/// The campaign configuration: every fault channel live, retries on,
+/// degradation ladder armed, periodic checkpoints exercising the torn-
+/// write channel.
+fn chaos_cfg(seed: u64) -> SystemConfig {
+    SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 1000,
+        slide: 100,
+        seed,
+        chunk_size: 16,
+        fault_memo_loss: 0.05,
+        fault_compute: 0.10,
+        fault_broker: 0.06,
+        fault_checkpoint_write: 0.25,
+        checkpoint_every_slides: 7,
+        lag_watermark_slides: 2,
+        catchup_factor: 4,
+        degradation_step_factor: 1.5,
+        degradation_max_steps: 3,
+        degradation_recover_slides: 2,
+        ..SystemConfig::default()
+    }
+}
+
+/// Byte-level equality of two slides: estimates by `f64::to_bits`, all
+/// reuse accounting, fault/degradation flags, and every query report.
+fn assert_slides_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
+    let (wa, wb) = (&a.window, &b.window);
+    assert_eq!(wa.window_id, wb.window_id, "{label}");
+    assert_eq!(wa.estimate.value.to_bits(), wb.estimate.value.to_bits(), "{label}");
+    assert_eq!(wa.estimate.margin.to_bits(), wb.estimate.margin.to_bits(), "{label}");
+    assert_eq!(wa.window_len, wb.window_len, "{label}");
+    assert_eq!(wa.sample_size, wb.sample_size, "{label}");
+    assert_eq!(wa.chunks_total, wb.chunks_total, "{label}");
+    assert_eq!(wa.chunks_reused, wb.chunks_reused, "{label}");
+    assert_eq!(wa.fresh_items, wb.fresh_items, "{label}");
+    assert_eq!(wa.strata, wb.strata, "{label}");
+    assert_eq!(wa.degraded, wb.degraded, "{label}");
+    assert_eq!(a.queries.len(), b.queries.len(), "{label}");
+    for (qa, qb) in a.queries.iter().zip(&b.queries) {
+        assert_eq!(qa.id, qb.id, "{label}");
+        assert_eq!(qa.estimate.value.to_bits(), qb.estimate.value.to_bits(), "{label}");
+        assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
+        assert_eq!(qa.sample_size, qb.sample_size, "{label}");
+        assert_eq!(qa.population, qb.population, "{label}");
+        assert_eq!(qa.bound_scale.to_bits(), qb.bound_scale.to_bits(), "{label}");
+        assert_eq!(qa.degraded, qb.degraded, "{label}");
+        assert_eq!(
+            qa.target_rel_bound.map(f64::to_bits),
+            qb.target_rel_bound.map(f64::to_bits),
+            "{label}"
+        );
+    }
+}
+
+/// Submit `n` queries (1 or 4) mixing error-target and open-loop budgets
+/// plus a sketch kind, so the campaign exercises widening, derivation,
+/// and the sketch pass together.
+fn submit_queries(session: &mut Session, n: usize) {
+    session
+        .submit(QuerySpec::new(AggregateKind::Sum).with_budget(BudgetSpec::TargetError {
+            relative_bound: 0.05,
+            confidence: 0.95,
+        }))
+        .unwrap();
+    if n > 1 {
+        session.submit(QuerySpec::new(AggregateKind::Mean)).unwrap();
+        session.submit(QuerySpec::new(AggregateKind::Count)).unwrap();
+        session.submit(QuerySpec::new(AggregateKind::Quantile(500))).unwrap();
+    }
+}
+
+#[test]
+fn chaos_campaign_survives_every_policy_and_query_count() {
+    const SLIDES: usize = 200;
+    let mut degraded_total = 0usize;
+    let mut retried_total = 0u64;
+    for (pi, policy) in ALL_POLICIES.into_iter().enumerate() {
+        for &n_queries in &[1usize, 4] {
+            let label = format!("policy {policy:?} / {n_queries} queries");
+            let cfg = chaos_cfg(0xC405 + pi as u64);
+            let source = MultiStream::paper_section5(cfg.seed);
+            let mut session =
+                Session::new(Coordinator::new(cfg.clone()).with_recovery(policy), source)
+                    .unwrap();
+            submit_queries(&mut session, n_queries);
+            session.warmup().unwrap();
+            let (mut ok, mut kafka_errs, mut ckpt_errs) = (0usize, 0usize, 0usize);
+            for step in 0..SLIDES {
+                match session.step() {
+                    Ok(out) => {
+                        ok += 1;
+                        assert!(
+                            out.window.estimate.value.is_finite(),
+                            "{label} step {step}"
+                        );
+                        assert_eq!(out.queries.len(), n_queries, "{label} step {step}");
+                        for q in &out.queries {
+                            assert!(q.estimate.value.is_finite(), "{label} step {step}");
+                            assert!(q.estimate.margin >= 0.0, "{label} step {step}");
+                            assert!(q.bound_scale >= 1.0, "{label} step {step}");
+                            // Degradation is reported coherently: the
+                            // window flag and every query flag agree.
+                            assert_eq!(q.degraded, out.window.degraded, "{label} step {step}");
+                        }
+                        degraded_total += usize::from(out.window.degraded);
+                    }
+                    // The only legal failures: an injected broker stall
+                    // (records stay queued; the next step catches up) or
+                    // a torn periodic checkpoint write (the slide itself
+                    // already processed; the chain re-bases).
+                    Err(Error::Kafka(_)) => kafka_errs += 1,
+                    Err(Error::Checkpoint(_)) => ckpt_errs += 1,
+                    Err(other) => panic!("{label} step {step}: untyped failure {other}"),
+                }
+            }
+            assert_eq!(ok + kafka_errs + ckpt_errs, SLIDES, "{label}");
+            assert!(ok > SLIDES / 2, "{label}: only {ok} successful slides");
+            assert!(kafka_errs > 0, "{label}: broker channel never fired");
+            assert!(ckpt_errs > 0, "{label}: checkpoint-write channel never fired");
+            let by_channel = session.coordinator().faults_by_channel();
+            for (ch, &count) in by_channel.iter().enumerate() {
+                assert!(count > 0, "{label}: channel {ch} never injected");
+            }
+            retried_total += session.coordinator().work_profile().total().retries;
+            // Backpressure drained the stalls: lag is bounded by one
+            // catch-up round, not proportional to the fault count.
+            let bound = (cfg.slide * cfg.catchup_factor * 2) as u64;
+            assert!(session.lag().unwrap() < bound, "{label}: lag runaway");
+        }
+    }
+    // Across the whole campaign the retry loop both masked faults and
+    // (for high-severity ones) exhausted into degraded slides.
+    assert!(retried_total > 0, "no compute fault was ever retried");
+    assert!(degraded_total > 0, "no compute fault ever exhausted the retry budget");
+}
+
+/// Drive a bare coordinator over pre-generated batches, feeding zero lag,
+/// collecting every slide (warmup first).
+fn run_coordinator(
+    cfg: &SystemConfig,
+    policy: RecoveryPolicy,
+    records: &[Record],
+    slides: usize,
+) -> (Vec<SlideOutput>, Coordinator) {
+    let mut coord = Coordinator::new(cfg.clone()).with_recovery(policy);
+    coord
+        .submit_query(QuerySpec::new(AggregateKind::Sum).with_budget(BudgetSpec::TargetError {
+            relative_bound: 0.05,
+            confidence: 0.95,
+        }))
+        .unwrap();
+    coord.submit_query(QuerySpec::new(AggregateKind::Mean)).unwrap();
+    let mut out = Vec::with_capacity(slides + 1);
+    out.push(coord.process_batch_queries(records[..cfg.window_size].to_vec()).unwrap());
+    for i in 0..slides {
+        let lo = cfg.window_size + i * cfg.slide;
+        out.push(coord.process_batch_queries(records[lo..lo + cfg.slide].to_vec()).unwrap());
+    }
+    (out, coord)
+}
+
+#[test]
+fn masked_faults_leave_every_slide_byte_identical() {
+    // Fault isolation, part 1: memo loss under `Replicated` recovery is
+    // *fully* absorbed — the replica restores the exact end-of-last-slide
+    // store — so a run with heavy memo faults must be byte-identical to
+    // the fault-free run on EVERY slide, not just the clean ones.
+    const SLIDES: usize = 200;
+    let base = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 1000,
+        slide: 100,
+        seed: 0x50AC,
+        chunk_size: 16,
+        ..SystemConfig::default()
+    };
+    let records = MultiStream::paper_section5(base.seed)
+        .take_records(base.window_size + SLIDES * base.slide);
+    let (clean, _) = run_coordinator(&base, RecoveryPolicy::Replicated, &records, SLIDES);
+
+    let memo_cfg = SystemConfig { fault_memo_loss: 0.3, ..base.clone() };
+    let (memo_run, memo_coord) =
+        run_coordinator(&memo_cfg, RecoveryPolicy::Replicated, &records, SLIDES);
+    assert!(
+        memo_coord.faults_by_channel()[0] >= 30,
+        "memo channel barely fired: {:?}",
+        memo_coord.faults_by_channel()
+    );
+    for (i, (c, f)) in clean.iter().zip(&memo_run).enumerate() {
+        assert_slides_identical(c, f, &format!("memo-faulty slide {i}"));
+        assert!(!f.window.degraded, "memo loss must never degrade a slide");
+    }
+}
+
+#[test]
+fn retry_masks_compute_faults_until_exhaustion_degrades() {
+    // Fault isolation, part 2: compute faults below the retry budget are
+    // invisible in the output (the loop re-runs the same deterministic
+    // batched call); only an exhausted budget may change a slide, and
+    // that slide must be flagged `degraded` with a surviving-strata
+    // subset. Slides before the first degradation are byte-identical to
+    // the fault-free run even though faults (and retries) fired in them.
+    const SLIDES: usize = 200;
+    let base = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 1000,
+        slide: 100,
+        seed: 0x50AD,
+        chunk_size: 16,
+        retry_max_attempts: 6,
+        ..SystemConfig::default()
+    };
+    let records = MultiStream::paper_section5(base.seed)
+        .take_records(base.window_size + SLIDES * base.slide);
+    let (clean, _) = run_coordinator(&base, RecoveryPolicy::Replicated, &records, SLIDES);
+
+    let compute_cfg = SystemConfig { fault_compute: 0.35, ..base.clone() };
+    let (faulty, coord) =
+        run_coordinator(&compute_cfg, RecoveryPolicy::Replicated, &records, SLIDES);
+
+    let first_degraded =
+        faulty.iter().position(|o| o.window.degraded).unwrap_or(faulty.len());
+    let degraded_count = faulty.iter().filter(|o| o.window.degraded).count();
+    let compute_faults = coord.faults_by_channel()[1] as usize;
+    assert!(degraded_count > 0, "no fault ever exhausted the retry budget");
+    assert!(
+        compute_faults > degraded_count,
+        "every compute fault exhausted — nothing was masked ({compute_faults} faults)"
+    );
+    assert!(coord.work_profile().total().retries > 0, "no retries recorded");
+
+    // Masked prefix: byte-identical despite injected faults.
+    for i in 0..first_degraded {
+        assert_slides_identical(&clean[i], &faulty[i], &format!("masked slide {i}"));
+    }
+    // Degraded slides answer from a strict subset of the clean strata and
+    // say so; after the first one the memo contents legitimately diverge
+    // (dropped strata re-enter via a fresh full recompute), so later
+    // clean slides are no longer bit-comparable — but they stay finite
+    // and well-formed.
+    for (i, o) in faulty.iter().enumerate() {
+        if o.window.degraded {
+            assert!(
+                o.window.strata.len() < clean[i].window.strata.len(),
+                "slide {i}: degraded but no stratum dropped"
+            );
+            for s in o.window.strata.keys() {
+                assert!(
+                    clean[i].window.strata.contains_key(s),
+                    "slide {i}: phantom stratum {s}"
+                );
+            }
+        }
+        assert!(o.window.estimate.value.is_finite(), "slide {i}");
+        for q in &o.queries {
+            assert!(q.estimate.value.is_finite(), "slide {i}");
+        }
+    }
+}
+
+#[test]
+fn restore_mid_campaign_replays_fault_schedule_and_degradation_trajectory() {
+    // Replayable chaos: checkpoint at slide 100 — mid-overload, with the
+    // degradation ladder climbed and fault channels mid-stream — restore
+    // under a DIFFERENT worker count, and the continuation must be
+    // byte-identical to the uninterrupted run: same per-slide outputs,
+    // same per-channel injection counters, same ladder trajectory.
+    const SLIDES: usize = 160;
+    const CKPT_AT: usize = 100;
+    let cfg = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 1000,
+        slide: 100,
+        seed: 0x50AE,
+        chunk_size: 16,
+        num_workers: 1,
+        fault_memo_loss: 0.15,
+        fault_compute: 0.25,
+        retry_max_attempts: 4,
+        lag_watermark_slides: 4,
+        degradation_step_factor: 1.5,
+        degradation_max_steps: 3,
+        degradation_recover_slides: 2,
+        ..SystemConfig::default()
+    };
+    let records = MultiStream::paper_section5(cfg.seed)
+        .take_records(cfg.window_size + SLIDES * cfg.slide);
+    // Synthetic overload: lag spikes above the watermark for slides
+    // 90..112 (spanning the checkpoint), calm elsewhere.
+    let lag_at = |i: usize| if (90..112).contains(&i) { 9u64 } else { 0 };
+
+    let submit = |coord: &mut Coordinator| {
+        coord
+            .submit_query(QuerySpec::new(AggregateKind::Sum).with_budget(
+                BudgetSpec::TargetError { relative_bound: 0.05, confidence: 0.95 },
+            ))
+            .unwrap();
+        coord.submit_query(QuerySpec::new(AggregateKind::Count)).unwrap();
+    };
+    let slide_batch = |i: usize| {
+        let lo = cfg.window_size + i * cfg.slide;
+        records[lo..lo + cfg.slide].to_vec()
+    };
+
+    // Uninterrupted run, recording the full trajectory.
+    let mut live = Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::Replicated);
+    submit(&mut live);
+    live.process_batch_queries(records[..cfg.window_size].to_vec()).unwrap();
+    let mut live_out = Vec::new();
+    for i in 0..SLIDES {
+        live.observe_lag_slides(lag_at(i));
+        let out = live.process_batch_queries(slide_batch(i)).unwrap();
+        live_out.push((out, live.degradation_level(), live.faults_by_channel()));
+    }
+
+    // Victim: identical run, checkpointed at CKPT_AT.
+    let mut victim = Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::Replicated);
+    submit(&mut victim);
+    victim.process_batch_queries(records[..cfg.window_size].to_vec()).unwrap();
+    for i in 0..CKPT_AT {
+        victim.observe_lag_slides(lag_at(i));
+        victim.process_batch_queries(slide_batch(i)).unwrap();
+    }
+    assert!(
+        victim.degradation_level() > 0,
+        "checkpoint must land mid-overload to make this test meaningful"
+    );
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+
+    // Restore under 4 workers and continue; queries ride the checkpoint.
+    let restore_cfg = SystemConfig { num_workers: 4, ..cfg.clone() };
+    let mut restored = Coordinator::restore(&artifact[..], restore_cfg).unwrap();
+    assert_eq!(restored.query_count(), 2);
+    assert_eq!(
+        restored.degradation_level(),
+        live_out[CKPT_AT - 1].1,
+        "ladder position must survive the restore"
+    );
+    for i in CKPT_AT..SLIDES {
+        restored.observe_lag_slides(lag_at(i));
+        let out = restored.process_batch_queries(slide_batch(i)).unwrap();
+        let (live_slide, live_level, live_channels) = &live_out[i];
+        assert_slides_identical(live_slide, &out, &format!("restored slide {i}"));
+        assert_eq!(restored.degradation_level(), *live_level, "slide {i}");
+        assert_eq!(restored.faults_by_channel(), *live_channels, "slide {i}");
+    }
+
+    // The trajectory itself behaved: climbed under overload, widened the
+    // error-target query (and only it), and walked back to baseline.
+    let max_level = live_out.iter().map(|(_, l, _)| *l).max().unwrap();
+    assert_eq!(max_level, 3, "overload never climbed the ladder");
+    let widened = &live_out[111].0.queries;
+    assert!(widened[0].bound_scale > 1.0, "TargetError bound never widened");
+    assert_eq!(widened[1].bound_scale.to_bits(), 1.0f64.to_bits(), "open-loop widened");
+    let (final_out, final_level, _) = live_out.last().unwrap();
+    assert_eq!(*final_level, 0, "ladder never recovered");
+    assert_eq!(final_out.queries[0].bound_scale.to_bits(), 1.0f64.to_bits());
+}
+
+#[test]
+fn session_restore_under_broker_chaos_continues_identically() {
+    // The full stack under chaos: a session with broker stalls, memo
+    // loss, and compute faults is checkpointed mid-campaign (backlog and
+    // generator state included) and restored; every subsequent step —
+    // including which steps FAIL with the injected broker error, and the
+    // lag-fed degradation trajectory — matches the uninterrupted session.
+    const STEPS: usize = 120;
+    const CKPT_AT: usize = 60;
+    let cfg = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 1000,
+        slide: 100,
+        seed: 0x50AF,
+        chunk_size: 16,
+        fault_memo_loss: 0.08,
+        fault_compute: 0.10,
+        fault_broker: 0.10,
+        lag_watermark_slides: 1,
+        catchup_factor: 4,
+        degradation_step_factor: 1.5,
+        degradation_max_steps: 2,
+        degradation_recover_slides: 2,
+        ..SystemConfig::default()
+    };
+    let build = || {
+        let source = MultiStream::paper_section5(cfg.seed);
+        let mut s = Session::new(
+            Coordinator::new(cfg.clone()).with_recovery(RecoveryPolicy::Replicated),
+            source,
+        )
+        .unwrap();
+        submit_queries(&mut s, 4);
+        s.warmup().unwrap();
+        s
+    };
+    // One step's observable outcome, normalized for comparison.
+    let outcome = |s: &mut Session| -> Result<SlideOutput, String> {
+        match s.step() {
+            Ok(out) => Ok(out),
+            Err(Error::Kafka(m)) => Err(format!("kafka: {m}")),
+            Err(Error::Checkpoint(m)) => Err(format!("checkpoint: {m}")),
+            Err(other) => panic!("untyped chaos failure: {other}"),
+        }
+    };
+
+    let mut uninterrupted = build();
+    let mut reference = Vec::new();
+    for _ in 0..STEPS {
+        let out = outcome(&mut uninterrupted);
+        reference.push((out, uninterrupted.coordinator().degradation_level()));
+    }
+    assert!(
+        reference.iter().any(|(o, _)| o.is_err()),
+        "broker channel never stalled a step"
+    );
+    assert!(
+        reference.iter().any(|(_, l)| *l > 0),
+        "broker stalls never pushed lag over the watermark"
+    );
+
+    let mut victim = build();
+    for i in 0..CKPT_AT {
+        let out = outcome(&mut victim);
+        match (&out, &reference[i].0) {
+            (Ok(a), Ok(b)) => assert_slides_identical(b, a, &format!("pre-ckpt step {i}")),
+            (Err(a), Err(b)) => assert_eq!(a, b, "pre-ckpt step {i}"),
+            _ => panic!("pre-ckpt step {i}: outcome kind diverged"),
+        }
+    }
+    let mut artifact = Vec::new();
+    victim.checkpoint(&mut artifact).unwrap();
+    drop(victim);
+
+    let mut restored = Session::restore(&artifact[..], cfg.clone()).unwrap();
+    assert_eq!(restored.query_count(), 4);
+    for (i, (expected, expected_level)) in reference.iter().enumerate().skip(CKPT_AT) {
+        let out = outcome(&mut restored);
+        match (&out, expected) {
+            (Ok(a), Ok(b)) => assert_slides_identical(b, a, &format!("restored step {i}")),
+            (Err(a), Err(b)) => assert_eq!(a, b, "restored step {i}"),
+            (Ok(_), Err(e)) => panic!("restored step {i}: expected failure `{e}`, got Ok"),
+            (Err(e), Ok(_)) => panic!("restored step {i}: unexpected failure `{e}`"),
+        }
+        assert_eq!(
+            restored.coordinator().degradation_level(),
+            *expected_level,
+            "restored step {i}"
+        );
+    }
+}

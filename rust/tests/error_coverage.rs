@@ -1,10 +1,16 @@
 //! Statistical validation of the §3.5 error bounds: measured CI coverage
-//! must track the nominal confidence level across independent seeds.
+//! must track the nominal confidence level across independent seeds —
+//! plus typed-error coverage of the fallible broker paths (everything
+//! reachable from library code must surface `Error::Kafka`, not panic).
 
 mod common;
 
 use incapprox::config::system::{ExecModeSpec, SystemConfig};
 use incapprox::coordinator::Coordinator;
+use incapprox::error::Error;
+use incapprox::kafka::broker::Broker;
+use incapprox::kafka::consumer::Consumer;
+use incapprox::kafka::producer::{Partitioner, Producer};
 use incapprox::workload::gen::MultiStream;
 use incapprox::workload::trace::TraceReplay;
 
@@ -63,4 +69,50 @@ fn higher_confidence_wider_interval() {
         margins.push(m);
     }
     assert!(margins[0] < margins[1] && margins[1] < margins[2], "{margins:?}");
+}
+
+#[test]
+fn poll_after_topic_drop_is_a_typed_kafka_error() {
+    // A consumer survives its topic being dropped out from under it:
+    // poll / lag / backlog all surface `Error::Kafka`, never a panic or
+    // a silent empty read.
+    let broker = Broker::<u64>::new();
+    broker.create_topic("flows", 2).unwrap();
+    let mut producer = Producer::new(&broker, "flows", Partitioner::Keyed).unwrap();
+    for i in 0..10u64 {
+        producer.send(Some(i % 2), i, i).unwrap();
+    }
+    let mut consumer = Consumer::new();
+    consumer.subscribe(&broker, "flows").unwrap();
+    assert_eq!(consumer.poll(4).unwrap().len(), 4);
+
+    broker.drop_topic("flows").unwrap();
+    assert!(matches!(consumer.poll(4), Err(Error::Kafka(_))));
+    assert!(matches!(consumer.lag(), Err(Error::Kafka(_))));
+    assert!(matches!(consumer.backlog(), Err(Error::Kafka(_))));
+    // The producer's held handle errors too — no writes into a zombie log.
+    assert!(matches!(producer.send(Some(0), 11, 11), Err(Error::Kafka(_))));
+    // And a fresh subscribe to the now-unknown name is a typed error.
+    let mut late = Consumer::new();
+    assert!(matches!(late.subscribe(&broker, "flows"), Err(Error::Kafka(_))));
+}
+
+#[test]
+fn subscribe_twice_is_a_typed_kafka_error() {
+    // A duplicate subscription would double-deliver every message
+    // through the merged stream; it must be rejected loudly, and the
+    // original subscription must keep working.
+    let broker = Broker::<u64>::new();
+    broker.create_topic("flows", 1).unwrap();
+    let mut producer = Producer::new(&broker, "flows", Partitioner::RoundRobin).unwrap();
+    let mut consumer = Consumer::new();
+    consumer.subscribe(&broker, "flows").unwrap();
+    assert!(matches!(consumer.subscribe(&broker, "flows"), Err(Error::Kafka(_))));
+    for i in 0..6u64 {
+        producer.send(None, i, i).unwrap();
+    }
+    // No double delivery: each message arrives exactly once.
+    assert_eq!(consumer.poll(100).unwrap().len(), 6);
+    assert_eq!(consumer.lag().unwrap(), 0);
+    assert_eq!(consumer.subscriptions(), vec!["flows"]);
 }
