@@ -1,0 +1,74 @@
+//! `pallas-lint` — run the repo-native invariant linter over `src/`.
+//!
+//! ```text
+//! cargo run --release --bin pallas-lint                 # lint the tree
+//! cargo run --bin pallas-lint -- --quiet                # findings only via exit code
+//! cargo run --bin pallas-lint -- --root other/src       # lint another tree
+//! cargo run --bin pallas-lint -- --json out.json        # JSON somewhere else
+//! cargo run --bin pallas-lint -- --update-wire-golden   # re-pin the wire digest
+//! ```
+//!
+//! By default the JSON report lands at
+//! `target/lint-results/pallas-lint.json` (uploaded as a CI artifact);
+//! `--no-json` skips it. Exit status: 0 clean, 1 findings, 2 usage or
+//! I/O failure. The rules themselves are documented in
+//! [`incapprox::lint`].
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use incapprox::cli::Args;
+use incapprox::error::{Error, Result};
+use incapprox::lint;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<ExitCode> {
+    let args = Args::from_env(&["quiet", "update-wire-golden", "no-json"])?;
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"),
+    };
+
+    if args.flag("update-wire-golden") {
+        let wire = std::fs::read_to_string(root.join(lint::wire_schema::WIRE_PATH))?;
+        let module = std::fs::read_to_string(root.join(lint::wire_schema::MOD_PATH))?;
+        let digest = lint::wire_schema::schema_digest(wire.as_bytes(), module.as_bytes());
+        let version = lint::wire_schema::parse_version(&module).ok_or_else(|| {
+            Error::Config("cannot find checkpoint::VERSION to pin the golden".to_string())
+        })?;
+        let golden_path = root.join(lint::wire_schema::GOLDEN_PATH);
+        std::fs::write(&golden_path, lint::wire_schema::render_golden(version, digest))?;
+        println!(
+            "pallas-lint: pinned wire golden v{version} digest {digest:#018x} at {}",
+            golden_path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let report = lint::run(&root)?;
+
+    if !args.flag("no-json") {
+        let json_path = match args.get("json") {
+            Some(p) => PathBuf::from(p),
+            None => PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("target/lint-results/pallas-lint.json"),
+        };
+        if let Some(dir) = json_path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&json_path, report.to_json())?;
+    }
+    if !args.flag("quiet") {
+        print!("{}", report.render_text());
+    }
+    Ok(if report.is_clean() { ExitCode::SUCCESS } else { ExitCode::FAILURE })
+}

@@ -958,6 +958,7 @@ pub(crate) fn encode_segment(seg: &Segment) -> Vec<u8> {
                 }
             }
         };
+        // lint:allow(panic-freedom) -- writes into a Vec<u8> sink, which is infallible
         encode(&mut w).expect("Vec sink cannot fail");
     }
     buf
@@ -1470,7 +1471,9 @@ mod tests {
             }],
         });
         let bytes = encode_segment(&base);
-        match decode_segment(&bytes).unwrap() {
+        let decoded = decode_segment(&bytes).unwrap();
+        assert!(matches!(decoded, Segment::Base(_)), "expected base segment");
+        match decoded {
             Segment::Base(b) => {
                 assert!(matches!(b.window, WindowCkpt::Count { size: 10, .. }));
                 assert_eq!(b.chunks.len(), 1);
@@ -1511,7 +1514,7 @@ mod tests {
                     "sketch bundles must round-trip bit-exactly"
                 );
             }
-            Segment::Delta(_) => panic!("expected base"),
+            Segment::Delta(_) => {}
         }
 
         let delta = Segment::Delta(DeltaState {
@@ -1549,7 +1552,9 @@ mod tests {
             misc,
         });
         let bytes = encode_segment(&delta);
-        match decode_segment(&bytes).unwrap() {
+        let decoded = decode_segment(&bytes).unwrap();
+        assert!(matches!(decoded, Segment::Delta(_)), "expected delta segment");
+        match decoded {
             Segment::Delta(d) => {
                 assert_eq!(d.ops.len(), 7);
                 assert!(matches!(d.ops[2], JournalOp::Resize { new_size: 20 }));
@@ -1567,7 +1572,7 @@ mod tests {
                 assert_eq!(d.items[0].1, 3);
                 assert_eq!(d.items[0].2.len(), 2);
             }
-            Segment::Base(_) => panic!("expected delta"),
+            Segment::Base(_) => {}
         }
         // Garbage does not decode.
         assert!(decode_segment(&[0xFF, 0x00]).is_err());
@@ -1635,12 +1640,14 @@ mod tests {
         assert_eq!(sect.source.now, 99);
         assert_eq!(sect.slides_since_ckpt, 1);
         assert_eq!(sect.backlog.len(), 2);
-        match &sect.source.subs[1] {
-            SubstreamSpec::Fluctuating { schedule, rng, .. } => {
-                assert_eq!(schedule, &vec![(0, 1.0), (100, 2.5)]);
-                assert_eq!(rng, &[5, 4, 3, 2]);
-            }
-            other => panic!("wrong sub spec: {other:?}"),
+        assert!(
+            matches!(&sect.source.subs[1], SubstreamSpec::Fluctuating { .. }),
+            "wrong sub spec: {:?}",
+            sect.source.subs[1]
+        );
+        if let SubstreamSpec::Fluctuating { schedule, rng, .. } = &sect.source.subs[1] {
+            assert_eq!(schedule, &vec![(0, 1.0), (100, 2.5)]);
+            assert_eq!(rng, &[5, 4, 3, 2]);
         }
 
         // Corruption in a segment blob is caught by the outer checksum.

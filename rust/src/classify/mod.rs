@@ -33,7 +33,7 @@ impl BootstrapStratifier {
             for slot in resampled.iter_mut() {
                 *slot = training[rng.below(n)];
             }
-            resampled.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            resampled.sort_by(f64::total_cmp);
             for (ci, sum) in cut_sums.iter_mut().enumerate() {
                 let q = (ci + 1) as f64 / strata as f64;
                 let idx = ((q * (n - 1) as f64).round() as usize).min(n - 1);

@@ -34,11 +34,9 @@ impl Args {
                     out.opts.insert(k.to_string(), v.to_string());
                 } else if known_flags.contains(&body) {
                     out.flags.push(body.to_string());
-                } else if let Some(next) = it.peek() {
-                    if next.starts_with("--") {
-                        return Err(Error::Config(format!("option --{body} needs a value")));
-                    }
-                    let v = it.next().unwrap();
+                } else if it.peek().is_some_and(|next| next.starts_with("--")) {
+                    return Err(Error::Config(format!("option --{body} needs a value")));
+                } else if let Some(v) = it.next() {
                     out.opts.insert(body.to_string(), v);
                 } else {
                     return Err(Error::Config(format!("option --{body} needs a value")));

@@ -201,17 +201,19 @@ fn plan_one_stratum(
     let shard = memo.shard(stratum);
     let prev_m = shard.stratum_moments(stratum);
     let cache = prev_chunks.unwrap_or(&[]);
-    if !memoizes || prev.is_none() || prev_m.is_none() || epoch_recompute {
-        let (planned, rehashed_items) = JobPlan::plan_stratum_cached(
-            stratum,
-            cur.records(),
-            if memoizes { Some(shard) } else { None },
-            chunk_size,
-            cache,
-        );
-        return StratumPlan::Full { planned, rehashed_items };
-    }
-    let prev = prev.expect("checked");
+    let (prev, base) = match (prev, prev_m) {
+        (Some(p), Some(m)) if memoizes && !epoch_recompute => (p, m),
+        _ => {
+            let (planned, rehashed_items) = JobPlan::plan_stratum_cached(
+                stratum,
+                cur.records(),
+                if memoizes { Some(shard) } else { None },
+                chunk_size,
+                cache,
+            );
+            return StratumPlan::Full { planned, rehashed_items };
+        }
+    };
     // Diff via the runs' resident id sets — O(|cur| + |prev|) lookups,
     // zero allocations beyond the outputs.
     let added: Vec<Record> =
@@ -231,7 +233,7 @@ fn plan_one_stratum(
     }
     let delta_items = added.len() + removed.len();
     StratumPlan::Delta {
-        base: prev_m.expect("checked"),
+        base,
         added: chunk_stratum(stratum, &added, chunk_size),
         removed: chunk_stratum(stratum, &removed, chunk_size),
         delta_items,
@@ -688,7 +690,11 @@ impl Coordinator {
         let want_full = self.wants_full_view();
         let snap = match &mut self.window {
             WindowState::Count(w) => w.slide_with(batch, want_full),
-            WindowState::Time(_) => unreachable!("window kind checked above"),
+            WindowState::Time(_) => {
+                return Err(crate::error::Error::Job(
+                    "process_batch needs a count window; use ingest_tick".into(),
+                ));
+            }
         };
         self.process_snapshot(snap)
     }
@@ -726,7 +732,11 @@ impl Coordinator {
                 w.ingest(records);
                 w.try_emit_with(now, want_full)
             }
-            WindowState::Count(_) => unreachable!("window kind checked above"),
+            WindowState::Count(_) => {
+                return Err(crate::error::Error::Job(
+                    "ingest_tick needs a time window; use process_batch".into(),
+                ));
+            }
         };
         snap.map(|s| self.process_snapshot(s)).transpose()
     }
@@ -1395,6 +1405,15 @@ impl Coordinator {
         }
     }
 
+    /// The armed checkpoint tracker, or a typed error when journaling
+    /// was never armed (a logic error surfaced as
+    /// [`Error::Checkpoint`](crate::error::Error) rather than a panic).
+    fn ckpt_tracker_mut(&mut self) -> Result<&mut CkptTracker> {
+        self.ckpt
+            .as_mut()
+            .ok_or_else(|| crate::error::Error::Checkpoint("checkpoint tracker not armed".into()))
+    }
+
     /// Bring the in-memory checkpoint chain up to the current slide:
     /// encode a base segment (first checkpoint, post-fault, or when the
     /// deltas have outgrown the base) or a delta segment (the journal
@@ -1424,12 +1443,12 @@ impl Coordinator {
         let wants_base = self.ckpt.as_ref().map_or(true, CkptTracker::wants_base);
         let appended = if wants_base {
             let seg = checkpoint::encode_segment(&Segment::Base(self.ckpt_base_state()));
-            self.ckpt.as_mut().expect("armed above").install_base(seg)
+            self.ckpt_tracker_mut()?.install_base(seg)
         } else {
             let cur_items = self.memo.items_all();
             let moments = self.memo.stratum_moments_all();
             let misc = self.ckpt_misc();
-            let tracker = self.ckpt.as_mut().expect("armed above");
+            let tracker = self.ckpt_tracker_mut()?;
             let items: Vec<(StratumId, u64, Vec<checkpoint::RunOp>)> = cur_items
                 .iter()
                 .map(|(&s, run)| {
@@ -1450,7 +1469,7 @@ impl Coordinator {
         // this segment (both are O(strata) Arc traffic, not copies).
         let prev_items = self.memo.items_all();
         let image = self.memo.snapshot();
-        let tracker = self.ckpt.as_mut().expect("armed above");
+        let tracker = self.ckpt_tracker_mut()?;
         tracker.prev_items = prev_items;
         tracker.memo_image = Some(image);
         self.work.note_checkpoint_bytes(appended);
@@ -1465,9 +1484,12 @@ impl Coordinator {
         session: Option<SessionSection>,
     ) -> Result<u64> {
         self.refresh_checkpoint_chain()?;
+        let tracker = self.ckpt.as_ref().ok_or_else(|| {
+            crate::error::Error::Checkpoint("checkpoint tracker not armed after refresh".into())
+        })?;
         let artifact = Artifact {
             compat: Compat::of(&self.cfg),
-            segments: self.ckpt.as_ref().expect("refreshed above").segments.clone(),
+            segments: tracker.segments.clone(),
             session,
         };
         artifact.write(sink)
@@ -1513,7 +1535,9 @@ impl Coordinator {
 
         // --- Base segment: materialize window, memo, runs ---------------
         let mut segments = artifact.segments.iter();
-        let first = segments.next().expect("Artifact::read guarantees >= 1 segment");
+        let Some(first) = segments.next() else {
+            return Err(Error::Checkpoint("artifact has no segments".into()));
+        };
         let base = match checkpoint::decode_segment(first)? {
             Segment::Base(b) => b,
             Segment::Delta(_) => {

@@ -87,7 +87,10 @@ impl WorkerPool {
                 let tx_results = tx_results.clone();
                 std::thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().unwrap();
+                        // A worker that panicked holding the guard poisons
+                        // the receiver lock; the channel itself is still
+                        // intact, so the surviving workers keep draining it.
+                        let guard = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                         guard.recv()
                     };
                     match job {

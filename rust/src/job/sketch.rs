@@ -554,11 +554,15 @@ impl Cursor<'_> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        let arr: [u8; 4] =
+            self.take(4)?.try_into().map_err(|_| corrupt("short u32 read".into()))?;
+        Ok(u32::from_le_bytes(arr))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        let arr: [u8; 8] =
+            self.take(8)?.try_into().map_err(|_| corrupt("short u64 read".into()))?;
+        Ok(u64::from_le_bytes(arr))
     }
 }
 

@@ -36,6 +36,7 @@ pub mod error;
 pub mod fault;
 pub mod job;
 pub mod kafka;
+pub mod lint;
 pub mod logging;
 pub mod metrics;
 pub mod prelude;

@@ -1,0 +1,91 @@
+//! Rule `determinism` — no wall-clock reads, no unordered hash
+//! iteration, in the determinism-critical cone.
+//!
+//! Every headline property of this reproduction (byte-identical
+//! serial/sharded/incremental reports, the deterministic `TargetError`
+//! trajectory, restore equivalence) requires that the substrate and the
+//! error-loop math read only byte-identical quantities. Two classic
+//! ways to silently break that:
+//!
+//! * **wall-clock reads** (`Instant::now`, `SystemTime`, anything under
+//!   `std::time`) feeding a value that influences sampling, budgeting,
+//!   or the wire format — banned everywhere except the observability
+//!   layers (`metrics/`, `logging.rs`, `bench_harness.rs`, `runtime/`),
+//!   which measure but never steer;
+//! * **unordered iteration** over `std::collections::HashMap` /
+//!   `HashSet` (randomized per process) inside the cone — banned in the
+//!   cone outright. The sanctioned containers are `BTreeMap`/`BTreeSet`
+//!   (ordered) and [`FastMap`](crate::util::hash::FastMap) /
+//!   [`FastSet`](crate::util::hash::FastSet), whose fixed-seed hasher
+//!   makes iteration a pure function of the operation sequence.
+//!
+//! Test regions (`#[cfg(test)]` / `#[test]`) are exempt — assertions
+//! may use std containers and measure time without affecting the
+//! production dataflow.
+//!
+//! Escape hatch (audited): `// lint:allow(determinism) -- <reason>`.
+
+use super::lexer;
+use super::{Diagnostic, SourceFile};
+
+/// Modules whose outputs must be a pure function of (input, seed): the
+/// window/sampler/memo substrate, the job layer, the checkpoint wire,
+/// and the statistics + budget solve paths.
+pub const CONE: [&str; 7] =
+    ["window/", "sampling/", "sac/", "job/", "checkpoint/", "stats/", "budget/"];
+
+/// Observability layers allowed to read the clock: they measure,
+/// report, and benchmark, but nothing they produce flows back into
+/// sampled, memoized, or serialized state. (`runtime/` is the
+/// feature-gated PJRT boundary — host-side timing there never reaches
+/// the coordinator's math.)
+pub const CLOCK_ALLOWED: [&str; 4] = ["metrics/", "logging.rs", "bench_harness.rs", "runtime/"];
+
+const CLOCK_TOKENS: [&str; 3] = ["std::time", "Instant::now", "SystemTime"];
+const UNORDERED_TOKENS: [&str; 3] = ["HashMap", "HashSet", "DefaultHasher"];
+
+/// Run the rule over one file.
+pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let clock_scoped = !CLOCK_ALLOWED.iter().any(|p| file.path.starts_with(p));
+    let cone_scoped = CONE.iter().any(|p| file.path.starts_with(p));
+    if clock_scoped {
+        for token in CLOCK_TOKENS {
+            for pos in lexer::find_token(&file.masked, token, true) {
+                if file.in_test_region(pos) {
+                    continue;
+                }
+                file.push_unless_allowed(
+                    &mut out,
+                    super::RULE_DETERMINISM,
+                    pos,
+                    format!(
+                        "wall-clock read `{token}` outside the observability allowlist; \
+                         clock values must never influence sampled, memoized, budgeted, \
+                         or serialized state"
+                    ),
+                );
+            }
+        }
+    }
+    if cone_scoped {
+        for token in UNORDERED_TOKENS {
+            for pos in lexer::find_token(&file.masked, token, true) {
+                if file.in_test_region(pos) {
+                    continue;
+                }
+                file.push_unless_allowed(
+                    &mut out,
+                    super::RULE_DETERMINISM,
+                    pos,
+                    format!(
+                        "`{token}` in the determinism-critical cone; use BTreeMap/BTreeSet \
+                         or util::hash::FastMap/FastSet (fixed-seed, iteration order is a \
+                         pure function of the operation sequence)"
+                    ),
+                );
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,65 @@
+//! Rule `flat-substrate` — substrate modules must not know queries
+//! exist.
+//!
+//! The PR 3 invariant (ARCHITECTURE.md, "flat multi-query substrate"):
+//! N concurrent queries share one window/sampler/memo, and only the
+//! coordinator's `derive_items` / `budget_adjust` layers may scale with
+//! N. The dynamic gate (`substrate_work_independent_of_query_count`)
+//! catches per-query *work*; this rule catches the upstream design
+//! drift — a substrate module merely *naming* a query-registry type is
+//! one refactor away from looping over it.
+//!
+//! Banned inside substrate modules: the query-registry vocabulary
+//! (`QuerySpec`, `QueryId`, `QueryReport`, `RegisteredQuery`,
+//! `SlideOutput`, `submit_query`, `remove_query`). The coordinator
+//! (`coordinator/`), which owns the registry, is naturally out of
+//! scope.
+//!
+//! Test regions are exempt (a substrate unit test asserting against a
+//! report type is not a scaling hazard).
+//!
+//! Escape hatch (audited): `// lint:allow(flat-substrate) -- <reason>`.
+
+use super::lexer;
+use super::{Diagnostic, SourceFile};
+
+/// Modules that make up the shared substrate: one instance serves every
+/// registered query, so none of them may reference the registry.
+pub const SUBSTRATE: [&str; 5] = ["window/", "sampling/", "sac/", "job/", "kafka/"];
+
+/// The query-registry vocabulary: types and methods owned by
+/// `coordinator/query.rs` / `coordinator/report.rs`.
+const TOKENS: [&str; 7] = [
+    "QuerySpec",
+    "QueryId",
+    "QueryReport",
+    "RegisteredQuery",
+    "SlideOutput",
+    "submit_query",
+    "remove_query",
+];
+
+/// Run the rule over one file.
+pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if !SUBSTRATE.iter().any(|p| file.path.starts_with(p)) {
+        return out;
+    }
+    for token in TOKENS {
+        for pos in lexer::find_token(&file.masked, token, true) {
+            if file.in_test_region(pos) {
+                continue;
+            }
+            file.push_unless_allowed(
+                &mut out,
+                super::RULE_FLAT_SUBSTRATE,
+                pos,
+                format!(
+                    "substrate module references query-registry symbol `{token}`; \
+                     only coordinator derive/budget layers may scale with query count"
+                ),
+            );
+        }
+    }
+    out
+}

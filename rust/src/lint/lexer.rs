@@ -1,0 +1,413 @@
+//! Source masking and region detection for `pallas-lint`.
+//!
+//! The workspace is offline (no `syn`), so the linter works on a
+//! *masked* view of each source file: a byte-for-byte copy in which
+//! every comment and every string/char-literal interior is blanked to
+//! spaces (newlines preserved). Token scans over the masked text can
+//! then use plain substring search without tripping on `panic!` inside
+//! a doc comment or `HashMap` inside an error message, and brace
+//! matching is reliable because literal braces are blanked too.
+//!
+//! The masker is a hand-rolled byte state machine covering the literal
+//! forms the tree actually uses: line comments, nested block comments,
+//! `"…"` strings with escapes, raw strings `r"…"` / `r#"…"#`, byte
+//! strings `b"…"` / `br#"…"#`, char and byte-char literals (including
+//! `'\''` and `'"'`), and lifetimes (`'a`, `'static`), which are *not*
+//! literals and pass through untouched.
+
+/// One half-open byte range `[start, end)` of the masked source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Inclusive start byte.
+    pub start: usize,
+    /// Exclusive end byte.
+    pub end: usize,
+}
+
+impl Span {
+    /// Whether `pos` falls inside the span.
+    pub fn contains(&self, pos: usize) -> bool {
+        self.start <= pos && pos < self.end
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comments and literal interiors to spaces, preserving byte
+/// offsets and newlines exactly. Multi-byte UTF-8 sequences inside
+/// blanked regions become one space per byte, so the result is always
+/// valid UTF-8 of the same length as the input.
+pub fn mask_source(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut i = 0usize;
+
+    // Push `count` blanks, preserving any newline bytes verbatim.
+    let blank = |out: &mut Vec<u8>, bytes: &[u8]| {
+        for &c in bytes {
+            out.push(if c == b'\n' { b'\n' } else { b' ' });
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+
+        // Line comment: `//…` to end of line.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, &b[i..j]);
+            i = j;
+            continue;
+        }
+
+        // Block comment: `/* … */`, nesting allowed.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &b[i..j]);
+            i = j;
+            continue;
+        }
+
+        // Possible literal prefix: `r"`, `r#"`, `b"`, `br#"`, `b'` —
+        // only when not glued to a preceding identifier (so `for` /
+        // `attr"` never start a literal).
+        let prev_ident = i > 0 && is_ident_byte(b[i - 1]);
+        if (c == b'r' || c == b'b') && !prev_ident {
+            let mut j = i;
+            let mut raw = false;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            if j < n && b[j] == b'r' && j <= i + 1 {
+                raw = true;
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            if raw {
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if raw && j < n && b[j] == b'"' {
+                // Raw (byte) string: ends at `"` + `hashes` hashes.
+                let body = j + 1;
+                let mut k = body;
+                'scan: while k < n {
+                    if b[k] == b'"' {
+                        let mut h = 0usize;
+                        while h < hashes && k + 1 + h < n && b[k + 1 + h] == b'#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            k += 1 + hashes;
+                            break 'scan;
+                        }
+                    }
+                    k += 1;
+                }
+                out.extend_from_slice(&b[i..body]);
+                blank(&mut out, &b[body..k]);
+                i = k;
+                continue;
+            }
+            if !raw && c == b'b' && j == i + 1 && j < n && (b[j] == b'"' || b[j] == b'\'') {
+                // Fall through to the plain string / char handling with
+                // the `b` prefix emitted as code.
+                out.push(b'b');
+                i = j;
+                // Handled by the `"` / `'` arms below on the next pass.
+                continue;
+            }
+            // Not a literal prefix after all.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+
+        // Plain string literal.
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j = (j + 2).min(n);
+                    continue;
+                }
+                if b[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            out.push(b'"');
+            blank(&mut out, &b[i + 1..j.saturating_sub(1).max(i + 1)]);
+            if j > i + 1 {
+                out.push(b'"');
+            }
+            i = j;
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            let j = i + 1;
+            if j >= n {
+                out.push(c);
+                i += 1;
+                continue;
+            }
+            if b[j] == b'\\' {
+                // Escaped char literal: scan past the escape intro to
+                // the closing quote (covers `'\''`, `'\\'`, `'\x41'`,
+                // `'\u{1F600}'`).
+                let mut k = j + 2; // skip the backslash and escape head
+                while k < n && b[k] != b'\'' {
+                    k += 1;
+                }
+                k = (k + 1).min(n);
+                out.push(b'\'');
+                blank(&mut out, &b[i + 1..k.saturating_sub(1).max(i + 1)]);
+                if k > i + 1 {
+                    out.push(b'\'');
+                }
+                i = k;
+                continue;
+            }
+            // Multi-byte scalar (`'§'`) is always a char literal;
+            // ASCII `'x'` is one only when a quote closes it.
+            let multibyte = b[j] >= 0x80;
+            let closes_ascii = b[j] != b'\'' && j + 1 < n && b[j + 1] == b'\'';
+            if multibyte || closes_ascii {
+                let mut k = j;
+                while k < n && b[k] != b'\'' {
+                    k += 1;
+                }
+                k = (k + 1).min(n);
+                out.push(b'\'');
+                blank(&mut out, &b[i + 1..k.saturating_sub(1).max(i + 1)]);
+                if k > i + 1 {
+                    out.push(b'\'');
+                }
+                i = k;
+                continue;
+            }
+            // Lifetime (or a stray quote): pass through.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+
+        out.push(c);
+        i += 1;
+    }
+
+    // Masked regions are all-ASCII; code regions are copied verbatim,
+    // so the byte stream is valid UTF-8 whenever the input was.
+    String::from_utf8(out).unwrap_or_default()
+}
+
+/// Byte spans of test-only code in the masked source: every item
+/// annotated `#[cfg(test)]` or `#[test]`, brace-matched. Overlapping
+/// spans (a `#[test]` fn inside a `#[cfg(test)]` mod) are fine — rule
+/// checks treat membership in *any* span as "test code".
+pub fn test_regions(masked: &str) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let b = masked.as_bytes();
+    for marker in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(rel) = masked[from..].find(marker) {
+            let at = from + rel;
+            from = at + marker.len();
+            if let Some(span) = item_span_after(b, at, from) {
+                spans.push(span);
+            }
+        }
+    }
+    spans
+}
+
+/// From the end of an attribute, skip whitespace and further
+/// attributes, then brace-match the item body. Returns `None` when the
+/// item has no body (e.g. the attribute sits on a `use`).
+fn item_span_after(b: &[u8], attr_start: usize, attr_end: usize) -> Option<Span> {
+    let n = b.len();
+    let mut i = attr_end;
+    while i < n {
+        let c = b[i];
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == b'#' && i + 1 < n && b[i + 1] == b'[' {
+            // Skip a following attribute, bracket-matched.
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            while j < n {
+                match b[j] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            i = (j + 1).min(n);
+            continue;
+        }
+        break;
+    }
+    // Scan the item header to its opening brace; a `;` first means a
+    // body-less item.
+    while i < n {
+        match b[i] {
+            b'{' => break,
+            b';' => return None,
+            _ => i += 1,
+        }
+    }
+    if i >= n {
+        return None;
+    }
+    let mut depth = 0usize;
+    let mut j = i;
+    while j < n {
+        match b[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(Span { start: attr_start, end: j + 1 });
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    Some(Span { start: attr_start, end: n })
+}
+
+/// 1-indexed line number of a byte offset.
+pub fn line_of(src: &str, pos: usize) -> usize {
+    let upto = pos.min(src.len());
+    src.as_bytes()[..upto].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// Find every occurrence of `token` in the masked source. When
+/// `word_boundary` is set, occurrences glued to identifier characters
+/// on either side are skipped (so `HashMap` does not match
+/// `MyHashMapExt`).
+pub fn find_token(masked: &str, token: &str, word_boundary: bool) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let b = masked.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = masked[from..].find(token) {
+        let at = from + rel;
+        from = at + token.len().max(1);
+        if word_boundary {
+            let before_ok = at == 0 || !is_ident_byte(b[at - 1]);
+            let after = at + token.len();
+            let after_ok = after >= b.len() || !is_ident_byte(b[after]);
+            if !(before_ok && after_ok) {
+                continue;
+            }
+        }
+        hits.push(at);
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let src = "let x = 1; // panic!\nlet s = \"unwrap() inside\";\n/* block\npanic! */ call();";
+        let m = mask_source(src);
+        assert_eq!(m.len(), src.len());
+        assert!(!m.contains("panic!"));
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains("let x = 1;"));
+        assert!(m.contains("call();"));
+        // Newlines survive so line numbers stay aligned.
+        assert_eq!(m.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn masks_raw_and_byte_strings() {
+        let src = "let a = r#\"raw panic! {\"#; let b = b\"bytes unwrap()\"; let c = r\"x{\";";
+        let m = mask_source(src);
+        assert!(!m.contains("panic!"));
+        assert!(!m.contains("unwrap"));
+        assert!(!m.contains('{'), "literal braces must be blanked: {m}");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let q = '\"'; let e = '\\''; let z = 'y'; }";
+        let m = mask_source(src);
+        // The double-quote char literal must not open a string.
+        assert!(m.contains("let z ="));
+        assert!(!m.contains('"'), "quote char literal interior must be blanked");
+        assert!(m.contains("<'a>"), "lifetimes pass through: {m}");
+    }
+
+    #[test]
+    fn unicode_in_comments_is_blanked_per_byte() {
+        let src = "x(); // §3.5 — bound ≤ 1.25× target\ny();";
+        let m = mask_source(src);
+        assert_eq!(m.len(), src.len());
+        assert!(m.contains("x();"));
+        assert!(m.contains("y();"));
+        assert!(m.is_ascii());
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = "fn lib() { a(); }\n#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { b(); }\n}\nfn lib2() {}";
+        let m = mask_source(src);
+        let regions = test_regions(&m);
+        assert_eq!(regions.len(), 2, "cfg(test) mod + inner #[test] fn");
+        let b_pos = m.find("b();").unwrap_or(usize::MAX);
+        assert!(regions.iter().any(|r| r.contains(b_pos)));
+        let a_pos = m.find("a();").unwrap_or(usize::MAX);
+        assert!(!regions.iter().any(|r| r.contains(a_pos)));
+    }
+
+    #[test]
+    fn token_word_boundaries() {
+        let m = "use std::collections::HashMap; struct MyHashMapExt;".to_string();
+        assert_eq!(find_token(&m, "HashMap", true).len(), 1);
+        assert_eq!(find_token(&m, "HashMap", false).len(), 2);
+    }
+
+    #[test]
+    fn line_numbers() {
+        let src = "a\nb\nc";
+        assert_eq!(line_of(src, 0), 1);
+        assert_eq!(line_of(src, 2), 2);
+        assert_eq!(line_of(src, 4), 3);
+    }
+}

@@ -1,0 +1,593 @@
+//! `pallas-lint` — the repo-native invariant linter.
+//!
+//! Every headline property of this reproduction (byte-identical
+//! serial/sharded/incremental reports, the deterministic `TargetError`
+//! trajectory, restore equivalence) rests on source-level disciplines
+//! that dynamic gates can only spot-check. This module makes them
+//! machine-checked. The workspace is offline, so there is no `syn`:
+//! [`lexer`] blanks comments and literal interiors, and the rules are
+//! scoped token scans plus brace-matched test-region detection over the
+//! masked text.
+//!
+//! Rules (each documented in its own module):
+//!
+//! * [`determinism`] — no wall-clock reads, no unordered hash-container
+//!   use, in the determinism-critical cone;
+//! * [`panic_free`] — library code routes failures through
+//!   [`crate::error::Error`], never the panic family;
+//! * [`flat_substrate`] — substrate modules must not reference the
+//!   query registry (the PR 3 flat-scaling invariant);
+//! * [`wire_schema`] — a digest over the checkpoint wire layer pinned
+//!   per `checkpoint::VERSION`, so wire edits without a version bump
+//!   fail statically.
+//!
+//! **Pragmas.** A finding can be suppressed — auditedly — with a
+//! comment on the offending line or the line above:
+//!
+//! ```text
+//! // lint:allow(panic-freedom) -- Vec<u8> sink is infallible
+//! ```
+//!
+//! The reason after `--` is mandatory; unknown rule names and malformed
+//! pragmas are themselves diagnostics (rule `pragma`), and pragmas that
+//! suppress nothing are reported as non-failing warnings. Every pragma
+//! is listed in the JSON report, so the escape hatch stays reviewable.
+//!
+//! Entry points: [`check_source`] lints one in-memory file under a
+//! virtual path (how the fixture corpus drives the rules) and [`run`]
+//! walks a real `src/` tree, adds the wire-schema check, and returns a
+//! [`LintReport`] that renders as text or JSON
+//! (`target/lint-results/pallas-lint.json` in CI). The gate is
+//! `tests/lint_clean.rs`: the tree must produce zero diagnostics.
+
+use std::cell::Cell;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+pub mod determinism;
+pub mod flat_substrate;
+pub mod lexer;
+pub mod panic_free;
+pub mod wire_schema;
+
+/// Rule name: determinism cone (clocks, unordered containers).
+pub const RULE_DETERMINISM: &str = "determinism";
+/// Rule name: no panic family in library code.
+pub const RULE_PANIC_FREEDOM: &str = "panic-freedom";
+/// Rule name: substrate modules must not know queries exist.
+pub const RULE_FLAT_SUBSTRATE: &str = "flat-substrate";
+/// Rule name: checkpoint wire digest vs the pinned golden.
+pub const RULE_WIRE_SCHEMA: &str = "wire-schema";
+/// Rule name: malformed / unknown / unused suppression pragmas.
+pub const RULE_PRAGMA: &str = "pragma";
+
+/// Rules a pragma may name (the positional, per-line rules; the
+/// wire-schema rule has its own escape hatch — re-pinning the golden).
+pub const SUPPRESSIBLE_RULES: [&str; 3] =
+    [RULE_DETERMINISM, RULE_PANIC_FREEDOM, RULE_FLAT_SUBSTRATE];
+
+// Assembled from pieces so the linter's own sources never contain the
+// contiguous marker — the pragma scan reads raw lines (pragmas *are*
+// comments), so a literal occurrence in a message string would
+// self-flag when the tree lints itself.
+const MARKER: &str = concat!("lint", ":allow(");
+
+/// One finding: where, which rule, and what to do about it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule that fired (one of the `RULE_*` constants).
+    pub rule: &'static str,
+    /// Virtual path, relative to `src/`, forward slashes.
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    /// Human-oriented explanation with the remediation.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// One audited suppression pragma, for the report's escape-hatch list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PragmaAudit {
+    /// Virtual path of the file holding the pragma.
+    pub file: String,
+    /// 1-indexed line of the pragma comment.
+    pub line: usize,
+    /// Rules it names.
+    pub rules: Vec<String>,
+    /// The mandatory justification after `--`.
+    pub reason: String,
+    /// Whether it suppressed at least one finding.
+    pub used: bool,
+}
+
+/// A parsed, well-formed pragma awaiting use.
+struct Pragma {
+    line: usize,
+    rules: Vec<String>,
+    reason: String,
+    used: Cell<bool>,
+}
+
+/// One source file prepared for rule checks: raw text, masked text,
+/// test-region spans, and its suppression pragmas.
+pub struct SourceFile {
+    /// Virtual path relative to `src/`, forward slashes (rules scope on
+    /// prefixes of this).
+    pub path: String,
+    /// Masked source: comments and literal interiors blanked, byte
+    /// offsets and newlines preserved (see [`lexer::mask_source`]).
+    pub masked: String,
+    tests: Vec<lexer::Span>,
+    pragmas: Vec<Pragma>,
+}
+
+impl SourceFile {
+    /// Prepare a file for linting. Returns the prepared file plus any
+    /// malformed-pragma diagnostics found while parsing.
+    pub fn new(path: &str, source: &str) -> (SourceFile, Vec<Diagnostic>) {
+        let masked = lexer::mask_source(source);
+        let tests = lexer::test_regions(&masked);
+        let (pragmas, diags) = parse_pragmas(path, source, &tests);
+        (SourceFile { path: path.to_string(), masked, tests, pragmas }, diags)
+    }
+
+    /// Whether the byte offset falls inside a `#[cfg(test)]` /
+    /// `#[test]` item.
+    pub fn in_test_region(&self, pos: usize) -> bool {
+        self.tests.iter().any(|s| s.contains(pos))
+    }
+
+    /// Record a finding at byte offset `pos` unless a well-formed
+    /// pragma naming `rule` covers its line (the pragma's own line or
+    /// the one right below it).
+    pub fn push_unless_allowed(
+        &self,
+        out: &mut Vec<Diagnostic>,
+        rule: &'static str,
+        pos: usize,
+        message: String,
+    ) {
+        let line = lexer::line_of(&self.masked, pos);
+        for p in &self.pragmas {
+            if (p.line == line || p.line + 1 == line) && p.rules.iter().any(|r| r == rule) {
+                p.used.set(true);
+                return;
+            }
+        }
+        out.push(Diagnostic { rule, file: self.path.clone(), line, message });
+    }
+}
+
+/// Scan raw lines for suppression pragmas. Lines inside test regions
+/// are skipped (test code is exempt from every positional rule, so a
+/// pragma there could only ever be noise). Assumes LF line endings, as
+/// the tree uses throughout.
+fn parse_pragmas(
+    path: &str,
+    source: &str,
+    tests: &[lexer::Span],
+) -> (Vec<Pragma>, Vec<Diagnostic>) {
+    let mut pragmas = Vec::new();
+    let mut diags = Vec::new();
+    let mut offset = 0usize;
+    for (idx, line) in source.lines().enumerate() {
+        let lineno = idx + 1;
+        let line_start = offset;
+        offset += line.len() + 1;
+        if tests.iter().any(|s| s.contains(line_start)) {
+            continue;
+        }
+        // Doc comments may *show* the pragma syntax (this module's own
+        // docs do); they can never carry a live pragma.
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("///") || trimmed.starts_with("//!") {
+            continue;
+        }
+        let Some(at) = line.find(MARKER) else {
+            continue;
+        };
+        let mut bad = |msg: String| {
+            diags.push(Diagnostic {
+                rule: RULE_PRAGMA,
+                file: path.to_string(),
+                line: lineno,
+                message: msg,
+            });
+        };
+        if !line[..at].contains("//") {
+            bad(format!("`{MARKER}…)` must sit in a `//` comment"));
+            continue;
+        }
+        let after = &line[at + MARKER.len()..];
+        let Some(close) = after.find(')') else {
+            bad(format!("unterminated `{MARKER}…)` pragma"));
+            continue;
+        };
+        let rules: Vec<String> = after[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        if rules.is_empty() {
+            bad("pragma names no rules".to_string());
+            continue;
+        }
+        if let Some(unknown) = rules.iter().find(|r| !SUPPRESSIBLE_RULES.contains(&r.as_str())) {
+            bad(format!(
+                "pragma names unknown rule `{unknown}` (suppressible: {})",
+                SUPPRESSIBLE_RULES.join(", ")
+            ));
+            continue;
+        }
+        let rest = after[close + 1..].trim_start();
+        let Some(reason) = rest.strip_prefix("--") else {
+            bad("pragma is missing its mandatory `-- <reason>`".to_string());
+            continue;
+        };
+        let reason = reason.trim();
+        if reason.is_empty() {
+            bad("pragma has an empty `-- <reason>`".to_string());
+            continue;
+        }
+        pragmas.push(Pragma {
+            line: lineno,
+            rules,
+            reason: reason.to_string(),
+            used: Cell::new(false),
+        });
+    }
+    (pragmas, diags)
+}
+
+/// The outcome of linting one file.
+#[derive(Debug, Clone, Default)]
+pub struct FileReport {
+    /// Failing findings (including malformed pragmas).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Non-failing findings (currently: unused pragmas).
+    pub warnings: Vec<Diagnostic>,
+    /// Every well-formed pragma, used or not, for the audit trail.
+    pub pragmas: Vec<PragmaAudit>,
+}
+
+/// Lint one in-memory source under a virtual path (e.g.
+/// `"sampling/fixture.rs"` to place it inside the determinism cone).
+/// This is the whole positional-rule engine; [`run`] adds the
+/// tree walk and the wire-schema check on top.
+pub fn check_source(path: &str, source: &str) -> FileReport {
+    let (file, mut diagnostics) = SourceFile::new(path, source);
+    diagnostics.extend(determinism::check(&file));
+    diagnostics.extend(panic_free::check(&file));
+    diagnostics.extend(flat_substrate::check(&file));
+    let mut warnings = Vec::new();
+    let mut pragmas = Vec::new();
+    for p in &file.pragmas {
+        let used = p.used.get();
+        if !used {
+            warnings.push(Diagnostic {
+                rule: RULE_PRAGMA,
+                file: file.path.clone(),
+                line: p.line,
+                message: format!(
+                    "unused `{MARKER}{})` pragma — it suppresses nothing; remove it",
+                    p.rules.join(", ")
+                ),
+            });
+        }
+        pragmas.push(PragmaAudit {
+            file: file.path.clone(),
+            line: p.line,
+            rules: p.rules.clone(),
+            reason: p.reason.clone(),
+            used,
+        });
+    }
+    FileReport { diagnostics, warnings, pragmas }
+}
+
+/// The aggregate outcome of linting a tree.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Number of `.rs` files checked.
+    pub files_checked: usize,
+    /// Failing findings across all files + the wire-schema check.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Non-failing findings (unused pragmas).
+    pub warnings: Vec<Diagnostic>,
+    /// The audited escape hatches.
+    pub pragmas: Vec<PragmaAudit>,
+    /// Current [`wire_schema::schema_digest`] of the checkpoint layer.
+    pub wire_digest: u64,
+    /// `checkpoint::VERSION` as parsed from source, if found.
+    pub wire_version: Option<u32>,
+}
+
+impl LintReport {
+    /// Whether the tree passes (warnings do not fail the gate).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-oriented rendering: one line per finding, then the
+    /// summary and the pragma audit.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&format!("error: {d}\n"));
+        }
+        for w in &self.warnings {
+            s.push_str(&format!("warning: {w}\n"));
+        }
+        for p in &self.pragmas {
+            if p.used {
+                s.push_str(&format!(
+                    "allowed: {}:{}: [{}] {}\n",
+                    p.file,
+                    p.line,
+                    p.rules.join(", "),
+                    p.reason
+                ));
+            }
+        }
+        let version = match self.wire_version {
+            Some(v) => v.to_string(),
+            None => "?".to_string(),
+        };
+        s.push_str(&format!(
+            "pallas-lint: {} files, {} error(s), {} warning(s), {} pragma(s); \
+             wire v{version} digest {:#018x}\n",
+            self.files_checked,
+            self.diagnostics.len(),
+            self.warnings.len(),
+            self.pragmas.len(),
+            self.wire_digest,
+        ));
+        s
+    }
+
+    /// Hand-rolled JSON rendering (the workspace is offline — no
+    /// serde), written to `target/lint-results/pallas-lint.json` by the
+    /// binary and uploaded as a CI artifact.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        fn diag_json(d: &Diagnostic) -> String {
+            format!(
+                "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                esc(d.rule),
+                esc(&d.file),
+                d.line,
+                esc(&d.message)
+            )
+        }
+        let diags: Vec<String> = self.diagnostics.iter().map(diag_json).collect();
+        let warns: Vec<String> = self.warnings.iter().map(diag_json).collect();
+        let pragmas: Vec<String> = self
+            .pragmas
+            .iter()
+            .map(|p| {
+                let rules: Vec<String> =
+                    p.rules.iter().map(|r| format!("\"{}\"", esc(r))).collect();
+                format!(
+                    "{{\"file\":\"{}\",\"line\":{},\"rules\":[{}],\"reason\":\"{}\",\"used\":{}}}",
+                    esc(&p.file),
+                    p.line,
+                    rules.join(","),
+                    esc(&p.reason),
+                    p.used
+                )
+            })
+            .collect();
+        let version = match self.wire_version {
+            Some(v) => v.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"tool\":\"pallas-lint\",\"files_checked\":{},\"clean\":{},\
+             \"wire\":{{\"version\":{version},\"digest\":\"{:#018x}\"}},\
+             \"diagnostics\":[{}],\"warnings\":[{}],\"pragmas\":[{}]}}\n",
+            self.files_checked,
+            self.is_clean(),
+            self.wire_digest,
+            diags.join(","),
+            warns.join(","),
+            pragmas.join(",")
+        )
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by path so the
+/// report order is deterministic.
+fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if entry.file_type()?.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// `src/`-relative virtual path with forward slashes, for scoping and
+/// display.
+fn virtual_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+/// Lint a real `src/` tree: every `.rs` file through the positional
+/// rules, plus the wire-schema digest check against the pinned golden.
+/// Diagnostics come back sorted by (file, line, rule).
+pub fn run(src_root: &Path) -> crate::error::Result<LintReport> {
+    let files = collect_rs_files(src_root)?;
+    let mut report = LintReport { files_checked: files.len(), ..LintReport::default() };
+    for path in &files {
+        let source = std::fs::read_to_string(path)?;
+        let fr = check_source(&virtual_path(src_root, path), &source);
+        report.diagnostics.extend(fr.diagnostics);
+        report.warnings.extend(fr.warnings);
+        report.pragmas.extend(fr.pragmas);
+    }
+    let wire = std::fs::read_to_string(src_root.join(wire_schema::WIRE_PATH))?;
+    let module = std::fs::read_to_string(src_root.join(wire_schema::MOD_PATH))?;
+    report.wire_digest = wire_schema::schema_digest(wire.as_bytes(), module.as_bytes());
+    report.wire_version = wire_schema::parse_version(&module);
+    match std::fs::read_to_string(src_root.join(wire_schema::GOLDEN_PATH)) {
+        Ok(golden) => {
+            report.diagnostics.extend(wire_schema::check_sources(&wire, &module, &golden));
+        }
+        Err(_) => report.diagnostics.push(Diagnostic {
+            rule: RULE_WIRE_SCHEMA,
+            file: wire_schema::GOLDEN_PATH.to_string(),
+            line: 1,
+            message: "missing wire-schema golden; pin it with \
+                      `cargo run --bin pallas-lint -- --update-wire-golden`"
+                .to_string(),
+        }),
+    }
+    report.diagnostics.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pragma markers in these fixture strings are assembled with
+    // `concat!` so this file's raw bytes never contain the contiguous
+    // marker (the pragma scan reads raw lines).
+
+    #[test]
+    fn determinism_fires_in_cone_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(check_source("sampling/x.rs", src).diagnostics.len(), 1);
+        assert!(check_source("workload/x.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn clock_fires_outside_allowlist_only() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        let d = check_source("budget/x.rs", src).diagnostics;
+        assert!(!d.is_empty());
+        assert!(d.iter().all(|d| d.rule == RULE_DETERMINISM));
+        assert!(check_source("metrics/x.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_line_below_and_is_audited() {
+        let src = concat!(
+            "// lint",
+            ":allow(determinism) -- fixture justification\n",
+            "use std::collections::HashMap;\n"
+        );
+        let fr = check_source("sampling/x.rs", src);
+        assert!(fr.diagnostics.is_empty(), "{:?}", fr.diagnostics);
+        assert!(fr.warnings.is_empty());
+        assert_eq!(fr.pragmas.len(), 1);
+        assert!(fr.pragmas[0].used);
+        assert_eq!(fr.pragmas[0].reason, "fixture justification");
+    }
+
+    #[test]
+    fn pragma_suppresses_same_line() {
+        let src = concat!(
+            "fn f() { x.unwrap(); } // lint",
+            ":allow(panic-freedom) -- fixture\n"
+        );
+        let fr = check_source("classify/x.rs", src);
+        assert!(fr.diagnostics.is_empty(), "{:?}", fr.diagnostics);
+    }
+
+    #[test]
+    fn malformed_pragmas_are_diagnostics() {
+        let missing_reason = concat!("// lint", ":allow(determinism)\n");
+        let unknown_rule = concat!("// lint", ":allow(speed) -- because\n");
+        let empty_rules = concat!("// lint", ":allow() -- because\n");
+        for src in [missing_reason, unknown_rule, empty_rules] {
+            let fr = check_source("window/x.rs", src);
+            assert_eq!(fr.diagnostics.len(), 1, "{src:?}");
+            assert_eq!(fr.diagnostics[0].rule, RULE_PRAGMA);
+        }
+    }
+
+    #[test]
+    fn unused_pragma_warns_without_failing() {
+        let src = concat!("// lint", ":allow(determinism) -- nothing here\n", "fn ok() {}\n");
+        let fr = check_source("window/x.rs", src);
+        assert!(fr.diagnostics.is_empty());
+        assert_eq!(fr.warnings.len(), 1);
+        assert_eq!(fr.warnings[0].rule, RULE_PRAGMA);
+        assert!(!fr.pragmas[0].used);
+    }
+
+    #[test]
+    fn panic_family_exempt_in_test_regions() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { \
+                   let v: Vec<u32> = vec![]; v.first().unwrap(); panic!(\"boom\"); }\n}\n";
+        let fr = check_source("stats/x.rs", src);
+        assert!(fr.diagnostics.is_empty(), "{:?}", fr.diagnostics);
+    }
+
+    #[test]
+    fn panic_family_fires_in_library_code() {
+        let src = "fn lib(v: &[u32]) -> u32 { *v.first().unwrap() }\n";
+        let fr = check_source("stats/x.rs", src);
+        assert_eq!(fr.diagnostics.len(), 1);
+        assert_eq!(fr.diagnostics[0].rule, RULE_PANIC_FREEDOM);
+        assert_eq!(fr.diagnostics[0].line, 1);
+    }
+
+    #[test]
+    fn flat_substrate_bans_registry_symbols() {
+        let src = "use crate::coordinator::query::QuerySpec;\n";
+        let fr = check_source("window/x.rs", src);
+        assert_eq!(fr.diagnostics.len(), 1);
+        assert_eq!(fr.diagnostics[0].rule, RULE_FLAT_SUBSTRATE);
+        assert!(check_source("coordinator/x.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let mut report = LintReport::default();
+        report.diagnostics.push(Diagnostic {
+            rule: RULE_PRAGMA,
+            file: "a/b.rs".to_string(),
+            line: 3,
+            message: "quote \" backslash \\ done".to_string(),
+        });
+        let json = report.to_json();
+        assert!(json.contains("\"clean\":false"));
+        assert!(json.contains("quote \\\" backslash \\\\ done"));
+    }
+}

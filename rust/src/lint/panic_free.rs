@@ -1,0 +1,69 @@
+//! Rule `panic-freedom` — library code routes failures through
+//! [`crate::error::Error`], never through a panic.
+//!
+//! The fault-isolation invariant (ARCHITECTURE.md) promises that
+//! injected and organic failures surface as typed errors; a stray
+//! `unwrap()` on a path the chaos campaigns happen not to exercise
+//! turns a recoverable condition into an abort. This rule bans the
+//! panic family — `.unwrap()`, `.expect(…)`, `panic!`, `unreachable!`,
+//! `todo!`, `unimplemented!` — in library code.
+//!
+//! Out of scope by construction:
+//!
+//! * **test regions** (`#[cfg(test)]` / `#[test]` items) — panicking is
+//!   how Rust tests fail, and extractor-style `assert!(matches!(…))`
+//!   patterns are idiomatic there;
+//! * **`bench_harness.rs`** and **`runtime/`** — offline tooling and
+//!   the feature-gated PJRT boundary, where aborting on a broken
+//!   environment is the right behavior;
+//! * `assert!` / `debug_assert!` — stating an invariant is fine; the
+//!   rule targets *control flow* that reaches a panic on bad input.
+//!
+//! Escape hatch (audited): `// lint:allow(panic-freedom) -- <reason>`,
+//! e.g. for an infallible `Vec<u8>` sink or a documented panicking
+//! accessor with a non-panicking sibling.
+
+use super::lexer;
+use super::{Diagnostic, SourceFile};
+
+/// Files where aborting is acceptable: the bench harness is offline
+/// tooling, and `runtime/` is the feature-gated PJRT FFI boundary.
+pub const PANIC_ALLOWED: [&str; 2] = ["bench_harness.rs", "runtime/"];
+
+/// `(token, word_boundary)` — dotted call tokens carry their own
+/// delimiters (the receiver before `.` is an identifier, so a word
+/// boundary would reject every real hit); macro tokens use boundaries
+/// so `my_unreachable!`-style names cannot false-positive.
+const TOKENS: [(&str, bool); 6] = [
+    (".unwrap()", false),
+    (".expect(", false),
+    ("panic!", true),
+    ("unreachable!", true),
+    ("todo!", true),
+    ("unimplemented!", true),
+];
+
+/// Run the rule over one file.
+pub fn check(file: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if PANIC_ALLOWED.iter().any(|p| file.path.starts_with(p)) {
+        return out;
+    }
+    for (token, boundary) in TOKENS {
+        for pos in lexer::find_token(&file.masked, token, boundary) {
+            if file.in_test_region(pos) {
+                continue;
+            }
+            file.push_unless_allowed(
+                &mut out,
+                super::RULE_PANIC_FREEDOM,
+                pos,
+                format!(
+                    "`{token}` in library code; route the failure through \
+                     error::Error (or state the invariant with debug_assert!)"
+                ),
+            );
+        }
+    }
+    out
+}

@@ -1,0 +1,221 @@
+//! Rule `wire-schema` — any edit to the checkpoint wire layer must be
+//! acknowledged with a `checkpoint::VERSION` bump (or an explicit
+//! golden re-pin).
+//!
+//! The artifact format is hand-rolled (`checkpoint/wire.rs` primitives,
+//! segment tags matched inline in `checkpoint/mod.rs`), so there is no
+//! schema file a reviewer can diff. This rule synthesizes one: a
+//! [`schema_digest`] over the **raw bytes** of both files, pinned next
+//! to the `VERSION` it was taken at in `lint/wire_schema.golden`.
+//!
+//! * digest differs, `VERSION` unchanged → the wire layer moved without
+//!   a version bump: fail.
+//! * `VERSION` differs from the golden's → the bump happened but the
+//!   golden is stale: fail with a pointer to `--update-wire-golden`.
+//!
+//! Digesting raw bytes is deliberately conservative: comment-only edits
+//! also require a re-pin. That is the point — *every* change to the
+//! wire layer gets an explicit acknowledgment in the diff, the same way
+//! a golden-vector test pins behavior. Re-pin with
+//! `cargo run --bin pallas-lint -- --update-wire-golden`.
+
+use super::lexer;
+use super::Diagnostic;
+
+/// Virtual path diagnostics attach to (the golden lives beside the lint
+/// module, the digest covers the checkpoint layer).
+pub const WIRE_PATH: &str = "checkpoint/wire.rs";
+/// Virtual path of the segment/tag half of the digest.
+pub const MOD_PATH: &str = "checkpoint/mod.rs";
+/// Where the golden is pinned, relative to `src/`.
+pub const GOLDEN_PATH: &str = "lint/wire_schema.golden";
+
+/// The pinned schema fingerprint: the `checkpoint::VERSION` it was
+/// taken at, and the [`schema_digest`] of the wire layer at that point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Golden {
+    /// `checkpoint::VERSION` at pin time.
+    pub version: u32,
+    /// [`schema_digest`] at pin time.
+    pub digest: u64,
+}
+
+/// Order-dependent digest of the two wire-layer sources: the fnv1a hash
+/// of each file's raw bytes folded through [`StableHasher`]
+/// (`crate::util::hash`), so the fingerprint inherits the same pinned,
+/// platform-independent behavior as the memo keys.
+pub fn schema_digest(wire: &[u8], module: &[u8]) -> u64 {
+    use crate::util::hash::{fnv1a, StableHasher};
+    let mut h = StableHasher::new();
+    h.write_u64(fnv1a(wire));
+    h.write_u64(fnv1a(module));
+    h.finish()
+}
+
+/// Extract `const VERSION: u32 = N;` from `checkpoint/mod.rs` source
+/// (comments masked first, so prose mentioning the constant cannot
+/// confuse the scan). `None` when the declaration is missing.
+pub fn parse_version(mod_src: &str) -> Option<u32> {
+    let masked = lexer::mask_source(mod_src);
+    let pat = "const VERSION: u32 =";
+    let at = masked.find(pat)?;
+    let rest = &masked[at + pat.len()..];
+    let end = rest.find(';')?;
+    rest[..end].trim().parse().ok()
+}
+
+/// Parse the golden file: `#` comments and blank lines ignored,
+/// `version = <dec>` and `digest = 0x<hex>` required.
+pub fn parse_golden(text: &str) -> Result<Golden, String> {
+    let mut version: Option<u32> = None;
+    let mut digest: Option<u64> = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("malformed golden line `{line}`"));
+        };
+        match key.trim() {
+            "version" => {
+                version = match value.trim().parse() {
+                    Ok(v) => Some(v),
+                    Err(_) => return Err(format!("bad version `{}`", value.trim())),
+                };
+            }
+            "digest" => {
+                let hex = value.trim().trim_start_matches("0x");
+                digest = match u64::from_str_radix(hex, 16) {
+                    Ok(d) => Some(d),
+                    Err(_) => return Err(format!("bad digest `{}`", value.trim())),
+                };
+            }
+            other => return Err(format!("unknown golden key `{other}`")),
+        }
+    }
+    match (version, digest) {
+        (Some(version), Some(digest)) => Ok(Golden { version, digest }),
+        _ => Err("golden must pin both `version` and `digest`".to_string()),
+    }
+}
+
+/// Render the golden file for `--update-wire-golden`.
+pub fn render_golden(version: u32, digest: u64) -> String {
+    format!(
+        "# pallas-lint wire-schema golden: fnv1a/StableHasher digest of the raw\n\
+         # bytes of checkpoint/wire.rs + checkpoint/mod.rs, pinned at the\n\
+         # checkpoint::VERSION it was taken for. Any edit to either file must\n\
+         # either bump VERSION or consciously re-pin:\n\
+         #   cargo run --bin pallas-lint -- --update-wire-golden\n\
+         version = {version}\n\
+         digest = {digest:#018x}\n"
+    )
+}
+
+/// Run the rule against in-memory sources + golden text. Pure, so
+/// fixture tests can feed a mutated `wire.rs` copy and assert the
+/// mismatch diagnostic without touching the real tree.
+pub fn check_sources(wire_src: &str, mod_src: &str, golden_text: &str) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let rule = super::RULE_WIRE_SCHEMA;
+    let golden = match parse_golden(golden_text) {
+        Ok(g) => g,
+        Err(e) => {
+            out.push(Diagnostic {
+                rule,
+                file: GOLDEN_PATH.to_string(),
+                line: 1,
+                message: format!("unreadable wire-schema golden: {e}"),
+            });
+            return out;
+        }
+    };
+    let Some(version) = parse_version(mod_src) else {
+        out.push(Diagnostic {
+            rule,
+            file: MOD_PATH.to_string(),
+            line: 1,
+            message: "cannot find `const VERSION: u32 = …;` in checkpoint/mod.rs".to_string(),
+        });
+        return out;
+    };
+    let digest = schema_digest(wire_src.as_bytes(), mod_src.as_bytes());
+    if version != golden.version {
+        out.push(Diagnostic {
+            rule,
+            file: GOLDEN_PATH.to_string(),
+            line: 1,
+            message: format!(
+                "checkpoint::VERSION is {version} but the golden pins {}; \
+                 re-pin with `cargo run --bin pallas-lint -- --update-wire-golden`",
+                golden.version
+            ),
+        });
+    } else if digest != golden.digest {
+        out.push(Diagnostic {
+            rule,
+            file: WIRE_PATH.to_string(),
+            line: 1,
+            message: format!(
+                "wire layer changed (digest {digest:#018x}, golden {:#018x}) without a \
+                 checkpoint::VERSION bump; bump VERSION for format changes, or re-pin \
+                 with `cargo run --bin pallas-lint -- --update-wire-golden` for \
+                 format-preserving edits",
+                golden.digest
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MOD_SRC: &str = "/// Artifact format revision.\npub(crate) const VERSION: u32 = 4;\n";
+
+    #[test]
+    fn digest_is_order_dependent_and_stable() {
+        let a = schema_digest(b"wire", b"module");
+        let b = schema_digest(b"module", b"wire");
+        assert_ne!(a, b);
+        assert_eq!(a, schema_digest(b"wire", b"module"));
+    }
+
+    #[test]
+    fn version_parses_through_comments() {
+        let src = "// the const VERSION: u32 = 99; in prose\npub(crate) const VERSION: u32 = 4;";
+        assert_eq!(parse_version(src), Some(4));
+        assert_eq!(parse_version("no decl here"), None);
+    }
+
+    #[test]
+    fn golden_round_trips() {
+        let g = Golden { version: 4, digest: 0x1234_5678_9abc_def0 };
+        let text = render_golden(g.version, g.digest);
+        assert_eq!(parse_golden(&text), Ok(g));
+        assert!(parse_golden("version = 4").is_err(), "digest required");
+        assert!(parse_golden("bogus line").is_err());
+    }
+
+    #[test]
+    fn matching_sources_pass_and_edits_fail() {
+        let wire = "fn u32_le() {}";
+        let digest = schema_digest(wire.as_bytes(), MOD_SRC.as_bytes());
+        let golden = render_golden(4, digest);
+        assert!(check_sources(wire, MOD_SRC, &golden).is_empty());
+
+        // Un-bumped edit → digest mismatch on the wire path.
+        let diags = check_sources("fn u32_be() {}", MOD_SRC, &golden);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].file, WIRE_PATH);
+        assert!(diags[0].message.contains("without a checkpoint::VERSION bump"));
+
+        // Bumped VERSION with a stale golden → re-pin diagnostic.
+        let bumped = MOD_SRC.replace("= 4;", "= 5;");
+        let diags = check_sources("fn u32_be() {}", &bumped, &golden);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].message.contains("re-pin"));
+    }
+}

@@ -6,8 +6,16 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
+
+/// Metrics are observational: a thread that panicked while holding a
+/// guard can only have left a partially updated sample buffer, which is
+/// still safe to read — so recover from poisoning instead of
+/// propagating the panic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Monotonic counter.
 #[derive(Debug, Default)]
@@ -51,17 +59,17 @@ impl Histogram {
 
     /// Record one observation.
     pub fn observe(&self, v: f64) {
-        self.samples.lock().unwrap().push(v);
+        lock(&self.samples).push(v);
     }
 
     /// Number of observations.
     pub fn count(&self) -> usize {
-        self.samples.lock().unwrap().len()
+        lock(&self.samples).len()
     }
 
     /// Mean of observations (0 if empty).
     pub fn mean(&self) -> f64 {
-        let s = self.samples.lock().unwrap();
+        let s = lock(&self.samples);
         if s.is_empty() {
             0.0
         } else {
@@ -71,18 +79,18 @@ impl Histogram {
 
     /// Quantile in [0, 1] by nearest-rank on the sorted samples.
     pub fn quantile(&self, q: f64) -> f64 {
-        let mut s = self.samples.lock().unwrap().clone();
+        let mut s = lock(&self.samples).clone();
         if s.is_empty() {
             return 0.0;
         }
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let idx = ((q.clamp(0.0, 1.0)) * (s.len() - 1) as f64).round() as usize;
         s[idx]
     }
 
     /// Reset.
     pub fn clear(&self) {
-        self.samples.lock().unwrap().clear();
+        lock(&self.samples).clear();
     }
 }
 
@@ -101,9 +109,7 @@ impl Registry {
 
     /// Get or create a counter.
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
-        self.counters
-            .lock()
-            .unwrap()
+        lock(&self.counters)
             .entry(name.to_string())
             .or_insert_with(|| std::sync::Arc::new(Counter::new()))
             .clone()
@@ -111,9 +117,7 @@ impl Registry {
 
     /// Get or create a histogram.
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
-        self.histograms
-            .lock()
-            .unwrap()
+        lock(&self.histograms)
             .entry(name.to_string())
             .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
             .clone()
@@ -122,10 +126,10 @@ impl Registry {
     /// Render a sorted text report.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for (name, c) in self.counters.lock().unwrap().iter() {
+        for (name, c) in lock(&self.counters).iter() {
             out.push_str(&format!("counter {name} = {}\n", c.get()));
         }
-        for (name, h) in self.histograms.lock().unwrap().iter() {
+        for (name, h) in lock(&self.histograms).iter() {
             out.push_str(&format!(
                 "histogram {name}: n={} mean={:.4} p50={:.4} p99={:.4}\n",
                 h.count(),

@@ -170,7 +170,7 @@ impl Ddg {
 
     /// Nodes *not* affected by the change set — the reuse set.
     pub fn reusable(&self, changed: &[NodeId]) -> Vec<NodeId> {
-        let affected: std::collections::HashSet<NodeId> =
+        let affected: crate::util::hash::FastSet<NodeId> =
             self.propagate(changed).into_iter().collect();
         (0..self.nodes.len())
             .map(NodeId)

@@ -58,14 +58,16 @@ pub fn allocate_proportional(
     shares.sort_by(|a, b| {
         let fa = a.1 - a.1.floor();
         let fb = b.1 - b.1.floor();
-        fb.partial_cmp(&fa).unwrap().then(a.0.cmp(&b.0))
+        fb.total_cmp(&fa).then(a.0.cmp(&b.0))
     });
     for (s, _) in shares {
         if leftover == 0 {
             break;
         }
-        *caps.get_mut(&s).expect("stratum present") += 1;
-        leftover -= 1;
+        if let Some(c) = caps.get_mut(&s) {
+            *c += 1;
+            leftover -= 1;
+        }
     }
     // Minority protection: every seen stratum gets ≥ 1 slot if possible,
     // taking slots from the largest allocations.
@@ -77,15 +79,18 @@ pub fn allocate_proportional(
                 break;
             }
             for s in zero {
-                let (&donor, _) = caps
-                    .iter()
-                    .max_by_key(|(_, &c)| c)
-                    .expect("non-empty caps");
-                if caps[&donor] <= 1 {
+                let Some((&donor, &donor_cap)) = caps.iter().max_by_key(|(_, &c)| c) else {
+                    break;
+                };
+                if donor_cap <= 1 {
                     break;
                 }
-                *caps.get_mut(&donor).expect("donor") -= 1;
-                *caps.get_mut(&s).expect("stratum") += 1;
+                if let Some(c) = caps.get_mut(&donor) {
+                    *c -= 1;
+                }
+                if let Some(c) = caps.get_mut(&s) {
+                    *c += 1;
+                }
             }
         }
     }
@@ -204,7 +209,7 @@ impl StratifiedSampler {
     fn reallocate(&mut self) {
         let caps = self.proportional_capacities();
         for (&s, cap) in &caps {
-            let st = self.sub.get_mut(&s).expect("stratum present");
+            let Some(st) = self.sub.get_mut(&s) else { continue };
             let cur = st.reservoir.len();
             if *cap < cur {
                 st.reservoir.evict_random(cur - *cap, &mut self.rng);

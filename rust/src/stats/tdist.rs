@@ -6,7 +6,7 @@
 //! is the same math). Quantiles are found by monotone bisection on the
 //! CDF — 80 iterations gives ~1e-13, far below statistical noise.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Mutex, OnceLock};
 
 use crate::error::{Error, Result};
@@ -18,7 +18,9 @@ use crate::stats::special::inc_beta;
 /// profile (EXPERIMENTS.md §Perf L3.2). Keyed by (p bits, df bits) after
 /// quantization: df > 100 is rounded to the nearest integer (the quantile
 /// changes by < 1e-6 per unit df there), smaller dfs are cached exactly.
-static QUANTILE_CACHE: OnceLock<Mutex<HashMap<(u64, u64), f64>>> = OnceLock::new();
+/// (BTreeMap, not a hash map: `stats/` sits in the determinism cone and
+/// the ordered map keeps even incidental iteration reproducible.)
+static QUANTILE_CACHE: OnceLock<Mutex<BTreeMap<(u64, u64), f64>>> = OnceLock::new();
 
 fn quantize_df(df: f64) -> f64 {
     if df > 100.0 {
@@ -57,8 +59,12 @@ pub fn t_quantile(p: f64, df: f64) -> Result<f64> {
     }
     let df = quantize_df(df);
     let key = (p.to_bits(), df.to_bits());
-    let cache = QUANTILE_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(&hit) = cache.lock().unwrap().get(&key) {
+    let cache = QUANTILE_CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    // A poisoned lock only means another thread panicked mid-insert; the
+    // cache holds plain f64s, so recover the guard rather than panic.
+    if let Some(&hit) =
+        cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key)
+    {
         return Ok(hit);
     }
     // Symmetric: solve for the upper tail and mirror.
@@ -83,7 +89,7 @@ pub fn t_quantile(p: f64, df: f64) -> Result<f64> {
     }
     let x = 0.5 * (lo + hi);
     let signed = if upper { x } else { -x };
-    let mut cache = cache.lock().unwrap();
+    let mut cache = cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     if cache.len() > 65_536 {
         cache.clear(); // unbounded-growth backstop; refills on demand
     }

@@ -76,6 +76,7 @@ impl WindowSnapshot {
     /// The full window view; panics when the snapshot was taken
     /// delta-only (use [`WindowSnapshot::full_view`] to probe).
     pub fn items(&self) -> &[Record] {
+        // lint:allow(panic-freedom) -- documented panicking accessor; full_view() is the probing sibling
         self.full_view().expect("window snapshot has no full view (delta-only slide)")
     }
 
@@ -126,12 +127,14 @@ impl CountWindow {
         self.buf.push_back(r);
     }
 
-    fn evict_front(&mut self) -> Record {
-        let r = self.buf.pop_front().expect("non-empty");
+    /// Pop the oldest buffered record, maintaining the min-timestamp
+    /// deque; `None` on an empty buffer.
+    fn evict_front(&mut self) -> Option<Record> {
+        let r = self.buf.pop_front()?;
         if self.min_ts.front().map_or(false, |&(_, id)| id == r.id) {
             self.min_ts.pop_front();
         }
-        r
+        Some(r)
     }
 
     /// Push one slide's worth of new items; returns the new window
@@ -150,7 +153,9 @@ impl CountWindow {
         for r in &batch {
             self.push(*r);
             if self.buf.len() > self.size {
-                removed.push(self.evict_front());
+                if let Some(evicted) = self.evict_front() {
+                    removed.push(evicted);
+                }
             }
         }
         let id = self.next_window_id;
@@ -179,7 +184,8 @@ impl CountWindow {
         self.size = new_size;
         let mut evicted = Vec::new();
         while self.buf.len() > self.size {
-            evicted.push(self.evict_front());
+            let Some(r) = self.evict_front() else { break };
+            evicted.push(r);
         }
         self.pending_removed.extend(evicted.iter().copied());
         evicted
@@ -300,7 +306,7 @@ impl TimeWindow {
             if front.timestamp >= start {
                 break;
             }
-            let r = self.buf.pop_front().expect("non-empty");
+            let Some(r) = self.buf.pop_front() else { break };
             if self.in_window > 0 {
                 self.in_window -= 1;
                 removed.push(r);
@@ -314,7 +320,7 @@ impl TimeWindow {
         // were already buffered ahead of the previous window's end are
         // picked up when the window reaches them.
         let inserted: Vec<Record> = self.buf.range(self.in_window..cut).copied().collect();
-        let start_ts = if cut > 0 { self.buf.front().expect("cut > 0").timestamp } else { 0 };
+        let start_ts = if cut > 0 { self.buf.front().map_or(0, |r| r.timestamp) } else { 0 };
         let items = materialize
             .then(|| self.buf.range(..cut).copied().collect::<Arc<[Record]>>());
         self.in_window = cut;

@@ -1,0 +1,46 @@
+//! Tier-1 gate: the tree lints itself.
+//!
+//! `pallas-lint`'s whole value is that `src/` stays clean — this test
+//! runs the full linter (positional rules + wire-schema digest) over
+//! the real source tree and fails on any diagnostic. On failure the
+//! rendered report is printed, including the current wire digest, so a
+//! legitimate wire change is a one-command fix:
+//! `cargo run --bin pallas-lint -- --update-wire-golden`.
+
+use std::path::Path;
+
+#[test]
+fn source_tree_lints_clean() {
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let report = incapprox::lint::run(Path::new(src)).expect("lint walk failed");
+    assert!(report.files_checked > 0, "lint walked an empty tree");
+    assert!(
+        report.is_clean(),
+        "pallas-lint found {} diagnostic(s):\n{}\ncurrent wire digest: {:#018x} \
+         (if the wire change is intentional, bump checkpoint::VERSION and run \
+         `cargo run --bin pallas-lint -- --update-wire-golden`)",
+        report.diagnostics.len(),
+        report.render_text(),
+        report.wire_digest,
+    );
+}
+
+#[test]
+fn wire_version_is_parsed() {
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let report = incapprox::lint::run(Path::new(src)).expect("lint walk failed");
+    assert!(
+        report.wire_version.is_some(),
+        "checkpoint::VERSION not found — the wire-schema rule is blind without it"
+    );
+}
+
+#[test]
+fn every_pragma_in_tree_is_used_and_reasoned() {
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let report = incapprox::lint::run(Path::new(src)).expect("lint walk failed");
+    for p in &report.pragmas {
+        assert!(p.used, "unused pragma at {}:{}", p.file, p.line);
+        assert!(!p.reason.is_empty(), "empty reason at {}:{}", p.file, p.line);
+    }
+}

@@ -1,0 +1,205 @@
+//! Fixture corpus for `pallas-lint`: every rule has at least one
+//! true-positive and one true-negative fixture under
+//! `tests/lint_fixtures/` (data files, never compiled), driven through
+//! [`incapprox::lint::check_source`] under virtual paths that place
+//! them in (or out of) each rule's scope. The wire-schema rule is
+//! exercised with a byte-order-mutated copy of the real
+//! `checkpoint/wire.rs`.
+
+use incapprox::lint::{self, wire_schema};
+
+/// Read a fixture data file from `tests/lint_fixtures/`.
+fn fixture(name: &str) -> String {
+    let path = format!("{}/tests/lint_fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("cannot read {path}: {e}"))
+}
+
+/// Read a real source file from `src/`.
+fn real_src(rel: &str) -> String {
+    let path = format!("{}/src/{rel}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("cannot read {path}: {e}"))
+}
+
+// ---- determinism ---------------------------------------------------------
+
+#[test]
+fn determinism_true_positive() {
+    let fr = lint::check_source("sampling/fx.rs", &fixture("determinism_tp.rs"));
+    assert_eq!(fr.diagnostics.len(), 7, "{:#?}", fr.diagnostics);
+    assert!(fr.diagnostics.iter().all(|d| d.rule == lint::RULE_DETERMINISM));
+    // Both token families fire: containers and clocks.
+    assert!(fr.diagnostics.iter().any(|d| d.message.contains("HashMap")));
+    assert!(fr.diagnostics.iter().any(|d| d.message.contains("Instant::now")));
+}
+
+#[test]
+fn determinism_true_negative() {
+    let fr = lint::check_source("sampling/fx.rs", &fixture("determinism_tn.rs"));
+    assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
+}
+
+#[test]
+fn determinism_containers_scoped_to_cone() {
+    // The same true-positive fixture outside the cone: the container
+    // findings vanish; only the clock findings remain (those apply
+    // everywhere off the clock allowlist).
+    let fr = lint::check_source("workload/fx.rs", &fixture("determinism_tp.rs"));
+    assert!(fr.diagnostics.iter().all(|d| {
+        !d.message.contains("HashMap") && !d.message.contains("HashSet")
+    }));
+    assert!(fr.diagnostics.iter().any(|d| d.message.contains("Instant::now")));
+    // And on the clock allowlist, nothing at all.
+    let fr = lint::check_source("metrics/fx.rs", &fixture("determinism_tp.rs"));
+    assert!(fr.diagnostics.iter().all(|d| !d.message.contains("Instant::now")));
+}
+
+// ---- panic-freedom -------------------------------------------------------
+
+#[test]
+fn panic_freedom_true_positive() {
+    let fr = lint::check_source("classify/fx.rs", &fixture("panic_tp.rs"));
+    assert_eq!(fr.diagnostics.len(), 5, "{:#?}", fr.diagnostics);
+    assert!(fr.diagnostics.iter().all(|d| d.rule == lint::RULE_PANIC_FREEDOM));
+    for token in [".unwrap()", ".expect(", "panic!", "unreachable!", "todo!"] {
+        assert!(
+            fr.diagnostics.iter().any(|d| d.message.contains(token)),
+            "no finding for {token}"
+        );
+    }
+}
+
+#[test]
+fn panic_freedom_true_negative() {
+    let fr = lint::check_source("classify/fx.rs", &fixture("panic_tn.rs"));
+    assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
+}
+
+#[test]
+fn panic_freedom_respects_allowlist() {
+    let fr = lint::check_source("runtime/fx.rs", &fixture("panic_tp.rs"));
+    assert!(
+        fr.diagnostics.iter().all(|d| d.rule != lint::RULE_PANIC_FREEDOM),
+        "{:#?}",
+        fr.diagnostics
+    );
+}
+
+// ---- flat-substrate ------------------------------------------------------
+
+#[test]
+fn flat_substrate_true_positive() {
+    let fr = lint::check_source("window/fx.rs", &fixture("flat_tp.rs"));
+    assert_eq!(fr.diagnostics.len(), 3, "{:#?}", fr.diagnostics);
+    assert!(fr.diagnostics.iter().all(|d| d.rule == lint::RULE_FLAT_SUBSTRATE));
+}
+
+#[test]
+fn flat_substrate_true_negative() {
+    let fr = lint::check_source("window/fx.rs", &fixture("flat_tn.rs"));
+    assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
+}
+
+#[test]
+fn flat_substrate_scoped_to_substrate() {
+    // The coordinator owns the registry: same source, no findings.
+    let fr = lint::check_source("coordinator/fx.rs", &fixture("flat_tp.rs"));
+    assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
+}
+
+// ---- pragmas -------------------------------------------------------------
+
+#[test]
+fn pragma_suppression_both_positions() {
+    let fr = lint::check_source("stats/fx.rs", &fixture("pragma_ok.rs"));
+    assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
+    assert!(fr.warnings.is_empty(), "{:#?}", fr.warnings);
+    assert_eq!(fr.pragmas.len(), 2);
+    assert!(fr.pragmas.iter().all(|p| p.used));
+    assert!(fr.pragmas.iter().all(|p| !p.reason.is_empty()));
+}
+
+#[test]
+fn malformed_pragmas_fail_and_suppress_nothing() {
+    let fr = lint::check_source("stats/fx.rs", &fixture("pragma_bad.rs"));
+    let pragma_diags =
+        fr.diagnostics.iter().filter(|d| d.rule == lint::RULE_PRAGMA).count();
+    assert_eq!(pragma_diags, 4, "{:#?}", fr.diagnostics);
+    // The finding under the reason-less pragma is still reported.
+    assert!(
+        fr.diagnostics.iter().any(|d| d.rule == lint::RULE_PANIC_FREEDOM),
+        "{:#?}",
+        fr.diagnostics
+    );
+    // The well-formed-but-unused pragma is a warning, not a failure.
+    assert_eq!(fr.warnings.len(), 1, "{:#?}", fr.warnings);
+    assert_eq!(fr.warnings[0].rule, lint::RULE_PRAGMA);
+    assert_eq!(fr.pragmas.len(), 1);
+    assert!(!fr.pragmas[0].used);
+}
+
+// ---- wire-schema ---------------------------------------------------------
+
+#[test]
+fn wire_golden_matches_real_sources_round_trip() {
+    let wire = real_src("checkpoint/wire.rs");
+    let module = real_src("checkpoint/mod.rs");
+    let version = wire_schema::parse_version(&module).expect("VERSION parses");
+    let digest = wire_schema::schema_digest(wire.as_bytes(), module.as_bytes());
+    let golden = wire_schema::render_golden(version, digest);
+    let diags = wire_schema::check_sources(&wire, &module, &golden);
+    assert!(diags.is_empty(), "{diags:#?}");
+}
+
+#[test]
+fn mutated_wire_fixture_trips_digest_mismatch() {
+    // The fixture is src/checkpoint/wire.rs with every little-endian
+    // byte-order call flipped to big-endian — a wire-format change that
+    // type-checks identically and passes every structural scan. Only
+    // the digest catches it.
+    let real_wire = real_src("checkpoint/wire.rs");
+    let module = real_src("checkpoint/mod.rs");
+    let mutated = fixture("wire_mutated.rs");
+    assert_ne!(mutated, real_wire, "fixture must actually differ");
+    assert!(mutated.contains("to_be_bytes"), "mutation lost");
+
+    let version = wire_schema::parse_version(&module).expect("VERSION parses");
+    let real_digest = wire_schema::schema_digest(real_wire.as_bytes(), module.as_bytes());
+    let mutated_digest = wire_schema::schema_digest(mutated.as_bytes(), module.as_bytes());
+    assert_ne!(real_digest, mutated_digest);
+
+    let golden = wire_schema::render_golden(version, real_digest);
+    let diags = wire_schema::check_sources(&mutated, &module, &golden);
+    assert_eq!(diags.len(), 1, "{diags:#?}");
+    assert_eq!(diags[0].rule, lint::RULE_WIRE_SCHEMA);
+    assert_eq!(diags[0].file, wire_schema::WIRE_PATH);
+    assert!(
+        diags[0].message.contains("without a checkpoint::VERSION bump"),
+        "{}",
+        diags[0].message
+    );
+}
+
+#[test]
+fn version_bump_asks_for_repin_not_mismatch() {
+    let wire = real_src("checkpoint/wire.rs");
+    let module = real_src("checkpoint/mod.rs");
+    let version = wire_schema::parse_version(&module).expect("VERSION parses");
+    let digest = wire_schema::schema_digest(wire.as_bytes(), module.as_bytes());
+    // Golden pinned one version behind: the rule must point at the
+    // golden (re-pin), not accuse the wire file.
+    let stale = wire_schema::render_golden(version.wrapping_sub(1), digest);
+    let diags = wire_schema::check_sources(&wire, &module, &stale);
+    assert_eq!(diags.len(), 1, "{diags:#?}");
+    assert_eq!(diags[0].file, wire_schema::GOLDEN_PATH);
+    assert!(diags[0].message.contains("re-pin"), "{}", diags[0].message);
+}
+
+#[test]
+fn unreadable_golden_is_a_diagnostic() {
+    let wire = real_src("checkpoint/wire.rs");
+    let module = real_src("checkpoint/mod.rs");
+    let diags = wire_schema::check_sources(&wire, &module, "digest = not-hex\n");
+    assert_eq!(diags.len(), 1, "{diags:#?}");
+    assert_eq!(diags[0].rule, lint::RULE_WIRE_SCHEMA);
+    assert_eq!(diags[0].file, wire_schema::GOLDEN_PATH);
+}

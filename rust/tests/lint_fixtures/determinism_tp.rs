@@ -1,0 +1,20 @@
+//! True-positive fixture for the `determinism` rule. Linted under a
+//! virtual path inside the determinism cone (e.g. `sampling/…`), every
+//! marked line below must be flagged. This file is test data — it is
+//! never compiled.
+
+use std::collections::HashMap; // flagged: unordered container in the cone
+use std::collections::HashSet; // flagged: unordered container in the cone
+
+fn wall_clock_read() -> std::time::Instant {
+    // flagged twice on the next line: `std::time` and `Instant::now`
+    std::time::Instant::now()
+}
+
+fn iteration_order_leaks(m: &HashMap<u64, f64>) -> Vec<f64> {
+    m.values().copied().collect()
+}
+
+fn membership(s: &HashSet<u64>, k: u64) -> bool {
+    s.contains(&k)
+}

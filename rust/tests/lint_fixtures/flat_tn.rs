@@ -1,0 +1,15 @@
+//! True-negative fixture for the `flat-substrate` rule: substrate code
+//! that stays query-blind, plus registry names mentioned only in
+//! comments/strings (masked). Zero diagnostics expected. Test data —
+//! never compiled.
+
+/// Substrate speaks records and slides, not queries. The coordinator
+/// fans a slide out to its registered queries — QuerySpec never appears
+/// down here (that comment mention must not fire).
+fn slide_cut(buf_len: usize, size: usize) -> usize {
+    buf_len.saturating_sub(size)
+}
+
+fn names_in_strings_are_masked() -> &'static str {
+    "QuerySpec, QueryId, submit_query in a string are fine"
+}

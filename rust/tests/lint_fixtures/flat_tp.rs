@@ -1,0 +1,15 @@
+//! True-positive fixture for the `flat-substrate` rule: substrate code
+//! referencing the coordinator's query registry. Linted under a
+//! substrate path (e.g. `window/…`), every marked line must be flagged.
+//! Test data — never compiled.
+
+use crate::coordinator::query::QuerySpec; // flagged: registry type in substrate
+
+fn peek_registry(spec: &QuerySpec) -> u64 {
+    spec.window_size as u64
+}
+
+fn forward(id: crate::coordinator::query::QueryId) -> u64 {
+    // flagged above: QueryId leaking into the substrate layer
+    id.0
+}

@@ -1,0 +1,46 @@
+//! True-negative fixture for the `panic-freedom` rule: the sanctioned
+//! alternatives. Zero diagnostics expected. Test data — never compiled.
+
+/// Fallible accessor: Option instead of .unwrap().
+fn first(v: &[u32]) -> Option<u32> {
+    v.first().copied()
+}
+
+/// unwrap_or / unwrap_or_else / unwrap_or_default are not the banned
+/// token `.unwrap()` — they are total.
+fn with_default(opt: Option<u32>) -> u32 {
+    opt.unwrap_or(7)
+}
+
+fn with_else(opt: Option<u32>) -> u32 {
+    opt.unwrap_or_else(|| 7)
+}
+
+fn with_zero(opt: Option<u32>) -> u32 {
+    opt.unwrap_or_default()
+}
+
+/// Invariant checks via assert! are allowed (they document invariants;
+/// the rule targets the lazy-error family).
+fn checked(df: f64) -> f64 {
+    assert!(df > 0.0, "degrees of freedom must be positive");
+    df
+}
+
+/// A comment mentioning .unwrap() or panic!("…") must not fire, nor a
+/// string literal: "call .unwrap() here" is masked.
+fn doc_only() -> &'static str {
+    "panic! and .unwrap() in a string are fine"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap_and_panic() {
+        let v = [1u32, 2];
+        assert_eq!(*v.first().unwrap(), 1);
+        if v.is_empty() {
+            panic!("unreachable in this test");
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! True-positive fixture for the `panic-freedom` rule: library code
+//! using the panic family. Every marked line must be flagged under any
+//! non-allowlisted virtual path. Test data — never compiled.
+
+fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap() // flagged: .unwrap() in library code
+}
+
+fn config(opt: Option<u32>) -> u32 {
+    opt.expect("config must be set") // flagged: .expect( in library code
+}
+
+fn dispatch(kind: u8) -> u32 {
+    match kind {
+        0 => 1,
+        1 => 2,
+        _ => panic!("bad kind"), // flagged: panic! in library code
+    }
+}
+
+fn total(kind: u8) -> u32 {
+    match kind {
+        0 => 0,
+        _ => unreachable!(), // flagged: unreachable! in library code
+    }
+}
+
+fn later() -> u32 {
+    todo!() // flagged: todo! in library code
+}

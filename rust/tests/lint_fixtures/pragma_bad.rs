@@ -1,0 +1,22 @@
+//! Pragma fixture: every malformed shape, plus one well-formed but
+//! unused pragma. Expected: four `pragma` diagnostics (the malformed
+//! ones), one `pragma` warning (the unused one), and the underlying
+//! finding still reported — a broken pragma suppresses nothing.
+//! Test data — never compiled.
+
+// lint:allow(panic-freedom)
+fn missing_reason(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+// lint:allow(speed) -- not a rule name
+fn unknown_rule() {}
+
+// lint:allow() -- because
+fn empty_rules() {}
+
+// lint:allow(panic-freedom -- never closed
+fn unterminated() {}
+
+// lint:allow(determinism) -- suppresses nothing on the next line
+fn unused_pragma() {}

@@ -1,0 +1,14 @@
+//! Pragma fixture: well-formed suppressions in both positions (line
+//! above and same line), each covering a real finding. Zero
+//! diagnostics, zero warnings, two audited used pragmas expected.
+//! Test data — never compiled; literal pragma markers are safe here
+//! because the linter only walks `src/`.
+
+fn must(v: &[u32]) -> u32 {
+    // lint:allow(panic-freedom) -- fixture: documented panicking accessor
+    *v.first().unwrap()
+}
+
+fn inline(opt: Option<u32>) -> u32 {
+    opt.expect("set") // lint:allow(panic-freedom) -- fixture: same-line form
+}

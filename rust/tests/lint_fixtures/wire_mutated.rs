@@ -1,0 +1,274 @@
+//! Primitive binary encoding for checkpoint artifacts.
+//!
+//! Hand-rolled little-endian wire format (the workspace is offline —
+//! no `serde`): every value flows through a small set of primitives
+//! (`u8` / `u32` / `u64` / `f64`-bits / `Record`), and both the writer
+//! and the reader fold **the same primitive sequence** into a
+//! [`StableHasher`], so a trailing 64-bit digest detects truncation and
+//! corruption regardless of how the underlying stream chunks its I/O.
+//! Floats round-trip by bit pattern (`to_bits`/`from_bits`) — restoring
+//! a checkpoint is byte-exact, which the restore-equivalence gates rely
+//! on.
+//!
+//! All decode failures — short reads, absurd lengths, checksum
+//! mismatch — surface as [`Error::Checkpoint`], never a panic.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::util::hash::StableHasher;
+use crate::workload::record::Record;
+
+/// Cap on any single length prefix (records, ops, strata, segment
+/// blobs). A valid checkpoint never comes close (a 10-million-record
+/// window is ~370 KB of buffer); a corrupted length otherwise turns
+/// into a multi-gigabyte allocation instead of an error.
+const MAX_LEN: u64 = 1 << 26;
+
+/// Checksumming writer over any [`Write`] sink.
+pub(crate) struct CkptWriter<W: Write> {
+    inner: W,
+    hasher: StableHasher,
+    written: u64,
+}
+
+impl<W: Write> CkptWriter<W> {
+    /// Wrap a sink.
+    pub fn new(inner: W) -> Self {
+        CkptWriter { inner, hasher: StableHasher::new(), written: 0 }
+    }
+
+    /// Write one byte.
+    pub fn u8(&mut self, v: u8) -> Result<()> {
+        self.hasher.write_u64(v as u64);
+        self.inner.write_all(&[v])?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Write a little-endian u32.
+    pub fn u32(&mut self, v: u32) -> Result<()> {
+        self.hasher.write_u64(v as u64);
+        self.inner.write_all(&v.to_be_bytes())?;
+        self.written += 4;
+        Ok(())
+    }
+
+    /// Write a little-endian u64.
+    pub fn u64(&mut self, v: u64) -> Result<()> {
+        self.hasher.write_u64(v);
+        self.inner.write_all(&v.to_be_bytes())?;
+        self.written += 8;
+        Ok(())
+    }
+
+    /// Write an f64 by bit pattern (NaN payloads and signed zeros
+    /// round-trip exactly).
+    pub fn f64(&mut self, v: f64) -> Result<()> {
+        self.u64(v.to_bits())
+    }
+
+    /// Write one record (5 fixed fields).
+    pub fn record(&mut self, r: &Record) -> Result<()> {
+        self.u64(r.id)?;
+        self.u32(r.stratum)?;
+        self.u64(r.timestamp)?;
+        self.u64(r.key)?;
+        self.f64(r.value)
+    }
+
+    /// Write a length-prefixed record run.
+    pub fn records(&mut self, rs: &[Record]) -> Result<()> {
+        self.u64(rs.len() as u64)?;
+        for r in rs {
+            self.record(r)?;
+        }
+        Ok(())
+    }
+
+    /// Write a length-prefixed opaque byte blob (hashed as one unit, so
+    /// reader/writer chunking cannot skew the digest).
+    pub fn bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.u64(b.len() as u64)?;
+        self.hasher.write_u64(crate::util::hash::fnv1a(b));
+        self.inner.write_all(b)?;
+        self.written += b.len() as u64;
+        Ok(())
+    }
+
+    /// Write the digest of everything written so far (raw, not absorbed
+    /// into the digest itself) and flush. Call exactly once, last.
+    pub fn finish(mut self) -> Result<u64> {
+        let digest = self.hasher.finish();
+        self.inner.write_all(&digest.to_be_bytes())?;
+        self.inner.flush()?;
+        Ok(self.written + 8)
+    }
+}
+
+/// Checksum-verifying reader over any [`Read`] source.
+pub(crate) struct CkptReader<R: Read> {
+    inner: R,
+    hasher: StableHasher,
+}
+
+impl<R: Read> CkptReader<R> {
+    /// Wrap a source.
+    pub fn new(inner: R) -> Self {
+        CkptReader { inner, hasher: StableHasher::new() }
+    }
+
+    fn fill(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.inner
+            .read_exact(buf)
+            .map_err(|e| Error::Checkpoint(format!("truncated checkpoint ({e})")))
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b)?;
+        self.hasher.write_u64(b[0] as u64);
+        Ok(b[0])
+    }
+
+    /// Read a little-endian u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b)?;
+        let v = u32::from_be_bytes(b);
+        self.hasher.write_u64(v as u64);
+        Ok(v)
+    }
+
+    /// Read a little-endian u64.
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        let v = u64::from_be_bytes(b);
+        self.hasher.write_u64(v);
+        Ok(v)
+    }
+
+    /// Read an f64 by bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a length prefix, rejecting absurd values.
+    pub fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        if n > MAX_LEN {
+            return Err(Error::Checkpoint(format!("implausible length {n} (corrupted?)")));
+        }
+        Ok(n as usize)
+    }
+
+    /// Read one record.
+    pub fn record(&mut self) -> Result<Record> {
+        Ok(Record {
+            id: self.u64()?,
+            stratum: self.u32()?,
+            timestamp: self.u64()?,
+            key: self.u64()?,
+            value: self.f64()?,
+        })
+    }
+
+    /// Read a length-prefixed record run.
+    pub fn records(&mut self) -> Result<Vec<Record>> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            out.push(self.record()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed opaque byte blob.
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.len()?;
+        let mut out = vec![0u8; n];
+        self.fill(&mut out)?;
+        self.hasher.write_u64(crate::util::hash::fnv1a(&out));
+        Ok(out)
+    }
+
+    /// Read and verify the trailing digest against everything decoded so
+    /// far. Call exactly once, last.
+    pub fn verify_checksum(mut self) -> Result<()> {
+        let want = self.hasher.finish();
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        let got = u64::from_be_bytes(b);
+        if got != want {
+            return Err(Error::Checkpoint(format!(
+                "checksum mismatch (stored {got:#018x}, computed {want:#018x}) — \
+                 the artifact is corrupted"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip_with_checksum() {
+        let mut buf = Vec::new();
+        let mut w = CkptWriter::new(&mut buf);
+        w.u8(7).unwrap();
+        w.u32(0xDEAD_BEEF).unwrap();
+        w.u64(u64::MAX).unwrap();
+        w.f64(-0.0).unwrap();
+        w.f64(f64::INFINITY).unwrap();
+        w.records(&[Record::new(1, 2, 3, 4, 5.5)]).unwrap();
+        let total = w.finish().unwrap();
+        assert_eq!(total as usize, buf.len());
+
+        let mut r = CkptReader::new(&buf[..]);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f64().unwrap(), f64::INFINITY);
+        let rs = r.records().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0], Record::new(1, 2, 3, 4, 5.5));
+        r.verify_checksum().unwrap();
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_errors() {
+        let mut buf = Vec::new();
+        let mut w = CkptWriter::new(&mut buf);
+        w.u64(42).unwrap();
+        w.records(&[Record::new(9, 0, 1, 2, 3.0)]).unwrap();
+        w.finish().unwrap();
+
+        // Flip one payload byte: checksum must catch it.
+        let mut bad = buf.clone();
+        bad[3] ^= 0x40;
+        let mut r = CkptReader::new(&bad[..]);
+        let _ = r.u64().unwrap();
+        let _ = r.records().unwrap();
+        assert!(r.verify_checksum().is_err());
+
+        // Truncate: the short read is a checkpoint error, not a panic.
+        let mut r = CkptReader::new(&buf[..buf.len() / 2]);
+        let _ = r.u64().unwrap();
+        assert!(matches!(r.records(), Err(Error::Checkpoint(_))));
+    }
+
+    #[test]
+    fn implausible_length_rejected() {
+        let mut buf = Vec::new();
+        let mut w = CkptWriter::new(&mut buf);
+        w.u64(u64::MAX / 2).unwrap(); // masquerades as a length prefix
+        w.finish().unwrap();
+        let mut r = CkptReader::new(&buf[..]);
+        assert!(matches!(r.len(), Err(Error::Checkpoint(_))));
+    }
+}
