@@ -1,0 +1,200 @@
+//! Partition scale-out bench: the K-way [`incapprox::partition::MergeTier`]
+//! against the solo coordinator it must be byte-identical to.
+//!
+//! **Paper mapping:** §4's cluster deployment runs the sampling + memo
+//! substrate per partition and merges per-stratum states at a reducer
+//! tier. This bench pins the two costs that make that tier viable:
+//!
+//! 1. **Merge cost is O(strata · K), never O(records)** — the fold
+//!    touches per-stratum map entries only. Doubling the window size
+//!    must leave `SlideWork::merge_items` per slide exactly flat, and
+//!    adding a partition must add exactly one entry per slide.
+//! 2. **Scale-out is observably free** — for every K the merged slide
+//!    reports are bit-for-bit the K = 1 reports (estimates, margins,
+//!    reuse accounting, per-query answers).
+//!
+//! **JSON:** emits `target/bench-results/partition_scaleout.json` with
+//! one `scaleout` row per (window scale, K): `k`, `window_size`,
+//! `slides`, `merge_items`, `merge_items_per_slide`, `mean_latency_ms`.
+//!
+//! ```bash
+//! cargo bench --bench partition_scaleout            # full sweep
+//! cargo bench --bench partition_scaleout -- --smoke # CI smoke (asserts)
+//! ```
+//!
+//! The byte-identity and flat-merge contracts are asserted in smoke and
+//! full mode alike — this bench doubles as the scale-out perf gate.
+
+use incapprox::bench_harness::{section, JsonReporter};
+use incapprox::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
+use incapprox::coordinator::{QuerySpec, SlideOutput};
+use incapprox::job::aggregate::AggregateKind;
+use incapprox::partition::MergeTier;
+use incapprox::workload::gen::MultiStream;
+
+const KS: [usize; 4] = [1, 2, 4, 8];
+
+fn config(window_size: usize) -> SystemConfig {
+    SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size,
+        slide: window_size / 10,
+        seed: 11,
+        chunk_size: 16,
+        budget: BudgetSpec::Fraction(0.2),
+        ..SystemConfig::default()
+    }
+}
+
+struct TierRun {
+    outputs: Vec<SlideOutput>,
+    merge_items: u64,
+    mean_latency_ms: f64,
+}
+
+/// Drive a K-partition tier over the warm-up batch plus `slides` slide
+/// batches off the fixed paper stream (sum + mean + a sketch-backed
+/// quantile, so the merge fold carries all four per-stratum maps).
+fn run_tier(cfg: &SystemConfig, k: usize, slides: usize) -> TierRun {
+    let mut tier = MergeTier::new(cfg.clone(), k).expect("tier");
+    tier.submit_query(QuerySpec::new(AggregateKind::Sum)).expect("submit");
+    tier.submit_query(QuerySpec::new(AggregateKind::Mean)).expect("submit");
+    tier.submit_query(QuerySpec::new(AggregateKind::Quantile(500))).expect("submit");
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let mut outputs = Vec::with_capacity(slides + 1);
+    let mut latency_total = 0.0f64;
+    for i in 0..=slides {
+        let n = if i == 0 { cfg.window_size } else { cfg.slide };
+        let out = tier.process_batch_queries(gen.take_records(n)).expect("slide");
+        latency_total += out.window.latency_ms;
+        outputs.push(out);
+    }
+    TierRun {
+        outputs,
+        merge_items: tier.work_profile().total().merge_items,
+        mean_latency_ms: latency_total / (slides + 1) as f64,
+    }
+}
+
+/// Bit-for-bit comparison of two slide outputs (floats by `to_bits`, so
+/// "close" never passes for "identical").
+fn assert_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
+    assert_eq!(a.window.window_id, b.window.window_id, "{label}: window id");
+    assert_eq!(a.window.window_len, b.window.window_len, "{label}: window len");
+    assert_eq!(a.window.sample_size, b.window.sample_size, "{label}: sample size");
+    assert_eq!(a.window.chunks_total, b.window.chunks_total, "{label}: chunks");
+    assert_eq!(a.window.chunks_reused, b.window.chunks_reused, "{label}: reuse");
+    assert_eq!(a.window.fresh_items, b.window.fresh_items, "{label}: fresh items");
+    assert_eq!(
+        a.window.estimate.value.to_bits(),
+        b.window.estimate.value.to_bits(),
+        "{label}: estimate"
+    );
+    assert_eq!(
+        a.window.estimate.margin.to_bits(),
+        b.window.estimate.margin.to_bits(),
+        "{label}: margin"
+    );
+    assert_eq!(a.window.strata, b.window.strata, "{label}: strata");
+    assert_eq!(a.queries.len(), b.queries.len(), "{label}: query count");
+    for (qa, qb) in a.queries.iter().zip(&b.queries) {
+        assert_eq!(
+            qa.estimate.value.to_bits(),
+            qb.estimate.value.to_bits(),
+            "{label}: query estimate"
+        );
+        assert_eq!(
+            qa.estimate.margin.to_bits(),
+            qb.estimate.margin.to_bits(),
+            "{label}: query margin"
+        );
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let slides = if smoke { 8 } else { 30 };
+    let scales: [usize; 2] = if smoke { [800, 1600] } else { [2000, 4000] };
+    let mut json = JsonReporter::for_bench("partition_scaleout");
+
+    section(&format!(
+        "partition scale-out: K in {KS:?}, {slides} slides, \
+         window scales {scales:?} (merge tier vs K = 1)"
+    ));
+    println!(
+        "{:>8} {:>3} {:>8} {:>12} {:>12} {:>10}",
+        "window", "K", "slides", "merge_items", "merge/slide", "lat_ms"
+    );
+
+    // merge_items per slide for each K, per scale: the flat-merge gate
+    // compares these across scales (same K, 2x the records, same cost).
+    let mut per_slide_by_scale: Vec<Vec<f64>> = Vec::new();
+
+    for &window_size in &scales {
+        let cfg = config(window_size);
+        let baseline = run_tier(&cfg, 1, slides);
+        let mut per_slide: Vec<f64> = Vec::new();
+        for &k in &KS {
+            let run = if k == 1 {
+                TierRun {
+                    outputs: baseline.outputs.clone(),
+                    merge_items: baseline.merge_items,
+                    mean_latency_ms: baseline.mean_latency_ms,
+                }
+            } else {
+                run_tier(&cfg, k, slides)
+            };
+            // Byte-identity: scale-out may not be observable.
+            assert_eq!(run.outputs.len(), baseline.outputs.len());
+            for (i, (a, b)) in baseline.outputs.iter().zip(&run.outputs).enumerate() {
+                assert_identical(a, b, &format!("window={window_size} K={k} slide={i}"));
+            }
+            let merge_per_slide = run.merge_items as f64 / (slides + 1) as f64;
+            per_slide.push(merge_per_slide);
+            println!(
+                "{:>8} {:>3} {:>8} {:>12} {:>12.2} {:>10.3}",
+                window_size, k, slides, run.merge_items, merge_per_slide, run.mean_latency_ms
+            );
+            json.record_point(
+                "scaleout",
+                &[
+                    ("window_size", window_size as f64),
+                    ("k", k as f64),
+                    ("slides", (slides + 1) as f64),
+                    ("merge_items", run.merge_items as f64),
+                    ("merge_items_per_slide", merge_per_slide),
+                    ("mean_latency_ms", run.mean_latency_ms),
+                ],
+            );
+        }
+        // Each extra partition adds exactly ONE merge entry per slide
+        // (its fold header); the per-stratum entries are a disjoint
+        // union whose total is independent of K.
+        for (i, &k) in KS.iter().enumerate() {
+            let expect = per_slide[0] + (k - 1) as f64;
+            assert!(
+                (per_slide[i] - expect).abs() < 1e-9,
+                "window={window_size} K={k}: merge/slide {} != K=1 + {}",
+                per_slide[i],
+                k - 1
+            );
+        }
+        per_slide_by_scale.push(per_slide);
+    }
+
+    // The flat-merge gate: doubling the record volume must leave the
+    // per-slide merge cost EXACTLY unchanged for every K — the fold is
+    // O(strata · K), never O(records).
+    let (small, large) = (&per_slide_by_scale[0], &per_slide_by_scale[1]);
+    for (i, &k) in KS.iter().enumerate() {
+        assert!(
+            (small[i] - large[i]).abs() < 1e-9,
+            "K={k}: merge/slide grew with record volume ({} -> {})",
+            small[i],
+            large[i]
+        );
+    }
+    println!("flat-merge gate: merge/slide identical across record scales for all K");
+
+    json.finish().expect("write bench results");
+}

@@ -83,8 +83,12 @@ const MAGIC: u32 = 0x4B43_4149;
 /// latched broker / checkpoint-write verdicts) and adds the
 /// degradation-controller ladder position, so restored runs replay the
 /// exact fault schedule on every channel *and* continue the same
-/// bound-widening trajectory.
-const VERSION: u32 = 4;
+/// bound-widening trajectory; v5 adds the partition layer's state: the
+/// `PartitionSlide` journal op (a router-driven count-window slide with
+/// an explicit eviction count) and the optional `owned_strata` list in
+/// `Misc`, so a partition's artifact records which stratum range it
+/// owned (`None` = the whole stream, i.e. a single-coordinator run).
+const VERSION: u32 = 5;
 
 /// The `budget_states` slot of the coordinator's *session-level* cost
 /// function (`SystemConfig::budget`). Per-query controllers use their
@@ -229,6 +233,11 @@ pub(crate) struct Misc {
     pub fault: FaultPlanState,
     pub degrade_level: u32,
     pub degrade_calm: u32,
+    /// The stratum range this coordinator owns when it runs as one
+    /// partition of a merge tier; `None` on single-coordinator runs
+    /// (the whole stream). Restore hands the list back to the
+    /// partition layer so a rebalanced assignment survives a restart.
+    pub owned_strata: Option<Vec<StratumId>>,
 }
 
 fn policy_tag(p: RecoveryPolicy) -> u8 {
@@ -311,6 +320,11 @@ pub(crate) enum JournalOp {
         min_ts: u64,
         window_id: u64,
     },
+    /// One router-driven partition slide: the records routed to this
+    /// partition plus the exact FIFO eviction count the merge tier's
+    /// global window simulation prescribed (partitioned count windows
+    /// are capacity-free; see `CountWindow::slide_external`).
+    PartitionSlide { inserted: Vec<Record>, evict: u64 },
 }
 
 impl JournalOp {
@@ -319,6 +333,7 @@ impl JournalOp {
         match self {
             JournalOp::Slide { inserted } => inserted.len(),
             JournalOp::Tick { records, .. } => records.len(),
+            JournalOp::PartitionSlide { inserted, .. } => inserted.len(),
             _ => 1,
         }
     }
@@ -641,7 +656,21 @@ fn put_misc<W: Write>(w: &mut CkptWriter<W>, m: &Misc) -> Result<()> {
     w.u8(u8::from(m.fault.pending_broker))?;
     w.u8(u8::from(m.fault.pending_checkpoint_write))?;
     w.u32(m.degrade_level)?;
-    w.u32(m.degrade_calm)
+    w.u32(m.degrade_calm)?;
+    match &m.owned_strata {
+        Some(strata) => {
+            w.u8(1)?;
+            w.u32(strata.len() as u32)?;
+            for &s in strata {
+                w.u32(s)?;
+            }
+            Ok(())
+        }
+        None => {
+            w.u8(0)?;
+            w.u32(0)
+        }
+    }
 }
 
 fn get_misc<R: Read>(r: &mut CkptReader<R>) -> Result<Misc> {
@@ -683,6 +712,22 @@ fn get_misc<R: Read>(r: &mut CkptReader<R>) -> Result<Misc> {
     fault.pending_checkpoint_write = r.u8()? != 0;
     let degrade_level = r.u32()?;
     let degrade_calm = r.u32()?;
+    let has_owned = r.u8()? != 0;
+    let n_owned = r.u32()? as usize;
+    let owned_strata = if has_owned {
+        if n_owned > 1 << 20 {
+            return Err(Error::Checkpoint(format!(
+                "implausible owned-strata count {n_owned} (corrupted?)"
+            )));
+        }
+        let mut strata = Vec::with_capacity(n_owned.min(1 << 12));
+        for _ in 0..n_owned {
+            strata.push(r.u32()?);
+        }
+        Some(strata)
+    } else {
+        None
+    };
     Ok(Misc {
         windows_processed,
         next_query_id,
@@ -691,6 +736,7 @@ fn get_misc<R: Read>(r: &mut CkptReader<R>) -> Result<Misc> {
         fault,
         degrade_level,
         degrade_calm,
+        owned_strata,
     })
 }
 
@@ -846,6 +892,11 @@ fn put_journal_op<W: Write>(w: &mut CkptWriter<W>, op: &JournalOp) -> Result<()>
                 },
             )
         }
+        JournalOp::PartitionSlide { inserted, evict } => {
+            w.u8(7)?;
+            w.u64(*evict)?;
+            w.records(inserted)
+        }
     }
 }
 
@@ -882,6 +933,10 @@ fn get_journal_op<R: Read>(r: &mut CkptReader<R>) -> Result<JournalOp> {
                 min_ts: s.min_ts,
                 window_id: s.window_id,
             }
+        }
+        7 => {
+            let evict = r.u64()?;
+            JournalOp::PartitionSlide { inserted: r.records()?, evict }
         }
         other => return Err(Error::Checkpoint(format!("unknown journal op tag {other}"))),
     })
@@ -1439,6 +1494,7 @@ mod tests {
             },
             degrade_level: 2,
             degrade_calm: 1,
+            owned_strata: Some(vec![0, 2, 5]),
         };
         let sketch = SketchBundle::from_records(7, &[rec(1, 1), rec(2, 2)]);
         let base = Segment::Base(BaseState {
@@ -1499,6 +1555,11 @@ mod tests {
                 );
                 assert_eq!((b.misc.degrade_level, b.misc.degrade_calm), (2, 1));
                 assert_eq!(
+                    b.misc.owned_strata,
+                    Some(vec![0, 2, 5]),
+                    "a partition's stratum range must round-trip"
+                );
+                assert_eq!(
                     b.budget_states,
                     vec![
                         (SESSION_BUDGET_SLOT, "target-error".to_string(), 123.5),
@@ -1542,6 +1603,7 @@ mod tests {
                     min_ts: 5,
                     window_id: 8,
                 },
+                JournalOp::PartitionSlide { inserted: vec![rec(8, 8)], evict: 3 },
             ],
             items: vec![(
                 1u32,
@@ -1556,7 +1618,12 @@ mod tests {
         assert!(matches!(decoded, Segment::Delta(_)), "expected delta segment");
         match decoded {
             Segment::Delta(d) => {
-                assert_eq!(d.ops.len(), 7);
+                assert_eq!(d.ops.len(), 8);
+                assert!(matches!(
+                    &d.ops[7],
+                    JournalOp::PartitionSlide { inserted, evict: 3 } if inserted.len() == 1
+                ));
+                assert_eq!(d.ops[7].record_cost(), 1, "cost is the routed batch size");
                 assert!(matches!(d.ops[2], JournalOp::Resize { new_size: 20 }));
                 assert!(matches!(
                     &d.ops[5],
@@ -1593,6 +1660,7 @@ mod tests {
                 fault: FaultPlanState::default(),
                 degrade_level: 0,
                 degrade_calm: 0,
+                owned_strata: None,
             },
         }));
         let art = Artifact {

@@ -100,25 +100,26 @@ use std::io::{Read, Write};
 use crate::budget::{self, CostFunction, DegradationController};
 use crate::checkpoint::{
     self, Artifact, BaseState, ChunkEntry, CkptTracker, Compat, DeltaState, JournalOp,
-    Misc, QueryEntry, Segment, SessionSection, SketchChunkEntry, WindowCkpt,
+    Misc, Segment, SessionSection, SketchChunkEntry, WindowCkpt,
     SESSION_BUDGET_SLOT,
 };
-use crate::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
+use crate::config::system::{ExecModeSpec, SystemConfig};
 use crate::coordinator::query::{QueryId, QuerySpec};
-use crate::coordinator::report::{QueryReport, SlideOutput, StratumReport, WindowReport};
+use crate::coordinator::registry::QueryRegistry;
+use crate::coordinator::report::{SlideOutput, StratumReport, WindowReport};
 use crate::error::Result;
-use crate::fault::{FaultInjector, MemoReplica, RecoveryPolicy};
-use crate::job::aggregate::derive_aggregate_sketched;
+use crate::fault::{FaultInjector, MemoReplica, RecoveryPolicy, SlideFaults};
 use crate::job::chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
 use crate::job::executor::{run_sharded, ChunkBackend, NativeBackend, WorkerPool};
 use crate::job::moments::Moments;
 use crate::job::plan::{JobPlan, PlannedChunk};
 use crate::job::sketch::{SketchBundle, SKETCH_SEED_SALT};
 use crate::metrics::{PhaseProfile, SlideWork, Stopwatch, WorkProfile};
-use crate::sac::memo::MemoStore;
+use crate::partition::PartitionState;
+use crate::sac::memo::{MemoStore, StratumExport};
 use crate::sampling::biased::{bias_sample, BiasOutcome};
 use crate::sampling::incremental::IncrementalSampler;
-use crate::sampling::stratified::StratifiedSample;
+use crate::sampling::stratified::{allocate_proportional, StratifiedSample};
 use crate::sampling::SampleRun;
 use crate::stats::stratified::{estimate_sum, StratumAgg};
 use crate::window::{CountWindow, TimeWindow, WindowSnapshot};
@@ -129,17 +130,17 @@ pub type ExecMode = ExecModeSpec;
 
 impl ExecModeSpec {
     /// Does this mode sample (vs. process the whole window)?
-    fn samples(&self) -> bool {
+    pub(crate) fn samples(&self) -> bool {
         matches!(self, ExecModeSpec::ApproxOnly | ExecModeSpec::IncApprox)
     }
 
     /// Does this mode memoize and reuse sub-computations?
-    fn memoizes(&self) -> bool {
+    pub(crate) fn memoizes(&self) -> bool {
         matches!(self, ExecModeSpec::IncrementalOnly | ExecModeSpec::IncApprox)
     }
 
     /// Does this mode bias the sample toward memoized items?
-    fn biases(&self) -> bool {
+    pub(crate) fn biases(&self) -> bool {
         matches!(self, ExecModeSpec::IncApprox)
     }
 }
@@ -240,19 +241,66 @@ fn plan_one_stratum(
     }
 }
 
-/// One registered query: its spec plus its live cost function (the
-/// adaptive budgets carry per-query state, e.g. the latency EWMA or the
-/// error-target controller's smoothed demand).
-struct RegisteredQuery {
-    id: QueryId,
-    spec: QuerySpec,
-    cost: Box<dyn CostFunction>,
-    /// The sample size this query's own budget asked for on the current
-    /// slide (set by `union_sample_size`). Cost feedback is attributed
-    /// against this, never against the union the shared sampler ran at —
-    /// feeding every query the union + whole-slide latency let one
-    /// query's load contaminate every other query's cost model.
-    last_alloc: usize,
+/// The front half of a slide, produced by [`Coordinator::slide_prepare`]
+/// and consumed by [`Coordinator::slide_finish`]. Between the two the
+/// caller decides the slide's per-stratum sample allocation: the solo
+/// driver allocates over its own sampler's populations; the partition
+/// merge tier allocates ONE global budget over the *merged* populations
+/// of every partition — the step that makes K disjoint samplers
+/// reproduce exactly the sample a single sampler over the union would
+/// have drawn.
+pub(crate) struct SlidePrep {
+    snap: WindowSnapshot,
+    sw: Stopwatch,
+    slide_work: SlideWork,
+    faults: SlideFaults,
+    prev_items: BTreeMap<StratumId, SampleRun>,
+}
+
+impl SlidePrep {
+    /// Items in the prepared window (post-slide).
+    pub(crate) fn window_len(&self) -> usize {
+        self.snap.len
+    }
+
+    /// The window's id (lockstep-checked across partitions).
+    pub(crate) fn window_id(&self) -> u64 {
+        self.snap.window_id
+    }
+
+    /// The window's start timestamp — this coordinator's local memo
+    /// eviction horizon; the merge tier folds the global horizon from
+    /// these.
+    pub(crate) fn start_ts(&self) -> u64 {
+        self.snap.start_ts
+    }
+}
+
+/// Wall-clock handles carried out of [`Coordinator::slide_finish`] so
+/// the caller can close the latency accounting at the same points the
+/// fused slide path did.
+pub(crate) struct SlideTiming {
+    /// Running since the top of `slide_prepare`.
+    pub(crate) sw: Stopwatch,
+    /// Planning phase wall-clock.
+    pub(crate) plan_ms: f64,
+    /// Compute phase wall-clock.
+    pub(crate) compute_ms: f64,
+    /// Running since the top of the finalize phase.
+    pub(crate) sw_finalize: Stopwatch,
+}
+
+/// One stratum's complete live state in flight between two partition
+/// coordinators (see [`Coordinator::export_stratum`]): the "segment
+/// chain as transport" rule's in-memory leg — the same state a
+/// checkpoint would carry for the stratum, addressed by stratum instead
+/// of by segment.
+pub(crate) struct StratumTransfer {
+    stratum: StratumId,
+    records: Vec<Record>,
+    memo: StratumExport,
+    chunk_cache: Option<Vec<Chunk>>,
+    sketch_chunks: Option<Vec<Chunk>>,
 }
 
 /// The streaming coordinator: owns the window, the persistent sampler,
@@ -305,8 +353,12 @@ pub struct Coordinator {
     sketch_chunks: BTreeMap<StratumId, Vec<Chunk>>,
     /// Registered queries, in submission order. Empty = legacy
     /// single-query behavior (the window budget sizes the sample).
-    queries: Vec<RegisteredQuery>,
-    next_query_id: u64,
+    queries: QueryRegistry,
+    /// The stratum range this coordinator owns when it runs as one
+    /// partition of a scale-out deployment (`None` = the whole stream —
+    /// every single-coordinator run). Carried in checkpoint [`Misc`] so
+    /// a restored partition knows its range.
+    owned_strata: Option<Vec<StratumId>>,
     injector: FaultInjector,
     recovery: RecoveryPolicy,
     replica: Option<MemoReplica>,
@@ -367,8 +419,8 @@ impl Coordinator {
             sampler: IncrementalSampler::new(cfg.seed ^ 0x0DE1_7A51_D35A_3D01),
             chunk_cache: BTreeMap::new(),
             sketch_chunks: BTreeMap::new(),
-            queries: Vec::new(),
-            next_query_id: 0,
+            queries: QueryRegistry::default(),
+            owned_strata: None,
             injector,
             recovery: RecoveryPolicy::LineageRecompute,
             replica: None,
@@ -404,12 +456,7 @@ impl Coordinator {
     /// is an O(strata) derivation fold. Fails if the spec is invalid for
     /// this session (see [`QuerySpec::validate_for`]).
     pub fn submit_query(&mut self, spec: QuerySpec) -> Result<QueryId> {
-        spec.validate_for(&self.cfg)?;
-        let id = QueryId::new(self.next_query_id);
-        self.next_query_id += 1;
-        let cost = budget::from_spec(&spec.budget);
-        self.queries.push(RegisteredQuery { id, spec, cost, last_alloc: 0 });
-        Ok(id)
+        self.queries.submit(&self.cfg, spec)
     }
 
     /// Test seam: register a query with a caller-supplied cost function
@@ -422,20 +469,14 @@ impl Coordinator {
         spec: QuerySpec,
         cost: Box<dyn CostFunction>,
     ) -> Result<QueryId> {
-        spec.validate_for(&self.cfg)?;
-        let id = QueryId::new(self.next_query_id);
-        self.next_query_id += 1;
-        self.queries.push(RegisteredQuery { id, spec, cost, last_alloc: 0 });
-        Ok(id)
+        self.queries.submit_with_cost(&self.cfg, spec, cost)
     }
 
     /// Deregister a query; later slides stop answering it. Returns
     /// whether the id was registered. The shared substrate (sample,
     /// memo) is untouched — remaining queries keep their amortization.
     pub fn remove_query(&mut self, id: QueryId) -> bool {
-        let before = self.queries.len();
-        self.queries.retain(|q| q.id != id);
-        self.queries.len() != before
+        self.queries.remove(id)
     }
 
     /// Number of registered queries.
@@ -445,7 +486,7 @@ impl Coordinator {
 
     /// The specs of the registered queries, in submission order.
     pub fn query_specs(&self) -> impl Iterator<Item = (QueryId, &QuerySpec)> {
-        self.queries.iter().map(|q| (q.id, &q.spec))
+        self.queries.specs()
     }
 
     /// The slide's sample budget: the union (max) of the registered
@@ -453,19 +494,10 @@ impl Coordinator {
     /// accuracy its own budget affords; with no queries registered, the
     /// session-level budget (legacy single-query behavior).
     fn union_sample_size(&mut self, window_len: usize) -> usize {
-        if self.queries.is_empty() {
-            return self.cost.sample_size(window_len);
+        match self.queries.union_sample_size(window_len) {
+            Some(n) => n,
+            None => self.cost.sample_size(window_len),
         }
-        self.queries
-            .iter_mut()
-            .map(|q| {
-                // Remember each query's own ask: post-slide cost feedback
-                // is attributed against it, not against the union.
-                q.last_alloc = q.cost.sample_size(window_len);
-                q.last_alloc
-            })
-            .max()
-            .unwrap_or(1)
     }
 
     /// Memoization statistics so far.
@@ -741,12 +773,318 @@ impl Coordinator {
         snap.map(|s| self.process_snapshot(s)).transpose()
     }
 
-    /// The Algorithm 1 body, shared by both window kinds.
+    // --- Partition driver seams (see `crate::partition`) ----------------
+
+    /// The stratum range this coordinator owns as a partition (`None`
+    /// for solo runs — the whole stream).
+    pub(crate) fn owned_strata(&self) -> Option<&[StratumId]> {
+        self.owned_strata.as_deref()
+    }
+
+    /// Record the stratum range this coordinator owns as a partition;
+    /// carried into every checkpoint's [`Misc`] section.
+    pub(crate) fn set_owned_strata(&mut self, strata: Option<Vec<StratumId>>) {
+        self.owned_strata = strata;
+    }
+
+    /// The sampler's exact per-stratum populations — current after
+    /// [`Coordinator::slide_prepare`]; the merge tier folds these into
+    /// the global populations its Eq 3.1 allocation runs over.
+    pub(crate) fn sampler_populations(&self) -> BTreeMap<StratumId, u64> {
+        self.sampler.populations()
+    }
+
+    /// Is this coordinator driving a count-based window? (The merge tier
+    /// restores partitions from artifacts and must rebuild its router
+    /// for count windows only.)
+    pub(crate) fn is_count_windowed(&self) -> bool {
+        matches!(self.window, WindowState::Count(_))
+    }
+
+    /// Windows processed so far (tier bookkeeping after restore).
+    pub(crate) fn windows_processed(&self) -> u64 {
+        self.windows_processed
+    }
+
+    /// The currently buffered window records (count windows; a restored
+    /// merge tier rebuilds its global FIFO router from the union of its
+    /// partitions' buffers, re-ordered by `(timestamp, id)` — arrival
+    /// order, by the workload generator's id monotonicity).
+    pub(crate) fn window_buffer_records(&self) -> Vec<Record> {
+        match &self.window {
+            WindowState::Count(w) => w.checkpoint_parts().0,
+            WindowState::Time(w) => w.window_records(),
+        }
+    }
+
+    /// Partition twin of [`Coordinator::process_batch_queries`]'s front
+    /// half: apply a router-driven count-window slide — `batch` inserts
+    /// plus an **explicit** eviction count (the router decides evictions
+    /// globally; a partition's own buffer length says nothing about the
+    /// global window) — and run slide preparation. Journals a
+    /// `PartitionSlide` op so checkpoints replay the same external
+    /// eviction schedule.
+    pub(crate) fn partition_prepare_count(
+        &mut self,
+        batch: Vec<Record>,
+        evict: usize,
+    ) -> Result<SlidePrep> {
+        if !matches!(self.window, WindowState::Count(_)) {
+            return Err(crate::error::Error::Job(
+                "partition_prepare_count needs a count window".into(),
+            ));
+        }
+        if self.ckpt_wants_ops() {
+            self.ckpt_push(JournalOp::PartitionSlide {
+                inserted: batch.clone(),
+                evict: evict as u64,
+            });
+        }
+        let want_full = self.wants_full_view();
+        let snap = match &mut self.window {
+            WindowState::Count(w) => w.slide_external(batch, evict, want_full),
+            WindowState::Time(_) => {
+                return Err(crate::error::Error::Job(
+                    "partition_prepare_count needs a count window".into(),
+                ));
+            }
+        };
+        Ok(self.slide_prepare(snap))
+    }
+
+    /// Partition twin of [`Coordinator::ingest_tick_queries`]'s front
+    /// half: every partition's time window sees the same `now`, so
+    /// emission stays in lockstep across partitions (the merge tier
+    /// asserts it).
+    pub(crate) fn partition_prepare_tick(
+        &mut self,
+        records: Vec<Record>,
+        now: u64,
+    ) -> Result<Option<SlidePrep>> {
+        if !matches!(self.window, WindowState::Time(_)) {
+            return Err(crate::error::Error::Job(
+                "partition_prepare_tick needs a time window".into(),
+            ));
+        }
+        if self.ckpt_wants_ops() {
+            self.ckpt_push(JournalOp::Tick { records: records.clone(), now });
+        }
+        let want_full = self.wants_full_view();
+        let snap = match &mut self.window {
+            WindowState::Time(w) => {
+                w.ingest(records);
+                w.try_emit_with(now, want_full)
+            }
+            WindowState::Count(_) => {
+                return Err(crate::error::Error::Job(
+                    "partition_prepare_tick needs a time window".into(),
+                ));
+            }
+        };
+        Ok(snap.map(|s| self.slide_prepare(s)))
+    }
+
+    /// Extract one stratum's full live state — window records in arrival
+    /// order, memo image, chunk caches — for shipment to another
+    /// partition (rebalancing). The remaining state is re-anchored: the
+    /// checkpoint chain re-bases (the journal cannot express an
+    /// out-of-band departure) and the sampler rebuilds from the
+    /// remaining window (it is a pure function of contents + seed, so
+    /// the rebuild lands exactly where incremental maintenance would
+    /// have). Count windows only — a time window's buffer order is not
+    /// reconstructible from `(timestamp, id)` alone.
+    pub(crate) fn export_stratum(&mut self, stratum: StratumId) -> Result<StratumTransfer> {
+        let records = match &mut self.window {
+            WindowState::Count(w) => w.extract_stratum(stratum),
+            WindowState::Time(_) => {
+                return Err(crate::error::Error::Job(
+                    "stratum rebalancing requires count-based windows".into(),
+                ));
+            }
+        };
+        let memo = self.memo.extract_stratum(stratum);
+        let chunk_cache = self.chunk_cache.remove(&stratum);
+        let sketch_chunks = self.sketch_chunks.remove(&stratum);
+        if let Some(t) = &mut self.ckpt {
+            t.invalidate();
+        }
+        let remaining = match &self.window {
+            WindowState::Count(w) => {
+                let (mut buf, pending) = w.checkpoint_parts();
+                buf.extend(pending);
+                buf
+            }
+            WindowState::Time(w) => w.window_records(),
+        };
+        self.sampler.rebuild(&remaining);
+        Ok(StratumTransfer { stratum, records, memo, chunk_cache, sketch_chunks })
+    }
+
+    /// Splice a shipped stratum into this coordinator: the inverse of
+    /// [`Coordinator::export_stratum`], with the same re-anchoring
+    /// (chain re-base, sampler rebuild).
+    pub(crate) fn import_stratum(&mut self, transfer: StratumTransfer) -> Result<()> {
+        let StratumTransfer { stratum, records, memo, chunk_cache, sketch_chunks } = transfer;
+        match &mut self.window {
+            WindowState::Count(w) => w.splice_records(records),
+            WindowState::Time(_) => {
+                return Err(crate::error::Error::Job(
+                    "stratum rebalancing requires count-based windows".into(),
+                ));
+            }
+        }
+        self.memo.absorb_stratum(stratum, memo);
+        if let Some(chunks) = chunk_cache {
+            self.chunk_cache.insert(stratum, chunks);
+        }
+        if let Some(chunks) = sketch_chunks {
+            self.sketch_chunks.insert(stratum, chunks);
+        }
+        if let Some(t) = &mut self.ckpt {
+            t.invalidate();
+        }
+        let full = match &self.window {
+            WindowState::Count(w) => {
+                let (mut buf, pending) = w.checkpoint_parts();
+                buf.extend(pending);
+                buf
+            }
+            WindowState::Time(w) => w.window_records(),
+        };
+        self.sampler.rebuild(&full);
+        Ok(())
+    }
+
+    /// The Algorithm 1 body, shared by both window kinds: prepare, one
+    /// proportional allocation over this coordinator's own sampler
+    /// populations (a solo run owns the whole stream), finish, then
+    /// derive every answer from the finished state. The partition merge
+    /// tier runs the same prepare/finish pair per partition but computes
+    /// ONE global allocation over the merged populations and derives
+    /// from the merged state — the same code paths, which is what makes
+    /// the two deployments byte-identical by construction.
     fn process_snapshot(&mut self, snap: WindowSnapshot) -> Result<SlideOutput> {
-        let sw = Stopwatch::start();
-        let window_id = snap.window_id;
+        let horizon = snap.start_ts;
         let window_len = snap.len;
-        let window_start_ts = snap.start_ts;
+        let prep = self.slide_prepare(snap);
+        // Cost function gives the sample size based on the budget; Eq 3.1
+        // splits it proportionally over the exact per-stratum populations
+        // (this is `IncrementalSampler::sample` with the allocation step
+        // lifted to the caller).
+        let alloc = if self.cfg.mode.samples() {
+            let n = self.union_sample_size(window_len);
+            Some(allocate_proportional(n, &self.sampler.populations()))
+        } else {
+            None
+        };
+        let want_sketches = self.queries.wants_sketches();
+        let (state, timing) = self.slide_finish(prep, horizon, alloc.as_ref(), want_sketches);
+        let PartitionState {
+            window_id,
+            window_len,
+            sample_size,
+            chunks_total,
+            chunks_reused,
+            fresh_items,
+            moments,
+            sketches,
+            populations,
+            strata,
+            degraded_strata,
+            fault_injected,
+            work: mut slide_work,
+        } = state;
+        let degraded = !degraded_strata.is_empty();
+        let bound_scale = self.degrade.scale();
+
+        // --- Reduce to the estimate (§3.5) ------------------------------
+        let mut aggs: Vec<StratumAgg> = Vec::with_capacity(moments.len());
+        for (s, m) in &moments {
+            let population = populations.get(s).copied().unwrap_or(0) as f64;
+            aggs.push(StratumAgg::from_moments(m, population));
+        }
+        let estimate = estimate_sum(&aggs, self.cfg.confidence)?;
+
+        // Answer every registered query from the *shared* per-stratum
+        // moments and exact populations — O(strata) per query (see
+        // `QueryRegistry::derive_phase`). A solo coordinator cannot tell
+        // which stratum a degraded slide actually hurt, so the degraded
+        // flag is blanket.
+        let (query_reports, derive_ms) = self.queries.derive_phase(
+            &moments,
+            &populations,
+            &sketches,
+            bound_scale,
+            &degraded_strata,
+            true,
+            &mut slide_work,
+        )?;
+
+        // Close the error-bound loop (§3.5 margin → Eq 3.2 backwards):
+        // every adaptive error-target budget reads the achieved
+        // per-stratum aggregates its own query covers and re-solves for
+        // the sample size the *next* slide needs. O(strata) per adaptive
+        // budget, charged to `budget_adjust` — with `derive_items` the
+        // only work allowed to scale with query count.
+        if self.cost.wants_bound_feedback() {
+            slide_work.budget_adjust += aggs.len() as u64;
+            self.cost.observe_bound(&aggs, window_len as f64);
+        }
+        self.queries.observe_bounds(&moments, &populations, window_len, &mut slide_work);
+
+        let latency_ms = timing.sw.elapsed_ms();
+        self.profile
+            .observe(timing.plan_ms, timing.compute_ms, timing.sw_finalize.elapsed_ms());
+        self.work.observe(slide_work);
+        // The session-level budget owns the whole window: it observes the
+        // realized union sample and the full slide latency. Per-query
+        // budgets observe their OWN cost share (see
+        // `QueryRegistry::attribute_costs`).
+        self.cost.observe(sample_size, latency_ms);
+        let total_derive_ms: f64 = derive_ms.iter().sum();
+        let substrate_ms = (latency_ms - total_derive_ms).max(0.0);
+        self.queries.attribute_costs(sample_size, substrate_ms, &derive_ms);
+        // Journal the post-slide controller states so a restored run
+        // continues on the same budget trajectory (absolute values;
+        // replay is last-wins).
+        if self.ckpt_wants_ops() {
+            for (slot, policy, state) in self.budget_state_slots() {
+                self.ckpt_push(JournalOp::BudgetAdjust {
+                    slot,
+                    policy: policy.to_string(),
+                    state,
+                });
+            }
+        }
+
+        Ok(SlideOutput {
+            window: WindowReport {
+                window_id,
+                mode: self.cfg.mode.name(),
+                estimate,
+                window_len,
+                sample_size,
+                chunks_total,
+                chunks_reused,
+                fresh_items,
+                strata,
+                latency_ms,
+                fault_injected,
+                degraded,
+            },
+            queries: query_reports,
+        })
+    }
+
+    /// Everything Algorithm 1 does *before* the slide's sample
+    /// allocation can be known: the fault draw + memo-loss recovery, the
+    /// degradation-scale propagation, the previous-sample capture, and
+    /// the persistent-sampler maintenance from the window delta. After
+    /// this returns the sampler's per-stratum populations are current —
+    /// exactly what the caller needs to compute the allocation that
+    /// [`Coordinator::slide_finish`] consumes.
+    pub(crate) fn slide_prepare(&mut self, snap: WindowSnapshot) -> SlidePrep {
+        let sw = Stopwatch::start();
         let mut slide_work = SlideWork::default();
         slide_work.window_items =
             snap.full_view().map_or(snap.delta.len(), <[Record]>::len) as u64;
@@ -757,7 +1095,8 @@ impl Coordinator {
         // `RecoveryPolicy::Checkpoint` — the memo image of the last
         // checkpoint segment). Broker / checkpoint-write verdicts latch
         // in the injector until the session or checkpoint path consumes
-        // them; the compute verdict drives the retry loop below.
+        // them; the compute verdict drives the retry loop in
+        // `slide_finish`.
         let faults = self.injector.begin_slide();
         let fault_injected = faults.memo_loss;
         if fault_injected {
@@ -785,39 +1124,64 @@ impl Coordinator {
         // (fraction / tokens / latency) ignore the scale by contract.
         let bound_scale = self.degrade.scale();
         self.cost.set_bound_scale(bound_scale);
-        for q in &mut self.queries {
-            q.cost.set_bound_scale(bound_scale);
-        }
+        self.queries.set_bound_scale(bound_scale);
 
         // Previous sample (pre-eviction) — the inverse-reduce base state.
         // Zero-copy: Arc handles onto the memoized runs.
         let prev_items = self.memo.items_all();
 
-        // Algorithm 1: remove all old items (and dependent results) from memo.
-        self.memo.evict_older_than(window_start_ts);
-        self.ckpt_push(JournalOp::Evict { horizon: window_start_ts });
-
-        // Cost function gives the sample size based on the budget; the
-        // persistent sampler emits the window's stratified sample. On the
-        // incremental path it is maintained with the delta (O(delta));
-        // the from-scratch baseline rebuilds it (O(window)). Identical
-        // samples either way — the sample is a pure function of window
-        // contents and seed.
-        let sample = if self.cfg.mode.samples() {
+        // Persistent sampler maintenance: on the incremental path it is
+        // updated with the delta (O(delta)); the from-scratch baseline
+        // rebuilds it (O(window)). Identical state either way — the
+        // sampler is a pure function of window contents and seed.
+        if self.cfg.mode.samples() {
             let touched = if self.cfg.incremental_slide {
                 self.sampler.apply_delta(&snap.delta)
             } else {
                 self.sampler.rebuild(snap.items())
             };
             slide_work.sampler_items = touched as u64;
-            let sample_size = self.union_sample_size(window_len);
-            self.sampler.sample(sample_size)
-        } else {
-            Self::full_window_sample(snap.items())
+        }
+
+        SlidePrep { snap, sw, slide_work, faults, prev_items }
+    }
+
+    /// The back half of the slide: memo eviction at `horizon`, sample
+    /// emission under the caller's `alloc`, biasing, the plan / compute /
+    /// finalize pipeline, the sketch pass (when `want_sketches`), and
+    /// memoization. Returns the slide's mergeable [`PartitionState`] —
+    /// derivation to reports happens on the *merged* state (trivially so
+    /// for a solo run, whose merge of one partition is the state itself).
+    ///
+    /// `horizon` is this coordinator's own window start in solo runs and
+    /// the GLOBAL minimum across partitions in scale-out runs: every
+    /// partition must age its memo against the same horizon or the
+    /// merged outputs drift from the single-coordinator reference.
+    pub(crate) fn slide_finish(
+        &mut self,
+        prep: SlidePrep,
+        horizon: u64,
+        alloc: Option<&BTreeMap<StratumId, usize>>,
+        want_sketches: bool,
+    ) -> (PartitionState, SlideTiming) {
+        let SlidePrep { snap, sw, mut slide_work, faults, prev_items } = prep;
+        let window_id = snap.window_id;
+        let window_len = snap.len;
+
+        // Algorithm 1: remove all old items (and dependent results) from memo.
+        self.memo.evict_older_than(horizon);
+        self.ckpt_push(JournalOp::Evict { horizon });
+
+        // The persistent sampler emits the window's stratified sample
+        // under the caller's per-stratum allocation (sampling modes);
+        // exact modes group the full window per stratum instead.
+        let sample = match alloc {
+            Some(caps) => self.sampler.sample_allocated(caps),
+            None => Self::full_window_sample(snap.items()),
         };
 
         // Bias the stratified sample to include memoized items (§3.3).
-        let memo_items = self.memo.items_for_bias(window_start_ts);
+        let memo_items = self.memo.items_for_bias(horizon);
         let biased = if self.cfg.mode.biases() {
             bias_sample(&sample, &memo_items)
         } else {
@@ -1011,7 +1375,6 @@ impl Coordinator {
                 }
             }
         }
-        let degraded = !degraded_strata.is_empty();
         slide_work.compute_items = fresh_items as u64;
 
         // Remember full-path chunk sequences so the next full re-chunking
@@ -1033,16 +1396,18 @@ impl Coordinator {
 
         // --- Sketch pass: per-chunk synopses for the sketch-backed
         // queries (Quantile / TopK / DistinctCount). Runs only when such
-        // a query is registered, over the same biased sample the moment
-        // path consumed, with the same content-defined chunking — so the
-        // memoized bundles share the chunks' content hashes and age out
-        // with them. Bundles are pure functions of (seed, chunk items)
-        // and merging is order-independent, so every mode and worker
-        // count folds to byte-identical per-stratum sketches. One pass
-        // serves all registered sketch queries; its work is charged to
-        // `sketch_items`, never to the moment substrate's counters.
+        // a query is registered (`want_sketches` — the caller's registry
+        // knows), over the same biased sample the moment path consumed,
+        // with the same content-defined chunking — so the memoized
+        // bundles share the chunks' content hashes and age out with
+        // them. Bundles are pure functions of (seed, chunk items) and
+        // merging is order-independent, so every mode, worker count, and
+        // partition layout folds to byte-identical per-stratum sketches.
+        // One pass serves all registered sketch queries; its work is
+        // charged to `sketch_items`, never to the moment substrate's
+        // counters.
         let mut stratum_sketches: BTreeMap<StratumId, SketchBundle> = BTreeMap::new();
-        if self.queries.iter().any(|q| q.spec.kind.is_sketch()) {
+        if want_sketches {
             let sketch_seed = self.cfg.seed ^ SKETCH_SEED_SALT;
             for (&stratum, run) in &biased.per_stratum {
                 let (chunks, rehashed) = {
@@ -1099,92 +1464,19 @@ impl Coordinator {
             }
         }
 
-        // --- Reduce to the estimate (§3.5) ------------------------------
-        let mut aggs: Vec<StratumAgg> = Vec::with_capacity(stratum_moments.len());
+        // --- Per-stratum reports (merged as-is by the partition tier) ---
         let mut strata_reports: BTreeMap<StratumId, StratumReport> = BTreeMap::new();
-        for (&stratum, m) in &stratum_moments {
-            let population = sample.population.get(&stratum).copied().unwrap_or(0) as f64;
-            aggs.push(StratumAgg::from_moments(m, population));
+        for &stratum in stratum_moments.keys() {
+            let population = sample.population.get(&stratum).copied().unwrap_or(0);
             strata_reports.insert(
                 stratum,
                 StratumReport {
                     sample_size: biased.stratum(stratum).len(),
                     memo_reused: biased.memo_reused.get(&stratum).copied().unwrap_or(0),
                     memo_available: biased.memo_available.get(&stratum).copied().unwrap_or(0),
-                    population: population as u64,
+                    population,
                 },
             );
-        }
-        let estimate = estimate_sum(&aggs, self.cfg.confidence)?;
-
-        // Answer every registered query from the *shared* per-stratum
-        // moments and exact populations — O(strata) per query. Each
-        // derivation is timed individually so post-slide cost feedback
-        // can charge a query for its own derive, not its neighbors'.
-        let mut query_reports: Vec<QueryReport> = Vec::with_capacity(self.queries.len());
-        let mut derive_ms: Vec<f64> = Vec::with_capacity(self.queries.len());
-        for q in &self.queries {
-            let sw_derive = Stopwatch::start();
-            let d = derive_aggregate_sketched(
-                q.spec.kind,
-                q.spec.stratum,
-                q.spec.confidence,
-                &stratum_moments,
-                &sample.population,
-                &stratum_sketches,
-            )?;
-            derive_ms.push(sw_derive.elapsed_ms());
-            slide_work.derive_items += d.strata_touched;
-            query_reports.push(QueryReport {
-                id: q.id,
-                kind: q.spec.kind,
-                estimate: d.estimate,
-                sample_size: d.sample_size,
-                population: d.population,
-                extrema: d.extrema,
-                surface: d.surface,
-                target_rel_bound: match q.spec.budget {
-                    // The *effective* target: the configured baseline
-                    // widened by the degradation ladder's current level.
-                    BudgetSpec::TargetError { relative_bound, .. } => {
-                        Some(relative_bound * bound_scale)
-                    }
-                    _ => None,
-                },
-                bound_scale: match q.spec.budget {
-                    BudgetSpec::TargetError { .. } => bound_scale,
-                    _ => 1.0,
-                },
-                degraded,
-            });
-        }
-
-        // Close the error-bound loop (§3.5 margin → Eq 3.2 backwards):
-        // every adaptive error-target budget reads the achieved
-        // per-stratum aggregates its own query covers and re-solves for
-        // the sample size the *next* slide needs. O(strata) per adaptive
-        // budget, charged to `budget_adjust` — with `derive_items` the
-        // only work allowed to scale with query count.
-        if self.cost.wants_bound_feedback() {
-            slide_work.budget_adjust += aggs.len() as u64;
-            self.cost.observe_bound(&aggs, window_len as f64);
-        }
-        for q in &mut self.queries {
-            if !q.cost.wants_bound_feedback() {
-                continue;
-            }
-            let feedback: Vec<StratumAgg> = stratum_moments
-                .iter()
-                .filter(|entry| q.spec.stratum.map_or(true, |want| want == *entry.0))
-                .map(|(s, m)| {
-                    StratumAgg::from_moments(
-                        m,
-                        sample.population.get(s).copied().unwrap_or(0) as f64,
-                    )
-                })
-                .collect();
-            slide_work.budget_adjust += feedback.len() as u64;
-            q.cost.observe_bound(&feedback, window_len as f64);
         }
 
         // Memoize the biased sample's runs + per-stratum state for the
@@ -1216,56 +1508,26 @@ impl Coordinator {
         if self.recovery == RecoveryPolicy::Replicated {
             self.replica = Some(self.memo.snapshot());
         }
-
         self.windows_processed += 1;
-        let latency_ms = sw.elapsed_ms();
-        self.profile.observe(plan_ms, compute_ms, sw_finalize.elapsed_ms());
-        self.work.observe(slide_work);
-        // The session-level budget owns the whole window: it observes the
-        // realized union sample and the full slide latency.
-        self.cost.observe(sample_size, latency_ms);
-        // Per-query budgets observe their OWN cost: their proportional
-        // share of the shared substrate plus their own derivation time.
-        // (Feeding every query the union sample + whole-slide latency
-        // cross-contaminated the per-query `LatencyCost` EWMA models —
-        // query A's load inflated query B's per-item estimate.)
-        let total_derive_ms: f64 = derive_ms.iter().sum();
-        let substrate_ms = (latency_ms - total_derive_ms).max(0.0);
-        for (q, &d_ms) in self.queries.iter_mut().zip(&derive_ms) {
-            let (items, elapsed) =
-                budget::attribute_query_cost(q.last_alloc, sample_size, substrate_ms, d_ms);
-            q.cost.observe(items, elapsed);
-        }
-        // Journal the post-slide controller states so a restored run
-        // continues on the same budget trajectory (absolute values;
-        // replay is last-wins).
-        if self.ckpt_wants_ops() {
-            for (slot, policy, state) in self.budget_state_slots() {
-                self.ckpt_push(JournalOp::BudgetAdjust {
-                    slot,
-                    policy: policy.to_string(),
-                    state,
-                });
-            }
-        }
 
-        Ok(SlideOutput {
-            window: WindowReport {
+        (
+            PartitionState {
                 window_id,
-                mode: self.cfg.mode.name(),
-                estimate,
                 window_len,
                 sample_size,
                 chunks_total,
                 chunks_reused,
                 fresh_items,
+                moments: stratum_moments,
+                sketches: stratum_sketches,
+                populations: sample.population,
                 strata: strata_reports,
-                latency_ms,
-                fault_injected,
-                degraded,
+                degraded_strata,
+                fault_injected: faults.memo_loss,
+                work: slide_work,
             },
-            queries: query_reports,
-        })
+            SlideTiming { sw, plan_ms, compute_ms, sw_finalize },
+        )
     }
 
     // --- Checkpoint / restore (see `crate::checkpoint` for the format) --
@@ -1294,11 +1556,7 @@ impl Coordinator {
         if let Some(state) = self.cost.export_state() {
             slots.push((SESSION_BUDGET_SLOT, self.cost.name(), state));
         }
-        for q in &self.queries {
-            if let Some(state) = q.cost.export_state() {
-                slots.push((q.id.as_u64(), q.cost.name(), state));
-            }
-        }
+        slots.extend(self.queries.budget_state_slots());
         slots
     }
 
@@ -1334,16 +1592,13 @@ impl Coordinator {
         let (degrade_level, degrade_calm) = self.degrade.state();
         Misc {
             windows_processed: self.windows_processed,
-            next_query_id: self.next_query_id,
-            queries: self
-                .queries
-                .iter()
-                .map(|q| QueryEntry { raw_id: q.id.as_u64(), spec: q.spec.clone() })
-                .collect(),
+            next_query_id: self.queries.next_id(),
+            queries: self.queries.entries(),
             recovery: self.recovery,
             fault: self.injector.state(),
             degrade_level,
             degrade_calm,
+            owned_strata: self.owned_strata.clone(),
         }
     }
 
@@ -1614,6 +1869,17 @@ impl Coordinator {
                             ))
                         }
                     },
+                    JournalOp::PartitionSlide { inserted, evict } => match &mut window {
+                        WindowState::Count(w) => {
+                            restore_items += inserted.len() as u64;
+                            let _ = w.slide_external(inserted, evict as usize, false);
+                        }
+                        WindowState::Time(_) => {
+                            return Err(Error::Checkpoint(
+                                "partition-slide op journaled against a time window".into(),
+                            ))
+                        }
+                    },
                     JournalOp::Tick { records, now } => match &mut window {
                         WindowState::Time(w) => {
                             restore_items += records.len() as u64;
@@ -1687,17 +1953,8 @@ impl Coordinator {
         }
         restore_items += coord.sampler.rebuild(&sampler_source) as u64;
         coord.windows_processed = misc.windows_processed;
-        coord.next_query_id = misc.next_query_id;
-        for q in misc.queries {
-            q.spec.validate_for(&coord.cfg)?;
-            let cost = budget::from_spec(&q.spec.budget);
-            coord.queries.push(RegisteredQuery {
-                id: QueryId::new(q.raw_id),
-                spec: q.spec,
-                cost,
-                last_alloc: 0,
-            });
-        }
+        coord.queries.restore(&coord.cfg, misc.next_query_id, misc.queries)?;
+        coord.owned_strata = misc.owned_strata;
         // Resume the adaptive-budget trajectories. A state only lands on
         // a cost function of the SAME policy: `Compat` deliberately lets
         // budgets differ between checkpoint and restore configs, and a
@@ -1709,13 +1966,7 @@ impl Coordinator {
                 coord.cost.import_state(*state);
             }
         }
-        for q in &mut coord.queries {
-            if let Some((policy, state)) = budget_states.get(&q.id.as_u64()) {
-                if policy == q.cost.name() {
-                    q.cost.import_state(*state);
-                }
-            }
-        }
+        coord.queries.import_budget_states(&budget_states);
         coord.injector.restore_state(misc.fault);
         coord.degrade.restore_state(misc.degrade_level, misc.degrade_calm);
         // The recovery policy survives too: the injector RNGs replay the

@@ -14,6 +14,7 @@
 pub mod driver;
 pub mod pipeline;
 pub mod query;
+pub(crate) mod registry;
 pub mod report;
 pub mod session;
 

@@ -1,0 +1,309 @@
+//! The query registry — N concurrent query specs plus their live cost
+//! functions, factored out of the driver so the single-coordinator slide
+//! loop and the partition merge tier run the *same* derive / feedback /
+//! cost-attribution code paths. Byte-identity between the two is by
+//! construction: there is exactly one implementation of "answer every
+//! registered query from per-stratum moments" in the crate, and both
+//! callers go through it.
+
+use std::collections::BTreeMap;
+
+use crate::budget::{self, CostFunction};
+use crate::checkpoint::QueryEntry;
+use crate::config::system::{BudgetSpec, SystemConfig};
+use crate::coordinator::query::{QueryId, QuerySpec};
+use crate::coordinator::report::QueryReport;
+use crate::error::Result;
+use crate::job::aggregate::derive_aggregate_sketched;
+use crate::job::moments::Moments;
+use crate::job::sketch::SketchBundle;
+use crate::metrics::{SlideWork, Stopwatch};
+use crate::stats::stratified::StratumAgg;
+use crate::workload::record::StratumId;
+
+/// One registered query: its spec plus its live cost function (the
+/// adaptive budgets carry per-query state, e.g. the latency EWMA or the
+/// error-target controller's smoothed demand).
+pub(crate) struct RegisteredQuery {
+    pub(crate) id: QueryId,
+    pub(crate) spec: QuerySpec,
+    pub(crate) cost: Box<dyn CostFunction>,
+    /// The sample size this query's own budget asked for on the current
+    /// slide (set by `union_sample_size`). Cost feedback is attributed
+    /// against this, never against the union the shared sampler ran at —
+    /// feeding every query the union the shared sampler ran at would let
+    /// one query's load contaminate every other query's cost model.
+    pub(crate) last_alloc: usize,
+}
+
+/// The registered queries of a session, in submission order, plus the
+/// monotone id counter. Owned by a [`Coordinator`](super::Coordinator)
+/// in single-node runs and by the partition
+/// [`MergeTier`](crate::partition::MergeTier) in scale-out runs (where
+/// the per-partition coordinators carry *no* queries — answers are
+/// derived once, from the merged state).
+#[derive(Default)]
+pub(crate) struct QueryRegistry {
+    queries: Vec<RegisteredQuery>,
+    next_query_id: u64,
+}
+
+impl QueryRegistry {
+    /// Validate and register a query spec, minting its id.
+    pub(crate) fn submit(&mut self, cfg: &SystemConfig, spec: QuerySpec) -> Result<QueryId> {
+        spec.validate_for(cfg)?;
+        let id = QueryId::new(self.next_query_id);
+        self.next_query_id += 1;
+        let cost = budget::from_spec(&spec.budget);
+        self.queries.push(RegisteredQuery { id, spec, cost, last_alloc: 0 });
+        Ok(id)
+    }
+
+    /// Test seam: register with a caller-supplied cost function.
+    #[cfg(test)]
+    pub(crate) fn submit_with_cost(
+        &mut self,
+        cfg: &SystemConfig,
+        spec: QuerySpec,
+        cost: Box<dyn CostFunction>,
+    ) -> Result<QueryId> {
+        spec.validate_for(cfg)?;
+        let id = QueryId::new(self.next_query_id);
+        self.next_query_id += 1;
+        self.queries.push(RegisteredQuery { id, spec, cost, last_alloc: 0 });
+        Ok(id)
+    }
+
+    /// Deregister; returns whether the id was present.
+    pub(crate) fn remove(&mut self, id: QueryId) -> bool {
+        let before = self.queries.len();
+        self.queries.retain(|q| q.id != id);
+        self.queries.len() != before
+    }
+
+    /// Number of registered queries.
+    pub(crate) fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    /// No queries registered (legacy single-query behavior)?
+    pub(crate) fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    /// The specs, in submission order.
+    pub(crate) fn specs(&self) -> impl Iterator<Item = (QueryId, &QuerySpec)> {
+        self.queries.iter().map(|q| (q.id, &q.spec))
+    }
+
+    /// Does any registered query need the per-chunk sketch pass?
+    pub(crate) fn wants_sketches(&self) -> bool {
+        self.queries.iter().any(|q| q.spec.kind.is_sketch())
+    }
+
+    /// Propagate the degradation ladder's bound multiplier to every
+    /// query budget (open-loop budgets ignore it by contract).
+    pub(crate) fn set_bound_scale(&mut self, scale: f64) {
+        for q in &mut self.queries {
+            q.cost.set_bound_scale(scale);
+        }
+    }
+
+    /// The union (max) of the per-query budget allocations for this
+    /// slide, remembering each query's own ask for post-slide cost
+    /// attribution. `None` with no queries registered — the caller falls
+    /// back to its session-level budget.
+    pub(crate) fn union_sample_size(&mut self, window_len: usize) -> Option<usize> {
+        if self.queries.is_empty() {
+            return None;
+        }
+        Some(
+            self.queries
+                .iter_mut()
+                .map(|q| {
+                    // Remember each query's own ask: post-slide cost
+                    // feedback is attributed against it, not the union.
+                    q.last_alloc = q.cost.sample_size(window_len);
+                    q.last_alloc
+                })
+                .max()
+                .unwrap_or(1),
+        )
+    }
+
+    /// Answer every registered query from the shared per-stratum moments,
+    /// exact populations, and sketch bundles — O(strata) per query, timed
+    /// individually so cost feedback can charge a query for its own
+    /// derivation and not its neighbors'.
+    ///
+    /// `blanket_degraded` selects the degradation-flag rule: `true` (the
+    /// single-coordinator path) flags every query when *any* stratum
+    /// degraded this slide; `false` (the merge tier, which knows which
+    /// partition each stratum lives in) flags a stratum-scoped query only
+    /// when its own stratum is in `degraded_strata`, so one partition's
+    /// fault never taints a healthy partition's stratum-scoped answers.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn derive_phase(
+        &self,
+        moments: &BTreeMap<StratumId, Moments>,
+        populations: &BTreeMap<StratumId, u64>,
+        sketches: &BTreeMap<StratumId, SketchBundle>,
+        bound_scale: f64,
+        degraded_strata: &[StratumId],
+        blanket_degraded: bool,
+        work: &mut SlideWork,
+    ) -> Result<(Vec<QueryReport>, Vec<f64>)> {
+        let any_degraded = !degraded_strata.is_empty();
+        let mut reports: Vec<QueryReport> = Vec::with_capacity(self.queries.len());
+        let mut derive_ms: Vec<f64> = Vec::with_capacity(self.queries.len());
+        for q in &self.queries {
+            let sw_derive = Stopwatch::start();
+            let d = derive_aggregate_sketched(
+                q.spec.kind,
+                q.spec.stratum,
+                q.spec.confidence,
+                moments,
+                populations,
+                sketches,
+            )?;
+            derive_ms.push(sw_derive.elapsed_ms());
+            work.derive_items += d.strata_touched;
+            let degraded = match q.spec.stratum {
+                Some(s) if !blanket_degraded => degraded_strata.contains(&s),
+                _ => any_degraded,
+            };
+            reports.push(QueryReport {
+                id: q.id,
+                kind: q.spec.kind,
+                estimate: d.estimate,
+                sample_size: d.sample_size,
+                population: d.population,
+                extrema: d.extrema,
+                surface: d.surface,
+                target_rel_bound: match q.spec.budget {
+                    // The *effective* target: the configured baseline
+                    // widened by the degradation ladder's current level.
+                    BudgetSpec::TargetError { relative_bound, .. } => {
+                        Some(relative_bound * bound_scale)
+                    }
+                    _ => None,
+                },
+                bound_scale: match q.spec.budget {
+                    BudgetSpec::TargetError { .. } => bound_scale,
+                    _ => 1.0,
+                },
+                degraded,
+            });
+        }
+        Ok((reports, derive_ms))
+    }
+
+    /// Close the per-query error-bound loop: every adaptive error-target
+    /// budget reads the achieved per-stratum aggregates its own query
+    /// covers and re-solves for the sample size the *next* slide needs.
+    /// O(strata) per adaptive budget, charged to `budget_adjust`.
+    pub(crate) fn observe_bounds(
+        &mut self,
+        moments: &BTreeMap<StratumId, Moments>,
+        populations: &BTreeMap<StratumId, u64>,
+        window_len: usize,
+        work: &mut SlideWork,
+    ) {
+        for q in &mut self.queries {
+            if !q.cost.wants_bound_feedback() {
+                continue;
+            }
+            let feedback: Vec<StratumAgg> = moments
+                .iter()
+                .filter(|entry| q.spec.stratum.map_or(true, |want| want == *entry.0))
+                .map(|(s, m)| {
+                    StratumAgg::from_moments(
+                        m,
+                        populations.get(s).copied().unwrap_or(0) as f64,
+                    )
+                })
+                .collect();
+            work.budget_adjust += feedback.len() as u64;
+            q.cost.observe_bound(&feedback, window_len as f64);
+        }
+    }
+
+    /// Per-query cost attribution: each budget observes its OWN share —
+    /// its proportional slice of the shared substrate plus its own
+    /// derivation time — never the union sample + whole-slide latency.
+    pub(crate) fn attribute_costs(
+        &mut self,
+        union_realized: usize,
+        substrate_ms: f64,
+        derive_ms: &[f64],
+    ) {
+        for (q, &d_ms) in self.queries.iter_mut().zip(derive_ms) {
+            let (items, elapsed) =
+                budget::attribute_query_cost(q.last_alloc, union_realized, substrate_ms, d_ms);
+            q.cost.observe(items, elapsed);
+        }
+    }
+
+    /// The per-query half of the durable budget-state slots, as
+    /// `(raw id, policy, state)` — the caller prepends its session slot.
+    pub(crate) fn budget_state_slots(&self) -> Vec<(u64, &'static str, f64)> {
+        let mut slots = Vec::new();
+        for q in &self.queries {
+            if let Some(state) = q.cost.export_state() {
+                slots.push((q.id.as_u64(), q.cost.name(), state));
+            }
+        }
+        slots
+    }
+
+    /// The checkpointable registry image: raw ids + specs.
+    pub(crate) fn entries(&self) -> Vec<QueryEntry> {
+        self.queries
+            .iter()
+            .map(|q| QueryEntry { raw_id: q.id.as_u64(), spec: q.spec.clone() })
+            .collect()
+    }
+
+    /// The id the next [`QueryRegistry::submit`] will mint.
+    pub(crate) fn next_id(&self) -> u64 {
+        self.next_query_id
+    }
+
+    /// Restore-path twin of [`QueryRegistry::submit`]: rebuild the
+    /// registry from checkpointed entries (ids are preserved, cost
+    /// functions are re-derived from the specs) and resume the id
+    /// counter.
+    pub(crate) fn restore(
+        &mut self,
+        cfg: &SystemConfig,
+        next_query_id: u64,
+        entries: Vec<QueryEntry>,
+    ) -> Result<()> {
+        self.next_query_id = next_query_id;
+        for q in entries {
+            q.spec.validate_for(cfg)?;
+            let cost = budget::from_spec(&q.spec.budget);
+            self.queries.push(RegisteredQuery {
+                id: QueryId::new(q.raw_id),
+                spec: q.spec,
+                cost,
+                last_alloc: 0,
+            });
+        }
+        Ok(())
+    }
+
+    /// Resume the adaptive-budget trajectories from checkpointed slots.
+    /// A state only lands on a cost function of the SAME policy (a
+    /// banked-token count imported as a latency EWMA would poison the
+    /// model); mismatched or orphaned slots are ignored.
+    pub(crate) fn import_budget_states(&mut self, states: &BTreeMap<u64, (String, f64)>) {
+        for q in &mut self.queries {
+            if let Some((policy, state)) = states.get(&q.id.as_u64()) {
+                if policy == q.cost.name() {
+                    q.cost.import_state(*state);
+                }
+            }
+        }
+    }
+}

@@ -39,6 +39,7 @@ pub mod kafka;
 pub mod lint;
 pub mod logging;
 pub mod metrics;
+pub mod partition;
 pub mod prelude;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

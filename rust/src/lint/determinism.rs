@@ -30,9 +30,10 @@ use super::{Diagnostic, SourceFile};
 
 /// Modules whose outputs must be a pure function of (input, seed): the
 /// window/sampler/memo substrate, the job layer, the checkpoint wire,
-/// and the statistics + budget solve paths.
-pub const CONE: [&str; 7] =
-    ["window/", "sampling/", "sac/", "job/", "checkpoint/", "stats/", "budget/"];
+/// the statistics + budget solve paths, and the partition merge tier
+/// (whose merged reports are pinned byte-identical to a solo run).
+pub const CONE: [&str; 8] =
+    ["window/", "sampling/", "sac/", "job/", "checkpoint/", "stats/", "budget/", "partition/"];
 
 /// Observability layers allowed to read the clock: they measure,
 /// report, and benchmark, but nothing they produce flows back into

@@ -257,6 +257,12 @@ pub struct SlideWork {
     /// event count — excluded from the items-touched totals so the
     /// O(delta) work comparisons are untouched by fault handling.
     pub retries: u64,
+    /// Per-stratum state reads performed by the partition **merge tier**
+    /// to fold K partition states into one global report: O(strata · K)
+    /// per slide, independent of record count — the scale-out analog of
+    /// `derive_items`. Always 0 on single-coordinator runs;
+    /// `benches/partition_scaleout.rs --smoke` asserts the flatness.
+    pub merge_items: u64,
 }
 
 impl SlideWork {
@@ -267,7 +273,11 @@ impl SlideWork {
     /// so enabling durability or fault handling never perturbs the
     /// O(delta) work comparisons.
     pub fn total(&self) -> u64 {
-        self.substrate_total() + self.derive_items + self.budget_adjust + self.sketch_items
+        self.substrate_total()
+            + self.derive_items
+            + self.budget_adjust
+            + self.sketch_items
+            + self.merge_items
     }
 
     /// Items touched by the shared substrate stages (window, sampler,
@@ -307,6 +317,7 @@ impl WorkProfile {
         self.total.restore_items += w.restore_items;
         self.total.fault_injections += w.fault_injections;
         self.total.retries += w.retries;
+        self.total.merge_items += w.merge_items;
         self.last = w;
         self.windows += 1;
     }
@@ -482,6 +493,7 @@ mod tests {
             restore_items: 9,
             fault_injections: 1,
             retries: 2,
+            merge_items: 0,
         };
         assert_eq!(w1.substrate_total(), 36);
         // Per-query derivation, budget feedback, and sketch folds count
@@ -508,6 +520,23 @@ mod tests {
         assert_eq!(p.total().total(), 64, "event counts stay out of the totals");
         assert!((p.mean_total_per_slide() - 32.0).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
+    }
+
+    #[test]
+    fn merge_items_count_toward_total_but_not_substrate() {
+        let w = SlideWork {
+            window_items: 4,
+            sampler_items: 2,
+            merge_items: 12,
+            ..SlideWork::default()
+        };
+        assert_eq!(w.substrate_total(), 6, "merge work never lands on the substrate");
+        assert_eq!(w.total(), 18);
+        let mut p = WorkProfile::new();
+        p.observe(w);
+        p.observe(SlideWork { merge_items: 3, ..SlideWork::default() });
+        assert_eq!(p.total().merge_items, 15);
+        assert_eq!(p.last().merge_items, 3);
     }
 
     #[test]

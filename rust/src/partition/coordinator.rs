@@ -1,0 +1,120 @@
+//! One partition of a scale-out deployment: a full
+//! [`Coordinator`] scoped to a disjoint stratum range.
+//!
+//! A partition coordinator is not a new execution engine — it is the
+//! single-node coordinator with its slide split at the allocation seam
+//! (`slide_prepare` / `slide_finish`) so the
+//! [`MergeTier`](crate::partition::MergeTier) can compute ONE global
+//! sample allocation over the merged populations and hand it back to
+//! every partition. Partitions register no queries; answers are derived
+//! once, at the tier, from the merged [`PartitionState`].
+//!
+//! Its checkpoint **is** its exported state: the base + delta segment
+//! chain of the inner coordinator doubles as the partition hand-off
+//! transport — restoring the artifact on another host resumes the
+//! partition byte-identically, and shipping a single stratum
+//! (rebalancing) exports that stratum's slice of the same state.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use crate::config::system::SystemConfig;
+use crate::coordinator::driver::{Coordinator, SlidePrep, SlideTiming, StratumTransfer};
+use crate::error::Result;
+use crate::partition::state::PartitionState;
+use crate::workload::record::{Record, StratumId};
+
+/// A coordinator running as one partition of K (see module docs).
+pub struct PartitionCoordinator {
+    inner: Coordinator,
+}
+
+impl PartitionCoordinator {
+    /// Count-windowed partition from a config. The window size is the
+    /// GLOBAL size: the tier's router enforces global capacity via
+    /// explicit eviction counts, so the partition's own buffer — the
+    /// global window restricted to its strata — never trips it.
+    pub(crate) fn new(cfg: SystemConfig) -> Self {
+        PartitionCoordinator { inner: Coordinator::new(cfg) }
+    }
+
+    /// Time-windowed partition; every partition sees the same `now`, so
+    /// emission stays in lockstep.
+    pub(crate) fn new_time_windowed(cfg: SystemConfig, length: u64, slide: u64) -> Self {
+        PartitionCoordinator { inner: Coordinator::new_time_windowed(cfg, length, slide) }
+    }
+
+    /// Wrap a coordinator restored from a checkpoint artifact.
+    pub(crate) fn from_inner(inner: Coordinator) -> Self {
+        PartitionCoordinator { inner }
+    }
+
+    /// The partition's configuration.
+    pub fn config(&self) -> &SystemConfig {
+        self.inner.config()
+    }
+
+    /// The stratum range this partition owns (`None` before the tier
+    /// has routed it anything).
+    pub fn owned_strata(&self) -> Option<&[StratumId]> {
+        self.inner.owned_strata()
+    }
+
+    pub(crate) fn set_owned_strata(&mut self, strata: Option<Vec<StratumId>>) {
+        self.inner.set_owned_strata(strata);
+    }
+
+    pub(crate) fn sampler_populations(&self) -> BTreeMap<StratumId, u64> {
+        self.inner.sampler_populations()
+    }
+
+    pub(crate) fn prepare_count(&mut self, batch: Vec<Record>, evict: usize) -> Result<SlidePrep> {
+        self.inner.partition_prepare_count(batch, evict)
+    }
+
+    pub(crate) fn prepare_tick(
+        &mut self,
+        records: Vec<Record>,
+        now: u64,
+    ) -> Result<Option<SlidePrep>> {
+        self.inner.partition_prepare_tick(records, now)
+    }
+
+    pub(crate) fn finish(
+        &mut self,
+        prep: SlidePrep,
+        horizon: u64,
+        alloc: Option<&BTreeMap<StratumId, usize>>,
+        want_sketches: bool,
+    ) -> (PartitionState, SlideTiming) {
+        self.inner.slide_finish(prep, horizon, alloc, want_sketches)
+    }
+
+    pub(crate) fn export_stratum(&mut self, stratum: StratumId) -> Result<StratumTransfer> {
+        self.inner.export_stratum(stratum)
+    }
+
+    pub(crate) fn import_stratum(&mut self, transfer: StratumTransfer) -> Result<()> {
+        self.inner.import_stratum(transfer)
+    }
+
+    pub(crate) fn is_count_windowed(&self) -> bool {
+        self.inner.is_count_windowed()
+    }
+
+    pub(crate) fn windows_processed(&self) -> u64 {
+        self.inner.windows_processed()
+    }
+
+    pub(crate) fn window_buffer_records(&self) -> Vec<Record> {
+        self.inner.window_buffer_records()
+    }
+
+    /// Write this partition's full state as a base + delta checkpoint
+    /// segment chain — the same artifact format as a solo coordinator's,
+    /// and the partition hand-off transport (see module docs). Returns
+    /// the bytes written.
+    pub fn checkpoint<W: Write>(&mut self, sink: &mut W) -> Result<u64> {
+        self.inner.checkpoint(sink)
+    }
+}

@@ -1,0 +1,666 @@
+//! The merge tier: K partition coordinators folded into one global
+//! answer per slide.
+//!
+//! The tier owns everything *global*: the query registry, the
+//! session-level budget, the degradation ladder, the stratum → partition
+//! assignment, and — for count windows — the global FIFO router that
+//! turns "window of W items" into per-partition eviction counts. Each
+//! slide runs the two-phase protocol:
+//!
+//! 1. **Prepare** — route the slide's records to their owning
+//!    partitions; every partition runs the front half of Algorithm 1
+//!    (fault draw, memo aging bookkeeping, sampler maintenance), after
+//!    which its per-stratum populations are current.
+//! 2. **Allocate** — the tier merges the populations and computes ONE
+//!    proportional allocation (Eq 3.1) over the union budget, exactly
+//!    the allocation a solo coordinator would compute for the global
+//!    window. This is the seam that makes K-way scale-out byte-identical
+//!    to K = 1: sampling decisions depend only on (seed, allocation),
+//!    never on which partition runs them.
+//! 3. **Finish + merge** — partitions run the back half (sample, bias,
+//!    plan, compute, sketch, memoize) against the GLOBAL eviction
+//!    horizon and return mergeable [`PartitionState`]s; the tier folds
+//!    them (O(strata · K), charged to `SlideWork::merge_items`) and
+//!    derives every query's answer from the merged state via the same
+//!    [`QueryRegistry`] code path the solo driver uses.
+//!
+//! Rebalancing ships one stratum's segment chain — window slice, memo
+//! image, chunk caches — to another partition mid-stream
+//! ([`MergeTier::rebalance`]); both sides re-base their checkpoint
+//! chains and the continuation stays byte-identical because every piece
+//! of per-stratum state is location-independent.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::Write;
+
+use crate::budget::{self, CostFunction, DegradationController};
+use crate::config::system::SystemConfig;
+use crate::coordinator::driver::{Coordinator, SlidePrep};
+use crate::coordinator::registry::QueryRegistry;
+use crate::coordinator::report::{SlideOutput, WindowReport};
+use crate::coordinator::{QueryId, QuerySpec};
+use crate::error::{Error, Result};
+use crate::metrics::{Stopwatch, WorkProfile};
+use crate::partition::coordinator::PartitionCoordinator;
+use crate::partition::state::PartitionState;
+use crate::sampling::stratified::allocate_proportional;
+use crate::stats::stratified::{estimate_sum, StratumAgg};
+use crate::workload::record::{Record, StratumId};
+
+/// Global FIFO window simulator for count-based scale-out: the tier
+/// pushes every slide's records and pops the overflow, so eviction
+/// counts are decided by GLOBAL capacity — a partition's own buffer
+/// length says nothing about the global window. Only strata are
+/// buffered (the owner of an eviction is resolved at pop time, which
+/// keeps the router correct across rebalances).
+///
+/// Batch-then-evict here mirrors `CountWindow::slide_external` on the
+/// partitions: FIFO eviction means the evicted multiset and order
+/// depend only on counts, never on push/evict interleaving.
+struct CountRouter {
+    size: usize,
+    buf: VecDeque<StratumId>,
+}
+
+impl CountRouter {
+    fn new(size: usize) -> Self {
+        CountRouter { size, buf: VecDeque::with_capacity(size + 1) }
+    }
+
+    /// Push one slide's records; return the strata of the evicted
+    /// records, oldest first.
+    fn slide(&mut self, batch: &[Record]) -> Vec<StratumId> {
+        for r in batch {
+            self.buf.push_back(r.stratum);
+        }
+        let mut evicted = Vec::new();
+        while self.buf.len() > self.size {
+            if let Some(s) = self.buf.pop_front() {
+                evicted.push(s);
+            }
+        }
+        evicted
+    }
+
+    /// Rebuild from restored partition buffers: `records` is the union
+    /// of the partitions' windows, re-ordered to global arrival order
+    /// by `(timestamp, id)`.
+    fn rebuild(size: usize, mut records: Vec<Record>) -> Self {
+        records.sort_by_key(|r| (r.timestamp, r.id));
+        let mut router = CountRouter::new(size);
+        for r in records {
+            router.buf.push_back(r.stratum);
+        }
+        router
+    }
+}
+
+/// K partition coordinators plus the global merge/derive layer (see
+/// module docs). Drop-in for a solo [`Coordinator`]'s
+/// `process_batch_queries` / `ingest_tick_queries` surface, producing
+/// byte-identical reports.
+pub struct MergeTier {
+    cfg: SystemConfig,
+    queries: QueryRegistry,
+    cost: Box<dyn CostFunction>,
+    degrade: DegradationController,
+    partitions: Vec<PartitionCoordinator>,
+    /// Rebalance overrides on top of the default `stratum % K` owner.
+    overrides: BTreeMap<StratumId, usize>,
+    /// Every stratum the tier has routed so far (drives the
+    /// `owned_strata` bookkeeping carried in partition checkpoints).
+    seen: BTreeSet<StratumId>,
+    /// Global FIFO router — `Some` iff the partitions run count windows.
+    router: Option<CountRouter>,
+    windows_processed: u64,
+    work: WorkProfile,
+}
+
+impl MergeTier {
+    /// K count-windowed partitions sharing one config.
+    pub fn new(cfg: SystemConfig, k: usize) -> Result<MergeTier> {
+        Self::with_partition_configs(vec![cfg; k.max(1)])
+    }
+
+    /// K count-windowed partitions with per-partition configs — the
+    /// chaos harness points fault injection at ONE partition this way.
+    /// Every field that feeds the deterministic compute cone (seed,
+    /// mode, window geometry, chunking, epochs) must match across
+    /// partitions; fault and worker knobs may differ.
+    pub fn with_partition_configs(cfgs: Vec<SystemConfig>) -> Result<MergeTier> {
+        let cfg = Self::validate_configs(&cfgs)?;
+        let partitions = cfgs.into_iter().map(PartitionCoordinator::new).collect();
+        Ok(Self::assemble(cfg, partitions, true))
+    }
+
+    /// K time-windowed partitions (length and slide in ticks) sharing
+    /// one config; feed with [`MergeTier::ingest_tick_queries`].
+    pub fn new_time_windowed(
+        cfg: SystemConfig,
+        k: usize,
+        length: u64,
+        slide: u64,
+    ) -> Result<MergeTier> {
+        let cfgs = vec![cfg; k.max(1)];
+        let tier_cfg = Self::validate_configs(&cfgs)?;
+        let partitions = cfgs
+            .into_iter()
+            .map(|c| PartitionCoordinator::new_time_windowed(c, length, slide))
+            .collect();
+        Ok(Self::assemble(tier_cfg, partitions, false))
+    }
+
+    /// Rebuild a tier from per-partition checkpoint artifacts — the
+    /// segment chains double as the partition state transport. Configs
+    /// are per-partition (worker counts may differ from checkpoint
+    /// time; the outputs cannot). The tier-global query registry is NOT
+    /// in the partition artifacts: re-submit queries after restoring.
+    pub fn restore_partitions(
+        cfgs: Vec<SystemConfig>,
+        artifacts: &[Vec<u8>],
+    ) -> Result<MergeTier> {
+        if cfgs.len() != artifacts.len() {
+            return Err(Error::Config(format!(
+                "restore_partitions: {} configs for {} artifacts",
+                cfgs.len(),
+                artifacts.len()
+            )));
+        }
+        let tier_cfg = Self::validate_configs(&cfgs)?;
+        let mut partitions = Vec::with_capacity(cfgs.len());
+        for (cfg, bytes) in cfgs.into_iter().zip(artifacts) {
+            partitions.push(PartitionCoordinator::from_inner(Coordinator::restore(
+                &bytes[..],
+                cfg,
+            )?));
+        }
+        let count_windowed = partitions[0].is_count_windowed();
+        if partitions.iter().any(|p| p.is_count_windowed() != count_windowed) {
+            return Err(Error::Config(
+                "restore_partitions: mixed window kinds across artifacts".into(),
+            ));
+        }
+        let mut tier = Self::assemble(tier_cfg, partitions, count_windowed);
+        // Rebuild the global bookkeeping the artifacts carry implicitly:
+        // the stratum universe, the rebalance overrides (a stratum owned
+        // away from its `s % K` home), and — for count windows — the
+        // global FIFO router, from the union of the partition buffers.
+        let k = tier.partitions.len();
+        let mut all_records: Vec<Record> = Vec::new();
+        for (i, p) in tier.partitions.iter().enumerate() {
+            for s in p.owned_strata().unwrap_or(&[]) {
+                tier.seen.insert(*s);
+                if (*s as usize) % k != i {
+                    tier.overrides.insert(*s, i);
+                }
+            }
+            all_records.extend(p.window_buffer_records());
+            tier.windows_processed = tier.windows_processed.max(p.windows_processed());
+        }
+        for r in &all_records {
+            tier.seen.insert(r.stratum);
+        }
+        if count_windowed {
+            tier.router = Some(CountRouter::rebuild(tier.cfg.window_size, all_records));
+        }
+        Ok(tier)
+    }
+
+    /// The compute-cone fields every partition must agree on; returns
+    /// the tier config (the first partition's).
+    fn validate_configs(cfgs: &[SystemConfig]) -> Result<SystemConfig> {
+        let first = cfgs.first().ok_or_else(|| {
+            Error::Config("a merge tier needs at least one partition".into())
+        })?;
+        for c in &cfgs[1..] {
+            let same = c.seed == first.seed
+                && c.mode.name() == first.mode.name()
+                && c.window_size == first.window_size
+                && c.slide == first.slide
+                && c.chunk_size == first.chunk_size
+                && c.map_rounds == first.map_rounds
+                && c.recompute_epoch == first.recompute_epoch
+                && c.incremental_slide == first.incremental_slide
+                && c.confidence == first.confidence;
+            if !same {
+                return Err(Error::Config(
+                    "partition configs diverge on a compute-cone field \
+                     (seed / mode / window geometry / chunking / epoch / confidence)"
+                        .into(),
+                ));
+            }
+        }
+        Ok(first.clone())
+    }
+
+    fn assemble(
+        cfg: SystemConfig,
+        partitions: Vec<PartitionCoordinator>,
+        count_windowed: bool,
+    ) -> MergeTier {
+        let cost = budget::from_spec(&cfg.budget);
+        let degrade = DegradationController::new(cfg.degradation_policy());
+        let router = count_windowed.then(|| CountRouter::new(cfg.window_size));
+        MergeTier {
+            cfg,
+            queries: QueryRegistry::default(),
+            cost,
+            degrade,
+            partitions,
+            overrides: BTreeMap::new(),
+            seen: BTreeSet::new(),
+            router,
+            windows_processed: 0,
+            work: WorkProfile::default(),
+        }
+    }
+
+    /// Number of partitions (K).
+    pub fn partition_count(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// The partitions, for inspection (ownership ranges, configs).
+    pub fn partitions(&self) -> &[PartitionCoordinator] {
+        &self.partitions
+    }
+
+    /// The tier configuration (the partitions' shared compute cone plus
+    /// the tier-level budget).
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// The partition currently owning `stratum`.
+    pub fn owner(&self, stratum: StratumId) -> usize {
+        self.overrides
+            .get(&stratum)
+            .copied()
+            .unwrap_or((stratum as usize) % self.partitions.len())
+    }
+
+    /// Register a query at the tier (partitions carry none; see module
+    /// docs).
+    pub fn submit_query(&mut self, spec: QuerySpec) -> Result<QueryId> {
+        self.queries.submit(&self.cfg, spec)
+    }
+
+    /// Deregister a query; returns whether the id was registered.
+    pub fn remove_query(&mut self, id: QueryId) -> bool {
+        self.queries.remove(id)
+    }
+
+    /// Number of registered queries.
+    pub fn query_count(&self) -> usize {
+        self.queries.len()
+    }
+
+    /// Aggregated per-slide work counters (merge work lands in
+    /// `SlideWork::merge_items` — O(strata · K), never O(records)).
+    pub fn work_profile(&self) -> &WorkProfile {
+        &self.work
+    }
+
+    /// Consumer-lag feedback for the overload-degradation ladder, as on
+    /// a solo coordinator.
+    pub fn observe_lag_slides(&mut self, lag_slides: u64) {
+        self.degrade.observe_lag_slides(lag_slides, self.cfg.lag_watermark_slides as u64);
+    }
+
+    /// Current degradation bound multiplier (1.0 = baseline).
+    pub fn bound_scale(&self) -> f64 {
+        self.degrade.scale()
+    }
+
+    /// Windows emitted so far.
+    pub fn windows_processed(&self) -> u64 {
+        self.windows_processed
+    }
+
+    /// Checkpoint one partition's segment chain into `sink`; returns
+    /// bytes written. Checkpointing every partition captures the whole
+    /// tier (the registry is rebuilt by re-submitting queries).
+    pub fn checkpoint_partition<W: Write>(&mut self, i: usize, sink: &mut W) -> Result<u64> {
+        let p = self.partitions.get_mut(i).ok_or_else(|| {
+            Error::Config(format!("checkpoint_partition: no partition {i}"))
+        })?;
+        p.checkpoint(sink)
+    }
+
+    /// Ship `stratum`'s complete live state — window slice, memo image,
+    /// chunk caches — to partition `to`, mid-stream. Count windows
+    /// only. Both partitions re-base their checkpoint chains; the
+    /// continuation is byte-identical because per-stratum state is
+    /// location-independent.
+    pub fn rebalance(&mut self, stratum: StratumId, to: usize) -> Result<()> {
+        if to >= self.partitions.len() {
+            return Err(Error::Config(format!(
+                "rebalance: no partition {to} (K = {})",
+                self.partitions.len()
+            )));
+        }
+        let from = self.owner(stratum);
+        if from == to {
+            return Ok(());
+        }
+        let transfer = self.partitions[from].export_stratum(stratum)?;
+        self.partitions[to].import_stratum(transfer)?;
+        self.overrides.insert(stratum, to);
+        self.seen.insert(stratum);
+        self.refresh_owned(from);
+        self.refresh_owned(to);
+        Ok(())
+    }
+
+    /// Re-derive partition `i`'s `owned_strata` bookkeeping from the
+    /// seen-stratum universe and the current assignment.
+    fn refresh_owned(&mut self, i: usize) {
+        let owned: Vec<StratumId> =
+            self.seen.iter().copied().filter(|&s| self.owner(s) == i).collect();
+        self.partitions[i].set_owned_strata(Some(owned));
+    }
+
+    /// Note newly seen strata and refresh the affected partitions'
+    /// ownership bookkeeping.
+    fn note_strata(&mut self, batch: &[Record]) {
+        let mut dirty: BTreeSet<usize> = BTreeSet::new();
+        for r in batch {
+            if self.seen.insert(r.stratum) {
+                dirty.insert(self.owner(r.stratum));
+            }
+        }
+        for i in dirty {
+            self.refresh_owned(i);
+        }
+    }
+
+    /// Route records to their owning partitions, preserving arrival
+    /// order within each partition.
+    fn route(&self, batch: &[Record]) -> Vec<Vec<Record>> {
+        let mut per: Vec<Vec<Record>> = (0..self.partitions.len()).map(|_| Vec::new()).collect();
+        for r in batch {
+            per[self.owner(r.stratum)].push(*r);
+        }
+        per
+    }
+
+    /// Count-windowed slide: the window-report half of
+    /// [`MergeTier::process_batch_queries`].
+    pub fn process_batch(&mut self, batch: Vec<Record>) -> Result<WindowReport> {
+        Ok(self.process_batch_queries(batch)?.window)
+    }
+
+    /// Count-windowed slide across all K partitions: route, prepare,
+    /// allocate globally, finish, merge, derive (see module docs).
+    pub fn process_batch_queries(&mut self, batch: Vec<Record>) -> Result<SlideOutput> {
+        let sw = Stopwatch::start();
+        if self.router.is_none() {
+            return Err(Error::Job(
+                "process_batch needs count-windowed partitions; use ingest_tick".into(),
+            ));
+        }
+        self.note_strata(&batch);
+        let mut per = self.route(&batch);
+        let evicted = match &mut self.router {
+            Some(router) => router.slide(&batch),
+            None => Vec::new(),
+        };
+        let mut evicts = vec![0usize; self.partitions.len()];
+        for s in evicted {
+            evicts[self.owner(s)] += 1;
+        }
+        let mut preps = Vec::with_capacity(self.partitions.len());
+        for (i, p) in self.partitions.iter_mut().enumerate() {
+            preps.push(p.prepare_count(std::mem::take(&mut per[i]), evicts[i])?);
+        }
+        self.finish_merged(preps, sw)
+    }
+
+    /// Time-windowed tick: the window-report half of
+    /// [`MergeTier::ingest_tick_queries`].
+    pub fn ingest_tick(
+        &mut self,
+        records: Vec<Record>,
+        now: u64,
+    ) -> Result<Option<WindowReport>> {
+        Ok(self.ingest_tick_queries(records, now)?.map(|s| s.window))
+    }
+
+    /// Time-windowed tick across all K partitions. Every partition sees
+    /// every tick (possibly with no records), so emission stays in
+    /// lockstep; a partial emission is a hard error, never a partial
+    /// answer.
+    pub fn ingest_tick_queries(
+        &mut self,
+        records: Vec<Record>,
+        now: u64,
+    ) -> Result<Option<SlideOutput>> {
+        let sw = Stopwatch::start();
+        if self.router.is_some() {
+            return Err(Error::Job(
+                "ingest_tick needs time-windowed partitions; use process_batch".into(),
+            ));
+        }
+        self.note_strata(&records);
+        let mut per = self.route(&records);
+        let mut preps: Vec<SlidePrep> = Vec::with_capacity(self.partitions.len());
+        let mut emitted = 0usize;
+        for (i, p) in self.partitions.iter_mut().enumerate() {
+            if let Some(prep) = p.prepare_tick(std::mem::take(&mut per[i]), now)? {
+                emitted += 1;
+                preps.push(prep);
+            }
+        }
+        if emitted == 0 {
+            return Ok(None);
+        }
+        if emitted != self.partitions.len() {
+            return Err(Error::Job(format!(
+                "partition time windows fell out of lockstep: {emitted} of {} emitted",
+                self.partitions.len()
+            )));
+        }
+        self.finish_merged(preps, sw).map(Some)
+    }
+
+    /// Phases 2–3 of the slide protocol: global allocation, per-partition
+    /// finish at the GLOBAL horizon, the O(strata · K) merge fold, and
+    /// the single derive pass over the merged state.
+    fn finish_merged(&mut self, preps: Vec<SlidePrep>, sw: Stopwatch) -> Result<SlideOutput> {
+        let window_id = preps.first().map(SlidePrep::window_id).unwrap_or(0);
+        if preps.iter().any(|p| p.window_id() != window_id) {
+            return Err(Error::Job(
+                "partition windows fell out of lockstep (window ids diverge)".into(),
+            ));
+        }
+        let window_len: usize = preps.iter().map(SlidePrep::window_len).sum();
+        // The global eviction horizon: the minimum in-window timestamp
+        // across non-empty partitions — exactly the solo window's
+        // `start_ts`, whose per-partition value is the same minimum
+        // restricted to the partition's strata.
+        let horizon = preps
+            .iter()
+            .filter(|p| p.window_len() > 0)
+            .map(SlidePrep::start_ts)
+            .min()
+            .unwrap_or(0);
+
+        // Degradation propagates to the budgets BEFORE they size the
+        // slide — same order as the solo driver's `slide_prepare`.
+        let bound_scale = self.degrade.scale();
+        self.cost.set_bound_scale(bound_scale);
+        self.queries.set_bound_scale(bound_scale);
+
+        // One global allocation over the merged exact populations: the
+        // partitions' samplers are current after prepare, and their
+        // strata are disjoint by construction.
+        let alloc = if self.cfg.mode.samples() {
+            let mut populations: BTreeMap<StratumId, u64> = BTreeMap::new();
+            for p in &self.partitions {
+                for (s, n) in p.sampler_populations() {
+                    if populations.insert(s, n).is_some() {
+                        return Err(Error::Job(format!(
+                            "stratum {s} tracked by two partitions' samplers"
+                        )));
+                    }
+                }
+            }
+            let n = match self.queries.union_sample_size(window_len) {
+                Some(n) => n,
+                None => self.cost.sample_size(window_len),
+            };
+            Some(allocate_proportional(n, &populations))
+        } else {
+            None
+        };
+        let want_sketches = self.queries.wants_sketches();
+
+        // Finish every partition at the global horizon and fold the
+        // mergeable states. The fold touches per-stratum ENTRIES, never
+        // records: its cost is O(strata · K) and is charged to
+        // `merge_items` so the flat-merge gate can pin it.
+        let mut merged = PartitionState::empty();
+        let mut merge_items: u64 = 0;
+        for (p, prep) in self.partitions.iter_mut().zip(preps) {
+            let (state, _timing) = p.finish(prep, horizon, alloc.as_ref(), want_sketches);
+            merge_items += 1
+                + state.moments.len() as u64
+                + state.sketches.len() as u64
+                + state.populations.len() as u64
+                + state.strata.len() as u64;
+            merged = merged.merge(state)?;
+        }
+        let mut slide_work = merged.work;
+        slide_work.merge_items += merge_items;
+
+        // --- Derive from the merged state (same code path as solo) ---
+        let degraded = !merged.degraded_strata.is_empty();
+        let mut aggs: Vec<StratumAgg> = Vec::with_capacity(merged.moments.len());
+        for (s, m) in &merged.moments {
+            let population = merged.populations.get(s).copied().unwrap_or(0) as f64;
+            aggs.push(StratumAgg::from_moments(m, population));
+        }
+        let estimate = estimate_sum(&aggs, self.cfg.confidence)?;
+        // The tier knows which partition each stratum lives in, so
+        // stratum-scoped queries get precise (non-blanket) degradation
+        // flags: one partition's fault never taints a healthy
+        // partition's answers.
+        let (query_reports, derive_ms) = self.queries.derive_phase(
+            &merged.moments,
+            &merged.populations,
+            &merged.sketches,
+            bound_scale,
+            &merged.degraded_strata,
+            false,
+            &mut slide_work,
+        )?;
+        if self.cost.wants_bound_feedback() {
+            slide_work.budget_adjust += aggs.len() as u64;
+            self.cost.observe_bound(&aggs, window_len as f64);
+        }
+        self.queries.observe_bounds(
+            &merged.moments,
+            &merged.populations,
+            window_len,
+            &mut slide_work,
+        );
+
+        let latency_ms = sw.elapsed_ms();
+        self.work.observe(slide_work);
+        self.cost.observe(merged.sample_size, latency_ms);
+        let total_derive_ms: f64 = derive_ms.iter().sum();
+        let substrate_ms = (latency_ms - total_derive_ms).max(0.0);
+        self.queries.attribute_costs(merged.sample_size, substrate_ms, &derive_ms);
+        self.windows_processed += 1;
+
+        Ok(SlideOutput {
+            window: WindowReport {
+                window_id,
+                mode: self.cfg.mode.name(),
+                estimate,
+                window_len,
+                sample_size: merged.sample_size,
+                chunks_total: merged.chunks_total,
+                chunks_reused: merged.chunks_reused,
+                fresh_items: merged.fresh_items,
+                strata: merged.strata,
+                latency_ms,
+                fault_injected: merged.fault_injected,
+                degraded,
+            },
+            queries: query_reports,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::system::{BudgetSpec, ExecModeSpec};
+    use crate::workload::gen::MultiStream;
+
+    fn config() -> SystemConfig {
+        SystemConfig {
+            seed: 11,
+            mode: ExecModeSpec::IncApprox,
+            window_size: 800,
+            slide: 200,
+            budget: BudgetSpec::Fraction(0.2),
+            chunk_size: 16,
+            ..SystemConfig::default()
+        }
+    }
+
+    fn assert_windows_match(a: &WindowReport, b: &WindowReport, label: &str) {
+        assert_eq!(a.window_id, b.window_id, "{label}: window_id");
+        assert_eq!(
+            a.estimate.value.to_bits(),
+            b.estimate.value.to_bits(),
+            "{label}: estimate"
+        );
+        assert_eq!(
+            a.estimate.margin.to_bits(),
+            b.estimate.margin.to_bits(),
+            "{label}: margin"
+        );
+        assert_eq!(a.window_len, b.window_len, "{label}: window_len");
+        assert_eq!(a.sample_size, b.sample_size, "{label}: sample_size");
+        assert_eq!(a.strata, b.strata, "{label}: strata");
+    }
+
+    #[test]
+    fn two_partitions_match_solo_count_windows() {
+        let mut solo = Coordinator::new(config());
+        let mut tier = MergeTier::new(config(), 2).unwrap();
+        let mut gen = MultiStream::paper_section5(5);
+        for i in 0..8 {
+            let batch = gen.take_records(200);
+            let a = solo.process_batch(batch.clone()).unwrap();
+            let b = tier.process_batch(batch).unwrap();
+            assert_windows_match(&a, &b, &format!("slide {i}"));
+        }
+        assert!(tier.work_profile().total().merge_items > 0, "merge work uncharged");
+    }
+
+    #[test]
+    fn window_kind_mismatch_is_an_error() {
+        let mut tier = MergeTier::new(config(), 2).unwrap();
+        assert!(tier.ingest_tick(Vec::new(), 1).is_err());
+        let mut tier = MergeTier::new_time_windowed(config(), 2, 100, 25).unwrap();
+        assert!(tier.process_batch(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn rebalance_requires_count_windows() {
+        let mut tier = MergeTier::new_time_windowed(config(), 2, 100, 25).unwrap();
+        let mut gen = MultiStream::paper_section5(5);
+        let mut now = 0;
+        for _ in 0..120 {
+            now += 1;
+            let recs = gen.tick();
+            let _ = tier.ingest_tick(recs, now).unwrap();
+        }
+        let err = tier.rebalance(0, tier.owner(0) ^ 1).unwrap_err();
+        assert!(err.to_string().contains("count"), "got: {err}");
+    }
+}

@@ -1,0 +1,33 @@
+//! Multi-partition scale-out: K coordinators over disjoint stratum
+//! ranges plus a byte-identical merge tier.
+//!
+//! The single-coordinator slide is split at its allocation seam into a
+//! prepare half and a finish half; the finish half returns a mergeable
+//! [`PartitionState`] whose merge law is *disjoint union plus sums* —
+//! commutative and associative by construction, because no float is
+//! ever folded across partitions (each stratum's moments are computed
+//! by exactly one partition and travel whole). The [`MergeTier`] routes
+//! records by stratum, computes ONE global sample allocation over the
+//! merged populations, folds the K states in O(strata · K) (charged to
+//! `SlideWork::merge_items`), and derives every query's answer from the
+//! merged state through the same registry code path the solo driver
+//! uses. A solo run is the degenerate K = 1 deployment, which is why
+//! `tests/partition_equivalence.rs` can demand byte-identical reports.
+//!
+//! State hand-off reuses the checkpoint base + delta segment chain: a
+//! partition's chain IS its exported state, and rebalancing a stratum
+//! ships that stratum's slice of the chain (window records, memo image,
+//! chunk caches) to another partition mid-stream.
+//!
+//! Adding a new field to [`PartitionState`] obligates three things: a
+//! merge rule in `PartitionState::merge` (disjoint-union or sum — never
+//! a float fold), a wire op if it must survive restore, and a law-test
+//! extension in `tests/partition_laws.rs`.
+
+pub mod coordinator;
+pub mod merge;
+pub mod state;
+
+pub use coordinator::PartitionCoordinator;
+pub use merge::MergeTier;
+pub use state::PartitionState;

@@ -1,0 +1,309 @@
+//! The mergeable per-partition slide state.
+//!
+//! [`PartitionState`] is everything one coordinator's
+//! `slide_finish` produces for one window: per-stratum moments, sketch
+//! bundles, exact populations, per-stratum reports, and the slide's work
+//! counters. The merge law is **disjoint union plus sums**: partitions
+//! own disjoint stratum ranges, so per-stratum maps merge by union (an
+//! overlapping stratum is a routing bug and a hard error, never a silent
+//! `Moments::combine` — float combination order would break
+//! byte-determinism) and window-level scalars merge by addition.
+//! That makes `merge` commutative and associative *by construction*:
+//! `BTreeMap` union is order-independent, integer sums commute, and no
+//! float is ever folded across partitions — floats only travel inside
+//! their stratum's slot, computed by exactly one partition.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::report::StratumReport;
+use crate::error::{Error, Result};
+use crate::job::moments::Moments;
+use crate::job::sketch::SketchBundle;
+use crate::metrics::SlideWork;
+use crate::util::hash::StableHasher;
+use crate::workload::record::StratumId;
+
+/// One partition's complete mergeable output for one window.
+///
+/// Produced by the driver's `slide_finish`; folded across partitions by
+/// the [`MergeTier`](crate::partition::MergeTier). A solo run is the
+/// degenerate K = 1 deployment: its "merge" of one state is the state
+/// itself, which is why the single-coordinator path and the partitioned
+/// path are byte-identical by construction.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionState {
+    /// Monotonic window sequence number (identical across partitions in
+    /// lockstep; a mismatch on merge is a hard error).
+    pub window_id: u64,
+    /// Items in this partition's window slice (sums on merge).
+    pub window_len: usize,
+    /// Realized biased-sample size (sums on merge).
+    pub sample_size: usize,
+    /// Full-path chunks planned (sums on merge).
+    pub chunks_total: usize,
+    /// Full-path chunks served from memo (sums on merge).
+    pub chunks_reused: usize,
+    /// Items actually recomputed (sums on merge).
+    pub fresh_items: usize,
+    /// Per-stratum combined moments (disjoint union on merge).
+    pub moments: BTreeMap<StratumId, Moments>,
+    /// Per-stratum sketch bundles (disjoint union on merge; empty when
+    /// no sketch-backed query is registered).
+    pub sketches: BTreeMap<StratumId, SketchBundle>,
+    /// Per-stratum exact populations (disjoint union on merge).
+    pub populations: BTreeMap<StratumId, u64>,
+    /// Per-stratum sampling/reuse reports (disjoint union on merge).
+    pub strata: BTreeMap<StratumId, StratumReport>,
+    /// Strata whose compute budget exhausted this slide, sorted
+    /// (concatenated + re-sorted on merge — fault isolation: only the
+    /// faulting partition's strata appear).
+    pub degraded_strata: Vec<StratumId>,
+    /// Whether a memo-loss fault fired in this partition (ORs on merge).
+    pub fault_injected: bool,
+    /// The slide's work counters (field-wise sums on merge).
+    pub work: SlideWork,
+}
+
+/// Field-wise sum of two slides' work counters.
+fn sum_work(a: SlideWork, b: SlideWork) -> SlideWork {
+    SlideWork {
+        window_items: a.window_items + b.window_items,
+        sampler_items: a.sampler_items + b.sampler_items,
+        plan_items: a.plan_items + b.plan_items,
+        compute_items: a.compute_items + b.compute_items,
+        derive_items: a.derive_items + b.derive_items,
+        budget_adjust: a.budget_adjust + b.budget_adjust,
+        sketch_items: a.sketch_items + b.sketch_items,
+        checkpoint_bytes: a.checkpoint_bytes + b.checkpoint_bytes,
+        restore_items: a.restore_items + b.restore_items,
+        fault_injections: a.fault_injections + b.fault_injections,
+        retries: a.retries + b.retries,
+        merge_items: a.merge_items + b.merge_items,
+    }
+}
+
+impl PartitionState {
+    /// The merge identity: no strata, no items, no work. `merge(s,
+    /// empty) == merge(empty, s) == s` for every state `s`.
+    pub fn empty() -> PartitionState {
+        PartitionState::default()
+    }
+
+    /// Is this state the merge identity? (A partition that owns no
+    /// strata yet produces exactly this, modulo its window id — which
+    /// the identity deliberately does not pin, so strata-less partitions
+    /// never block a merge.)
+    pub fn is_identity(&self) -> bool {
+        self.window_len == 0
+            && self.sample_size == 0
+            && self.chunks_total == 0
+            && self.chunks_reused == 0
+            && self.fresh_items == 0
+            && self.moments.is_empty()
+            && self.sketches.is_empty()
+            && self.populations.is_empty()
+            && self.strata.is_empty()
+            && self.degraded_strata.is_empty()
+            && !self.fault_injected
+            && self.work == SlideWork::default()
+    }
+
+    /// Fold another partition's state into this one.
+    ///
+    /// Commutative and associative (see module docs). Errors when the
+    /// two states cover the same stratum (routing bug) or carry
+    /// different window ids (lockstep bug) — never silently combines.
+    pub fn merge(mut self, other: PartitionState) -> Result<PartitionState> {
+        if other.is_identity() {
+            return Ok(self);
+        }
+        if self.is_identity() {
+            return Ok(other);
+        }
+        if self.window_id != other.window_id {
+            return Err(Error::Job(format!(
+                "partition states out of lockstep: window {} vs {}",
+                self.window_id, other.window_id
+            )));
+        }
+        for (s, m) in other.moments {
+            if self.moments.insert(s, m).is_some() {
+                return Err(overlap(s, "moments"));
+            }
+        }
+        for (s, b) in other.sketches {
+            if self.sketches.insert(s, b).is_some() {
+                return Err(overlap(s, "sketches"));
+            }
+        }
+        for (s, n) in other.populations {
+            if self.populations.insert(s, n).is_some() {
+                return Err(overlap(s, "populations"));
+            }
+        }
+        for (s, r) in other.strata {
+            if self.strata.insert(s, r).is_some() {
+                return Err(overlap(s, "strata reports"));
+            }
+        }
+        self.degraded_strata.extend(other.degraded_strata);
+        self.degraded_strata.sort_unstable();
+        self.degraded_strata.dedup();
+        self.window_len += other.window_len;
+        self.sample_size += other.sample_size;
+        self.chunks_total += other.chunks_total;
+        self.chunks_reused += other.chunks_reused;
+        self.fresh_items += other.fresh_items;
+        self.fault_injected |= other.fault_injected;
+        self.work = sum_work(self.work, other.work);
+        Ok(self)
+    }
+
+    /// Seed-stable digest of the full state (floats by bit pattern,
+    /// sketches by wire encoding) — what the law tests compare to pin
+    /// byte-determinism under permuted merge orders.
+    pub fn digest(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.write_u64(self.window_id);
+        h.write_u64(self.window_len as u64);
+        h.write_u64(self.sample_size as u64);
+        h.write_u64(self.chunks_total as u64);
+        h.write_u64(self.chunks_reused as u64);
+        h.write_u64(self.fresh_items as u64);
+        h.write_u64(self.moments.len() as u64);
+        for (s, m) in &self.moments {
+            h.write_u64(u64::from(*s));
+            h.write_f64(m.count);
+            h.write_f64(m.sum);
+            h.write_f64(m.sumsq);
+            h.write_f64(m.min);
+            h.write_f64(m.max);
+        }
+        h.write_u64(self.sketches.len() as u64);
+        for (s, b) in &self.sketches {
+            h.write_u64(u64::from(*s));
+            h.write_bytes(&b.to_bytes());
+        }
+        h.write_u64(self.populations.len() as u64);
+        for (s, n) in &self.populations {
+            h.write_u64(u64::from(*s));
+            h.write_u64(*n);
+        }
+        h.write_u64(self.strata.len() as u64);
+        for (s, r) in &self.strata {
+            h.write_u64(u64::from(*s));
+            h.write_u64(r.sample_size as u64);
+            h.write_u64(r.memo_reused as u64);
+            h.write_u64(r.memo_available as u64);
+            h.write_u64(r.population);
+        }
+        h.write_u64(self.degraded_strata.len() as u64);
+        for s in &self.degraded_strata {
+            h.write_u64(u64::from(*s));
+        }
+        h.write_u64(u64::from(self.fault_injected));
+        for w in [
+            self.work.window_items,
+            self.work.sampler_items,
+            self.work.plan_items,
+            self.work.compute_items,
+            self.work.derive_items,
+            self.work.budget_adjust,
+            self.work.sketch_items,
+            self.work.checkpoint_bytes,
+            self.work.restore_items,
+            self.work.fault_injections,
+            self.work.retries,
+            self.work.merge_items,
+        ] {
+            h.write_u64(w);
+        }
+        h.finish()
+    }
+}
+
+fn overlap(s: StratumId, what: &str) -> Error {
+    Error::Job(format!(
+        "partition merge overlap: stratum {s} appears in two partitions' {what} \
+         (strata must be disjoint across partitions)"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(window_id: u64, strata: &[(StratumId, f64)]) -> PartitionState {
+        let mut st = PartitionState { window_id, ..PartitionState::default() };
+        for &(s, v) in strata {
+            let m = Moments { count: 1.0, sum: v, sumsq: v * v, min: v, max: v };
+            st.moments.insert(s, m);
+            st.populations.insert(s, 10 + u64::from(s));
+            st.strata.insert(
+                s,
+                StratumReport {
+                    sample_size: 3,
+                    memo_reused: 1,
+                    memo_available: 2,
+                    population: 10 + u64::from(s),
+                },
+            );
+            st.window_len += 10 + s as usize;
+            st.sample_size += 3;
+        }
+        st
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        let a = state(4, &[(0, 1.5)]);
+        let b = state(4, &[(1, 2.5)]);
+        let c = state(4, &[(2, -3.0)]);
+        let abc = a.clone().merge(b.clone()).unwrap().merge(c.clone()).unwrap();
+        let cba = c.clone().merge(b.clone()).unwrap().merge(a.clone()).unwrap();
+        let a_bc = a.clone().merge(b.clone().merge(c.clone()).unwrap()).unwrap();
+        assert_eq!(abc.digest(), cba.digest());
+        assert_eq!(abc.digest(), a_bc.digest());
+    }
+
+    #[test]
+    fn empty_is_identity_on_both_sides() {
+        let a = state(9, &[(0, 1.0), (2, 2.0)]);
+        let left = PartitionState::empty().merge(a.clone()).unwrap();
+        let right = a.clone().merge(PartitionState::empty()).unwrap();
+        assert_eq!(left.digest(), a.digest());
+        assert_eq!(right.digest(), a.digest());
+    }
+
+    #[test]
+    fn overlapping_stratum_is_an_error() {
+        let a = state(1, &[(0, 1.0)]);
+        let b = state(1, &[(0, 2.0)]);
+        let err = a.merge(b).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "got: {err}");
+    }
+
+    #[test]
+    fn lockstep_violation_is_an_error() {
+        let a = state(1, &[(0, 1.0)]);
+        let b = state(2, &[(1, 2.0)]);
+        let err = a.merge(b).unwrap_err();
+        assert!(err.to_string().contains("lockstep"), "got: {err}");
+    }
+
+    #[test]
+    fn merge_sums_scalars_and_unions_flags() {
+        let mut a = state(3, &[(0, 1.0)]);
+        a.degraded_strata = vec![0];
+        a.work.compute_items = 7;
+        let mut b = state(3, &[(1, 2.0)]);
+        b.fault_injected = true;
+        b.work.compute_items = 5;
+        let m = a.merge(b).unwrap();
+        assert_eq!(m.work.compute_items, 12);
+        assert!(m.fault_injected);
+        assert_eq!(m.degraded_strata, vec![0]);
+        assert_eq!(m.moments.len(), 2);
+        assert_eq!(m.window_len, 10 + 11);
+    }
+}

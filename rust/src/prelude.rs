@@ -19,6 +19,7 @@ pub use crate::coordinator::{
 };
 pub use crate::error::{Error, Result};
 pub use crate::job::aggregate::{AggregateKind, ErrorSurface};
+pub use crate::partition::{MergeTier, PartitionCoordinator, PartitionState};
 pub use crate::stats::stratified::Estimate;
 pub use crate::workload::gen::MultiStream;
 pub use crate::workload::record::{Record, StratumId};

@@ -78,6 +78,23 @@ pub struct SketchEntry {
     pub stratum: StratumId,
 }
 
+/// One stratum's memoized state, detached by
+/// [`MemoStore::extract_stratum`] for shipping to another partition
+/// (rebalance) and re-attached with [`MemoStore::absorb_stratum`].
+/// Chunk and sketch entries are sorted by content hash so the export is
+/// deterministic regardless of map-internal order.
+#[derive(Debug, Clone, Default)]
+pub struct StratumExport {
+    /// Memoized chunk results, `(hash, entry)` sorted by hash.
+    pub chunks: Vec<(u64, MemoEntry)>,
+    /// Memoized chunk sketches, `(hash, entry)` sorted by hash.
+    pub sketches: Vec<(u64, SketchEntry)>,
+    /// The stratum's memoized sample run, if any.
+    pub items: Option<SampleRun>,
+    /// The stratum's combined moments, if stored.
+    pub moments: Option<Moments>,
+}
+
 /// Hit/miss counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MemoStats {
@@ -319,6 +336,66 @@ impl MemoStore {
         self.shard_mut(idx)
             .sketches
             .insert(hash, SketchEntry { bundle, min_timestamp, window_id, stratum });
+    }
+
+    /// Detach one stratum's memoized state — chunk results, chunk
+    /// sketches, the memoized sample run, and the combined moments —
+    /// removing it from this store. The partition rebalance path ships
+    /// the export to the stratum's new owner, which re-attaches it with
+    /// [`MemoStore::absorb_stratum`]. All of a stratum's entries live on
+    /// its shard (`put_*` routes by stratum), so only that shard pays a
+    /// COW write.
+    pub fn extract_stratum(&mut self, s: StratumId) -> StratumExport {
+        let idx = self.shard_for(s);
+        let shard = self.shard_mut(idx);
+        let mut out = StratumExport::default();
+        let hashes: Vec<u64> = shard
+            .chunks
+            .iter()
+            .filter(|(_, e)| e.stratum == s)
+            .map(|(&h, _)| h)
+            .collect();
+        for h in hashes {
+            if let Some(e) = shard.chunks.remove(&h) {
+                out.chunks.push((h, e));
+            }
+        }
+        out.chunks.sort_by_key(|(h, _)| *h);
+        let hashes: Vec<u64> = shard
+            .sketches
+            .iter()
+            .filter(|(_, e)| e.stratum == s)
+            .map(|(&h, _)| h)
+            .collect();
+        for h in hashes {
+            if let Some(e) = shard.sketches.remove(&h) {
+                out.sketches.push((h, e));
+            }
+        }
+        out.sketches.sort_by_key(|(h, _)| *h);
+        out.items = shard.items.remove(&s);
+        out.moments = shard.stratum_moments.remove(&s);
+        out
+    }
+
+    /// Re-attach a stratum export detached by
+    /// [`MemoStore::extract_stratum`] (possibly on a store with a
+    /// different shard count — entries are re-placed by stratum, like
+    /// the checkpoint restore path).
+    pub fn absorb_stratum(&mut self, s: StratumId, export: StratumExport) {
+        for (h, e) in export.chunks {
+            self.put_chunk_for(s, h, e.moments, e.min_timestamp, e.window_id);
+        }
+        for (h, e) in export.sketches {
+            self.put_chunk_sketch_for(s, h, e.bundle, e.min_timestamp, e.window_id);
+        }
+        if let Some(run) = export.items {
+            let idx = self.shard_for(s);
+            self.shard_mut(idx).items.insert(s, run);
+        }
+        if let Some(m) = export.moments {
+            self.put_stratum_moments(s, m);
+        }
     }
 
     /// Iterate every memoized chunk entry as `(hash, entry)`, across all
@@ -706,6 +783,40 @@ mod tests {
         }
         assert_eq!(m.stratum_moments_all().len(), 1);
         assert_eq!(m.stratum_moments_all()[&3].count, 2.0);
+    }
+
+    #[test]
+    fn extract_absorb_moves_exactly_one_stratum() {
+        let mut src = MemoStore::sharded(4, ShardStrategy::Hash);
+        for s in 0..3u32 {
+            src.put_chunk_for(s, 400 + s as u64, Moments::from_values(&[s as f64]), 1, 0);
+            src.put_chunk_sketch_for(s, 400 + s as u64, bundle(7, &[rec(s as u64, s, 1)]), 1, 0);
+            src.put_stratum_moments(s, Moments::from_values(&[s as f64]));
+        }
+        src.memoize_items(&runs(&[
+            (1u32, vec![rec(10, 1, 2), rec(11, 1, 3)]),
+            (2u32, vec![rec(12, 2, 2)]),
+        ]));
+        let export = src.extract_stratum(1);
+        assert_eq!(export.chunks.len(), 1);
+        assert_eq!(export.sketches.len(), 1);
+        assert_eq!(export.items.as_ref().map(SampleRun::len), Some(2));
+        assert!(export.moments.is_some());
+        // Gone from the source; other strata untouched.
+        assert!(!src.contains_chunk(401));
+        assert!(src.contains_chunk(400) && src.contains_chunk(402));
+        assert!(src.stratum_moments(1).is_none());
+        assert_eq!(src.item_count(), 1);
+        // Re-attach on a store with a different shard count.
+        let mut dst = MemoStore::sharded(2, ShardStrategy::Modulo);
+        dst.absorb_stratum(1, export);
+        assert!(dst.shard(1).contains_chunk(401));
+        assert!(dst.shard(1).get_chunk_sketch(401).is_some());
+        assert_eq!(dst.shard(1).items(1).len(), 2);
+        assert_eq!(dst.stratum_moments(1).unwrap().count, 1.0);
+        // Extracting an absent stratum is an empty export, not an error.
+        let empty = src.extract_stratum(9);
+        assert!(empty.chunks.is_empty() && empty.items.is_none() && empty.moments.is_none());
     }
 
     fn bundle(seed: u64, recs: &[Record]) -> SketchBundle {

@@ -182,16 +182,30 @@ impl IncrementalSampler {
     /// then each stratum's `cap_i` lowest-ranked residents, in rank order.
     /// O(sample + strata · log strata); the window is never rescanned.
     pub fn sample(&self, sample_size: usize) -> StratifiedSample {
+        let caps = allocate_proportional(sample_size, &self.populations());
+        self.sample_allocated(&caps)
+    }
+
+    /// Emit the sample under an **externally computed** per-stratum
+    /// allocation. This is [`IncrementalSampler::sample`] with the
+    /// Eq 3.1 step factored out: the partition merge tier computes one
+    /// global allocation over the *merged* populations and hands every
+    /// partition its slice, so K disjoint samplers reproduce exactly the
+    /// per-stratum capacities a single sampler over the union would
+    /// have picked. Strata absent from `caps` contribute zero items;
+    /// caps for strata this sampler does not track are ignored.
+    pub fn sample_allocated(
+        &self,
+        caps: &BTreeMap<StratumId, usize>,
+    ) -> StratifiedSample {
         let mut out = StratifiedSample::default();
-        let populations = self.populations();
-        let caps = allocate_proportional(sample_size, &populations);
         for (&stratum, st) in &self.strata {
             let cap = caps.get(&stratum).copied().unwrap_or(0);
             let items: Vec<Record> =
                 st.by_rank.values().take(cap).copied().collect();
             out.per_stratum.insert(stratum, items);
         }
-        out.population = populations;
+        out.population = self.populations();
         out
     }
 }

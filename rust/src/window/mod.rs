@@ -23,7 +23,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::workload::record::Record;
+use crate::workload::record::{Record, StratumId};
 
 /// The change set between two adjacent windows.
 #[derive(Debug, Clone, Default)]
@@ -167,6 +167,83 @@ impl CountWindow {
             items: materialize
                 .then(|| self.buf.iter().copied().collect::<Arc<[Record]>>()),
             delta: WindowDelta { inserted: batch, removed },
+        }
+    }
+
+    /// Externally-driven slide for **partitioned** windows: push `batch`
+    /// and evict exactly `evict` items FIFO, regardless of the
+    /// configured size. The partition merge tier routes records by
+    /// stratum and computes per-partition eviction counts by simulating
+    /// the *global* FIFO window, so capacity is enforced globally — a
+    /// partition's buffer is the global window restricted to its strata
+    /// and never exceeds the global size on its own.
+    ///
+    /// Batch-then-evict is equivalent to the interleaved push/evict of
+    /// [`CountWindow::slide_with`]: eviction is FIFO, so the evicted
+    /// records and their order depend only on the count, never on how
+    /// pushes and evictions interleave within one slide.
+    pub fn slide_external(
+        &mut self,
+        batch: Vec<Record>,
+        evict: usize,
+        materialize: bool,
+    ) -> WindowSnapshot {
+        let mut removed = std::mem::take(&mut self.pending_removed);
+        for r in &batch {
+            self.push(*r);
+        }
+        for _ in 0..evict {
+            if let Some(evicted) = self.evict_front() {
+                removed.push(evicted);
+            }
+        }
+        let id = self.next_window_id;
+        self.next_window_id += 1;
+        WindowSnapshot {
+            window_id: id,
+            len: self.buf.len(),
+            start_ts: self.min_ts.front().map_or(0, |&(ts, _)| ts),
+            items: materialize
+                .then(|| self.buf.iter().copied().collect::<Arc<[Record]>>()),
+            delta: WindowDelta { inserted: batch, removed },
+        }
+    }
+
+    /// Remove and return every buffered record of `stratum` (in buffer
+    /// order), rebuilding the min-timestamp deque over the survivors —
+    /// the window half of shipping a stratum to another partition.
+    /// Pending resize evictions are untouched (partitioned windows do
+    /// not resize).
+    pub fn extract_stratum(&mut self, stratum: StratumId) -> Vec<Record> {
+        let mut taken = Vec::new();
+        let mut kept = Vec::with_capacity(self.buf.len());
+        for r in self.buf.drain(..) {
+            if r.stratum == stratum {
+                taken.push(r);
+            } else {
+                kept.push(r);
+            }
+        }
+        self.min_ts.clear();
+        for r in kept {
+            self.push(r);
+        }
+        taken
+    }
+
+    /// Merge records exported by [`CountWindow::extract_stratum`] on
+    /// another partition into this buffer, restoring global arrival
+    /// order by sorting on `(timestamp, id)` — valid because the
+    /// workload generator assigns ids monotonically in arrival order, so
+    /// `(timestamp, id)` *is* arrival order. The min-timestamp deque is
+    /// rebuilt from scratch.
+    pub fn splice_records(&mut self, incoming: Vec<Record>) {
+        let mut all: Vec<Record> = self.buf.drain(..).collect();
+        all.extend(incoming);
+        all.sort_by_key(|r| (r.timestamp, r.id));
+        self.min_ts.clear();
+        for r in all {
+            self.push(r);
         }
     }
 
@@ -648,6 +725,64 @@ mod tests {
             assert_eq!(ids(&full.delta.removed), ids(&lazy.delta.removed));
             assert_consistent(&full);
         }
+    }
+
+    #[test]
+    fn slide_external_matches_interleaved_fifo_eviction() {
+        // A single-partition external slide driven by the counts a
+        // global FIFO simulation produces must equal the ordinary
+        // interleaved slide, field for field — including an oversized
+        // batch where records from the batch itself fall out.
+        for batch_sizes in [vec![4usize, 3, 4, 2], vec![12, 10]] {
+            let mut solo = CountWindow::new(5);
+            let mut ext = CountWindow::new(5);
+            let mut next = 0u64;
+            for n in batch_sizes {
+                let batch: Vec<Record> =
+                    (next..next + n as u64).map(|i| rec(i, i % 7)).collect();
+                next += n as u64;
+                let evict = (ext.len() + n).saturating_sub(5);
+                let a = solo.slide_with(batch.clone(), true);
+                let b = ext.slide_external(batch, evict, true);
+                assert_eq!(a.window_id, b.window_id);
+                assert_eq!(a.len, b.len);
+                assert_eq!(a.start_ts, b.start_ts);
+                let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
+                assert_eq!(ids(&a.delta.inserted), ids(&b.delta.inserted));
+                assert_eq!(ids(&a.delta.removed), ids(&b.delta.removed));
+                assert_eq!(ids(a.items()), ids(b.items()));
+                assert_consistent(&b);
+            }
+        }
+    }
+
+    #[test]
+    fn extract_then_splice_restores_the_window() {
+        // Ship stratum 1 out of one window and into another: the donor
+        // keeps exact deltas for its survivors, and the recipient's
+        // buffer equals what it would hold had it owned the stratum all
+        // along (ids are arrival order here, as in the generator).
+        let mut donor = CountWindow::new(100);
+        let mut native = CountWindow::new(100);
+        let recs: Vec<Record> =
+            (0..30).map(|i| Record::new(i, (i % 3) as StratumId, i, 0, 1.0)).collect();
+        donor.slide(recs.clone());
+        native.slide(recs.iter().copied().filter(|r| r.stratum == 1).collect());
+        let moved = donor.extract_stratum(1);
+        assert_eq!(moved.len(), 10);
+        assert!(donor.extract_stratum(1).is_empty());
+        let mut recipient = CountWindow::new(100);
+        recipient.slide_external(Vec::new(), 0, false);
+        recipient.splice_records(moved);
+        let (got, _) = recipient.checkpoint_parts();
+        let (want, _) = native.checkpoint_parts();
+        assert_eq!(
+            got.iter().map(|r| r.id).collect::<Vec<_>>(),
+            want.iter().map(|r| r.id).collect::<Vec<_>>()
+        );
+        // Donor min-ts deque rebuilt correctly over survivors.
+        let snap = donor.slide(vec![]);
+        assert_consistent(&snap);
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //!    degradation-ladder trajectory, byte-identically, even under a
 //!    different worker count.
 
+mod common;
+
+use common::assert_slides_identical;
 use incapprox::config::system::{BudgetSpec, ExecModeSpec, SystemConfig};
 use incapprox::coordinator::{Coordinator, QuerySpec, Session, SlideOutput};
 use incapprox::error::Error;
@@ -51,37 +54,6 @@ fn chaos_cfg(seed: u64) -> SystemConfig {
         degradation_max_steps: 3,
         degradation_recover_slides: 2,
         ..SystemConfig::default()
-    }
-}
-
-/// Byte-level equality of two slides: estimates by `f64::to_bits`, all
-/// reuse accounting, fault/degradation flags, and every query report.
-fn assert_slides_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
-    let (wa, wb) = (&a.window, &b.window);
-    assert_eq!(wa.window_id, wb.window_id, "{label}");
-    assert_eq!(wa.estimate.value.to_bits(), wb.estimate.value.to_bits(), "{label}");
-    assert_eq!(wa.estimate.margin.to_bits(), wb.estimate.margin.to_bits(), "{label}");
-    assert_eq!(wa.window_len, wb.window_len, "{label}");
-    assert_eq!(wa.sample_size, wb.sample_size, "{label}");
-    assert_eq!(wa.chunks_total, wb.chunks_total, "{label}");
-    assert_eq!(wa.chunks_reused, wb.chunks_reused, "{label}");
-    assert_eq!(wa.fresh_items, wb.fresh_items, "{label}");
-    assert_eq!(wa.strata, wb.strata, "{label}");
-    assert_eq!(wa.degraded, wb.degraded, "{label}");
-    assert_eq!(a.queries.len(), b.queries.len(), "{label}");
-    for (qa, qb) in a.queries.iter().zip(&b.queries) {
-        assert_eq!(qa.id, qb.id, "{label}");
-        assert_eq!(qa.estimate.value.to_bits(), qb.estimate.value.to_bits(), "{label}");
-        assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
-        assert_eq!(qa.sample_size, qb.sample_size, "{label}");
-        assert_eq!(qa.population, qb.population, "{label}");
-        assert_eq!(qa.bound_scale.to_bits(), qb.bound_scale.to_bits(), "{label}");
-        assert_eq!(qa.degraded, qb.degraded, "{label}");
-        assert_eq!(
-            qa.target_rel_bound.map(f64::to_bits),
-            qb.target_rel_bound.map(f64::to_bits),
-            "{label}"
-        );
     }
 }
 
@@ -481,4 +453,106 @@ fn session_restore_under_broker_chaos_continues_identically() {
             "restored step {i}"
         );
     }
+}
+
+#[test]
+fn partitioned_chaos_confines_degradation_to_the_faulty_partition() {
+    // The partitioned lane: K = 3 partitions (partition i owns stratum
+    // i), with the fault channels armed ONLY in partition 1's config.
+    // The merge tier derives with stratum-scoped degradation flags, so
+    // the contract is fault *confinement*: the healthy partitions'
+    // strata — their reports AND their per-stratum query answers — stay
+    // byte-identical to a fully fault-free twin tier on EVERY slide,
+    // even after partition 1 degrades and its memo legitimately
+    // diverges. One partition's chaos must never poison another's math.
+    use incapprox::partition::MergeTier;
+
+    const SLIDES: usize = 150;
+    let clean_cfg = SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 1000,
+        slide: 100,
+        seed: 0x50AE,
+        chunk_size: 16,
+        retry_max_attempts: 6,
+        ..SystemConfig::default()
+    };
+    // Memo loss + compute faults live only in the middle partition.
+    // (Broker and checkpoint-write channels stay dark: the tier is fed
+    // directly and never checkpoints in this campaign.)
+    let faulty_cfg = SystemConfig {
+        fault_memo_loss: 0.10,
+        fault_compute: 0.35,
+        ..clean_cfg.clone()
+    };
+
+    let build = |middle: SystemConfig| -> MergeTier {
+        let mut tier = MergeTier::with_partition_configs(vec![
+            clean_cfg.clone(),
+            middle,
+            clean_cfg.clone(),
+        ])
+        .unwrap();
+        tier.submit_query(QuerySpec::new(AggregateKind::Sum)).unwrap();
+        for s in 0..3u32 {
+            tier.submit_query(QuerySpec::new(AggregateKind::Sum).with_stratum(s)).unwrap();
+        }
+        tier
+    };
+    let mut chaos = build(faulty_cfg);
+    let mut calm = build(clean_cfg.clone());
+
+    let mut gen_a = MultiStream::paper_section5(clean_cfg.seed);
+    let mut gen_b = MultiStream::paper_section5(clean_cfg.seed);
+    let mut degraded_slides = 0usize;
+    let mut injected_slides = 0usize;
+    let mut first = true;
+    for step in 0..=SLIDES {
+        let n = if first { clean_cfg.window_size } else { clean_cfg.slide };
+        first = false;
+        let a = chaos.process_batch_queries(gen_a.take_records(n)).unwrap();
+        let b = calm.process_batch_queries(gen_b.take_records(n)).unwrap();
+        let label = format!("partitioned chaos step {step}");
+
+        // Healthy partitions' strata: byte-identical reports, always.
+        for s in [0u32, 2] {
+            assert_eq!(
+                a.window.strata.get(&s),
+                b.window.strata.get(&s),
+                "{label}: stratum {s} report poisoned"
+            );
+        }
+        // Query layout: [whole-window Sum, Sum@0, Sum@1, Sum@2].
+        let (q_all, q0, q1, q2) = (&a.queries[0], &a.queries[1], &a.queries[2], &a.queries[3]);
+        for (qa, qb, s) in [(q0, &b.queries[1], 0u32), (q2, &b.queries[3], 2u32)] {
+            assert!(!qa.degraded, "{label}: healthy stratum {s} flagged degraded");
+            assert_eq!(
+                qa.estimate.value.to_bits(),
+                qb.estimate.value.to_bits(),
+                "{label}: stratum {s} estimate drifted"
+            );
+            assert_eq!(
+                qa.estimate.margin.to_bits(),
+                qb.estimate.margin.to_bits(),
+                "{label}: stratum {s} margin drifted"
+            );
+        }
+        // Degradation flags stay scoped: only the faulty partition's
+        // stratum may degrade, and the whole-window flags mirror it.
+        assert_eq!(a.window.degraded, q1.degraded, "{label}: window flag not stratum-scoped");
+        assert_eq!(q_all.degraded, q1.degraded, "{label}: whole-window query flag");
+        for q in &a.queries {
+            assert!(q.estimate.value.is_finite(), "{label}: non-finite answer");
+            assert!(q.estimate.margin >= 0.0, "{label}");
+        }
+        degraded_slides += usize::from(a.window.degraded);
+        injected_slides += usize::from(a.window.fault_injected);
+    }
+    // The campaign must actually have exercised both armed channels.
+    assert!(injected_slides > 0, "memo-loss channel never fired in partition 1");
+    assert!(degraded_slides > 0, "compute channel never exhausted the retry budget");
+    assert!(
+        degraded_slides < SLIDES / 2,
+        "degradation should be the exception, not the rule ({degraded_slides} slides)"
+    );
 }

@@ -4,6 +4,9 @@
 //! gates themselves live in `tests/session_queries.rs`
 //! (`restore_equivalence_*`); this file covers the corners.
 
+mod common;
+
+use common::assert_windows_identical;
 use incapprox::fault::RecoveryPolicy;
 use incapprox::job::sketch::SketchBundle;
 use incapprox::prelude::*;
@@ -17,18 +20,6 @@ fn config() -> SystemConfig {
         chunk_size: 16,
         ..SystemConfig::default()
     }
-}
-
-fn assert_windows_identical(a: &WindowReport, b: &WindowReport, label: &str) {
-    assert_eq!(a.window_id, b.window_id, "{label}");
-    assert_eq!(a.estimate.value.to_bits(), b.estimate.value.to_bits(), "{label}");
-    assert_eq!(a.estimate.margin.to_bits(), b.estimate.margin.to_bits(), "{label}");
-    assert_eq!(a.window_len, b.window_len, "{label}");
-    assert_eq!(a.sample_size, b.sample_size, "{label}");
-    assert_eq!(a.chunks_total, b.chunks_total, "{label}");
-    assert_eq!(a.chunks_reused, b.chunks_reused, "{label}");
-    assert_eq!(a.fresh_items, b.fresh_items, "{label}");
-    assert_eq!(a.strata, b.strata, "{label}");
 }
 
 #[test]
@@ -245,11 +236,11 @@ fn periodic_knob_with_checkpoint_recovery_end_to_end() {
 
 #[test]
 fn v2_artifacts_are_rejected_loudly() {
-    // The sketch substrate changed the wire (sketch entries in the base
-    // segment, the PutChunkSketch journal op, tag-based kind encoding),
-    // so the format is v3 — and a v2 artifact must be refused *by
-    // version*, before any checksum or segment parsing, with an error
-    // that names the actual problem instead of "corrupted".
+    // The partition layer changed the wire (owned-strata in `Misc`, the
+    // PartitionSlide journal op), so the format is v5 — and an old
+    // artifact must be refused *by version*, before any checksum or
+    // segment parsing, with an error that names the actual problem
+    // instead of "corrupted".
     let cfg = config();
     let mut gen = MultiStream::paper_section5(cfg.seed);
     let mut coord = Coordinator::new(cfg.clone());
@@ -260,8 +251,8 @@ fn v2_artifacts_are_rejected_loudly() {
     // Header layout: magic (0..4) | version (4..8, little-endian).
     assert_eq!(
         u32::from_le_bytes(artifact[4..8].try_into().unwrap()),
-        3,
-        "sketch-bearing artifacts are wire v3"
+        5,
+        "partition-aware artifacts are wire v5"
     );
 
     let mut old = artifact.clone();
@@ -272,7 +263,7 @@ fn v2_artifacts_are_rejected_loudly() {
     assert!(matches!(err, Error::Checkpoint(_)), "wrong error kind: {err}");
     let msg = err.to_string();
     assert!(
-        msg.contains("version 2") && msg.contains('3'),
+        msg.contains("version 2") && msg.contains('5'),
         "the refusal must name both versions: {msg}"
     );
 

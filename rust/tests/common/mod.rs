@@ -2,11 +2,102 @@
 //! property-testing harness (no `proptest` in the offline crate set —
 //! see DESIGN.md substitution table).
 
+use incapprox::coordinator::{SlideOutput, WindowReport};
 use incapprox::util::rng::Rng;
 use incapprox::workload::record::Record;
 
+/// Byte-level equality of two window reports: estimates compared by
+/// `f64::to_bits`, plus every reuse/accounting field and the degraded
+/// flag. Latency and mode name are deliberately excluded (wall-clock
+/// and label, not state). This is THE audited equivalence comparator —
+/// the three-way path gates, the restore gates, the chaos masked-fault
+/// gates, and the partition scale-out gates all go through it, so a
+/// field added here tightens every equivalence pin at once.
+#[allow(dead_code)]
+pub fn assert_windows_identical(a: &WindowReport, b: &WindowReport, label: &str) {
+    assert_eq!(a.window_id, b.window_id, "{label}: window_id");
+    assert_eq!(
+        a.estimate.value.to_bits(),
+        b.estimate.value.to_bits(),
+        "{label} w{}: estimate {} vs {}",
+        a.window_id,
+        a.estimate.value,
+        b.estimate.value
+    );
+    assert_eq!(
+        a.estimate.margin.to_bits(),
+        b.estimate.margin.to_bits(),
+        "{label} w{}: margin {} vs {}",
+        a.window_id,
+        a.estimate.margin,
+        b.estimate.margin
+    );
+    assert_eq!(a.window_len, b.window_len, "{label}: window_len");
+    assert_eq!(a.sample_size, b.sample_size, "{label}: sample_size");
+    assert_eq!(a.chunks_total, b.chunks_total, "{label}: chunks_total");
+    assert_eq!(a.chunks_reused, b.chunks_reused, "{label}: chunks_reused");
+    assert_eq!(a.fresh_items, b.fresh_items, "{label}: fresh_items");
+    assert_eq!(a.strata, b.strata, "{label}: strata");
+    assert_eq!(a.degraded, b.degraded, "{label}: degraded");
+}
+
+/// [`assert_windows_identical`] plus byte-level equality of every query
+/// report: estimates and extrema by bits, sketch error surfaces, the
+/// error-target bookkeeping (`target_rel_bound`, `bound_scale`), and
+/// the per-query degraded flag.
+#[allow(dead_code)]
+pub fn assert_outputs_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
+    assert_windows_identical(&a.window, &b.window, label);
+    assert_eq!(a.queries.len(), b.queries.len(), "{label}: query counts");
+    for (qa, qb) in a.queries.iter().zip(&b.queries) {
+        assert_eq!(qa.id, qb.id, "{label}: query id");
+        assert_eq!(qa.kind, qb.kind, "{label}: query kind");
+        assert_eq!(
+            qa.estimate.value.to_bits(),
+            qb.estimate.value.to_bits(),
+            "{label} {:?}: estimate {} vs {}",
+            qa.id,
+            qa.estimate.value,
+            qb.estimate.value
+        );
+        assert_eq!(
+            qa.estimate.margin.to_bits(),
+            qb.estimate.margin.to_bits(),
+            "{label} {:?}: margin",
+            qa.id
+        );
+        assert_eq!(qa.sample_size, qb.sample_size, "{label}: query sample_size");
+        assert_eq!(qa.population, qb.population, "{label}: query population");
+        assert_eq!(
+            qa.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
+            qb.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
+            "{label}: query extrema"
+        );
+        assert_eq!(qa.surface, qb.surface, "{label}: sketch error surfaces must match");
+        assert_eq!(
+            qa.target_rel_bound.map(f64::to_bits),
+            qb.target_rel_bound.map(f64::to_bits),
+            "{label}: target_rel_bound"
+        );
+        assert_eq!(
+            qa.bound_scale.to_bits(),
+            qb.bound_scale.to_bits(),
+            "{label}: bound_scale"
+        );
+        assert_eq!(qa.degraded, qb.degraded, "{label}: query degraded");
+    }
+}
+
+/// Chaos-soak spelling of [`assert_outputs_identical`] (kept as a named
+/// alias so fault-campaign failures read as slide mismatches).
+#[allow(dead_code)]
+pub fn assert_slides_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
+    assert_outputs_identical(a, b, label);
+}
+
 /// Run a property over `cases` random seeds; on failure, panic with the
 /// failing seed so the case can be replayed deterministically.
+#[allow(dead_code)]
 pub fn check_property<F: Fn(&mut Rng)>(name: &str, cases: usize, base_seed: u64, prop: F) {
     for case in 0..cases {
         let seed = base_seed.wrapping_mul(0x9E37_79B9).wrapping_add(case as u64);
@@ -26,6 +117,7 @@ pub fn check_property<F: Fn(&mut Rng)>(name: &str, cases: usize, base_seed: u64,
 }
 
 /// A random record with bounded fields.
+#[allow(dead_code)]
 pub fn arb_record(rng: &mut Rng, id: u64, strata: u32, t_max: u64) -> Record {
     Record::new(
         id,
@@ -37,6 +129,7 @@ pub fn arb_record(rng: &mut Rng, id: u64, strata: u32, t_max: u64) -> Record {
 }
 
 /// A random batch of records with unique, increasing ids.
+#[allow(dead_code)]
 pub fn arb_batch(rng: &mut Rng, n: usize, strata: u32, t_max: u64) -> Vec<Record> {
     (0..n as u64).map(|i| arb_record(rng, i, strata, t_max)).collect()
 }

@@ -53,6 +53,27 @@ fn determinism_containers_scoped_to_cone() {
     assert!(fr.diagnostics.iter().all(|d| !d.message.contains("Instant::now")));
 }
 
+#[test]
+fn determinism_cone_covers_partition_tier() {
+    // The merge tier's reports are pinned byte-identical to a solo run
+    // (`tests/partition_equivalence.rs`), so `partition/` sits inside
+    // the determinism cone: container findings fire there exactly as
+    // they do in `sampling/`...
+    let fr = lint::check_source("partition/fx.rs", &fixture("determinism_tp.rs"));
+    assert!(
+        fr.diagnostics.iter().any(|d| d.message.contains("HashMap")),
+        "{:#?}",
+        fr.diagnostics
+    );
+    assert!(fr.diagnostics.iter().all(|d| d.rule == lint::RULE_DETERMINISM));
+    // ...and the merge-tier idiom (ordered unions, pure ownership,
+    // logical lockstep) lints clean under the same path. The real
+    // sources are held clean by the whole-tree gate in
+    // `tests/lint_clean.rs`.
+    let fr = lint::check_source("partition/fx.rs", &fixture("partition_tn.rs"));
+    assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
+}
+
 // ---- panic-freedom -------------------------------------------------------
 
 #[test]

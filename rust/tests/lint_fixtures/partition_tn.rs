@@ -1,0 +1,61 @@
+//! True-negative fixture for the `determinism` rule under the
+//! `partition/` cone path: a miniature of the merge tier's idiom —
+//! ordered containers for disjoint-union merges, typed errors instead
+//! of unwraps, logical window ids instead of clocks. Linted under
+//! `partition/fx.rs` this must produce zero diagnostics. Test data —
+//! never compiled.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Disjoint-union merge over ordered maps: insertion order cannot leak
+/// into iteration order, so a permuted fold digests identically.
+fn merge_disjoint(
+    mut into: BTreeMap<u32, f64>,
+    from: BTreeMap<u32, f64>,
+) -> Result<BTreeMap<u32, f64>, String> {
+    for (stratum, moments) in from {
+        if into.insert(stratum, moments).is_some() {
+            return Err(format!("stratum {stratum} owned by two partitions"));
+        }
+    }
+    Ok(into)
+}
+
+/// Ownership is a pure function of (stratum, K) plus explicit overrides
+/// — never of arrival order or wall-clock time.
+fn owner(stratum: u32, k: usize, overrides: &BTreeMap<u32, usize>) -> usize {
+    overrides.get(&stratum).copied().unwrap_or(stratum as usize % k)
+}
+
+/// The seen-stratum universe is a BTreeSet so `owned_strata` lists come
+/// out sorted — part of the wire format, so order must be pinned.
+fn owned(seen: &BTreeSet<u32>, k: usize, i: usize) -> Vec<u32> {
+    seen.iter().copied().filter(|&s| s as usize % k == i).collect()
+}
+
+/// Lockstep is checked on logical window ids, not timestamps from any
+/// clock.
+fn in_lockstep(window_ids: &[u64]) -> bool {
+    window_ids.windows(2).all(|w| w[0] == w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_rejects_overlap() {
+        let a = BTreeMap::from([(0u32, 1.0)]);
+        let b = BTreeMap::from([(0u32, 2.0)]);
+        assert!(merge_disjoint(a, b).is_err());
+    }
+
+    #[test]
+    fn ownership_is_pure() {
+        let overrides = BTreeMap::from([(7u32, 0usize)]);
+        assert_eq!(owner(7, 4, &overrides), 0);
+        assert_eq!(owner(6, 4, &overrides), 2);
+        assert!(in_lockstep(&[3, 3, 3]));
+        assert_eq!(owned(&BTreeSet::from([0, 1, 2, 3]), 2, 0), vec![0, 2]);
+    }
+}

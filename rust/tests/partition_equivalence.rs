@@ -1,0 +1,241 @@
+//! The partition-equivalence gates: a K-way [`MergeTier`] is
+//! *byte-identical* to a single solo [`Coordinator`] — same estimates,
+//! same margins, same reuse accounting, same per-query reports — for
+//! K ∈ {1, 2, 4, 8}, across the serial / sharded / O(delta) incremental
+//! execution paths, for count and time windows, at N ∈ {1, 4, 16}
+//! concurrent queries. Scale-out must be a pure deployment decision:
+//! nothing observable may depend on how many partitions the strata are
+//! spread over.
+//!
+//! Two hand-off gates ride along: a **mid-stream rebalance** (shipping
+//! one stratum's segment chain to another partition) must leave the
+//! continuation byte-identical, and a **restore-then-merge** (checkpoint
+//! every partition, restore under a different worker count, re-submit
+//! queries) must continue byte-identically against the uninterrupted
+//! tier.
+
+mod common;
+
+use common::assert_outputs_identical;
+use incapprox::prelude::*;
+
+const KS: [usize; 4] = [1, 2, 4, 8];
+const QUERY_COUNTS: [usize; 3] = [1, 4, 16];
+
+fn base_config() -> SystemConfig {
+    SystemConfig {
+        mode: ExecModeSpec::IncApprox,
+        window_size: 2000,
+        slide: 200,
+        seed: 11,
+        chunk_size: 16,
+        budget: BudgetSpec::Fraction(0.2),
+        ..SystemConfig::default()
+    }
+}
+
+/// The three execution paths every gate sweeps: serial from-scratch,
+/// sharded from-scratch, and the O(delta) incremental default.
+fn path_variants(cfg: &SystemConfig) -> Vec<(&'static str, SystemConfig)> {
+    let mut serial = cfg.clone();
+    serial.num_workers = 1;
+    serial.incremental_slide = false;
+    let mut sharded = cfg.clone();
+    sharded.num_workers = 4;
+    sharded.incremental_slide = false;
+    let incremental = cfg.clone();
+    assert!(incremental.incremental_slide);
+    vec![("serial", serial), ("sharded", sharded), ("incremental", incremental)]
+}
+
+/// N query specs cycling the full aggregate menu (moments-backed and
+/// sketch-backed), plus a stratum-scoped query when N allows, so the
+/// sweep exercises derivation, the sketch pass, and stratum filtering.
+fn specs(n: usize) -> Vec<QuerySpec> {
+    (0..n)
+        .map(|i| {
+            let kind = AggregateKind::ALL[i % AggregateKind::ALL.len()];
+            if i == 3 {
+                QuerySpec::new(kind).with_stratum(1)
+            } else {
+                QuerySpec::new(kind)
+            }
+        })
+        .collect()
+}
+
+/// One warm-up batch plus `slides` slide batches off the fixed stream.
+fn batches(cfg: &SystemConfig, slides: usize) -> Vec<Vec<Record>> {
+    let mut gen = MultiStream::paper_section5(cfg.seed);
+    let mut out = vec![gen.take_records(cfg.window_size)];
+    for _ in 0..slides {
+        out.push(gen.take_records(cfg.slide));
+    }
+    out
+}
+
+fn run_solo_count(cfg: &SystemConfig, n: usize, data: &[Vec<Record>]) -> Vec<SlideOutput> {
+    let mut coord = Coordinator::new(cfg.clone());
+    for spec in specs(n) {
+        coord.submit_query(spec).unwrap();
+    }
+    data.iter().map(|b| coord.process_batch_queries(b.clone()).unwrap()).collect()
+}
+
+fn run_tier_count(
+    cfg: &SystemConfig,
+    k: usize,
+    n: usize,
+    data: &[Vec<Record>],
+) -> Vec<SlideOutput> {
+    let mut tier = MergeTier::new(cfg.clone(), k).unwrap();
+    for spec in specs(n) {
+        tier.submit_query(spec).unwrap();
+    }
+    data.iter().map(|b| tier.process_batch_queries(b.clone()).unwrap()).collect()
+}
+
+#[test]
+fn count_windows_any_k_matches_solo_across_paths_and_query_counts() {
+    for (path, cfg) in path_variants(&base_config()) {
+        let data = batches(&cfg, 6);
+        for &n in &QUERY_COUNTS {
+            let solo = run_solo_count(&cfg, n, &data);
+            for &k in &KS {
+                let tier = run_tier_count(&cfg, k, n, &data);
+                assert_eq!(solo.len(), tier.len());
+                for (a, b) in solo.iter().zip(&tier) {
+                    assert_outputs_identical(a, b, &format!("count/{path} K={k} N={n}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn time_windows_any_k_matches_solo_across_paths_and_query_counts() {
+    for (path, cfg) in path_variants(&base_config()) {
+        for &n in &QUERY_COUNTS {
+            for &k in &KS {
+                let mut solo = Coordinator::new_time_windowed(cfg.clone(), 40, 10);
+                let mut tier =
+                    MergeTier::new_time_windowed(cfg.clone(), k, 40, 10).unwrap();
+                for spec in specs(n) {
+                    solo.submit_query(spec.clone()).unwrap();
+                    tier.submit_query(spec).unwrap();
+                }
+                let mut gen_a = MultiStream::paper_section5(cfg.seed);
+                let mut gen_b = MultiStream::paper_section5(cfg.seed);
+                let mut emitted = 0usize;
+                for tick in 1..=120u64 {
+                    let a = solo.ingest_tick_queries(gen_a.tick(), tick).unwrap();
+                    let b = tier.ingest_tick_queries(gen_b.tick(), tick).unwrap();
+                    let label = format!("time/{path} K={k} N={n} tick={tick}");
+                    assert_eq!(a.is_some(), b.is_some(), "{label}: emission lockstep");
+                    if let (Some(a), Some(b)) = (a, b) {
+                        emitted += 1;
+                        assert_outputs_identical(&a, &b, &label);
+                    }
+                }
+                assert!(emitted >= 3, "time/{path} K={k} N={n}: only {emitted} windows");
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_stream_rebalance_continues_byte_identically() {
+    // Ship stratum 1's complete live state (window slice, memo image,
+    // chunk caches) to another partition mid-stream, twice, and keep
+    // comparing against an undisturbed solo run: the segment-chain
+    // hand-off must be invisible in the outputs.
+    let cfg = base_config();
+    let data = batches(&cfg, 10);
+    let mut solo = Coordinator::new(cfg.clone());
+    let mut tier = MergeTier::new(cfg.clone(), 4).unwrap();
+    for spec in specs(4) {
+        solo.submit_query(spec.clone()).unwrap();
+        tier.submit_query(spec).unwrap();
+    }
+    let compare = |solo: &mut Coordinator, tier: &mut MergeTier, b: &Vec<Record>, at: &str| {
+        let a = solo.process_batch_queries(b.clone()).unwrap();
+        let t = tier.process_batch_queries(b.clone()).unwrap();
+        assert_outputs_identical(&a, &t, at);
+    };
+    for b in &data[..4] {
+        compare(&mut solo, &mut tier, b, "before rebalance");
+    }
+    let home = tier.owner(1);
+    let away = (home + 1) % tier.partition_count();
+    tier.rebalance(1, away).unwrap();
+    assert_eq!(tier.owner(1), away, "override recorded");
+    for b in &data[4..8] {
+        compare(&mut solo, &mut tier, b, "after first rebalance");
+    }
+    // And back home again — a round trip must also be invisible.
+    tier.rebalance(1, home).unwrap();
+    assert_eq!(tier.owner(1), home);
+    for b in &data[8..] {
+        compare(&mut solo, &mut tier, b, "after second rebalance");
+    }
+}
+
+#[test]
+fn restore_then_merge_matches_the_uninterrupted_tier() {
+    // Checkpoint every partition's segment chain, rebuild the tier from
+    // the artifacts under a DIFFERENT worker count, re-submit the same
+    // queries, and continue both tiers on identical batches: the
+    // restored deployment must stay byte-identical. (Open-loop Fraction
+    // budgets: tier-level budget state is not part of the per-partition
+    // artifacts — see `MergeTier::restore_partitions`.)
+    let cfg = base_config();
+    let data = batches(&cfg, 8);
+    let k = 2usize;
+    let mut live = MergeTier::new(cfg.clone(), k).unwrap();
+    for spec in specs(4) {
+        live.submit_query(spec).unwrap();
+    }
+    for b in &data[..5] {
+        live.process_batch_queries(b.clone()).unwrap();
+    }
+
+    let mut artifacts: Vec<Vec<u8>> = Vec::new();
+    for i in 0..k {
+        let mut buf = Vec::new();
+        let bytes = live.checkpoint_partition(i, &mut buf).unwrap();
+        assert!(bytes > 0, "partition {i} artifact empty");
+        artifacts.push(buf);
+    }
+
+    let mut restored_cfg = cfg.clone();
+    restored_cfg.num_workers = cfg.num_workers + 3;
+    let mut restored =
+        MergeTier::restore_partitions(vec![restored_cfg; k], &artifacts).unwrap();
+    assert_eq!(restored.partition_count(), k);
+    assert_eq!(restored.windows_processed(), live.windows_processed());
+    for spec in specs(4) {
+        restored.submit_query(spec).unwrap();
+    }
+
+    for (i, b) in data[5..].iter().enumerate() {
+        let a = live.process_batch_queries(b.clone()).unwrap();
+        let r = restored.process_batch_queries(b.clone()).unwrap();
+        assert_outputs_identical(&a, &r, &format!("restored slide {i}"));
+    }
+}
+
+#[test]
+fn mixed_compute_cone_configs_are_rejected() {
+    // The tier refuses partitions whose compute-cone fields diverge —
+    // a seed or geometry mismatch would silently break byte-identity.
+    let a = base_config();
+    let mut b = base_config();
+    b.seed = 12;
+    let err = MergeTier::with_partition_configs(vec![a.clone(), b]).unwrap_err();
+    assert!(err.to_string().contains("compute-cone"), "got: {err}");
+
+    // Worker-count differences are explicitly allowed (not in the cone).
+    let mut c = base_config();
+    c.num_workers = a.num_workers + 2;
+    assert!(MergeTier::with_partition_configs(vec![a, c]).is_ok());
+}

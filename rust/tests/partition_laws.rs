@@ -1,0 +1,287 @@
+//! The partition-state merge-law gates.
+//!
+//! K-way scale-out rests on [`PartitionState`]'s merge being a lawful
+//! monoid fold, the same way the sketch substrate rests on
+//! `SketchBundle::merge` (see `tests/sketch_laws.rs`). This file pins:
+//!
+//! 1. **Merge laws** — folding partition states is associative,
+//!    commutative, and *byte*-deterministic (compared by
+//!    `PartitionState::digest`, floats by bit pattern, sketches by wire
+//!    encoding): any permutation of partition order, any grouping
+//!    (left fold ≡ pairwise tree fold), any assignment of strata to
+//!    partitions lands on the same merged state.
+//! 2. **Identity** — `merge(s, empty) == merge(empty, s) == s`, and the
+//!    identity deliberately does not pin a window id, so strata-less
+//!    partitions (K greater than the live stratum count) never block a
+//!    merge.
+//! 3. **Typed refusal** — an overlapping stratum (routing bug) or a
+//!    window-id mismatch between two non-identity states (lockstep bug)
+//!    is a hard `Error`, never a silent float combination.
+//! 4. **Closed-form accuracy** — on a fixed stream the merged tier's
+//!    answers match ground truth computed directly on the window:
+//!    exactly for `Native` (no sampling), within the declared margin
+//!    behavior for `IncApprox`.
+
+mod common;
+
+use common::{arb_batch, check_property};
+use incapprox::job::moments::Moments;
+use incapprox::job::sketch::SketchBundle;
+use incapprox::prelude::*;
+use incapprox::util::rng::Rng;
+
+/// Fisher–Yates shuffle driven by the crate's deterministic Rng.
+fn shuffle<T>(rng: &mut Rng, v: &mut [T]) {
+    for i in (1..v.len()).rev() {
+        let j = rng.below(i + 1);
+        v.swap(i, j);
+    }
+}
+
+/// Build one partition's state from the records of the strata it owns —
+/// the integration-test stand-in for what `slide_finish` produces. All
+/// per-stratum quantities are pure functions of the stratum's records,
+/// so two different stratum→partition assignments must merge to the
+/// same global state.
+fn state_from_records(
+    window_id: u64,
+    seed: u64,
+    owned: &[StratumId],
+    records: &[Record],
+) -> PartitionState {
+    let mut st = PartitionState { window_id, ..PartitionState::default() };
+    for &s in owned {
+        let recs: Vec<Record> = records.iter().filter(|r| r.stratum == s).copied().collect();
+        if recs.is_empty() {
+            continue;
+        }
+        let mut m = Moments {
+            count: 0.0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        };
+        for r in &recs {
+            m.count += 1.0;
+            m.sum += r.value;
+            m.sumsq += r.value * r.value;
+            m.min = m.min.min(r.value);
+            m.max = m.max.max(r.value);
+        }
+        st.moments.insert(s, m);
+        st.sketches.insert(s, SketchBundle::from_records(seed, &recs));
+        st.populations.insert(s, recs.len() as u64);
+        st.strata.insert(
+            s,
+            StratumReport {
+                sample_size: recs.len(),
+                memo_reused: 0,
+                memo_available: 0,
+                population: recs.len() as u64,
+            },
+        );
+        st.window_len += recs.len();
+        st.sample_size += recs.len();
+        st.work.window_items += recs.len() as u64;
+        st.work.compute_items += recs.len() as u64;
+    }
+    st
+}
+
+/// Left fold over a slice of states.
+fn left_fold(states: &[PartitionState]) -> PartitionState {
+    states
+        .iter()
+        .cloned()
+        .try_fold(PartitionState::empty(), PartitionState::merge)
+        .expect("disjoint states must merge")
+}
+
+/// Pairwise tree fold — a different association than the left fold.
+fn tree_fold(states: &[PartitionState]) -> PartitionState {
+    match states {
+        [] => PartitionState::empty(),
+        [one] => one.clone(),
+        _ => {
+            let mid = states.len() / 2;
+            tree_fold(&states[..mid])
+                .merge(tree_fold(&states[mid..]))
+                .expect("disjoint states must merge")
+        }
+    }
+}
+
+#[test]
+fn prop_merge_is_associative_commutative_and_byte_deterministic() {
+    check_property("partition merge laws", 25, 0xBA5E, |rng| {
+        let strata = 2 + rng.below(5) as u32;
+        let n = 50 + rng.below(800);
+        let seed = 0x5EED ^ rng.below(1 << 16) as u64;
+        let records = arb_batch(rng, n, strata, 300);
+        let k = 1 + rng.below(8);
+        let window_id = rng.below(1000) as u64;
+
+        // Default modulo assignment.
+        let mut states: Vec<PartitionState> = (0..k)
+            .map(|i| {
+                let owned: Vec<StratumId> =
+                    (0..strata).filter(|s| (*s as usize) % k == i).collect();
+                state_from_records(window_id, seed, &owned, &records)
+            })
+            .collect();
+
+        let reference = left_fold(&states).digest();
+
+        // Any permutation of partition order: same bytes.
+        for _ in 0..3 {
+            shuffle(rng, &mut states);
+            assert_eq!(left_fold(&states).digest(), reference, "permuted fold");
+        }
+        // Any grouping: K-way left fold ≡ pairwise tree fold.
+        assert_eq!(tree_fold(&states).digest(), reference, "tree fold");
+        // Identity states interleaved anywhere change nothing — even
+        // with a different (unpinned) window id.
+        let mut padded = Vec::new();
+        for st in &states {
+            padded.push(PartitionState::empty());
+            padded.push(st.clone());
+        }
+        padded.push(PartitionState::empty());
+        assert_eq!(left_fold(&padded).digest(), reference, "identity padding");
+    });
+}
+
+#[test]
+fn prop_stratum_assignment_is_merge_invariant() {
+    // The SAME records under two different stratum→partition
+    // assignments (different K, different owners) merge to the same
+    // global state — and both equal the K = 1 "solo" state that owns
+    // everything. This is the law that makes rebalancing sound: moving
+    // a stratum between partitions cannot change the merged answer.
+    check_property("stratum assignment invariance", 25, 0xA551, |rng| {
+        let strata = 2 + rng.below(6) as u32;
+        let n = 50 + rng.below(600);
+        let seed = 0xD16E57 ^ rng.below(1 << 16) as u64;
+        let records = arb_batch(rng, n, strata, 300);
+        let all: Vec<StratumId> = (0..strata).collect();
+
+        let solo = state_from_records(7, seed, &all, &records);
+
+        for _ in 0..2 {
+            let k = 1 + rng.below(6);
+            // Random assignment: stratum s → partition assign[s].
+            let assign: Vec<usize> = (0..strata).map(|_| rng.below(k)).collect();
+            let states: Vec<PartitionState> = (0..k)
+                .map(|i| {
+                    let owned: Vec<StratumId> = (0..strata)
+                        .filter(|s| assign[*s as usize] == i)
+                        .collect();
+                    state_from_records(7, seed, &owned, &records)
+                })
+                .collect();
+            assert_eq!(
+                left_fold(&states).digest(),
+                solo.digest(),
+                "assignment {assign:?} over {k} partitions"
+            );
+        }
+    });
+}
+
+#[test]
+fn identity_merges_ignore_window_id_but_lockstep_is_enforced() {
+    let records = arb_batch(&mut Rng::new(42), 200, 3, 100);
+    let a = state_from_records(5, 9, &[0, 1], &records);
+    let b = state_from_records(5, 9, &[2], &records);
+
+    // Identity on either side returns the other state unchanged —
+    // whatever window id the identity carries.
+    let empty = PartitionState { window_id: 999, ..PartitionState::default() };
+    assert!(empty.is_identity());
+    assert_eq!(empty.clone().merge(a.clone()).unwrap().digest(), a.digest());
+    assert_eq!(a.clone().merge(empty).unwrap().digest(), a.digest());
+
+    // Two non-identity states must agree on the window id...
+    let stale = state_from_records(4, 9, &[2], &records);
+    let err = a.clone().merge(stale).unwrap_err();
+    assert!(err.to_string().contains("lockstep"), "got: {err}");
+
+    // ...and must not cover the same stratum.
+    let overlap = state_from_records(5, 9, &[1], &records);
+    let err = a.clone().merge(overlap).unwrap_err();
+    assert!(err.to_string().contains("overlap"), "got: {err}");
+
+    // The well-formed pair merges fine.
+    let merged = a.merge(b).unwrap();
+    assert_eq!(merged.moments.len(), 3);
+}
+
+/// Ground-truth per-window sums on a fixed stream: the closed-form
+/// check, `tests/sketch_laws.rs` style.
+#[test]
+fn merged_answers_match_closed_form_on_a_fixed_stream() {
+    let window = 800usize;
+    let slide = 200usize;
+    let mk = |mode: ExecModeSpec, budget: BudgetSpec| SystemConfig {
+        mode,
+        window_size: window,
+        slide,
+        seed: 11,
+        chunk_size: 16,
+        budget,
+        ..SystemConfig::default()
+    };
+
+    // Native: no sampling, so the merged Sum must equal the window's
+    // arithmetic sum (up to float association across the chunk
+    // pipeline) and the merged Count must be *exactly* the window
+    // length.
+    let cfg = mk(ExecModeSpec::Native, BudgetSpec::Fraction(1.0));
+    let mut tier = MergeTier::new(cfg.clone(), 4).unwrap();
+    let sum_q = tier.submit_query(QuerySpec::new(AggregateKind::Sum)).unwrap();
+    let count_q = tier.submit_query(QuerySpec::new(AggregateKind::Count)).unwrap();
+    let mut gen = MultiStream::paper_section5(17);
+    let mut live: Vec<Record> = Vec::new();
+    let mut first = true;
+    for _ in 0..6 {
+        let batch = gen.take_records(if first { window } else { slide });
+        first = false;
+        live.extend(batch.iter().copied());
+        let start = live.len().saturating_sub(window);
+        let truth: f64 = live[start..].iter().map(|r| r.value).sum();
+        let out = tier.process_batch_queries(batch).unwrap();
+        let sum = out.query(sum_q).expect("sum registered");
+        let rel = (sum.estimate.value - truth).abs() / truth.abs().max(1.0);
+        assert!(rel < 1e-9, "native sum {} vs truth {truth}", sum.estimate.value);
+        let count = out.query(count_q).expect("count registered");
+        assert_eq!(
+            count.estimate.value,
+            out.window.window_len as f64,
+            "native count is exact"
+        );
+        assert_eq!(out.window.window_len, live[start..].len());
+    }
+
+    // IncApprox with a half-window budget: sampled, so not exact — but
+    // the stratified estimate stays close and carries a finite margin.
+    let cfg = mk(ExecModeSpec::IncApprox, BudgetSpec::Fraction(0.5));
+    let mut tier = MergeTier::new(cfg.clone(), 4).unwrap();
+    let sum_q = tier.submit_query(QuerySpec::new(AggregateKind::Sum)).unwrap();
+    let mut gen = MultiStream::paper_section5(17);
+    let mut live: Vec<Record> = Vec::new();
+    let mut first = true;
+    for _ in 0..6 {
+        let batch = gen.take_records(if first { window } else { slide });
+        first = false;
+        live.extend(batch.iter().copied());
+        let start = live.len().saturating_sub(window);
+        let truth: f64 = live[start..].iter().map(|r| r.value).sum();
+        let out = tier.process_batch_queries(batch).unwrap();
+        let sum = out.query(sum_q).expect("sum registered");
+        assert!(sum.estimate.value.is_finite() && sum.estimate.margin.is_finite());
+        assert!(sum.estimate.margin >= 0.0);
+        let rel = (sum.estimate.value - truth).abs() / truth.abs().max(1.0);
+        assert!(rel < 0.25, "sampled sum drifted: {} vs {truth}", sum.estimate.value);
+    }
+}

@@ -17,7 +17,7 @@ mod common;
 
 use std::collections::BTreeMap;
 
-use common::{arb_batch, check_property};
+use common::{arb_batch, assert_outputs_identical, assert_windows_identical, check_property};
 use incapprox::job::aggregate::derive_aggregate;
 use incapprox::job::chunk::chunk_stratum;
 use incapprox::job::moments::Moments;
@@ -32,25 +32,6 @@ fn config(mode: ExecModeSpec) -> SystemConfig {
         chunk_size: 16,
         ..SystemConfig::default()
     }
-}
-
-fn assert_windows_identical(a: &WindowReport, b: &WindowReport, label: &str) {
-    assert_eq!(a.window_id, b.window_id, "{label}");
-    assert_eq!(
-        a.estimate.value.to_bits(),
-        b.estimate.value.to_bits(),
-        "{label} w{}: estimate {} vs {}",
-        a.window_id,
-        a.estimate.value,
-        b.estimate.value
-    );
-    assert_eq!(a.estimate.margin.to_bits(), b.estimate.margin.to_bits(), "{label}");
-    assert_eq!(a.window_len, b.window_len, "{label}");
-    assert_eq!(a.sample_size, b.sample_size, "{label}");
-    assert_eq!(a.chunks_total, b.chunks_total, "{label}");
-    assert_eq!(a.chunks_reused, b.chunks_reused, "{label}");
-    assert_eq!(a.fresh_items, b.fresh_items, "{label}");
-    assert_eq!(a.strata, b.strata, "{label}");
 }
 
 /// The legacy spec: what `process_batch` implicitly computes — a
@@ -369,25 +350,6 @@ fn queries_consistent_in_every_exec_mode() {
             assert!(q1.estimate.value > 0.0, "{label}");
             assert!(q1.estimate.value < sum.estimate.value, "{label}");
         }
-    }
-}
-
-fn assert_outputs_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
-    assert_windows_identical(&a.window, &b.window, label);
-    assert_eq!(a.queries.len(), b.queries.len(), "{label}");
-    for (qa, qb) in a.queries.iter().zip(&b.queries) {
-        assert_eq!(qa.id, qb.id, "{label}");
-        assert_eq!(qa.kind, qb.kind, "{label}");
-        assert_eq!(qa.estimate.value.to_bits(), qb.estimate.value.to_bits(), "{label}");
-        assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
-        assert_eq!(qa.sample_size, qb.sample_size, "{label}");
-        assert_eq!(qa.population, qb.population, "{label}");
-        assert_eq!(
-            qa.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
-            qb.extrema.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
-            "{label}"
-        );
-        assert_eq!(qa.surface, qb.surface, "{label}: sketch error surfaces must match");
     }
 }
 

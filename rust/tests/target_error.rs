@@ -15,6 +15,9 @@
 //! window/sampler/memo; only `derive_items` and the new `budget_adjust`
 //! counter scale with N.
 
+mod common;
+
+use common::assert_outputs_identical;
 use incapprox::prelude::*;
 
 fn config() -> SystemConfig {
@@ -40,32 +43,6 @@ fn batches(cfg: &SystemConfig, n: usize) -> Vec<Vec<Record>> {
         out.push(gen.take_records(cfg.slide));
     }
     out
-}
-
-fn assert_outputs_identical(a: &SlideOutput, b: &SlideOutput, label: &str) {
-    assert_eq!(a.window.window_id, b.window.window_id, "{label}");
-    assert_eq!(
-        a.window.estimate.value.to_bits(),
-        b.window.estimate.value.to_bits(),
-        "{label}"
-    );
-    assert_eq!(
-        a.window.estimate.margin.to_bits(),
-        b.window.estimate.margin.to_bits(),
-        "{label}"
-    );
-    assert_eq!(a.window.sample_size, b.window.sample_size, "{label}: sample size");
-    assert_eq!(a.window.window_len, b.window.window_len, "{label}");
-    assert_eq!(a.window.fresh_items, b.window.fresh_items, "{label}");
-    assert_eq!(a.queries.len(), b.queries.len(), "{label}");
-    for (qa, qb) in a.queries.iter().zip(&b.queries) {
-        assert_eq!(qa.id, qb.id, "{label}");
-        assert_eq!(qa.estimate.value.to_bits(), qb.estimate.value.to_bits(), "{label}");
-        assert_eq!(qa.estimate.margin.to_bits(), qb.estimate.margin.to_bits(), "{label}");
-        assert_eq!(qa.sample_size, qb.sample_size, "{label}");
-        assert_eq!(qa.population, qb.population, "{label}");
-        assert_eq!(qa.target_rel_bound, qb.target_rel_bound, "{label}");
-    }
 }
 
 #[test]
