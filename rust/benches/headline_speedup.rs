@@ -9,22 +9,98 @@
 //! (the paper's prototype is Spark-distributed; ours shards in-process).
 //!
 //! **JSON:** emits `target/bench-results/headline_speedup.json` with one
-//! `mode=<name>` measurement row per execution mode and one
-//! `sharded-scaling` point per worker count (throughput in records/s).
+//! `mode=<name>` measurement row per execution mode, one
+//! `sharded-scaling` point per worker count (throughput in records/s),
+//! and one `columnar-kernels` point per hot kernel comparing the
+//! row-stride path against the struct-of-arrays columnar path (both
+//! produce bit-identical outputs — `tests/columnar_kernels.rs`; this
+//! sweep measures what the layout buys).
 //!
 //! ```bash
-//! cargo bench --bench headline_speedup
+//! cargo bench --bench headline_speedup            # full sweep
+//! cargo bench --bench headline_speedup -- --smoke # CI: kernel sweep +
+//!                                                 # columnar ≥ row gate
 //! ```
 //!
 //! All modes run the same recorded trace on the same executor; timings
 //! come from the bench harness (warmup + repeated runs).
 
 use incapprox::bench_harness::{black_box, section, Bench, JsonReporter};
+use incapprox::columnar::ColumnarBatch;
 use incapprox::config::system::{ExecModeSpec, SystemConfig};
 use incapprox::coordinator::Coordinator;
+use incapprox::job::chunk::{chunk_hash_columns, chunk_hash_records};
+use incapprox::job::moments::Moments;
+use incapprox::job::sketch::SketchBundle;
 use incapprox::workload::flows::FlowLogGen;
+use incapprox::workload::gen::MultiStream;
 use incapprox::workload::record::Record;
 use incapprox::workload::trace::TraceReplay;
+
+/// Row-vs-columnar sweep over the vectorized hot kernels. Returns the
+/// (row, columnar) rows/s of the moments fold — the headline pair the
+/// smoke gate asserts on.
+fn columnar_kernel_sweep(json: &mut JsonReporter, n: usize, iters: usize) -> (f64, f64) {
+    section(&format!(
+        "Columnar kernels: row-stride vs struct-of-arrays on {n} records          (bit-identical outputs; layout only)"
+    ));
+    let records = MultiStream::paper_section5(42).take_records(n);
+    let cols = ColumnarBatch::from_records(&records);
+    println!("{:<22} {:>12} {:>14} {:>9}", "kernel", "mean_ms", "rows/s", "vs row");
+
+    let mut report = |kernel: &str, row_ms: f64, col_ms: f64, len: usize| {
+        let row_tp = len as f64 / (row_ms / 1e3);
+        let col_tp = len as f64 / (col_ms / 1e3);
+        println!("{:<22} {:>12.4} {:>14.0} {:>8.2}×", format!("{kernel} (row)"), row_ms, row_tp, 1.0);
+        println!(
+            "{:<22} {:>12.4} {:>14.0} {:>8.2}×",
+            format!("{kernel} (columnar)"),
+            col_ms,
+            col_tp,
+            row_ms / col_ms
+        );
+        json.record_point(
+            &format!("columnar-kernels/{kernel}"),
+            &[
+                ("row_ms", row_ms),
+                ("columnar_ms", col_ms),
+                ("rows_per_s_row", row_tp),
+                ("rows_per_s_columnar", col_tp),
+                ("speedup", row_ms / col_ms),
+            ],
+        );
+        (row_tp, col_tp)
+    };
+
+    // Moments fold — the headline kernel.
+    let row = Bench::new("moments fold (row)").warmup(1).iters(iters).run(|_| {
+        black_box(Moments::from_records(&records).sum);
+    });
+    let col = Bench::new("moments fold (columnar)").warmup(1).iters(iters).run(|_| {
+        black_box(Moments::fold_values(cols.values()).sum);
+    });
+    let (fold_row_tp, fold_col_tp) = report("moments-fold", row.mean_ms, col.mean_ms, n);
+
+    // Chunk hash.
+    let row = Bench::new("chunk hash (row)").warmup(1).iters(iters).run(|_| {
+        black_box(chunk_hash_records(0, &records));
+    });
+    let col = Bench::new("chunk hash (columnar)").warmup(1).iters(iters).run(|_| {
+        black_box(chunk_hash_columns(0, cols.ids(), cols.values()));
+    });
+    report("chunk-hash", row.mean_ms, col.mean_ms, n);
+
+    // Sketch feed.
+    let row = Bench::new("sketch feed (row)").warmup(1).iters(iters).run(|_| {
+        black_box(SketchBundle::from_records(7, &records).quantile.kept());
+    });
+    let col = Bench::new("sketch feed (columnar)").warmup(1).iters(iters).run(|_| {
+        black_box(SketchBundle::from_columns(7, &cols).quantile.kept());
+    });
+    report("sketch-feed", row.mean_ms, col.mean_ms, n);
+
+    (fold_row_tp, fold_col_tp)
+}
 
 fn run_trace(
     mode: ExecModeSpec,
@@ -51,6 +127,24 @@ fn run_trace(
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut json = JsonReporter::for_bench("headline_speedup");
+    let (kernel_n, kernel_iters) = if smoke { (200_000, 10) } else { (2_000_000, 20) };
+    let (fold_row_tp, fold_col_tp) = columnar_kernel_sweep(&mut json, kernel_n, kernel_iters);
+    if smoke {
+        // CI gate: the columnar moments fold must not be slower than
+        // the row-stride fold it replaced on the hot path.
+        assert!(
+            fold_col_tp >= fold_row_tp,
+            "columnar moments fold slower than row path: {fold_col_tp:.0} < {fold_row_tp:.0} rows/s"
+        );
+        println!(
+            "smoke OK: columnar moments fold {fold_col_tp:.0} rows/s ≥ row {fold_row_tp:.0} rows/s"
+        );
+        json.finish().expect("write bench results");
+        return;
+    }
+
     let windows = 20usize;
     let cfg = SystemConfig {
         window_size: 10_000,
@@ -61,7 +155,6 @@ fn main() {
     };
     let mut gen = FlowLogGen::case_study(4, cfg.seed);
     let records = gen.take_records(cfg.window_size + windows * cfg.slide);
-    let mut json = JsonReporter::for_bench("headline_speedup");
 
     section("Headline: end-to-end time for 20 windows (10k window, 4% slide, 10% sample)");
     let mut times = Vec::new();

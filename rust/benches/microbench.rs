@@ -55,14 +55,14 @@ fn main() {
     section("chunking + moments");
     let items: Vec<Record> = window[..1000].to_vec();
     let m = Bench::new("chunk_stratum 1000 items / target 64").iters(50).run_and_report(|_| {
-        black_box(chunk_stratum(0, &items, 64).len());
+        black_box(chunk_stratum(0, &items, 64).unwrap().len());
     });
     json.record_measurement("chunk_stratum", &m);
-    let prev = chunk_stratum(0, &items, 64);
+    let prev = chunk_stratum(0, &items, 64).unwrap();
     let m = Bench::new("chunk_stratum_cached (unchanged run reuse)")
         .iters(50)
         .run_and_report(|_| {
-            black_box(chunk_stratum_cached(0, &items, 64, &prev).0.len());
+            black_box(chunk_stratum_cached(0, &items, 64, &prev).unwrap().0.len());
         });
     json.record_measurement("chunk_stratum_cached", &m);
     let m = Bench::new("moments 10k items (rounds=0)").iters(50).run_and_report(|_| {
@@ -75,7 +75,7 @@ fn main() {
     json.record_measurement("moments_rounds16", &m);
 
     section("memo store");
-    let chunks = chunk_stratum(0, &window, 64);
+    let chunks = chunk_stratum(0, &window, 64).unwrap();
     let m = Bench::new("memo put+get 156 chunks").iters(50).run_and_report(|_| {
         let mut store = MemoStore::new();
         for c in &chunks {

@@ -1,0 +1,403 @@
+//! Struct-of-arrays record batches — the in-memory hot-path layout.
+//!
+//! Every per-slide kernel (chunk hashing, moment folds, rank scoring,
+//! sketch feeds) used to walk `&[Record]` row slices: 40-byte strided
+//! loads to reach one 8-byte field. [`ColumnarBatch`] transposes a
+//! record run into five dense `Arc` column buffers so each kernel
+//! iterates exactly the columns it needs — `values` for the moments
+//! fold, `ids`/`values` for the chunk hash, `ids` for sampler ranks,
+//! `ids`/`values`/`keys` for the sketch feed.
+//!
+//! Columnar is a *representation*, not a semantic: `from_records` /
+//! `to_records` round-trip losslessly and order-preservingly, and every
+//! kernel rewritten against columns is pinned bit-equal to its retained
+//! row-path reference (`tests/columnar_kernels.rs`, invariant
+//! "columnar ≡ row bytes" in `docs/ARCHITECTURE.md`). Nothing columnar
+//! is durable state — the checkpoint wire format is unchanged and rows
+//! are rebuilt on demand via the lazy [`ColumnarBatch::rows`] view for
+//! legacy callers.
+
+use std::sync::Arc;
+use std::sync::OnceLock;
+
+use crate::workload::record::{Record, StratumId};
+
+/// An immutable struct-of-arrays batch of records.
+///
+/// All five columns share one length; element `i` across the columns is
+/// the `i`-th record of the originating run, in run order. Cloning bumps
+/// `Arc` refcounts — column buffers are never copied on clone. The row
+/// view is materialized at most once per batch (shared across clones
+/// made *after* materialization) and only when a legacy `&[Record]`
+/// caller asks for it.
+#[derive(Debug, Clone)]
+pub struct ColumnarBatch {
+    ids: Arc<[u64]>,
+    strata: Arc<[StratumId]>,
+    timestamps: Arc<[u64]>,
+    keys: Arc<[u64]>,
+    values: Arc<[f64]>,
+    /// Lazily transposed row view for legacy `&[Record]` callers.
+    rows: OnceLock<Arc<[Record]>>,
+}
+
+impl Default for ColumnarBatch {
+    fn default() -> Self {
+        ColumnarBuilder::new().finish()
+    }
+}
+
+/// Bitwise equality: `values` compare by `f64::to_bits`, so NaNs are
+/// equal to themselves and `-0.0 != 0.0`. This is the same relation the
+/// chunk-reuse gate uses — two batches are equal exactly when every
+/// byte-identity consumer (hashes, sketches, reports) cannot tell them
+/// apart.
+impl PartialEq for ColumnarBatch {
+    fn eq(&self, other: &Self) -> bool {
+        self.ids == other.ids
+            && self.strata == other.strata
+            && self.timestamps == other.timestamps
+            && self.keys == other.keys
+            && self.values.len() == other.values.len()
+            && self
+                .values
+                .iter()
+                .zip(other.values.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+impl ColumnarBatch {
+    /// Transpose a row slice into columns.
+    pub fn from_records(records: &[Record]) -> Self {
+        let mut b = ColumnarBuilder::with_capacity(records.len());
+        b.extend_records(records);
+        b.finish()
+    }
+
+    /// Transpose an owned row vector into columns.
+    pub fn from_vec(records: Vec<Record>) -> Self {
+        Self::from_records(&records)
+    }
+
+    /// Transpose a shared row slice into columns **and** adopt it as the
+    /// batch's cached row view — [`Self::rows`] is then free. The window
+    /// snapshot path uses this: it owns the row copy anyway, so exact-
+    /// mode consumers keep their `&[Record]` view at zero extra cost
+    /// while kernels get dense columns.
+    pub fn from_rows_cached(records: Arc<[Record]>) -> Self {
+        let batch = Self::from_records(&records);
+        let _ = batch.rows.set(records);
+        batch
+    }
+
+    /// Rows, freshly transposed (see [`Self::rows`] for the cached view).
+    pub fn to_records(&self) -> Vec<Record> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+
+    /// Lazy row view: transposed on first call, cached for the batch's
+    /// lifetime. Legacy `&[Record]` call sites go through here.
+    pub fn rows(&self) -> &[Record] {
+        self.rows.get_or_init(|| self.to_records().into())
+    }
+
+    /// The cached row view as a shareable `Arc` slice.
+    pub fn rows_arc(&self) -> Arc<[Record]> {
+        self.rows();
+        // The cell was just initialized above; read it back without
+        // re-transposing.
+        match self.rows.get() {
+            Some(r) => Arc::clone(r),
+            None => Arc::from(self.to_records()),
+        }
+    }
+
+    /// Reassemble record `i` from the columns.
+    ///
+    /// Panics if `i >= len()`, like slice indexing.
+    #[inline]
+    pub fn get(&self, i: usize) -> Record {
+        Record {
+            id: self.ids[i],
+            stratum: self.strata[i],
+            timestamp: self.timestamps[i],
+            key: self.keys[i],
+            value: self.values[i],
+        }
+    }
+
+    /// Number of records in the batch.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Whether the batch holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The `id` column.
+    #[inline]
+    pub fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// The `stratum` column.
+    #[inline]
+    pub fn strata(&self) -> &[StratumId] {
+        &self.strata
+    }
+
+    /// The `timestamp` column.
+    #[inline]
+    pub fn timestamps(&self) -> &[u64] {
+        &self.timestamps
+    }
+
+    /// The `key` column.
+    #[inline]
+    pub fn keys(&self) -> &[u64] {
+        &self.keys
+    }
+
+    /// The `value` column.
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Copy the half-open row range `[a, b)` into a new batch. Dense
+    /// column memcpy — no row transpose.
+    ///
+    /// Panics if `a > b` or `b > len()`, like slice indexing.
+    pub fn slice(&self, a: usize, b: usize) -> Self {
+        ColumnarBatch {
+            ids: self.ids[a..b].into(),
+            strata: self.strata[a..b].into(),
+            timestamps: self.timestamps[a..b].into(),
+            keys: self.keys[a..b].into(),
+            values: self.values[a..b].into(),
+            rows: OnceLock::new(),
+        }
+    }
+
+    /// Whether this batch is bit-identical to a row slice (values by
+    /// `to_bits`). The columnar twin of `chunk::records_bit_equal`.
+    pub fn bit_eq_records(&self, rows: &[Record]) -> bool {
+        if self.len() != rows.len() {
+            return false;
+        }
+        rows.iter().enumerate().all(|(i, r)| {
+            self.ids[i] == r.id
+                && self.strata[i] == r.stratum
+                && self.timestamps[i] == r.timestamp
+                && self.keys[i] == r.key
+                && self.values[i].to_bits() == r.value.to_bits()
+        })
+    }
+
+    /// Whether `other` is bit-identical to this batch's row range
+    /// `[a, b)` — the chunk-reuse gate, run as five dense column
+    /// compares instead of a row walk.
+    ///
+    /// Panics if `a > b` or `b > len()`, like slice indexing.
+    pub fn range_bit_eq(&self, a: usize, b: usize, other: &Self) -> bool {
+        if other.len() != b - a {
+            return false;
+        }
+        self.ids[a..b] == other.ids[..]
+            && self.strata[a..b] == other.strata[..]
+            && self.timestamps[a..b] == other.timestamps[..]
+            && self.keys[a..b] == other.keys[..]
+            && self.values[a..b]
+                .iter()
+                .zip(other.values.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Whether two batches share the same column buffers (the columnar
+    /// twin of `Arc::ptr_eq` on a row slice) — used by the zero-copy
+    /// chunk-reuse assertions.
+    pub fn ptr_eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.ids, &other.ids)
+            && Arc::ptr_eq(&self.strata, &other.strata)
+            && Arc::ptr_eq(&self.timestamps, &other.timestamps)
+            && Arc::ptr_eq(&self.keys, &other.keys)
+            && Arc::ptr_eq(&self.values, &other.values)
+    }
+}
+
+/// Incrementally assembles a [`ColumnarBatch`] column by column — the
+/// native emission path for workload generators and window delta/
+/// snapshot construction (no intermediate `Vec<Record>`).
+#[derive(Debug, Default)]
+pub struct ColumnarBuilder {
+    ids: Vec<u64>,
+    strata: Vec<StratumId>,
+    timestamps: Vec<u64>,
+    keys: Vec<u64>,
+    values: Vec<f64>,
+}
+
+impl ColumnarBuilder {
+    /// Empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Empty builder with per-column capacity for `n` records.
+    pub fn with_capacity(n: usize) -> Self {
+        ColumnarBuilder {
+            ids: Vec::with_capacity(n),
+            strata: Vec::with_capacity(n),
+            timestamps: Vec::with_capacity(n),
+            keys: Vec::with_capacity(n),
+            values: Vec::with_capacity(n),
+        }
+    }
+
+    /// Append one record.
+    #[inline]
+    pub fn push(&mut self, r: &Record) {
+        self.push_parts(r.id, r.stratum, r.timestamp, r.key, r.value);
+    }
+
+    /// Append one record given as loose fields (generators emit here
+    /// without ever forming a `Record`).
+    #[inline]
+    pub fn push_parts(
+        &mut self,
+        id: u64,
+        stratum: StratumId,
+        timestamp: u64,
+        key: u64,
+        value: f64,
+    ) {
+        self.ids.push(id);
+        self.strata.push(stratum);
+        self.timestamps.push(timestamp);
+        self.keys.push(key);
+        self.values.push(value);
+    }
+
+    /// Append a row slice.
+    pub fn extend_records(&mut self, records: &[Record]) {
+        for r in records {
+            self.push(r);
+        }
+    }
+
+    /// Records appended so far.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Whether nothing has been appended.
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Freeze into an immutable batch.
+    pub fn finish(self) -> ColumnarBatch {
+        ColumnarBatch {
+            ids: self.ids.into(),
+            strata: self.strata.into(),
+            timestamps: self.timestamps.into(),
+            keys: self.keys.into(),
+            values: self.values.into(),
+            rows: OnceLock::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, stratum: StratumId, ts: u64, key: u64, value: f64) -> Record {
+        Record { id, stratum, timestamp: ts, key, value }
+    }
+
+    fn sample() -> Vec<Record> {
+        vec![
+            rec(3, 0, 10, 7, 1.5),
+            rec(1, 2, 11, 8, -0.25),
+            rec(9, 1, 12, 7, f64::NAN),
+            rec(4, 0, 13, 9, 0.0),
+        ]
+    }
+
+    #[test]
+    fn round_trip_preserves_rows_and_order() {
+        let rows = sample();
+        let b = ColumnarBatch::from_records(&rows);
+        assert_eq!(b.len(), rows.len());
+        let back = b.to_records();
+        for (a, r) in back.iter().zip(rows.iter()) {
+            assert_eq!(a.id, r.id);
+            assert_eq!(a.stratum, r.stratum);
+            assert_eq!(a.timestamp, r.timestamp);
+            assert_eq!(a.key, r.key);
+            assert_eq!(a.value.to_bits(), r.value.to_bits());
+        }
+        assert!(b.bit_eq_records(&rows));
+    }
+
+    #[test]
+    fn lazy_row_view_is_cached() {
+        let b = ColumnarBatch::from_records(&sample());
+        let p1 = b.rows().as_ptr();
+        let p2 = b.rows().as_ptr();
+        assert_eq!(p1, p2, "row view must transpose once");
+        assert_eq!(b.rows_arc().as_ptr(), p1);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let b = ColumnarBatch::default();
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        assert!(b.to_records().is_empty());
+        assert!(b.rows().is_empty());
+        assert!(b.bit_eq_records(&[]));
+        assert_eq!(b, ColumnarBatch::from_records(&[]));
+    }
+
+    #[test]
+    fn slice_is_dense_and_fresh() {
+        let b = ColumnarBatch::from_records(&sample());
+        let s = b.slice(1, 3);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.ids(), &[1, 9]);
+        assert!(b.range_bit_eq(1, 3, &s));
+        assert!(!b.range_bit_eq(0, 2, &s));
+        assert!(!s.ptr_eq(&b));
+        assert!(s.ptr_eq(&s.clone()));
+    }
+
+    #[test]
+    fn builder_parts_match_record_push() {
+        let rows = sample();
+        let mut a = ColumnarBuilder::with_capacity(rows.len());
+        let mut b = ColumnarBuilder::new();
+        for r in &rows {
+            a.push(r);
+            b.push_parts(r.id, r.stratum, r.timestamp, r.key, r.value);
+        }
+        assert_eq!(a.len(), rows.len());
+        assert!(!a.is_empty());
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn bit_equality_distinguishes_nan_payloads_not_identity() {
+        let rows = sample();
+        let b = ColumnarBatch::from_records(&rows);
+        // NaN == NaN under bit equality (same payload).
+        assert_eq!(b, b.clone());
+        let mut flipped = rows.clone();
+        flipped[3].value = -0.0;
+        assert!(!b.bit_eq_records(&flipped), "-0.0 must differ from 0.0");
+    }
+}

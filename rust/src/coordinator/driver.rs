@@ -109,7 +109,7 @@ use crate::coordinator::registry::QueryRegistry;
 use crate::coordinator::report::{SlideOutput, StratumReport, WindowReport};
 use crate::error::Result;
 use crate::fault::{FaultInjector, MemoReplica, RecoveryPolicy, SlideFaults};
-use crate::job::chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
+use crate::job::chunk::{chunk_stratum, chunk_stratum_cached_columns, Chunk};
 use crate::job::executor::{run_sharded, ChunkBackend, NativeBackend, WorkerPool};
 use crate::job::moments::Moments;
 use crate::job::plan::{JobPlan, PlannedChunk};
@@ -198,7 +198,7 @@ fn plan_one_stratum(
     memoizes: bool,
     epoch_recompute: bool,
     chunk_size: usize,
-) -> StratumPlan {
+) -> Result<StratumPlan> {
     let shard = memo.shard(stratum);
     let prev_m = shard.stratum_moments(stratum);
     let cache = prev_chunks.unwrap_or(&[]);
@@ -207,12 +207,12 @@ fn plan_one_stratum(
         _ => {
             let (planned, rehashed_items) = JobPlan::plan_stratum_cached(
                 stratum,
-                cur.records(),
+                cur.columns(),
                 if memoizes { Some(shard) } else { None },
                 chunk_size,
                 cache,
-            );
-            return StratumPlan::Full { planned, rehashed_items };
+            )?;
+            return Ok(StratumPlan::Full { planned, rehashed_items });
         }
     };
     // Diff via the runs' resident id sets — O(|cur| + |prev|) lookups,
@@ -225,20 +225,20 @@ fn plan_one_stratum(
         // Delta as big as the sample: recompute instead.
         let (planned, rehashed_items) = JobPlan::plan_stratum_cached(
             stratum,
-            cur.records(),
+            cur.columns(),
             Some(shard),
             chunk_size,
             cache,
-        );
-        return StratumPlan::Full { planned, rehashed_items };
+        )?;
+        return Ok(StratumPlan::Full { planned, rehashed_items });
     }
     let delta_items = added.len() + removed.len();
-    StratumPlan::Delta {
+    Ok(StratumPlan::Delta {
         base,
-        added: chunk_stratum(stratum, &added, chunk_size),
-        removed: chunk_stratum(stratum, &removed, chunk_size),
+        added: chunk_stratum(stratum, &added, chunk_size)?,
+        removed: chunk_stratum(stratum, &removed, chunk_size)?,
         delta_items,
-    }
+    })
 }
 
 /// The front half of a slide, produced by [`Coordinator::slide_prepare`]
@@ -255,6 +255,9 @@ pub(crate) struct SlidePrep {
     slide_work: SlideWork,
     faults: SlideFaults,
     prev_items: BTreeMap<StratumId, SampleRun>,
+    /// Sampler-maintenance kernel wall-clock (measured in
+    /// [`Coordinator::slide_prepare`], reported through [`SlideTiming`]).
+    sampler_ms: f64,
 }
 
 impl SlidePrep {
@@ -288,6 +291,11 @@ pub(crate) struct SlideTiming {
     pub(crate) compute_ms: f64,
     /// Running since the top of the finalize phase.
     pub(crate) sw_finalize: Stopwatch,
+    /// Sampler-maintenance kernel wall-clock (batched delta ranks on the
+    /// incremental path, full rebuild on the baseline).
+    pub(crate) sampler_ms: f64,
+    /// Sketch feed-pass wall-clock (~0 when no sketch query is live).
+    pub(crate) sketch_ms: f64,
 }
 
 /// One stratum's complete live state in flight between two partition
@@ -628,7 +636,7 @@ impl Coordinator {
         biased: &BiasOutcome,
         prev_items: &BTreeMap<StratumId, SampleRun>,
         epoch_recompute: bool,
-    ) -> BTreeMap<StratumId, StratumPlan> {
+    ) -> Result<BTreeMap<StratumId, StratumPlan>> {
         let memoizes = self.cfg.mode.memoizes();
         let chunk_size = self.cfg.chunk_size;
         let memo = &self.memo;
@@ -668,14 +676,18 @@ impl Coordinator {
                                     memoizes,
                                     epoch_recompute,
                                     chunk_size,
-                                );
-                                (s, plan)
+                                )?;
+                                Ok((s, plan))
                             })
-                            .collect::<Vec<_>>()
+                            .collect::<Result<Vec<_>>>()
                     }
                 })
                 .collect();
-            run_sharded(tasks).into_iter().flatten().collect()
+            let mut out = BTreeMap::new();
+            for group in run_sharded(tasks) {
+                out.extend(group?);
+            }
+            Ok(out)
         } else {
             biased
                 .per_stratum
@@ -690,8 +702,8 @@ impl Coordinator {
                         memoizes,
                         epoch_recompute,
                         chunk_size,
-                    );
-                    (s, plan)
+                    )?;
+                    Ok((s, plan))
                 })
                 .collect()
         }
@@ -978,7 +990,7 @@ impl Coordinator {
             None
         };
         let want_sketches = self.queries.wants_sketches();
-        let (state, timing) = self.slide_finish(prep, horizon, alloc.as_ref(), want_sketches);
+        let (state, timing) = self.slide_finish(prep, horizon, alloc.as_ref(), want_sketches)?;
         let PartitionState {
             window_id,
             window_len,
@@ -1033,8 +1045,13 @@ impl Coordinator {
         self.queries.observe_bounds(&moments, &populations, window_len, &mut slide_work);
 
         let latency_ms = timing.sw.elapsed_ms();
-        self.profile
-            .observe(timing.plan_ms, timing.compute_ms, timing.sw_finalize.elapsed_ms());
+        self.profile.observe(
+            timing.plan_ms,
+            timing.compute_ms,
+            timing.sw_finalize.elapsed_ms(),
+            timing.sampler_ms,
+            timing.sketch_ms,
+        );
         self.work.observe(slide_work);
         // The session-level budget owns the whole window: it observes the
         // realized union sample and the full slide latency. Per-query
@@ -1134,16 +1151,21 @@ impl Coordinator {
         // updated with the delta (O(delta)); the from-scratch baseline
         // rebuilds it (O(window)). Identical state either way — the
         // sampler is a pure function of window contents and seed.
+        let sw_sampler = Stopwatch::start();
         if self.cfg.mode.samples() {
             let touched = if self.cfg.incremental_slide {
                 self.sampler.apply_delta(&snap.delta)
             } else {
-                self.sampler.rebuild(snap.items())
+                match snap.columns() {
+                    Some(cols) => self.sampler.rebuild_columns(cols),
+                    None => self.sampler.rebuild(snap.items()),
+                }
             };
             slide_work.sampler_items = touched as u64;
         }
+        let sampler_ms = sw_sampler.elapsed_ms();
 
-        SlidePrep { snap, sw, slide_work, faults, prev_items }
+        SlidePrep { snap, sw, slide_work, faults, prev_items, sampler_ms }
     }
 
     /// The back half of the slide: memo eviction at `horizon`, sample
@@ -1163,8 +1185,8 @@ impl Coordinator {
         horizon: u64,
         alloc: Option<&BTreeMap<StratumId, usize>>,
         want_sketches: bool,
-    ) -> (PartitionState, SlideTiming) {
-        let SlidePrep { snap, sw, mut slide_work, faults, prev_items } = prep;
+    ) -> Result<(PartitionState, SlideTiming)> {
+        let SlidePrep { snap, sw, mut slide_work, faults, prev_items, sampler_ms } = prep;
         let window_id = snap.window_id;
         let window_len = snap.len;
 
@@ -1197,7 +1219,7 @@ impl Coordinator {
             && self.windows_processed % self.cfg.recompute_epoch as u64
                 == self.cfg.recompute_epoch as u64 - 1;
         let sw_plan = Stopwatch::start();
-        let plans = self.plan_strata(&biased, &prev_items, epoch_recompute);
+        let plans = self.plan_strata(&biased, &prev_items, epoch_recompute)?;
         let plan_ms = sw_plan.elapsed_ms();
         for plan in plans.values() {
             let touched = match plan {
@@ -1316,9 +1338,9 @@ impl Coordinator {
                                 if memoizes {
                                     let min_ts = p
                                         .chunk
-                                        .items
+                                        .timestamps()
                                         .iter()
-                                        .map(|r| r.timestamp)
+                                        .copied()
                                         .min()
                                         .unwrap_or(0);
                                     self.memo.put_chunk_for(
@@ -1407,6 +1429,7 @@ impl Coordinator {
         // charged to `sketch_items`, never to the moment substrate's
         // counters.
         let mut stratum_sketches: BTreeMap<StratumId, SketchBundle> = BTreeMap::new();
+        let sw_sketch = Stopwatch::start();
         if want_sketches {
             let sketch_seed = self.cfg.seed ^ SKETCH_SEED_SALT;
             for (&stratum, run) in &biased.per_stratum {
@@ -1416,7 +1439,7 @@ impl Coordinator {
                     } else {
                         &[]
                     };
-                    chunk_stratum_cached(stratum, run.records(), self.cfg.chunk_size, prev)
+                    chunk_stratum_cached_columns(stratum, run.columns(), self.cfg.chunk_size, prev)?
                 };
                 slide_work.sketch_items += rehashed as u64;
                 let mut bundle = SketchBundle::new(sketch_seed);
@@ -1430,10 +1453,10 @@ impl Coordinator {
                         Some(b) => b,
                         None => {
                             slide_work.sketch_items += c.len() as u64;
-                            let b = SketchBundle::from_records(sketch_seed, &c.items);
+                            let b = SketchBundle::from_columns(sketch_seed, c.columns());
                             if memoizes {
                                 let min_ts =
-                                    c.items.iter().map(|r| r.timestamp).min().unwrap_or(0);
+                                    c.timestamps().iter().copied().min().unwrap_or(0);
                                 self.memo.put_chunk_sketch_for(
                                     stratum,
                                     c.hash,
@@ -1463,6 +1486,7 @@ impl Coordinator {
                 self.sketch_chunks.retain(|s, _| biased.per_stratum.contains_key(s));
             }
         }
+        let sketch_ms = sw_sketch.elapsed_ms();
 
         // --- Per-stratum reports (merged as-is by the partition tier) ---
         let mut strata_reports: BTreeMap<StratumId, StratumReport> = BTreeMap::new();
@@ -1510,7 +1534,7 @@ impl Coordinator {
         }
         self.windows_processed += 1;
 
-        (
+        Ok((
             PartitionState {
                 window_id,
                 window_len,
@@ -1526,8 +1550,8 @@ impl Coordinator {
                 fault_injected: faults.memo_loss,
                 work: slide_work,
             },
-            SlideTiming { sw, plan_ms, compute_ms, sw_finalize },
-        )
+            SlideTiming { sw, plan_ms, compute_ms, sw_finalize, sampler_ms, sketch_ms },
+        ))
     }
 
     // --- Checkpoint / restore (see `crate::checkpoint` for the format) --

@@ -413,9 +413,9 @@ mod tests {
         let mut direct = BTreeMap::new();
         let mut pops = BTreeMap::new();
         for (&s, recs) in &by_stratum {
-            let chunks = crate::job::chunk::chunk_stratum(s, recs, 8);
+            let chunks = crate::job::chunk::chunk_stratum(s, recs, 8).unwrap();
             let parts: Vec<Moments> =
-                chunks.iter().map(|c| Moments::from_records(&c.items)).collect();
+                chunks.iter().map(|c| Moments::from_records(c.items())).collect();
             chunked.insert(s, Moments::combine_all(parts.iter()));
             direct.insert(s, Moments::from_records(recs));
             pops.insert(s, recs.len() as u64);

@@ -11,16 +11,22 @@
 //! windows therefore produce byte-identical chunks — identical memo keys —
 //! for all unchanged runs of items.
 //!
-//! Chunks carry their items behind `Arc<[Record]>`, so cloning a chunk —
-//! the executor's per-worker batches, the coordinator's per-stratum chunk
-//! cache — never copies records. [`chunk_stratum_cached`] goes further:
-//! given the previous window's chunk sequence, runs whose records are
-//! unchanged reuse the previous `Chunk` outright (no re-hash, no
-//! allocation), making full-path re-chunking O(changed runs) instead of
-//! O(sample).
+//! Chunks carry their items as a struct-of-arrays [`ColumnarBatch`]
+//! behind `Arc` column buffers, so cloning a chunk — the executor's
+//! per-worker batches, the coordinator's per-stratum chunk cache — never
+//! copies records, and the hot kernels (moment fold, chunk hash, sketch
+//! feed) iterate dense column slices. The content hash is computed by
+//! [`chunk_hash_columns`], which issues the exact same `StableHasher`
+//! write sequence as the retained row-path reference
+//! [`chunk_hash_records`] — byte-output-identical, pinned by the
+//! `stable_hasher_golden_vectors` test and the kernel equivalence gate.
+//! [`chunk_stratum_cached`] goes further: given the previous window's
+//! chunk sequence, runs whose records are unchanged reuse the previous
+//! `Chunk` outright (no re-hash, no allocation), making full-path
+//! re-chunking O(changed runs) instead of O(sample).
 
-use std::sync::Arc;
-
+use crate::columnar::ColumnarBatch;
+use crate::error::{Error, Result};
 use crate::util::hash::{mix64, FastMap, StableHasher};
 use crate::workload::record::{Record, StratumId};
 
@@ -29,32 +35,93 @@ use crate::workload::record::{Record, StratumId};
 pub struct Chunk {
     /// Stratum all items belong to.
     pub stratum: StratumId,
-    /// Items, in the caller's (bias/window) order — shared, so cloning a
-    /// chunk is O(1).
-    pub items: Arc<[Record]>,
+    /// Items in the caller's (bias/window) order, stored columnar —
+    /// shared `Arc` columns, so cloning a chunk is O(1).
+    columns: ColumnarBatch,
     /// Stable content hash (ids + value bits) — the memo key.
     pub hash: u64,
 }
 
+/// Columnar chunk-hash kernel: digests `stratum`, then per element
+/// `id_i` and `value_i` from two dense slices — the same `StableHasher`
+/// write sequence as [`chunk_hash_records`], so the output is
+/// byte-identical to the row path (golden-pinned).
+#[inline]
+pub fn chunk_hash_columns(stratum: StratumId, ids: &[u64], values: &[f64]) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_u64(stratum as u64);
+    for (&id, &v) in ids.iter().zip(values) {
+        h.write_u64(id);
+        h.write_f64(v);
+    }
+    h.finish()
+}
+
+/// Retained row-path reference for the chunk hash: walks `&[Record]`
+/// issuing per-record field writes. The kernel equivalence gate
+/// (`tests/columnar_kernels.rs`) pins [`chunk_hash_columns`] bit-equal
+/// to this on randomized batches.
+#[inline]
+pub fn chunk_hash_records(stratum: StratumId, items: &[Record]) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_u64(stratum as u64);
+    for r in items {
+        h.write_u64(r.id);
+        h.write_f64(r.value);
+    }
+    h.finish()
+}
+
 impl Chunk {
     fn from_run(stratum: StratumId, items: &[Record]) -> Self {
-        let mut h = StableHasher::new();
-        h.write_u64(stratum as u64);
-        for r in items {
-            h.write_u64(r.id);
-            h.write_f64(r.value);
-        }
-        Chunk { stratum, items: Arc::from(items), hash: h.finish() }
+        let columns = ColumnarBatch::from_records(items);
+        let hash = chunk_hash_columns(stratum, columns.ids(), columns.values());
+        Chunk { stratum, columns, hash }
+    }
+
+    fn from_columns(stratum: StratumId, columns: ColumnarBatch) -> Self {
+        let hash = chunk_hash_columns(stratum, columns.ids(), columns.values());
+        Chunk { stratum, columns, hash }
+    }
+
+    /// The chunk's columnar interior.
+    #[inline]
+    pub fn columns(&self) -> &ColumnarBatch {
+        &self.columns
+    }
+
+    /// Legacy row view (lazily transposed once, then cached).
+    #[inline]
+    pub fn items(&self) -> &[Record] {
+        self.columns.rows()
+    }
+
+    /// Dense `id` column.
+    #[inline]
+    pub fn ids(&self) -> &[u64] {
+        self.columns.ids()
+    }
+
+    /// Dense `value` column — the moments-fold input.
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        self.columns.values()
+    }
+
+    /// Dense `timestamp` column.
+    #[inline]
+    pub fn timestamps(&self) -> &[u64] {
+        self.columns.timestamps()
     }
 
     /// Item count.
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.columns.len()
     }
 
     /// True when the chunk holds no items.
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.columns.is_empty()
     }
 }
 
@@ -64,39 +131,29 @@ fn is_boundary(id: u64, target: usize) -> bool {
     mix64(id) % target as u64 == 0
 }
 
-/// Bit-exact record-run equality: the reuse gate for cached chunks.
-/// Values compare by bit pattern (not f64 `==`), because the chunk hash
-/// absorbs `value.to_bits()`: `+0.0`/`-0.0` must NOT reuse each other's
-/// hash (they digest differently), while bit-identical NaNs may.
-#[inline]
-fn records_bit_equal(a: &[Record], b: &[Record]) -> bool {
-    a.len() == b.len()
-        && a.iter().zip(b).all(|(x, y)| {
-            x.id == y.id
-                && x.stratum == y.stratum
-                && x.timestamp == y.timestamp
-                && x.key == y.key
-                && x.value.to_bits() == y.value.to_bits()
-        })
-}
-
-/// Content-defined run bounds over `items`: half-open `(start, end)`
-/// index pairs with expected length `target`, hard cap `4 × target`.
-fn run_bounds(items: &[Record], target: usize) -> Vec<(usize, usize)> {
-    assert!(target > 0, "chunk target must be positive");
+/// Content-defined run bounds over an id sequence: half-open
+/// `(start, end)` index pairs with expected length `target`, hard cap
+/// `4 × target`. A `target` of 0 is a configuration error (`% 0` has no
+/// meaning), reported as [`Error::Config`] rather than a panic so
+/// callers surface it through the normal error channel.
+fn run_bounds(ids: impl ExactSizeIterator<Item = u64>, target: usize) -> Result<Vec<(usize, usize)>> {
+    if target == 0 {
+        return Err(Error::Config("chunk target must be positive (got 0)".into()));
+    }
     let cap = 4 * target;
+    let len = ids.len();
     let mut bounds = Vec::new();
     let mut start = 0usize;
-    for (i, r) in items.iter().enumerate() {
-        if is_boundary(r.id, target) || i + 1 - start >= cap {
+    for (i, id) in ids.enumerate() {
+        if is_boundary(id, target) || i + 1 - start >= cap {
             bounds.push((start, i + 1));
             start = i + 1;
         }
     }
-    if start < items.len() {
-        bounds.push((start, items.len()));
+    if start < len {
+        bounds.push((start, len));
     }
-    bounds
+    Ok(bounds)
 }
 
 /// Split one stratum's sampled items into stable chunks with expected
@@ -111,11 +168,28 @@ fn run_bounds(items: &[Record], target: usize) -> Vec<(usize, usize)> {
 /// chunks — and their memo keys — stay identical. Sorting here (e.g. by
 /// id) would interleave fresh items between memoized ones and invalidate
 /// every chunk.
-pub fn chunk_stratum(stratum: StratumId, items: &[Record], target: usize) -> Vec<Chunk> {
-    run_bounds(items, target)
+///
+/// Errors with [`Error::Config`] when `target == 0`.
+pub fn chunk_stratum(stratum: StratumId, items: &[Record], target: usize) -> Result<Vec<Chunk>> {
+    Ok(run_bounds(items.iter().map(|r| r.id), target)?
         .into_iter()
         .map(|(a, b)| Chunk::from_run(stratum, &items[a..b]))
-        .collect()
+        .collect())
+}
+
+/// [`chunk_stratum`] over an already-columnar run: bounds come from the
+/// dense `id` column and each chunk's interior is a dense column
+/// `memcpy` ([`ColumnarBatch::slice`]) — no row transpose anywhere.
+/// Output is byte-identical to the row path.
+pub fn chunk_stratum_columns(
+    stratum: StratumId,
+    cols: &ColumnarBatch,
+    target: usize,
+) -> Result<Vec<Chunk>> {
+    Ok(run_bounds(cols.ids().iter().copied(), target)?
+        .into_iter()
+        .map(|(a, b)| Chunk::from_columns(stratum, cols.slice(a, b)))
+        .collect())
 }
 
 /// [`chunk_stratum`] with reuse from `prev`, the previous window's chunk
@@ -127,35 +201,28 @@ pub fn chunk_stratum(stratum: StratumId, items: &[Record], target: usize) -> Vec
 ///
 /// Returns the chunks plus the number of items that had to be re-hashed
 /// (the O(delta) work metric; `prev = &[]` degrades to re-hashing
-/// everything).
+/// everything). Errors with [`Error::Config`] when `target == 0`.
 pub fn chunk_stratum_cached(
     stratum: StratumId,
     items: &[Record],
     target: usize,
     prev: &[Chunk],
-) -> (Vec<Chunk>, usize) {
-    let bounds = run_bounds(items, target);
+) -> Result<(Vec<Chunk>, usize)> {
+    let bounds = run_bounds(items.iter().map(|r| r.id), target)?;
     if prev.is_empty() {
         let chunks = bounds
             .into_iter()
             .map(|(a, b)| Chunk::from_run(stratum, &items[a..b]))
             .collect();
-        return (chunks, items.len());
+        return Ok((chunks, items.len()));
     }
-    // Index the previous sequence by first item id (ids are unique within
-    // a stratum's sample run, so first ids are unique across its chunks).
-    let mut by_first: FastMap<u64, &Chunk> = FastMap::default();
-    for c in prev {
-        if let Some(first) = c.items.first() {
-            by_first.insert(first.id, c);
-        }
-    }
+    let by_first = index_by_first_id(prev);
     let mut chunks = Vec::with_capacity(bounds.len());
     let mut rehashed_items = 0usize;
     for (a, b) in bounds {
         let run = &items[a..b];
         if let Some(&cached) = by_first.get(&run[0].id) {
-            if cached.stratum == stratum && records_bit_equal(&cached.items, run) {
+            if cached.stratum == stratum && cached.columns.bit_eq_records(run) {
                 chunks.push(cached.clone());
                 continue;
             }
@@ -163,7 +230,54 @@ pub fn chunk_stratum_cached(
         rehashed_items += run.len();
         chunks.push(Chunk::from_run(stratum, run));
     }
-    (chunks, rehashed_items)
+    Ok((chunks, rehashed_items))
+}
+
+/// [`chunk_stratum_cached`] over an already-columnar run. The reuse gate
+/// runs as five dense column compares ([`ColumnarBatch::range_bit_eq`])
+/// instead of a row walk; output is byte-identical to every other
+/// chunking path.
+pub fn chunk_stratum_cached_columns(
+    stratum: StratumId,
+    cols: &ColumnarBatch,
+    target: usize,
+    prev: &[Chunk],
+) -> Result<(Vec<Chunk>, usize)> {
+    let bounds = run_bounds(cols.ids().iter().copied(), target)?;
+    if prev.is_empty() {
+        let chunks = bounds
+            .into_iter()
+            .map(|(a, b)| Chunk::from_columns(stratum, cols.slice(a, b)))
+            .collect();
+        return Ok((chunks, cols.len()));
+    }
+    let by_first = index_by_first_id(prev);
+    let mut chunks = Vec::with_capacity(bounds.len());
+    let mut rehashed_items = 0usize;
+    for (a, b) in bounds {
+        if let Some(&cached) = by_first.get(&cols.ids()[a]) {
+            if cached.stratum == stratum && cols.range_bit_eq(a, b, &cached.columns) {
+                chunks.push(cached.clone());
+                continue;
+            }
+        }
+        rehashed_items += b - a;
+        chunks.push(Chunk::from_columns(stratum, cols.slice(a, b)));
+    }
+    Ok((chunks, rehashed_items))
+}
+
+/// Index a previous chunk sequence by first item id (ids are unique
+/// within a stratum's sample run, so first ids are unique across its
+/// chunks).
+fn index_by_first_id(prev: &[Chunk]) -> FastMap<u64, &Chunk> {
+    let mut by_first: FastMap<u64, &Chunk> = FastMap::default();
+    for c in prev {
+        if let Some(&first) = c.ids().first() {
+            by_first.insert(first, c);
+        }
+    }
+    by_first
 }
 
 #[cfg(test)]
@@ -178,10 +292,10 @@ mod tests {
     #[test]
     fn all_items_kept_once() {
         let items = recs(0..1000);
-        let chunks = chunk_stratum(0, &items, 64);
+        let chunks = chunk_stratum(0, &items, 64).unwrap();
         let total: usize = chunks.iter().map(Chunk::len).sum();
         assert_eq!(total, 1000);
-        let mut ids: Vec<u64> = chunks.iter().flat_map(|c| c.items.iter().map(|r| r.id)).collect();
+        let mut ids: Vec<u64> = chunks.iter().flat_map(|c| c.ids().to_vec()).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..1000).collect::<Vec<_>>());
     }
@@ -189,7 +303,7 @@ mod tests {
     #[test]
     fn expected_chunk_size_near_target() {
         let items = recs(0..100_000);
-        let chunks = chunk_stratum(0, &items, 64);
+        let chunks = chunk_stratum(0, &items, 64).unwrap();
         let mean = 100_000.0 / chunks.len() as f64;
         assert!((mean - 64.0).abs() < 8.0, "mean chunk size {mean}");
     }
@@ -197,7 +311,7 @@ mod tests {
     #[test]
     fn size_cap_enforced() {
         let items = recs(0..50_000);
-        let chunks = chunk_stratum(0, &items, 32);
+        let chunks = chunk_stratum(0, &items, 32).unwrap();
         assert!(chunks.iter().all(|c| c.len() <= 128));
     }
 
@@ -207,8 +321,8 @@ mod tests {
         // newest) must keep interior chunks identical.
         let w1 = recs(0..10_000);
         let w2 = recs(400..10_400); // slide by 400
-        let c1 = chunk_stratum(0, &w1, 64);
-        let c2 = chunk_stratum(0, &w2, 64);
+        let c1 = chunk_stratum(0, &w1, 64).unwrap();
+        let c2 = chunk_stratum(0, &w2, 64).unwrap();
         let h1: std::collections::HashSet<u64> = c1.iter().map(|c| c.hash).collect();
         let h2: std::collections::HashSet<u64> = c2.iter().map(|c| c.hash).collect();
         let shared = h1.intersection(&h2).count();
@@ -222,10 +336,10 @@ mod tests {
 
     #[test]
     fn hash_depends_on_values() {
-        let a = chunk_stratum(0, &recs(0..10), 100);
+        let a = chunk_stratum(0, &recs(0..10), 100).unwrap();
         let mut items = recs(0..10);
         items[3].value += 1.0;
-        let b = chunk_stratum(0, &items, 100);
+        let b = chunk_stratum(0, &items, 100).unwrap();
         assert_eq!(a.len(), b.len());
         // The chunk containing item 3 must change hash; others must not.
         let ha: Vec<u64> = a.iter().map(|c| c.hash).collect();
@@ -237,9 +351,24 @@ mod tests {
 
     #[test]
     fn hash_depends_on_stratum() {
-        let a = chunk_stratum(0, &recs(0..10), 100);
-        let b = chunk_stratum(1, &recs(0..10), 100);
+        let a = chunk_stratum(0, &recs(0..10), 100).unwrap();
+        let b = chunk_stratum(1, &recs(0..10), 100).unwrap();
         assert_ne!(a[0].hash, b[0].hash);
+    }
+
+    #[test]
+    fn columnar_chunking_matches_row_path() {
+        // chunk_stratum_columns is the same partition, hash for hash and
+        // record for record, as the row path.
+        let items = recs(0..3_000);
+        let cols = ColumnarBatch::from_records(&items);
+        let by_rows = chunk_stratum(0, &items, 64).unwrap();
+        let by_cols = chunk_stratum_columns(0, &cols, 64).unwrap();
+        assert_eq!(by_rows.len(), by_cols.len());
+        for (r, c) in by_rows.iter().zip(&by_cols) {
+            assert_eq!(r.hash, c.hash);
+            assert_eq!(r.items(), c.items());
+        }
     }
 
     #[test]
@@ -249,8 +378,8 @@ mod tests {
         // memoized prefix stable across windows.
         let mut shuffled = recs(0..500);
         Rng::new(1).shuffle(&mut shuffled);
-        let a = chunk_stratum(0, &recs(0..500), 64);
-        let b = chunk_stratum(0, &shuffled, 64);
+        let a = chunk_stratum(0, &recs(0..500), 64).unwrap();
+        let b = chunk_stratum(0, &shuffled, 64).unwrap();
         let ha: std::collections::HashSet<u64> = a.iter().map(|c| c.hash).collect();
         let hb: std::collections::HashSet<u64> = b.iter().map(|c| c.hash).collect();
         assert_ne!(ha, hb);
@@ -267,8 +396,8 @@ mod tests {
         let w1: Vec<Record> = recs(0..5_000);
         let mut w2: Vec<Record> = w1[600..].to_vec();
         w2.extend(recs(5_000..5_600));
-        let c1 = chunk_stratum(0, &w1, 64);
-        let c2 = chunk_stratum(0, &w2, 64);
+        let c1 = chunk_stratum(0, &w1, 64).unwrap();
+        let c2 = chunk_stratum(0, &w2, 64).unwrap();
         let h1: std::collections::HashSet<u64> = c1.iter().map(|c| c.hash).collect();
         let shared = c2.iter().filter(|c| h1.contains(&c.hash)).count();
         assert!(
@@ -280,39 +409,50 @@ mod tests {
 
     #[test]
     fn empty_input_no_chunks() {
-        assert!(chunk_stratum(0, &[], 64).is_empty());
-        let (chunks, rehashed) = chunk_stratum_cached(0, &[], 64, &[]);
+        assert!(chunk_stratum(0, &[], 64).unwrap().is_empty());
+        let (chunks, rehashed) = chunk_stratum_cached(0, &[], 64, &[]).unwrap();
         assert!(chunks.is_empty());
         assert_eq!(rehashed, 0);
     }
 
     #[test]
-    #[should_panic(expected = "positive")]
-    fn zero_target_panics() {
-        chunk_stratum(0, &recs(0..4), 0);
+    fn zero_target_is_config_error() {
+        // Every chunking entry point reports target = 0 as a typed
+        // config error instead of panicking.
+        let items = recs(0..4);
+        let cols = ColumnarBatch::from_records(&items);
+        for err in [
+            chunk_stratum(0, &items, 0).unwrap_err(),
+            chunk_stratum_columns(0, &cols, 0).unwrap_err(),
+            chunk_stratum_cached(0, &items, 0, &[]).unwrap_err(),
+            chunk_stratum_cached_columns(0, &cols, 0, &[]).unwrap_err(),
+        ] {
+            assert!(matches!(err, Error::Config(ref m) if m.contains("positive")), "{err}");
+        }
     }
 
     #[test]
     fn cached_identical_input_reuses_everything() {
         let items = recs(0..2_000);
-        let prev = chunk_stratum(0, &items, 64);
-        let (chunks, rehashed) = chunk_stratum_cached(0, &items, 64, &prev);
+        let prev = chunk_stratum(0, &items, 64).unwrap();
+        let (chunks, rehashed) = chunk_stratum_cached(0, &items, 64, &prev).unwrap();
         assert_eq!(rehashed, 0, "identical input must not re-hash");
         assert_eq!(chunks.len(), prev.len());
         for (c, p) in chunks.iter().zip(&prev) {
             assert_eq!(c.hash, p.hash);
-            assert!(Arc::ptr_eq(&c.items, &p.items), "reuse must be zero-copy");
+            assert!(c.columns().ptr_eq(p.columns()), "reuse must be zero-copy");
         }
     }
 
     #[test]
-    fn cached_output_identical_to_uncached_across_slides() {
+    fn cached_columns_identical_to_row_cached_across_slides() {
         // The equivalence contract: cached chunking is an optimization,
         // never a semantic change — hashes and items match the
         // from-scratch sequence for arbitrary prefix-drop/suffix-append
-        // edits (with some mid-run removals thrown in).
+        // edits (with some mid-run removals thrown in), on both the row
+        // and the columnar cached paths.
         let mut window: Vec<Record> = recs(0..4_000);
-        let mut prev = chunk_stratum(0, &window, 32);
+        let mut prev = chunk_stratum(0, &window, 32).unwrap();
         let mut next_id = 4_000u64;
         let mut rng = Rng::new(7);
         for _ in 0..6 {
@@ -324,12 +464,18 @@ mod tests {
             }
             window.extend(recs(next_id..next_id + 310));
             next_id += 310;
-            let (cached, rehashed) = chunk_stratum_cached(0, &window, 32, &prev);
-            let scratch = chunk_stratum(0, &window, 32);
+            let (cached, rehashed) = chunk_stratum_cached(0, &window, 32, &prev).unwrap();
+            let scratch = chunk_stratum(0, &window, 32).unwrap();
+            let cols = ColumnarBatch::from_records(&window);
+            let (cached_cols, rehashed_cols) =
+                chunk_stratum_cached_columns(0, &cols, 32, &prev).unwrap();
             assert_eq!(cached.len(), scratch.len());
-            for (c, s) in cached.iter().zip(&scratch) {
+            assert_eq!(cached_cols.len(), scratch.len());
+            assert_eq!(rehashed, rehashed_cols);
+            for ((c, s), cc) in cached.iter().zip(&scratch).zip(&cached_cols) {
                 assert_eq!(c.hash, s.hash);
-                assert_eq!(c.items[..], s.items[..]);
+                assert_eq!(c.items(), s.items());
+                assert_eq!(cc.hash, s.hash);
             }
             assert!(
                 rehashed < window.len() / 2,
@@ -345,11 +491,11 @@ mod tests {
         // Same ids, one mutated value: the affected run must re-hash (the
         // equality check, not just the first-id probe, gates reuse).
         let items = recs(0..200);
-        let prev = chunk_stratum(0, &items, 32);
+        let prev = chunk_stratum(0, &items, 32).unwrap();
         let mut mutated = items.clone();
         mutated[100].value += 1.0;
-        let (cached, rehashed) = chunk_stratum_cached(0, &mutated, 32, &prev);
-        let scratch = chunk_stratum(0, &mutated, 32);
+        let (cached, rehashed) = chunk_stratum_cached(0, &mutated, 32, &prev).unwrap();
+        let scratch = chunk_stratum(0, &mutated, 32).unwrap();
         assert!(rehashed > 0);
         for (c, s) in cached.iter().zip(&scratch) {
             assert_eq!(c.hash, s.hash);
@@ -365,30 +511,37 @@ mod tests {
         // path's.
         let mut items = recs(0..64);
         items[10].value = 0.0;
-        let prev = chunk_stratum(0, &items, 16);
+        let prev = chunk_stratum(0, &items, 16).unwrap();
         items[10].value = -0.0;
-        let (cached, rehashed) = chunk_stratum_cached(0, &items, 16, &prev);
-        let scratch = chunk_stratum(0, &items, 16);
+        let (cached, rehashed) = chunk_stratum_cached(0, &items, 16, &prev).unwrap();
+        let scratch = chunk_stratum(0, &items, 16).unwrap();
         assert!(rehashed > 0, "signed-zero flip must re-hash its run");
         for (c, s) in cached.iter().zip(&scratch) {
             assert_eq!(c.hash, s.hash);
         }
-        // Bit-identical input still reuses everything.
-        let (again, rehashed) = chunk_stratum_cached(0, &items, 16, &cached);
+        // Bit-identical input still reuses everything — on both cached
+        // paths.
+        let (again, rehashed) = chunk_stratum_cached(0, &items, 16, &cached).unwrap();
         assert_eq!(rehashed, 0);
         for (a, c) in again.iter().zip(&cached) {
-            assert!(Arc::ptr_eq(&a.items, &c.items));
+            assert!(a.columns().ptr_eq(c.columns()));
+        }
+        let cols = ColumnarBatch::from_records(&items);
+        let (again_cols, rehashed) = chunk_stratum_cached_columns(0, &cols, 16, &cached).unwrap();
+        assert_eq!(rehashed, 0);
+        for (a, c) in again_cols.iter().zip(&cached) {
+            assert!(a.columns().ptr_eq(c.columns()));
         }
     }
 
     #[test]
     fn cached_ignores_stale_other_stratum_cache() {
         let items = recs(0..300);
-        let prev = chunk_stratum(1, &items, 32);
+        let prev = chunk_stratum(1, &items, 32).unwrap();
         // A stratum-0 chunking must not adopt stratum-1 cached chunks.
-        let (cached, rehashed) = chunk_stratum_cached(0, &items, 32, &prev);
+        let (cached, rehashed) = chunk_stratum_cached(0, &items, 32, &prev).unwrap();
         assert_eq!(rehashed, 300);
-        let scratch = chunk_stratum(0, &items, 32);
+        let scratch = chunk_stratum(0, &items, 32).unwrap();
         for (c, s) in cached.iter().zip(&scratch) {
             assert_eq!(c.hash, s.hash);
             assert_eq!(c.stratum, 0);

@@ -42,7 +42,7 @@ impl ChunkBackend for NativeBackend {
     fn compute(&self, chunks: &[&Chunk]) -> Result<Vec<Moments>> {
         Ok(chunks
             .iter()
-            .map(|c| Moments::from_records_mapped(&c.items, self.rounds))
+            .map(|c| Moments::fold_values_mapped(c.values(), self.rounds))
             .collect())
     }
 
@@ -97,7 +97,7 @@ impl WorkerPool {
                         Ok(Job::Run { base, chunks }) => {
                             let ms: Vec<Moments> = chunks
                                 .iter()
-                                .map(|c| Moments::from_records_mapped(&c.items, rounds))
+                                .map(|c| Moments::fold_values_mapped(c.values(), rounds))
                                 .collect();
                             if tx_results.send((base, ms)).is_err() {
                                 break;
@@ -203,7 +203,7 @@ mod tests {
     fn chunks(n: u64) -> Vec<Chunk> {
         let items: Vec<Record> =
             (0..n).map(|i| Record::new(i, 0, 0, 0, (i % 13) as f64)).collect();
-        chunk_stratum(0, &items, 32)
+        chunk_stratum(0, &items, 32).unwrap()
     }
 
     #[test]
@@ -212,7 +212,7 @@ mod tests {
         let refs: Vec<&Chunk> = cs.iter().collect();
         let out = NativeBackend::default().compute(&refs).unwrap();
         for (c, m) in cs.iter().zip(&out) {
-            assert_eq!(*m, Moments::from_records(&c.items));
+            assert_eq!(*m, Moments::from_records(c.items()));
         }
     }
 

@@ -8,6 +8,81 @@
 use crate::util::ksum::NeumaierSum;
 use crate::workload::record::Record;
 
+/// Independent accumulator lanes in the columnar fold. Element `i` of a
+/// run always lands in lane `i % LANES`, whether the fold walks a dense
+/// `&[f64]` column, a `&[Record]` row slice, or the retained scalar
+/// reference — that fixed assignment (plus the fixed lane-combine order
+/// in [`LaneFold::finish`]) is what makes every fold path bit-equal.
+pub const LANES: usize = 8;
+
+/// One Neumaier step (twin of [`NeumaierSum::add`], kept branch-shaped
+/// so LLVM can if-convert it inside the lane loop).
+#[inline(always)]
+fn neumaier_step(sum: &mut f64, comp: &mut f64, v: f64) {
+    let t = *sum + v;
+    if sum.abs() >= v.abs() {
+        *comp += (*sum - t) + v;
+    } else {
+        *comp += (v - t) + *sum;
+    }
+    *sum = t;
+}
+
+/// Lane-wise compensated moment accumulator: `LANES` independent
+/// Neumaier chains for Σv and Σv² plus per-lane min/max, merged in a
+/// fixed order at the end. Independent lanes break the serial
+/// dependency of a single compensated chain, so the inner loop
+/// auto-vectorizes (and pipelines) over dense value columns.
+#[derive(Debug)]
+struct LaneFold {
+    sum: [f64; LANES],
+    sum_c: [f64; LANES],
+    sumsq: [f64; LANES],
+    sumsq_c: [f64; LANES],
+    min: [f64; LANES],
+    max: [f64; LANES],
+}
+
+impl LaneFold {
+    #[inline]
+    fn new() -> Self {
+        LaneFold {
+            sum: [0.0; LANES],
+            sum_c: [0.0; LANES],
+            sumsq: [0.0; LANES],
+            sumsq_c: [0.0; LANES],
+            min: [f64::INFINITY; LANES],
+            max: [f64::NEG_INFINITY; LANES],
+        }
+    }
+
+    /// Fold one value into lane `j`.
+    #[inline(always)]
+    fn step(&mut self, j: usize, v: f64) {
+        neumaier_step(&mut self.sum[j], &mut self.sum_c[j], v);
+        neumaier_step(&mut self.sumsq[j], &mut self.sumsq_c[j], v * v);
+        self.min[j] = self.min[j].min(v);
+        self.max[j] = self.max[j].max(v);
+    }
+
+    /// Merge the lanes in index order (0, 1, …, LANES−1): each lane's
+    /// compensated total enters one final Neumaier chain. The order is
+    /// part of the pinned arithmetic — every fold path shares it.
+    fn finish(&self, count: usize) -> Moments {
+        let mut sum = NeumaierSum::new();
+        let mut sumsq = NeumaierSum::new();
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for j in 0..LANES {
+            sum.add(self.sum[j] + self.sum_c[j]);
+            sumsq.add(self.sumsq[j] + self.sumsq_c[j]);
+            min = min.min(self.min[j]);
+            max = max.max(self.max[j]);
+        }
+        Moments { count: count as f64, sum: sum.total(), sumsq: sumsq.total(), min, max }
+    }
+}
+
 /// Count, sum, sum of squares, min, max of a set of values.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Moments {
@@ -34,19 +109,97 @@ impl Moments {
     pub const EMPTY: Moments =
         Moments { count: 0.0, sum: 0.0, sumsq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY };
 
+    /// Exact (compensated) moments of a dense value column — the
+    /// columnar hot-path fold. `LANES`-wide chunked traversal; element
+    /// `i` lands in lane `i % LANES` (see [`LANES`] for why).
+    pub fn fold_values(values: &[f64]) -> Self {
+        let mut acc = LaneFold::new();
+        let mut chunks = values.chunks_exact(LANES);
+        for c in &mut chunks {
+            for j in 0..LANES {
+                acc.step(j, c[j]);
+            }
+        }
+        for (j, &v) in chunks.remainder().iter().enumerate() {
+            acc.step(j, v);
+        }
+        acc.finish(values.len())
+    }
+
+    /// Columnar fold with `rounds` map iterations applied per value
+    /// (see [`crate::job::map_fn::apply_map`]).
+    pub fn fold_values_mapped(values: &[f64], rounds: u32) -> Self {
+        let mut acc = LaneFold::new();
+        let mut chunks = values.chunks_exact(LANES);
+        for c in &mut chunks {
+            for j in 0..LANES {
+                acc.step(j, crate::job::map_fn::apply_map(c[j], rounds));
+            }
+        }
+        for (j, &v) in chunks.remainder().iter().enumerate() {
+            acc.step(j, crate::job::map_fn::apply_map(v, rounds));
+        }
+        acc.finish(values.len())
+    }
+
+    /// Retained scalar reference for the columnar fold: one plain
+    /// element loop, no chunking, accumulators written out longhand.
+    /// Performs the identical arithmetic DAG (same lane assignment,
+    /// same Neumaier steps, same lane-combine order), so the kernel
+    /// equivalence gate (`tests/columnar_kernels.rs`) pins
+    /// `fold_values` bit-equal to it — a remainder- or reordering bug
+    /// in the chunked kernel breaks the gate.
+    pub fn fold_values_reference(values: &[f64]) -> Self {
+        let mut sum = [0.0f64; LANES];
+        let mut sum_c = [0.0f64; LANES];
+        let mut sumsq = [0.0f64; LANES];
+        let mut sumsq_c = [0.0f64; LANES];
+        let mut min = [f64::INFINITY; LANES];
+        let mut max = [f64::NEG_INFINITY; LANES];
+        for (i, &v) in values.iter().enumerate() {
+            let j = i % LANES;
+            // Neumaier step for Σv, spelled out.
+            let t = sum[j] + v;
+            if sum[j].abs() >= v.abs() {
+                sum_c[j] += (sum[j] - t) + v;
+            } else {
+                sum_c[j] += (v - t) + sum[j];
+            }
+            sum[j] = t;
+            // Neumaier step for Σv².
+            let sq = v * v;
+            let t = sumsq[j] + sq;
+            if sumsq[j].abs() >= sq.abs() {
+                sumsq_c[j] += (sumsq[j] - t) + sq;
+            } else {
+                sumsq_c[j] += (sq - t) + sumsq[j];
+            }
+            sumsq[j] = t;
+            min[j] = min[j].min(v);
+            max[j] = max[j].max(v);
+        }
+        let mut total = NeumaierSum::new();
+        let mut total_sq = NeumaierSum::new();
+        let mut mn = f64::INFINITY;
+        let mut mx = f64::NEG_INFINITY;
+        for j in 0..LANES {
+            total.add(sum[j] + sum_c[j]);
+            total_sq.add(sumsq[j] + sumsq_c[j]);
+            mn = mn.min(min[j]);
+            mx = mx.max(max[j]);
+        }
+        Moments {
+            count: values.len() as f64,
+            sum: total.total(),
+            sumsq: total_sq.total(),
+            min: mn,
+            max: mx,
+        }
+    }
+
     /// Exact (compensated) moments of a value slice.
     pub fn from_values(values: &[f64]) -> Self {
-        let mut sum = NeumaierSum::new();
-        let mut sumsq = NeumaierSum::new();
-        let mut min = f64::INFINITY;
-        let mut max = f64::NEG_INFINITY;
-        for &v in values {
-            sum.add(v);
-            sumsq.add(v * v);
-            min = min.min(v);
-            max = max.max(v);
-        }
-        Moments { count: values.len() as f64, sum: sum.total(), sumsq: sumsq.total(), min, max }
+        Self::fold_values(values)
     }
 
     /// Moments of a record slice's values.
@@ -56,19 +209,18 @@ impl Moments {
 
     /// Moments of a record slice after `rounds` map iterations per item
     /// (see [`crate::job::map_fn::apply_map`]).
+    ///
+    /// Row-path fold: walks the 40-byte record stride but performs the
+    /// same lane-wise arithmetic as [`Moments::fold_values_mapped`]
+    /// (element `i` → lane `i % LANES`), so row and columnar folds of
+    /// the same run are bit-equal — the "columnar ≡ row bytes"
+    /// invariant.
     pub fn from_records_mapped(records: &[Record], rounds: u32) -> Self {
-        let mut sum = NeumaierSum::new();
-        let mut sumsq = NeumaierSum::new();
-        let mut min = f64::INFINITY;
-        let mut max = f64::NEG_INFINITY;
-        for r in records {
-            let v = crate::job::map_fn::apply_map(r.value, rounds);
-            sum.add(v);
-            sumsq.add(v * v);
-            min = min.min(v);
-            max = max.max(v);
+        let mut acc = LaneFold::new();
+        for (i, r) in records.iter().enumerate() {
+            acc.step(i % LANES, crate::job::map_fn::apply_map(r.value, rounds));
         }
-        Moments { count: records.len() as f64, sum: sum.total(), sumsq: sumsq.total(), min, max }
+        acc.finish(records.len())
     }
 
     /// Associative, commutative combine — the reduce of Figure 3.1.

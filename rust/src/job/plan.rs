@@ -7,19 +7,24 @@
 //! per stratum, and an output node — the concrete instantiation of
 //! Figure 3.1 for this pipeline.
 //!
-//! Planning borrows the sample runs (`&[Record]`) — it never clones the
+//! Planning borrows the sample runs' columnar views
+//! ([`crate::sampling::SampleRun::columns`]) — it never clones the
 //! sample — and [`JobPlan::plan_stratum_cached`] additionally reuses the
 //! previous window's chunks for unchanged runs, so per-window planning
-//! work is O(changed items), not O(sample).
+//! work is O(changed items), not O(sample). Chunking errors (a zero
+//! chunk target) surface as typed [`crate::error::Error::Config`]
+//! results instead of panics.
 
 use std::collections::BTreeMap;
 
-use crate::job::chunk::{chunk_stratum, chunk_stratum_cached, Chunk};
+use crate::columnar::ColumnarBatch;
+use crate::error::Result;
+use crate::job::chunk::{chunk_stratum_cached_columns, chunk_stratum_columns, Chunk};
 use crate::job::moments::Moments;
 use crate::sac::ddg::{Ddg, NodeKind};
 use crate::sac::memo::{MemoShard, MemoStore};
 use crate::sampling::biased::BiasOutcome;
-use crate::workload::record::{Record, StratumId};
+use crate::workload::record::StratumId;
 
 /// A chunk with its memo classification.
 #[derive(Debug, Clone)]
@@ -50,12 +55,12 @@ impl JobPlan {
     /// Build the plan from the biased sample and the memo store.
     ///
     /// Counts one memo hit/miss per chunk in the store's statistics.
-    pub fn build(biased: &BiasOutcome, memo: &mut MemoStore, chunk_target: usize) -> JobPlan {
+    pub fn build(biased: &BiasOutcome, memo: &mut MemoStore, chunk_target: usize) -> Result<JobPlan> {
         let mut per_stratum = BTreeMap::new();
         let mut ddg = Ddg::new();
         let output = ddg.add_node(NodeKind::Output);
         for (&stratum, run) in &biased.per_stratum {
-            let chunks = chunk_stratum(stratum, run.records(), chunk_target);
+            let chunks = chunk_stratum_columns(stratum, run.columns(), chunk_target)?;
             let reduce = ddg.add_node(NodeKind::Reduce { group: stratum as u64 });
             ddg.add_edge(reduce, output);
             let planned: Vec<PlannedChunk> = chunks
@@ -69,7 +74,7 @@ impl JobPlan {
                 .collect();
             per_stratum.insert(stratum, planned);
         }
-        JobPlan { per_stratum, ddg }
+        Ok(JobPlan { per_stratum, ddg })
     }
 
     /// Chunk + classify a single stratum against its memo shard — the
@@ -81,11 +86,11 @@ impl JobPlan {
     /// classified fresh and no hit/miss counters are touched.
     pub fn plan_stratum(
         stratum: StratumId,
-        items: &[Record],
+        cols: &ColumnarBatch,
         memo: Option<&MemoShard>,
         chunk_target: usize,
-    ) -> Vec<PlannedChunk> {
-        Self::plan_stratum_cached(stratum, items, memo, chunk_target, &[]).0
+    ) -> Result<Vec<PlannedChunk>> {
+        Ok(Self::plan_stratum_cached(stratum, cols, memo, chunk_target, &[])?.0)
     }
 
     /// [`JobPlan::plan_stratum`] with chunk reuse from `prev_chunks`, the
@@ -95,13 +100,13 @@ impl JobPlan {
     /// Returns the planned chunks plus the number of re-hashed items.
     pub fn plan_stratum_cached(
         stratum: StratumId,
-        items: &[Record],
+        cols: &ColumnarBatch,
         memo: Option<&MemoShard>,
         chunk_target: usize,
         prev_chunks: &[Chunk],
-    ) -> (Vec<PlannedChunk>, usize) {
+    ) -> Result<(Vec<PlannedChunk>, usize)> {
         let (chunks, rehashed_items) =
-            chunk_stratum_cached(stratum, items, chunk_target, prev_chunks);
+            chunk_stratum_cached_columns(stratum, cols, chunk_target, prev_chunks)?;
         let planned = chunks
             .into_iter()
             .map(|chunk| {
@@ -109,7 +114,7 @@ impl JobPlan {
                 PlannedChunk { chunk, memoized }
             })
             .collect();
-        (planned, rehashed_items)
+        Ok((planned, rehashed_items))
     }
 
     /// All fresh (to-execute) chunks in deterministic order.
@@ -166,7 +171,7 @@ mod tests {
     fn cold_plan_is_all_fresh() {
         let mut memo = MemoStore::new();
         let b = biased(&[(0, 0..500), (1, 500..900)]);
-        let plan = JobPlan::build(&b, &mut memo, 64);
+        let plan = JobPlan::build(&b, &mut memo, 64).unwrap();
         assert_eq!(plan.hit_count(), 0);
         assert_eq!(plan.fresh_chunks().len(), plan.chunk_count());
         assert!(plan.chunk_count() > 2);
@@ -176,13 +181,13 @@ mod tests {
     fn warm_plan_reuses_identical_chunks() {
         let mut memo = MemoStore::new();
         let b = biased(&[(0, 0..500)]);
-        let plan = JobPlan::build(&b, &mut memo, 64);
+        let plan = JobPlan::build(&b, &mut memo, 64).unwrap();
         // Execute + memoize everything.
         for p in plan.per_stratum[&0].iter() {
-            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+            memo.put_chunk(p.chunk.hash, Moments::from_records(p.chunk.items()), 0, 0);
         }
         // Same sample again → all hits.
-        let plan2 = JobPlan::build(&b, &mut memo, 64);
+        let plan2 = JobPlan::build(&b, &mut memo, 64).unwrap();
         assert_eq!(plan2.hit_count(), plan2.chunk_count());
         assert_eq!(plan2.reuse_fraction(), 1.0);
     }
@@ -191,13 +196,13 @@ mod tests {
     fn partial_overlap_partial_reuse() {
         let mut memo = MemoStore::new();
         let w1 = biased(&[(0, 0..1000)]);
-        let plan1 = JobPlan::build(&w1, &mut memo, 32);
+        let plan1 = JobPlan::build(&w1, &mut memo, 32).unwrap();
         for p in plan1.per_stratum[&0].iter() {
-            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+            memo.put_chunk(p.chunk.hash, Moments::from_records(p.chunk.items()), 0, 0);
         }
         // Slide: drop first 100 ids, add 100 new.
         let w2 = biased(&[(0, 100..1100)]);
-        let plan2 = JobPlan::build(&w2, &mut memo, 32);
+        let plan2 = JobPlan::build(&w2, &mut memo, 32).unwrap();
         assert!(plan2.hit_count() > 0, "no reuse after slide");
         assert!(plan2.hit_count() < plan2.chunk_count(), "new items must be fresh");
         assert!(plan2.reuse_fraction() > 0.6, "reuse {}", plan2.reuse_fraction());
@@ -207,14 +212,14 @@ mod tests {
     fn plan_stratum_matches_legacy_build() {
         let mut memo = MemoStore::new();
         let b = biased(&[(0, 0..600)]);
-        let warm = JobPlan::build(&b, &mut memo, 32);
+        let warm = JobPlan::build(&b, &mut memo, 32).unwrap();
         // Memoize every second chunk.
         for p in warm.per_stratum[&0].iter().step_by(2) {
-            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+            memo.put_chunk(p.chunk.hash, Moments::from_records(p.chunk.items()), 0, 0);
         }
-        let via_build = JobPlan::build(&b, &mut memo, 32);
+        let via_build = JobPlan::build(&b, &mut memo, 32).unwrap();
         let via_shard =
-            JobPlan::plan_stratum(0, b.per_stratum[&0].records(), Some(memo.shard(0)), 32);
+            JobPlan::plan_stratum(0, b.per_stratum[&0].columns(), Some(memo.shard(0)), 32).unwrap();
         assert_eq!(via_build.per_stratum[&0].len(), via_shard.len());
         for (a, c) in via_build.per_stratum[&0].iter().zip(&via_shard) {
             assert_eq!(a.chunk.hash, c.chunk.hash);
@@ -225,7 +230,7 @@ mod tests {
         // Without a shard (non-memoizing modes): all fresh, counters
         // untouched.
         let before = memo.stats();
-        let cold = JobPlan::plan_stratum(0, b.per_stratum[&0].records(), None, 32);
+        let cold = JobPlan::plan_stratum(0, b.per_stratum[&0].columns(), None, 32).unwrap();
         assert!(cold.iter().all(|p| !p.is_hit()));
         assert_eq!(memo.stats(), before);
     }
@@ -235,19 +240,20 @@ mod tests {
         let mut memo = MemoStore::new();
         let b = biased(&[(0, 0..600)]);
         let (cold, rehashed) =
-            JobPlan::plan_stratum_cached(0, b.per_stratum[&0].records(), None, 32, &[]);
+            JobPlan::plan_stratum_cached(0, b.per_stratum[&0].columns(), None, 32, &[]).unwrap();
         assert_eq!(rehashed, 600, "no cache → everything hashed");
         let prev: Vec<Chunk> = cold.iter().map(|p| p.chunk.clone()).collect();
         for p in &cold {
-            memo.put_chunk(p.chunk.hash, Moments::from_records(&p.chunk.items), 0, 0);
+            memo.put_chunk(p.chunk.hash, Moments::from_records(p.chunk.items()), 0, 0);
         }
         let (warm, rehashed) = JobPlan::plan_stratum_cached(
             0,
-            b.per_stratum[&0].records(),
+            b.per_stratum[&0].columns(),
             Some(memo.shard(0)),
             32,
             &prev,
-        );
+        )
+        .unwrap();
         assert_eq!(rehashed, 0, "identical sample must reuse every chunk");
         assert_eq!(warm.len(), cold.len());
         for (w, c) in warm.iter().zip(&cold) {
@@ -260,7 +266,7 @@ mod tests {
     fn ddg_shape_matches_plan() {
         let mut memo = MemoStore::new();
         let b = biased(&[(0, 0..200), (1, 200..400)]);
-        let plan = JobPlan::build(&b, &mut memo, 64);
+        let plan = JobPlan::build(&b, &mut memo, 64).unwrap();
         // nodes = 1 output + strata + chunks
         assert_eq!(plan.ddg.len(), 1 + 2 + plan.chunk_count());
     }
@@ -268,7 +274,7 @@ mod tests {
     #[test]
     fn empty_sample_empty_plan() {
         let mut memo = MemoStore::new();
-        let plan = JobPlan::build(&BiasOutcome::default(), &mut memo, 64);
+        let plan = JobPlan::build(&BiasOutcome::default(), &mut memo, 64).unwrap();
         assert_eq!(plan.chunk_count(), 0);
         assert_eq!(plan.reuse_fraction(), 0.0);
     }

@@ -30,6 +30,7 @@ pub mod budget;
 pub mod checkpoint;
 pub mod classify;
 pub mod cli;
+pub mod columnar;
 pub mod config;
 pub mod coordinator;
 pub mod error;

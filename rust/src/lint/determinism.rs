@@ -30,10 +30,21 @@ use super::{Diagnostic, SourceFile};
 
 /// Modules whose outputs must be a pure function of (input, seed): the
 /// window/sampler/memo substrate, the job layer, the checkpoint wire,
-/// the statistics + budget solve paths, and the partition merge tier
-/// (whose merged reports are pinned byte-identical to a solo run).
-pub const CONE: [&str; 8] =
-    ["window/", "sampling/", "sac/", "job/", "checkpoint/", "stats/", "budget/", "partition/"];
+/// the statistics + budget solve paths, the partition merge tier
+/// (whose merged reports are pinned byte-identical to a solo run), and
+/// the columnar batch layer (whose column views are pinned bit-equal
+/// to the row records they transpose).
+pub const CONE: [&str; 9] = [
+    "window/",
+    "sampling/",
+    "sac/",
+    "job/",
+    "checkpoint/",
+    "stats/",
+    "budget/",
+    "partition/",
+    "columnar/",
+];
 
 /// Observability layers allowed to read the clock: they measure,
 /// report, and benchmark, but nothing they produce flows back into

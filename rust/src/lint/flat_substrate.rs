@@ -25,7 +25,8 @@ use super::{Diagnostic, SourceFile};
 
 /// Modules that make up the shared substrate: one instance serves every
 /// registered query, so none of them may reference the registry.
-pub const SUBSTRATE: [&str; 5] = ["window/", "sampling/", "sac/", "job/", "kafka/"];
+pub const SUBSTRATE: [&str; 6] =
+    ["window/", "sampling/", "sac/", "job/", "kafka/", "columnar/"];
 
 /// The query-registry vocabulary: types and methods owned by
 /// `coordinator/query.rs` / `coordinator/report.rs`.

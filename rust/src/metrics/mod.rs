@@ -142,15 +142,19 @@ impl Registry {
     }
 }
 
-/// Cumulative plan / compute / finalize wall-clock breakdown of the
-/// coordinator's sharded window pipeline — one observation per window.
-/// Benches read it to attribute end-to-end speedups to the phase that
-/// earned them.
+/// Cumulative wall-clock breakdown of the coordinator's sharded window
+/// pipeline — one observation per window. Besides the three coarse
+/// phases (plan / compute / finalize) it tracks the two columnar kernel
+/// passes that run inside them: sampler maintenance (batched delta
+/// ranks) and the sketch feed. Benches read it to attribute end-to-end
+/// speedups to the phase that earned them.
 #[derive(Debug, Default)]
 pub struct PhaseProfile {
     plan: Histogram,
     compute: Histogram,
     finalize: Histogram,
+    sampler: Histogram,
+    sketch: Histogram,
 }
 
 impl PhaseProfile {
@@ -159,11 +163,23 @@ impl PhaseProfile {
         Self::default()
     }
 
-    /// Record one window's phase timings (milliseconds).
-    pub fn observe(&self, plan_ms: f64, compute_ms: f64, finalize_ms: f64) {
+    /// Record one window's phase timings (milliseconds). `sampler_ms`
+    /// and `sketch_ms` are kernel sub-phases, not additive with the
+    /// coarse three (the sampler runs during prepare, the sketch feed
+    /// during finalize).
+    pub fn observe(
+        &self,
+        plan_ms: f64,
+        compute_ms: f64,
+        finalize_ms: f64,
+        sampler_ms: f64,
+        sketch_ms: f64,
+    ) {
         self.plan.observe(plan_ms);
         self.compute.observe(compute_ms);
         self.finalize.observe(finalize_ms);
+        self.sampler.observe(sampler_ms);
+        self.sketch.observe(sketch_ms);
     }
 
     /// Windows observed.
@@ -186,14 +202,27 @@ impl PhaseProfile {
         self.finalize.mean()
     }
 
+    /// Mean sampler-maintenance kernel milliseconds per window.
+    pub fn sampler_mean_ms(&self) -> f64 {
+        self.sampler.mean()
+    }
+
+    /// Mean sketch feed-pass milliseconds per window.
+    pub fn sketch_mean_ms(&self) -> f64 {
+        self.sketch.mean()
+    }
+
     /// One-line summary, e.g. for bench output.
     pub fn summary(&self) -> String {
         format!(
-            "phases over {} windows: plan {:.3} ms, compute {:.3} ms, finalize {:.3} ms (means)",
+            "phases over {} windows: plan {:.3} ms, compute {:.3} ms, finalize {:.3} ms \
+             (sampler {:.3} ms, sketch {:.3} ms) (means)",
             self.windows(),
             self.plan_mean_ms(),
             self.compute_mean_ms(),
-            self.finalize_mean_ms()
+            self.finalize_mean_ms(),
+            self.sampler_mean_ms(),
+            self.sketch_mean_ms()
         )
     }
 }
@@ -460,13 +489,16 @@ mod tests {
     fn phase_profile_accumulates() {
         let p = PhaseProfile::new();
         assert_eq!(p.windows(), 0);
-        p.observe(1.0, 4.0, 0.5);
-        p.observe(3.0, 2.0, 1.5);
+        p.observe(1.0, 4.0, 0.5, 0.2, 0.1);
+        p.observe(3.0, 2.0, 1.5, 0.4, 0.3);
         assert_eq!(p.windows(), 2);
         assert!((p.plan_mean_ms() - 2.0).abs() < 1e-12);
         assert!((p.compute_mean_ms() - 3.0).abs() < 1e-12);
         assert!((p.finalize_mean_ms() - 1.0).abs() < 1e-12);
+        assert!((p.sampler_mean_ms() - 0.3).abs() < 1e-12);
+        assert!((p.sketch_mean_ms() - 0.2).abs() < 1e-12);
         assert!(p.summary().contains("2 windows"));
+        assert!(p.summary().contains("sampler"));
     }
 
     #[test]

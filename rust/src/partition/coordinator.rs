@@ -86,7 +86,7 @@ impl PartitionCoordinator {
         horizon: u64,
         alloc: Option<&BTreeMap<StratumId, usize>>,
         want_sketches: bool,
-    ) -> (PartitionState, SlideTiming) {
+    ) -> Result<(PartitionState, SlideTiming)> {
         self.inner.slide_finish(prep, horizon, alloc, want_sketches)
     }
 

@@ -522,7 +522,7 @@ impl MergeTier {
         let mut merged = PartitionState::empty();
         let mut merge_items: u64 = 0;
         for (p, prep) in self.partitions.iter_mut().zip(preps) {
-            let (state, _timing) = p.finish(prep, horizon, alloc.as_ref(), want_sketches);
+            let (state, _timing) = p.finish(prep, horizon, alloc.as_ref(), want_sketches)?;
             merge_items += 1
                 + state.moments.len() as u64
                 + state.sketches.len() as u64

@@ -171,8 +171,9 @@ impl PjrtRuntime {
             let mut values = vec![0f32; rows_cap * row_w];
             let mut mask = vec![0f32; rows_cap * row_w];
             for (row, &(ci, start, len)) in batch.iter().enumerate() {
-                for (j, r) in chunks[ci].items[start..start + len].iter().enumerate() {
-                    values[row * row_w + j] = r.value as f32;
+                let vals = &chunks[ci].values()[start..start + len];
+                for (j, &v) in vals.iter().enumerate() {
+                    values[row * row_w + j] = v as f32;
                     mask[row * row_w + j] = 1.0;
                 }
             }
@@ -234,7 +235,7 @@ mod tests {
     fn chunks(n: u64, target: usize) -> Vec<Chunk> {
         let items: Vec<Record> =
             (0..n).map(|i| Record::new(i, 0, 0, 0, (i as f64 * 0.37).sin() * 10.0)).collect();
-        chunk_stratum(0, &items, target)
+        chunk_stratum(0, &items, target).unwrap()
     }
 
     #[test]

@@ -10,11 +10,15 @@
 //! Memoized inputs and biased outputs are [`SampleRun`]s: the memoized
 //! run arrives as a zero-copy handle from the memo store, and the id set
 //! built here for dedup ships out with the biased run, so downstream
-//! planning diffs never rebuild it.
+//! planning diffs never rebuild it. The biased run's columnar view is
+//! assembled in the same pass ([`crate::columnar::ColumnarBuilder`]), so
+//! the chunking kernels downstream start from dense columns without a
+//! second transpose.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::columnar::ColumnarBuilder;
 use crate::util::hash::FastSet;
 
 use crate::sampling::stratified::StratifiedSample;
@@ -90,12 +94,14 @@ pub fn bias_sample(
         out.memo_available.insert(stratum, x);
 
         let mut chosen: Vec<Record> = Vec::with_capacity(y);
+        let mut cols = ColumnarBuilder::with_capacity(y);
         let mut seen: FastSet<u64> = FastSet::with_capacity_and_hasher(y, Default::default());
 
         // Give priority to memoized items (they carry reusable results).
         for m in memoized.iter().take(y) {
             if seen.insert(m.id) {
                 chosen.push(*m);
+                cols.push(m);
             }
         }
         let reused = chosen.len();
@@ -108,6 +114,7 @@ pub fn bias_sample(
                 }
                 if seen.insert(f.id) {
                     chosen.push(*f);
+                    cols.push(f);
                 }
             }
         }
@@ -115,9 +122,12 @@ pub fn bias_sample(
         debug_assert_eq!(chosen.len(), y, "bias must preserve per-stratum size");
         out.memo_reused.insert(stratum, reused);
         // `seen` holds exactly the chosen ids (the fill loop breaks before
-        // inserting an id it will not push), so it ships as the run's set.
-        out.per_stratum
-            .insert(stratum, SampleRun::from_parts(chosen.into(), Arc::new(seen)));
+        // inserting an id it will not push), so it ships as the run's set;
+        // the columnar view built alongside ships pre-transposed.
+        out.per_stratum.insert(
+            stratum,
+            SampleRun::from_parts_with_columns(chosen.into(), Arc::new(seen), cols.finish()),
+        );
     }
     out
 }
@@ -219,6 +229,18 @@ mod tests {
         let out = bias_sample(&StratifiedSample::default(), &BTreeMap::new());
         assert_eq!(out.total_len(), 0);
         assert_eq!(out.reuse_fraction(), 0.0);
+    }
+
+    #[test]
+    fn biased_run_ships_prebuilt_columns() {
+        // The columnar view assembled during biasing must mirror the row
+        // run exactly (order included) — chunking consumes it directly.
+        let sample = sample_of(vec![(0, vec![1, 2, 3, 4]), (1, vec![5, 6])]);
+        let memo = memo_of(vec![(0, vec![rec(2, 0), rec(10, 0)])]);
+        let out = bias_sample(&sample, &memo);
+        for run in out.per_stratum.values() {
+            assert!(run.columns().bit_eq_records(run.records()));
+        }
     }
 
     #[test]

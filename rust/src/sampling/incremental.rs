@@ -42,15 +42,29 @@
 
 use std::collections::BTreeMap;
 
+use crate::columnar::ColumnarBatch;
 use crate::sampling::stratified::{allocate_proportional, StratifiedSample};
 use crate::util::hash::mix64;
 use crate::window::WindowDelta;
 use crate::workload::record::{Record, StratumId};
 
-/// Deterministic rank of an item under a sampler seed.
+/// Deterministic rank of an item under a sampler seed — the retained
+/// per-item reference for [`rank_batch`] (the kernel equivalence gate
+/// in `tests/columnar_kernels.rs` pins them bit-equal).
 #[inline]
-fn rank(seed: u64, id: u64) -> u64 {
+pub fn rank(seed: u64, id: u64) -> u64 {
     mix64(seed ^ mix64(id))
+}
+
+/// Batched rank kernel: score a dense id column in one pass. `out` is
+/// cleared and refilled (callers reuse the scratch across deltas). Pure
+/// integer mixing with no cross-element dependency, so the loop
+/// auto-vectorizes — this is how `apply_delta` scores a whole delta
+/// instead of ranking record by record.
+#[inline]
+pub fn rank_batch(seed: u64, ids: &[u64], out: &mut Vec<u64>) {
+    out.clear();
+    out.extend(ids.iter().map(|&id| rank(seed, id)));
 }
 
 /// One stratum's current-window items, ordered by (rank, id).
@@ -119,8 +133,8 @@ impl IncrementalSampler {
         self.strata.len()
     }
 
-    fn insert(&mut self, r: Record) {
-        let key = (rank(self.seed, r.id), r.id);
+    fn insert_ranked(&mut self, rk: u64, r: Record) {
+        let key = (rk, r.id);
         let slot = self.strata.entry(r.stratum).or_default();
         let replaced = slot.by_rank.insert(key, r);
         // Ids are globally unique within a window (the `Record::id`
@@ -132,17 +146,17 @@ impl IncrementalSampler {
         }
     }
 
-    fn remove(&mut self, r: &Record) {
-        let key = (rank(self.seed, r.id), r.id);
+    fn remove_ranked(&mut self, rk: u64, stratum: StratumId, id: u64) {
+        let key = (rk, id);
         let mut emptied = false;
-        if let Some(slot) = self.strata.get_mut(&r.stratum) {
+        if let Some(slot) = self.strata.get_mut(&stratum) {
             if slot.by_rank.remove(&key).is_some() {
                 self.total -= 1;
                 emptied = slot.by_rank.is_empty();
             }
         }
         if emptied {
-            self.strata.remove(&r.stratum);
+            self.strata.remove(&stratum);
         }
     }
 
@@ -152,11 +166,16 @@ impl IncrementalSampler {
     /// slide (inserted *and* removed in the same delta) nets out.
     /// Returns the number of items touched (the O(delta) work metric).
     pub fn apply_delta(&mut self, delta: &WindowDelta) -> usize {
-        for r in &delta.inserted {
-            self.insert(*r);
+        let mut ranks = Vec::new();
+        let ins = delta.inserted();
+        rank_batch(self.seed, ins.ids(), &mut ranks);
+        for (i, &rk) in ranks.iter().enumerate() {
+            self.insert_ranked(rk, ins.get(i));
         }
-        for r in &delta.removed {
-            self.remove(r);
+        let rem = delta.removed();
+        rank_batch(self.seed, rem.ids(), &mut ranks);
+        for (i, &rk) in ranks.iter().enumerate() {
+            self.remove_ranked(rk, rem.strata()[i], rem.ids()[i]);
         }
         delta.len()
     }
@@ -166,10 +185,27 @@ impl IncrementalSampler {
     pub fn rebuild(&mut self, items: &[Record]) -> usize {
         self.strata.clear();
         self.total = 0;
-        for r in items {
-            self.insert(*r);
+        let ids: Vec<u64> = items.iter().map(|r| r.id).collect();
+        let mut ranks = Vec::new();
+        rank_batch(self.seed, &ids, &mut ranks);
+        for (i, &rk) in ranks.iter().enumerate() {
+            self.insert_ranked(rk, items[i]);
         }
         items.len()
+    }
+
+    /// [`IncrementalSampler::rebuild`] from a columnar window view: the
+    /// rank kernel scores the dense id column directly, with no id
+    /// gather. Same resulting state, bit for bit.
+    pub fn rebuild_columns(&mut self, cols: &ColumnarBatch) -> usize {
+        self.strata.clear();
+        self.total = 0;
+        let mut ranks = Vec::new();
+        rank_batch(self.seed, cols.ids(), &mut ranks);
+        for (i, &rk) in ranks.iter().enumerate() {
+            self.insert_ranked(rk, cols.get(i));
+        }
+        cols.len()
     }
 
     /// Exact per-stratum populations of the tracked window.
@@ -351,16 +387,16 @@ mod tests {
         let mut s = IncrementalSampler::new(1);
         let r0 = Record::new(1, 0, 0, 0, 1.0);
         let r1 = Record::new(2, 7, 0, 0, 2.0);
-        let delta = WindowDelta { inserted: vec![r0, r1], removed: vec![] };
+        let delta = WindowDelta::from_rows(vec![r0, r1], vec![]);
         assert_eq!(s.apply_delta(&delta), 2);
         assert_eq!(s.strata_len(), 2);
-        let delta = WindowDelta { inserted: vec![], removed: vec![r1] };
+        let delta = WindowDelta::from_rows(vec![], vec![r1]);
         s.apply_delta(&delta);
         assert_eq!(s.strata_len(), 1);
         assert_eq!(s.len(), 1);
         // Removing an item that was never inserted (e.g. a pre-warm-up
         // resize eviction) is a tolerated no-op.
-        s.apply_delta(&WindowDelta { inserted: vec![], removed: vec![r1] });
+        s.apply_delta(&WindowDelta::from_rows(vec![], vec![r1]));
         assert_eq!(s.len(), 1);
         assert!(!s.is_empty());
     }

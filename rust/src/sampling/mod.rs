@@ -26,22 +26,28 @@ pub use reservoir::Reservoir;
 pub use stratified::{allocate_proportional, StratifiedSample, StratifiedSampler};
 
 use std::sync::Arc;
+use std::sync::OnceLock;
 
+use crate::columnar::ColumnarBatch;
 use crate::util::hash::FastSet;
 use crate::workload::record::Record;
 
 /// An immutable run of sampled records shared across pipeline stages.
 ///
-/// Cloning is O(1) (two `Arc` bumps): the biased sample, the memo store's
+/// Cloning is O(1) (`Arc` bumps): the biased sample, the memo store's
 /// per-stratum item lists, and the planner's previous-window view all
 /// hand around the *same* allocation, and the id set built once during
 /// biasing serves every later membership test — no per-window
-/// re-hashing.
+/// re-hashing. The columnar view the chunking/sketch kernels consume is
+/// transposed at most once per run ([`SampleRun::columns`]) — the bias
+/// step pre-populates it for fresh runs, and memo-reused runs carry
+/// theirs across windows.
 #[derive(Debug, Clone)]
 pub struct SampleRun {
     seq: Arc<[Record]>,
     ids: Arc<FastSet<u64>>,
     min_ts: u64,
+    cols: OnceLock<ColumnarBatch>,
 }
 
 impl Default for SampleRun {
@@ -50,6 +56,7 @@ impl Default for SampleRun {
             seq: Arc::from(Vec::new()),
             ids: Arc::new(FastSet::default()),
             min_ts: u64::MAX,
+            cols: OnceLock::new(),
         }
     }
 }
@@ -67,7 +74,12 @@ impl SampleRun {
     /// Build from a record slice (copies once, computes the id set).
     pub fn from_slice(seq: &[Record]) -> Self {
         let ids: FastSet<u64> = seq.iter().map(|r| r.id).collect();
-        SampleRun { min_ts: min_ts_of(seq), seq: Arc::from(seq), ids: Arc::new(ids) }
+        SampleRun {
+            min_ts: min_ts_of(seq),
+            seq: Arc::from(seq),
+            ids: Arc::new(ids),
+            cols: OnceLock::new(),
+        }
     }
 
     /// Assemble from pre-built parts (e.g. the bias step, which already
@@ -75,12 +87,36 @@ impl SampleRun {
     /// of `seq`.
     pub fn from_parts(seq: Arc<[Record]>, ids: Arc<FastSet<u64>>) -> Self {
         debug_assert_eq!(seq.len(), ids.len(), "id set must mirror the record run");
-        SampleRun { min_ts: min_ts_of(&seq), seq, ids }
+        SampleRun { min_ts: min_ts_of(&seq), seq, ids, cols: OnceLock::new() }
+    }
+
+    /// [`SampleRun::from_parts`] with the columnar view already built —
+    /// the bias step emits both representations in one pass, so the
+    /// chunking kernels downstream never transpose. `cols` must be the
+    /// exact columnar transpose of `seq`.
+    pub fn from_parts_with_columns(
+        seq: Arc<[Record]>,
+        ids: Arc<FastSet<u64>>,
+        cols: ColumnarBatch,
+    ) -> Self {
+        debug_assert_eq!(seq.len(), ids.len(), "id set must mirror the record run");
+        debug_assert_eq!(seq.len(), cols.len(), "columns must mirror the record run");
+        let run = SampleRun { min_ts: min_ts_of(&seq), seq, ids, cols: OnceLock::new() };
+        let _ = run.cols.set(cols);
+        run
     }
 
     /// The records, in sample (bias) order.
     pub fn records(&self) -> &[Record] {
         &self.seq
+    }
+
+    /// The run's struct-of-arrays view, in the same (bias) order —
+    /// transposed on first call, then cached for the run's lifetime
+    /// (shared by clones made afterwards). The chunk/sketch kernels
+    /// consume this.
+    pub fn columns(&self) -> &ColumnarBatch {
+        self.cols.get_or_init(|| ColumnarBatch::from_records(&self.seq))
     }
 
     /// O(1) membership test by item id.
@@ -155,6 +191,22 @@ mod tests {
         assert!(trimmed.contains(2));
         assert!(!trimmed.contains(1));
         assert_eq!(trimmed.min_ts(), 12);
+    }
+
+    #[test]
+    fn columns_view_is_cached_and_matches_rows() {
+        let run = SampleRun::from_vec(vec![rec(1, 9), rec(2, 4), rec(3, 7)]);
+        let c = run.columns();
+        assert_eq!(c.ids(), &[1, 2, 3]);
+        assert_eq!(c.timestamps(), &[9, 4, 7]);
+        assert!(std::ptr::eq(c, run.columns()), "columns must transpose once");
+        // Pre-built columns are adopted, not re-transposed.
+        let records = vec![rec(5, 3), rec(6, 8)];
+        let ids: FastSet<u64> = records.iter().map(|r| r.id).collect();
+        let cols = ColumnarBatch::from_records(&records);
+        let pre =
+            SampleRun::from_parts_with_columns(Arc::from(records), Arc::new(ids), cols.clone());
+        assert!(pre.columns().ptr_eq(&cols));
     }
 
     #[test]

@@ -8,10 +8,13 @@
 //!
 //! Snapshots are **delta-first**: the change set, the window length, and
 //! the eviction horizon (`start_ts`) are always present and cost O(delta)
-//! to produce; the full item view is materialized (as a shared
-//! `Arc<[Record]>`) only when a consumer asks for it — the exact modes
-//! and the from-scratch baseline do, the incremental O(delta) slide path
-//! does not, so a slide never pays an O(window) copy it doesn't need.
+//! to produce; the full view is materialized (as a [`ColumnarBatch`]
+//! with a cached row slice) only when a consumer asks for it — the exact
+//! modes and the from-scratch baseline do, the incremental O(delta)
+//! slide path does not, so a slide never pays an O(window) copy it
+//! doesn't need. Deltas likewise ship columnar (the batched rank and
+//! inverse-chunk kernels consume the columns directly), with lazy row
+//! views for legacy callers.
 //!
 //! Two window kinds:
 //! * [`CountWindow`] — fixed item count with item-count slide. This is what
@@ -21,20 +24,40 @@
 //!   vary with arrival rate (the paper's stated general model, §2.3.3).
 
 use std::collections::VecDeque;
-use std::sync::Arc;
 
+use crate::columnar::ColumnarBatch;
 use crate::workload::record::{Record, StratumId};
 
-/// The change set between two adjacent windows.
+/// The change set between two adjacent windows, stored columnar: the
+/// batched rank kernel scores `inserted().ids()` in one pass and the
+/// inverse-reduce planner chunks the removal columns directly. Row views
+/// are lazy ([`ColumnarBatch::rows`]) for legacy callers.
 #[derive(Debug, Clone, Default)]
 pub struct WindowDelta {
-    /// Items that entered the window this slide.
-    pub inserted: Vec<Record>,
-    /// Items that fell out of the window this slide.
-    pub removed: Vec<Record>,
+    inserted: ColumnarBatch,
+    removed: ColumnarBatch,
 }
 
 impl WindowDelta {
+    /// Build from row vectors (transposes once) — the windows construct
+    /// deltas here, and tests hand-roll change sets through it.
+    pub fn from_rows(inserted: Vec<Record>, removed: Vec<Record>) -> Self {
+        WindowDelta {
+            inserted: ColumnarBatch::from_vec(inserted),
+            removed: ColumnarBatch::from_vec(removed),
+        }
+    }
+
+    /// Items that entered the window this slide (slide order).
+    pub fn inserted(&self) -> &ColumnarBatch {
+        &self.inserted
+    }
+
+    /// Items that fell out of the window this slide (eviction order).
+    pub fn removed(&self) -> &ColumnarBatch {
+        &self.removed
+    }
+
     /// |inserted| + |removed| — the input-change size that O(delta) work
     /// is proportional to.
     pub fn len(&self) -> usize {
@@ -50,8 +73,10 @@ impl WindowDelta {
 /// A window snapshot handed to the sampling stage.
 ///
 /// Always carries the delta, the item count, and the smallest in-window
-/// timestamp; the full item view is optional (see module docs) and shared
-/// behind an `Arc` so cloning a snapshot never copies records.
+/// timestamp; the full view is optional (see module docs), columnar, and
+/// `Arc`-backed so cloning a snapshot never copies records. The row
+/// slice the exact modes consume is cached inside the batch at
+/// materialization time, so neither representation pays for the other.
 #[derive(Debug, Clone)]
 pub struct WindowSnapshot {
     /// Monotonic window sequence number.
@@ -63,14 +88,20 @@ pub struct WindowSnapshot {
     pub start_ts: u64,
     /// Change set vs. the previous window.
     pub delta: WindowDelta,
-    /// Full item view, present only when the slide materialized it.
-    items: Option<Arc<[Record]>>,
+    /// Full columnar view, present only when the slide materialized it.
+    columns: Option<ColumnarBatch>,
 }
 
 impl WindowSnapshot {
     /// The full window view, if this snapshot materialized one.
     pub fn full_view(&self) -> Option<&[Record]> {
-        self.items.as_deref()
+        self.columns.as_ref().map(ColumnarBatch::rows)
+    }
+
+    /// The full columnar view, if this snapshot materialized one — what
+    /// the sampler rebuild and sketch/chunk kernels consume.
+    pub fn columns(&self) -> Option<&ColumnarBatch> {
+        self.columns.as_ref()
     }
 
     /// The full window view; panics when the snapshot was taken
@@ -80,9 +111,9 @@ impl WindowSnapshot {
         self.full_view().expect("window snapshot has no full view (delta-only slide)")
     }
 
-    /// Whether the full item view was materialized.
+    /// Whether the full view was materialized.
     pub fn has_full_view(&self) -> bool {
-        self.items.is_some()
+        self.columns.is_some()
     }
 
     /// True when the window holds no items.
@@ -164,9 +195,9 @@ impl CountWindow {
             window_id: id,
             len: self.buf.len(),
             start_ts: self.min_ts.front().map_or(0, |&(ts, _)| ts),
-            items: materialize
-                .then(|| self.buf.iter().copied().collect::<Arc<[Record]>>()),
-            delta: WindowDelta { inserted: batch, removed },
+            columns: materialize
+                .then(|| ColumnarBatch::from_rows_cached(self.buf.iter().copied().collect())),
+            delta: WindowDelta::from_rows(batch, removed),
         }
     }
 
@@ -203,9 +234,9 @@ impl CountWindow {
             window_id: id,
             len: self.buf.len(),
             start_ts: self.min_ts.front().map_or(0, |&(ts, _)| ts),
-            items: materialize
-                .then(|| self.buf.iter().copied().collect::<Arc<[Record]>>()),
-            delta: WindowDelta { inserted: batch, removed },
+            columns: materialize
+                .then(|| ColumnarBatch::from_rows_cached(self.buf.iter().copied().collect())),
+            delta: WindowDelta::from_rows(batch, removed),
         }
     }
 
@@ -398,8 +429,8 @@ impl TimeWindow {
         // picked up when the window reaches them.
         let inserted: Vec<Record> = self.buf.range(self.in_window..cut).copied().collect();
         let start_ts = if cut > 0 { self.buf.front().map_or(0, |r| r.timestamp) } else { 0 };
-        let items = materialize
-            .then(|| self.buf.range(..cut).copied().collect::<Arc<[Record]>>());
+        let columns = materialize
+            .then(|| ColumnarBatch::from_rows_cached(self.buf.range(..cut).copied().collect()));
         self.in_window = cut;
         let id = self.next_window_id;
         self.next_window_id += 1;
@@ -408,8 +439,8 @@ impl TimeWindow {
             window_id: id,
             len: cut,
             start_ts,
-            items,
-            delta: WindowDelta { inserted, removed },
+            columns,
+            delta: WindowDelta::from_rows(inserted, removed),
         })
     }
 
@@ -479,13 +510,13 @@ mod tests {
         let mut w = CountWindow::new(10);
         let snap = w.slide((0..10).map(|i| rec(i, i)).collect());
         assert_eq!(snap.items().len(), 10);
-        assert!(snap.delta.removed.is_empty());
+        assert!(snap.delta.removed().is_empty());
         assert_consistent(&snap);
         let snap = w.slide((10..14).map(|i| rec(i, i)).collect());
         assert_eq!(snap.items().len(), 10);
-        assert_eq!(snap.delta.inserted.len(), 4);
+        assert_eq!(snap.delta.inserted().len(), 4);
         assert_eq!(
-            snap.delta.removed.iter().map(|r| r.id).collect::<Vec<_>>(),
+            snap.delta.removed().ids().to_vec(),
             vec![0, 1, 2, 3]
         );
         assert_eq!(snap.items()[0].id, 4);
@@ -521,13 +552,13 @@ mod tests {
         let evicted = w.resize(6);
         assert_eq!(evicted.len(), 4);
         let snap = w.slide(vec![rec(100, 100)]);
-        let removed_ids: Vec<u64> = snap.delta.removed.iter().map(|r| r.id).collect();
+        let removed_ids: Vec<u64> = snap.delta.removed().ids().to_vec();
         assert_eq!(removed_ids, vec![0, 1, 2, 3, 4]); // 4 resized out + 1 slid out
         assert_eq!(snap.len, 6);
         assert_consistent(&snap);
         // Nothing double-reported on the following slide.
         let snap = w.slide(vec![]);
-        assert!(snap.delta.removed.is_empty());
+        assert!(snap.delta.removed().is_empty());
     }
 
     #[test]
@@ -555,7 +586,7 @@ mod tests {
         let snap = w.slide(vec![]);
         assert_eq!(snap.window_id, 2);
         assert_eq!(snap.items().len(), 2);
-        assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
+        assert!(snap.delta.inserted().is_empty() && snap.delta.removed().is_empty());
     }
 
     #[test]
@@ -566,13 +597,13 @@ mod tests {
         let snap = w.slide((0..12).map(|i| rec(i, i)).collect());
         assert_eq!(snap.items().len(), 5);
         assert_eq!(snap.items().iter().map(|r| r.id).collect::<Vec<_>>(), vec![7, 8, 9, 10, 11]);
-        assert_eq!(snap.delta.inserted.len(), 12);
-        assert_eq!(snap.delta.removed.len(), 7);
+        assert_eq!(snap.delta.inserted().len(), 12);
+        assert_eq!(snap.delta.removed().len(), 7);
         assert_consistent(&snap);
         // A second oversized slide removes the entire previous window.
         let snap = w.slide((12..22).map(|i| rec(i, i)).collect());
         assert_eq!(snap.items().iter().map(|r| r.id).collect::<Vec<_>>(), vec![17, 18, 19, 20, 21]);
-        assert!(snap.delta.removed.iter().any(|r| r.id == 7), "old window evicted");
+        assert!(snap.delta.removed().ids().contains(&7), "old window evicted");
     }
 
     #[test]
@@ -584,8 +615,8 @@ mod tests {
         w.slide((0..6).map(|i| Record::new(i, 0, i, 0, 1.0)).collect());
         let snap = w.slide((6..9).map(|i| Record::new(i, 0, i, 0, 1.0)).collect());
         assert!(snap.items().iter().all(|r| r.stratum == 0));
-        assert_eq!(snap.delta.inserted.len(), 3);
-        assert_eq!(snap.delta.removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(snap.delta.inserted().len(), 3);
+        assert_eq!(snap.delta.removed().ids().to_vec(), vec![0, 1, 2]);
     }
 
     #[test]
@@ -606,10 +637,25 @@ mod tests {
             assert_eq!(full.start_ts, lazy.start_ts);
             assert_eq!(full.window_id, lazy.window_id);
             let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
-            assert_eq!(ids(&full.delta.inserted), ids(&lazy.delta.inserted));
-            assert_eq!(ids(&full.delta.removed), ids(&lazy.delta.removed));
+            assert_eq!(full.delta.inserted().ids(), lazy.delta.inserted().ids());
+            assert_eq!(full.delta.removed().ids(), lazy.delta.removed().ids());
             assert_consistent(&full);
         }
+    }
+
+    #[test]
+    fn materialized_snapshot_columns_mirror_items() {
+        // The columnar view and the row view of a materialized snapshot
+        // are the same data; the row slice must be the cached one (no
+        // re-transpose on access).
+        let mut w = CountWindow::new(6);
+        let snap = w.slide((0..8).map(|i| rec(i, i)).collect());
+        let cols = snap.columns().expect("materialized slide has columns");
+        assert!(cols.bit_eq_records(snap.items()));
+        assert_eq!(cols.ids(), snap.items().iter().map(|r| r.id).collect::<Vec<_>>());
+        assert!(std::ptr::eq(snap.items().as_ptr(), cols.rows().as_ptr()));
+        let lazy = w.slide_with(vec![rec(9, 9)], false);
+        assert!(lazy.columns().is_none());
     }
 
     #[test]
@@ -633,7 +679,7 @@ mod tests {
         assert_eq!(snap.window_id, 0);
         assert!(snap.items().is_empty());
         assert_eq!(snap.start_ts, 0);
-        assert!(snap.delta.inserted.is_empty() && snap.delta.removed.is_empty());
+        assert!(snap.delta.inserted().is_empty() && snap.delta.removed().is_empty());
         // Data arriving later lands in subsequent windows.
         w.ingest(vec![rec(1, 12)]);
         let snap = w.try_emit(15).expect("next boundary");
@@ -671,8 +717,8 @@ mod tests {
         assert!(s0.items().iter().all(|r| r.stratum == 0));
         assert_eq!(s0.items().len(), 6);
         let s1 = w.try_emit(9).unwrap();
-        assert_eq!(s1.delta.removed.len(), 3);
-        assert_eq!(s1.delta.inserted.len(), 3);
+        assert_eq!(s1.delta.removed().len(), 3);
+        assert_eq!(s1.delta.inserted().len(), 3);
         assert!(s1.items().iter().all(|r| r.stratum == 0));
     }
 
@@ -684,12 +730,12 @@ mod tests {
         let s0 = w.try_emit(10).unwrap();
         assert_eq!(s0.items().iter().map(|r| r.timestamp).max(), Some(9));
         assert_eq!(s0.items().len(), 10);
-        assert_eq!(s0.delta.inserted.len(), 10); // first window: all new
+        assert_eq!(s0.delta.inserted().len(), 10); // first window: all new
         assert_consistent(&s0);
         let s1 = w.try_emit(15).unwrap();
         // Window [5, 15): removed ts 0–4, inserted ts 10–14.
-        assert_eq!(s1.delta.removed.len(), 5);
-        assert_eq!(s1.delta.inserted.len(), 5);
+        assert_eq!(s1.delta.removed().len(), 5);
+        assert_eq!(s1.delta.inserted().len(), 5);
         assert_eq!(s1.items().len(), 10);
         assert!(s1.items().iter().all(|r| (5..15).contains(&r.timestamp)));
         assert_consistent(&s1);
@@ -704,7 +750,7 @@ mod tests {
         assert_eq!(s.items().len(), 6);
         let s = w.try_emit(6).unwrap(); // window [2,6): drops ts<2
         assert_eq!(s.items().len(), 4);
-        assert_eq!(s.delta.removed.len(), 2);
+        assert_eq!(s.delta.removed().len(), 2);
     }
 
     #[test]
@@ -721,8 +767,8 @@ mod tests {
             assert_eq!(full.len, lazy.len);
             assert_eq!(full.start_ts, lazy.start_ts);
             let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
-            assert_eq!(ids(&full.delta.inserted), ids(&lazy.delta.inserted));
-            assert_eq!(ids(&full.delta.removed), ids(&lazy.delta.removed));
+            assert_eq!(full.delta.inserted().ids(), lazy.delta.inserted().ids());
+            assert_eq!(full.delta.removed().ids(), lazy.delta.removed().ids());
             assert_consistent(&full);
         }
     }
@@ -748,8 +794,8 @@ mod tests {
                 assert_eq!(a.len, b.len);
                 assert_eq!(a.start_ts, b.start_ts);
                 let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
-                assert_eq!(ids(&a.delta.inserted), ids(&b.delta.inserted));
-                assert_eq!(ids(&a.delta.removed), ids(&b.delta.removed));
+                assert_eq!(a.delta.inserted().ids(), b.delta.inserted().ids());
+                assert_eq!(a.delta.removed().ids(), b.delta.removed().ids());
                 assert_eq!(ids(a.items()), ids(b.items()));
                 assert_consistent(&b);
             }
@@ -810,8 +856,8 @@ mod tests {
             assert_eq!(a.len, b.len);
             assert_eq!(a.start_ts, b.start_ts);
             let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
-            assert_eq!(ids(&a.delta.inserted), ids(&b.delta.inserted));
-            assert_eq!(ids(&a.delta.removed), ids(&b.delta.removed));
+            assert_eq!(a.delta.inserted().ids(), b.delta.inserted().ids());
+            assert_eq!(a.delta.removed().ids(), b.delta.removed().ids());
             assert_eq!(ids(a.items()), ids(b.items()));
         }
     }
@@ -845,8 +891,8 @@ mod tests {
             assert_eq!(a.len, b.len);
             assert_eq!(a.start_ts, b.start_ts);
             let ids = |d: &[Record]| d.iter().map(|r| r.id).collect::<Vec<_>>();
-            assert_eq!(ids(&a.delta.inserted), ids(&b.delta.inserted));
-            assert_eq!(ids(&a.delta.removed), ids(&b.delta.removed));
+            assert_eq!(a.delta.inserted().ids(), b.delta.inserted().ids());
+            assert_eq!(a.delta.removed().ids(), b.delta.removed().ids());
             assert_eq!(ids(a.items()), ids(b.items()));
         }
     }
@@ -860,16 +906,10 @@ mod tests {
         let mut w = TimeWindow::new(10, 5);
         w.ingest((0..18).map(|i| rec(i, i))); // ts 0..17 buffered up-front
         let s0 = w.try_emit(10).unwrap(); // window [0,10)
-        assert_eq!(s0.delta.inserted.len(), 10);
+        assert_eq!(s0.delta.inserted().len(), 10);
         let s1 = w.try_emit(15).unwrap(); // window [5,15): ts 10..14 arrive
-        assert_eq!(
-            s1.delta.inserted.iter().map(|r| r.timestamp).collect::<Vec<_>>(),
-            vec![10, 11, 12, 13, 14]
-        );
+        assert_eq!(s1.delta.inserted().timestamps(), &[10, 11, 12, 13, 14]);
         let s2 = w.try_emit(20).unwrap(); // window [10,20): ts 15..17 arrive
-        assert_eq!(
-            s2.delta.inserted.iter().map(|r| r.timestamp).collect::<Vec<_>>(),
-            vec![15, 16, 17]
-        );
+        assert_eq!(s2.delta.inserted().timestamps(), &[15, 16, 17]);
     }
 }

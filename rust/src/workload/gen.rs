@@ -5,6 +5,7 @@
 //! three sub-streams with rates 3:4:5; §5.1.4 uses two fluctuating
 //! sub-streams plus one constant.
 
+use crate::columnar::{ColumnarBatch, ColumnarBuilder};
 use crate::util::rng::Rng;
 use crate::workload::record::{Record, StratumId};
 
@@ -49,6 +50,17 @@ pub trait Generator {
     /// Emit all records for tick `t`. Ids are assigned by the caller
     /// ([`MultiStream`]) so they are unique across sub-streams.
     fn tick(&mut self, t: u64, next_id: &mut u64) -> Vec<Record>;
+
+    /// Emit tick `t` directly into a columnar builder — no intermediate
+    /// row vector. Implementations MUST draw from their RNG in exactly
+    /// the same order as [`Generator::tick`] so both paths produce
+    /// identical streams; the default delegates to `tick`, which makes
+    /// that true by construction. Returns the number of records emitted.
+    fn tick_into(&mut self, t: u64, next_id: &mut u64, out: &mut ColumnarBuilder) -> usize {
+        let batch = self.tick(t, next_id);
+        out.extend_records(&batch);
+        batch.len()
+    }
 
     /// Stratum this generator feeds (for single-stratum generators).
     fn stratum(&self) -> StratumId;
@@ -151,6 +163,18 @@ impl Generator for PoissonSubstream {
             rng: self.rng.state(),
         })
     }
+
+    fn tick_into(&mut self, t: u64, next_id: &mut u64, out: &mut ColumnarBuilder) -> usize {
+        // Same draw order as `tick`: poisson, then (key, value) per record.
+        let n = self.rng.poisson(self.rate);
+        for _ in 0..n {
+            let id = *next_id;
+            *next_id += 1;
+            let key = self.rng.next_u64() % 97;
+            out.push_parts(id, self.stratum, t, key, self.dist.sample(&mut self.rng));
+        }
+        n as usize
+    }
 }
 
 /// Sub-stream whose rate follows a piecewise schedule — §5.1.4's
@@ -218,6 +242,19 @@ impl Generator for FluctuatingSubstream {
             dist: self.dist,
             rng: self.rng.state(),
         })
+    }
+
+    fn tick_into(&mut self, t: u64, next_id: &mut u64, out: &mut ColumnarBuilder) -> usize {
+        // Same draw order as `tick`: poisson, then (key, value) per record.
+        let rate = self.rate(t);
+        let n = self.rng.poisson(rate);
+        for _ in 0..n {
+            let id = *next_id;
+            *next_id += 1;
+            let key = self.rng.next_u64() % 97;
+            out.push_parts(id, self.stratum, t, key, self.dist.sample(&mut self.rng));
+        }
+        n as usize
     }
 }
 
@@ -302,6 +339,33 @@ impl MultiStream {
         out
     }
 
+    /// Advance one tick, writing straight into `out` (no row vector).
+    /// Stream-identical to [`MultiStream::tick`]: the sub-streams'
+    /// `tick_into` impls draw their RNGs in the same order. Returns the
+    /// number of records emitted.
+    pub fn tick_into(&mut self, out: &mut ColumnarBuilder) -> usize {
+        let t = self.now;
+        self.now += 1;
+        let mut emitted = 0;
+        for sub in &mut self.subs {
+            emitted += sub.tick_into(t, &mut self.next_id, out);
+        }
+        emitted
+    }
+
+    /// [`MultiStream::take_records`] emitting a [`ColumnarBatch`]
+    /// natively: at least `n` records, rounded up to whole ticks, built
+    /// column-wise without an intermediate row vector. Consuming the
+    /// same stream through `take_columns` or `take_records` yields
+    /// bit-identical records (pinned by `take_columns_matches_rows`).
+    pub fn take_columns(&mut self, n: usize) -> ColumnarBatch {
+        let mut out = ColumnarBuilder::with_capacity(n);
+        while out.len() < n {
+            self.tick_into(&mut out);
+        }
+        out.finish()
+    }
+
     /// Number of sub-streams.
     pub fn substream_count(&self) -> usize {
         self.subs.len()
@@ -368,6 +432,27 @@ mod tests {
         let mean = n as f64 / 20_000.0;
         assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
         assert_eq!(next_id as usize, n);
+    }
+
+    #[test]
+    fn take_columns_matches_rows() {
+        // Row and columnar emission must draw RNGs identically: the same
+        // seeded stream consumed either way yields bit-identical records.
+        for seed in [3u64, 11, 29] {
+            let mut rows = MultiStream::paper_section5(seed);
+            let mut cols = MultiStream::paper_section5(seed);
+            for n in [1usize, 64, 257] {
+                let r = rows.take_records(n);
+                let c = cols.take_columns(n);
+                assert!(c.bit_eq_records(&r), "seed {seed} n {n} diverged");
+                assert_eq!(rows.now(), cols.now());
+            }
+            let mut rows = MultiStream::paper_fluctuating(seed, 50);
+            let mut cols = MultiStream::paper_fluctuating(seed, 50);
+            let r = rows.take_records(300);
+            let c = cols.take_columns(300);
+            assert!(c.bit_eq_records(&r), "fluctuating seed {seed} diverged");
+        }
     }
 
     #[test]

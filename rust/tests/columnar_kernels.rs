@@ -1,0 +1,183 @@
+//! Kernel equivalence gate — the "columnar ≡ row bytes" invariant.
+//!
+//! Every vectorized columnar kernel is pinned **bit-equal** to its
+//! retained scalar/row reference on randomized batches:
+//!
+//! * `Moments::fold_values` ≡ `Moments::fold_values_reference` ≡ the
+//!   row-stride fold `Moments::from_records` (same lane assignment,
+//!   same Neumaier steps, same lane-combine order — bit-equal by
+//!   construction, and this gate keeps it that way);
+//! * `chunk_hash_columns` ≡ `chunk_hash_records` (the golden-pinned
+//!   `StableHasher` byte sequence);
+//! * `incremental::rank_batch` ≡ per-id `incremental::rank`;
+//! * `SketchBundle::from_columns` ≡ `SketchBundle::from_records`,
+//!   including the serialized wire bytes.
+//!
+//! A remainder bug, a reordered fold, or a column/row skew in any
+//! kernel breaks this gate before it can break the (slower) end-to-end
+//! three-way equivalence gates.
+
+use incapprox::columnar::ColumnarBatch;
+use incapprox::job::chunk::{chunk_hash_columns, chunk_hash_records};
+use incapprox::job::moments::Moments;
+use incapprox::job::sketch::SketchBundle;
+use incapprox::sampling::incremental;
+use incapprox::util::rng::Rng;
+use incapprox::workload::record::Record;
+
+/// Bitwise equality over all five moment fields — `PartialEq` would
+/// miss `-0.0` vs `0.0` and NaN-payload drift.
+fn moments_bits(m: &Moments) -> [u64; 5] {
+    [
+        m.count.to_bits(),
+        m.sum.to_bits(),
+        m.sumsq.to_bits(),
+        m.min.to_bits(),
+        m.max.to_bits(),
+    ]
+}
+
+/// Randomized record batch: mixed strata, adversarial values (large
+/// magnitudes next to tiny ones to stress the compensated sums, exact
+/// negatives, zeros).
+fn random_records(rng: &mut Rng, n: usize) -> Vec<Record> {
+    (0..n)
+        .map(|i| {
+            let scale = match rng.next_u64() % 4 {
+                0 => 1e-9,
+                1 => 1.0,
+                2 => 1e9,
+                _ => -1e4,
+            };
+            let v = match rng.next_u64() % 16 {
+                0 => 0.0,
+                1 => -0.0,
+                _ => (rng.f64() - 0.5) * scale,
+            };
+            Record::new(
+                rng.next_u64() % 100_000,
+                (rng.next_u64() % 5) as u32,
+                i as u64,
+                rng.next_u64() % 97,
+                v,
+            )
+        })
+        .collect()
+}
+
+/// Lengths that straddle the `LANES` = 8 chunking boundaries plus a
+/// large tail.
+const SIZES: [usize; 9] = [0, 1, 7, 8, 9, 15, 16, 257, 4096];
+
+#[test]
+fn moments_fold_matches_scalar_reference_and_row_path() {
+    let mut rng = Rng::new(0xC01_0041);
+    for n in SIZES {
+        for rep in 0..3 {
+            let records = random_records(&mut rng, n);
+            let cols = ColumnarBatch::from_records(&records);
+            let vectorized = Moments::fold_values(cols.values());
+            let reference = Moments::fold_values_reference(cols.values());
+            let row = Moments::from_records(&records);
+            assert_eq!(
+                moments_bits(&vectorized),
+                moments_bits(&reference),
+                "fold_values != reference (n={n} rep={rep})"
+            );
+            assert_eq!(
+                moments_bits(&vectorized),
+                moments_bits(&row),
+                "columnar fold != row fold (n={n} rep={rep})"
+            );
+        }
+    }
+}
+
+#[test]
+fn mapped_moments_fold_matches_row_path() {
+    let mut rng = Rng::new(0xC01_0042);
+    for n in [0usize, 9, 64, 257] {
+        let records = random_records(&mut rng, n);
+        let cols = ColumnarBatch::from_records(&records);
+        for rounds in [0u32, 1, 4] {
+            let vectorized = Moments::fold_values_mapped(cols.values(), rounds);
+            let row = Moments::from_records_mapped(&records, rounds);
+            assert_eq!(
+                moments_bits(&vectorized),
+                moments_bits(&row),
+                "mapped columnar fold != row fold (n={n} rounds={rounds})"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunk_hash_columns_matches_record_hash() {
+    let mut rng = Rng::new(0xC01_0043);
+    for n in SIZES {
+        let records = random_records(&mut rng, n);
+        let cols = ColumnarBatch::from_records(&records);
+        for stratum in [0u32, 3, u32::MAX] {
+            assert_eq!(
+                chunk_hash_columns(stratum, cols.ids(), cols.values()),
+                chunk_hash_records(stratum, &records),
+                "column hash != record hash (n={n} stratum={stratum})"
+            );
+        }
+    }
+}
+
+#[test]
+fn rank_batch_matches_scalar_rank() {
+    let mut rng = Rng::new(0xC01_0044);
+    let mut out = Vec::new();
+    for n in SIZES {
+        let ids: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            incremental::rank_batch(seed, &ids, &mut out);
+            assert_eq!(out.len(), ids.len());
+            for (i, &id) in ids.iter().enumerate() {
+                assert_eq!(
+                    out[i],
+                    incremental::rank(seed, id),
+                    "rank_batch[{i}] != rank (n={n} seed={seed})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sketch_columnar_feed_matches_record_feed() {
+    let mut rng = Rng::new(0xC01_0045);
+    for n in [0usize, 1, 9, 257, 1000] {
+        let records = random_records(&mut rng, n);
+        let cols = ColumnarBatch::from_records(&records);
+        for seed in [0u64, 77] {
+            let by_columns = SketchBundle::from_columns(seed, &cols);
+            let by_records = SketchBundle::from_records(seed, &records);
+            assert_eq!(by_columns, by_records, "bundle mismatch (n={n} seed={seed})");
+            assert_eq!(
+                by_columns.to_bytes(),
+                by_records.to_bytes(),
+                "wire bytes mismatch (n={n} seed={seed})"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_round_trip_and_slicing_are_bit_exact() {
+    // End-to-end sanity on the batch container itself (the detailed
+    // property test lives in `tests/prop_invariants.rs`): transpose →
+    // row view → re-transpose is lossless, and slices match the row
+    // sub-ranges they name.
+    let mut rng = Rng::new(0xC01_0046);
+    let records = random_records(&mut rng, 300);
+    let cols = ColumnarBatch::from_records(&records);
+    assert!(cols.bit_eq_records(&records));
+    let back = ColumnarBatch::from_records(cols.rows());
+    assert!(back.bit_eq_records(&records));
+    let mid = cols.slice(57, 201);
+    assert!(mid.bit_eq_records(&records[57..201]));
+}

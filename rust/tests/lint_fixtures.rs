@@ -74,6 +74,27 @@ fn determinism_cone_covers_partition_tier() {
     assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
 }
 
+#[test]
+fn determinism_cone_covers_columnar_layer() {
+    // The columnar batch layer's views are pinned bit-equal to the row
+    // records they transpose (`tests/columnar_kernels.rs`), so
+    // `columnar/` sits inside the determinism cone: container findings
+    // fire there exactly as they do in `sampling/`...
+    let fr = lint::check_source("columnar/fx.rs", &fixture("determinism_tp.rs"));
+    assert!(
+        fr.diagnostics.iter().any(|d| d.message.contains("HashMap")),
+        "{:#?}",
+        fr.diagnostics
+    );
+    assert!(fr.diagnostics.iter().all(|d| d.rule == lint::RULE_DETERMINISM));
+    // ...and the batch-layer idiom (Arc columns, bitwise equality,
+    // order-pinned transposes) lints clean under the same path. The
+    // real sources are held clean by the whole-tree gate in
+    // `tests/lint_clean.rs`.
+    let fr = lint::check_source("columnar/fx.rs", &fixture("columnar_tn.rs"));
+    assert!(fr.diagnostics.is_empty(), "{:#?}", fr.diagnostics);
+}
+
 // ---- panic-freedom -------------------------------------------------------
 
 #[test]

@@ -1,0 +1,61 @@
+//! True-negative fixture for the `determinism` rule under the
+//! `columnar/` cone path: a miniature of the batch layer's idiom —
+//! dense `Arc` column buffers, bitwise float comparison, transpose
+//! loops with no clocks and no unordered containers. Linted under
+//! `columnar/fx.rs` this must produce zero diagnostics. Test data —
+//! never compiled.
+
+use std::sync::Arc;
+
+/// A two-column miniature of the real batch: parallel dense buffers
+/// behind `Arc`, so slicing and cloning are O(1) and the element order
+/// is exactly the row order of the source records.
+struct MiniBatch {
+    ids: Arc<[u64]>,
+    values: Arc<[f64]>,
+}
+
+impl MiniBatch {
+    /// Transpose rows into columns. One forward pass: the column order
+    /// is pinned to the input order, never to a hash iteration.
+    fn from_rows(rows: &[(u64, f64)]) -> MiniBatch {
+        let mut ids = Vec::with_capacity(rows.len());
+        let mut values = Vec::with_capacity(rows.len());
+        for &(id, v) in rows {
+            ids.push(id);
+            values.push(v);
+        }
+        MiniBatch { ids: ids.into(), values: values.into() }
+    }
+
+    /// Bitwise value equality: NaN payloads compare by representation,
+    /// so two batches are equal iff they serialize identically.
+    fn bit_eq(&self, other: &MiniBatch) -> bool {
+        self.ids == other.ids
+            && self.values.len() == other.values.len()
+            && self
+                .values
+                .iter()
+                .zip(other.values.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    /// Kernels consume dense slices; the fold order is the column
+    /// order, a pure function of the input.
+    fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_preserves_order() {
+        let b = MiniBatch::from_rows(&[(3, 1.5), (1, 2.5)]);
+        assert_eq!(&b.ids[..], &[3, 1]);
+        assert_eq!(b.sum(), 4.0);
+        assert!(b.bit_eq(&MiniBatch::from_rows(&[(3, 1.5), (1, 2.5)])));
+    }
+}

@@ -100,7 +100,7 @@ fn missing_rounds_variant_is_clear_error() {
     let items: Vec<_> = (0..64u64)
         .map(|i| incapprox::workload::Record::new(i, 0, 0, 0, i as f64))
         .collect();
-    let chunks = incapprox::job::chunk::chunk_stratum(0, &items, 32);
+    let chunks = incapprox::job::chunk::chunk_stratum(0, &items, 32).unwrap();
     let refs: Vec<_> = chunks.iter().collect();
     let err = rt.chunk_moments(&refs, 9999).unwrap_err().to_string();
     assert!(err.contains("9999"), "unhelpful error: {err}");

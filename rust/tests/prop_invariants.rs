@@ -6,6 +6,7 @@ mod common;
 use std::collections::{BTreeMap, HashSet};
 
 use common::{arb_batch, check_property};
+use incapprox::columnar::ColumnarBatch;
 use incapprox::job::chunk::{chunk_stratum, chunk_stratum_cached};
 use incapprox::job::moments::Moments;
 use incapprox::sac::ddg::{Ddg, NodeKind};
@@ -97,13 +98,13 @@ fn prop_chunking_partitions_input() {
         let n = rng.below(3000);
         let items = arb_batch(rng, n, 1, 50);
         let target = 1 + rng.below(200);
-        let chunks = chunk_stratum(0, &items, target);
+        let chunks = chunk_stratum(0, &items, target).unwrap();
         // Union of chunks == input, in order, no loss, size cap held.
         let mut flat = Vec::new();
         for c in &chunks {
             assert!(c.len() <= 4 * target);
             assert!(!c.is_empty());
-            flat.extend(c.items.iter().map(|r| r.id));
+            flat.extend(c.ids().iter().copied());
         }
         let want: Vec<u64> = items.iter().map(|r| r.id).collect();
         assert_eq!(flat, want);
@@ -111,10 +112,41 @@ fn prop_chunking_partitions_input() {
 }
 
 #[test]
+fn prop_columnar_round_trip_is_lossless_and_order_preserving() {
+    // The SoA transpose must be a bijection on record sequences:
+    // from_records → to_records reproduces the input bit-for-bit, in
+    // order, across empty, single-stratum, and mixed-strata batches.
+    check_property("columnar round trip", 60, 10, |rng| {
+        let n = rng.below(2000); // 0 is a legal draw: empty batch covered
+        let strata = 1 + rng.below(6) as u32; // 1 ⇒ single-stratum batch
+        let items = arb_batch(rng, n, strata, 50);
+        let cols = ColumnarBatch::from_records(&items);
+        assert_eq!(cols.len(), items.len());
+        assert_eq!(cols.is_empty(), items.is_empty());
+        // Bitwise equality against the source rows (values by to_bits).
+        assert!(cols.bit_eq_records(&items), "columns diverge from rows");
+        // Row view reproduces the exact sequence, order included.
+        assert_eq!(cols.rows(), &items[..], "row view lost order or data");
+        let back = cols.to_records();
+        assert_eq!(back, items, "to_records not a round trip");
+        // Column-wise projections line up index-for-index.
+        for (i, r) in items.iter().enumerate() {
+            assert_eq!(cols.ids()[i], r.id);
+            assert_eq!(cols.strata()[i], r.stratum);
+            assert_eq!(cols.timestamps()[i], r.timestamp);
+            assert_eq!(cols.keys()[i], r.key);
+            assert_eq!(cols.values()[i].to_bits(), r.value.to_bits());
+        }
+        // Re-transposing the row view is idempotent.
+        assert!(ColumnarBatch::from_records(cols.rows()).bit_eq_records(&items));
+    });
+}
+
+#[test]
 fn prop_chunk_hashes_unique_per_content() {
     check_property("chunk hash uniqueness", 40, 4, |rng| {
         let items = arb_batch(rng, 2000, 1, 50);
-        let chunks = chunk_stratum(0, &items, 32);
+        let chunks = chunk_stratum(0, &items, 32).unwrap();
         let hashes: HashSet<u64> = chunks.iter().map(|c| c.hash).collect();
         assert_eq!(hashes.len(), chunks.len(), "hash collision in window");
     });
@@ -280,7 +312,7 @@ fn prop_cached_chunking_is_equivalent() {
         let target = 1 + rng.below(100);
         let mut window = arb_batch(rng, n, 1, 50);
         let mut next_id = n as u64;
-        let mut prev = chunk_stratum(0, &window, target);
+        let mut prev = chunk_stratum(0, &window, target).unwrap();
         for _ in 0..4 {
             let drop_n = rng.below(window.len() / 2 + 1);
             window.drain(..drop_n);
@@ -296,13 +328,13 @@ fn prop_cached_chunking_is_equivalent() {
                 window.push(Record::new(next_id, 0, 50, 0, next_id as f64));
                 next_id += 1;
             }
-            let (cached, rehashed) = chunk_stratum_cached(0, &window, target, &prev);
-            let scratch = chunk_stratum(0, &window, target);
+            let (cached, rehashed) = chunk_stratum_cached(0, &window, target, &prev).unwrap();
+            let scratch = chunk_stratum(0, &window, target).unwrap();
             assert_eq!(cached.len(), scratch.len());
             assert!(rehashed <= window.len());
             for (c, s) in cached.iter().zip(&scratch) {
                 assert_eq!(c.hash, s.hash);
-                assert_eq!(c.items[..], s.items[..]);
+                assert_eq!(c.items()[..], s.items()[..]);
             }
             prev = cached;
         }

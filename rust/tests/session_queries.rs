@@ -538,9 +538,9 @@ fn prop_query_derivation_matches_direct_records() {
         let chunked_moments = |by: &BTreeMap<StratumId, Vec<Record>>| {
             by.iter()
                 .map(|(&s, recs)| {
-                    let chunks = chunk_stratum(s, recs, chunk_size);
+                    let chunks = chunk_stratum(s, recs, chunk_size).unwrap();
                     let parts: Vec<Moments> =
-                        chunks.iter().map(|c| Moments::from_records(&c.items)).collect();
+                        chunks.iter().map(|c| Moments::from_records(c.items())).collect();
                     (s, Moments::combine_all(parts.iter()))
                 })
                 .collect::<BTreeMap<StratumId, Moments>>()
